@@ -1,0 +1,24 @@
+//! Internal calibration probe: print raw criterion-signal values per step.
+use std::rc::Rc;
+use repro::exp::common::{record_run, RunOpts};
+use repro::exp::Ctx;
+use repro::sampler::Family;
+
+fn main() -> anyhow::Result<()> {
+    repro::util::log::init();
+    let ctx = Ctx::new("artifacts", "runs", true)?;
+    for fam in Family::all() {
+        let store = ctx.store(fam.name())?;
+        let mut opts = RunOpts::new(fam, 8, 48);
+        opts.seed = 4;
+        let rec = record_run(&ctx, store, opts)?;
+        let ent = rec.mean_curve(|s| s.entropy);
+        let kl = rec.mean_curve(|s| s.kl);
+        let sw = rec.mean_curve(|s| s.switches);
+        println!("{}:", fam.name());
+        for i in [0, 6, 12, 18, 24, 30, 36, 42, 47] {
+            println!("  step {i:>3}: H={:.4} KL={:.6} sw={:.2}", ent[i], kl[i], sw[i]);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! RSS growth probe for the step hot loop.
+use std::rc::Rc;
+use repro::models::store::ParamStore;
+use repro::runtime::Runtime;
+use repro::sampler::{Family, Session};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() {
+    let dir = "artifacts";
+    let rt = Runtime::new(dir).unwrap();
+    let m = rt.manifest.model.clone();
+    let store = Rc::new(ParamStore::load_init(dir, "ddlm").unwrap());
+    let mut s = Session::new(&rt, Family::Ddlm, store, 8, m.seq_len).unwrap();
+    for slot in 0..8 { s.reset_slot(slot, slot as u64, 1_000_000, 1.0, m.t_max, m.t_min, &[]); }
+    println!("start rss {:.0} MB", rss_mb());
+    for i in 0..200 {
+        s.step().unwrap();
+        if i % 50 == 49 { println!("after {} steps: rss {:.0} MB", i+1, rss_mb()); }
+    }
+}

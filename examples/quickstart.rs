@@ -1,0 +1,84 @@
+//! Quickstart: load the DDLM artifacts, generate a few sequences with the
+//! KL halting criterion, and print the decoded text + steps saved.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! (Uses trained weights from runs/ if `repro prepare` has been run,
+//! otherwise falls back to init params so the example always works.)
+
+use std::rc::Rc;
+
+use repro::corpus::dataset::Dataset;
+use repro::halting::{Criterion, CriterionState};
+use repro::models::store::ParamStore;
+use repro::runtime::Runtime;
+use repro::sampler::{Family, Session};
+
+fn main() -> anyhow::Result<()> {
+    repro::util::log::init();
+    let dir = std::env::var("REPRO_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+
+    // 1. runtime + parameters
+    let rt = Runtime::new(&dir)?;
+    let m = rt.manifest.model.clone();
+    let ckpt = "runs/ddlm.pbin";
+    let store = if std::path::Path::new(ckpt).exists() {
+        Rc::new(ParamStore::load(ckpt, "ddlm")?)
+    } else {
+        eprintln!("(untrained init params; run `repro prepare` for real text)");
+        Rc::new(ParamStore::load_init(&dir, "ddlm")?)
+    };
+
+    // 2. a batched generation session with 32-token prompts
+    let n_steps = 200;
+    let batch = 8;
+    let mut session = Session::new(&rt, Family::Ddlm, store, batch, m.seq_len)?;
+    let ds = Dataset::new(m.vocab, m.seq_len);
+    let prompts = ds.val_prompts(1, batch);
+    for (slot, p) in prompts.iter().enumerate() {
+        session.reset_slot(
+            slot, 100 + slot as u64, n_steps, 1.0, m.t_max, m.t_min, &p[..32],
+        );
+    }
+
+    // 3. step until every slot's KL criterion fires (Algorithm 3)
+    let crit = Criterion::Kl { threshold: 2e-4, min_steps: n_steps / 4 };
+    let mut states = vec![CriterionState::default(); batch];
+    let mut exits = vec![n_steps; batch];
+    for step in 0..n_steps {
+        let stats = session.step()?;
+        let mut live = false;
+        for slot in 0..batch {
+            if exits[slot] < n_steps {
+                continue;
+            }
+            if let Some(st) = stats[slot] {
+                if states[slot].observe(&crit, &st) {
+                    exits[slot] = step + 1;
+                    session.release_slot(slot);
+                } else {
+                    live = true;
+                }
+            }
+        }
+        if !live {
+            break;
+        }
+    }
+
+    // 4. decode + report
+    let tok = ds.grammar().tokenizer();
+    let mut saved = 0usize;
+    for slot in 0..batch {
+        let text = tok.decode(&session.slot_output(slot));
+        println!("[slot {slot}] exit {}/{n_steps}: {text}\n", exits[slot]);
+        saved += n_steps - exits[slot];
+    }
+    println!(
+        "steps saved by KL halting: {saved}/{} ({:.0}%)",
+        n_steps * batch,
+        100.0 * saved as f64 / (n_steps * batch) as f64
+    );
+    Ok(())
+}

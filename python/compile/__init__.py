@@ -1,0 +1,5 @@
+"""Build-time python package: L1 Pallas kernels + L2 JAX models + AOT export.
+
+Never imported at runtime; `make artifacts` runs `python -m compile.aot`
+once, after which the rust binary is self-contained.
+"""

@@ -1,0 +1,306 @@
+"""AOT exporter: lower every L2 function to HLO **text** + write params.
+
+This is the only python that ever runs (`make artifacts`); the rust binary
+is self-contained afterwards.  HLO text — not ``.serialize()`` — is the
+interchange format: the image's xla_extension 0.5.1 rejects jax>=0.5 protos
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (in ``artifacts/``):
+  * ``<family>_<role>_b<B>_l<L>.hlo.txt`` — one per ArtifactConfig,
+  * ``<family>_init.pbin``                — initial parameters per family,
+  * ``manifest.json``                     — shapes/orders/configs consumed
+    by ``rust/src/runtime/manifest.rs``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ar_lm, ddlm, pbin, plaid, ssd, transformer
+from .configs import ARTIFACTS, BASE, ArtifactConfig, ModelConfig
+
+F32, I32 = "f32", "i32"
+
+FAMILY_SEEDS = {"ddlm": 1001, "ssd": 1002, "plaid": 1003, "ar": 1004}
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.float32 if dtype == F32 else jnp.int32
+    )
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(params):
+    names = transformer.flatten_names(params)
+    return names, [spec(params[n].shape) for n in names]
+
+
+def build_step(art: ArtifactConfig, params):
+    """(fn, input specs, input names, output names) for a step artifact."""
+    cfg, b = art.model, art.batch
+    l, v, d = cfg.seq_len, cfg.vocab, cfg.d_model
+    names, pspecs = param_specs(params)
+    n = len(names)
+    out_names = [
+        "x_next", "probs", "x0_hat", "tokens",
+        "entropy", "kl", "switches", "norm_x0", "norm_x",
+    ]
+    if art.family == "ddlm":
+        def fn(*a):
+            p = transformer.unflatten(names, list(a[:n]))
+            return ddlm.gen_step(p, cfg, *a[n:])
+        data = [
+            ("x_t", spec((b, l, d))),
+            ("prev_probs", spec((b, l, v))),
+            ("prev_tokens", spec((b, l), I32)),
+            ("t2", spec((b, 2))),
+        ]
+    elif art.family == "ssd":
+        def fn(*a):
+            p = transformer.unflatten(names, list(a[:n]))
+            return ssd.gen_step(p, cfg, *a[n:])
+        data = [
+            ("x_t", spec((b, l, v))),
+            ("prev_probs", spec((b, l, v))),
+            ("prev_tokens", spec((b, l), I32)),
+            ("tau2", spec((b, 2))),
+            ("z", spec((b, l, v))),
+        ]
+    else:  # plaid
+        def fn(*a):
+            p = transformer.unflatten(names, list(a[:n]))
+            return plaid.gen_step(p, cfg, *a[n:])
+        data = [
+            ("x_t", spec((b, l, d))),
+            ("prev_probs", spec((b, l, v))),
+            ("prev_tokens", spec((b, l), I32)),
+            ("tau2", spec((b, 2))),
+            ("z", spec((b, l, d))),
+        ]
+    in_names = names + [nm for nm, _ in data]
+    in_specs = pspecs + [s for _, s in data]
+    return fn, in_specs, in_names, out_names
+
+
+def build_train(art: ArtifactConfig, params):
+    cfg, b = art.model, art.batch
+    l, v, d = cfg.seq_len, cfg.vocab, cfg.d_model
+    names, pspecs = param_specs(params)
+    n = len(names)
+    if art.family == "ddlm":
+        core = ddlm.train_step(cfg, names)
+        data = [
+            ("tokens", spec((b, l), I32)),
+            ("mask", spec((b, l))),
+            ("eps", spec((b, l, d))),
+            ("u", spec((b,))),
+            ("lr", spec(())),
+            ("t_max", spec(())),
+            ("tw_flag", spec(())),
+        ]
+    elif art.family == "ssd":
+        core = ssd.train_step(cfg, names)
+        data = [
+            ("tokens", spec((b, l), I32)),
+            ("mask", spec((b, l))),
+            ("z", spec((b, l, v))),
+            ("u", spec((b,))),
+            ("lr", spec(())),
+        ]
+    elif art.family == "plaid":
+        core = plaid.train_step(cfg, names)
+        data = [
+            ("tokens", spec((b, l), I32)),
+            ("mask", spec((b, l))),
+            ("eps", spec((b, l, d))),
+            ("u", spec((b,))),
+            ("lr", spec(())),
+        ]
+    else:  # ar
+        core = ar_lm.train_step(cfg, names)
+        data = [("tokens", spec((b, l), I32)), ("lr", spec(()))]
+
+    def fn(*a):
+        flat_p = list(a[:n])
+        m = list(a[n : 2 * n])
+        vv = list(a[2 * n : 3 * n])
+        count = a[3 * n]
+        rest = a[3 * n + 1 :]
+        new_p, new_m, new_v, new_c, ce = core(flat_p, m, vv, count, *rest)
+        return (*new_p, *new_m, *new_v, new_c, ce)
+
+    in_names = (
+        names
+        + [f"m.{nm}" for nm in names]
+        + [f"v.{nm}" for nm in names]
+        + ["count"]
+        + [nm for nm, _ in data]
+    )
+    in_specs = pspecs + pspecs + pspecs + [spec(())] + [s for _, s in data]
+    out_names = (
+        [f"p.{nm}" for nm in names]
+        + [f"m.{nm}" for nm in names]
+        + [f"v.{nm}" for nm in names]
+        + ["count", "loss"]
+    )
+    return fn, in_specs, in_names, out_names
+
+
+def build_logits(art: ArtifactConfig, params):
+    """AR logits artifact: (params, tokens) -> next-token logits [B,L,V]."""
+    cfg, b = art.model, art.batch
+    l = cfg.seq_len
+    names, pspecs = param_specs(params)
+    n = len(names)
+
+    def fn(*a):
+        p = transformer.unflatten(names, list(a[:n]))
+        return (ar_lm.logits_fn(p, cfg, a[n], use_pallas=True),)
+
+    data = [("tokens", spec((b, l), I32))]
+    in_names = names + [nm for nm, _ in data]
+    in_specs = pspecs + [s for _, s in data]
+    return fn, in_specs, in_names, ["logits"]
+
+
+def build_nll(art: ArtifactConfig, params):
+    cfg, b = art.model, art.batch
+    l = cfg.seq_len
+    names, pspecs = param_specs(params)
+    n = len(names)
+
+    def fn(*a):
+        p = transformer.unflatten(names, list(a[:n]))
+        return (ar_lm.nll_fn(p, cfg, a[n], a[n + 1]),)
+
+    data = [("tokens", spec((b, l), I32)), ("score_mask", spec((b, l)))]
+    in_names = names + [nm for nm, _ in data]
+    in_specs = pspecs + [s for _, s in data]
+    return fn, in_specs, in_names, ["nll"]
+
+
+def export(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    family_params = {}
+    for fam, seed in FAMILY_SEEDS.items():
+        p = transformer.init_params(BASE, seed, extra_head=(fam == "plaid"))
+        family_params[fam] = p
+        pbin.write(
+            os.path.join(out_dir, f"{fam}_init.pbin"),
+            [(k, p[k]) for k in transformer.flatten_names(p)],
+        )
+
+    manifest = {
+        "format": 1,
+        "model": {
+            "vocab": BASE.vocab,
+            "seq_len": BASE.seq_len,
+            "d_model": BASE.d_model,
+            "n_layers": BASE.n_layers,
+            "n_heads": BASE.n_heads,
+            "d_ff": BASE.d_ff,
+            "simplex_k": BASE.simplex_k,
+            "t_max": BASE.t_max,
+            "tw_buckets": BASE.tw_buckets,
+            "t_min": ddlm.T_MIN,
+        },
+        "param_names": {
+            fam: transformer.flatten_names(p)
+            for fam, p in family_params.items()
+        },
+        "artifacts": [],
+    }
+
+    for art in ARTIFACTS:
+        if only and art.name not in only:
+            continue
+        params = family_params[art.family]
+        if art.model.seq_len != BASE.seq_len:
+            # long-sequence variants re-initialise `pos` at the long length;
+            # everything else is shared with the base family params.
+            pl_ = dict(params)
+            rng = np.random.default_rng(FAMILY_SEEDS[art.family] + 7)
+            pl_["pos"] = (
+                0.02 * rng.normal(size=(art.model.seq_len, BASE.d_model))
+            ).astype(np.float32)
+            params_art = pl_
+            pbin.write(
+                os.path.join(
+                    out_dir, f"{art.family}_init_l{art.model.seq_len}.pbin"
+                ),
+                [
+                    (k, params_art[k])
+                    for k in transformer.flatten_names(params_art)
+                ],
+            )
+        else:
+            params_art = params
+        builder = {
+            "step": build_step,
+            "train": build_train,
+            "nll": build_nll,
+            "logits": build_logits,
+        }[art.role]
+        fn, in_specs, in_names, out_names = builder(art, params_art)
+        lowered = jax.jit(fn).lower(*in_specs)
+        # jax prunes unused inputs (e.g. tw.w in non-DDLM functions); the
+        # manifest must list exactly the surviving HLO parameters, in order.
+        kept = lowered._lowering.compile_args.get("kept_var_idx")
+        if kept is not None:
+            keep = sorted(kept)
+            in_specs = [in_specs[i] for i in keep]
+            in_names = [in_names[i] for i in keep]
+        text = to_hlo_text(lowered)
+        fname = f"{art.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": art.name,
+                "file": fname,
+                "family": art.family,
+                "role": art.role,
+                "batch": art.batch,
+                "seq_len": art.model.seq_len,
+                "inputs": [
+                    {
+                        "name": nm,
+                        "shape": list(s.shape),
+                        "dtype": "i32" if s.dtype == jnp.int32 else "f32",
+                    }
+                    for nm, s in zip(in_names, in_specs)
+                ],
+                "outputs": out_names,
+            }
+        )
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    export(args.out, set(args.only) if args.only else None)
+
+
+if __name__ == "__main__":
+    main()

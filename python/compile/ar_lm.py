@@ -1,0 +1,71 @@
+"""AR evaluator — the in-repo stand-in for GPT-Neo-1.3B (DESIGN.md §8).
+
+A small causal transformer on the same backbone (FiLM sites receive a zero
+time signal, so its conditional LayerNorms degrade to learned LayerNorms).
+Two artifacts come out of this module:
+
+  * ``ar_train`` — next-token CE training step (Adam fused),
+  * ``ar_nll``   — per-sequence mean NLL over scored positions, the AR-NLL
+    metric every quality experiment in the paper reports.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import optim, transformer
+from .configs import ModelConfig
+
+
+def logits_fn(p, cfg: ModelConfig, tokens, *, use_pallas: bool):
+    e_n = transformer.normalized_emb(p, cfg)
+    x = e_n[tokens]
+    b = tokens.shape[0]
+    h = transformer.forward(
+        p, cfg, x, jnp.zeros((b,), jnp.float32), causal=True,
+        use_pallas=use_pallas,
+    )
+    # 1/sqrt(D) keeps untrained logits O(1) despite sqrt(D)-norm embeddings
+    return h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
+
+
+def loss_fn(p, cfg: ModelConfig, tokens):
+    """Next-token CE over positions 0..L-2 -> 1..L-1."""
+    logits = logits_fn(p, cfg, tokens, use_pallas=False)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    return ce, ce
+
+
+def train_step(cfg: ModelConfig, names):
+    def step(flat_p, m, v, count, tokens, lr):
+        p = transformer.unflatten(names, list(flat_p))
+        (_, ce), grads = jax.value_and_grad(
+            lambda p_: loss_fn(p_, cfg, tokens), has_aux=True
+        )(p)
+        flat_g = [grads[k] for k in names]
+        new_p, new_m, new_v, new_c = optim.apply(
+            flat_p, flat_g, m, v, count, lr
+        )
+        return new_p, new_m, new_v, new_c, ce
+
+    return step
+
+
+def nll_fn(p, cfg: ModelConfig, tokens, score_mask):
+    """AR-NLL per sequence (the paper's headline quality metric).
+
+    tokens: [B, L] i32; score_mask: [B, L] f32 — 1 at positions whose
+    *target* token should be scored (e.g. 0 on the 32-token prefix in the
+    Prefix-32 setup).  Position i's mask refers to predicting tokens[i]
+    from tokens[<i]; score_mask[:, 0] is ignored (no context).
+
+    Returns nll [B] — mean NLL per scored token, in nats.
+    """
+    logits = logits_fn(p, cfg, tokens, use_pallas=True)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = score_mask[:, 1:]
+    return jnp.sum(nll * m, axis=-1) / (jnp.sum(m, axis=-1) + 1e-6)

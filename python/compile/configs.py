@@ -1,0 +1,87 @@
+"""Model / artifact configuration shared by L1 kernels, L2 models and aot.py.
+
+The paper's models (DDLM 147M, SSD 400M, Plaid 1.3B) are re-implemented at
+~1M parameters so the whole study runs on one CPU core via the PJRT CPU
+client (see DESIGN.md §8 for the substitution argument).  All shapes here are
+static: each exported HLO artifact is specialised for one (batch, seq_len)
+pair, mirroring how a production serving stack pre-compiles executables per
+bucket.
+"""
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Shared denoiser backbone configuration."""
+
+    vocab: int = 512          # word-level synthetic-corpus vocabulary
+    seq_len: int = 64         # paper's DDLM sample length
+    d_model: int = 64         # embedding dim == hidden dim (CDCD ties them)
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    # CDCD normalises embeddings to sqrt(d_model) (=16 for the paper's 256).
+    # SSD's simplex scale K.
+    simplex_k: float = 5.0
+    # VE diffusion horizon (CDCD t_max).  The exported train step takes
+    # t_max as a runtime scalar so the Table-4..7 ablation reuses one
+    # artifact; this is only the default.
+    t_max: float = 10.0
+    # Plaid / SSD discrete schedule length for training (DDPM-style).
+    num_train_steps: int = 1000
+    # time-warping CDF buckets (learned unnormalised CDF, Appendix A.1)
+    tw_buckets: int = 32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def emb_norm(self) -> float:
+        return float(self.d_model) ** 0.5
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    """One exported HLO executable = (family, role, batch, seq_len)."""
+
+    family: str               # ddlm | ssd | plaid | ar
+    role: str                 # step | train | nll
+    batch: int
+    model: ModelConfig = field(default_factory=ModelConfig)
+
+    @property
+    def name(self) -> str:
+        return f"{self.family}_{self.role}_b{self.batch}_l{self.model.seq_len}"
+
+
+BASE = ModelConfig()
+LONG = replace(BASE, seq_len=256)   # Fig-8 long-sequence variant (SSD/Plaid)
+
+# The artifact inventory `make artifacts` produces.  DDLM stays at L=64
+# ("its maximum sample length is limited to 64", paper §5.4 fn.).
+ARTIFACTS: Tuple[ArtifactConfig, ...] = (
+    # generation steps — serving batch and latency batch
+    ArtifactConfig("ddlm", "step", 8),
+    ArtifactConfig("ddlm", "step", 1),
+    ArtifactConfig("ssd", "step", 8),
+    ArtifactConfig("ssd", "step", 1),
+    ArtifactConfig("plaid", "step", 8),
+    ArtifactConfig("plaid", "step", 1),
+    # long-sequence variants for Fig 8
+    ArtifactConfig("ssd", "step", 2, LONG),
+    ArtifactConfig("plaid", "step", 2, LONG),
+    # training steps (Adam fused into the artifact)
+    ArtifactConfig("ddlm", "train", 16),
+    ArtifactConfig("ssd", "train", 16),
+    ArtifactConfig("plaid", "train", 16),
+    ArtifactConfig("ar", "train", 16),
+    # AR-NLL scorer used by eval::ar_nll
+    ArtifactConfig("ar", "nll", 8),
+    ArtifactConfig("ar", "nll", 1),
+    # AR logits for autoregressive baseline generation (Table 3 rows)
+    ArtifactConfig("ar", "logits", 8),
+)

@@ -1,0 +1,179 @@
+"""DDLM — the paper's reproduction of the CDCD framework (Appendix A).
+
+Variance-exploding score-interpolation diffusion over L2-normalised token
+embeddings:
+
+  forward process   X(t) = X0 + t * eps,            t in (0, t_max]
+  model             logits = f_theta(c_in(t) * X(t), t);  p = softmax
+  score interp.     x0_hat = p @ E_n
+  PF-ODE (Euler)    X_next = X + (t_next - t) (X - x0_hat) / t
+
+Training details reproduced from the paper:
+  * embeddings normalised to sqrt(D) (paper: norm 16 at D=256),
+  * noise masking — the mask tensor (MLM / prefix / span, built by the
+    rust data pipeline) selects which positions are noised; CE is computed
+    only on noised positions,
+  * time warping — a learned unnormalised CDF F(t) (bucketed softplus
+    weights) fit to the per-sample CE loss with the L_TW regression and
+    inverted to importance-sample t; toggled by a runtime 0/1 scalar so
+    the Table-4..7 ablation shares one artifact,
+  * t_max as a runtime scalar ({10, 50, 300} ablation, same reason).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import optim, transformer
+from .configs import ModelConfig
+from .kernels import ref, score, stats
+
+T_MIN = 0.05
+
+
+def cdf_buckets(p, cfg: ModelConfig, t_max):
+    """Unnormalised learned CDF over [T_MIN, t_max] as bucket increments."""
+    inc = jax.nn.softplus(p["tw.w"]) + 1e-4  # [K], positive
+    cdf = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(inc)])
+    edges = jnp.linspace(T_MIN, 1.0, cfg.tw_buckets + 1) * t_max
+    edges = jnp.maximum(edges, T_MIN)
+    return cdf, edges  # cdf: [K+1] increasing, edges: [K+1] times
+
+
+def warp_time(p, cfg: ModelConfig, u, t_max, tw_flag):
+    """Map uniform u in [0,1] to t: warped (inverse CDF) or linear."""
+    cdf, edges = cdf_buckets(p, cfg, t_max)
+    total = cdf[-1]
+    target = u * total
+    idx = jnp.clip(
+        jnp.searchsorted(cdf, target, side="right") - 1,
+        0,
+        cfg.tw_buckets - 1,
+    )
+    frac = (target - cdf[idx]) / (cdf[idx + 1] - cdf[idx] + 1e-12)
+    t_warp = edges[idx] + frac * (edges[idx + 1] - edges[idx])
+    t_lin = T_MIN + u * (t_max - T_MIN)
+    return jnp.where(tw_flag > 0.5, t_warp, t_lin)
+
+
+def cdf_value(p, cfg: ModelConfig, t, t_max):
+    """Evaluate the unnormalised CDF at t (for the L_TW regression)."""
+    cdf, edges = cdf_buckets(p, cfg, t_max)
+    idx = jnp.clip(
+        jnp.searchsorted(edges, t, side="right") - 1, 0, cfg.tw_buckets - 1
+    )
+    frac = (t - edges[idx]) / (edges[idx + 1] - edges[idx] + 1e-12)
+    return cdf[idx] + frac * (cdf[idx + 1] - cdf[idx])
+
+
+def _c_in(t):
+    """EDM-style input preconditioning for the VE process."""
+    return 1.0 / jnp.sqrt(1.0 + jnp.square(t))
+
+
+def logits_fn(p, cfg: ModelConfig, x_t, t, *, use_pallas: bool):
+    """Denoiser: noisy embeddings + time -> vocab logits."""
+    e_n = transformer.normalized_emb(p, cfg)
+    h = transformer.forward(
+        p,
+        cfg,
+        x_t * _c_in(t)[:, None, None],
+        jnp.log1p(t),  # log-time conditioning, scale-free across t_max
+        use_pallas=use_pallas,
+    )
+    # 1/sqrt(D) keeps untrained logits O(1) despite sqrt(D)-norm embeddings
+    return h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model)), e_n
+
+
+def loss_fn(p, cfg: ModelConfig, tokens, mask, eps, u, t_max, tw_flag):
+    """Score-interpolation CE + time-warping regression.
+
+    tokens: [B,L] i32; mask: [B,L] f32 (1 = noised); eps: [B,L,D];
+    u: [B] uniform; t_max, tw_flag: scalars.  Returns (loss, ce).
+    """
+    e_n = transformer.normalized_emb(p, cfg)
+    x0 = e_n[tokens]
+    t = warp_time(p, cfg, u, t_max, tw_flag)  # [B]
+    x_noised = x0 + t[:, None, None] * eps
+    m3 = mask[:, :, None]
+    x_in = x_noised * m3 + x0 * (1.0 - m3)
+    h = transformer.forward(
+        p, cfg, x_in * _c_in(t)[:, None, None], jnp.log1p(t),
+        use_pallas=False,
+    )
+    logits = h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    denom = jnp.sum(mask, axis=-1) + 1e-6
+    ce_per = jnp.sum(nll * mask, axis=-1) / denom  # [B]
+    ce = jnp.mean(ce_per)
+    # L_TW: unnormalised CDF regresses the (detached) per-sample loss.
+    f_pred = cdf_value(p, cfg, t, t_max)
+    l_tw = jnp.mean(jnp.square(f_pred - jax.lax.stop_gradient(ce_per)))
+    return ce + 0.1 * l_tw, ce
+
+
+def train_step(cfg: ModelConfig, names):
+    """Build the jittable train step over flat parameter lists.
+
+    ``names`` is the deterministic parameter order shared with rust
+    (``transformer.flatten_names``).
+    """
+
+    def step(flat_p, m, v, count, tokens, mask, eps, u, lr, t_max, tw_flag):
+        p = transformer.unflatten(names, list(flat_p))
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p_: loss_fn(p_, cfg, tokens, mask, eps, u, t_max, tw_flag),
+            has_aux=True,
+        )(p)
+        flat_g = [grads[k] for k in names]
+        new_p, new_m, new_v, new_c = optim.apply(
+            flat_p, flat_g, m, v, count, lr
+        )
+        return new_p, new_m, new_v, new_c, ce
+
+    return step
+
+
+def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2):
+    """One generation step + halting statistics (the step artifact body).
+
+    x_t: [B,L,D]; prev_probs: [B,L,V]; prev_tokens: [B,L] i32;
+    t2: [B,2] per-slot (t_cur, t_next) — per-slot times let the serving
+    coordinator recycle batch slots mid-schedule (continuous batching).
+
+    Returns (x_next, probs, x0_hat, tokens, entropy, kl, switches,
+             norm_x0 [B], norm_x [B]).
+    """
+    logits, e_n = logits_fn(p, cfg, x_t, t2[:, 0], use_pallas=True)
+    x_next, probs, x0_hat = score.score_euler(logits, e_n, x_t, t2)
+    tokens, entropy, kl, switches = stats.halt_stats(
+        probs, prev_probs, prev_tokens
+    )
+    norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
+    norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    return (
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+    )
+
+
+def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2):
+    """Oracle twin of ``gen_step`` on the pure-jnp path (pytest parity)."""
+    t_cur = t2[:, 0]
+    e_n = transformer.normalized_emb(p, cfg)
+    h = transformer.forward(
+        p,
+        cfg,
+        x_t * _c_in(t_cur)[:, None, None],
+        jnp.log1p(t_cur),
+        use_pallas=False,
+    )
+    logits = h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
+    x_next, probs, x0_hat = ref.score_euler_ref(logits, e_n, x_t, t2)
+    tokens, entropy, kl, switches = ref.halt_stats_ref(
+        probs, prev_probs, prev_tokens
+    )
+    norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
+    norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    return (
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+    )

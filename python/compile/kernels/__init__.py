@@ -1,0 +1,13 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp oracles.
+
+Public surface:
+  attention.mha          -- fused flash-style multi-head attention
+  film.film              -- FiLM-conditioned layer norm (CDCD conditioning)
+  score.score_euler      -- fused score interpolation + Euler PF-ODE update
+  stats.halt_stats       -- fused halting statistics (entropy/KL/switches)
+  diffuse.ddpm_step      -- Plaid DDPM ancestral update
+  diffuse.simplex_step   -- SSD simplex re-noising update
+  ref.*                  -- semantic oracles for all of the above
+"""
+
+from . import attention, diffuse, film, ref, score, stats  # noqa: F401

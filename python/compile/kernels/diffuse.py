@@ -1,0 +1,81 @@
+"""Sampler-update Pallas kernels for the SSD and Plaid families.
+
+DDLM's Euler update lives in ``score.py`` (fused with score interpolation).
+SSD and Plaid use discrete variance-preserving schedules, so their per-step
+state updates are elementwise over the diffusion state; each is a single
+VPU-shaped kernel.
+
+All schedule values arrive *per batch slot* (`[B, ...]`), because the
+serving coordinator recycles batch slots mid-schedule (continuous
+batching): two slots of the same device call can be at different diffusion
+steps.
+
+Tiling (§Perf iteration 1): one program owns the full batch tile
+(elementwise VPU work, ≤ 1 MB at this scale); tile over batch at paper
+scale.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ddpm_kernel(x_ref, x0_ref, ab_ref, z_ref, o_ref):
+    abar_cur = ab_ref[:, 0][:, None, None]
+    abar_next = ab_ref[:, 1][:, None, None]
+    alpha_t = abar_cur / abar_next
+    beta_t = 1.0 - alpha_t
+    c0 = jnp.sqrt(abar_next) * beta_t / (1.0 - abar_cur)
+    ct = jnp.sqrt(alpha_t) * (1.0 - abar_next) / (1.0 - abar_cur)
+    mu = c0 * x0_ref[...] + ct * x_ref[...]
+    var = beta_t * (1.0 - abar_next) / (1.0 - abar_cur)
+    o_ref[...] = mu + jnp.sqrt(jnp.maximum(var, 0.0)) * z_ref[...]
+
+
+@jax.jit
+def ddpm_step(x_t, x0_hat, ab2, z):
+    """Plaid DDPM ancestral step.  x_t/x0_hat/z: [B,L,D]; ab2: [B,2] =
+    per-slot (abar_cur, abar_next).
+
+    Matches ``ref.ddpm_step_ref`` (pytest-enforced).
+    """
+    b, seq_len, d = x_t.shape
+    spec = pl.BlockSpec((b, seq_len, d), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        _ddpm_kernel,
+        grid=(1,),
+        in_specs=[spec, spec, pl.BlockSpec((b, 2), lambda i: (0, 0)), spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, seq_len, d), jnp.float32),
+        interpret=True,
+    )(x_t, x0_hat, ab2, z)
+
+
+def _simplex_kernel(p_ref, ab_ref, z_ref, o_ref, *, k: float):
+    abar_next = ab_ref[:, 0][:, None, None]
+    x0 = (2.0 * p_ref[...] - 1.0) * k
+    o_ref[...] = (
+        jnp.sqrt(abar_next) * x0
+        + jnp.sqrt(1.0 - abar_next) * k * z_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def simplex_step(probs, k, abar_next, z):
+    """SSD simplex re-noising step.  probs/z: [B,L,V]; abar_next: [B,1]
+    per-slot; k: static config scalar (the simplex magnitude).
+
+    Matches ``ref.simplex_step_ref`` (pytest-enforced).
+    """
+    b, seq_len, v = probs.shape
+    spec = pl.BlockSpec((b, seq_len, v), lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_simplex_kernel, k=float(k)),
+        grid=(1,),
+        in_specs=[spec, pl.BlockSpec((b, 1), lambda i: (0, 0)), spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, seq_len, v), jnp.float32),
+        interpret=True,
+    )(probs, abar_next, z)

@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth: `python/tests/test_kernels.py`
+asserts the Pallas (interpret-mode) kernels match these to float32 tolerance
+over hypothesis-driven shape/value sweeps.  The training paths of the L2
+models also call these directly (reverse-mode AD through pallas_call is not
+exercised; kernels are the *inference* hot path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = False):
+    """Multi-head attention oracle.
+
+    q, k, v: [B, H, L, Dh].  Returns [B, H, L, Dh].
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        ln = logits.shape[-1]
+        mask = jnp.tril(jnp.ones((ln, ln), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def film_ref(x, gamma, beta, *, eps: float = 1e-6):
+    """FiLM-conditioned layer norm oracle (CDCD time conditioning).
+
+    x: [B, L, D]; gamma, beta: [B, D] (per-sequence conditioning derived
+    from the timestep embedding).  Returns [B, L, D].
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xhat * (1.0 + gamma[:, None, :]) + beta[:, None, :]
+
+
+def score_euler_ref(logits, emb, x_t, t2):
+    """Score-interpolation + Euler ODE update oracle (CDCD generation).
+
+    logits: [B, L, V]; emb: [V, D]; x_t: [B, L, D]; t2: [B, 2] per-slot
+    (t_cur, t_next) — per-slot times support continuous batching.
+
+    p          = softmax(logits)
+    x0_hat     = p @ emb                      (score interpolation)
+    score_hat  = (x0_hat - x_t) / t_cur^2     (Karras et al. 2022)
+    x_next     = x_t + (t_next - t_cur) * t_cur * score_hat
+               = x_t + (t_next - t_cur) * (x_t - x0_hat) / t_cur   [PF-ODE]
+
+    Returns (x_next, probs, x0_hat).
+    """
+    t_cur = t2[:, 0][:, None, None]
+    t_next = t2[:, 1][:, None, None]
+    p = jax.nn.softmax(logits, axis=-1)
+    x0_hat = jnp.einsum("blv,vd->bld", p, emb)
+    x_next = x_t + (t_next - t_cur) * (x_t - x0_hat) / t_cur
+    return x_next, p, x0_hat
+
+
+def halt_stats_ref(probs, prev_probs, prev_tokens):
+    """Halting-statistics oracle (the paper's three adaptive criteria inputs).
+
+    probs, prev_probs: [B, L, V]; prev_tokens: [B, L] int32.
+
+    Returns (tokens [B,L] i32, entropy [B], kl [B], switches [B] f32):
+      entropy  = mean_l H(p_l)                      (Algorithm 1)
+      kl       = mean_l KL(p_l || prev_p_l)         (Algorithm 3)
+      switches = sum_l [argmax p_l != prev_token_l] (Algorithm 2)
+    """
+    eps = jnp.float32(1e-12)
+    logp = jnp.log(probs + eps)
+    entropy = -jnp.sum(probs * logp, axis=-1).mean(axis=-1)
+    kl = jnp.sum(probs * (logp - jnp.log(prev_probs + eps)), axis=-1).mean(
+        axis=-1
+    )
+    tokens = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    switches = jnp.sum((tokens != prev_tokens).astype(jnp.float32), axis=-1)
+    return tokens, entropy, kl, switches
+
+
+def ddpm_step_ref(x_t, x0_hat, ab2, z):
+    """Plaid DDPM ancestral-step oracle (variance preserving).
+
+    x_t, x0_hat, z: [B, L, D]; ab2: [B, 2] per-slot cumulative alpha-bar at
+    the current / next timestep (abar_next > abar_cur since generation
+    walks towards clean data).
+
+    Posterior q(x_{t-1} | x_t, x0) with the standard DDPM coefficients:
+      alpha_t  = abar_cur / abar_next
+      mu       = c0 * x0 + ct * x_t
+      sigma^2  = beta_t * (1 - abar_next) / (1 - abar_cur)
+    """
+    abar_cur = ab2[:, 0][:, None, None]
+    abar_next = ab2[:, 1][:, None, None]
+    alpha_t = abar_cur / abar_next
+    beta_t = 1.0 - alpha_t
+    c0 = jnp.sqrt(abar_next) * beta_t / (1.0 - abar_cur)
+    ct = jnp.sqrt(alpha_t) * (1.0 - abar_next) / (1.0 - abar_cur)
+    mu = c0 * x0_hat + ct * x_t
+    var = beta_t * (1.0 - abar_next) / (1.0 - abar_cur)
+    return mu + jnp.sqrt(jnp.maximum(var, 0.0)) * z
+
+
+def simplex_step_ref(probs, k, abar_next, z):
+    """SSD simplex re-noising oracle.
+
+    probs: [B, L, V]; z: [B, L, V]; k scalar; abar_next: [B, 1] per-slot.
+
+    Soft simplex projection x0 = (2p - 1) * K, then forward-diffuse to the
+    next (lower-noise) timestep: x = sqrt(abar) x0 + sqrt(1-abar) * K * z.
+    """
+    ab = abar_next[:, :, None]
+    x0 = (2.0 * probs - 1.0) * k
+    return jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * k * z

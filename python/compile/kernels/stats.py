@@ -1,0 +1,63 @@
+"""Fused halting statistics as a Pallas kernel.
+
+The paper's three adaptive criteria (Algorithms 1-3) each consume one
+scalar per sequence per step: the entropy of p(x | X(t), t), the KL
+divergence against the previous step's distribution, and the number of
+argmax token switches.  Computing them *inside* the step artifact means the
+rust coordinator's halting decision needs O(B) floats off the device per
+step instead of the [B, L, V] probability tensor — the serving-side
+analogue of "the criteria are cheap relative to a forward pass".
+
+Tiling (§Perf iteration 1): one program reduces both [B, L, V] probability
+tiles (2 MB total at this scale) to per-sequence scalars; at paper scale,
+tile over batch chunks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _stats_kernel(
+    p_ref, prev_p_ref, prev_tok_ref, tok_ref, ent_ref, kl_ref, sw_ref
+):
+    p = p_ref[...]  # [B, L, V]
+    prev_p = prev_p_ref[...]
+    logp = jnp.log(p + _EPS)
+    ent_ref[...] = -jnp.mean(jnp.sum(p * logp, axis=-1), axis=-1)
+    kl_ref[...] = jnp.mean(
+        jnp.sum(p * (logp - jnp.log(prev_p + _EPS)), axis=-1), axis=-1
+    )
+    tokens = jnp.argmax(p, axis=-1).astype(jnp.int32)
+    tok_ref[...] = tokens
+    sw_ref[...] = jnp.sum(
+        (tokens != prev_tok_ref[...]).astype(jnp.float32), axis=-1
+    )
+
+
+@jax.jit
+def halt_stats(probs, prev_probs, prev_tokens):
+    """probs/prev_probs: [B,L,V]; prev_tokens: [B,L] i32.
+
+    Returns (tokens [B,L] i32, entropy [B], kl [B], switches [B]).
+    Matches ``ref.halt_stats_ref`` (pytest-enforced).
+    """
+    b, seq_len, v = probs.shape
+    pspec = pl.BlockSpec((b, seq_len, v), lambda i: (0, 0, 0))
+    tspec = pl.BlockSpec((b, seq_len), lambda i: (0, 0))
+    sspec = pl.BlockSpec((b,), lambda i: (0,))
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(1,),
+        in_specs=[pspec, pspec, tspec],
+        out_specs=(tspec, sspec, sspec, sspec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ),
+        interpret=True,
+    )(probs, prev_probs, prev_tokens)

@@ -1,0 +1,45 @@
+"""Adam, fused into the training artifacts.
+
+The optimizer state (first/second moments + step counter) travels through
+the HLO boundary as plain tensors, so the rust training driver owns the
+loop, checkpointing, and learning-rate schedule (lr is a runtime scalar
+input) while the update math stays inside XLA.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def init_state(flat_params) -> Tuple[List, List, jnp.ndarray]:
+    m = [jnp.zeros_like(t) for t in flat_params]
+    v = [jnp.zeros_like(t) for t in flat_params]
+    return m, v, jnp.zeros((), jnp.float32)
+
+
+def apply(flat_params, grads, m, v, count, lr, *, clip: float = 1.0):
+    """One Adam update with global-norm gradient clipping.
+
+    All inputs/outputs are flat lists so the AOT exporter can splice them
+    straight into the artifact signature.  Returns (params', m', v', count').
+    """
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in grads) + jnp.float32(1e-12)
+    )
+    scale = jnp.minimum(jnp.float32(1.0), clip / gnorm)
+    count = count + 1.0
+    bc1 = 1.0 - B1**count
+    bc2 = 1.0 - B2**count
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(flat_params, grads, m, v):
+        g = g * scale
+        mi = B1 * mi + (1.0 - B1) * g
+        vi = B2 * vi + (1.0 - B2) * jnp.square(g)
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + EPS)
+        new_p.append(p - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, count

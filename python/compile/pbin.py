@@ -1,0 +1,66 @@
+"""PBIN — the parameter interchange format between python and rust.
+
+A deliberately trivial little-endian container (numpy has no offline npz
+reader on the rust side, so we define our own):
+
+    magic   : 6 bytes  b"PBIN1\\n"
+    count   : u32      number of tensors
+    tensor* : u32 name_len | name utf-8 | u8 dtype (0=f32, 1=i32)
+              | u32 ndim | u64 * ndim dims | raw data (little-endian)
+
+Rust twin: ``rust/src/models/pbin.rs`` (round-trip tested on both sides).
+"""
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"PBIN1\n"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = DTYPES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", code))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[: len(MAGIC)] == MAGIC, "bad PBIN magic"
+    off = len(MAGIC)
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        (code,) = struct.unpack_from("<B", data, off)
+        off += 1
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dims = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        dt = np.dtype(DTYPES_INV[code])
+        nbytes = int(np.prod(dims)) * dt.itemsize if ndim else dt.itemsize
+        arr = np.frombuffer(data, dt, count=int(np.prod(dims)) if ndim else 1,
+                            offset=off).reshape(dims)
+        off += nbytes
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,104 @@
+"""Plaid — VLB-trained embedding-diffusion LM (Gulrajani & Hashimoto 2023),
+reduced scale.
+
+Variance-preserving DDPM over token embeddings with an explicit x0 head:
+
+  forward    X_t = sqrt(abar_t) X0 + sqrt(1 - abar_t) eps
+  model      x0_hat = head(f_theta(X_t, t));  logits = x0_hat @ E^T
+  loss       simplified VLB: MSE(x0_hat, X0) + CE(logits, x)  on noised
+             positions (the CE term anchors the categorical likelihood
+             p(x | X(t), t) that the halting criteria consume)
+  sampler    DDPM ancestral step (stochastic until the final step — the
+             reason Plaid's adaptive criteria stay flat in paper Fig 4 and
+             only the *fixed* criterion applies).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import optim, transformer
+from .configs import ModelConfig
+from .kernels import diffuse, ref, stats
+from .ssd import abar_cosine
+
+
+def x0_and_logits(p, cfg: ModelConfig, x_t, tau, *, use_pallas: bool):
+    e_n = transformer.normalized_emb(p, cfg)
+    h = transformer.forward(p, cfg, x_t, tau, use_pallas=use_pallas)
+    x0_hat = h @ p["x0.w"]
+    logits = x0_hat @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
+    return x0_hat, logits, e_n
+
+
+def loss_fn(p, cfg: ModelConfig, tokens, mask, eps, u):
+    e_n = transformer.normalized_emb(p, cfg)
+    x0 = e_n[tokens]
+    tau = u
+    ab = abar_cosine(tau)[:, None, None]
+    x_noised = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * eps
+    m3 = mask[:, :, None]
+    x_in = x_noised * m3 + x0 * (1.0 - m3)
+    x0_hat, logits, _ = x0_and_logits(p, cfg, x_in, tau, use_pallas=False)
+    denom = jnp.sum(mask) + 1e-6
+    mse = jnp.sum(
+        jnp.mean(jnp.square(x0_hat - x0), axis=-1) * mask
+    ) / denom
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * mask) / denom
+    return mse + ce, ce
+
+
+def train_step(cfg: ModelConfig, names):
+    def step(flat_p, m, v, count, tokens, mask, eps, u, lr):
+        p = transformer.unflatten(names, list(flat_p))
+        (_, ce), grads = jax.value_and_grad(
+            lambda p_: loss_fn(p_, cfg, tokens, mask, eps, u), has_aux=True
+        )(p)
+        flat_g = [grads[k] for k in names]
+        new_p, new_m, new_v, new_c = optim.apply(
+            flat_p, flat_g, m, v, count, lr
+        )
+        return new_p, new_m, new_v, new_c, ce
+
+    return step
+
+
+def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+    """One DDPM ancestral step + halting stats.
+
+    x_t/z: [B,L,D]; tau2: [B,2] per-slot (tau_cur, tau_next),
+    tau_next > tau_cur; per-slot times support continuous batching.
+    Returns (x_next, probs, x0_hat, tokens, entropy, kl, switches,
+             norm_x0, norm_x).
+    """
+    x0_hat, logits, _ = x0_and_logits(
+        p, cfg, x_t, tau2[:, 0], use_pallas=True
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    x_next = diffuse.ddpm_step(x_t, x0_hat, abar_cosine(tau2), z)
+    tokens, entropy, kl, switches = stats.halt_stats(
+        probs, prev_probs, prev_tokens
+    )
+    norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
+    norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    return (
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+    )
+
+
+def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+    """Oracle twin of ``gen_step`` (pytest parity)."""
+    x0_hat, logits, _ = x0_and_logits(
+        p, cfg, x_t, tau2[:, 0], use_pallas=False
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    x_next = ref.ddpm_step_ref(x_t, x0_hat, abar_cosine(tau2), z)
+    tokens, entropy, kl, switches = ref.halt_stats_ref(
+        probs, prev_probs, prev_tokens
+    )
+    norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
+    norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    return (
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+    )

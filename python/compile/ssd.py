@@ -1,0 +1,117 @@
+"""SSD — simplex-based diffusion LM (Han et al. 2023), reduced scale.
+
+Tokens are represented as almost-one-hot logit vectors: X0[i, j] = +K when
+x_i = V_j and -K otherwise.  A discrete variance-preserving (cosine)
+schedule noises the simplex; the denoiser reads softmax(X_t) projected onto
+embeddings and predicts the clean token distribution with cross-entropy.
+
+Generation ("Simplex" sampler, paper Table 3): at step s the model produces
+p(x | X(s), s); the soft simplex projection x0 = (2p - 1)K is re-noised to
+the next (lower-noise) timestep.  Noise keeps being injected until abar -> 1,
+which is why SSD's halting criteria fire much later than DDLM's (paper
+Fig 4: ~step 850 of 1000).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import optim, transformer
+from .configs import ModelConfig
+from .kernels import diffuse, ref, stats
+
+
+def abar_cosine(tau):
+    """Cumulative alpha-bar for tau in [0,1] (1 = clean): cosine schedule."""
+    s = 0.008
+    f = jnp.cos((1.0 - tau + s) / (1.0 + s) * jnp.pi / 2.0) ** 2
+    f0 = jnp.cos(jnp.float32(s / (1.0 + s)) * jnp.pi / 2.0) ** 2
+    return jnp.clip(f / f0, 1e-5, 1.0 - 1e-5)
+
+
+def logits_fn(p, cfg: ModelConfig, x_t, tau, *, use_pallas: bool):
+    """x_t: [B,L,V] noisy simplex; tau: [B] in [0,1]."""
+    e_n = transformer.normalized_emb(p, cfg)
+    p_in = jax.nn.softmax(x_t / cfg.simplex_k, axis=-1)
+    x_emb = p_in @ e_n
+    h = transformer.forward(p, cfg, x_emb, tau, use_pallas=use_pallas)
+    # 1/sqrt(D) keeps untrained logits O(1) despite sqrt(D)-norm embeddings
+    return h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
+
+
+def loss_fn(p, cfg: ModelConfig, tokens, mask, z, u):
+    """CE on noised positions.  z: [B,L,V] gaussian; u: [B] uniform."""
+    v = cfg.vocab
+    x0 = (2.0 * jax.nn.one_hot(tokens, v, dtype=jnp.float32) - 1.0) * (
+        cfg.simplex_k
+    )
+    tau = u  # uniform timestep in [0,1]
+    ab = abar_cosine(tau)[:, None, None]
+    x_noised = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * cfg.simplex_k * z
+    m3 = mask[:, :, None]
+    x_in = x_noised * m3 + x0 * (1.0 - m3)
+    logits = logits_fn(p, cfg, x_in, tau, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * mask) / (jnp.sum(mask) + 1e-6)
+    return ce, ce
+
+
+def train_step(cfg: ModelConfig, names):
+    def step(flat_p, m, v, count, tokens, mask, z, u, lr):
+        p = transformer.unflatten(names, list(flat_p))
+        (_, ce), grads = jax.value_and_grad(
+            lambda p_: loss_fn(p_, cfg, tokens, mask, z, u), has_aux=True
+        )(p)
+        flat_g = [grads[k] for k in names]
+        new_p, new_m, new_v, new_c = optim.apply(
+            flat_p, flat_g, m, v, count, lr
+        )
+        return new_p, new_m, new_v, new_c, ce
+
+    return step
+
+
+def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+    """One simplex generation step + halting stats.
+
+    x_t/z: [B,L,V]; tau2: [B,2] per-slot (tau_cur, tau_next) with
+    tau_next > tau_cur (generation walks towards clean tau=1); per-slot
+    times support the coordinator's continuous batching.
+
+    Returns (x_next, probs, x0_hat_emb, tokens, entropy, kl, switches,
+             norm_x0, norm_x).
+    """
+    logits = logits_fn(p, cfg, x_t, tau2[:, 0], use_pallas=True)
+    probs = jax.nn.softmax(logits, axis=-1)
+    x_next = diffuse.simplex_step(
+        probs, cfg.simplex_k, abar_cosine(tau2[:, 1:2]), z
+    )
+    tokens, entropy, kl, switches = stats.halt_stats(
+        probs, prev_probs, prev_tokens
+    )
+    e_n = transformer.normalized_emb(p, cfg)
+    x0_hat = probs @ e_n
+    norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
+    norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    return (
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+    )
+
+
+def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+    """Oracle twin of ``gen_step`` (pytest parity)."""
+    logits = logits_fn(p, cfg, x_t, tau2[:, 0], use_pallas=False)
+    probs = jax.nn.softmax(logits, axis=-1)
+    x_next = ref.simplex_step_ref(
+        probs, cfg.simplex_k, abar_cosine(tau2[:, 1:2]), z
+    )
+    tokens, entropy, kl, switches = ref.halt_stats_ref(
+        probs, prev_probs, prev_tokens
+    )
+    e_n = transformer.normalized_emb(p, cfg)
+    x0_hat = probs @ e_n
+    norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
+    norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    return (
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+    )

@@ -1,0 +1,144 @@
+"""Shared denoiser backbone: pre-LN transformer with FiLM time conditioning.
+
+All four model families (DDLM/CDCD, SSD, Plaid, and the AR evaluator) share
+this backbone, mirroring the paper's observation that the families differ in
+*objective and sampler*, not in network topology.  The backbone is a plain
+functional module: parameters are a flat ``{name: array}`` dict so the AOT
+exporter can flatten them deterministically (sorted by name) into the HLO
+parameter list the rust runtime feeds.
+
+Two execution paths exist:
+  * ``use_pallas=True``  — inference/step artifacts: attention + FiLM run as
+    the L1 Pallas kernels (interpret-mode).
+  * ``use_pallas=False`` — training artifacts: the pure-jnp oracles from
+    ``kernels.ref`` (reverse-mode AD through pallas_call is not exercised).
+pytest asserts both paths agree to float32 tolerance.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import attention, film, ref
+
+Params = Dict[str, jnp.ndarray]
+
+# sinusoidal time-feature width (CDCD conditions LayerNorm on these)
+TIME_FEATURES = 32
+
+
+def time_features(tau):
+    """tau: [B] float32 in [0, 1] -> [B, TIME_FEATURES] sinusoidal bank."""
+    half = TIME_FEATURES // 2
+    freqs = jnp.exp(
+        jnp.linspace(0.0, jnp.log(1000.0), half, dtype=jnp.float32)
+    )
+    ang = tau[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _film_sites(n_layers: int):
+    for i in range(n_layers):
+        yield f"l{i}.ln1"
+        yield f"l{i}.ln2"
+    yield "lnf"
+
+
+def init_params(cfg: ModelConfig, seed: int, *, extra_head: bool = False):
+    """Initialise backbone parameters (numpy, for .pbin export).
+
+    ``extra_head`` adds Plaid's x0-prediction head.
+    """
+    rng = np.random.default_rng(seed)
+    p: Dict[str, np.ndarray] = {}
+
+    def dense(name, fan_in, fan_out):
+        scale = (2.0 / (fan_in + fan_out)) ** 0.5
+        p[name] = rng.normal(0.0, scale, size=(fan_in, fan_out)).astype(
+            np.float32
+        )
+
+    d, f = cfg.d_model, cfg.d_ff
+    p["emb"] = rng.normal(0.0, 1.0, size=(cfg.vocab, d)).astype(np.float32)
+    p["pos"] = (0.02 * rng.normal(size=(cfg.seq_len, d))).astype(np.float32)
+    for i in range(cfg.n_layers):
+        for w in ("wq", "wk", "wv", "wo"):
+            dense(f"l{i}.{w}", d, d)
+        dense(f"l{i}.w1", d, f)
+        dense(f"l{i}.w2", f, d)
+    for site in _film_sites(cfg.n_layers):
+        # FiLM projections start at zero: the block begins as a plain
+        # (unscaled) LayerNorm and learns its time modulation.
+        p[f"{site}.wg"] = np.zeros((TIME_FEATURES, d), np.float32)
+        p[f"{site}.bg"] = np.zeros((d,), np.float32)
+        p[f"{site}.wb"] = np.zeros((TIME_FEATURES, d), np.float32)
+        p[f"{site}.bb"] = np.zeros((d,), np.float32)
+    # learned unnormalised time-warping CDF (CDCD Appendix A.1); bucket
+    # pre-softplus weights.  Only DDLM reads it, but keeping the tensor in
+    # every family keeps the flattened parameter layout uniform.
+    p["tw.w"] = np.zeros((cfg.tw_buckets,), np.float32)
+    if extra_head:
+        dense("x0.w", d, d)
+    return p
+
+
+def normalized_emb(p: Params, cfg: ModelConfig):
+    """CDCD embedding normalisation: every row scaled to L2 norm sqrt(D)."""
+    e = p["emb"]
+    n = jnp.sqrt(jnp.sum(jnp.square(e), axis=-1, keepdims=True) + 1e-8)
+    return e / n * cfg.emb_norm
+
+
+def _film_apply(p: Params, site: str, x, tfeat, use_pallas: bool):
+    gamma = tfeat @ p[f"{site}.wg"] + p[f"{site}.bg"]
+    beta = tfeat @ p[f"{site}.wb"] + p[f"{site}.bb"]
+    fn = film.film if use_pallas else ref.film_ref
+    return fn(x, gamma, beta)
+
+
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    x,
+    tau,
+    *,
+    causal: bool = False,
+    use_pallas: bool = True,
+):
+    """Backbone forward.  x: [B, L, D] embeddings; tau: [B] time in [0,1].
+
+    Returns hidden states [B, L, D] (post final FiLM-LN).
+    """
+    b, seq_len, d = x.shape
+    h_heads, dh = cfg.n_heads, cfg.d_head
+    tfeat = time_features(tau)
+    x = x + p["pos"][None, :, :]
+    mha = attention.mha if use_pallas else ref.mha_ref
+    for i in range(cfg.n_layers):
+        hn = _film_apply(p, f"l{i}.ln1", x, tfeat, use_pallas)
+        q = (hn @ p[f"l{i}.wq"]).reshape(b, seq_len, h_heads, dh)
+        k = (hn @ p[f"l{i}.wk"]).reshape(b, seq_len, h_heads, dh)
+        v = (hn @ p[f"l{i}.wv"]).reshape(b, seq_len, h_heads, dh)
+        q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+        a = mha(q, k, v, causal=causal)
+        a = a.transpose(0, 2, 1, 3).reshape(b, seq_len, d)
+        x = x + a @ p[f"l{i}.wo"]
+        hn = _film_apply(p, f"l{i}.ln2", x, tfeat, use_pallas)
+        x = x + jax.nn.gelu(hn @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+    return _film_apply(p, "lnf", x, tfeat, use_pallas)
+
+
+def flatten_names(p: Params):
+    """Deterministic parameter order shared with the rust runtime."""
+    return sorted(p.keys())
+
+
+def flatten(p: Params):
+    return [p[k] for k in flatten_names(p)]
+
+
+def unflatten(names, arrays) -> Params:
+    return dict(zip(names, arrays))

@@ -1,0 +1,241 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value regimes; numpy.testing.assert_allclose
+is the acceptance gate (float32, rtol/atol 2e-5 — interpret-mode pallas and
+the oracle share XLA's math, so drift beyond reassociation is a bug).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, diffuse, film, ref, score, stats
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _f32(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+
+def _probs(rng, b, l, v):
+    logits = rng.normal(size=(b, l, v))
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    return jnp.asarray(e / e.sum(-1, keepdims=True), jnp.float32)
+
+
+# ---------------------------------------------------------------- attention
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    lpow=st.sampled_from([32, 64, 128]),
+    dh=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_mha_matches_ref(b, h, lpow, dh, causal, seed, scale):
+    rng = _rng(seed)
+    q = _f32(rng, (b, h, lpow, dh), scale)
+    k = _f32(rng, (b, h, lpow, dh), scale)
+    v = _f32(rng, (b, h, lpow, dh), scale)
+    got = attention.mha(q, k, v, causal=causal)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    # online-softmax reassociates the reduction; allow a slightly wider
+    # envelope than the elementwise kernels
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_mha_causal_ignores_future():
+    """Causal attention output at position i must not depend on j > i."""
+    rng = _rng(7)
+    b, h, l, dh = 1, 2, 64, 16
+    q, k, v = (_f32(rng, (b, h, l, dh)) for _ in range(3))
+    base = np.asarray(attention.mha(q, k, v, causal=True))
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    k2[:, :, l - 1], v2[:, :, l - 1] = 99.0, -99.0  # poison the last key
+    got = np.asarray(
+        attention.mha(q, jnp.asarray(k2), jnp.asarray(v2), causal=True)
+    )
+    np.testing.assert_allclose(got[:, :, : l - 1], base[:, :, : l - 1],
+                               rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------- film
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    l=st.sampled_from([8, 64]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 10.0]),
+)
+def test_film_matches_ref(b, l, d, seed, scale):
+    rng = _rng(seed)
+    x = _f32(rng, (b, l, d), scale)
+    g = _f32(rng, (b, d))
+    be = _f32(rng, (b, d))
+    np.testing.assert_allclose(
+        film.film(x, g, be), ref.film_ref(x, g, be), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_film_zero_cond_is_layernorm():
+    rng = _rng(3)
+    x = _f32(rng, (2, 16, 32))
+    z = jnp.zeros((2, 32), jnp.float32)
+    out = np.asarray(film.film(x, z, z))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-3)
+
+
+# -------------------------------------------------------------------- score
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    l=st.sampled_from([8, 64]),
+    v=st.sampled_from([32, 128]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    t_cur=st.sampled_from([0.5, 2.0, 9.5]),
+)
+def test_score_euler_matches_ref(b, l, v, d, seed, t_cur):
+    rng = _rng(seed)
+    logits = _f32(rng, (b, l, v), 3.0)
+    emb = _f32(rng, (v, d))
+    x_t = _f32(rng, (b, l, d), t_cur)
+    # per-slot times: vary t_next slightly across the batch
+    t2 = jnp.asarray(
+        [[t_cur, t_cur * (0.85 + 0.05 * i)] for i in range(b)], jnp.float32
+    )
+    got = score.score_euler(logits, emb, x_t, t2)
+    want = ref.score_euler_ref(logits, emb, x_t, t2)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+
+def test_score_euler_converges_to_x0hat():
+    """As t_next -> 0 the Euler update lands on x0_hat (PF-ODE endpoint)."""
+    rng = _rng(11)
+    b, l, v, d = 1, 8, 32, 16
+    logits = _f32(rng, (b, l, v), 4.0)
+    emb = _f32(rng, (v, d))
+    x_t = _f32(rng, (b, l, d))
+    t2 = jnp.asarray([[1.0, 1e-6]], jnp.float32)
+    x_next, _, x0_hat = score.score_euler(logits, emb, x_t, t2)
+    np.testing.assert_allclose(x_next, x0_hat, rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------------------- stats
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    l=st.sampled_from([8, 64]),
+    v=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_halt_stats_matches_ref(b, l, v, seed):
+    rng = _rng(seed)
+    p = _probs(rng, b, l, v)
+    pp = _probs(rng, b, l, v)
+    pt = jnp.asarray(rng.integers(0, v, size=(b, l)), jnp.int32)
+    got = stats.halt_stats(p, pp, pt)
+    want = ref.halt_stats_ref(p, pp, pt)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+
+def test_halt_stats_invariants():
+    """entropy in [0, ln V]; KL(p||p) = 0; switches counts exact."""
+    rng = _rng(5)
+    b, l, v = 2, 16, 64
+    p = _probs(rng, b, l, v)
+    tok = jnp.argmax(p, axis=-1).astype(jnp.int32)
+    tokens, ent, kl, sw = stats.halt_stats(p, p, tok)
+    assert np.all(np.asarray(ent) >= -1e-6)
+    assert np.all(np.asarray(ent) <= np.log(v) + 1e-5)
+    np.testing.assert_allclose(kl, 0.0, atol=1e-5)
+    np.testing.assert_allclose(sw, 0.0, atol=0)
+    np.testing.assert_array_equal(np.asarray(tokens), np.asarray(tok))
+
+
+def test_halt_stats_switch_count_exact():
+    rng = _rng(6)
+    b, l, v = 1, 16, 32
+    p = _probs(rng, b, l, v)
+    tok = np.asarray(jnp.argmax(p, -1), np.int32)
+    prev = tok.copy()
+    prev[0, :5] = (prev[0, :5] + 1) % v  # force exactly 5 mismatches
+    _, _, _, sw = stats.halt_stats(p, p, jnp.asarray(prev))
+    np.testing.assert_allclose(sw, [5.0])
+
+
+def test_kl_nonneg_property():
+    rng = _rng(8)
+    for seed in range(10):
+        r = _rng(seed)
+        p = _probs(r, 2, 8, 32)
+        q = _probs(r, 2, 8, 32)
+        _, _, kl, _ = stats.halt_stats(p, q, jnp.zeros((2, 8), jnp.int32))
+        assert np.all(np.asarray(kl) >= -1e-6), f"KL negative at seed {seed}"
+
+
+# ------------------------------------------------------------------ diffuse
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    l=st.sampled_from([8, 64]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    ab=st.sampled_from([(0.1, 0.4), (0.5, 0.9), (0.9, 0.99)]),
+)
+def test_ddpm_step_matches_ref(b, l, d, seed, ab):
+    rng = _rng(seed)
+    x = _f32(rng, (b, l, d))
+    x0 = _f32(rng, (b, l, d))
+    z = _f32(rng, (b, l, d))
+    # per-slot schedules: jitter the pair slightly per batch row
+    ab2 = jnp.asarray(
+        [[ab[0] * (1.0 - 0.01 * i), ab[1]] for i in range(b)], jnp.float32
+    )
+    got = diffuse.ddpm_step(x, x0, ab2, z)
+    want = ref.ddpm_step_ref(x, x0, ab2, z)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    l=st.sampled_from([8, 64]),
+    v=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    abar=st.sampled_from([0.2, 0.7, 0.999]),
+)
+def test_simplex_step_matches_ref(b, l, v, seed, abar):
+    rng = _rng(seed)
+    p = _probs(rng, b, l, v)
+    z = _f32(rng, (b, l, v))
+    ab = jnp.asarray(
+        [[min(abar * (1.0 + 0.001 * i), 0.9999)] for i in range(b)],
+        jnp.float32,
+    )
+    got = diffuse.simplex_step(p, 5.0, ab, z)
+    want = ref.simplex_step_ref(p, 5.0, ab, z)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_simplex_clean_limit():
+    """abar -> 1 with one-hot probs recovers the +-K simplex exactly."""
+    v = 16
+    p = jnp.asarray(np.eye(v)[None, :8], jnp.float32)  # [1, 8, 16] one-hot
+    z = jnp.zeros((1, 8, v), jnp.float32)
+    ab = jnp.asarray([[1.0 - 1e-12]], jnp.float32)
+    out = np.asarray(diffuse.simplex_step(p, 5.0, ab, z))
+    want = np.where(np.asarray(p) > 0.5, 5.0, -5.0)
+    np.testing.assert_allclose(out, want, atol=1e-4)

@@ -1,0 +1,176 @@
+"""L2 model-level tests: shapes, loss finiteness, gradient flow,
+time-warping CDF behaviour, schedule sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import ar_lm, ddlm, plaid, ssd, transformer
+from compile.configs import ModelConfig
+
+CFG = ModelConfig(vocab=64, seq_len=32, d_model=32, n_layers=2, n_heads=2,
+                  d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p = transformer.init_params(CFG, 0, extra_head=True)
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def _batch(seed=0, b=4):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, (b, CFG.seq_len)),
+                         jnp.int32)
+    mask = jnp.ones((b, CFG.seq_len), jnp.float32)
+    eps_d = jnp.asarray(rng.normal(size=(b, CFG.seq_len, CFG.d_model)),
+                        jnp.float32)
+    eps_v = jnp.asarray(rng.normal(size=(b, CFG.seq_len, CFG.vocab)),
+                        jnp.float32)
+    u = jnp.asarray(rng.uniform(0.05, 0.95, (b,)), jnp.float32)
+    return tokens, mask, eps_d, eps_v, u
+
+
+def test_backbone_shapes(params):
+    b = 3
+    x = jnp.zeros((b, CFG.seq_len, CFG.d_model), jnp.float32)
+    tau = jnp.zeros((b,), jnp.float32)
+    h = transformer.forward(params, CFG, x, tau, use_pallas=False)
+    assert h.shape == (b, CFG.seq_len, CFG.d_model)
+
+
+def test_backbone_pallas_vs_ref(params):
+    rng = np.random.default_rng(1)
+    b = 2
+    x = jnp.asarray(rng.normal(size=(b, CFG.seq_len, CFG.d_model)),
+                    jnp.float32)
+    tau = jnp.asarray([0.1, 0.8], jnp.float32)
+    hp = transformer.forward(params, CFG, x, tau, use_pallas=True)
+    hr = transformer.forward(params, CFG, x, tau, use_pallas=False)
+    np.testing.assert_allclose(hp, hr, rtol=5e-5, atol=5e-5)
+
+
+def test_normalized_emb_rows(params):
+    e = transformer.normalized_emb(params, CFG)
+    norms = jnp.sqrt(jnp.sum(jnp.square(e), axis=-1))
+    np.testing.assert_allclose(norms, CFG.emb_norm, rtol=1e-4)
+
+
+@pytest.mark.parametrize("tw_flag", [0.0, 1.0])
+def test_ddlm_loss_finite_and_decreasable(params, tw_flag):
+    tokens, mask, eps_d, _, u = _batch()
+    loss, ce = ddlm.loss_fn(params, CFG, tokens, mask, eps_d, u,
+                            jnp.float32(10.0), jnp.float32(tw_flag))
+    assert np.isfinite(float(loss)) and np.isfinite(float(ce))
+    # untrained CE should be near ln(V)
+    assert abs(float(ce) - np.log(CFG.vocab)) < 1.5
+    g = jax.grad(lambda p: ddlm.loss_fn(p, CFG, tokens, mask, eps_d, u,
+                                        jnp.float32(10.0),
+                                        jnp.float32(tw_flag))[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(v))) for v in g.values())
+    assert np.isfinite(gn) and gn > 0.0
+
+
+def test_ddlm_mask_restricts_loss(params):
+    """Zero mask on a region means its tokens cannot affect the CE."""
+    tokens, mask, eps_d, _, u = _batch()
+    half = np.ones((4, CFG.seq_len), np.float32)
+    half[:, : CFG.seq_len // 2] = 0.0
+    half = jnp.asarray(half)
+    _, ce1 = ddlm.loss_fn(params, CFG, tokens, half, eps_d, u,
+                          jnp.float32(10.0), jnp.float32(0.0))
+    tok2 = np.asarray(tokens).copy()
+    tok2[:, 0] = (tok2[:, 0] + 1) % CFG.vocab  # mutate an unmasked token
+    # the unmasked token feeds the conditioning, so CE may shift, but the
+    # loss must remain finite and the masked denominators unchanged
+    _, ce2 = ddlm.loss_fn(params, CFG, jnp.asarray(tok2), half, eps_d, u,
+                          jnp.float32(10.0), jnp.float32(0.0))
+    assert np.isfinite(float(ce1)) and np.isfinite(float(ce2))
+
+
+def test_warp_time_monotone_and_bounded(params):
+    u = jnp.linspace(0.0, 1.0, 33)
+    for flag in (0.0, 1.0):
+        t = ddlm.warp_time(params, CFG, u, jnp.float32(10.0),
+                           jnp.float32(flag))
+        t = np.asarray(t)
+        assert np.all(np.diff(t) >= -1e-5), "warp must be monotone"
+        assert t.min() >= ddlm.T_MIN - 1e-5
+        assert t.max() <= 10.0 + 1e-4
+
+
+def test_cdf_value_monotone(params):
+    t = jnp.linspace(ddlm.T_MIN, 10.0, 50)
+    f = np.asarray(ddlm.cdf_value(params, CFG, t, jnp.float32(10.0)))
+    assert np.all(np.diff(f) >= -1e-6)
+
+
+def test_ssd_loss_finite(params):
+    tokens, mask, _, eps_v, u = _batch()
+    loss, ce = ssd.loss_fn(params, CFG, tokens, mask, eps_v, u)
+    assert np.isfinite(float(loss))
+    assert abs(float(ce) - np.log(CFG.vocab)) < 1.5
+
+
+def test_plaid_loss_finite(params):
+    tokens, mask, eps_d, _, u = _batch()
+    loss, ce = plaid.loss_fn(params, CFG, tokens, mask, eps_d, u)
+    assert np.isfinite(float(loss))
+    assert float(loss) >= float(ce) - 1e-5  # MSE term is nonnegative
+
+
+def test_ar_loss_and_nll(params):
+    tokens, _, _, _, _ = _batch()
+    loss, ce = ar_lm.loss_fn(params, CFG, tokens)
+    assert np.isfinite(float(loss))
+    sm = jnp.ones_like(tokens, jnp.float32)
+    nll = ar_lm.nll_fn(params, CFG, tokens, sm)
+    assert nll.shape == (4,)
+    assert np.all(np.isfinite(np.asarray(nll)))
+    # untrained: per-token NLL ~ ln V
+    assert abs(float(jnp.mean(nll)) - np.log(CFG.vocab)) < 1.5
+
+
+def test_ar_nll_prefix_mask(params):
+    """Scoring only the suffix must ignore prefix NLL contributions."""
+    tokens, _, _, _, _ = _batch()
+    sm_all = jnp.ones_like(tokens, jnp.float32)
+    sm_sfx = jnp.asarray(
+        np.concatenate([np.zeros((4, 16)), np.ones((4, 16))], 1), jnp.float32
+    )
+    n_all = ar_lm.nll_fn(params, CFG, tokens, sm_all)
+    n_sfx = ar_lm.nll_fn(params, CFG, tokens, sm_sfx)
+    assert not np.allclose(np.asarray(n_all), np.asarray(n_sfx))
+
+
+def test_abar_cosine_properties():
+    tau = jnp.linspace(0.0, 1.0, 101)
+    ab = np.asarray(ssd.abar_cosine(tau))
+    assert np.all(ab > 0) and np.all(ab < 1)
+    assert np.all(np.diff(ab) >= -1e-7), "abar must increase towards clean"
+    assert ab[0] < 0.01 and ab[-1] > 0.99
+
+
+def test_train_steps_reduce_loss():
+    """A few Adam steps on a fixed batch must reduce each family's loss."""
+    cfg = CFG
+    names = transformer.flatten_names(
+        transformer.init_params(cfg, 0, extra_head=True)
+    )
+    p0 = transformer.init_params(cfg, 0, extra_head=True)
+    flat = [jnp.asarray(p0[k]) for k in names]
+    m = [jnp.zeros_like(t) for t in flat]
+    v = [jnp.zeros_like(t) for t in flat]
+    count = jnp.zeros((), jnp.float32)
+    tokens, mask, eps_d, eps_v, u = _batch(3, b=8)
+    lr = jnp.float32(3e-3)
+
+    step = jax.jit(ddlm.train_step(cfg, names))
+    losses = []
+    for _ in range(8):
+        flat, m, v, count, ce = step(flat, m, v, count, tokens, mask,
+                                     eps_d, u, lr, jnp.float32(10.0),
+                                     jnp.float32(1.0))
+        losses.append(float(ce))
+    assert losses[-1] < losses[0], losses

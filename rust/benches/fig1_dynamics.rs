@@ -1,0 +1,5 @@
+//! Bench target regenerating paper asset "fig1" (quick mode by default,
+//! `--full` for paper-scale sizes).  See DESIGN.md §5.
+fn main() {
+    repro::exp::bench_main("fig1");
+}

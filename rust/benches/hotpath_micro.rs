@@ -1,0 +1,85 @@
+//! Microbenchmarks of the serving hot path (custom harness — criterion is
+//! unavailable offline): per-step device call, upload/download split,
+//! batcher overhead.  Feeds EXPERIMENTS.md §Perf.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use repro::models::store::ParamStore;
+use repro::runtime::Runtime;
+use repro::sampler::{Family, Session};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    println!("{name:<44} {per:>9.3} ms/iter   ({iters} iters)");
+}
+
+fn main() {
+    repro::util::log::init();
+    let dir = std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Runtime::new(&dir).expect("run `make artifacts` first");
+    let m = rt.manifest.model.clone();
+
+    for fam in Family::all() {
+        for b in [1usize, 8] {
+            if rt
+                .manifest
+                .step_artifact(fam.name(), b, m.seq_len)
+                .is_err()
+            {
+                continue;
+            }
+            let store =
+                Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
+            let mut s =
+                Session::new(&rt, fam, store, b, m.seq_len).unwrap();
+            for slot in 0..b {
+                s.reset_slot(
+                    slot, slot as u64, 1_000_000, 1.0, m.t_max, m.t_min, &[],
+                );
+            }
+            bench(
+                &format!("{}_step_b{b} full step (host roundtrip)", fam.name()),
+                20,
+                || {
+                    s.step().unwrap();
+                },
+            );
+            let st = s.exec_stats();
+            println!(
+                "    breakdown: exec {:.1}% | upload {:.1}% | download {:.1}%",
+                100.0 * st.exec_seconds
+                    / (st.exec_seconds + st.upload_seconds + st.download_seconds),
+                100.0 * st.upload_seconds
+                    / (st.exec_seconds + st.upload_seconds + st.download_seconds),
+                100.0 * st.download_seconds
+                    / (st.exec_seconds + st.upload_seconds + st.download_seconds),
+            );
+        }
+    }
+
+    // corpus + metrics hot paths (pure rust)
+    let ds = repro::corpus::dataset::Dataset::new(512, 64);
+    let mut rng = repro::util::prng::Prng::new(1);
+    bench("corpus train_batch b16 (grammar+masks)", 200, || {
+        let _ = ds.train_batch(&mut rng, 16, repro::corpus::dataset::Masking::Mlm);
+    });
+    let samples = ds.val_prompts(1, 8);
+    bench("self_bleu over 8 samples", 50, || {
+        let _ = repro::eval::ngram::self_bleu(&samples);
+    });
+    bench("wer 64-token pair", 2000, || {
+        let _ = repro::eval::wer::wer(&samples[0], &samples[1]);
+    });
+    bench("mauve_lite 8v8", 20, || {
+        let _ = repro::eval::mauve::mauve_lite(&samples, &samples);
+    });
+}

@@ -1,0 +1,261 @@
+//! The serving engine: a continuous batcher with early-exit slot recycling.
+//!
+//! One engine thread owns the (non-`Send`) PJRT runtime and a batched
+//! generation `Session`.  Requests arrive over a channel; the scheduler
+//! admits them into free batch slots immediately — *including slots freed
+//! mid-schedule by another request's early exit* (the per-slot timestep
+//! design in the step artifacts makes mixed-phase batches legal).  This is
+//! the serving-side payoff of the paper: halting doesn't just cut one
+//! request's latency, it raises fleet throughput because the freed slot
+//! starts the next request `saved_steps` earlier.
+//!
+//! Scheduling policy: FIFO admission; a device step runs whenever at least
+//! one slot is active; responses are emitted the moment a slot's criterion
+//! fires or its schedule exhausts.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResponse};
+use crate::halting::CriterionState;
+use crate::log_info;
+use crate::models::store::ParamStore;
+use crate::runtime::Runtime;
+use crate::sampler::{Family, Session};
+use crate::util::json::Json;
+
+pub enum EngineMsg {
+    Submit(GenRequest, mpsc::Sender<GenResponse>),
+    /// fetch a metrics snapshot
+    Metrics(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineMsg>,
+}
+
+impl EngineHandle {
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenResponse> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(EngineMsg::Submit(req, tx));
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        Ok(self.submit(req).recv()?)
+    }
+
+    pub fn metrics(&self) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(EngineMsg::Metrics(tx));
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+    }
+}
+
+pub struct EngineConfig {
+    pub artifact_dir: String,
+    pub family: Family,
+    pub batch: usize,
+    /// trained checkpoint (PBIN); falls back to init params when None
+    pub checkpoint: Option<String>,
+    pub t_max: f32,
+    pub t_min: f32,
+}
+
+impl EngineConfig {
+    pub fn new(artifact_dir: &str, family: Family) -> EngineConfig {
+        EngineConfig {
+            artifact_dir: artifact_dir.to_string(),
+            family,
+            batch: 8,
+            checkpoint: None,
+            t_max: 10.0,
+            t_min: 0.05,
+        }
+    }
+}
+
+struct Pending {
+    req: GenRequest,
+    reply: mpsc::Sender<GenResponse>,
+    submitted: Instant,
+}
+
+struct Running {
+    req: GenRequest,
+    reply: mpsc::Sender<GenResponse>,
+    crit_state: CriterionState,
+    submitted: Instant,
+    started: Instant,
+}
+
+/// Spawn the engine thread; returns a cloneable handle plus the join
+/// handle (joining after `shutdown()` surfaces engine errors).
+pub fn start(cfg: EngineConfig) -> (EngineHandle, JoinHandle<Result<()>>) {
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let handle = EngineHandle { tx };
+    let join = std::thread::spawn(move || run_engine(cfg, rx));
+    (handle, join)
+}
+
+fn run_engine(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let m = rt.manifest.model.clone();
+    let store = match &cfg.checkpoint {
+        Some(path) => ParamStore::load(path, cfg.family.name())?,
+        None => ParamStore::load_init(&cfg.artifact_dir, cfg.family.name())?,
+    };
+    // artifacts are compiled for fixed batch sizes; resolve the nearest
+    // available one (>= requested, else the largest)
+    let batch = rt.manifest.resolve_step_batch(
+        cfg.family.name(),
+        m.seq_len,
+        cfg.batch,
+    )?;
+    let mut session =
+        Session::new(&rt, cfg.family, Rc::new(store), batch, m.seq_len)?;
+    log_info!(
+        "engine up: family={} batch={} (requested {}) seq_len={}",
+        cfg.family.name(),
+        batch,
+        cfg.batch,
+        m.seq_len
+    );
+
+    let mut waiting: VecDeque<Pending> = VecDeque::new();
+    let mut running: Vec<Option<Running>> = (0..batch).map(|_| None).collect();
+    let mut metrics = Metrics::default();
+    let mut shutdown = false;
+
+    loop {
+        // 1) ingest control messages (block only when fully idle)
+        let idle = waiting.is_empty() && running.iter().all(Option::is_none);
+        if idle && !shutdown {
+            match rx.recv() {
+                Ok(msg) => {
+                    if handle_msg(msg, &mut waiting, &mut metrics, &mut shutdown)
+                    {
+                        continue;
+                    }
+                }
+                Err(_) => break, // all senders dropped
+            }
+        }
+        while let Ok(msg) = rx.try_recv() {
+            handle_msg(msg, &mut waiting, &mut metrics, &mut shutdown);
+        }
+        if shutdown && waiting.is_empty() && running.iter().all(Option::is_none)
+        {
+            break;
+        }
+
+        // 2) admit waiting requests into free slots (continuous batching)
+        for slot in 0..batch {
+            if running[slot].is_none() {
+                if let Some(p) = waiting.pop_front() {
+                    session.reset_slot(
+                        slot,
+                        p.req.seed,
+                        p.req.n_steps,
+                        p.req.noise_scale,
+                        cfg.t_max,
+                        cfg.t_min,
+                        &p.req.prefix,
+                    );
+                    running[slot] = Some(Running {
+                        crit_state: CriterionState::default(),
+                        started: Instant::now(),
+                        submitted: p.submitted,
+                        req: p.req,
+                        reply: p.reply,
+                    });
+                }
+            }
+        }
+
+        // 3) one batched device step
+        if running.iter().any(Option::is_some) {
+            let stats = session.step()?;
+            metrics.device_calls += 1;
+            for slot in 0..batch {
+                let Some(st) = stats[slot] else { continue };
+                let Some(r) = running[slot].as_mut() else { continue };
+                metrics.steps_executed += 1;
+                let fired = r.crit_state.observe(&r.req.criterion, &st);
+                let exhausted = session.slot_exhausted(slot);
+                if fired || exhausted {
+                    let r = running[slot].take().unwrap();
+                    let executed = session.slots[slot].step;
+                    let budget = r.req.n_steps;
+                    let resp = GenResponse {
+                        id: r.req.id,
+                        tokens: session.slot_output(slot),
+                        steps_executed: executed,
+                        steps_budget: budget,
+                        halted_early: fired && !exhausted,
+                        latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
+                        queue_ms: (r.started - r.submitted).as_secs_f64()
+                            * 1e3,
+                        final_stats: st,
+                    };
+                    metrics.requests_completed += 1;
+                    metrics.steps_saved +=
+                        (budget.saturating_sub(executed)) as u64;
+                    if resp.halted_early {
+                        metrics.halted_early += 1;
+                    }
+                    metrics.latency_ms.observe(resp.latency_ms);
+                    let _ = r.reply.send(resp);
+                    session.release_slot(slot);
+                }
+            }
+        }
+    }
+    log_info!(
+        "engine down: {} completed, saving ratio {:.3}",
+        metrics.requests_completed,
+        metrics.step_saving_ratio()
+    );
+    Ok(())
+}
+
+fn handle_msg(
+    msg: EngineMsg,
+    waiting: &mut VecDeque<Pending>,
+    metrics: &mut Metrics,
+    shutdown: &mut bool,
+) -> bool {
+    match msg {
+        EngineMsg::Submit(req, reply) => {
+            metrics.requests_submitted += 1;
+            waiting.push_back(Pending {
+                req,
+                reply,
+                submitted: Instant::now(),
+            });
+            false
+        }
+        EngineMsg::Metrics(reply) => {
+            let _ = reply.send(metrics.to_json());
+            true
+        }
+        EngineMsg::Shutdown => {
+            *shutdown = true;
+            false
+        }
+    }
+}

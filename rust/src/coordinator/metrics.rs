@@ -1,0 +1,189 @@
+//! Serving metrics: latency histogram, step accounting, steps-saved —
+//! the counters behind the paper's headline "10-40% faster generation".
+
+use std::time::Instant;
+
+/// Fixed-bucket latency histogram (milliseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 1ms .. ~2min, roughly x2 per bucket
+        let bounds: Vec<f64> = (0..18).map(|i| 1.0 * 2f64.powi(i)).collect();
+        Histogram {
+            counts: vec![0; bounds.len() + 1],
+            bounds,
+            sum: 0.0,
+            n: 0,
+            max: 0.0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket upper bounds (conservative).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+}
+
+/// Aggregate serving metrics for one engine.
+#[derive(Debug)]
+pub struct Metrics {
+    pub started_at: Instant,
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub halted_early: u64,
+    /// denoiser steps actually executed (per-request accounting)
+    pub steps_executed: u64,
+    /// steps the requests budgeted but never ran (saved by halting)
+    pub steps_saved: u64,
+    /// device calls (batched steps)
+    pub device_calls: u64,
+    pub latency_ms: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started_at: Instant::now(),
+            requests_submitted: 0,
+            requests_completed: 0,
+            halted_early: 0,
+            steps_executed: 0,
+            steps_saved: 0,
+            device_calls: 0,
+            latency_ms: Histogram::default(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn throughput_rps(&self) -> f64 {
+        let el = self.started_at.elapsed().as_secs_f64();
+        if el <= 0.0 {
+            0.0
+        } else {
+            self.requests_completed as f64 / el
+        }
+    }
+
+    /// Fraction of budgeted steps avoided by early halting.
+    pub fn step_saving_ratio(&self) -> f64 {
+        let total = self.steps_executed + self.steps_saved;
+        if total == 0 {
+            0.0
+        } else {
+            self.steps_saved as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("requests_submitted", Json::num(self.requests_submitted as f64)),
+            ("requests_completed", Json::num(self.requests_completed as f64)),
+            ("halted_early", Json::num(self.halted_early as f64)),
+            ("steps_executed", Json::num(self.steps_executed as f64)),
+            ("steps_saved", Json::num(self.steps_saved as f64)),
+            ("step_saving_ratio", Json::num(self.step_saving_ratio())),
+            ("device_calls", Json::num(self.device_calls as f64)),
+            ("latency_mean_ms", Json::num(self.latency_ms.mean())),
+            ("latency_p50_ms", Json::num(self.latency_ms.quantile(0.5))),
+            ("latency_p95_ms", Json::num(self.latency_ms.quantile(0.95))),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let mut h = Histogram::default();
+        for v in [1.0, 2.0, 4.0, 8.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 3.75).abs() < 1e-9);
+        assert!(h.quantile(0.5) >= 2.0 && h.quantile(0.5) <= 4.0);
+        assert!(h.quantile(1.0) >= 8.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.9), 0.0);
+    }
+
+    #[test]
+    fn saving_ratio() {
+        let mut m = Metrics::default();
+        m.steps_executed = 600;
+        m.steps_saved = 400;
+        assert!((m.step_saving_ratio() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_json_has_headline_fields() {
+        let m = Metrics::default();
+        let j = m.to_json();
+        assert!(j.get("step_saving_ratio").is_some());
+        assert!(j.get("latency_p95_ms").is_some());
+    }
+}

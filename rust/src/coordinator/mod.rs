@@ -1,0 +1,11 @@
+//! The L3 coordination contribution: request router, continuous batcher
+//! with early-exit slot recycling, TCP JSON-lines server, metrics.
+
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{start, EngineConfig, EngineHandle};
+pub use request::{GenRequest, GenResponse};
+pub use server::{Client, Server};

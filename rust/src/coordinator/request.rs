@@ -1,0 +1,228 @@
+//! Request/response types + JSON wire codecs for the serving API.
+
+use anyhow::{anyhow, Result};
+
+use crate::halting::{Criterion, StepStats};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    /// conditioning prefix tokens (empty = unconditional)
+    pub prefix: Vec<i32>,
+    /// maximum diffusion steps (N_max)
+    pub n_steps: usize,
+    /// early-exit criterion for this request
+    pub criterion: Criterion,
+    /// initial noise scale (paper Fig 3 / Table 1 knob)
+    pub noise_scale: f32,
+    pub seed: u64,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, n_steps: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prefix: Vec::new(),
+            n_steps,
+            criterion: Criterion::None,
+            noise_scale: 1.0,
+            seed: id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let crit = match self.criterion {
+            Criterion::None => "none".to_string(),
+            Criterion::Entropy { threshold } => format!("entropy:{threshold}"),
+            Criterion::Patience { patience, tolerance } => {
+                format!("patience:{patience}:{tolerance}")
+            }
+            Criterion::Kl { threshold, min_steps } => {
+                format!("kl:{threshold}:{min_steps}")
+            }
+            Criterion::Fixed { step } => format!("fixed:{step}"),
+        };
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            (
+                "prefix",
+                Json::Arr(
+                    self.prefix.iter().map(|&t| Json::num(t as f64)).collect(),
+                ),
+            ),
+            ("steps", Json::num(self.n_steps as f64)),
+            ("criterion", Json::str(crit)),
+            ("noise_scale", Json::num(self.noise_scale as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenRequest> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing id"))? as u64;
+        let n_steps = j
+            .get("steps")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("missing steps"))?;
+        let prefix = j
+            .get("prefix")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_f64().map(|v| v as i32))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let criterion = match j.get("criterion").and_then(Json::as_str) {
+            Some(s) => Criterion::parse(s)
+                .ok_or_else(|| anyhow!("bad criterion {s:?}"))?,
+            None => Criterion::None,
+        };
+        Ok(GenRequest {
+            id,
+            prefix,
+            n_steps,
+            criterion,
+            noise_scale: j
+                .get("noise_scale")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0) as f32,
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(id as f64)
+                as u64,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub steps_executed: usize,
+    pub steps_budget: usize,
+    pub halted_early: bool,
+    pub latency_ms: f64,
+    /// queueing delay before the first denoise step
+    pub queue_ms: f64,
+    pub final_stats: StepStats,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            (
+                "tokens",
+                Json::Arr(
+                    self.tokens.iter().map(|&t| Json::num(t as f64)).collect(),
+                ),
+            ),
+            ("steps_executed", Json::num(self.steps_executed as f64)),
+            ("steps_budget", Json::num(self.steps_budget as f64)),
+            ("halted_early", Json::Bool(self.halted_early)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("queue_ms", Json::num(self.queue_ms)),
+            ("entropy", Json::num(self.final_stats.entropy as f64)),
+            ("kl", Json::num(self.final_stats.kl as f64)),
+            ("switches", Json::num(self.final_stats.switches as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenResponse> {
+        let get_f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        Ok(GenResponse {
+            id: get_f("id")? as u64,
+            tokens: j
+                .get("tokens")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing tokens"))?
+                .iter()
+                .filter_map(|x| x.as_f64().map(|v| v as i32))
+                .collect(),
+            steps_executed: get_f("steps_executed")? as usize,
+            steps_budget: get_f("steps_budget")? as usize,
+            halted_early: j
+                .get("halted_early")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            latency_ms: get_f("latency_ms")?,
+            queue_ms: j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            final_stats: StepStats {
+                entropy: j.get("entropy").and_then(Json::as_f64).unwrap_or(0.0)
+                    as f32,
+                kl: j.get("kl").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                switches: j
+                    .get("switches")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as f32,
+                ..Default::default()
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let mut r = GenRequest::new(7, 200);
+        r.prefix = vec![1, 2, 3];
+        r.criterion = Criterion::Kl {
+            threshold: 1e-3,
+            min_steps: 50,
+        };
+        r.noise_scale = 0.9;
+        let j = r.to_json();
+        let back = GenRequest::from_json(&j).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.prefix, vec![1, 2, 3]);
+        assert_eq!(back.n_steps, 200);
+        assert_eq!(back.criterion, r.criterion);
+        assert!((back.noise_scale - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let resp = GenResponse {
+            id: 3,
+            tokens: vec![5, 6, 7],
+            steps_executed: 120,
+            steps_budget: 200,
+            halted_early: true,
+            latency_ms: 45.5,
+            queue_ms: 1.25,
+            final_stats: StepStats {
+                entropy: 0.5,
+                kl: 1e-4,
+                switches: 0.0,
+                ..Default::default()
+            },
+        };
+        let back =
+            GenResponse::from_json(&Json::parse(&resp.to_json().encode())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back.tokens, vec![5, 6, 7]);
+        assert!(back.halted_early);
+        assert_eq!(back.steps_executed, 120);
+        assert!((back.final_stats.entropy - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn malformed_request_rejected() {
+        assert!(GenRequest::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"criterion":"bogus"}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+}

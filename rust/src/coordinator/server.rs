@@ -1,0 +1,147 @@
+//! TCP JSON-lines front-end for the engine (std-thread substitute for the
+//! usual tokio stack — DESIGN.md §8).
+//!
+//! Protocol: one JSON object per line.
+//!   request  : GenRequest JSON (see `request.rs`), or `{"cmd":"metrics"}`
+//!   response : GenResponse JSON / metrics object / `{"error": "..."}`
+//!
+//! Each connection gets a handler thread; handlers forward requests to the
+//! engine handle (cheap mpsc clone) and stream responses back in arrival
+//! order per connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::engine::EngineHandle;
+use super::request::GenRequest;
+use crate::log_info;
+use crate::util::json::Json;
+
+pub struct Server {
+    pub addr: String,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start accepting (port 0 = ephemeral; the chosen address is
+    /// in `self.addr`).
+    pub fn start(bind: &str, engine: EngineHandle) -> Result<Server> {
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?.to_string();
+        log_info!("server listening on {addr}");
+        let accept_thread = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(s) => {
+                        let eng = engine.clone();
+                        std::thread::spawn(move || {
+                            if let Err(e) = handle_conn(s, eng) {
+                                crate::util::log::log(
+                                    crate::util::log::Level::Debug,
+                                    "server",
+                                    &format!("conn closed: {e}"),
+                                );
+                            }
+                        });
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server {
+            addr,
+            accept_thread: Some(accept_thread),
+        })
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // the accept thread exits when the process does; detach it
+        if let Some(t) = self.accept_thread.take() {
+            drop(t);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Err(e) => Json::obj(vec![("error", Json::str(format!("parse: {e}")))]),
+            Ok(j) => {
+                if j.get("cmd").and_then(Json::as_str) == Some("metrics") {
+                    engine.metrics().unwrap_or(Json::Null)
+                } else {
+                    match GenRequest::from_json(&j) {
+                        Err(e) => Json::obj(vec![(
+                            "error",
+                            Json::str(format!("bad request: {e}")),
+                        )]),
+                        Ok(req) => match engine.generate(req) {
+                            Ok(resp) => resp.to_json(),
+                            Err(e) => Json::obj(vec![(
+                                "error",
+                                Json::str(format!("engine: {e}")),
+                            )]),
+                        },
+                    }
+                }
+            }
+        };
+        writer.write_all(reply.encode().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Minimal blocking client for examples / benches / tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    pub fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
+        self.writer.write_all(msg.encode().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("response parse: {e}"))
+    }
+
+    pub fn generate(
+        &mut self,
+        req: &GenRequest,
+    ) -> Result<super::request::GenResponse> {
+        let j = self.roundtrip(&req.to_json())?;
+        if let Some(err) = j.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        super::request::GenResponse::from_json(&j)
+    }
+
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+    }
+}

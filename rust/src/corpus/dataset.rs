@@ -1,0 +1,229 @@
+//! Dataset plumbing: training batches, validation prompts, and the
+//! masking strategies from CDCD Appendix A.1 (MLM / prefix / span) that
+//! the Table-4..7 ablation sweeps.
+
+use super::grammar::Grammar;
+use crate::util::prng::Prng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Masking {
+    /// noise random positions (like masked-LM training)
+    Mlm,
+    /// keep a random-length prefix intact, noise the continuation
+    Prefix,
+    /// split into k spans, noise each span w.p. 0.5 (Strudel et al. 2023)
+    Span,
+}
+
+impl Masking {
+    pub fn parse(s: &str) -> Option<Masking> {
+        match s {
+            "mlm" => Some(Masking::Mlm),
+            "prefix" => Some(Masking::Prefix),
+            "span" => Some(Masking::Span),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Masking::Mlm => "mlm",
+            Masking::Prefix => "prefix",
+            Masking::Span => "span",
+        }
+    }
+}
+
+/// Maximum number of spans for span masking (k_max = 9 in the paper).
+pub const SPAN_K_MAX: usize = 9;
+
+/// One training batch: row-major `[batch, seq_len]` tokens and the noise
+/// mask (1.0 = position is noised; CE is computed only there).
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+pub struct Dataset {
+    grammar: Grammar,
+    pub seq_len: usize,
+}
+
+impl Dataset {
+    pub fn new(vocab_size: usize, seq_len: usize) -> Dataset {
+        Dataset {
+            grammar: Grammar::new(vocab_size),
+            seq_len,
+        }
+    }
+
+    pub fn grammar(&self) -> &Grammar {
+        &self.grammar
+    }
+
+    /// Sample a noise mask for one sequence according to the strategy.
+    pub fn sample_mask(
+        &self,
+        rng: &mut Prng,
+        strategy: Masking,
+        out: &mut [f32],
+    ) {
+        let l = out.len();
+        match strategy {
+            Masking::Mlm => {
+                // noise each position independently; rate ~ U[0.3, 1.0]
+                // so the model sees both light and full corruption
+                let rate = 0.3 + 0.7 * rng.uniform();
+                let mut any = false;
+                for m in out.iter_mut() {
+                    let bit = rng.uniform() < rate;
+                    *m = bit as u8 as f32;
+                    any |= bit;
+                }
+                if !any {
+                    out[rng.below(l)] = 1.0;
+                }
+            }
+            Masking::Prefix => {
+                // keep a prefix of random length [0, L-1] intact
+                let keep = rng.below(l);
+                for (i, m) in out.iter_mut().enumerate() {
+                    *m = (i >= keep) as u8 as f32;
+                }
+            }
+            Masking::Span => {
+                let k = 1 + rng.below(SPAN_K_MAX);
+                // choose k-1 cut indices -> k spans; each noised w.p. 0.5
+                let mut cuts: Vec<usize> =
+                    (0..k - 1).map(|_| 1 + rng.below(l - 1)).collect();
+                cuts.sort_unstable();
+                cuts.dedup();
+                cuts.push(l);
+                let mut start = 0usize;
+                let mut any = false;
+                for &end in &cuts {
+                    let noised = rng.uniform() < 0.5;
+                    for m in &mut out[start..end] {
+                        *m = noised as u8 as f32;
+                    }
+                    any |= noised && end > start;
+                    start = end;
+                }
+                if !any {
+                    // degenerate all-clean draw: force one noised span
+                    let s = rng.below(l);
+                    for m in &mut out[s..l] {
+                        *m = 1.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// A full training batch with per-sequence masks.
+    pub fn train_batch(
+        &self,
+        rng: &mut Prng,
+        batch: usize,
+        strategy: Masking,
+    ) -> Batch {
+        let l = self.seq_len;
+        let mut tokens = Vec::with_capacity(batch * l);
+        let mut mask = vec![0.0f32; batch * l];
+        for b in 0..batch {
+            tokens.extend(self.grammar.sequence(rng, l));
+            self.sample_mask(rng, strategy, &mut mask[b * l..(b + 1) * l]);
+        }
+        Batch {
+            tokens,
+            mask,
+            batch,
+            seq_len: l,
+        }
+    }
+
+    /// Deterministic validation prompts: `n` sequences, of which the first
+    /// `prefix_len` tokens act as the conditioning prefix (Prefix-32 task).
+    pub fn val_prompts(&self, seed: u64, n: usize) -> Vec<Vec<i32>> {
+        let mut rng = Prng::new(seed).fork("validation");
+        (0..n).map(|_| self.grammar.sequence(&mut rng, self.seq_len)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> Dataset {
+        Dataset::new(512, 64)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = ds();
+        let mut r = Prng::new(1);
+        let b = d.train_batch(&mut r, 4, Masking::Mlm);
+        assert_eq!(b.tokens.len(), 4 * 64);
+        assert_eq!(b.mask.len(), 4 * 64);
+        assert!(b.mask.iter().all(|&m| m == 0.0 || m == 1.0));
+    }
+
+    #[test]
+    fn every_mask_strategy_noises_something() {
+        let d = ds();
+        let mut r = Prng::new(2);
+        for strat in [Masking::Mlm, Masking::Prefix, Masking::Span] {
+            for _ in 0..100 {
+                let mut m = vec![0.0f32; 64];
+                d.sample_mask(&mut r, strat, &mut m);
+                assert!(
+                    m.iter().any(|&x| x == 1.0),
+                    "{strat:?} produced an all-clean mask"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_mask_is_contiguous_suffix() {
+        let d = ds();
+        let mut r = Prng::new(3);
+        for _ in 0..100 {
+            let mut m = vec![0.0f32; 64];
+            d.sample_mask(&mut r, Masking::Prefix, &mut m);
+            // once masking starts it never stops
+            let first = m.iter().position(|&x| x == 1.0).unwrap();
+            assert!(m[first..].iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn span_mask_has_bounded_span_count() {
+        let d = ds();
+        let mut r = Prng::new(4);
+        for _ in 0..100 {
+            let mut m = vec![0.0f32; 64];
+            d.sample_mask(&mut r, Masking::Span, &mut m);
+            // count transitions; spans <= k_max means transitions bounded
+            let transitions = m.windows(2).filter(|w| w[0] != w[1]).count();
+            assert!(transitions <= 2 * SPAN_K_MAX);
+        }
+    }
+
+    #[test]
+    fn val_prompts_deterministic() {
+        let d = ds();
+        assert_eq!(d.val_prompts(9, 5), d.val_prompts(9, 5));
+        assert_ne!(d.val_prompts(9, 5), d.val_prompts(10, 5));
+    }
+
+    #[test]
+    fn masking_parse_roundtrip() {
+        for s in [Masking::Mlm, Masking::Prefix, Masking::Span] {
+            assert_eq!(Masking::parse(s.name()), Some(s));
+        }
+        assert_eq!(Masking::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,219 @@
+//! Stochastic grammar: the synthetic-corpus generator standing in for C4
+//! (DESIGN.md §8).
+//!
+//! A weighted CFG over the static word inventory produces sentences with
+//! real constituent structure (NP/VP/PP, agreement-free but syntactically
+//! regular), so the DLMs have *learnable* sequential structure — the
+//! property the paper's convergence dynamics depend on.  Within each
+//! part-of-speech category, word choice is Zipf(s)-weighted, giving the
+//! corpus the rank-frequency profile that makes the Zipf-coefficient
+//! metric meaningful (paper Table 3 reports ~0.9 for C4 data).
+
+use super::tokenizer::Tokenizer;
+use super::words;
+use crate::util::prng::Prng;
+
+/// Zipf exponent for within-category word choice.
+const ZIPF_S: f64 = 1.05;
+
+pub struct Grammar {
+    tok: Tokenizer,
+    det: Cat,
+    adj: Cat,
+    noun: Cat,
+    verb: Cat,
+    adv: Cat,
+    prep: Cat,
+    conj: Cat,
+    pron: Cat,
+    name: Cat,
+}
+
+struct Cat {
+    ids: Vec<i32>,
+    weights: Vec<f64>,
+}
+
+impl Cat {
+    fn new(tok: &Tokenizer, words: &[&str]) -> Cat {
+        let ids = words.iter().map(|w| tok.id(w)).collect();
+        let weights = (0..words.len())
+            .map(|r| 1.0 / ((r + 1) as f64).powf(ZIPF_S))
+            .collect();
+        Cat { ids, weights }
+    }
+
+    fn sample(&self, rng: &mut Prng) -> i32 {
+        self.ids[rng.weighted(&self.weights)]
+    }
+}
+
+impl Grammar {
+    pub fn new(vocab_size: usize) -> Grammar {
+        let tok = Tokenizer::new(vocab_size);
+        Grammar {
+            det: Cat::new(&tok, words::DETERMINERS),
+            adj: Cat::new(&tok, words::ADJECTIVES),
+            noun: Cat::new(&tok, words::NOUNS),
+            verb: Cat::new(&tok, words::VERBS),
+            adv: Cat::new(&tok, words::ADVERBS),
+            prep: Cat::new(&tok, words::PREPOSITIONS),
+            conj: Cat::new(&tok, words::CONJUNCTIONS),
+            pron: Cat::new(&tok, words::PRONOUNS),
+            name: Cat::new(&tok, words::NAMES),
+            tok,
+        }
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tok
+    }
+
+    /// NP -> Det (Adj){0..2} Noun | Name | Pron
+    fn np(&self, rng: &mut Prng, out: &mut Vec<i32>) {
+        match rng.weighted(&[0.62, 0.2, 0.18]) {
+            0 => {
+                out.push(self.det.sample(rng));
+                let n_adj = rng.weighted(&[0.5, 0.38, 0.12]);
+                for _ in 0..n_adj {
+                    out.push(self.adj.sample(rng));
+                }
+                out.push(self.noun.sample(rng));
+            }
+            1 => out.push(self.name.sample(rng)),
+            _ => out.push(self.pron.sample(rng)),
+        }
+    }
+
+    /// PP -> Prep NP
+    fn pp(&self, rng: &mut Prng, out: &mut Vec<i32>) {
+        out.push(self.prep.sample(rng));
+        self.np(rng, out);
+    }
+
+    /// VP -> Verb (NP | PP | Adv | NP PP)
+    fn vp(&self, rng: &mut Prng, out: &mut Vec<i32>) {
+        out.push(self.verb.sample(rng));
+        match rng.weighted(&[0.35, 0.3, 0.15, 0.2]) {
+            0 => self.np(rng, out),
+            1 => self.pp(rng, out),
+            2 => out.push(self.adv.sample(rng)),
+            _ => {
+                self.np(rng, out);
+                self.pp(rng, out);
+            }
+        }
+    }
+
+    /// S -> NP VP (Conj NP VP)? Punct
+    pub fn sentence(&self, rng: &mut Prng, out: &mut Vec<i32>) {
+        self.np(rng, out);
+        self.vp(rng, out);
+        if rng.uniform() < 0.25 {
+            out.push(self.conj.sample(rng));
+            self.np(rng, out);
+            self.vp(rng, out);
+        }
+        let punct = if rng.uniform() < 0.85 { "." } else { "," };
+        out.push(self.tok.id(punct));
+    }
+
+    /// A continuous token stream of exactly `len` tokens (sentences
+    /// truncated at the boundary, like C4's packed sequences).
+    pub fn sequence(&self, rng: &mut Prng, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len + 16);
+        while out.len() < len {
+            self.sentence(rng, &mut out);
+        }
+        out.truncate(len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_has_exact_length_and_valid_ids() {
+        let g = Grammar::new(512);
+        let mut r = Prng::new(1);
+        for len in [16usize, 64, 256] {
+            let s = g.sequence(&mut r, len);
+            assert_eq!(s.len(), len);
+            let nw = g.tokenizer().n_words() as i32;
+            assert!(s.iter().all(|&t| t >= 0 && t < nw));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = Grammar::new(512);
+        let a = g.sequence(&mut Prng::new(7), 64);
+        let b = g.sequence(&mut Prng::new(7), 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sentences_end_with_punctuation() {
+        let g = Grammar::new(512);
+        let mut r = Prng::new(3);
+        let mut s = Vec::new();
+        g.sentence(&mut r, &mut s);
+        let last = g.tokenizer().word(*s.last().unwrap());
+        assert!(last == "." || last == ",");
+        assert!(s.len() >= 3, "sentence too short: {s:?}");
+    }
+
+    #[test]
+    fn corpus_is_zipf_like() {
+        // rank-frequency slope of the generated corpus should be in the
+        // "natural language" band the paper's Zipf metric targets
+        let g = Grammar::new(512);
+        let mut r = Prng::new(11);
+        let mut counts = vec![0usize; 512];
+        for _ in 0..200 {
+            for t in g.sequence(&mut r, 64) {
+                counts[t as usize] += 1;
+            }
+        }
+        let mut freqs: Vec<f64> = counts
+            .into_iter()
+            .filter(|&c| c > 0)
+            .map(|c| c as f64)
+            .collect();
+        freqs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // linear regression of log-freq on log-rank
+        let n = freqs.len().min(200);
+        let xs: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).ln()).collect();
+        let ys: Vec<f64> = freqs[..n].iter().map(|f| f.ln()).collect();
+        let mx = xs.iter().sum::<f64>() / n as f64;
+        let my = ys.iter().sum::<f64>() / n as f64;
+        let sxy: f64 =
+            xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+        let slope = sxy / sxx;
+        assert!(
+            (-2.0..=-0.5).contains(&slope),
+            "zipf slope {slope} outside natural-language band"
+        );
+    }
+
+    #[test]
+    fn vocabulary_coverage() {
+        // over many samples, a large fraction of the vocabulary appears
+        let g = Grammar::new(512);
+        let mut r = Prng::new(13);
+        let mut seen = vec![false; 512];
+        for _ in 0..500 {
+            for t in g.sequence(&mut r, 64) {
+                seen[t as usize] = true;
+            }
+        }
+        let used = seen.iter().filter(|&&b| b).count();
+        assert!(
+            used as f64 > 0.6 * g.tokenizer().n_words() as f64,
+            "only {used} words used"
+        );
+    }
+}

@@ -1,0 +1,8 @@
+//! Synthetic-corpus substrate standing in for C4 (DESIGN.md §8): a
+//! stochastic grammar with Zipf-weighted word choice, a word-level
+//! tokenizer, and the dataset/masking plumbing for training + evaluation.
+
+pub mod dataset;
+pub mod grammar;
+pub mod tokenizer;
+pub mod words;

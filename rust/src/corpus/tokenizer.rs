@@ -1,0 +1,112 @@
+//! Word-level tokenizer over the static vocabulary.
+//!
+//! The synthetic corpus is generated *as token ids* (the grammar samples
+//! words directly), so the tokenizer's main jobs are decoding samples for
+//! human inspection / WER / GPT-Score-lite, and encoding prompt text for
+//! the serving API.
+
+use std::collections::BTreeMap;
+
+use super::words;
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const BOS: i32 = 2;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    words: Vec<&'static str>,
+    index: BTreeMap<&'static str, i32>,
+    /// model vocabulary size (>= words.len(); ids beyond the word list
+    /// decode to <unk-N> placeholders)
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Tokenizer {
+        let words = words::vocabulary();
+        assert!(words.len() <= vocab_size);
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (*w, i as i32))
+            .collect();
+        Tokenizer {
+            words,
+            index,
+            vocab_size,
+        }
+    }
+
+    /// Number of *real* words (ids below this decode to text).
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.index.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.words
+            .get(id as usize)
+            .copied()
+            .unwrap_or("<oov>")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for (i, &id) in ids.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(self.word(id));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = Tokenizer::new(512);
+        let text = "the quick fox jumps over the lazy dog .";
+        let ids = t.encode(text);
+        assert_eq!(t.decode(&ids), text);
+        assert!(ids.iter().all(|&i| i != UNK));
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = Tokenizer::new(512);
+        assert_eq!(t.encode("qwertyuiop"), vec![UNK]);
+    }
+
+    #[test]
+    fn out_of_vocab_ids_decode_safely() {
+        let t = Tokenizer::new(512);
+        assert_eq!(t.word(511), "<oov>");
+        assert_eq!(t.word(UNK), "<unk>");
+    }
+
+    #[test]
+    fn encode_decode_identity_property() {
+        // property: decode(encode(s)) == s for any sentence over the vocab
+        let t = Tokenizer::new(512);
+        let mut r = crate::util::prng::Prng::new(21);
+        for _ in 0..50 {
+            let n = 1 + r.below(30);
+            let sent: Vec<&str> =
+                (0..n).map(|_| t.words[r.below(t.n_words())]).collect();
+            let text = sent.join(" ");
+            assert_eq!(t.decode(&t.encode(&text)), text);
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Static word inventory for the synthetic corpus (stands in for C4,
+//! DESIGN.md §8).  Categories feed the stochastic grammar; within each
+//! category, sampling is Zipf-weighted so the corpus reproduces the
+//! natural-language rank-frequency shape the paper's Zipf-coefficient
+//! metric measures (data row in Table 3 reports ~0.9).
+
+pub const DETERMINERS: &[&str] = &["the", "a", "this", "that", "every", "some"];
+
+pub const ADJECTIVES: &[&str] = &[
+    "quick", "lazy", "bright", "dark", "small", "large", "old", "young",
+    "red", "blue", "green", "quiet", "loud", "happy", "sad", "cold",
+    "warm", "early", "late", "long", "short", "high", "low", "deep",
+    "shallow", "rich", "poor", "clean", "dirty", "fresh", "ancient",
+    "modern", "simple", "complex", "gentle", "fierce", "hollow", "solid",
+    "distant", "nearby", "silver", "golden", "wooden", "iron", "broken",
+    "silent", "curious", "famous", "hidden", "open",
+];
+
+pub const NOUNS: &[&str] = &[
+    "fox", "dog", "cat", "bird", "fish", "horse", "river", "mountain",
+    "forest", "valley", "city", "village", "house", "garden", "road",
+    "bridge", "tower", "castle", "market", "harbor", "ship", "train",
+    "letter", "book", "story", "song", "painting", "window", "door",
+    "table", "chair", "lamp", "clock", "mirror", "key", "map", "coin",
+    "stone", "tree", "flower", "leaf", "branch", "root", "seed", "cloud",
+    "storm", "rain", "snow", "wind", "fire", "shadow", "light", "morning",
+    "evening", "night", "winter", "summer", "spring", "autumn", "child",
+    "farmer", "sailor", "teacher", "doctor", "baker", "hunter", "writer",
+    "painter", "soldier", "merchant", "king", "queen", "friend", "neighbor",
+    "stranger", "traveler", "guard", "thief", "crowd", "family", "island",
+    "desert", "ocean", "lake", "field", "meadow", "path", "wall", "roof",
+    "cellar", "attic", "kitchen", "journey", "secret", "promise", "dream",
+    "memory", "voice", "silence", "answer", "question",
+];
+
+pub const VERBS: &[&str] = &[
+    "jumps", "runs", "walks", "flies", "swims", "climbs", "falls", "rises",
+    "opens", "closes", "builds", "breaks", "carries", "drops", "finds",
+    "loses", "watches", "follows", "leads", "crosses", "enters", "leaves",
+    "reaches", "touches", "holds", "throws", "catches", "pulls", "pushes",
+    "writes", "reads", "sings", "paints", "draws", "tells", "hears",
+    "sees", "knows", "remembers", "forgets", "believes", "hopes", "fears",
+    "loves", "hates", "wants", "needs", "makes", "takes", "gives",
+    "brings", "sends", "keeps", "hides", "shows", "burns", "freezes",
+    "grows", "shrinks", "waits",
+];
+
+pub const ADVERBS: &[&str] = &[
+    "quickly", "slowly", "quietly", "loudly", "carefully", "suddenly",
+    "gently", "fiercely", "often", "rarely", "always", "never", "soon",
+    "swiftly", "eagerly", "far", "closely", "again", "once", "twice", "together",
+    "alone", "everywhere", "nowhere", "somewhere", "yesterday", "today",
+    "tomorrow", "forever", "almost",
+];
+
+pub const PREPOSITIONS: &[&str] = &[
+    "over", "under", "through", "across", "around", "behind", "beside",
+    "between", "beyond", "inside", "outside", "toward", "against", "near",
+    "past",
+];
+
+pub const CONJUNCTIONS: &[&str] = &["and", "but", "while", "because", "until"];
+
+pub const PRONOUNS: &[&str] = &["it", "he", "she", "they", "we"];
+
+pub const NAMES: &[&str] = &[
+    "anna", "boris", "clara", "daniel", "elena", "felix", "greta", "henry",
+    "irene", "jonas", "karin", "leo", "maria", "nils", "olga", "peter",
+    "rosa", "stefan", "tanya", "viktor",
+];
+
+pub const PUNCT: &[&str] = &[".", ",", ";", "?"];
+
+/// Special tokens, always the first vocabulary entries.
+pub const SPECIALS: &[&str] = &["<pad>", "<unk>", "<bos>"];
+
+/// Full vocabulary in deterministic order (specials first).
+pub fn vocabulary() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = Vec::new();
+    v.extend_from_slice(SPECIALS);
+    v.extend_from_slice(PUNCT);
+    v.extend_from_slice(DETERMINERS);
+    v.extend_from_slice(PRONOUNS);
+    v.extend_from_slice(CONJUNCTIONS);
+    v.extend_from_slice(PREPOSITIONS);
+    v.extend_from_slice(ADVERBS);
+    v.extend_from_slice(ADJECTIVES);
+    v.extend_from_slice(VERBS);
+    v.extend_from_slice(NOUNS);
+    v.extend_from_slice(NAMES);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn vocabulary_is_unique_and_fits_512() {
+        let v = vocabulary();
+        let set: HashSet<_> = v.iter().collect();
+        assert_eq!(set.len(), v.len(), "duplicate words in the inventory");
+        assert!(v.len() <= 512, "vocabulary {} exceeds model vocab", v.len());
+        assert!(v.len() >= 250, "vocabulary too small to be interesting");
+    }
+
+    #[test]
+    fn specials_first() {
+        let v = vocabulary();
+        assert_eq!(&v[..3], SPECIALS);
+    }
+}

@@ -1,0 +1,115 @@
+//! Autoregressive baseline generation (Table 3's GPT-2/GPT-Neo rows are
+//! played by the in-repo AR evaluator sampling from its own distribution).
+//!
+//! Classic ancestral sampling: one `ar_logits` device call per position,
+//! batch-8 wide, temperature + nucleus-free categorical sampling over the
+//! full vocabulary (matching the unconditional setting the paper reports).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::models::store::ParamStore;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::prng::Prng;
+
+pub struct ArGenerator {
+    exe: Rc<Executable>,
+    store: Rc<ParamStore>,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl ArGenerator {
+    pub fn new(rt: &Runtime, store: Rc<ParamStore>) -> Result<ArGenerator> {
+        let m = &rt.manifest.model;
+        let exe = rt.executable(&format!("ar_logits_b8_l{}", m.seq_len))?;
+        Ok(ArGenerator {
+            batch: exe.spec.batch,
+            seq_len: m.seq_len,
+            vocab: m.vocab,
+            exe,
+            store,
+        })
+    }
+
+    /// Sample `n` sequences; each row starts from its prompt's first
+    /// `prefix_len` tokens (use the BOS-only prompt for unconditional).
+    pub fn generate(
+        &self,
+        prompts: &[Vec<i32>],
+        prefix_len: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> Result<Vec<Vec<i32>>> {
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        let mut rng = Prng::new(seed).fork("ar-gen");
+        let mut out = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(b) {
+            let mut tokens = vec![0i32; b * l];
+            for (i, p) in chunk.iter().enumerate() {
+                for (j, &t) in p.iter().take(prefix_len.max(1)).enumerate() {
+                    tokens[i * l + j] = t;
+                }
+            }
+            for pos in prefix_len.max(1)..l {
+                let mut data: BTreeMap<String, Tensor> = BTreeMap::new();
+                data.insert(
+                    "tokens".into(),
+                    Tensor::i32(&[b, l], tokens.clone()),
+                );
+                let inputs = self.store.assemble(&self.exe.spec, data)?;
+                let res = self.exe.run(&inputs)?;
+                let logits = res[0].as_f32()?;
+                for i in 0..chunk.len() {
+                    // logits at pos-1 predict the token at pos
+                    let off = (i * l + pos - 1) * v;
+                    let row = &logits[off..off + v];
+                    tokens[i * l + pos] =
+                        sample_categorical(row, temperature, &mut rng);
+                }
+            }
+            for i in 0..chunk.len() {
+                out.push(tokens[i * l..(i + 1) * l].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Sample from softmax(logits / temperature).
+pub fn sample_categorical(logits: &[f32], temperature: f32, rng: &mut Prng) -> i32 {
+    let t = temperature.max(1e-4);
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&x| (((x - mx) / t) as f64).exp())
+        .collect();
+    rng.weighted(&weights) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categorical_prefers_high_logits() {
+        let mut rng = Prng::new(1);
+        let logits = vec![0.0, 10.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample_categorical(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 190, "hits={hits}");
+    }
+
+    #[test]
+    fn categorical_low_temperature_is_argmax() {
+        let mut rng = Prng::new(2);
+        let logits = vec![0.1, 0.5, 0.4];
+        for _ in 0..50 {
+            assert_eq!(sample_categorical(&logits, 1e-4, &mut rng), 1);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! AR-NLL scorer: drives the `ar_nll_*` artifacts with a trained AR
+//! evaluator — the in-repo stand-in for GPT-Neo-1.3B (paper §5.1).
+//!
+//! Scores arbitrary numbers of sequences by tiling them through the fixed
+//! batch-8 artifact (remainders pad with copies whose scores are dropped).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::models::store::ParamStore;
+use crate::runtime::{Executable, Runtime, Tensor};
+
+pub struct ArScorer {
+    exe: Rc<Executable>,
+    store: Rc<ParamStore>,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl ArScorer {
+    /// `store` should hold *trained* AR evaluator parameters; with the
+    /// init params the metric is still well-defined but uninformative.
+    pub fn new(rt: &Runtime, store: Rc<ParamStore>) -> Result<ArScorer> {
+        let m = &rt.manifest.model;
+        let name = format!("ar_nll_b8_l{}", m.seq_len);
+        let exe = rt.executable(&name)?;
+        Ok(ArScorer {
+            batch: exe.spec.batch,
+            seq_len: m.seq_len,
+            exe,
+            store,
+        })
+    }
+
+    /// Mean NLL (nats/token) per sequence; positions with mask=0 are not
+    /// scored (e.g. the 32-token prompt in the Prefix-32 setup).
+    pub fn score(
+        &self,
+        seqs: &[Vec<i32>],
+        prefix_len: usize,
+    ) -> Result<Vec<f32>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let l = self.seq_len;
+        for s in seqs {
+            if s.len() != l {
+                bail!("ar-nll expects length {l}, got {}", s.len());
+            }
+        }
+        let mut out = Vec::with_capacity(seqs.len());
+        let mut mask = vec![1.0f32; l];
+        for m in mask.iter_mut().take(prefix_len.min(l)) {
+            *m = 0.0;
+        }
+        for chunk in seqs.chunks(self.batch) {
+            let mut tokens = Vec::with_capacity(self.batch * l);
+            for s in chunk {
+                tokens.extend_from_slice(s);
+            }
+            // pad the tail batch with the first sequence
+            for _ in chunk.len()..self.batch {
+                tokens.extend_from_slice(&chunk[0]);
+            }
+            let mut data: BTreeMap<String, Tensor> = BTreeMap::new();
+            data.insert(
+                "tokens".into(),
+                Tensor::i32(&[self.batch, l], tokens),
+            );
+            data.insert(
+                "score_mask".into(),
+                Tensor::f32(
+                    &[self.batch, l],
+                    mask.iter()
+                        .cycle()
+                        .take(self.batch * l)
+                        .copied()
+                        .collect(),
+                ),
+            );
+            let inputs = self.store.assemble(&self.exe.spec, data)?;
+            let res = self.exe.run(&inputs)?;
+            let nll = res[0].as_f32()?;
+            out.extend_from_slice(&nll[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Mean AR-NLL over a corpus.
+    pub fn mean_score(
+        &self,
+        seqs: &[Vec<i32>],
+        prefix_len: usize,
+    ) -> Result<f32> {
+        let scores = self.score(seqs, prefix_len)?;
+        if scores.is_empty() {
+            return Ok(0.0);
+        }
+        Ok(scores.iter().sum::<f32>() / scores.len() as f32)
+    }
+}

@@ -1,0 +1,225 @@
+//! MAUVE-lite: divergence-frontier text-distribution comparison
+//! (Pillutla et al. 2021), self-contained (DESIGN.md §8).
+//!
+//! The real MAUVE embeds texts with GPT-2 and quantises with k-means; here
+//! the feature map is an L2-normalised bag-of-tokens + bigram-hash vector
+//! and the quantiser is a deterministic k-means over the joint sample set.
+//! The statistic is the same: the area under the divergence frontier
+//! between the two quantised distributions, scaled to (0, 1].
+
+use crate::util::prng::Prng;
+
+const N_BIGRAM_BUCKETS: usize = 64;
+
+/// Feature vector: token histogram (vocab-hashed to 192 buckets) plus a
+/// 64-bucket bigram hash histogram, L2-normalised.
+pub fn featurize(sample: &[i32]) -> Vec<f32> {
+    const N_TOK: usize = 192;
+    let mut v = vec![0f32; N_TOK + N_BIGRAM_BUCKETS];
+    for &t in sample {
+        v[(t as usize) % N_TOK] += 1.0;
+    }
+    for w in sample.windows(2) {
+        let h = (w[0].wrapping_mul(31) ^ w[1]) as usize;
+        v[N_TOK + h % N_BIGRAM_BUCKETS] += 1.0;
+    }
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+    for x in &mut v {
+        *x /= n;
+    }
+    v
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Deterministic k-means (k-means++ seeding off a fixed Prng, fixed
+/// iteration count).  Returns per-point cluster assignment.
+pub fn kmeans(points: &[Vec<f32>], k: usize, seed: u64) -> Vec<usize> {
+    assert!(!points.is_empty());
+    let k = k.min(points.len());
+    let mut rng = Prng::new(seed).fork("kmeans");
+    // k-means++ seeding
+    let mut centers: Vec<Vec<f32>> =
+        vec![points[rng.below(points.len())].clone()];
+    while centers.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centers
+                    .iter()
+                    .map(|c| dist2(p, c) as f64)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            centers.push(points[rng.below(points.len())].clone());
+            continue;
+        }
+        centers.push(points[rng.weighted(&d2)].clone());
+    }
+    let mut assign = vec![0usize; points.len()];
+    for _ in 0..12 {
+        // assignment
+        for (i, p) in points.iter().enumerate() {
+            let mut best = (f32::INFINITY, 0usize);
+            for (j, c) in centers.iter().enumerate() {
+                let d = dist2(p, c);
+                if d < best.0 {
+                    best = (d, j);
+                }
+            }
+            assign[i] = best.1;
+        }
+        // update
+        let dim = points[0].len();
+        let mut sums = vec![vec![0f32; dim]; k];
+        let mut cnt = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            cnt[assign[i]] += 1;
+            for (s, x) in sums[assign[i]].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for j in 0..k {
+            if cnt[j] > 0 {
+                for s in &mut sums[j] {
+                    *s /= cnt[j] as f32;
+                }
+                centers[j] = sums[j].clone();
+            }
+        }
+    }
+    assign
+}
+
+fn kl(p: &[f64], q: &[f64]) -> f64 {
+    p.iter()
+        .zip(q)
+        .filter(|(pi, _)| **pi > 0.0)
+        .map(|(pi, qi)| pi * (pi / qi.max(1e-12)).ln())
+        .sum()
+}
+
+/// MAUVE-lite between two corpora of token sequences, in (0, 1]
+/// (1 = indistinguishable distributions).
+pub fn mauve_lite(p_samples: &[Vec<i32>], q_samples: &[Vec<i32>]) -> f64 {
+    if p_samples.is_empty() || q_samples.is_empty() {
+        return 0.0;
+    }
+    let mut feats: Vec<Vec<f32>> =
+        p_samples.iter().map(|s| featurize(s)).collect();
+    feats.extend(q_samples.iter().map(|s| featurize(s)));
+    let k = 8.min(feats.len());
+    let assign = kmeans(&feats, k, 12345);
+    // quantised histograms (Laplace-smoothed)
+    let mut ph = vec![1e-3f64; k];
+    let mut qh = vec![1e-3f64; k];
+    for (i, &a) in assign.iter().enumerate() {
+        if i < p_samples.len() {
+            ph[a] += 1.0;
+        } else {
+            qh[a] += 1.0;
+        }
+    }
+    let pn: f64 = ph.iter().sum();
+    let qn: f64 = qh.iter().sum();
+    for x in &mut ph {
+        *x /= pn;
+    }
+    for x in &mut qh {
+        *x /= qn;
+    }
+    // divergence frontier: C(lambda) = exp(-c * KL(p || r_l)),
+    // r_l = l*p + (1-l)*q, integrated over lambda (Pillutla et al.)
+    const C: f64 = 5.0;
+    let lambdas: Vec<f64> = (1..50).map(|i| i as f64 / 50.0).collect();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &l in &lambdas {
+        let r: Vec<f64> = ph
+            .iter()
+            .zip(&qh)
+            .map(|(a, b)| l * a + (1.0 - l) * b)
+            .collect();
+        xs.push((-C * kl(&qh, &r)).exp());
+        ys.push((-C * kl(&ph, &r)).exp());
+    }
+    // area under the frontier curve (trapezoid over sorted xs)
+    let mut pts: Vec<(f64, f64)> =
+        xs.into_iter().zip(ys).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut area = 0.0;
+    let mut prev = (0.0f64, 1.0f64); // frontier starts at (0, 1)
+    for &(x, y) in &pts {
+        area += (x - prev.0) * 0.5 * (y + prev.1);
+        prev = (x, y);
+    }
+    area += (1.0 - prev.0) * 0.5 * prev.1; // close to (1, 0)
+    (2.0 * area).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn corpus(seed: u64, tok_range: (i32, i32), n: usize) -> Vec<Vec<i32>> {
+        let mut r = Prng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..32)
+                    .map(|_| {
+                        tok_range.0
+                            + r.below((tok_range.1 - tok_range.0) as usize)
+                                as i32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identical_corpora_score_high() {
+        let a = corpus(1, (0, 50), 40);
+        let m = mauve_lite(&a, &a);
+        assert!(m > 0.9, "mauve={m}");
+    }
+
+    #[test]
+    fn disjoint_corpora_score_low() {
+        let a = corpus(1, (0, 50), 40);
+        let b = corpus(2, (300, 350), 40);
+        let m = mauve_lite(&a, &b);
+        assert!(m < 0.4, "mauve={m}");
+    }
+
+    #[test]
+    fn ordering_similar_beats_dissimilar() {
+        let a = corpus(1, (0, 50), 40);
+        let near = corpus(3, (0, 50), 40); // same token range
+        let far = corpus(4, (200, 400), 40);
+        let m_near = mauve_lite(&a, &near);
+        let m_far = mauve_lite(&a, &far);
+        assert!(m_near > m_far, "near={m_near} far={m_far}");
+    }
+
+    #[test]
+    fn kmeans_deterministic_and_valid() {
+        let pts: Vec<Vec<f32>> =
+            corpus(7, (0, 20), 30).iter().map(|s| featurize(s)).collect();
+        let a1 = kmeans(&pts, 4, 9);
+        let a2 = kmeans(&pts, 4, 9);
+        assert_eq!(a1, a2);
+        assert!(a1.iter().all(|&c| c < 4));
+    }
+
+    #[test]
+    fn featurize_is_unit_norm() {
+        let f = featurize(&[1, 5, 9, 1, 5]);
+        let n: f32 = f.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation substrate: every metric the paper reports, from scratch —
+//! AR-NLL (artifact-driven), dist-N / Self-BLEU / unique fraction / Zipf,
+//! WER, GPT-Score-lite, MAUVE-lite.
+
+pub mod argen;
+pub mod arnll;
+pub mod judge;
+pub mod mauve;
+pub mod ngram;
+pub mod wer;

@@ -1,0 +1,216 @@
+//! N-gram diversity metrics: dist-N, Self-BLEU, unique-token fraction,
+//! Zipf coefficient — the paper's sample-diversity battery (Tables 1/3,
+//! Fig 6).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// dist-N over a group of samples from one prompt (Zhu et al. 2018 style):
+/// distinct n-grams / total n-grams, pooled across the group.
+pub fn dist_n(samples: &[Vec<i32>], n: usize) -> f64 {
+    let mut total = 0usize;
+    let mut set: HashSet<&[i32]> = HashSet::new();
+    for s in samples {
+        if s.len() < n {
+            continue;
+        }
+        for w in s.windows(n) {
+            set.insert(w);
+            total += 1;
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    set.len() as f64 / total as f64
+}
+
+/// Fraction of unique tokens within a single sample (paper Fig 6 metric —
+/// "differs from Dist-1 since it does not include different seeds").
+pub fn unique_fraction(sample: &[i32]) -> f64 {
+    if sample.is_empty() {
+        return 0.0;
+    }
+    let set: HashSet<i32> = sample.iter().copied().collect();
+    set.len() as f64 / sample.len() as f64
+}
+
+fn ngram_counts(s: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m = HashMap::new();
+    if s.len() >= n {
+        for w in s.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// BLEU-4 of `hyp` against a set of references (modified n-gram precision
+/// with clipping + brevity penalty, smoothed with +1 on empty precisions).
+pub fn bleu(hyp: &[i32], refs: &[&[i32]]) -> f64 {
+    if hyp.is_empty() || refs.is_empty() {
+        return 0.0;
+    }
+    let mut logp = 0.0;
+    for n in 1..=4usize {
+        let hc = ngram_counts(hyp, n);
+        let total: usize = hc.values().sum();
+        if total == 0 {
+            // degenerate short hypothesis: smooth
+            logp += (1.0f64 / (total + 1) as f64).ln();
+            continue;
+        }
+        // precompute per-reference n-gram counts once (§Perf: was
+        // rebuilt per hypothesis n-gram — O(|hyp|·|refs|·|ref|))
+        let ref_counts: Vec<HashMap<&[i32], usize>> =
+            refs.iter().map(|r| ngram_counts(r, n)).collect();
+        let mut clipped = 0usize;
+        for (g, &c) in &hc {
+            let max_ref = ref_counts
+                .iter()
+                .map(|rc| *rc.get(g).unwrap_or(&0))
+                .max()
+                .unwrap_or(0);
+            clipped += c.min(max_ref);
+        }
+        let p = (clipped as f64 + 1e-9) / total as f64;
+        logp += p.max(1e-9).ln();
+    }
+    let prec = (logp / 4.0).exp();
+    let hyp_len = hyp.len() as f64;
+    let ref_len = refs
+        .iter()
+        .map(|r| r.len() as f64)
+        .min_by(|a, b| {
+            (a - hyp_len).abs().partial_cmp(&(b - hyp_len).abs()).unwrap()
+        })
+        .unwrap_or(hyp_len);
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len / hyp_len).exp()
+    };
+    bp * prec
+}
+
+/// Self-BLEU over a sample group: mean BLEU of each sample against the
+/// others (higher = less diverse).
+pub fn self_bleu(samples: &[Vec<i32>]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for (i, s) in samples.iter().enumerate() {
+        let refs: Vec<&[i32]> = samples
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(_, r)| r.as_slice())
+            .collect();
+        total += bleu(s, &refs);
+    }
+    total / samples.len() as f64
+}
+
+/// Zipf coefficient: negated slope of the log-frequency vs log-rank
+/// regression over the pooled token counts (paper Table 3; data ~ 0.9).
+pub fn zipf_coefficient(samples: &[Vec<i32>]) -> f64 {
+    let mut counts: BTreeMap<i32, usize> = BTreeMap::new();
+    for s in samples {
+        for &t in s {
+            *counts.entry(t).or_insert(0) += 1;
+        }
+    }
+    let mut freqs: Vec<f64> =
+        counts.values().map(|&c| c as f64).collect();
+    if freqs.len() < 3 {
+        return 0.0;
+    }
+    freqs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let n = freqs.len();
+    let xs: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).ln()).collect();
+    let ys: Vec<f64> = freqs.iter().map(|f| f.ln()).collect();
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    -(sxy / sxx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist1_all_same_vs_all_distinct() {
+        let same = vec![vec![1, 1, 1, 1]];
+        let distinct = vec![vec![1, 2, 3, 4]];
+        assert!((dist_n(&same, 1) - 0.25).abs() < 1e-9);
+        assert!((dist_n(&distinct, 1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dist2_pools_across_samples() {
+        let group = vec![vec![1, 2, 3], vec![1, 2, 3]];
+        // 4 bigrams total, 2 distinct
+        assert!((dist_n(&group, 2) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unique_fraction_bounds() {
+        assert_eq!(unique_fraction(&[]), 0.0);
+        assert!((unique_fraction(&[7, 7, 7, 7]) - 0.25).abs() < 1e-9);
+        assert!((unique_fraction(&[1, 2, 3]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_identical_is_one() {
+        let s = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b = bleu(&s, &[&s]);
+        assert!((b - 1.0).abs() < 1e-6, "bleu={b}");
+    }
+
+    #[test]
+    fn bleu_disjoint_is_near_zero() {
+        let a = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b_seq = vec![10, 11, 12, 13, 14, 15, 16, 17];
+        assert!(bleu(&a, &[&b_seq]) < 1e-3);
+    }
+
+    #[test]
+    fn self_bleu_order() {
+        // identical samples -> self-BLEU 1; diverse -> lower
+        let same = vec![vec![1, 2, 3, 4, 5]; 3];
+        let diverse = vec![
+            vec![1, 2, 3, 4, 5],
+            vec![6, 7, 8, 9, 10],
+            vec![11, 12, 13, 14, 15],
+        ];
+        assert!(self_bleu(&same) > 0.99);
+        assert!(self_bleu(&diverse) < 0.2);
+    }
+
+    #[test]
+    fn zipf_of_power_law_counts() {
+        // construct samples with freq(rank r) ~ r^-1 exactly
+        let mut samples = Vec::new();
+        for tok in 0..50i32 {
+            let count = (1000.0 / (tok + 1) as f64).round() as usize;
+            samples.push(vec![tok; count]);
+        }
+        let z = zipf_coefficient(&samples);
+        assert!((z - 1.0).abs() < 0.08, "zipf={z}");
+    }
+
+    #[test]
+    fn bleu_bounds_property() {
+        let mut r = crate::util::prng::Prng::new(5);
+        for _ in 0..50 {
+            let a: Vec<i32> =
+                (0..12).map(|_| r.below(10) as i32).collect();
+            let b_seq: Vec<i32> =
+                (0..12).map(|_| r.below(10) as i32).collect();
+            let v = bleu(&a, &[&b_seq]);
+            assert!((0.0..=1.0 + 1e-9).contains(&v), "bleu={v}");
+        }
+    }
+}

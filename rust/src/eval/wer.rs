@@ -1,0 +1,85 @@
+//! Word Error Rate — Levenshtein distance over tokens, normalised by the
+//! reference length (paper Fig 7b: WER between mid-generation samples and
+//! the final-step sample).
+
+/// WER(hyp, reference) = edit_distance / len(reference).
+pub fn wer(hyp: &[i32], reference: &[i32]) -> f64 {
+    if reference.is_empty() {
+        return if hyp.is_empty() { 0.0 } else { 1.0 };
+    }
+    edit_distance(hyp, reference) as f64 / reference.len() as f64
+}
+
+/// Classic O(|a|·|b|) Levenshtein with two rolling rows.
+pub fn edit_distance(a: &[i32], b: &[i32]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 {
+        return m;
+    }
+    if m == 0 {
+        return n;
+    }
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_zero() {
+        let s = vec![1, 2, 3, 4];
+        assert_eq!(edit_distance(&s, &s), 0);
+        assert_eq!(wer(&s, &s), 0.0);
+    }
+
+    #[test]
+    fn single_ops() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 3], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+    }
+
+    #[test]
+    fn completely_different() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[4, 5, 6]), 3);
+        assert_eq!(wer(&[1, 2, 3], &[4, 5, 6]), 1.0);
+    }
+
+    #[test]
+    fn empty_cases() {
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[1, 2], &[]), 2);
+        assert_eq!(wer(&[], &[]), 0.0);
+        assert_eq!(wer(&[1], &[]), 1.0);
+    }
+
+    #[test]
+    fn triangle_and_symmetry_properties() {
+        let mut r = crate::util::prng::Prng::new(9);
+        for _ in 0..30 {
+            let gen = |r: &mut crate::util::prng::Prng| -> Vec<i32> {
+                (0..r.below(12)).map(|_| r.below(5) as i32).collect()
+            };
+            let (a, b, c) = (gen(&mut r), gen(&mut r), gen(&mut r));
+            let dab = edit_distance(&a, &b);
+            let dba = edit_distance(&b, &a);
+            let dac = edit_distance(&a, &c);
+            let dcb = edit_distance(&c, &b);
+            assert_eq!(dab, dba, "symmetry");
+            assert!(dab <= dac + dcb, "triangle inequality");
+            // bounded by max length
+            assert!(dab <= a.len().max(b.len()));
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Shared generation recorder for the experiment harness.
+//!
+//! One recorded run = full per-step statistics traces + per-step token
+//! snapshots for every sample.  Because the traces are complete, *any*
+//! halting criterion/threshold can be evaluated post-hoc without
+//! re-generating — this is how the Fig 5/6 threshold sweeps stay cheap.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::halting::{Criterion, CriterionState, StepStats};
+use crate::models::store::ParamStore;
+use crate::sampler::{Family, Session};
+
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub family: Family,
+    pub n_samples: usize,
+    pub n_steps: usize,
+    pub prefix_len: usize,
+    pub noise_scale: f32,
+    /// noise/init seed (vary for multi-seed sampling from one prompt set)
+    pub seed: u64,
+    /// validation-prompt seed (keep fixed to share prompts across runs)
+    pub data_seed: u64,
+    /// also record x / x0_hat trajectories (Fig 2 only; memory-heavy)
+    pub record_vectors: bool,
+    /// seq_len override (Fig 8 long-sequence runs); 0 = manifest default
+    pub seq_len: usize,
+}
+
+impl RunOpts {
+    pub fn new(family: Family, n_samples: usize, n_steps: usize) -> RunOpts {
+        RunOpts {
+            family,
+            n_samples,
+            n_steps,
+            prefix_len: 0,
+            noise_scale: 1.0,
+            seed: 20240710,
+            data_seed: 777,
+            record_vectors: false,
+            seq_len: 0,
+        }
+    }
+}
+
+/// Full record of one generation run.
+pub struct RunRecord {
+    pub opts: RunOpts,
+    /// per-sample per-step statistics
+    pub traces: Vec<Vec<StepStats>>,
+    /// per-sample per-step argmax tokens (snapshot after each step)
+    pub snaps: Vec<Vec<Vec<i32>>>,
+    /// reference sequences the prompts came from (full length)
+    pub references: Vec<Vec<i32>>,
+    /// optional x trajectories [sample][step][row] (Fig 2)
+    pub xs: Vec<Vec<Vec<f32>>>,
+    /// optional x0_hat trajectories (Fig 2)
+    pub x0s: Vec<Vec<Vec<f32>>>,
+}
+
+impl RunRecord {
+    pub fn final_tokens(&self, sample: usize) -> &[i32] {
+        self.snaps[sample].last().unwrap()
+    }
+
+    /// Tokens at 1-based exit step `s` (s=0 -> first step's snapshot).
+    pub fn tokens_at(&self, sample: usize, exit_step: usize) -> &[i32] {
+        let idx = exit_step.saturating_sub(1).min(self.snaps[sample].len() - 1);
+        &self.snaps[sample][idx]
+    }
+
+    /// First 1-based step at which `crit` fires (or n_steps if never).
+    pub fn exit_step(&self, sample: usize, crit: &Criterion) -> usize {
+        let mut st = CriterionState::default();
+        for (i, stats) in self.traces[sample].iter().enumerate() {
+            if st.observe(crit, stats) {
+                return i + 1;
+            }
+        }
+        self.traces[sample].len()
+    }
+
+    /// Mean of a stats field across samples at each step.
+    pub fn mean_curve(&self, f: impl Fn(&StepStats) -> f32) -> Vec<f64> {
+        let n_steps = self.traces[0].len();
+        let mut out = vec![0.0; n_steps];
+        for t in &self.traces {
+            for (i, s) in t.iter().enumerate() {
+                out[i] += f(s) as f64;
+            }
+        }
+        for o in &mut out {
+            *o /= self.traces.len() as f64;
+        }
+        out
+    }
+}
+
+/// Run batched generation, recording everything.
+pub fn record_run(
+    ctx: &Ctx,
+    store: Rc<ParamStore>,
+    opts: RunOpts,
+) -> Result<RunRecord> {
+    let m = ctx.rt.manifest.model.clone();
+    let seq_len = if opts.seq_len == 0 { m.seq_len } else { opts.seq_len };
+    let batch = ctx.rt.manifest.resolve_step_batch(
+        opts.family.name(),
+        seq_len,
+        8,
+    )?;
+    let mut session =
+        Session::new(&ctx.rt, opts.family, store, batch, seq_len)?;
+
+    // deterministic validation prompts (prefix task uses their heads)
+    let ds = crate::corpus::dataset::Dataset::new(m.vocab, seq_len);
+    let references = ds.val_prompts(opts.data_seed, opts.n_samples);
+
+    let mut traces = vec![Vec::new(); opts.n_samples];
+    let mut snaps = vec![Vec::new(); opts.n_samples];
+    let mut xs = vec![Vec::new(); opts.n_samples];
+    let mut x0s = vec![Vec::new(); opts.n_samples];
+
+    for group in (0..opts.n_samples).collect::<Vec<_>>().chunks(batch) {
+        for (slot, &sample) in group.iter().enumerate() {
+            let prefix = &references[sample][..opts.prefix_len];
+            session.reset_slot(
+                slot,
+                opts.seed ^ (sample as u64).wrapping_mul(0x9E37_79B9),
+                opts.n_steps,
+                opts.noise_scale,
+                m.t_max,
+                m.t_min,
+                prefix,
+            );
+        }
+        // idle out unused slots in the tail group
+        for slot in group.len()..batch {
+            session.release_slot(slot);
+        }
+        for _ in 0..opts.n_steps {
+            let stats = session.step()?;
+            for (slot, &sample) in group.iter().enumerate() {
+                let st = stats[slot].expect("active slot");
+                traces[sample].push(st);
+                snaps[sample].push(session.slot_output(slot));
+                if opts.record_vectors {
+                    xs[sample].push(session.slot_x(slot).to_vec());
+                    x0s[sample].push(session.slot_x0_hat(slot).to_vec());
+                }
+            }
+        }
+    }
+    Ok(RunRecord {
+        opts,
+        traces,
+        snaps,
+        references,
+        xs,
+        x0s,
+    })
+}
+
+/// Cosine similarity between two vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if na * nb <= 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halting::Criterion;
+
+    fn fake_record(n_samples: usize, n_steps: usize) -> RunRecord {
+        // synthetic record: entropy decays geometrically, kl decays,
+        // switches hit zero halfway; tokens converge at 60%
+        let mut traces = Vec::new();
+        let mut snaps = Vec::new();
+        for s in 0..n_samples {
+            let mut t = Vec::new();
+            let mut sn = Vec::new();
+            for i in 0..n_steps {
+                let frac = i as f32 / n_steps as f32;
+                t.push(StepStats {
+                    entropy: 4.0 * (1.0 - frac).powi(2),
+                    kl: 0.1 * (-8.0 * frac).exp(),
+                    switches: if frac < 0.5 { 10.0 } else { 0.0 },
+                    norm_x0: 8.0,
+                    norm_x: 8.0 + 20.0 * (1.0 - frac),
+                });
+                let settled = frac >= 0.6;
+                sn.push(if settled {
+                    vec![s as i32; 8]
+                } else {
+                    vec![i as i32; 8]
+                });
+            }
+            traces.push(t);
+            snaps.push(sn);
+        }
+        RunRecord {
+            opts: RunOpts::new(Family::Ddlm, n_samples, n_steps),
+            traces,
+            snaps,
+            references: vec![vec![0; 8]; n_samples],
+            xs: Vec::new(),
+            x0s: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn exit_step_entropy_matches_threshold() {
+        let rec = fake_record(2, 100);
+        // entropy = 4 (1-f)^2 <= 1.0  =>  f >= 0.5
+        let e = rec.exit_step(0, &Criterion::Entropy { threshold: 1.0 });
+        assert!((48..=53).contains(&e), "exit={e}");
+    }
+
+    #[test]
+    fn exit_step_never_fires_returns_n_steps() {
+        let rec = fake_record(1, 50);
+        let e = rec.exit_step(0, &Criterion::Entropy { threshold: -1.0 });
+        assert_eq!(e, 50);
+    }
+
+    #[test]
+    fn exit_step_patience_after_switch_freeze() {
+        let rec = fake_record(1, 100);
+        // switches are 0 from step 50 on; patience 10 -> fires ~step 60
+        let e = rec.exit_step(
+            0,
+            &Criterion::Patience {
+                patience: 10,
+                tolerance: 0.0,
+            },
+        );
+        assert!((58..=62).contains(&e), "exit={e}");
+    }
+
+    #[test]
+    fn tokens_at_clamps_and_final_matches() {
+        let rec = fake_record(1, 40);
+        assert_eq!(rec.tokens_at(0, 0), rec.snaps[0][0].as_slice());
+        assert_eq!(rec.tokens_at(0, 10_000), rec.final_tokens(0));
+    }
+
+    #[test]
+    fn mean_curve_averages_samples() {
+        let rec = fake_record(4, 20);
+        let c = rec.mean_curve(|s| s.norm_x0);
+        assert_eq!(c.len(), 20);
+        assert!(c.iter().all(|&v| (v - 8.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-2.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn thin_keeps_endpoints() {
+        let c: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let t = thin(&c, 10);
+        assert_eq!(t.first().unwrap().0, 0);
+        assert_eq!(t.last().unwrap().0, 99);
+        assert!(t.len() <= 12);
+    }
+}
+
+/// Downsample a curve to ~`k` points for table display (keeps endpoints).
+pub fn thin(curve: &[f64], k: usize) -> Vec<(usize, f64)> {
+    if curve.is_empty() {
+        return Vec::new();
+    }
+    let stride = (curve.len() as f64 / k as f64).max(1.0);
+    let mut out = Vec::new();
+    let mut i = 0.0;
+    while (i as usize) < curve.len() {
+        out.push((i as usize, curve[i as usize]));
+        i += stride;
+    }
+    if out.last().map(|(i, _)| *i) != Some(curve.len() - 1) {
+        out.push((curve.len() - 1, curve[curve.len() - 1]));
+    }
+    out
+}

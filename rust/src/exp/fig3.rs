@@ -1,0 +1,116 @@
+//! Fig 3 + Table 1 — the initial-noise-scale knob.
+//!
+//! Fig 3: ||X||_2 trajectory for each initial scale of X (lower scale ->
+//! the trajectory reaches its minimum sooner).
+//! Table 1: AR-NLL / dist-1/2/3 / Self-BLEU vs noise scale — low scales
+//! collapse diversity (sBLEU -> 1), scale ~1.0 is the operating point.
+
+use anyhow::Result;
+
+use super::common::{record_run, RunOpts};
+use super::Ctx;
+use crate::eval::ngram;
+use crate::sampler::Family;
+use crate::util::table::{f, sparkline, Table};
+
+pub const NOISE_SCALES: &[f32] = &[0.0, 0.5, 0.8, 0.9, 1.0, 1.1, 1.2];
+
+pub fn run_fig3(ctx: &Ctx) -> Result<String> {
+    let store = ctx.store("ddlm")?;
+    let n_steps = ctx.n_steps();
+    let mut out = String::from(
+        "Fig 3 — ||X||_2 during DDLM generation for different initial \
+         noise scales\n\n",
+    );
+    let mut table = Table::new(&[
+        "noise", "||X|| curve", "min step", "min ||X||", "final ||X||",
+    ]);
+    for &scale in NOISE_SCALES {
+        let mut opts =
+            RunOpts::new(Family::Ddlm, ctx.n_samples().min(8), n_steps);
+        opts.noise_scale = scale;
+        opts.seed = 3;
+        let rec = record_run(ctx, store.clone(), opts)?;
+        let curve = rec.mean_curve(|s| s.norm_x);
+        let (min_i, min_v) = curve
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, v)| (i, *v))
+            .unwrap();
+        table.row(vec![
+            format!("{scale:.1}"),
+            sparkline(&curve, 24),
+            (min_i + 1).to_string(),
+            f(min_v, 2),
+            f(*curve.last().unwrap(), 2),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(
+        "\npaper-shape check: lower initial scale reaches the ||X|| \
+         minimum earlier.\n",
+    );
+    Ok(out)
+}
+
+pub fn run_tab1(ctx: &Ctx) -> Result<String> {
+    let store = ctx.store("ddlm")?;
+    let scorer = ctx.scorer()?;
+    let n_steps = ctx.n_steps();
+    let prefix = 32usize;
+    let n_prompts = ctx.n_samples().min(8);
+    let seeds_per_prompt = 5usize; // paper: 5 continuations per prompt
+
+    let mut out = String::from(
+        "Table 1 — DDLM quality/diversity vs initial noise scale \
+         (Prefix-32, 5 seeds per prompt)\n\n",
+    );
+    let mut table = Table::new(&[
+        "Noise", "AR-NLL", "dist_1", "dist_2", "dist_3", "sBLEU",
+    ]);
+    for &scale in NOISE_SCALES {
+        // groups[prompt][seed] = generated sequence
+        let mut groups: Vec<Vec<Vec<i32>>> = vec![Vec::new(); n_prompts];
+        for seed in 0..seeds_per_prompt {
+            let mut opts = RunOpts::new(Family::Ddlm, n_prompts, n_steps);
+            opts.noise_scale = scale;
+            opts.prefix_len = prefix;
+            opts.seed = 1000 + seed as u64; // same prompts, fresh noise
+            let rec = record_run(ctx, store.clone(), opts)?;
+            for p in 0..n_prompts {
+                groups[p].push(rec.final_tokens(p).to_vec());
+            }
+        }
+        // AR-NLL over everything (scoring only the generated suffix)
+        let flat: Vec<Vec<i32>> =
+            groups.iter().flatten().cloned().collect();
+        let nll = scorer.mean_score(&flat, prefix)?;
+        // diversity over the generated suffixes, per prompt group
+        let (mut d1, mut d2, mut d3, mut sb) = (0.0, 0.0, 0.0, 0.0);
+        for g in &groups {
+            let suffixes: Vec<Vec<i32>> =
+                g.iter().map(|s| s[prefix..].to_vec()).collect();
+            d1 += ngram::dist_n(&suffixes, 1);
+            d2 += ngram::dist_n(&suffixes, 2);
+            d3 += ngram::dist_n(&suffixes, 3);
+            sb += ngram::self_bleu(&suffixes);
+        }
+        let n = n_prompts as f64;
+        table.row(vec![
+            format!("{scale:.1}"),
+            f(nll as f64, 2),
+            f(d1 / n, 2),
+            f(d2 / n, 2),
+            f(d3 / n, 2),
+            f(sb / n, 2),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(
+        "\npaper-shape check: scale 0.0 degenerates (sBLEU=1, dist=0); \
+         AR-NLL grows and diversity rises with scale; ~0.9-1.0 is the \
+         knee.\n",
+    );
+    Ok(out)
+}

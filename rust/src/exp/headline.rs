@@ -1,0 +1,154 @@
+//! Headline claim (§5.4): adaptive halting cuts generation time by
+//! 10-40% with no quality drop — measured end-to-end through the serving
+//! coordinator (continuous batching with early-exit slot recycling).
+//!
+//! For each family we serve the same request stream twice: once with the
+//! family's best adaptive criterion (fixed-step for Plaid, per the paper)
+//! and once without halting, and compare wall-clock, throughput and
+//! AR-NLL of the outputs.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::fig4::default_thresholds;
+use super::Ctx;
+use crate::coordinator::{start, EngineConfig, GenRequest};
+use crate::halting::Criterion;
+use crate::sampler::Family;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+const PREFIX: usize = 32;
+
+struct ServeResult {
+    wall_s: f64,
+    mean_latency_ms: f64,
+    mean_steps: f64,
+    nll: f64,
+    device_calls: f64,
+}
+
+fn serve_stream(
+    ctx: &Ctx,
+    family: Family,
+    criterion: Criterion,
+    n_requests: usize,
+    n_steps: usize,
+) -> Result<ServeResult> {
+    let mut cfg = EngineConfig::new(&ctx.artifact_dir, family);
+    cfg.batch = 8;
+    let ckpt = format!("{}/{}.pbin", ctx.runs_dir, family.name());
+    if std::path::Path::new(&ckpt).exists() {
+        cfg.checkpoint = Some(ckpt);
+    }
+    let (engine, join) = start(cfg);
+
+    let ds = ctx.dataset();
+    let prompts = ds.val_prompts(777, n_requests);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut req = GenRequest::new(i as u64, n_steps);
+            req.prefix = p[..PREFIX].to_vec();
+            req.criterion = criterion;
+            req.seed = 5000 + i as u64;
+            engine.submit(req)
+        })
+        .collect();
+    let mut outputs = Vec::new();
+    let mut lat = 0.0;
+    let mut steps = 0usize;
+    for rx in rxs {
+        let r = rx.recv()?;
+        lat += r.latency_ms;
+        steps += r.steps_executed;
+        outputs.push(r.tokens);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = engine.metrics()?;
+    let device_calls = metrics
+        .get("device_calls")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    engine.shutdown();
+    join.join().unwrap()?;
+
+    let nll = ctx.scorer()?.mean_score(&outputs, PREFIX)? as f64;
+    Ok(ServeResult {
+        wall_s,
+        mean_latency_ms: lat / n_requests as f64,
+        mean_steps: steps as f64 / n_requests as f64,
+        nll,
+        device_calls,
+    })
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let n_steps = ctx.n_steps();
+    let n_requests = if ctx.quick { 16 } else { 32 };
+    let (_, _, kl0) = default_thresholds(n_steps);
+    let mut out = format!(
+        "Headline — serving-time reduction from early halting \
+         ({n_requests} Prefix-32 requests, N_max={n_steps}, batch=8, \
+         continuous batching)\n\n"
+    );
+    let mut table = Table::new(&[
+        "model",
+        "criterion",
+        "wall s",
+        "Δwall %",
+        "mean steps",
+        "mean latency ms",
+        "device calls",
+        "AR-NLL",
+        "ΔNLL",
+    ]);
+    for fam in Family::all() {
+        // the paper's per-family best: KL for ddlm/ssd, fixed for plaid
+        let crit = match fam {
+            Family::Ddlm | Family::Ssd => Criterion::Kl {
+                threshold: kl0,
+                min_steps: n_steps / 4,
+            },
+            Family::Plaid => Criterion::Fixed {
+                step: n_steps * 9 / 10,
+            },
+        };
+        let base =
+            serve_stream(ctx, fam, Criterion::None, n_requests, n_steps)?;
+        let halt = serve_stream(ctx, fam, crit, n_requests, n_steps)?;
+        let dw = 100.0 * (base.wall_s - halt.wall_s) / base.wall_s;
+        table.row(vec![
+            fam.name().into(),
+            "none".into(),
+            f(base.wall_s, 2),
+            "-".into(),
+            f(base.mean_steps, 1),
+            f(base.mean_latency_ms, 1),
+            f(base.device_calls, 0),
+            f(base.nll, 3),
+            "-".into(),
+        ]);
+        table.row(vec![
+            fam.name().into(),
+            crit.name().into(),
+            f(halt.wall_s, 2),
+            f(dw, 1),
+            f(halt.mean_steps, 1),
+            f(halt.mean_latency_ms, 1),
+            f(halt.device_calls, 0),
+            f(halt.nll, 3),
+            f(halt.nll - base.nll, 3),
+        ]);
+    }
+    let _ = writeln!(out, "{}", table.render());
+    out.push_str(
+        "paper claim: 40% (DDLM), 10-15% (SSD), 10% (Plaid) time \
+         reduction at ΔNLL ≈ 0.\n",
+    );
+    Ok(out)
+}

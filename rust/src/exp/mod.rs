@@ -1,0 +1,182 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §5).
+//!
+//! Every experiment prints the same rows/series the paper reports, through
+//! `util::table`, and returns the rendered text so the bench targets and
+//! the `repro exp <id>` subcommand share one code path.
+//!
+//! Scaling note (EXPERIMENTS.md): the paper evaluates 147M-1.3B models at
+//! 1000 generation steps over 1k-5k C4 samples; this repo evaluates ~0.6M
+//! models at `Ctx::n_steps()` steps over `Ctx::n_samples()` synthetic
+//! sequences.  Exit points are therefore compared as *fractions of N_max*.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod headline;
+pub mod tab3;
+pub mod tab4;
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::corpus::dataset::Dataset;
+use crate::eval::arnll::ArScorer;
+use crate::log_warn;
+use crate::models::store::ParamStore;
+use crate::runtime::Runtime;
+
+/// Shared experiment context: runtime + trained checkpoints + sizing.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub artifact_dir: String,
+    /// directory holding trained checkpoints (`<family>.pbin`,
+    /// `ddlm_ck<step>.pbin`), produced by `repro prepare`
+    pub runs_dir: String,
+    /// reduced sizes for bench/smoke runs
+    pub quick: bool,
+}
+
+impl Ctx {
+    pub fn new(artifact_dir: &str, runs_dir: &str, quick: bool) -> Result<Ctx> {
+        Ok(Ctx {
+            rt: Runtime::new(artifact_dir)?,
+            artifact_dir: artifact_dir.to_string(),
+            runs_dir: runs_dir.to_string(),
+            quick,
+        })
+    }
+
+    /// Trained parameters for a family; falls back to init params (with a
+    /// warning — figures are only meaningful after `repro prepare`).
+    pub fn store(&self, family: &str) -> Result<Rc<ParamStore>> {
+        let path = format!("{}/{}.pbin", self.runs_dir, family);
+        if std::path::Path::new(&path).exists() {
+            Ok(Rc::new(ParamStore::load(&path, family)?))
+        } else {
+            log_warn!(
+                "no trained checkpoint {path}; using init params \
+                 (run `repro prepare` first)"
+            );
+            Ok(Rc::new(ParamStore::load_init(&self.artifact_dir, family)?))
+        }
+    }
+
+    /// DDLM pre-training checkpoints (train_step, params) for Fig 1/2.
+    pub fn ddlm_checkpoints(&self) -> Result<Vec<(usize, Rc<ParamStore>)>> {
+        let mut out = Vec::new();
+        let dir = std::fs::read_dir(&self.runs_dir)
+            .with_context(|| format!("read {} — run `repro prepare`", self.runs_dir))?;
+        for e in dir.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if let Some(step) = name
+                .strip_prefix("ddlm_ck")
+                .and_then(|s| s.strip_suffix(".pbin"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                out.push((
+                    step,
+                    Rc::new(ParamStore::load(e.path(), "ddlm")?),
+                ));
+            }
+        }
+        if out.is_empty() {
+            bail!("no ddlm_ck*.pbin checkpoints in {}", self.runs_dir);
+        }
+        out.sort_by_key(|(s, _)| *s);
+        Ok(out)
+    }
+
+    pub fn scorer(&self) -> Result<ArScorer> {
+        ArScorer::new(&self.rt, self.store("ar")?)
+    }
+
+    pub fn dataset(&self) -> Dataset {
+        let m = &self.rt.manifest.model;
+        Dataset::new(m.vocab, m.seq_len)
+    }
+
+    /// Samples per condition.
+    pub fn n_samples(&self) -> usize {
+        if self.quick {
+            8
+        } else {
+            24
+        }
+    }
+
+    /// Generation steps (N_max).  The paper uses 1000; exit points are
+    /// compared as fractions of N_max.
+    pub fn n_steps(&self) -> usize {
+        if self.quick {
+            48
+        } else {
+            200
+        }
+    }
+}
+
+/// Experiment registry: id -> runner.
+pub fn run(ctx: &Ctx, id: &str) -> Result<String> {
+    match id {
+        "fig1" => fig1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run_fig3(ctx),
+        "tab1" => fig3::run_tab1(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run_fig5(ctx),
+        "fig6" => fig5::run_fig6(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "tab3" => tab3::run(ctx),
+        "tab4" => tab4::run(ctx),
+        "headline" => headline::run(ctx),
+        other => bail!(
+            "unknown experiment {other}; known: fig1 fig2 fig3 tab1 fig4 \
+             fig5 fig6 fig7 fig8 tab3 tab4 headline"
+        ),
+    }
+}
+
+/// Entry point shared by the `cargo bench` targets: run one experiment in
+/// quick mode (and full mode with `--full`), timing it — each bench target
+/// regenerates its paper table/figure.
+pub fn bench_main(id: &str) {
+    crate::util::log::init();
+    let args = crate::util::cli::Args::from_env();
+    // `cargo bench` passes --bench; ignore unknown harness flags
+    let quick = !args.flag("full");
+    let ctx = Ctx::new(
+        args.get_or("artifacts", "artifacts"),
+        args.get_or("runs", "runs"),
+        quick,
+    )
+    .expect("artifacts missing — run `make artifacts`");
+    let t0 = std::time::Instant::now();
+    match run(&ctx, id) {
+        Ok(text) => {
+            println!("{text}");
+            println!(
+                "bench {id}: {:.2}s ({})",
+                t0.elapsed().as_secs_f64(),
+                if quick { "quick" } else { "full" }
+            );
+        }
+        Err(e) => {
+            eprintln!("bench {id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+pub fn all_ids() -> &'static [&'static str] {
+    &[
+        "fig1", "fig2", "fig3", "tab1", "fig4", "fig5", "fig6", "fig7",
+        "fig8", "tab3", "tab4", "headline",
+    ]
+}

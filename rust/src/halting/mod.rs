@@ -1,0 +1,229 @@
+//! Early-exit criteria — the paper's contribution as a library
+//! (Algorithms 1-3 + the fixed-step baseline).
+//!
+//! Each criterion consumes the per-slot statistics the step artifacts
+//! compute on-device (entropy of p(x|X(t),t), KL vs the previous step,
+//! argmax token switches) and decides whether that slot's generation can
+//! stop.  State is per-request (`CriterionState`), so the coordinator can
+//! run a different criterion/threshold per request in the same batch.
+
+/// Per-step statistics for one batch slot (produced by the step artifact).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub entropy: f32,
+    pub kl: f32,
+    pub switches: f32,
+    pub norm_x0: f32,
+    pub norm_x: f32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Criterion {
+    /// Algorithm 1: halt when entropy <= threshold.
+    Entropy { threshold: f32 },
+    /// Algorithm 2: halt after `patience` consecutive steps whose argmax
+    /// tokens changed at most `tolerance` positions.
+    Patience { patience: usize, tolerance: f32 },
+    /// Algorithm 3: halt when KL(p_t || p_{t-1}) <= threshold, after at
+    /// least `min_steps` steps (paper: min_steps ~ 0.25 N_max).
+    Kl { threshold: f32, min_steps: usize },
+    /// Fixed-step baseline: halt unconditionally at `step`.
+    Fixed { step: usize },
+    /// Never halt (full-schedule baseline).
+    None,
+}
+
+impl Criterion {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Criterion::Entropy { .. } => "entropy",
+            Criterion::Patience { .. } => "patience",
+            Criterion::Kl { .. } => "kl",
+            Criterion::Fixed { .. } => "fixed",
+            Criterion::None => "none",
+        }
+    }
+
+    /// Parse "entropy:0.5", "patience:20", "kl:1e-3:250", "fixed:600",
+    /// "none" (CLI/config syntax).
+    pub fn parse(s: &str) -> Option<Criterion> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "none" => Some(Criterion::None),
+            "entropy" => Some(Criterion::Entropy {
+                threshold: parts.get(1)?.parse().ok()?,
+            }),
+            "patience" => Some(Criterion::Patience {
+                patience: parts.get(1)?.parse().ok()?,
+                tolerance: parts
+                    .get(2)
+                    .map(|t| t.parse().ok())
+                    .unwrap_or(Some(0.0))?,
+            }),
+            "kl" => Some(Criterion::Kl {
+                threshold: parts.get(1)?.parse().ok()?,
+                min_steps: parts
+                    .get(2)
+                    .map(|t| t.parse().ok())
+                    .unwrap_or(Some(0))?,
+            }),
+            "fixed" => Some(Criterion::Fixed {
+                step: parts.get(1)?.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Mutable per-request evaluation state.
+#[derive(Clone, Debug, Default)]
+pub struct CriterionState {
+    /// consecutive low-change steps (Patience)
+    run: usize,
+    /// steps observed so far
+    steps: usize,
+}
+
+impl CriterionState {
+    pub fn reset(&mut self) {
+        *self = CriterionState::default();
+    }
+
+    /// Feed one step's statistics; returns true when the criterion fires.
+    /// `step` is the 0-based index of the step that just completed.
+    pub fn observe(&mut self, crit: &Criterion, stats: &StepStats) -> bool {
+        let step = self.steps;
+        self.steps += 1;
+        match *crit {
+            Criterion::None => false,
+            Criterion::Fixed { step: s } => step + 1 >= s,
+            Criterion::Entropy { threshold } => stats.entropy <= threshold,
+            Criterion::Kl { threshold, min_steps } => {
+                // the first step has no meaningful previous distribution
+                step > 0 && self.steps >= min_steps && stats.kl <= threshold
+            }
+            Criterion::Patience { patience, tolerance } => {
+                if step > 0 && stats.switches <= tolerance {
+                    self.run += 1;
+                } else {
+                    self.run = 0;
+                }
+                self.run >= patience
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(entropy: f32, kl: f32, switches: f32) -> StepStats {
+        StepStats {
+            entropy,
+            kl,
+            switches,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn entropy_fires_below_threshold() {
+        let c = Criterion::Entropy { threshold: 0.5 };
+        let mut s = CriterionState::default();
+        assert!(!s.observe(&c, &stats(2.0, 1.0, 5.0)));
+        assert!(!s.observe(&c, &stats(0.6, 1.0, 5.0)));
+        assert!(s.observe(&c, &stats(0.4, 1.0, 5.0)));
+    }
+
+    #[test]
+    fn kl_respects_min_steps_and_first_step() {
+        let c = Criterion::Kl {
+            threshold: 1e-3,
+            min_steps: 3,
+        };
+        let mut s = CriterionState::default();
+        // step 0: never fires (no previous distribution)
+        assert!(!s.observe(&c, &stats(1.0, 0.0, 0.0)));
+        assert!(!s.observe(&c, &stats(1.0, 0.0, 0.0))); // steps=2 < 3
+        assert!(s.observe(&c, &stats(1.0, 1e-4, 0.0))); // steps=3 >= 3
+    }
+
+    #[test]
+    fn patience_requires_consecutive_run() {
+        let c = Criterion::Patience {
+            patience: 3,
+            tolerance: 0.0,
+        };
+        let mut s = CriterionState::default();
+        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // step 0 ignored
+        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=1
+        assert!(!s.observe(&c, &stats(0.0, 0.0, 2.0))); // broken -> 0
+        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=1
+        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=2
+        assert!(s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=3 -> fire
+    }
+
+    #[test]
+    fn fixed_fires_exactly_at_step() {
+        let c = Criterion::Fixed { step: 2 };
+        let mut s = CriterionState::default();
+        assert!(!s.observe(&c, &stats(9.0, 9.0, 9.0)));
+        assert!(s.observe(&c, &stats(9.0, 9.0, 9.0)));
+    }
+
+    #[test]
+    fn none_never_fires_property() {
+        let mut s = CriterionState::default();
+        let mut r = crate::util::prng::Prng::new(3);
+        for _ in 0..500 {
+            let st = stats(
+                r.uniform_f32(),
+                r.uniform_f32() * 1e-6,
+                0.0,
+            );
+            assert!(!s.observe(&Criterion::None, &st));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            Criterion::parse("entropy:0.5"),
+            Some(Criterion::Entropy { threshold: 0.5 })
+        );
+        assert_eq!(
+            Criterion::parse("patience:20"),
+            Some(Criterion::Patience {
+                patience: 20,
+                tolerance: 0.0
+            })
+        );
+        assert_eq!(
+            Criterion::parse("kl:0.001:250"),
+            Some(Criterion::Kl {
+                threshold: 0.001,
+                min_steps: 250
+            })
+        );
+        assert_eq!(
+            Criterion::parse("fixed:600"),
+            Some(Criterion::Fixed { step: 600 })
+        );
+        assert_eq!(Criterion::parse("none"), Some(Criterion::None));
+        assert_eq!(Criterion::parse("bogus:1"), None);
+        assert_eq!(Criterion::parse("entropy"), None);
+    }
+
+    #[test]
+    fn patience_tolerance_allows_small_changes() {
+        let c = Criterion::Patience {
+            patience: 2,
+            tolerance: 1.5,
+        };
+        let mut s = CriterionState::default();
+        s.observe(&c, &stats(0.0, 0.0, 9.0)); // step 0
+        assert!(!s.observe(&c, &stats(0.0, 0.0, 1.0))); // within tol, run=1
+        assert!(s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=2 -> fire
+    }
+}

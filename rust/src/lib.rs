@@ -1,0 +1,17 @@
+//! Early-halting diffusion-LM serving & training stack.
+//!
+//! Reproduction of "Diffusion Language Models Generation Can Be Halted
+//! Early" (Lo Cicero Vaina, Balagansky, Gavrilov 2023) as a three-layer
+//! rust + JAX + Pallas system; see DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod coordinator;
+pub mod corpus;
+pub mod halting;
+pub mod eval;
+pub mod exp;
+pub mod models;
+pub mod runtime;
+pub mod sampler;
+pub mod train;
+pub mod util;

@@ -1,0 +1,315 @@
+//! `repro` — launcher for the early-halting diffusion-LM stack.
+//!
+//! Subcommands:
+//!   prepare   train all models + checkpoints the experiments need
+//!   train     train one model (ablation knobs exposed)
+//!   gen       generate text with a halting criterion, print it
+//!   serve     run the TCP JSON-lines serving coordinator
+//!   client    fire a request stream at a server, report latencies
+//!   exp       run a paper experiment (fig1..fig8, tab1/3/4, headline)
+//!
+//! Global flags: --artifacts DIR (default artifacts), --runs DIR
+//! (default runs), --quick (reduced sizes).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
+use repro::corpus::dataset::Masking;
+use repro::exp;
+use repro::halting::Criterion;
+use repro::models::store::ParamStore;
+use repro::runtime::Runtime;
+use repro::sampler::{Family, Session};
+use repro::train::{TrainConfig, TrainTarget, Trainer};
+use repro::util::cli::Args;
+use repro::util::log;
+
+fn main() {
+    log::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "prepare" => cmd_prepare(&args),
+        "train" => cmd_train(&args),
+        "gen" => cmd_gen(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "exp" => cmd_exp(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — early-halting diffusion-LM serving & training stack\n\
+         \n\
+         USAGE: repro <cmd> [--artifacts DIR] [--runs DIR] [options]\n\
+         \n\
+         prepare  --steps N (default 1200)      train ar+ddlm+ssd+plaid,\n\
+         \u{20}                                 save runs/<fam>.pbin and\n\
+         \u{20}                                 ddlm_ck<k>.pbin checkpoints\n\
+         train    --family ddlm|ssd|plaid|ar --steps N [--masking m]\n\
+         \u{20}        [--tmax T] [--no-tw] [--out ckpt.pbin]\n\
+         gen      --family F [--steps N] [--criterion kl:1e-4:50] [--n 4]\n\
+         \u{20}        [--prefix-len 32] [--noise 1.0]\n\
+         serve    --family F [--addr 127.0.0.1:7411] [--batch 8]\n\
+         client   --addr HOST:PORT [--n 16] [--steps N] [--criterion C]\n\
+         exp      <id>|all  [--quick]   ids: {}",
+        exp::all_ids().join(" ")
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn runs_dir(args: &Args) -> String {
+    args.get_or("runs", "runs").to_string()
+}
+
+fn parse_family(args: &Args) -> Result<Family> {
+    let f = args.get_or("family", "ddlm");
+    Family::parse(f).ok_or_else(|| anyhow::anyhow!("bad --family {f}"))
+}
+
+fn cmd_prepare(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let runs = runs_dir(args);
+    std::fs::create_dir_all(&runs)?;
+    let rt = Runtime::new(&dir)?;
+    let steps = args.usize_or("steps", 1200);
+
+    // AR evaluator first (everything else is scored with it)
+    let mut cfg = TrainConfig::new(TrainTarget::Ar, steps);
+    cfg.seed = 11;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    tr.run(steps)?;
+    tr.save_checkpoint(&format!("{runs}/ar.pbin"))?;
+    println!("ar: final loss {:.3}", tr.losses.last().unwrap());
+
+    // DDLM with intermediate checkpoints (Fig 1/2 need training colors)
+    let mut cfg = TrainConfig::new(TrainTarget::Dlm(Family::Ddlm), steps);
+    cfg.seed = 12;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let marks = [steps / 16, steps / 4, steps / 2, steps];
+    let mut done = 0usize;
+    for &mark in &marks {
+        tr.run(mark - done)?;
+        done = mark;
+        tr.save_checkpoint(&format!("{runs}/ddlm_ck{mark}.pbin"))?;
+        println!("ddlm ck{mark}: loss {:.3}", tr.losses.last().unwrap());
+    }
+    tr.save_checkpoint(&format!("{runs}/ddlm.pbin"))?;
+
+    for fam in [Family::Ssd, Family::Plaid] {
+        let mut cfg = TrainConfig::new(TrainTarget::Dlm(fam), steps);
+        cfg.seed = 13;
+        let mut tr = Trainer::new(&rt, cfg)?;
+        tr.run(steps)?;
+        tr.save_checkpoint(&format!("{runs}/{}.pbin", fam.name()))?;
+        println!(
+            "{}: final loss {:.3}",
+            fam.name(),
+            tr.losses.last().unwrap()
+        );
+    }
+    println!("prepare done -> {runs}/");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::new(&dir)?;
+    let fam_str = args.get_or("family", "ddlm");
+    let steps = args.usize_or("steps", 400);
+    let target = if fam_str == "ar" {
+        TrainTarget::Ar
+    } else {
+        TrainTarget::Dlm(
+            Family::parse(fam_str)
+                .ok_or_else(|| anyhow::anyhow!("bad --family {fam_str}"))?,
+        )
+    };
+    let mut cfg = TrainConfig::new(target, steps);
+    cfg.t_max = args.f64_or("tmax", 10.0) as f32;
+    cfg.time_warping = !args.flag("no-tw");
+    if let Some(m) = args.get("masking") {
+        cfg.masking = Masking::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("bad --masking {m}"))?;
+    }
+    cfg.base_lr = args.f64_or("lr", 3e-3) as f32;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    tr.run(steps)?;
+    let out = args.get_or("out", "model.pbin");
+    tr.save_checkpoint(out)?;
+    println!(
+        "trained {fam_str} for {steps} steps; final loss {:.4}; saved {out}",
+        tr.losses.last().unwrap()
+    );
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let runs = runs_dir(args);
+    let rt = Runtime::new(&dir)?;
+    let fam = parse_family(args)?;
+    let n_steps = args.usize_or("steps", 200);
+    let n = args.usize_or("n", 4);
+    let prefix_len = args.usize_or("prefix-len", 0);
+    let noise = args.f64_or("noise", 1.0) as f32;
+    let crit = match args.get("criterion") {
+        Some(c) => Criterion::parse(c)
+            .ok_or_else(|| anyhow::anyhow!("bad --criterion {c}"))?,
+        None => Criterion::None,
+    };
+
+    let ckpt = format!("{runs}/{}.pbin", fam.name());
+    let store = if std::path::Path::new(&ckpt).exists() {
+        Rc::new(ParamStore::load(&ckpt, fam.name())?)
+    } else {
+        eprintln!("note: using untrained init params (run `repro prepare`)");
+        Rc::new(ParamStore::load_init(&dir, fam.name())?)
+    };
+    let m = rt.manifest.model.clone();
+    let batch = rt.manifest.resolve_step_batch(fam.name(), m.seq_len, n)?;
+    let mut session = Session::new(&rt, fam, store, batch, m.seq_len)?;
+    let ds = repro::corpus::dataset::Dataset::new(m.vocab, m.seq_len);
+    let prompts = ds.val_prompts(args.u64_or("seed", 7), n);
+    let tok = ds.grammar().tokenizer().clone();
+
+    for group in (0..n).collect::<Vec<_>>().chunks(batch) {
+        for (slot, &i) in group.iter().enumerate() {
+            session.reset_slot(
+                slot,
+                args.u64_or("seed", 7) + i as u64,
+                n_steps,
+                noise,
+                m.t_max,
+                m.t_min,
+                &prompts[i][..prefix_len],
+            );
+        }
+        for slot in group.len()..batch {
+            session.release_slot(slot);
+        }
+        let mut states: Vec<repro::halting::CriterionState> =
+            group.iter().map(|_| Default::default()).collect();
+        let mut exits = vec![usize::MAX; group.len()];
+        for step in 0..n_steps {
+            let stats = session.step()?;
+            let mut any_running = false;
+            for (slot, _) in group.iter().enumerate() {
+                if exits[slot] != usize::MAX {
+                    continue; // already halted
+                }
+                if let Some(st) = stats[slot] {
+                    if states[slot].observe(&crit, &st) {
+                        exits[slot] = step + 1;
+                        session.release_slot(slot);
+                    } else {
+                        any_running = true;
+                    }
+                }
+            }
+            if !any_running {
+                break;
+            }
+        }
+        for (slot, &i) in group.iter().enumerate() {
+            let toks = session.slot_output(slot);
+            let exit = if exits[slot] == usize::MAX {
+                n_steps
+            } else {
+                exits[slot]
+            };
+            println!(
+                "--- sample {i} (exit {exit}/{n_steps} steps) ---\n{}",
+                tok.decode(&toks)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let runs = runs_dir(args);
+    let fam = parse_family(args)?;
+    let mut cfg = EngineConfig::new(&dir, fam);
+    cfg.batch = args.usize_or("batch", 8);
+    let ckpt = format!("{runs}/{}.pbin", fam.name());
+    if std::path::Path::new(&ckpt).exists() {
+        cfg.checkpoint = Some(ckpt);
+    }
+    let (engine, join) = start(cfg);
+    let addr = args.get_or("addr", "127.0.0.1:7411");
+    let server = Server::start(addr, engine)?;
+    println!("serving {} on {}", fam.name(), server.addr);
+    join.join().unwrap().context("engine")?;
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7411");
+    let n = args.usize_or("n", 16);
+    let steps = args.usize_or("steps", 200);
+    let crit = args.get_or("criterion", "none").to_string();
+    let mut client = Client::connect(addr)?;
+    let t0 = std::time::Instant::now();
+    let mut total_steps = 0usize;
+    for i in 0..n {
+        let mut req = GenRequest::new(i as u64, steps);
+        req.criterion = Criterion::parse(&crit)
+            .ok_or_else(|| anyhow::anyhow!("bad --criterion"))?;
+        let resp = client.generate(&req)?;
+        total_steps += resp.steps_executed;
+        println!(
+            "req {i}: {} steps, {:.1} ms{}",
+            resp.steps_executed,
+            resp.latency_ms,
+            if resp.halted_early { " (halted early)" } else { "" }
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "total: {n} requests in {wall:.2}s ({:.2} req/s), mean {:.1} \
+         steps/req",
+        n as f64 / wall,
+        total_steps as f64 / n as f64
+    );
+    println!("server metrics: {}", client.metrics()?.encode());
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let ctx = exp::Ctx::new(
+        &artifacts_dir(args),
+        &runs_dir(args),
+        args.flag("quick"),
+    )?;
+    let ids: Vec<&str> = if id == "all" {
+        exp::all_ids().to_vec()
+    } else {
+        vec![id]
+    };
+    std::fs::create_dir_all("results").ok();
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let text = exp::run(&ctx, id)?;
+        println!("{text}");
+        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+        std::fs::write(format!("results/{id}.txt"), &text).ok();
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+//! Model bindings: parameter stores (PBIN), per-family artifact glue.
+
+pub mod pbin;
+pub mod store;

@@ -1,0 +1,187 @@
+//! PBIN reader/writer — rust twin of `python/compile/pbin.py`.
+//!
+//! Format (little-endian):
+//!   magic  : 6 bytes  b"PBIN1\n"
+//!   count  : u32
+//!   tensor*: u32 name_len | name | u8 dtype (0=f32,1=i32)
+//!            | u32 ndim | u64*ndim dims | raw data
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::Tensor;
+
+const MAGIC: &[u8; 6] = b"PBIN1\n";
+
+pub fn read(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+    parse(&data)
+}
+
+pub fn parse(data: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    if data.len() < 10 || &data[..6] != MAGIC {
+        bail!("bad PBIN magic");
+    }
+    let mut off = 6usize;
+    let rd_u32 = |data: &[u8], off: &mut usize| -> Result<u32> {
+        if *off + 4 > data.len() {
+            bail!("truncated PBIN (u32 at {off})");
+        }
+        let v = u32::from_le_bytes(data[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        Ok(v)
+    };
+    let count = rd_u32(data, &mut off)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = rd_u32(data, &mut off)? as usize;
+        if off + nlen > data.len() {
+            bail!("truncated PBIN (name)");
+        }
+        let name = std::str::from_utf8(&data[off..off + nlen])
+            .context("name utf8")?
+            .to_string();
+        off += nlen;
+        if off >= data.len() {
+            bail!("truncated PBIN (dtype)");
+        }
+        let dtype = data[off];
+        off += 1;
+        let ndim = rd_u32(data, &mut off)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            if off + 8 > data.len() {
+                bail!("truncated PBIN (dim)");
+            }
+            dims.push(u64::from_le_bytes(
+                data[off..off + 8].try_into().unwrap(),
+            ) as usize);
+            off += 8;
+        }
+        let numel: usize = dims.iter().product::<usize>().max(
+            if dims.is_empty() { 1 } else { 0 },
+        );
+        let nbytes = numel * 4;
+        if off + nbytes > data.len() {
+            bail!("truncated PBIN (data for {name})");
+        }
+        let raw = &data[off..off + nbytes];
+        off += nbytes;
+        let tensor = match dtype {
+            0 => {
+                let mut v = vec![0f32; numel];
+                for (i, c) in raw.chunks_exact(4).enumerate() {
+                    v[i] = f32::from_le_bytes(c.try_into().unwrap());
+                }
+                Tensor::f32(&dims, v)
+            }
+            1 => {
+                let mut v = vec![0i32; numel];
+                for (i, c) in raw.chunks_exact(4).enumerate() {
+                    v[i] = i32::from_le_bytes(c.try_into().unwrap());
+                }
+                Tensor::i32(&dims, v)
+            }
+            other => bail!("unknown PBIN dtype {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+pub fn write(
+    path: impl AsRef<Path>,
+    tensors: &BTreeMap<String, Tensor>,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        match t {
+            Tensor::F32 { shape, data } => {
+                buf.push(0);
+                buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+                for &d in shape {
+                    buf.extend_from_slice(&(d as u64).to_le_bytes());
+                }
+                for x in data {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Tensor::I32 { shape, data } => {
+                buf.push(1);
+                buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+                for &d in shape {
+                    buf.extend_from_slice(&(d as u64).to_le_bytes());
+                }
+                for x in data {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]));
+        m.insert("idx".to_string(), Tensor::i32(&[3], vec![-5, 0, 7]));
+        m.insert("s".to_string(), Tensor::scalar_f32(2.5));
+        let dir = std::env::temp_dir().join("pbin_test_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pbin");
+        write(&p, &m).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOTPBINxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::f32(&[4], vec![1., 2., 3., 4.]));
+        let dir = std::env::temp_dir().join("pbin_test_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pbin");
+        write(&p, &m).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        for cut in [7usize, 12, data.len() - 3] {
+            assert!(parse(&data[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn reads_python_written_init_if_present() {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/ddlm_init.pbin");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = read(&p).unwrap();
+        assert!(m.contains_key("emb"));
+        let emb = &m["emb"];
+        assert_eq!(emb.shape(), &[512, 64]);
+    }
+}

@@ -1,0 +1,232 @@
+//! Parameter store: named tensors for one model family, checkpointing, and
+//! manifest-driven input assembly.
+//!
+//! Artifacts list their surviving HLO parameters by name (jax prunes unused
+//! inputs at lowering, e.g. `tw.w` in non-DDLM step functions), so the
+//! correct calling convention is *assembly by name*: walk the artifact's
+//! input specs in order, pull parameters from the store and data tensors
+//! from the caller.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::pbin;
+use crate::runtime::{ArtifactSpec, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub family: String,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Load the initial parameters exported by `make artifacts`.
+    pub fn load_init(artifact_dir: &str, family: &str) -> Result<ParamStore> {
+        let path = format!("{artifact_dir}/{family}_init.pbin");
+        Ok(ParamStore {
+            family: family.to_string(),
+            tensors: pbin::read(&path)?,
+        })
+    }
+
+    /// Load a checkpoint written by [`ParamStore::save`].
+    pub fn load(path: impl AsRef<Path>, family: &str) -> Result<ParamStore> {
+        Ok(ParamStore {
+            family: family.to_string(),
+            tensors: pbin::read(path)?,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        pbin::write(path, &self.tensors)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("param {name} missing in {}", self.family))
+    }
+
+    /// Total scalar parameter count (reporting).
+    pub fn n_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    /// Assemble the full input vector for an artifact: parameters from the
+    /// store (by name), everything else from `data` (by name, consumed).
+    pub fn assemble(
+        &self,
+        spec: &ArtifactSpec,
+        mut data: BTreeMap<String, Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            if let Some(t) = self.tensors.get(&input.name) {
+                out.push(t.clone());
+            } else if let Some(t) = data.remove(input.name.as_str()) {
+                if t.shape() != input.shape.as_slice() {
+                    bail!(
+                        "{}: data input {} shape {:?} != spec {:?}",
+                        spec.name,
+                        input.name,
+                        t.shape(),
+                        input.shape
+                    );
+                }
+                out.push(t);
+            } else {
+                bail!(
+                    "{}: input {} provided neither by params nor data",
+                    spec.name,
+                    input.name
+                );
+            }
+        }
+        if !data.is_empty() {
+            bail!(
+                "{}: unused data inputs {:?}",
+                spec.name,
+                data.keys().collect::<Vec<_>>()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Replace parameter values from artifact outputs named `p.<name>`
+    /// (training-step convention).
+    pub fn update_from_outputs(
+        &mut self,
+        spec: &ArtifactSpec,
+        outputs: &[Tensor],
+    ) -> Result<()> {
+        for (i, oname) in spec.outputs.iter().enumerate() {
+            if let Some(pname) = oname.strip_prefix("p.") {
+                if self.tensors.contains_key(pname) {
+                    self.tensors.insert(pname.to_string(), outputs[i].clone());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Adam optimizer state mirrored on the rust side (travels through the
+/// train artifact as plain tensors).
+#[derive(Clone, Debug)]
+pub struct OptState {
+    pub m: BTreeMap<String, Tensor>,
+    pub v: BTreeMap<String, Tensor>,
+    pub count: f32,
+}
+
+impl OptState {
+    pub fn zeros_like(params: &ParamStore) -> OptState {
+        let zeros = |t: &Tensor| Tensor::zeros_f32(t.shape());
+        OptState {
+            m: params
+                .tensors
+                .iter()
+                .map(|(k, t)| (k.clone(), zeros(t)))
+                .collect(),
+            v: params
+                .tensors
+                .iter()
+                .map(|(k, t)| (k.clone(), zeros(t)))
+                .collect(),
+            count: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, InputSpec};
+
+    fn fake_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            family: "ddlm".into(),
+            role: "step".into(),
+            batch: 1,
+            seq_len: 4,
+            inputs: vec![
+                InputSpec {
+                    name: "emb".into(),
+                    shape: vec![2, 2],
+                    dtype: Dtype::F32,
+                },
+                InputSpec {
+                    name: "x_t".into(),
+                    shape: vec![1, 4],
+                    dtype: Dtype::F32,
+                },
+            ],
+            outputs: vec!["p.emb".into(), "loss".into()],
+        }
+    }
+
+    fn fake_store() -> ParamStore {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("emb".to_string(), Tensor::f32(&[2, 2], vec![1.0; 4]));
+        ParamStore {
+            family: "ddlm".into(),
+            tensors,
+        }
+    }
+
+    #[test]
+    fn assemble_orders_params_then_data() {
+        let store = fake_store();
+        let spec = fake_spec();
+        let mut data = BTreeMap::new();
+        data.insert("x_t".to_string(), Tensor::f32(&[1, 4], vec![9.0; 4]));
+        let inputs = store.assemble(&spec, data).unwrap();
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(inputs[0].as_f32().unwrap(), &[1.0; 4]);
+        assert_eq!(inputs[1].as_f32().unwrap(), &[9.0; 4]);
+    }
+
+    #[test]
+    fn assemble_rejects_missing_and_extra() {
+        let store = fake_store();
+        let spec = fake_spec();
+        assert!(store.assemble(&spec, BTreeMap::new()).is_err());
+        let mut data = BTreeMap::new();
+        data.insert("x_t".to_string(), Tensor::f32(&[1, 4], vec![0.0; 4]));
+        data.insert("bogus".to_string(), Tensor::scalar_f32(0.0));
+        assert!(store.assemble(&spec, data).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_bad_shape() {
+        let store = fake_store();
+        let spec = fake_spec();
+        let mut data = BTreeMap::new();
+        data.insert("x_t".to_string(), Tensor::f32(&[4], vec![0.0; 4]));
+        assert!(store.assemble(&spec, data).is_err());
+    }
+
+    #[test]
+    fn update_from_outputs_overwrites_params() {
+        let mut store = fake_store();
+        let spec = fake_spec();
+        let outs = vec![
+            Tensor::f32(&[2, 2], vec![5.0; 4]),
+            Tensor::scalar_f32(0.1),
+        ];
+        store.update_from_outputs(&spec, &outs).unwrap();
+        assert_eq!(store.get("emb").unwrap().as_f32().unwrap(), &[5.0; 4]);
+    }
+
+    #[test]
+    fn opt_state_shapes_match() {
+        let store = fake_store();
+        let opt = OptState::zeros_like(&store);
+        assert_eq!(opt.m["emb"].shape(), store.get("emb").unwrap().shape());
+        assert_eq!(opt.count, 0.0);
+    }
+}

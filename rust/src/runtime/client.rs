@@ -1,0 +1,270 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once per artifact,
+//! execute from the rust hot path.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  Executables are cached per artifact
+//! name; compilation happens once per process.
+//!
+//! Threading: the `xla` crate's handles are not `Send`/`Sync`; the
+//! coordinator therefore runs a single engine thread that owns the
+//! `Runtime`, and server threads talk to it over channels (see
+//! `coordinator::engine`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest};
+use super::tensor::Tensor;
+use crate::log_info;
+
+/// Cumulative execution counters (perf accounting, EXPERIMENTS.md §Perf).
+#[derive(Default, Debug, Clone, Copy)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub upload_seconds: f64,
+    pub download_seconds: f64,
+}
+
+/// A device buffer plus the host literal backing its (asynchronous)
+/// upload — see [`Executable::buffer_from_tensor`].
+pub struct DeviceTensor {
+    _lit: xla::Literal,
+    pub buf: xla::PjRtBuffer,
+}
+
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns host tensors (tuple flattened).
+    ///
+    /// Internally converts through device buffers and `execute_b`: the
+    /// xla 0.1.6 crate's `execute()` leaks every input buffer
+    /// (`buffer.release()` in xla_rs.cc:900 without a matching free —
+    /// ~2 MB/step at our sizes, found via examples/leak_probe.rs), while
+    /// `execute_b` borrows caller-owned buffers that free on Drop.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits = self.upload(inputs)?;
+        let out = self.run_literals(&lits)?;
+        self.download(out)
+    }
+
+    /// Upload one tensor to a caller-owned device buffer (freed on Drop).
+    ///
+    /// The source literal is kept alive inside the returned
+    /// [`DeviceTensor`]: `pjrt_buffer_from_host_literal` transfers
+    /// asynchronously (no `GetReadyFuture().Await()` on the C side), so
+    /// dropping the literal immediately is a use-after-free.
+    pub fn buffer_from_tensor(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let t0 = Instant::now();
+        let lit = t.to_literal()?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("buffer_from_host_literal")?;
+        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
+    /// Execute with caller-owned device buffers (the hot path: persistent
+    /// parameter buffers are uploaded once per session and reused).
+    pub fn run_buffers(
+        &self,
+        bufs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        if bufs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                bufs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let out = self
+            .exe
+            .execute_b(bufs)
+            .with_context(|| format!("execute_b {}", self.spec.name))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .context("to_literal_sync")?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.exec_seconds += t0.elapsed().as_secs_f64();
+        }
+        result.to_tuple().context("tuple decompose")
+    }
+
+    /// Validate + convert host tensors to literals (upload half).
+    pub fn upload(&self, inputs: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "artifact {} input {}: shape {:?} != spec {:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            let ok = matches!(
+                (t, spec.dtype),
+                (Tensor::F32 { .. }, Dtype::F32) | (Tensor::I32 { .. }, Dtype::I32)
+            );
+            if !ok {
+                bail!(
+                    "artifact {} input {}: dtype mismatch",
+                    self.spec.name,
+                    spec.name
+                );
+            }
+            lits.push(t.to_literal()?);
+        }
+        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        Ok(lits)
+    }
+
+    /// Execute pre-built literals; returns the raw result literals.
+    /// (Routes through owned device buffers + `execute_b`; see `run`.)
+    pub fn run_literals(&self, lits: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let owned: Vec<xla::PjRtBuffer> = lits
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .context("buffer_from_host_literal")
+            })
+            .collect::<Result<_>>()?;
+        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        let refs: Vec<&xla::PjRtBuffer> = owned.iter().collect();
+        // aot.py lowers with return_tuple=True: always a tuple
+        self.run_buffers(&refs)
+    }
+
+    /// Convert result literals to host tensors (download half).
+    pub fn download(&self, lits: Vec<xla::Literal>) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(lits.len());
+        for l in &lits {
+            out.push(Tensor::from_literal(l)?);
+        }
+        self.stats.borrow_mut().download_seconds +=
+            t0.elapsed().as_secs_f64();
+        if out.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: got {} outputs, manifest says {}",
+                self.spec.name,
+                out.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Download only the selected output indices (skips host conversion of
+    /// bulky tensors the caller doesn't need — perf pass, DESIGN.md §10).
+    pub fn download_selected(
+        &self,
+        lits: &[xla::Literal],
+        idxs: &[usize],
+    ) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            out.push(Tensor::from_literal(&lits[i])?);
+        }
+        self.stats.borrow_mut().download_seconds +=
+            t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        log_info!(
+            "PJRT up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile (cached) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        log_info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let e = Rc::new(Executable {
+            spec,
+            exe,
+            client: self.client.clone(),
+            stats: RefCell::new(ExecStats::default()),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Aggregate stats across all cached executables.
+    pub fn total_stats(&self) -> ExecStats {
+        let mut agg = ExecStats::default();
+        for e in self.cache.borrow().values() {
+            let s = e.stats();
+            agg.executions += s.executions;
+            agg.exec_seconds += s.exec_seconds;
+            agg.upload_seconds += s.upload_seconds;
+            agg.download_seconds += s.download_seconds;
+        }
+        agg
+    }
+}

@@ -1,0 +1,291 @@
+//! `artifacts/manifest.json` loader — the contract between `python -m
+//! compile.aot` and the rust runtime: artifact inventory, input signatures
+//! (order, shape, dtype) and the flattened parameter-name order per family.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub family: String,
+    pub role: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    /// Index of a named input in the artifact's flat input list.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input {name}", self.name))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output {name}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub simplex_k: f32,
+    pub t_max: f32,
+    pub t_min: f32,
+    pub tw_buckets: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub param_names: BTreeMap<String, Vec<String>>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+
+        let m = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let dim = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model.{k} missing"))
+        };
+        let fdim = |k: &str| -> Result<f32> {
+            m.get(k)
+                .and_then(Json::as_f64)
+                .map(|v| v as f32)
+                .ok_or_else(|| anyhow!("model.{k} missing"))
+        };
+        let model = ModelDims {
+            vocab: dim("vocab")?,
+            seq_len: dim("seq_len")?,
+            d_model: dim("d_model")?,
+            n_layers: dim("n_layers")?,
+            n_heads: dim("n_heads")?,
+            d_ff: dim("d_ff")?,
+            simplex_k: fdim("simplex_k")?,
+            t_max: fdim("t_max")?,
+            t_min: fdim("t_min")?,
+            tw_buckets: dim("tw_buckets")?,
+        };
+
+        let mut param_names = BTreeMap::new();
+        if let Some(Json::Obj(pn)) = j.get("param_names") {
+            for (fam, arr) in pn {
+                let names = arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param_names.{fam} not array"))?
+                    .iter()
+                    .map(|x| x.as_str().unwrap_or_default().to_string())
+                    .collect();
+                param_names.insert(fam.clone(), names);
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact.{k} missing"))
+            };
+            let mut inputs = Vec::new();
+            for i in a
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("artifact inputs missing"))?
+            {
+                let dtype = match i.get("dtype").and_then(Json::as_str) {
+                    Some("i32") => Dtype::I32,
+                    _ => Dtype::F32,
+                };
+                let shape = i
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("input shape missing"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                inputs.push(InputSpec {
+                    name: i
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    shape,
+                    dtype,
+                });
+            }
+            let outputs = a
+                .get("outputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("artifact outputs missing"))?
+                .iter()
+                .map(|o| o.as_str().unwrap_or_default().to_string())
+                .collect();
+            let spec = ArtifactSpec {
+                name: s("name")?,
+                file: s("file")?,
+                family: s("family")?,
+                role: s("role")?,
+                batch: a
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact batch missing"))?,
+                seq_len: a
+                    .get("seq_len")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact seq_len missing"))?,
+                inputs,
+                outputs,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest {
+            dir,
+            model,
+            param_names,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name} (have: {:?})",
+                                   self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    pub fn params_of(&self, family: &str) -> Result<&[String]> {
+        self.param_names
+            .get(family)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("no param names for family {family}"))
+    }
+
+    /// Pick the step artifact for (family, batch, seq_len).
+    pub fn step_artifact(
+        &self,
+        family: &str,
+        batch: usize,
+        seq_len: usize,
+    ) -> Result<&ArtifactSpec> {
+        self.artifact(&format!("{family}_step_b{batch}_l{seq_len}"))
+    }
+
+    /// Batch sizes for which a step artifact exists (ascending).
+    pub fn available_step_batches(
+        &self,
+        family: &str,
+        seq_len: usize,
+    ) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.family == family && a.role == "step" && a.seq_len == seq_len
+            })
+            .map(|a| a.batch)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Smallest available step batch >= `want` (or the largest overall).
+    pub fn resolve_step_batch(
+        &self,
+        family: &str,
+        seq_len: usize,
+        want: usize,
+    ) -> Result<usize> {
+        let avail = self.available_step_batches(family, seq_len);
+        if avail.is_empty() {
+            return Err(anyhow!(
+                "no step artifacts for {family} at seq_len {seq_len}"
+            ));
+        }
+        Ok(avail
+            .iter()
+            .copied()
+            .find(|&b| b >= want)
+            .unwrap_or(*avail.last().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert!(m.artifacts.contains_key("ddlm_step_b8_l64"));
+        let a = m.artifact("ddlm_step_b8_l64").unwrap();
+        // jax prunes unused params at lowering, so kept inputs <= full set
+        let n_params = m.params_of("ddlm").unwrap().len();
+        assert!(a.inputs.len() > 4 && a.inputs.len() <= n_params + 4);
+        assert_eq!(a.output_index("entropy").unwrap(), 4);
+        // x_t input: [8, 64, 64] f32
+        let xi = a.input_index("x_t").unwrap();
+        assert_eq!(a.inputs[xi].shape, vec![8, 64, 64]);
+        assert_eq!(a.inputs[xi].dtype, Dtype::F32);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime layer: manifest loading, host tensors, executable cache.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, ExecStats, Runtime};
+pub use manifest::{ArtifactSpec, Dtype, Manifest};
+pub use tensor::Tensor;

@@ -1,0 +1,178 @@
+//! Host tensor type + conversion to/from XLA literals.
+//!
+//! The runtime's lingua franca: every artifact input/output crosses the
+//! PJRT boundary as a `Tensor`.  Only f32 and i32 exist in this stack
+//! (bf16 is a real-TPU concern; the CPU artifacts are all f32).
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(if shape.is_empty() { 1 } else { 0 })
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; numel(shape)])
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(&[], vec![v])
+    }
+
+    pub fn full_f32(shape: &[usize], v: f32) -> Tensor {
+        Tensor::f32(shape, vec![v; numel(shape)])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Scalar read (any rank-0 or single-element tensor).
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("item_f32 on tensor with {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    // ------------------------------------------------------- xla bridge
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Tensor::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )
+                .context("f32 literal")
+            }
+            Tensor::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )
+                .context("i32 literal")
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("array shape")?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().context("to_vec f32")?;
+                Ok(Tensor::f32(&dims, data))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().context("to_vec i32")?;
+                Ok(Tensor::i32(&dims, data))
+            }
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(&[4], vec![-1, 0, 7, 42]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_f32(3.5);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.item_f32().unwrap(), 3.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Generation layer: noise schedules + the batched step-session state
+//! machine the coordinator and the experiment harness both drive.
+
+pub mod schedule;
+pub mod session;
+
+pub use schedule::{Family, Schedule};
+pub use session::{Session, Slot};

@@ -1,0 +1,151 @@
+//! Noise schedules / timestamp arrays per family.
+//!
+//! The schedule is *host-side state*: the paper's whole point is that the
+//! generation loop must be haltable per step, so the rust coordinator owns
+//! the timestamp array and feeds (t_cur, t_next) pairs into single-step
+//! artifacts (per batch slot — see the step kernels).
+
+/// Which diffusion parameterisation a family samples under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// variance-exploding PF-ODE (CDCD / the paper's DDLM), Euler sampler
+    Ddlm,
+    /// variance-preserving simplex diffusion, "Simplex" sampler
+    Ssd,
+    /// variance-preserving embedding diffusion, DDPM ancestral sampler
+    Plaid,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Ddlm => "ddlm",
+            Family::Ssd => "ssd",
+            Family::Plaid => "plaid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "ddlm" => Some(Family::Ddlm),
+            "ssd" => Some(Family::Ssd),
+            "plaid" => Some(Family::Plaid),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Family; 3] {
+        [Family::Ddlm, Family::Ssd, Family::Plaid]
+    }
+}
+
+/// Timestamp array for `n_steps` generation steps.  Index i holds the time
+/// fed as `t_cur` at step i; index n_steps is the terminal time.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub family: Family,
+    pub times: Vec<f32>,
+}
+
+impl Schedule {
+    /// Build the standard schedule for a family.
+    ///
+    /// * DDLM: geometric (log-uniform) from `t_max` down to `t_min`
+    ///   (Karras-style for VE diffusion).
+    /// * SSD / Plaid: tau linear from ~0 (max noise) up to 1 (clean);
+    ///   the models map tau -> cosine alpha-bar internally.
+    pub fn new(family: Family, n_steps: usize, t_max: f32, t_min: f32) -> Schedule {
+        assert!(n_steps >= 1);
+        let times = match family {
+            Family::Ddlm => {
+                let ratio = (t_min / t_max).max(1e-6) as f64;
+                (0..=n_steps)
+                    .map(|i| {
+                        let f = i as f64 / n_steps as f64;
+                        (t_max as f64 * ratio.powf(f)) as f32
+                    })
+                    .collect()
+            }
+            Family::Ssd | Family::Plaid => (0..=n_steps)
+                .map(|i| {
+                    // tau in [tau0, 1]; tau0 > 0 keeps abar_cur strictly
+                    // inside (0,1) for the DDPM coefficients
+                    let tau0 = 1e-3;
+                    tau0 + (1.0 - tau0) * (i as f32 / n_steps as f32)
+                })
+                .collect(),
+        };
+        Schedule { family, times }
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.times.len() - 1
+    }
+
+    /// (t_cur, t_next) pair for step index i.
+    pub fn pair(&self, i: usize) -> (f32, f32) {
+        (self.times[i], self.times[i + 1])
+    }
+
+    /// Initial state scale for the family (multiplied by the caller's
+    /// noise-scale knob, paper Fig 3 / Table 1).
+    pub fn init_sigma(&self) -> f32 {
+        match self.family {
+            // X(t_max) ~ N(0, t_max^2 I)
+            Family::Ddlm => self.times[0],
+            // simplex logit space: K * sqrt(1 - abar(tau0)) ~ K
+            Family::Ssd => 1.0,
+            // VP embedding space: unit gaussian at tau ~ 0
+            Family::Plaid => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddlm_schedule_is_decreasing_geometric() {
+        let s = Schedule::new(Family::Ddlm, 100, 10.0, 0.05);
+        assert_eq!(s.times.len(), 101);
+        assert!((s.times[0] - 10.0).abs() < 1e-5);
+        assert!((s.times[100] - 0.05).abs() < 1e-4);
+        for w in s.times.windows(2) {
+            assert!(w[1] < w[0], "must decrease");
+        }
+        // geometric: ratio roughly constant
+        let r0 = s.times[1] / s.times[0];
+        let r50 = s.times[51] / s.times[50];
+        assert!((r0 - r50).abs() < 1e-4);
+    }
+
+    #[test]
+    fn vp_schedule_is_increasing_to_one() {
+        for fam in [Family::Ssd, Family::Plaid] {
+            let s = Schedule::new(fam, 50, 10.0, 0.05);
+            assert!(s.times[0] > 0.0 && s.times[0] < 0.01);
+            assert!((s.times[50] - 1.0).abs() < 1e-6);
+            for w in s.times.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn pair_indexing() {
+        let s = Schedule::new(Family::Ddlm, 10, 10.0, 0.1);
+        let (a, b) = s.pair(0);
+        assert_eq!(a, s.times[0]);
+        assert_eq!(b, s.times[1]);
+        assert_eq!(s.n_steps(), 10);
+    }
+
+    #[test]
+    fn family_parse_roundtrip() {
+        for f in Family::all() {
+            assert_eq!(Family::parse(f.name()), Some(f));
+        }
+        assert_eq!(Family::parse("gpt"), None);
+    }
+}

@@ -1,0 +1,408 @@
+//! Batched generation session: the state machine around one step artifact.
+//!
+//! A `Session` owns the diffusion state for `B` independent slots and
+//! advances all of them with one device call per step.  Each slot has its
+//! own schedule position, noise stream, and (optional) conditioning
+//! prefix, which is exactly what the coordinator's continuous batcher
+//! needs: a slot whose request halted early is reset and reused while the
+//! other slots keep denoising mid-schedule.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::schedule::{Family, Schedule};
+use crate::halting::StepStats;
+use crate::models::store::ParamStore;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::prng::Prng;
+
+/// Per-slot generation state.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    /// schedule position (next step index to execute)
+    pub step: usize,
+    /// per-slot schedule (requests may ask for different step counts)
+    pub schedule: Schedule,
+    /// slot is occupied and still denoising
+    pub active: bool,
+    /// per-slot noise stream
+    rng: Prng,
+    /// conditioning prefix tokens (Prefix-32 task), clamped every step
+    prefix: Vec<i32>,
+    /// latest argmax tokens (decoded output)
+    pub tokens: Vec<i32>,
+    /// latest step statistics
+    pub last_stats: StepStats,
+}
+
+pub struct Session {
+    pub family: Family,
+    exe: Rc<Executable>,
+    store: Rc<ParamStore>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    /// state row width: L*D (ddlm/plaid) or L*V (ssd)
+    row: usize,
+    /// diffusion state [B, row]
+    x: Vec<f32>,
+    prev_probs: Vec<f32>,
+    prev_tokens: Vec<i32>,
+    pub slots: Vec<Slot>,
+    /// normalised embedding rows [V, D] for prefix clamping
+    emb_n: Vec<f32>,
+    simplex_k: f32,
+    /// input-name for the time tensor ("t2" for ddlm, "tau2" for VP)
+    time_input: &'static str,
+    needs_z: bool,
+    /// latest x0_hat download [B, L*D] (Fig-2 trajectory analysis)
+    last_x0_hat: Vec<f32>,
+    /// persistent device buffers for the (immutable) parameters, uploaded
+    /// once — (input index, buffer); §Perf: params are ~70 % of the
+    /// per-step input bytes and never change during generation
+    param_bufs: Vec<(usize, crate::runtime::client::DeviceTensor)>,
+    /// input indices of the per-step data tensors, in spec order
+    data_idx: Vec<(String, usize)>,
+    /// steps executed (device calls)
+    pub device_calls: u64,
+}
+
+impl Session {
+    /// Create a session bound to `<family>_step_b<batch>_l<seq_len>`.
+    pub fn new(
+        rt: &Runtime,
+        family: Family,
+        store: Rc<ParamStore>,
+        batch: usize,
+        seq_len: usize,
+    ) -> Result<Session> {
+        let name = format!("{}_step_b{batch}_l{seq_len}", family.name());
+        let exe = rt.executable(&name)?;
+        let m = &rt.manifest.model;
+        let (v, d) = (m.vocab, m.d_model);
+        let row = match family {
+            Family::Ssd => seq_len * v,
+            _ => seq_len * d,
+        };
+        // normalised embeddings (CDCD: rows scaled to sqrt(D))
+        let emb = store.get("emb")?.as_f32()?.to_vec();
+        if emb.len() != v * d {
+            bail!("emb shape mismatch");
+        }
+        let target = (d as f32).sqrt();
+        let mut emb_n = emb;
+        for r in 0..v {
+            let row_sl = &mut emb_n[r * d..(r + 1) * d];
+            let n = row_sl.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+            for x in row_sl.iter_mut() {
+                *x *= target / n;
+            }
+        }
+        // upload immutable parameters to persistent device buffers once
+        let mut param_bufs = Vec::new();
+        let mut data_idx = Vec::new();
+        for (i, input) in exe.spec.inputs.iter().enumerate() {
+            if let Some(t) = store.tensors.get(&input.name) {
+                param_bufs.push((i, exe.buffer_from_tensor(t)?));
+            } else {
+                data_idx.push((input.name.clone(), i));
+            }
+        }
+        let default_schedule =
+            Schedule::new(family, 1, m.t_max, m.t_min);
+        let slots = (0..batch)
+            .map(|_| Slot {
+                step: 0,
+                schedule: default_schedule.clone(),
+                active: false,
+                rng: Prng::new(0),
+                prefix: Vec::new(),
+                tokens: vec![0; seq_len],
+                last_stats: StepStats::default(),
+            })
+            .collect();
+        Ok(Session {
+            family,
+            exe,
+            store,
+            batch,
+            seq_len,
+            vocab: v,
+            d_model: d,
+            row,
+            x: vec![0.0; batch * row],
+            prev_probs: vec![1.0 / v as f32; batch * seq_len * v],
+            prev_tokens: vec![0; batch * seq_len],
+            slots,
+            emb_n,
+            simplex_k: m.simplex_k,
+            time_input: match family {
+                Family::Ddlm => "t2",
+                _ => "tau2",
+            },
+            needs_z: !matches!(family, Family::Ddlm),
+            last_x0_hat: vec![0.0; batch * seq_len * d],
+            param_bufs,
+            data_idx,
+            device_calls: 0,
+        })
+    }
+
+    /// Occupy a slot with a fresh request: initialise noise, schedule and
+    /// optional conditioning prefix.
+    pub fn reset_slot(
+        &mut self,
+        slot: usize,
+        seed: u64,
+        n_steps: usize,
+        noise_scale: f32,
+        t_max: f32,
+        t_min: f32,
+        prefix: &[i32],
+    ) {
+        assert!(slot < self.batch);
+        assert!(prefix.len() <= self.seq_len);
+        let schedule = Schedule::new(self.family, n_steps, t_max, t_min);
+        let mut rng = Prng::new(seed).fork("gen-noise");
+        let sigma = schedule.init_sigma() * noise_scale;
+        let (l, v) = (self.seq_len, self.vocab);
+        let base = slot * self.row;
+        match self.family {
+            Family::Ddlm | Family::Plaid => {
+                for i in 0..self.row {
+                    self.x[base + i] = sigma * rng.gaussian() as f32;
+                }
+            }
+            Family::Ssd => {
+                // logit-space init: x = K * z at max noise (abar ~ 0)
+                for i in 0..self.row {
+                    self.x[base + i] =
+                        self.simplex_k * sigma * rng.gaussian() as f32;
+                }
+            }
+        }
+        let pb = slot * l * v;
+        for p in &mut self.prev_probs[pb..pb + l * v] {
+            *p = 1.0 / v as f32;
+        }
+        let tb = slot * l;
+        for t in &mut self.prev_tokens[tb..tb + l] {
+            *t = 0;
+        }
+        for (i, &tok) in prefix.iter().enumerate() {
+            self.prev_tokens[tb + i] = tok;
+        }
+        let s = &mut self.slots[slot];
+        s.step = 0;
+        s.schedule = schedule;
+        s.active = true;
+        s.rng = rng;
+        s.prefix = prefix.to_vec();
+        s.tokens = self.prev_tokens[tb..tb + l].to_vec();
+        s.last_stats = StepStats::default();
+        self.clamp_prefix(slot);
+    }
+
+    /// Mark a slot free (halted / finished / cancelled).
+    pub fn release_slot(&mut self, slot: usize) {
+        self.slots[slot].active = false;
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.slots.iter().any(|s| s.active)
+    }
+
+    /// Overwrite prefix positions with their clean representation —
+    /// replacement conditioning, matching how prefix-masked training kept
+    /// unmasked positions clean at every noise level.
+    fn clamp_prefix(&mut self, slot: usize) {
+        let l = self.seq_len;
+        let (v, d) = (self.vocab, self.d_model);
+        let prefix = self.slots[slot].prefix.clone();
+        let base = slot * self.row;
+        for (pos, &tok) in prefix.iter().enumerate() {
+            let tok = tok.clamp(0, v as i32 - 1) as usize;
+            match self.family {
+                Family::Ddlm | Family::Plaid => {
+                    let dst = base + pos * d;
+                    let src = tok * d;
+                    self.x[dst..dst + d]
+                        .copy_from_slice(&self.emb_n[src..src + d]);
+                }
+                Family::Ssd => {
+                    let dst = base + pos * v;
+                    for (j, xj) in self.x[dst..dst + v].iter_mut().enumerate()
+                    {
+                        *xj = if j == tok {
+                            self.simplex_k
+                        } else {
+                            -self.simplex_k
+                        };
+                    }
+                }
+            }
+        }
+        let _ = l;
+    }
+
+    /// Advance every active slot by one diffusion step (one device call).
+    /// Inactive slots are stepped with neutral times and ignored.
+    /// Returns per-slot stats for slots that were active.
+    pub fn step(&mut self) -> Result<Vec<Option<StepStats>>> {
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        // per-slot (t_cur, t_next)
+        let mut t2 = vec![0.0f32; b * 2];
+        for (i, s) in self.slots.iter().enumerate() {
+            let (c, n) = if s.active && s.step < s.schedule.n_steps() {
+                s.schedule.pair(s.step)
+            } else {
+                // neutral, numerically-safe times for idle slots
+                match self.family {
+                    Family::Ddlm => (1.0, 1.0),
+                    _ => (0.5, 0.5),
+                }
+            };
+            t2[i * 2] = c;
+            t2[i * 2 + 1] = n;
+        }
+
+        let mut data: BTreeMap<String, Tensor> = BTreeMap::new();
+        let x_shape: Vec<usize> = match self.family {
+            Family::Ssd => vec![b, l, v],
+            _ => vec![b, l, self.d_model],
+        };
+        data.insert("x_t".to_string(), Tensor::f32(&x_shape, self.x.clone()));
+        data.insert(
+            "prev_probs".to_string(),
+            Tensor::f32(&[b, l, v], self.prev_probs.clone()),
+        );
+        data.insert(
+            "prev_tokens".to_string(),
+            Tensor::i32(&[b, l], self.prev_tokens.clone()),
+        );
+        data.insert(self.time_input.to_string(), Tensor::f32(&[b, 2], t2));
+        if self.needs_z {
+            let mut z = vec![0.0f32; b * self.row];
+            for (i, s) in self.slots.iter_mut().enumerate() {
+                if s.active {
+                    s.rng.fill_gaussian_f32(
+                        &mut z[i * self.row..(i + 1) * self.row],
+                    );
+                }
+            }
+            data.insert("z".to_string(), Tensor::f32(&x_shape, z));
+        }
+
+        // assemble device buffers: persistent param buffers + fresh data
+        // buffers (only the per-step tensors cross the host boundary)
+        let mut data_bufs = Vec::with_capacity(self.data_idx.len());
+        for (name, i) in &self.data_idx {
+            let t = data
+                .remove(name.as_str())
+                .ok_or_else(|| anyhow::anyhow!("missing data input {name}"))?;
+            data_bufs.push((*i, self.exe.buffer_from_tensor(&t)?));
+        }
+        let n_inputs = self.exe.spec.inputs.len();
+        let mut slots_in: Vec<Option<&xla::PjRtBuffer>> = vec![None; n_inputs];
+        for (i, b) in &self.param_bufs {
+            slots_in[*i] = Some(&b.buf);
+        }
+        for (i, b) in &data_bufs {
+            slots_in[*i] = Some(&b.buf);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = slots_in
+            .into_iter()
+            .map(|o| o.expect("input gap"))
+            .collect();
+        let out_lits = self.exe.run_buffers(&refs).context("step execute")?;
+        let out = self.exe.download(out_lits)?;
+        self.device_calls += 1;
+
+        let spec = &self.exe.spec;
+        let x_next = out[spec.output_index("x_next")?].as_f32()?;
+        let probs = out[spec.output_index("probs")?].as_f32()?;
+        let tokens = out[spec.output_index("tokens")?].as_i32()?;
+        let entropy = out[spec.output_index("entropy")?].as_f32()?;
+        let kl = out[spec.output_index("kl")?].as_f32()?;
+        let switches = out[spec.output_index("switches")?].as_f32()?;
+        let norm_x0 = out[spec.output_index("norm_x0")?].as_f32()?;
+        let norm_x = out[spec.output_index("norm_x")?].as_f32()?;
+        let x0_hat = out[spec.output_index("x0_hat")?].as_f32()?;
+
+        let mut results = Vec::with_capacity(b);
+        for i in 0..b {
+            if !self.slots[i].active {
+                results.push(None);
+                continue;
+            }
+            // commit state for this slot
+            let xb = i * self.row;
+            self.x[xb..xb + self.row]
+                .copy_from_slice(&x_next[xb..xb + self.row]);
+            let pb = i * l * v;
+            self.prev_probs[pb..pb + l * v]
+                .copy_from_slice(&probs[pb..pb + l * v]);
+            let tb = i * l;
+            self.prev_tokens[tb..tb + l]
+                .copy_from_slice(&tokens[tb..tb + l]);
+            let w = l * self.d_model;
+            self.last_x0_hat[i * w..(i + 1) * w]
+                .copy_from_slice(&x0_hat[i * w..(i + 1) * w]);
+            let stats = StepStats {
+                entropy: entropy[i],
+                kl: kl[i],
+                switches: switches[i],
+                norm_x0: norm_x0[i],
+                norm_x: norm_x[i],
+            };
+            let slot = &mut self.slots[i];
+            slot.tokens.copy_from_slice(&tokens[tb..tb + l]);
+            slot.last_stats = stats;
+            slot.step += 1;
+            results.push(Some(stats));
+        }
+        // re-clamp prefixes after the state update
+        for i in 0..b {
+            if self.slots[i].active && !self.slots[i].prefix.is_empty() {
+                self.clamp_prefix(i);
+            }
+        }
+        Ok(results)
+    }
+
+    /// Current diffusion-state row of a slot (L*D for ddlm/plaid, L*V for
+    /// ssd) — used by the Fig-2 trajectory analysis.
+    pub fn slot_x(&self, slot: usize) -> &[f32] {
+        &self.x[slot * self.row..(slot + 1) * self.row]
+    }
+
+    /// Latest x0_hat row of a slot (always L*D) — Fig-2 score analysis.
+    pub fn slot_x0_hat(&self, slot: usize) -> &[f32] {
+        let w = self.seq_len * self.d_model;
+        &self.last_x0_hat[slot * w..(slot + 1) * w]
+    }
+
+    /// Decoded tokens of a slot (prefix positions forced to the prefix).
+    pub fn slot_output(&self, slot: usize) -> Vec<i32> {
+        let s = &self.slots[slot];
+        let mut out = s.tokens.clone();
+        for (i, &t) in s.prefix.iter().enumerate() {
+            out[i] = t;
+        }
+        out
+    }
+
+    /// True when a slot has exhausted its schedule.
+    pub fn slot_exhausted(&self, slot: usize) -> bool {
+        let s = &self.slots[slot];
+        s.step >= s.schedule.n_steps()
+    }
+
+    /// Hot-loop accounting (per-call stats live on the executable).
+    pub fn exec_stats(&self) -> crate::runtime::ExecStats {
+        self.exe.stats()
+    }
+}

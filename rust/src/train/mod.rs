@@ -1,0 +1,243 @@
+//! Training driver: runs the `<family>_train_b16_l64` artifacts (Adam is
+//! fused into the artifact) with rust owning the loop, data pipeline,
+//! learning-rate schedule, loss log and checkpoints.
+//!
+//! This is how every model in the repo is trained — the DDLM (with its
+//! masking × t_max × time-warping ablation grid, Tables 4-7), the SSD and
+//! Plaid baselines, and the AR evaluator that computes AR-NLL.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::corpus::dataset::{Dataset, Masking};
+use crate::log_info;
+use crate::models::store::{OptState, ParamStore};
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::sampler::Family;
+use crate::util::prng::Prng;
+
+/// Which model a trainer drives ("ar" is the evaluator, not a DLM family).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainTarget {
+    Dlm(Family),
+    Ar,
+}
+
+impl TrainTarget {
+    pub fn family_name(&self) -> &'static str {
+        match self {
+            TrainTarget::Dlm(f) => f.name(),
+            TrainTarget::Ar => "ar",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub target: TrainTarget,
+    pub steps: usize,
+    pub base_lr: f32,
+    pub warmup: usize,
+    pub masking: Masking,
+    /// DDLM ablation knobs (ignored by other targets)
+    pub t_max: f32,
+    pub time_warping: bool,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn new(target: TrainTarget, steps: usize) -> TrainConfig {
+        TrainConfig {
+            target,
+            steps,
+            base_lr: 3e-3,
+            warmup: 50,
+            masking: Masking::Mlm,
+            t_max: 10.0,
+            time_warping: true,
+            seed: 42,
+            log_every: 50,
+        }
+    }
+
+    /// Cosine schedule with linear warmup (paper Table 2 uses the same
+    /// family of schedule at its own scale).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step < self.warmup {
+            return self.base_lr * (step + 1) as f32 / self.warmup as f32;
+        }
+        let p = (step - self.warmup) as f32
+            / (self.steps.saturating_sub(self.warmup)).max(1) as f32;
+        0.5 * self.base_lr * (1.0 + (std::f32::consts::PI * p).cos())
+    }
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    exe: Rc<Executable>,
+    pub store: ParamStore,
+    opt: OptState,
+    dataset: Dataset,
+    rng: Prng,
+    pub step: usize,
+    pub losses: Vec<f32>,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    d_model: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let m = &rt.manifest.model;
+        let fam = cfg.target.family_name();
+        let name = format!("{fam}_train_b16_l{}", m.seq_len);
+        let exe = rt.executable(&name)?;
+        let store = ParamStore::load_init(
+            rt.manifest.dir.to_str().unwrap(),
+            fam,
+        )?;
+        let opt = OptState::zeros_like(&store);
+        let dataset = Dataset::new(m.vocab, m.seq_len);
+        let rng = Prng::new(cfg.seed).fork("train");
+        Ok(Trainer {
+            batch: exe.spec.batch,
+            seq_len: m.seq_len,
+            vocab: m.vocab,
+            d_model: m.d_model,
+            cfg,
+            exe,
+            store,
+            opt,
+            dataset,
+            rng,
+            step: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Resume from a checkpoint (optimizer state restarts at zero — fine
+    /// for the experiment scales here; documented simplification).
+    pub fn with_params(mut self, store: ParamStore) -> Trainer {
+        self.opt = OptState::zeros_like(&store);
+        self.store = store;
+        self
+    }
+
+    /// One training step: sample a batch, run the artifact, absorb the new
+    /// parameters/optimizer state.  Returns the step loss (CE, nats).
+    pub fn train_step(&mut self) -> Result<f32> {
+        let (b, l) = (self.batch, self.seq_len);
+        let batch = self.dataset.train_batch(&mut self.rng, b, self.cfg.masking);
+        let lr = self.cfg.lr_at(self.step);
+
+        let mut data: BTreeMap<String, Tensor> = BTreeMap::new();
+        // optimizer state + counter
+        for (k, t) in &self.opt.m {
+            data.insert(format!("m.{k}"), t.clone());
+        }
+        for (k, t) in &self.opt.v {
+            data.insert(format!("v.{k}"), t.clone());
+        }
+        data.insert("count".into(), Tensor::scalar_f32(self.opt.count));
+        data.insert("tokens".into(), Tensor::i32(&[b, l], batch.tokens));
+        data.insert("lr".into(), Tensor::scalar_f32(lr));
+
+        match self.cfg.target {
+            TrainTarget::Ar => {}
+            TrainTarget::Dlm(fam) => {
+                data.insert("mask".into(), Tensor::f32(&[b, l], batch.mask));
+                let u: Vec<f32> =
+                    (0..b).map(|_| self.rng.uniform_f32()).collect();
+                data.insert("u".into(), Tensor::f32(&[b], u));
+                match fam {
+                    Family::Ddlm => {
+                        let eps =
+                            self.rng.gaussian_vec_f32(b * l * self.d_model);
+                        data.insert(
+                            "eps".into(),
+                            Tensor::f32(&[b, l, self.d_model], eps),
+                        );
+                        data.insert(
+                            "t_max".into(),
+                            Tensor::scalar_f32(self.cfg.t_max),
+                        );
+                        data.insert(
+                            "tw_flag".into(),
+                            Tensor::scalar_f32(if self.cfg.time_warping {
+                                1.0
+                            } else {
+                                0.0
+                            }),
+                        );
+                    }
+                    Family::Ssd => {
+                        let z = self.rng.gaussian_vec_f32(b * l * self.vocab);
+                        data.insert(
+                            "z".into(),
+                            Tensor::f32(&[b, l, self.vocab], z),
+                        );
+                    }
+                    Family::Plaid => {
+                        let eps =
+                            self.rng.gaussian_vec_f32(b * l * self.d_model);
+                        data.insert(
+                            "eps".into(),
+                            Tensor::f32(&[b, l, self.d_model], eps),
+                        );
+                    }
+                }
+            }
+        }
+
+        let inputs = self.store.assemble(&self.exe.spec, data)?;
+        let out = self.exe.run(&inputs).context("train step")?;
+
+        // absorb params + optimizer state
+        let spec = self.exe.spec.clone();
+        self.store.update_from_outputs(&spec, &out)?;
+        for (i, oname) in spec.outputs.iter().enumerate() {
+            if let Some(n) = oname.strip_prefix("m.") {
+                self.opt.m.insert(n.to_string(), out[i].clone());
+            } else if let Some(n) = oname.strip_prefix("v.") {
+                self.opt.v.insert(n.to_string(), out[i].clone());
+            }
+        }
+        self.opt.count =
+            out[spec.output_index("count")?].item_f32()?;
+        let loss = out[spec.output_index("loss")?].item_f32()?;
+        self.step += 1;
+        self.losses.push(loss);
+        if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+            log_info!(
+                "train[{}] step {} loss {:.4} lr {:.2e}",
+                self.cfg.target.family_name(),
+                self.step,
+                loss,
+                self.cfg.lr_at(self.step)
+            );
+        }
+        Ok(loss)
+    }
+
+    /// Run `n` steps; returns the loss trace for those steps.
+    pub fn run(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.train_step()?);
+        }
+        Ok(out)
+    }
+
+    /// Save a checkpoint (parameters only, PBIN).
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        self.store.save(path)
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+}

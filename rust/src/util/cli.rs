@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (no clap in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! which covers the launcher's subcommands (`repro train ... --steps 500`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.usize_or(name, default as usize) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["train", "--steps", "500", "--lr=0.003", "--quiet"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("steps"), Some("500"));
+        assert_eq!(a.f64_or("lr", 0.0), 0.003);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_after_positional() {
+        // NOTE: a bare `--x` followed by a non-flag token is parsed as
+        // `--x <value>` (documented greedy rule); boolean flags therefore
+        // go last or before another `--` token.
+        let a = parse(&["gen", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["gen"]);
+    }
+
+    #[test]
+    fn option_consumes_next_token_only_if_not_flag() {
+        let a = parse(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.get_or("mode", "euler"), "euler");
+    }
+}

@@ -1,0 +1,235 @@
+//! TOML-lite config substrate (no serde/toml crates offline).
+//!
+//! Parses the subset of TOML the launcher's config files use: `[section]`
+//! headers, `key = value` with string / number / bool / inline string
+//! arrays, and `#` comments.  Lookup is by `"section.key"` with typed
+//! accessors and defaults, so experiment configs stay declarative:
+//!
+//! ```toml
+//! [serve]
+//! batch = 8
+//! criterion = "kl"
+//! threshold = 5e-3
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    StrArr(Vec<String>),
+    NumArr(Vec<f64>),
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            cfg.entries.insert(
+                key,
+                parse_value(v.trim())
+                    .map_err(|e| format!("line {}: {}", lineno + 1, e))?,
+            );
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.entries.get(key) {
+            Some(Value::Str(s)) => s,
+            _ => default,
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.entries.get(key) {
+            Some(Value::Num(n)) => *n,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.f64_or(key, default as f64) as usize
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.entries.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// Merge CLI overrides of the form `section.key=value`.
+    pub fn override_kv(&mut self, spec: &str) -> Result<(), String> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("bad override {spec:?}"))?;
+        self.entries
+            .insert(k.trim().to_string(), parse_value(v.trim())?);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .ok_or_else(|| format!("bad string {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or_else(|| format!("bad array {s:?}"))?;
+        let parts: Vec<&str> = inner
+            .split(',')
+            .map(|p| p.trim())
+            .filter(|p| !p.is_empty())
+            .collect();
+        if parts.iter().all(|p| p.starts_with('"')) {
+            let mut out = Vec::new();
+            for p in parts {
+                match parse_value(p)? {
+                    Value::Str(x) => out.push(x),
+                    _ => return Err(format!("mixed array {s:?}")),
+                }
+            }
+            return Ok(Value::StrArr(out));
+        }
+        let mut out = Vec::new();
+        for p in parts {
+            out.push(
+                p.parse::<f64>()
+                    .map_err(|_| format!("bad number {p:?} in array"))?,
+            );
+        }
+        return Ok(Value::NumArr(out));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("unparseable value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+title = "repro"     # trailing comment
+[serve]
+batch = 8
+threshold = 5e-3
+adaptive = true
+criteria = ["kl", "entropy"]
+steps = [50, 200, 1000]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("title", ""), "repro");
+        assert_eq!(c.usize_or("serve.batch", 0), 8);
+        assert_eq!(c.f64_or("serve.threshold", 0.0), 5e-3);
+        assert!(c.bool_or("serve.adaptive", false));
+        assert_eq!(
+            c.get("serve.criteria"),
+            Some(&Value::StrArr(vec!["kl".into(), "entropy".into()]))
+        );
+        assert_eq!(
+            c.get("serve.steps"),
+            Some(&Value::NumArr(vec![50.0, 200.0, 1000.0]))
+        );
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.override_kv("serve.batch=16").unwrap();
+        c.override_kv("serve.criterion=\"patience\"").unwrap();
+        assert_eq!(c.usize_or("serve.batch", 0), 16);
+        assert_eq!(c.str_or("serve.criterion", ""), "patience");
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 3), 3);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("k", ""), "a#b");
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-rolled substrates the offline image forces us to own (DESIGN.md §8):
+//! PRNG, JSON, TOML-lite config, CLI parsing, logging, table rendering.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod table;

@@ -1,0 +1,110 @@
+//! Integration: the engine's continuous batcher end-to-end — admission,
+//! early-exit slot recycling, metrics accounting.
+
+use repro::coordinator::{start, EngineConfig, GenRequest};
+use repro::halting::Criterion;
+use repro::sampler::Family;
+use repro::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+#[test]
+fn engine_serves_mixed_criteria_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.batch = 4;
+    let (engine, join) = start(cfg);
+
+    // 10 requests, more than slots: forces queueing + recycling.
+    // half halt at fixed step 5, half run the full 12 steps
+    let mut rxs = Vec::new();
+    for i in 0..10u64 {
+        let mut req = GenRequest::new(i, 12);
+        if i % 2 == 0 {
+            req.criterion = Criterion::Fixed { step: 5 };
+        }
+        rxs.push((i, engine.submit(req)));
+    }
+    let mut early = 0;
+    let mut full = 0;
+    for (i, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, i);
+        assert_eq!(resp.tokens.len(), 64);
+        if i % 2 == 0 {
+            assert_eq!(resp.steps_executed, 5, "id {i}");
+            assert!(resp.halted_early);
+            early += 1;
+        } else {
+            assert_eq!(resp.steps_executed, 12, "id {i}");
+            assert!(!resp.halted_early);
+            full += 1;
+        }
+    }
+    assert_eq!((early, full), (5, 5));
+
+    let m = engine.metrics().unwrap();
+    assert_eq!(
+        m.get("requests_completed").unwrap().as_f64().unwrap(),
+        10.0
+    );
+    // 5 requests saved 7 steps each
+    assert_eq!(m.get("steps_saved").unwrap().as_f64().unwrap(), 35.0);
+    assert_eq!(
+        m.get("steps_executed").unwrap().as_f64().unwrap(),
+        5.0 * 5.0 + 5.0 * 12.0
+    );
+    // continuous batching must beat 10 sequential runs: with batch=4 and
+    // 85 total steps, device calls must be well under 85
+    let calls = m.get("device_calls").unwrap().as_f64().unwrap();
+    assert!(calls < 60.0, "device_calls={calls}");
+
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn engine_handles_prefix_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ssd);
+    cfg.batch = 2;
+    let (engine, join) = start(cfg);
+    let mut req = GenRequest::new(1, 6);
+    req.prefix = (5..37).collect();
+    let resp = engine.generate(req).unwrap();
+    assert_eq!(&resp.tokens[..32], (5..37).collect::<Vec<i32>>().as_slice());
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn engine_metrics_json_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, join) = start(cfg);
+    let resp = engine
+        .generate(GenRequest::new(1, 3))
+        .unwrap();
+    assert_eq!(resp.steps_budget, 3);
+    let m = engine.metrics().unwrap();
+    for key in [
+        "requests_submitted",
+        "requests_completed",
+        "steps_executed",
+        "steps_saved",
+        "step_saving_ratio",
+        "latency_p95_ms",
+        "throughput_rps",
+    ] {
+        assert!(m.get(key).is_some(), "missing {key}");
+    }
+    assert!(matches!(m.get("latency_mean_ms"), Some(Json::Num(n)) if *n > 0.0));
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}

@@ -1,0 +1,151 @@
+//! Integration: the generation session + halting criteria over real
+//! artifacts — slot isolation, prefix clamping, criterion firing.
+
+use std::rc::Rc;
+
+use repro::halting::{Criterion, CriterionState};
+use repro::models::store::ParamStore;
+use repro::runtime::Runtime;
+use repro::sampler::{Family, Session};
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+#[test]
+fn slots_are_isolated() {
+    // the same request must produce the same stats trace regardless of
+    // what occupies the other batch slots — this validates the per-slot
+    // timestep design that continuous batching depends on
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(&dir, "ddlm").unwrap());
+    let m = rt.manifest.model.clone();
+
+    let mut s1 = Session::new(&rt, Family::Ddlm, store.clone(), 8, m.seq_len)
+        .unwrap();
+    // run A: request alone in slot 0
+    s1.reset_slot(0, 777, 10, 1.0, m.t_max, m.t_min, &[]);
+    let mut trace_alone = Vec::new();
+    for _ in 0..10 {
+        let st = s1.step().unwrap();
+        trace_alone.push(st[0].unwrap());
+    }
+    let tokens_alone = s1.slot_output(0);
+
+    // run B: same request in slot 0, plus different requests elsewhere
+    let mut s2 = Session::new(&rt, Family::Ddlm, store, 8, m.seq_len).unwrap();
+    s2.reset_slot(0, 777, 10, 1.0, m.t_max, m.t_min, &[]);
+    for slot in 1..8 {
+        s2.reset_slot(slot, 1000 + slot as u64, 7, 0.8, m.t_max, m.t_min, &[]);
+    }
+    let mut trace_crowded = Vec::new();
+    for _ in 0..10 {
+        let st = s2.step().unwrap();
+        trace_crowded.push(st[0].unwrap());
+    }
+    let tokens_crowded = s2.slot_output(0);
+
+    assert_eq!(tokens_alone, tokens_crowded, "slot content leaked");
+    for (a, b) in trace_alone.iter().zip(&trace_crowded) {
+        assert!(
+            (a.entropy - b.entropy).abs() < 1e-4,
+            "entropy diverged: {} vs {}",
+            a.entropy,
+            b.entropy
+        );
+        assert_eq!(a.switches, b.switches);
+    }
+}
+
+#[test]
+fn prefix_is_preserved_in_output() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(&dir, "ddlm").unwrap());
+    let m = rt.manifest.model.clone();
+    let mut s =
+        Session::new(&rt, Family::Ddlm, store, 1, m.seq_len).unwrap();
+    let prefix: Vec<i32> = (10..42).collect(); // 32-token prefix
+    s.reset_slot(0, 5, 8, 1.0, m.t_max, m.t_min, &prefix);
+    for _ in 0..8 {
+        s.step().unwrap();
+    }
+    let out = s.slot_output(0);
+    assert_eq!(&out[..32], prefix.as_slice());
+    assert_eq!(out.len(), m.seq_len);
+}
+
+#[test]
+fn mid_flight_slot_recycling_works() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(&dir, "ssd").unwrap());
+    let m = rt.manifest.model.clone();
+    let mut s =
+        Session::new(&rt, Family::Ssd, store, 8, m.seq_len).unwrap();
+    s.reset_slot(0, 1, 12, 1.0, m.t_max, m.t_min, &[]);
+    s.reset_slot(1, 2, 12, 1.0, m.t_max, m.t_min, &[]);
+    for _ in 0..5 {
+        s.step().unwrap();
+    }
+    // slot 0 "halts" and is recycled with a new request mid-flight of slot 1
+    s.release_slot(0);
+    s.reset_slot(0, 3, 12, 1.0, m.t_max, m.t_min, &[]);
+    assert_eq!(s.slots[0].step, 0);
+    assert_eq!(s.slots[1].step, 5);
+    for _ in 0..7 {
+        s.step().unwrap();
+    }
+    assert!(s.slot_exhausted(1));
+    assert!(!s.slot_exhausted(0)); // new request still has 5 steps to go
+    assert_eq!(s.slots[0].step, 7);
+}
+
+#[test]
+fn fixed_criterion_halts_generation_loop() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(&dir, "plaid").unwrap());
+    let m = rt.manifest.model.clone();
+    let mut s =
+        Session::new(&rt, Family::Plaid, store, 1, m.seq_len).unwrap();
+    s.reset_slot(0, 9, 50, 1.0, m.t_max, m.t_min, &[]);
+    let crit = Criterion::Fixed { step: 6 };
+    let mut cs = CriterionState::default();
+    let mut executed = 0;
+    for _ in 0..50 {
+        let st = s.step().unwrap()[0].unwrap();
+        executed += 1;
+        if cs.observe(&crit, &st) {
+            break;
+        }
+    }
+    assert_eq!(executed, 6);
+}
+
+#[test]
+fn all_families_generate_finite_sequences() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.manifest.model.clone();
+    for fam in Family::all() {
+        let store =
+            Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
+        let mut s = Session::new(&rt, fam, store, 1, m.seq_len).unwrap();
+        s.reset_slot(0, 11, 15, 1.0, m.t_max, m.t_min, &[]);
+        let mut last = None;
+        for _ in 0..15 {
+            last = s.step().unwrap()[0];
+        }
+        let st = last.unwrap();
+        assert!(st.entropy.is_finite(), "{fam:?}");
+        assert!(st.norm_x.is_finite() && st.norm_x > 0.0, "{fam:?}");
+        let out = s.slot_output(0);
+        assert!(out.iter().all(|&t| t >= 0 && t < m.vocab as i32));
+    }
+}

@@ -1,0 +1,96 @@
+//! Integration: load real artifacts, execute a DDLM step and an AR-NLL
+//! scoring pass end-to-end through the PJRT CPU client.
+
+use std::collections::BTreeMap;
+
+use repro::models::store::ParamStore;
+use repro::runtime::{Runtime, Tensor};
+use repro::util::prng::Prng;
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+#[test]
+fn ddlm_step_executes_and_stats_are_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.executable("ddlm_step_b1_l64").unwrap();
+    let m = &rt.manifest.model;
+    let (b, l, v, d) = (1usize, m.seq_len, m.vocab, m.d_model);
+    let store = ParamStore::load_init(&dir, "ddlm").unwrap();
+
+    let mut rng = Prng::new(0);
+    let t_max = m.t_max;
+    let mut x = rng.gaussian_vec_f32(b * l * d);
+    for xi in &mut x {
+        *xi *= t_max;
+    }
+    let x_t = Tensor::f32(&[b, l, d], x);
+    let mut data = BTreeMap::new();
+    data.insert("x_t".to_string(), x_t.clone());
+    data.insert("prev_probs".to_string(), Tensor::full_f32(&[b, l, v], 1.0 / v as f32));
+    data.insert("prev_tokens".to_string(), Tensor::i32(&[b, l], vec![0; b * l]));
+    data.insert(
+        "t2".to_string(),
+        Tensor::f32(&[b, 2], vec![t_max, t_max * 0.95]),
+    );
+    let inputs = store.assemble(&exe.spec, data.clone()).unwrap();
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 9);
+
+    // probs sum to 1 per position
+    let probs = out[exe.spec.output_index("probs").unwrap()].as_f32().unwrap();
+    let s: f32 = probs[..v].iter().sum();
+    assert!((s - 1.0).abs() < 1e-3, "prob sum {s}");
+    // entropy in [0, ln V]
+    let ent =
+        out[exe.spec.output_index("entropy").unwrap()].as_f32().unwrap()[0];
+    assert!(ent >= 0.0 && ent <= (v as f32).ln() + 1e-3, "entropy {ent}");
+    // switches bounded by L
+    let sw =
+        out[exe.spec.output_index("switches").unwrap()].as_f32().unwrap()[0];
+    assert!((0.0..=l as f32).contains(&sw));
+    // x_next finite
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+    // a second call with identical inputs is bit-deterministic
+    let inputs2 = store.assemble(&exe.spec, data).unwrap();
+    let out2 = exe.run(&inputs2).unwrap();
+    assert_eq!(out[0], out2[0]);
+}
+
+#[test]
+fn ar_nll_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.executable("ar_nll_b1_l64").unwrap();
+    let m = &rt.manifest.model;
+    let store = ParamStore::load_init(&dir, "ar").unwrap();
+    let mut data = BTreeMap::new();
+    data.insert("tokens".to_string(), Tensor::i32(&[1, m.seq_len], vec![5; m.seq_len]));
+    data.insert("score_mask".to_string(), Tensor::full_f32(&[1, m.seq_len], 1.0));
+    let inputs = store.assemble(&exe.spec, data).unwrap();
+    let out = exe.run(&inputs).unwrap();
+    let nll = out[0].as_f32().unwrap()[0];
+    // untrained model on a constant sequence: nll ~ ln(V) ballpark
+    assert!(
+        nll.is_finite() && nll > 0.0 && nll < 3.0 * (m.vocab as f32).ln(),
+        "nll={nll}"
+    );
+}
+
+#[test]
+fn all_manifest_artifacts_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+    assert!(names.len() >= 14, "expected full inventory, got {names:?}");
+    for n in names {
+        rt.executable(&n).unwrap_or_else(|e| panic!("compile {n}: {e}"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Integration: TCP JSON-lines server round-trips over a live engine.
+
+use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
+use repro::halting::Criterion;
+use repro::sampler::Family;
+use repro::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+#[test]
+fn server_roundtrip_and_metrics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.batch = 2;
+    let (engine, _join) = start(cfg);
+    let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+
+    let mut client = Client::connect(&server.addr).unwrap();
+    let mut req = GenRequest::new(42, 5);
+    req.criterion = Criterion::Fixed { step: 3 };
+    let resp = client.generate(&req).unwrap();
+    assert_eq!(resp.id, 42);
+    assert_eq!(resp.steps_executed, 3);
+    assert!(resp.halted_early);
+    assert_eq!(resp.tokens.len(), 64);
+
+    let m = client.metrics().unwrap();
+    assert!(
+        m.get("requests_completed").unwrap().as_f64().unwrap() >= 1.0
+    );
+
+    // concurrent clients
+    let addr = server.addr.clone();
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let r = c.generate(&GenRequest::new(100 + i, 4)).unwrap();
+                assert_eq!(r.id, 100 + i);
+                r.steps_executed
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 4);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn server_rejects_malformed_lines() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, _join) = start(cfg);
+    let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let r = client.roundtrip(&Json::parse("{\"junk\": 1}").unwrap()).unwrap();
+    assert!(r.get("error").is_some());
+
+    // and the connection still works afterwards
+    let ok = client.generate(&GenRequest::new(1, 2)).unwrap();
+    assert_eq!(ok.steps_executed, 2);
+    engine.shutdown();
+}

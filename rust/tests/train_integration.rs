@@ -1,0 +1,85 @@
+//! Integration: the training artifacts reduce loss through the rust
+//! training driver (every family + the AR evaluator).
+
+use repro::runtime::Runtime;
+use repro::sampler::Family;
+use repro::train::{TrainConfig, TrainTarget, Trainer};
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+#[test]
+fn ar_training_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = TrainConfig::new(TrainTarget::Ar, 60);
+    cfg.log_every = 0;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let losses = tr.run(60).unwrap();
+    let head = mean(&losses[..10]);
+    let tail = mean(&losses[50..]);
+    assert!(
+        tail < head - 0.3,
+        "AR loss did not fall: head {head:.3} tail {tail:.3}"
+    );
+    // ln(512) ~ 6.24: training must have moved well below uniform
+    assert!(tail < 6.0, "tail {tail}");
+}
+
+#[test]
+fn ddlm_training_reduces_loss_and_checkpoints() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = TrainConfig::new(TrainTarget::Dlm(Family::Ddlm), 60);
+    cfg.log_every = 0;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let losses = tr.run(60).unwrap();
+    let head = mean(&losses[..10]);
+    let tail = mean(&losses[50..]);
+    assert!(
+        tail < head - 0.2,
+        "DDLM loss did not fall: head {head:.3} tail {tail:.3}"
+    );
+    // checkpoint round-trip
+    let ckpt = std::env::temp_dir().join("ddlm_test_ckpt.pbin");
+    tr.save_checkpoint(ckpt.to_str().unwrap()).unwrap();
+    let re = repro::models::store::ParamStore::load(&ckpt, "ddlm").unwrap();
+    assert_eq!(re.n_params(), tr.store.n_params());
+}
+
+#[test]
+fn ssd_and_plaid_train_steps_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    for fam in [Family::Ssd, Family::Plaid] {
+        let mut cfg = TrainConfig::new(TrainTarget::Dlm(fam), 20);
+        cfg.log_every = 0;
+        let mut tr = Trainer::new(&rt, cfg).unwrap();
+        let losses = tr.run(20).unwrap();
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            mean(&losses[15..]) < mean(&losses[..5]),
+            "{fam:?} loss should trend down: {losses:?}"
+        );
+    }
+}
+
+#[test]
+fn lr_schedule_shape() {
+    let cfg = TrainConfig::new(TrainTarget::Ar, 100);
+    // warmup rises
+    assert!(cfg.lr_at(0) < cfg.lr_at(cfg.warmup - 1));
+    // cosine decays to ~0 at the end
+    assert!(cfg.lr_at(99) < 0.1 * cfg.base_lr);
+    // peak at warmup boundary
+    assert!((cfg.lr_at(cfg.warmup) - cfg.base_lr).abs() < 0.1 * cfg.base_lr);
+}
