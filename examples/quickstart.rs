@@ -9,7 +9,7 @@
 use std::rc::Rc;
 
 use repro::corpus::dataset::Dataset;
-use repro::halting::{Criterion, CriterionState};
+use repro::halting::{HaltPolicy, Kl};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
 use repro::sampler::{Family, Session};
@@ -42,9 +42,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 3. step until every slot's KL criterion fires (Algorithm 3)
-    let crit = Criterion::Kl { threshold: 2e-4, min_steps: n_steps / 4 };
-    let mut states = vec![CriterionState::default(); batch];
+    // 3. step until every slot's KL policy fires (Algorithm 3)
+    let mut policies: Vec<Kl> =
+        (0..batch).map(|_| Kl::new(2e-4, n_steps / 4)).collect();
     let mut exits = vec![n_steps; batch];
     for step in 0..n_steps {
         let stats = session.step()?;
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
                 continue;
             }
             if let Some(st) = stats[slot] {
-                if states[slot].observe(&crit, &st) {
+                if policies[slot].observe(step, &st).halted() {
                     exits[slot] = step + 1;
                     session.release_slot(slot);
                 } else {

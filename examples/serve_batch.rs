@@ -7,7 +7,7 @@
 
 use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
 use repro::corpus::dataset::Dataset;
-use repro::halting::Criterion;
+use repro::halting::{parse_policy, BoxedPolicy};
 use repro::sampler::Family;
 use repro::util::cli::Args;
 use repro::util::json::Json;
@@ -16,7 +16,7 @@ fn fire(
     addr: &str,
     n: usize,
     n_steps: usize,
-    criterion: Criterion,
+    policy: &BoxedPolicy,
     prompts: &[Vec<i32>],
 ) -> anyhow::Result<(f64, f64, f64)> {
     // several client threads, like a real request mix
@@ -25,13 +25,14 @@ fn fire(
     for c in 0..4usize {
         let addr = addr.to_string();
         let prompts = prompts.to_vec();
+        let policy = policy.clone();
         handles.push(std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
             let mut client = Client::connect(&addr)?;
             let (mut lat, mut steps) = (0.0, 0.0);
             for i in (c..n).step_by(4) {
                 let mut req = GenRequest::new(i as u64, n_steps);
                 req.prefix = prompts[i % prompts.len()][..32].to_vec();
-                req.criterion = criterion;
+                req.policy = policy.clone();
                 req.seed = 9000 + i as u64;
                 let resp = client.generate(&req)?;
                 lat += resp.latency_ms;
@@ -70,12 +71,14 @@ fn main() -> anyhow::Result<()> {
     let prompts = ds.val_prompts(3, 8);
 
     println!("\n-- baseline: no halting, {n} requests x {n_steps} steps --");
-    let (w0, l0, s0) = fire(&server.addr, n, n_steps, Criterion::None, &prompts)?;
+    let none = parse_policy("none").unwrap();
+    let (w0, l0, s0) = fire(&server.addr, n, n_steps, &none, &prompts)?;
     println!("wall {w0:.2}s | mean latency {l0:.0} ms | mean steps {s0:.1}");
 
-    println!("\n-- adaptive: KL criterion (Algorithm 3) --");
-    let crit = Criterion::Kl { threshold: 2e-4, min_steps: n_steps / 4 };
-    let (w1, l1, s1) = fire(&server.addr, n, n_steps, crit, &prompts)?;
+    println!("\n-- adaptive: KL policy (Algorithm 3), entropy fallback --");
+    let spec = format!("any(kl:0.0002:{},entropy:0.05)", n_steps / 4);
+    let crit = parse_policy(&spec).expect("valid policy spec");
+    let (w1, l1, s1) = fire(&server.addr, n, n_steps, &crit, &prompts)?;
     println!("wall {w1:.2}s | mean latency {l1:.0} ms | mean steps {s1:.1}");
 
     println!(

@@ -11,7 +11,7 @@ use std::rc::Rc;
 
 use repro::corpus::dataset::Dataset;
 use repro::eval::arnll::ArScorer;
-use repro::halting::{Criterion, CriterionState};
+use repro::halting::{parse_policy, BoxedPolicy, HaltPolicy};
 use repro::runtime::Runtime;
 use repro::sampler::{Family, Session};
 use repro::train::{TrainConfig, TrainTarget, Trainer};
@@ -69,14 +69,19 @@ fn main() -> anyhow::Result<()> {
     let prompts = ds.val_prompts(1, batch);
     let scorer = ArScorer::new(&rt, Rc::new(ar_tr.store.clone()))?;
 
-    let criteria: Vec<(&str, Criterion)> = vec![
-        ("none (full schedule)", Criterion::None),
-        ("entropy", Criterion::Entropy { threshold: 0.25 }),
-        ("patience", Criterion::Patience { patience: 10, tolerance: 0.0 }),
-        ("kl", Criterion::Kl { threshold: 0.12 / n_steps as f32, min_steps: n_steps / 4 }),
-        ("fixed 60%", Criterion::Fixed { step: n_steps * 6 / 10 }),
+    let specs: Vec<(&str, String)> = vec![
+        ("none (full schedule)", "none".into()),
+        ("entropy", "entropy:0.25".into()),
+        ("patience", "patience:10".into()),
+        ("kl", format!("kl:{}:{}", 0.12 / n_steps as f32, n_steps / 4)),
+        ("fixed 60%", format!("fixed:{}", n_steps * 6 / 10)),
+        (
+            "any(entropy,patience)",
+            "any(entropy:0.25,patience:10)".into(),
+        ),
     ];
-    for (name, crit) in criteria {
+    for (name, spec) in specs {
+        let policy = parse_policy(&spec).expect("valid policy spec");
         let mut session =
             Session::new(&rt, Family::Ddlm, store.clone(), batch, m.seq_len)?;
         for (slot, p) in prompts.iter().enumerate() {
@@ -85,7 +90,8 @@ fn main() -> anyhow::Result<()> {
                 &p[..32],
             );
         }
-        let mut states = vec![CriterionState::default(); batch];
+        let mut policies: Vec<BoxedPolicy> =
+            (0..batch).map(|_| policy.clone()).collect();
         let mut exits = vec![n_steps; batch];
         for step in 0..n_steps {
             let stats = session.step()?;
@@ -95,7 +101,7 @@ fn main() -> anyhow::Result<()> {
                     continue;
                 }
                 if let Some(st) = stats[slot] {
-                    if states[slot].observe(&crit, &st) {
+                    if policies[slot].observe(step, &st).halted() {
                         exits[slot] = step + 1;
                         session.release_slot(slot);
                     } else {

@@ -10,8 +10,11 @@
 //! starts the next request `saved_steps` earlier.
 //!
 //! Scheduling policy: FIFO admission; a device step runs whenever at least
-//! one slot is active; responses are emitted the moment a slot's criterion
-//! fires or its schedule exhausts.
+//! one slot is active; responses are emitted the moment a slot's halting
+//! policy fires or its schedule exhausts.  Each running slot owns a boxed
+//! [`crate::halting::HaltPolicy`] cloned from its request, so arbitrary
+//! policy mixes (including combinators) coexist in one batch, and every
+//! early halt is attributed to the primitive reason that fired.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -23,7 +26,7 @@ use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
-use crate::halting::CriterionState;
+use crate::halting::{BoxedPolicy, Decision, HaltPolicy, StepStats};
 use crate::log_info;
 use crate::models::store::ParamStore;
 use crate::runtime::Runtime;
@@ -98,7 +101,9 @@ struct Pending {
 struct Running {
     req: GenRequest,
     reply: mpsc::Sender<GenResponse>,
-    crit_state: CriterionState,
+    /// this slot's live policy (cloned from the request and reset on
+    /// admission; the request keeps the pristine copy for its spec)
+    policy: BoxedPolicy,
     submitted: Instant,
     started: Instant,
 }
@@ -163,10 +168,14 @@ fn run_engine(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>) -> Result<()> {
             break;
         }
 
-        // 2) admit waiting requests into free slots (continuous batching)
+        // 2) admit waiting requests into free slots (continuous batching);
+        //    preflight-resolvable requests never reach the queue (see
+        //    handle_msg), so everything here needs a device slot
         for slot in 0..batch {
             if running[slot].is_none() {
                 if let Some(p) = waiting.pop_front() {
+                    let mut policy = p.req.policy.clone();
+                    policy.reset();
                     session.reset_slot(
                         slot,
                         p.req.seed,
@@ -177,7 +186,7 @@ fn run_engine(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>) -> Result<()> {
                         &p.req.prefix,
                     );
                     running[slot] = Some(Running {
-                        crit_state: CriterionState::default(),
+                        policy,
                         started: Instant::now(),
                         submitted: p.submitted,
                         req: p.req,
@@ -195,18 +204,24 @@ fn run_engine(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>) -> Result<()> {
                 let Some(st) = stats[slot] else { continue };
                 let Some(r) = running[slot].as_mut() else { continue };
                 metrics.steps_executed += 1;
-                let fired = r.crit_state.observe(&r.req.criterion, &st);
+                let executed = session.slots[slot].step;
+                let decision = r.policy.observe(executed - 1, &st);
                 let exhausted = session.slot_exhausted(slot);
-                if fired || exhausted {
+                if decision.halted() || exhausted {
                     let r = running[slot].take().unwrap();
-                    let executed = session.slots[slot].step;
                     let budget = r.req.n_steps;
+                    let halted_early = decision.halted() && !exhausted;
                     let resp = GenResponse {
                         id: r.req.id,
                         tokens: session.slot_output(slot),
                         steps_executed: executed,
                         steps_budget: budget,
-                        halted_early: fired && !exhausted,
+                        halted_early,
+                        halt_reason: if halted_early {
+                            decision.reason().map(str::to_string)
+                        } else {
+                            None
+                        },
                         latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
                         queue_ms: (r.started - r.submitted).as_secs_f64()
                             * 1e3,
@@ -215,8 +230,10 @@ fn run_engine(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>) -> Result<()> {
                     metrics.requests_completed += 1;
                     metrics.steps_saved +=
                         (budget.saturating_sub(executed)) as u64;
-                    if resp.halted_early {
-                        metrics.halted_early += 1;
+                    if halted_early {
+                        if let Some(reason) = decision.reason() {
+                            metrics.record_halt(reason);
+                        }
                     }
                     metrics.latency_ms.observe(resp.latency_ms);
                     let _ = r.reply.send(resp);
@@ -242,6 +259,27 @@ fn handle_msg(
     match msg {
         EngineMsg::Submit(req, reply) => {
             metrics.requests_submitted += 1;
+            // a policy that resolves before any step (e.g. fixed:0) is
+            // answered at ingest — it must not wait for a batch slot
+            if let Decision::Halt { reason } = req.policy.preflight() {
+                let resp = GenResponse {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    steps_executed: 0,
+                    steps_budget: req.n_steps,
+                    halted_early: true,
+                    halt_reason: Some(reason.to_string()),
+                    latency_ms: 0.0,
+                    queue_ms: 0.0,
+                    final_stats: StepStats::default(),
+                };
+                metrics.requests_completed += 1;
+                metrics.steps_saved += req.n_steps as u64;
+                metrics.record_halt(reason);
+                metrics.latency_ms.observe(0.0);
+                let _ = reply.send(resp);
+                return false;
+            }
             waiting.push_back(Pending {
                 req,
                 reply,

@@ -1,6 +1,8 @@
-//! Serving metrics: latency histogram, step accounting, steps-saved —
-//! the counters behind the paper's headline "10-40% faster generation".
+//! Serving metrics: latency histogram, step accounting, steps-saved,
+//! per-reason halt counters — the numbers behind the paper's headline
+//! "10-40% faster generation".
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Fixed-bucket latency histogram (milliseconds).
@@ -93,6 +95,9 @@ pub struct Metrics {
     /// device calls (batched steps)
     pub device_calls: u64,
     pub latency_ms: Histogram,
+    /// early halts per policy reason (`entropy`, `patience`, ...);
+    /// surfaced in the JSON snapshot as `halted_by_<reason>`
+    pub halted_by: BTreeMap<&'static str, u64>,
 }
 
 impl Default for Metrics {
@@ -106,11 +111,18 @@ impl Default for Metrics {
             steps_saved: 0,
             device_calls: 0,
             latency_ms: Histogram::default(),
+            halted_by: BTreeMap::new(),
         }
     }
 }
 
 impl Metrics {
+    /// Account one early halt attributed to a policy reason.
+    pub fn record_halt(&mut self, reason: &'static str) {
+        self.halted_early += 1;
+        *self.halted_by.entry(reason).or_insert(0) += 1;
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         let el = self.started_at.elapsed().as_secs_f64();
         if el <= 0.0 {
@@ -132,7 +144,7 @@ impl Metrics {
 
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let base = Json::obj(vec![
             ("requests_submitted", Json::num(self.requests_submitted as f64)),
             ("requests_completed", Json::num(self.requests_completed as f64)),
             ("halted_early", Json::num(self.halted_early as f64)),
@@ -144,7 +156,12 @@ impl Metrics {
             ("latency_p50_ms", Json::num(self.latency_ms.quantile(0.5))),
             ("latency_p95_ms", Json::num(self.latency_ms.quantile(0.95))),
             ("throughput_rps", Json::num(self.throughput_rps())),
-        ])
+        ]);
+        let Json::Obj(mut m) = base else { unreachable!() };
+        for (reason, n) in &self.halted_by {
+            m.insert(format!("halted_by_{reason}"), Json::num(*n as f64));
+        }
+        Json::Obj(m)
     }
 }
 
@@ -185,5 +202,21 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("step_saving_ratio").is_some());
         assert!(j.get("latency_p95_ms").is_some());
+    }
+
+    #[test]
+    fn per_reason_halt_counters_flattened_into_json() {
+        let mut m = Metrics::default();
+        m.record_halt("entropy");
+        m.record_halt("entropy");
+        m.record_halt("kl");
+        assert_eq!(m.halted_early, 3);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("halted_by_entropy").and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        assert_eq!(j.get("halted_by_kl").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(j.get("halted_by_patience").is_none());
     }
 }

@@ -1,8 +1,13 @@
 //! Request/response types + JSON wire codecs for the serving API.
+//!
+//! The halting policy travels on the wire as its spec-DSL string under
+//! the legacy `criterion` key (`"entropy:0.5"`, `"any(entropy:0.5,
+//! patience:20:0)"`, ...).  Serialization goes through the policy's
+//! canonical `to_spec()` — there is no second formatting path.
 
 use anyhow::{anyhow, Result};
 
-use crate::halting::{Criterion, StepStats};
+use crate::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt, StepStats};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -12,8 +17,8 @@ pub struct GenRequest {
     pub prefix: Vec<i32>,
     /// maximum diffusion steps (N_max)
     pub n_steps: usize,
-    /// early-exit criterion for this request
-    pub criterion: Criterion,
+    /// early-exit policy for this request
+    pub policy: BoxedPolicy,
     /// initial noise scale (paper Fig 3 / Table 1 knob)
     pub noise_scale: f32,
     pub seed: u64,
@@ -25,24 +30,13 @@ impl GenRequest {
             id,
             prefix: Vec::new(),
             n_steps,
-            criterion: Criterion::None,
+            policy: Box::new(NoHalt),
             noise_scale: 1.0,
             seed: id,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        let crit = match self.criterion {
-            Criterion::None => "none".to_string(),
-            Criterion::Entropy { threshold } => format!("entropy:{threshold}"),
-            Criterion::Patience { patience, tolerance } => {
-                format!("patience:{patience}:{tolerance}")
-            }
-            Criterion::Kl { threshold, min_steps } => {
-                format!("kl:{threshold}:{min_steps}")
-            }
-            Criterion::Fixed { step } => format!("fixed:{step}"),
-        };
         Json::obj(vec![
             ("id", Json::num(self.id as f64)),
             (
@@ -52,7 +46,7 @@ impl GenRequest {
                 ),
             ),
             ("steps", Json::num(self.n_steps as f64)),
-            ("criterion", Json::str(crit)),
+            ("criterion", Json::str(self.policy.to_spec())),
             ("noise_scale", Json::num(self.noise_scale as f64)),
             ("seed", Json::num(self.seed as f64)),
         ])
@@ -76,16 +70,16 @@ impl GenRequest {
                     .collect()
             })
             .unwrap_or_default();
-        let criterion = match j.get("criterion").and_then(Json::as_str) {
-            Some(s) => Criterion::parse(s)
+        let policy = match j.get("criterion").and_then(Json::as_str) {
+            Some(s) => parse_policy(s)
                 .ok_or_else(|| anyhow!("bad criterion {s:?}"))?,
-            None => Criterion::None,
+            None => Box::new(NoHalt) as BoxedPolicy,
         };
         Ok(GenRequest {
             id,
             prefix,
             n_steps,
-            criterion,
+            policy,
             noise_scale: j
                 .get("noise_scale")
                 .and_then(Json::as_f64)
@@ -103,6 +97,8 @@ pub struct GenResponse {
     pub steps_executed: usize,
     pub steps_budget: usize,
     pub halted_early: bool,
+    /// primitive policy reason when `halted_early` (e.g. `"entropy"`)
+    pub halt_reason: Option<String>,
     pub latency_ms: f64,
     /// queueing delay before the first denoise step
     pub queue_ms: f64,
@@ -111,7 +107,7 @@ pub struct GenResponse {
 
 impl GenResponse {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::num(self.id as f64)),
             (
                 "tokens",
@@ -127,7 +123,11 @@ impl GenResponse {
             ("entropy", Json::num(self.final_stats.entropy as f64)),
             ("kl", Json::num(self.final_stats.kl as f64)),
             ("switches", Json::num(self.final_stats.switches as f64)),
-        ])
+        ];
+        if let Some(reason) = &self.halt_reason {
+            fields.push(("halt_reason", Json::str(reason.clone())));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<GenResponse> {
@@ -151,6 +151,10 @@ impl GenResponse {
                 .get("halted_early")
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
+            halt_reason: j
+                .get("halt_reason")
+                .and_then(Json::as_str)
+                .map(str::to_string),
             latency_ms: get_f("latency_ms")?,
             queue_ms: j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
             final_stats: StepStats {
@@ -175,18 +179,46 @@ mod tests {
     fn request_json_roundtrip() {
         let mut r = GenRequest::new(7, 200);
         r.prefix = vec![1, 2, 3];
-        r.criterion = Criterion::Kl {
-            threshold: 1e-3,
-            min_steps: 50,
-        };
+        r.policy = parse_policy("kl:0.001:50").unwrap();
         r.noise_scale = 0.9;
         let j = r.to_json();
+        assert_eq!(
+            j.get("criterion").and_then(Json::as_str),
+            Some("kl:0.001:50")
+        );
         let back = GenRequest::from_json(&j).unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.prefix, vec![1, 2, 3]);
         assert_eq!(back.n_steps, 200);
-        assert_eq!(back.criterion, r.criterion);
+        assert_eq!(back.policy.to_spec(), r.policy.to_spec());
         assert!((back.noise_scale - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn request_roundtrip_preserves_every_policy_variant() {
+        // parse -> wire JSON -> parse -> to_spec must be a fixed point
+        // for primitives and nested combinators alike
+        for spec in [
+            "none",
+            "entropy:0.25",
+            "patience:20:0",
+            "patience:20:1.5",
+            "kl:0.001:250",
+            "fixed:600",
+            "norm:0.05:3",
+            "klslope:0.02:5",
+            "any(entropy:0.5,patience:20:0)",
+            "all(kl:0.001:0,fixed:90)",
+            "min(50,any(entropy:0.25,klslope:0.02:5))",
+            "ema(0.3,norm:0.05:3)",
+        ] {
+            let mut r = GenRequest::new(1, 100);
+            r.policy = parse_policy(spec).unwrap();
+            let encoded = r.to_json().encode();
+            let back =
+                GenRequest::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+            assert_eq!(back.policy.to_spec(), spec, "wire round-trip of {spec}");
+        }
     }
 
     #[test]
@@ -197,6 +229,7 @@ mod tests {
             steps_executed: 120,
             steps_budget: 200,
             halted_early: true,
+            halt_reason: Some("kl".to_string()),
             latency_ms: 45.5,
             queue_ms: 1.25,
             final_stats: StepStats {
@@ -212,8 +245,28 @@ mod tests {
             .unwrap();
         assert_eq!(back.tokens, vec![5, 6, 7]);
         assert!(back.halted_early);
+        assert_eq!(back.halt_reason.as_deref(), Some("kl"));
         assert_eq!(back.steps_executed, 120);
         assert!((back.final_stats.entropy - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn response_without_reason_omits_field() {
+        let resp = GenResponse {
+            id: 1,
+            tokens: vec![],
+            steps_executed: 10,
+            steps_budget: 10,
+            halted_early: false,
+            halt_reason: None,
+            latency_ms: 1.0,
+            queue_ms: 0.0,
+            final_stats: StepStats::default(),
+        };
+        let j = resp.to_json();
+        assert!(j.get("halt_reason").is_none());
+        let back = GenResponse::from_json(&j).unwrap();
+        assert_eq!(back.halt_reason, None);
     }
 
     #[test]
@@ -221,6 +274,11 @@ mod tests {
         assert!(GenRequest::from_json(&Json::parse("{}").unwrap()).is_err());
         assert!(GenRequest::from_json(
             &Json::parse(r#"{"id":1,"steps":10,"criterion":"bogus"}"#)
+                .unwrap()
+        )
+        .is_err());
+        assert!(GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"criterion":"any(entropy:0.5"}"#)
                 .unwrap()
         )
         .is_err());

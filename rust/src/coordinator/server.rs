@@ -5,6 +5,12 @@
 //!   request  : GenRequest JSON (see `request.rs`), or `{"cmd":"metrics"}`
 //!   response : GenResponse JSON / metrics object / `{"error": "..."}`
 //!
+//! The request's `criterion` field carries a halting-policy spec string
+//! (`"entropy:0.25"`, `"any(entropy:0.25,patience:20:0)"`, ... — see the
+//! `halting` module docs); early-halted responses carry the firing
+//! primitive in `halt_reason`, and the metrics snapshot exposes
+//! per-reason `halted_by_*` counters.
+//!
 //! Each connection gets a handler thread; handlers forward requests to the
 //! engine handle (cheap mpsc clone) and stream responses back in arrival
 //! order per connection.

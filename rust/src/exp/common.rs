@@ -10,7 +10,7 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use super::Ctx;
-use crate::halting::{Criterion, CriterionState, StepStats};
+use crate::halting::{HaltPolicy, StepStats};
 use crate::models::store::ParamStore;
 use crate::sampler::{Family, Session};
 
@@ -73,11 +73,18 @@ impl RunRecord {
         &self.snaps[sample][idx]
     }
 
-    /// First 1-based step at which `crit` fires (or n_steps if never).
-    pub fn exit_step(&self, sample: usize, crit: &Criterion) -> usize {
-        let mut st = CriterionState::default();
+    /// First 1-based step at which `policy` fires (or n_steps if never;
+    /// 0 when the policy resolves in preflight, e.g. `fixed:0`).  The
+    /// policy is cloned + reset internally, so any post-hoc sweep can
+    /// reuse one policy value across samples.
+    pub fn exit_step(&self, sample: usize, policy: &dyn HaltPolicy) -> usize {
+        let mut p = policy.clone_box();
+        p.reset();
+        if p.preflight().halted() {
+            return 0;
+        }
         for (i, stats) in self.traces[sample].iter().enumerate() {
-            if st.observe(crit, stats) {
+            if p.observe(i, stats).halted() {
                 return i + 1;
             }
         }
@@ -180,7 +187,7 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::halting::Criterion;
+    use crate::halting::{parse_policy, Entropy, Fixed, Patience};
 
     fn fake_record(n_samples: usize, n_steps: usize) -> RunRecord {
         // synthetic record: entropy decays geometrically, kl decays,
@@ -223,14 +230,14 @@ mod tests {
     fn exit_step_entropy_matches_threshold() {
         let rec = fake_record(2, 100);
         // entropy = 4 (1-f)^2 <= 1.0  =>  f >= 0.5
-        let e = rec.exit_step(0, &Criterion::Entropy { threshold: 1.0 });
+        let e = rec.exit_step(0, &Entropy::new(1.0));
         assert!((48..=53).contains(&e), "exit={e}");
     }
 
     #[test]
     fn exit_step_never_fires_returns_n_steps() {
         let rec = fake_record(1, 50);
-        let e = rec.exit_step(0, &Criterion::Entropy { threshold: -1.0 });
+        let e = rec.exit_step(0, &Entropy::new(-1.0));
         assert_eq!(e, 50);
     }
 
@@ -238,14 +245,32 @@ mod tests {
     fn exit_step_patience_after_switch_freeze() {
         let rec = fake_record(1, 100);
         // switches are 0 from step 50 on; patience 10 -> fires ~step 60
-        let e = rec.exit_step(
-            0,
-            &Criterion::Patience {
-                patience: 10,
-                tolerance: 0.0,
-            },
-        );
+        let e = rec.exit_step(0, &Patience::new(10, 0.0));
         assert!((58..=62).contains(&e), "exit={e}");
+    }
+
+    #[test]
+    fn exit_step_preflight_resolves_to_zero() {
+        let rec = fake_record(1, 20);
+        assert_eq!(rec.exit_step(0, &Fixed::new(0)), 0);
+        assert_eq!(rec.exit_step(0, &Fixed::new(5)), 5);
+    }
+
+    #[test]
+    fn exit_step_evaluates_combinator_policies_post_hoc() {
+        let rec = fake_record(1, 100);
+        // any(): whichever fires first wins — here the fixed leg
+        let any = parse_policy("any(entropy:1.0,fixed:30)").unwrap();
+        assert_eq!(rec.exit_step(0, any.as_ref()), 30);
+        // min() guard delays the entropy exit (~51) to step 80
+        let guarded = parse_policy("min(80,entropy:1.0)").unwrap();
+        assert_eq!(rec.exit_step(0, guarded.as_ref()), 80);
+        // all(): waits for the later of the two signals
+        let both = parse_policy("all(entropy:1.0,patience:10:0)").unwrap();
+        let e = rec.exit_step(0, both.as_ref());
+        assert!((58..=62).contains(&e), "exit={e}");
+        // the same boxed policy value is reusable across samples
+        assert_eq!(rec.exit_step(0, any.as_ref()), 30);
     }
 
     #[test]

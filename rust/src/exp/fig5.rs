@@ -13,7 +13,7 @@ use super::common::{record_run, RunOpts, RunRecord};
 use super::fig4::default_thresholds;
 use super::Ctx;
 use crate::eval::ngram;
-use crate::halting::Criterion;
+use crate::halting::{parse_policy, BoxedPolicy, Entropy, Kl, Patience};
 use crate::sampler::Family;
 use crate::util::table::{f, Table};
 
@@ -32,30 +32,36 @@ fn fixed_grid(n_steps: usize) -> Vec<usize> {
     g
 }
 
-fn adaptive_grid(n_steps: usize) -> Vec<(String, Criterion)> {
+/// The adaptive policy grid: threshold sweeps for each primitive plus
+/// composed policies the open API enables (disjunction of the paper's
+/// best signals, and a guarded entropy exit).
+fn adaptive_grid(n_steps: usize) -> Vec<(String, BoxedPolicy)> {
     let (ent0, pat0, kl0) = default_thresholds(n_steps);
-    let mut out = Vec::new();
+    let mut out: Vec<(String, BoxedPolicy)> = Vec::new();
     for mult in [0.25f32, 1.0, 4.0, 16.0] {
         out.push((
             format!("entropy:{:.3}", ent0 * mult),
-            Criterion::Entropy { threshold: ent0 * mult },
+            Box::new(Entropy::new(ent0 * mult)),
         ));
         out.push((
             format!("kl:{:.1e}", kl0 * mult),
-            Criterion::Kl {
-                threshold: kl0 * mult,
-                min_steps: n_steps / 4,
-            },
+            Box::new(Kl::new(kl0 * mult, n_steps / 4)),
         ));
     }
     for pat in [pat0 / 2, pat0, pat0 * 2, pat0 * 4] {
         out.push((
             format!("patience:{}", pat.max(1)),
-            Criterion::Patience {
-                patience: pat.max(1),
-                tolerance: 0.0,
-            },
+            Box::new(Patience::new(pat.max(1), 0.0)),
         ));
+    }
+    for spec in [
+        format!("any(entropy:{ent0},kl:{kl0}:{})", n_steps / 4),
+        format!("all(entropy:{ent0},patience:{}:0)", pat0.max(1)),
+        format!("min({},entropy:{})", n_steps / 4, ent0 * 4.0),
+        format!("ema(0.3,entropy:{ent0})"),
+    ] {
+        let policy = parse_policy(&spec).expect("grid spec parses");
+        out.push((spec, policy));
     }
     out
 }
@@ -92,9 +98,9 @@ where
             value: v,
         });
     }
-    for (label, crit) in adaptive_grid(n_steps) {
+    for (label, policy) in adaptive_grid(n_steps) {
         let exits: Vec<usize> = (0..rec.traces.len())
-            .map(|i| rec.exit_step(i, &crit))
+            .map(|i| rec.exit_step(i, policy.as_ref()))
             .collect();
         let (me, v) = eval_exit(rec, &exits, metric);
         rows.push(Sweep {

@@ -14,7 +14,7 @@ use super::common::{record_run, RunOpts};
 use super::fig4::default_thresholds;
 use super::Ctx;
 use crate::eval::arnll::ArScorer;
-use crate::halting::Criterion;
+use crate::halting::Kl;
 use crate::models::store::ParamStore;
 use crate::runtime::Tensor;
 use crate::sampler::Family;
@@ -80,12 +80,9 @@ pub fn run(ctx: &Ctx) -> Result<String> {
                 f(windowed_nll(&scorer, &samples)?, 3),
             ]);
         }
-        let crit = Criterion::Kl {
-            threshold: kl0,
-            min_steps: n_steps / 4,
-        };
+        let policy = Kl::new(kl0, n_steps / 4);
         let exits: Vec<usize> = (0..rec.traces.len())
-            .map(|i| rec.exit_step(i, &crit))
+            .map(|i| rec.exit_step(i, &policy))
             .collect();
         let mean_exit =
             exits.iter().sum::<usize>() as f64 / exits.len() as f64;

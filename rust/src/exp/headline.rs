@@ -15,7 +15,7 @@ use anyhow::Result;
 use super::fig4::default_thresholds;
 use super::Ctx;
 use crate::coordinator::{start, EngineConfig, GenRequest};
-use crate::halting::Criterion;
+use crate::halting::{BoxedPolicy, Fixed, HaltPolicy, Kl, NoHalt};
 use crate::sampler::Family;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
@@ -33,7 +33,7 @@ struct ServeResult {
 fn serve_stream(
     ctx: &Ctx,
     family: Family,
-    criterion: Criterion,
+    policy: &BoxedPolicy,
     n_requests: usize,
     n_steps: usize,
 ) -> Result<ServeResult> {
@@ -54,7 +54,7 @@ fn serve_stream(
         .map(|(i, p)| {
             let mut req = GenRequest::new(i as u64, n_steps);
             req.prefix = p[..PREFIX].to_vec();
-            req.criterion = criterion;
+            req.policy = policy.clone();
             req.seed = 5000 + i as u64;
             engine.submit(req)
         })
@@ -107,20 +107,17 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         "AR-NLL",
         "ΔNLL",
     ]);
+    let no_halt: BoxedPolicy = Box::new(NoHalt);
     for fam in Family::all() {
         // the paper's per-family best: KL for ddlm/ssd, fixed for plaid
-        let crit = match fam {
-            Family::Ddlm | Family::Ssd => Criterion::Kl {
-                threshold: kl0,
-                min_steps: n_steps / 4,
-            },
-            Family::Plaid => Criterion::Fixed {
-                step: n_steps * 9 / 10,
-            },
+        let policy: BoxedPolicy = match fam {
+            Family::Ddlm | Family::Ssd => {
+                Box::new(Kl::new(kl0, n_steps / 4))
+            }
+            Family::Plaid => Box::new(Fixed::new(n_steps * 9 / 10)),
         };
-        let base =
-            serve_stream(ctx, fam, Criterion::None, n_requests, n_steps)?;
-        let halt = serve_stream(ctx, fam, crit, n_requests, n_steps)?;
+        let base = serve_stream(ctx, fam, &no_halt, n_requests, n_steps)?;
+        let halt = serve_stream(ctx, fam, &policy, n_requests, n_steps)?;
         let dw = 100.0 * (base.wall_s - halt.wall_s) / base.wall_s;
         table.row(vec![
             fam.name().into(),
@@ -135,7 +132,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         ]);
         table.row(vec![
             fam.name().into(),
-            crit.name().into(),
+            policy.name().into(),
             f(halt.wall_s, 2),
             f(dw, 1),
             f(halt.mean_steps, 1),

@@ -1,0 +1,265 @@
+//! Policy combinators: disjunction, conjunction, a minimum-step guard,
+//! and an EMA smoothing wrapper.  Combinators propagate the *reason* of
+//! the primitive that fired, so per-reason metrics stay meaningful under
+//! composition.
+
+use super::{BoxedPolicy, Decision, HaltPolicy, StepStats};
+
+fn join_specs(policies: &[BoxedPolicy]) -> String {
+    policies
+        .iter()
+        .map(|p| p.to_spec())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Halt as soon as any inner policy fires; the reason is the firing
+/// policy's reason.
+#[derive(Clone)]
+pub struct Any {
+    policies: Vec<BoxedPolicy>,
+}
+
+impl Any {
+    pub fn new(policies: Vec<BoxedPolicy>) -> Any {
+        Any { policies }
+    }
+}
+
+impl HaltPolicy for Any {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        // feed every leg even after one fires: a wrapper (MinSteps/Ema)
+        // may suppress this halt, and later legs' state must keep
+        // accruing as if they had seen the full trace
+        let mut first = Decision::Continue;
+        for p in &mut self.policies {
+            let d = p.observe(step, stats);
+            if !first.halted() && d.halted() {
+                first = d;
+            }
+        }
+        first
+    }
+
+    fn reset(&mut self) {
+        for p in &mut self.policies {
+            p.reset();
+        }
+    }
+
+    fn preflight(&self) -> Decision {
+        for p in &self.policies {
+            let d = p.preflight();
+            if d.halted() {
+                return d;
+            }
+        }
+        Decision::Continue
+    }
+
+    fn name(&self) -> &'static str {
+        "any"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("any({})", join_specs(&self.policies))
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(self.clone())
+    }
+}
+
+/// Halt once every inner policy has fired at least once.  Each inner
+/// fire is latched (the signal does not need to stay low); a latched
+/// policy stops being fed.  The reason is the policy that completed the
+/// conjunction.
+#[derive(Clone)]
+pub struct All {
+    policies: Vec<BoxedPolicy>,
+    fired: Vec<bool>,
+    /// reason of the leg that completed the conjunction, latched so a
+    /// suppressing wrapper (MinSteps) still sees the primitive reason
+    /// on later steps
+    reason: Option<&'static str>,
+}
+
+impl All {
+    pub fn new(policies: Vec<BoxedPolicy>) -> All {
+        let n = policies.len();
+        All {
+            policies,
+            fired: vec![false; n],
+            reason: None,
+        }
+    }
+}
+
+impl HaltPolicy for All {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        for (i, p) in self.policies.iter_mut().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            if let Decision::Halt { reason } = p.observe(step, stats) {
+                self.fired[i] = true;
+                self.reason = Some(reason);
+            }
+        }
+        if !self.fired.is_empty() && self.fired.iter().all(|&f| f) {
+            Decision::Halt {
+                reason: self.reason.unwrap_or("all"),
+            }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn reset(&mut self) {
+        for p in &mut self.policies {
+            p.reset();
+        }
+        self.fired.iter_mut().for_each(|f| *f = false);
+        self.reason = None;
+    }
+
+    fn preflight(&self) -> Decision {
+        let mut last = Decision::Continue;
+        for p in &self.policies {
+            let d = p.preflight();
+            if !d.halted() {
+                return Decision::Continue;
+            }
+            last = d;
+        }
+        if self.policies.is_empty() {
+            Decision::Continue
+        } else {
+            last
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "all"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("all({})", join_specs(&self.policies))
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(self.clone())
+    }
+}
+
+/// Guard: suppress inner halts until `min` steps have completed (the
+/// inner policy still observes every step, so its state accrues).
+#[derive(Clone)]
+pub struct MinSteps {
+    min: usize,
+    inner: BoxedPolicy,
+}
+
+impl MinSteps {
+    pub fn new(min: usize, inner: BoxedPolicy) -> MinSteps {
+        MinSteps { min, inner }
+    }
+}
+
+impl HaltPolicy for MinSteps {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        let d = self.inner.observe(step, stats);
+        if step + 1 >= self.min {
+            d
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+
+    fn preflight(&self) -> Decision {
+        if self.min == 0 {
+            self.inner.preflight()
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "min"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("min({},{})", self.min, self.inner.to_spec())
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(self.clone())
+    }
+}
+
+/// Smoothing wrapper: exponential moving average over every raw signal
+/// before the inner policy sees it (`alpha` = weight of the newest
+/// sample; the first sample seeds the average).  Useful to keep noisy
+/// entropy/KL traces from triggering a threshold on a single dip.
+#[derive(Clone)]
+pub struct Ema {
+    alpha: f32,
+    inner: BoxedPolicy,
+    state: Option<StepStats>,
+}
+
+impl Ema {
+    pub fn new(alpha: f32, inner: BoxedPolicy) -> Ema {
+        Ema {
+            alpha: alpha.clamp(1e-3, 1.0),
+            inner,
+            state: None,
+        }
+    }
+}
+
+impl HaltPolicy for Ema {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        let sm = match self.state {
+            None => *stats,
+            Some(prev) => {
+                let a = self.alpha;
+                let b = 1.0 - a;
+                StepStats {
+                    entropy: a * stats.entropy + b * prev.entropy,
+                    kl: a * stats.kl + b * prev.kl,
+                    switches: a * stats.switches + b * prev.switches,
+                    norm_x0: a * stats.norm_x0 + b * prev.norm_x0,
+                    norm_x: a * stats.norm_x + b * prev.norm_x,
+                }
+            }
+        };
+        self.state = Some(sm);
+        self.inner.observe(step, &sm)
+    }
+
+    fn reset(&mut self) {
+        self.state = None;
+        self.inner.reset();
+    }
+
+    fn preflight(&self) -> Decision {
+        self.inner.preflight()
+    }
+
+    fn name(&self) -> &'static str {
+        "ema"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("ema({},{})", self.alpha, self.inner.to_spec())
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(self.clone())
+    }
+}

@@ -1,11 +1,29 @@
-//! Early-exit criteria — the paper's contribution as a library
-//! (Algorithms 1-3 + the fixed-step baseline).
+//! Halting policies — the paper's early-exit contribution as an *open*,
+//! composable API (Algorithms 1-3, the fixed-step baseline, and policies
+//! the original closed enum could not express).
 //!
-//! Each criterion consumes the per-slot statistics the step artifacts
-//! compute on-device (entropy of p(x|X(t),t), KL vs the previous step,
-//! argmax token switches) and decides whether that slot's generation can
-//! stop.  State is per-request (`CriterionState`), so the coordinator can
-//! run a different criterion/threshold per request in the same batch.
+//! A [`HaltPolicy`] consumes the per-slot statistics the step artifacts
+//! compute on-device ([`StepStats`]) and decides after each step whether
+//! that slot's generation can stop.  Policies are per-request values, so
+//! the coordinator can run a different policy per request in the same
+//! batch.  A [`Decision::Halt`] carries the *reason* (the primitive that
+//! fired), which flows into the serving metrics' per-reason counters.
+//!
+//! Policies compose: [`Any`]/[`All`] combine sub-policies, [`MinSteps`]
+//! guards against premature exits, [`Ema`] smooths the raw signals.  The
+//! spec DSL (`parse_policy`) round-trips every policy through a string
+//! form used by the CLI and the JSON wire protocol, e.g.
+//! `"any(entropy:0.25,min(50,kl:0.0006:0))"`; the legacy enum-era specs
+//! (`entropy:0.5`, `patience:20`, `kl:1e-3:250`, `fixed:600`, `none`)
+//! parse unchanged.
+
+mod combinators;
+mod policies;
+mod spec;
+
+pub use combinators::{All, Any, Ema, MinSteps};
+pub use policies::{Entropy, Fixed, Kl, KlSlope, NoHalt, NormStable, Patience};
+pub use spec::{parse_policy, PrimitiveCtor, Registry};
 
 /// Per-step statistics for one batch slot (produced by the step artifact).
 #[derive(Clone, Copy, Debug, Default)]
@@ -17,100 +35,72 @@ pub struct StepStats {
     pub norm_x: f32,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Criterion {
-    /// Algorithm 1: halt when entropy <= threshold.
-    Entropy { threshold: f32 },
-    /// Algorithm 2: halt after `patience` consecutive steps whose argmax
-    /// tokens changed at most `tolerance` positions.
-    Patience { patience: usize, tolerance: f32 },
-    /// Algorithm 3: halt when KL(p_t || p_{t-1}) <= threshold, after at
-    /// least `min_steps` steps (paper: min_steps ~ 0.25 N_max).
-    Kl { threshold: f32, min_steps: usize },
-    /// Fixed-step baseline: halt unconditionally at `step`.
-    Fixed { step: usize },
-    /// Never halt (full-schedule baseline).
-    None,
+/// Outcome of feeding one step's statistics to a policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Continue,
+    /// Stop generating; `reason` names the primitive policy that fired
+    /// (combinators propagate the inner reason).
+    Halt { reason: &'static str },
 }
 
-impl Criterion {
-    pub fn name(&self) -> &'static str {
+impl Decision {
+    pub fn halted(&self) -> bool {
+        matches!(self, Decision::Halt { .. })
+    }
+
+    pub fn reason(&self) -> Option<&'static str> {
         match self {
-            Criterion::Entropy { .. } => "entropy",
-            Criterion::Patience { .. } => "patience",
-            Criterion::Kl { .. } => "kl",
-            Criterion::Fixed { .. } => "fixed",
-            Criterion::None => "none",
-        }
-    }
-
-    /// Parse "entropy:0.5", "patience:20", "kl:1e-3:250", "fixed:600",
-    /// "none" (CLI/config syntax).
-    pub fn parse(s: &str) -> Option<Criterion> {
-        let parts: Vec<&str> = s.split(':').collect();
-        match parts[0] {
-            "none" => Some(Criterion::None),
-            "entropy" => Some(Criterion::Entropy {
-                threshold: parts.get(1)?.parse().ok()?,
-            }),
-            "patience" => Some(Criterion::Patience {
-                patience: parts.get(1)?.parse().ok()?,
-                tolerance: parts
-                    .get(2)
-                    .map(|t| t.parse().ok())
-                    .unwrap_or(Some(0.0))?,
-            }),
-            "kl" => Some(Criterion::Kl {
-                threshold: parts.get(1)?.parse().ok()?,
-                min_steps: parts
-                    .get(2)
-                    .map(|t| t.parse().ok())
-                    .unwrap_or(Some(0))?,
-            }),
-            "fixed" => Some(Criterion::Fixed {
-                step: parts.get(1)?.parse().ok()?,
-            }),
-            _ => None,
+            Decision::Halt { reason } => Some(reason),
+            Decision::Continue => None,
         }
     }
 }
 
-/// Mutable per-request evaluation state.
-#[derive(Clone, Debug, Default)]
-pub struct CriterionState {
-    /// consecutive low-change steps (Patience)
-    run: usize,
-    /// steps observed so far
-    steps: usize,
-}
+/// An early-exit policy: per-request mutable state + the halting rule.
+///
+/// Contract: `observe` is called once per executed denoise step with the
+/// 0-based index of the step that just completed; calls are consecutive
+/// from 0 between `reset`s.  Implementations must be cheap — `observe`
+/// sits on the serving hot path between device steps.
+pub trait HaltPolicy: Send {
+    /// Feed one completed step's statistics; decide whether to stop.
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision;
 
-impl CriterionState {
-    pub fn reset(&mut self) {
-        *self = CriterionState::default();
+    /// Clear per-request state (policies are cloned into batch slots and
+    /// reset on admission).
+    fn reset(&mut self) {}
+
+    /// Short primitive name (`"entropy"`, `"any"`, ...) used for display
+    /// and halt-reason attribution.
+    fn name(&self) -> &'static str;
+
+    /// Canonical spec string; `parse_policy(p.to_spec())` reconstructs an
+    /// equivalent policy (single source of truth for the wire format).
+    fn to_spec(&self) -> String;
+
+    /// Decide before any step has run.  A `fixed:0` budget resolves here,
+    /// letting the engine answer without occupying a batch slot.
+    fn preflight(&self) -> Decision {
+        Decision::Continue
     }
 
-    /// Feed one step's statistics; returns true when the criterion fires.
-    /// `step` is the 0-based index of the step that just completed.
-    pub fn observe(&mut self, crit: &Criterion, stats: &StepStats) -> bool {
-        let step = self.steps;
-        self.steps += 1;
-        match *crit {
-            Criterion::None => false,
-            Criterion::Fixed { step: s } => step + 1 >= s,
-            Criterion::Entropy { threshold } => stats.entropy <= threshold,
-            Criterion::Kl { threshold, min_steps } => {
-                // the first step has no meaningful previous distribution
-                step > 0 && self.steps >= min_steps && stats.kl <= threshold
-            }
-            Criterion::Patience { patience, tolerance } => {
-                if step > 0 && stats.switches <= tolerance {
-                    self.run += 1;
-                } else {
-                    self.run = 0;
-                }
-                self.run >= patience
-            }
-        }
+    /// Clone into a boxed policy (object-safe `Clone`).
+    fn clone_box(&self) -> BoxedPolicy;
+}
+
+/// Owned, type-erased policy — what requests and batch slots hold.
+pub type BoxedPolicy = Box<dyn HaltPolicy>;
+
+impl Clone for BoxedPolicy {
+    fn clone(&self) -> BoxedPolicy {
+        self.clone_box()
+    }
+}
+
+impl std::fmt::Debug for BoxedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "HaltPolicy({})", self.to_spec())
     }
 }
 
@@ -118,7 +108,7 @@ impl CriterionState {
 mod tests {
     use super::*;
 
-    fn stats(entropy: f32, kl: f32, switches: f32) -> StepStats {
+    pub(crate) fn stats(entropy: f32, kl: f32, switches: f32) -> StepStats {
         StepStats {
             entropy,
             kl,
@@ -127,103 +117,356 @@ mod tests {
         }
     }
 
+    /// Drive a policy over a trace; return the 1-based exit step and
+    /// reason, or None if it never fires.
+    pub(crate) fn drive(
+        policy: &mut dyn HaltPolicy,
+        trace: &[StepStats],
+    ) -> Option<(usize, &'static str)> {
+        policy.reset();
+        if let Decision::Halt { reason } = policy.preflight() {
+            return Some((0, reason));
+        }
+        for (i, st) in trace.iter().enumerate() {
+            if let Decision::Halt { reason } = policy.observe(i, st) {
+                return Some((i + 1, reason));
+            }
+        }
+        None
+    }
+
     #[test]
     fn entropy_fires_below_threshold() {
-        let c = Criterion::Entropy { threshold: 0.5 };
-        let mut s = CriterionState::default();
-        assert!(!s.observe(&c, &stats(2.0, 1.0, 5.0)));
-        assert!(!s.observe(&c, &stats(0.6, 1.0, 5.0)));
-        assert!(s.observe(&c, &stats(0.4, 1.0, 5.0)));
+        let mut p = Entropy::new(0.5);
+        assert!(!p.observe(0, &stats(2.0, 1.0, 5.0)).halted());
+        assert!(!p.observe(1, &stats(0.6, 1.0, 5.0)).halted());
+        assert_eq!(
+            p.observe(2, &stats(0.4, 1.0, 5.0)),
+            Decision::Halt { reason: "entropy" }
+        );
     }
 
     #[test]
     fn kl_respects_min_steps_and_first_step() {
-        let c = Criterion::Kl {
-            threshold: 1e-3,
-            min_steps: 3,
-        };
-        let mut s = CriterionState::default();
+        let mut p = Kl::new(1e-3, 3);
         // step 0: never fires (no previous distribution)
-        assert!(!s.observe(&c, &stats(1.0, 0.0, 0.0)));
-        assert!(!s.observe(&c, &stats(1.0, 0.0, 0.0))); // steps=2 < 3
-        assert!(s.observe(&c, &stats(1.0, 1e-4, 0.0))); // steps=3 >= 3
+        assert!(!p.observe(0, &stats(1.0, 0.0, 0.0)).halted());
+        assert!(!p.observe(1, &stats(1.0, 0.0, 0.0)).halted()); // 2 < 3
+        assert_eq!(
+            p.observe(2, &stats(1.0, 1e-4, 0.0)),
+            Decision::Halt { reason: "kl" }
+        );
     }
 
     #[test]
     fn patience_requires_consecutive_run() {
-        let c = Criterion::Patience {
-            patience: 3,
-            tolerance: 0.0,
-        };
-        let mut s = CriterionState::default();
-        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // step 0 ignored
-        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=1
-        assert!(!s.observe(&c, &stats(0.0, 0.0, 2.0))); // broken -> 0
-        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=1
-        assert!(!s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=2
-        assert!(s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=3 -> fire
-    }
-
-    #[test]
-    fn fixed_fires_exactly_at_step() {
-        let c = Criterion::Fixed { step: 2 };
-        let mut s = CriterionState::default();
-        assert!(!s.observe(&c, &stats(9.0, 9.0, 9.0)));
-        assert!(s.observe(&c, &stats(9.0, 9.0, 9.0)));
-    }
-
-    #[test]
-    fn none_never_fires_property() {
-        let mut s = CriterionState::default();
-        let mut r = crate::util::prng::Prng::new(3);
-        for _ in 0..500 {
-            let st = stats(
-                r.uniform_f32(),
-                r.uniform_f32() * 1e-6,
-                0.0,
-            );
-            assert!(!s.observe(&Criterion::None, &st));
-        }
-    }
-
-    #[test]
-    fn parse_roundtrip() {
+        let mut p = Patience::new(3, 0.0);
+        assert!(!p.observe(0, &stats(0.0, 0.0, 0.0)).halted()); // step 0 ignored
+        assert!(!p.observe(1, &stats(0.0, 0.0, 0.0)).halted()); // run=1
+        assert!(!p.observe(2, &stats(0.0, 0.0, 2.0)).halted()); // broken -> 0
+        assert!(!p.observe(3, &stats(0.0, 0.0, 0.0)).halted()); // run=1
+        assert!(!p.observe(4, &stats(0.0, 0.0, 0.0)).halted()); // run=2
         assert_eq!(
-            Criterion::parse("entropy:0.5"),
-            Some(Criterion::Entropy { threshold: 0.5 })
+            p.observe(5, &stats(0.0, 0.0, 0.0)),
+            Decision::Halt { reason: "patience" }
         );
-        assert_eq!(
-            Criterion::parse("patience:20"),
-            Some(Criterion::Patience {
-                patience: 20,
-                tolerance: 0.0
-            })
-        );
-        assert_eq!(
-            Criterion::parse("kl:0.001:250"),
-            Some(Criterion::Kl {
-                threshold: 0.001,
-                min_steps: 250
-            })
-        );
-        assert_eq!(
-            Criterion::parse("fixed:600"),
-            Some(Criterion::Fixed { step: 600 })
-        );
-        assert_eq!(Criterion::parse("none"), Some(Criterion::None));
-        assert_eq!(Criterion::parse("bogus:1"), None);
-        assert_eq!(Criterion::parse("entropy"), None);
     }
 
     #[test]
     fn patience_tolerance_allows_small_changes() {
-        let c = Criterion::Patience {
-            patience: 2,
-            tolerance: 1.5,
-        };
-        let mut s = CriterionState::default();
-        s.observe(&c, &stats(0.0, 0.0, 9.0)); // step 0
-        assert!(!s.observe(&c, &stats(0.0, 0.0, 1.0))); // within tol, run=1
-        assert!(s.observe(&c, &stats(0.0, 0.0, 0.0))); // run=2 -> fire
+        let mut p = Patience::new(2, 1.5);
+        assert!(!p.observe(0, &stats(0.0, 0.0, 9.0)).halted());
+        assert!(!p.observe(1, &stats(0.0, 0.0, 1.0)).halted()); // within tol
+        assert!(p.observe(2, &stats(0.0, 0.0, 0.0)).halted());
+    }
+
+    #[test]
+    fn reset_clears_patience_run() {
+        let mut p = Patience::new(2, 0.0);
+        p.observe(0, &stats(0.0, 0.0, 0.0));
+        p.observe(1, &stats(0.0, 0.0, 0.0));
+        p.reset();
+        assert!(!p.observe(0, &stats(0.0, 0.0, 0.0)).halted());
+        assert!(!p.observe(1, &stats(0.0, 0.0, 0.0)).halted());
+        assert!(p.observe(2, &stats(0.0, 0.0, 0.0)).halted());
+    }
+
+    #[test]
+    fn fixed_fires_exactly_at_step() {
+        let mut p = Fixed::new(2);
+        assert!(!p.observe(0, &stats(9.0, 9.0, 9.0)).halted());
+        assert_eq!(
+            p.observe(1, &stats(9.0, 9.0, 9.0)),
+            Decision::Halt { reason: "fixed" }
+        );
+    }
+
+    #[test]
+    fn fixed_zero_resolves_in_preflight() {
+        // a zero-step budget halts before any step runs — the engine
+        // answers such requests without occupying a batch slot
+        let p = Fixed::new(0);
+        assert_eq!(p.preflight(), Decision::Halt { reason: "fixed" });
+        assert_eq!(Fixed::new(1).preflight(), Decision::Continue);
+        // and the DSL accepts it with the same semantics
+        let q = parse_policy("fixed:0").unwrap();
+        assert_eq!(q.preflight(), Decision::Halt { reason: "fixed" });
+        assert_eq!(drive(&mut *q.clone(), &[stats(1.0, 1.0, 1.0)]), Some((0, "fixed")));
+    }
+
+    #[test]
+    fn none_never_fires_property() {
+        let mut p = NoHalt;
+        let mut r = crate::util::prng::Prng::new(3);
+        for i in 0..500 {
+            let st = stats(r.uniform_f32(), r.uniform_f32() * 1e-6, 0.0);
+            assert!(!p.observe(i, &st).halted());
+        }
+    }
+
+    #[test]
+    fn norm_stable_fires_when_norms_converge() {
+        // norm_x relaxes toward norm_x0; rel gap <= 5% for 3 steps
+        let mut p = NormStable::new(0.05, 3);
+        let mut trace = Vec::new();
+        for i in 0..20 {
+            trace.push(StepStats {
+                norm_x0: 8.0,
+                norm_x: 8.0 + 8.0 * (-(i as f32)).exp(),
+                ..Default::default()
+            });
+        }
+        // gap/norm_x0 = e^{-i}: <=0.05 from i=3 on; 3 consecutive -> i=5
+        assert_eq!(drive(&mut p, &trace), Some((6, "norm")));
+    }
+
+    #[test]
+    fn kl_slope_fires_when_decay_flattens() {
+        // kl halves for 6 steps (rel decrease 0.5), then flattens to a
+        // 1% decay; flat threshold 5% with window 3
+        let mut p = KlSlope::new(0.05, 3);
+        let mut trace = Vec::new();
+        let mut kl = 1.0f32;
+        for i in 0..20 {
+            kl *= if i < 6 { 0.5 } else { 0.99 };
+            trace.push(stats(1.0, kl, 1.0));
+        }
+        // steps 7.. have rel decrease 0.01 <= 0.05; window 3 -> step 9
+        // (observe index 8), 1-based exit 9... first flat step is i=6
+        // (kl[6]=kl[5]*0.99), run=1 at i=6, 2 at i=7, 3 at i=8 -> exit 9
+        assert_eq!(drive(&mut p, &trace), Some((9, "klslope")));
+    }
+
+    #[test]
+    fn any_fires_on_first_inner_with_its_reason() {
+        let mut p = Any::new(vec![
+            Box::new(Entropy::new(0.5)),
+            Box::new(Fixed::new(4)),
+        ]);
+        let trace = vec![stats(1.0, 1.0, 1.0); 10];
+        assert_eq!(drive(&mut p, &trace), Some((4, "fixed")));
+        let mut p = Any::new(vec![
+            Box::new(Entropy::new(0.5)),
+            Box::new(Fixed::new(4)),
+        ]);
+        let trace = vec![stats(0.1, 1.0, 1.0); 10];
+        assert_eq!(drive(&mut p, &trace), Some((1, "entropy")));
+    }
+
+    #[test]
+    fn any_keeps_feeding_stateful_legs_while_suppressed() {
+        // min(20, any(entropy, patience)): the entropy leg fires during
+        // steps 9-19 but the guard suppresses those halts; the patience
+        // leg must keep observing through them so its run is intact the
+        // moment the guard lifts
+        let mut trace = Vec::new();
+        for i in 0..40 {
+            trace.push(stats(
+                if (8..=18).contains(&i) { 0.1 } else { 2.0 },
+                1.0,
+                if i >= 5 { 0.0 } else { 9.0 },
+            ));
+        }
+        let mut p = MinSteps::new(
+            20,
+            Box::new(Any::new(vec![
+                Box::new(Entropy::new(0.5)),
+                Box::new(Patience::new(10, 0.0)),
+            ])),
+        );
+        // patience run: 1 at step 5, 10 at step 14, 15 at step 19 — the
+        // guard lifts at step 20 (index 19) and patience fires there
+        assert_eq!(drive(&mut p, &trace), Some((20, "patience")));
+    }
+
+    #[test]
+    fn all_waits_for_every_inner_latched() {
+        // entropy fires at step 3, fixed at step 5; All fires at 5 even
+        // though entropy's signal is no longer low then (latched)
+        let mut trace = vec![stats(1.0, 1.0, 1.0); 10];
+        trace[2].entropy = 0.1; // only step 2 is low-entropy
+        let mut p = All::new(vec![
+            Box::new(Entropy::new(0.5)),
+            Box::new(Fixed::new(5)),
+        ]);
+        assert_eq!(drive(&mut p, &trace), Some((5, "fixed")));
+    }
+
+    #[test]
+    fn all_keeps_primitive_reason_under_suppression() {
+        // the conjunction completes at step 2 (reason "fixed") but the
+        // guard suppresses it until step 6 — the latched primitive
+        // reason must survive, never a synthetic "all"
+        let p = parse_policy("min(6,all(entropy:1000000000,fixed:2))").unwrap();
+        let trace = vec![stats(1.0, 1.0, 1.0); 10];
+        assert_eq!(drive(&mut *p.clone(), &trace), Some((6, "fixed")));
+    }
+
+    #[test]
+    fn min_steps_guard_suppresses_early_halts() {
+        let mut p = MinSteps::new(6, Box::new(Entropy::new(0.5)));
+        let trace = vec![stats(0.1, 1.0, 1.0); 10];
+        assert_eq!(drive(&mut p, &trace), Some((6, "entropy")));
+        // preflight passes through only with min == 0
+        assert!(!MinSteps::new(1, Box::new(Fixed::new(0))).preflight().halted());
+        assert!(MinSteps::new(0, Box::new(Fixed::new(0))).preflight().halted());
+    }
+
+    #[test]
+    fn ema_smoothing_delays_noisy_crossing() {
+        // raw entropy alternates 0.1 / 2.0: raw policy fires at step 1,
+        // the smoothed signal stays above threshold
+        let mut trace = Vec::new();
+        for i in 0..20 {
+            trace.push(stats(if i % 2 == 0 { 0.1 } else { 2.0 }, 1.0, 1.0));
+        }
+        let mut raw = Entropy::new(0.5);
+        assert_eq!(drive(&mut raw, &trace), Some((1, "entropy")));
+        let mut sm = Ema::new(0.2, Box::new(Entropy::new(0.5)));
+        // EMA starts at 0.1 (first sample) but relaxes toward the ~1.05
+        // mean; after step 1 it never re-crosses 0.5
+        let exit = drive(&mut sm, &trace);
+        assert_eq!(exit, Some((1, "entropy"))); // first sample seeds EMA low
+        // seeding with the high value keeps it above threshold for good
+        let mut sm = Ema::new(0.2, Box::new(Entropy::new(0.5)));
+        let mut shifted = trace.clone();
+        shifted.rotate_left(1); // starts at 2.0
+        assert_eq!(drive(&mut sm, &shifted), None);
+    }
+
+    #[test]
+    fn legacy_specs_parse_to_equivalent_policies() {
+        // behavior equivalence with the removed Criterion enum
+        let trace: Vec<StepStats> =
+            (0..100).map(|i| stats(2.0 - 0.03 * i as f32, 0.1, 1.0)).collect();
+        // entropy <= 0.5 at i where 2 - 0.03i <= 0.5 -> i >= 50
+        let p = parse_policy("entropy:0.5").unwrap();
+        assert_eq!(drive(&mut *p.clone(), &trace), Some((51, "entropy")));
+        assert_eq!(drive(&mut *parse_policy("fixed:600").unwrap(), &trace), None);
+        assert_eq!(
+            drive(&mut *parse_policy("fixed:60").unwrap(), &trace),
+            Some((60, "fixed"))
+        );
+        assert_eq!(drive(&mut *parse_policy("none").unwrap(), &trace), None);
+        assert_eq!(
+            drive(&mut *parse_policy("kl:0.2:30").unwrap(), &trace),
+            Some((30, "kl"))
+        );
+        let q = parse_policy("patience:20").unwrap();
+        let flat: Vec<StepStats> = (0..50).map(|_| stats(1.0, 1.0, 0.0)).collect();
+        assert_eq!(drive(&mut *q.clone(), &flat), Some((21, "patience")));
+    }
+
+    #[test]
+    fn spec_round_trips_through_to_spec() {
+        for spec in [
+            "entropy:0.5",
+            "patience:20:0",
+            "patience:20:1.5",
+            "kl:0.001:250",
+            "fixed:600",
+            "none",
+            "norm:0.05:3",
+            "klslope:0.02:5",
+            "any(entropy:0.5,patience:20:0)",
+            "all(entropy:0.25,kl:0.001:0)",
+            "min(50,entropy:0.25)",
+            "ema(0.3,entropy:0.25)",
+            "any(ema(0.25,entropy:0.5),min(10,kl:0.001:0),fixed:90)",
+        ] {
+            let p = parse_policy(spec)
+                .unwrap_or_else(|| panic!("{spec} must parse"));
+            assert_eq!(p.to_spec(), spec, "canonical form of {spec}");
+            let q = parse_policy(&p.to_spec()).unwrap();
+            assert_eq!(q.to_spec(), p.to_spec(), "round-trip of {spec}");
+        }
+        // legacy short forms normalize to canonical specs
+        assert_eq!(parse_policy("patience:20").unwrap().to_spec(), "patience:20:0");
+        assert_eq!(parse_policy("kl:0.001").unwrap().to_spec(), "kl:0.001:0");
+        assert_eq!(parse_policy("kl:1e-3:250").unwrap().to_spec(), "kl:0.001:250");
+        assert_eq!(parse_policy("norm:0.05").unwrap().to_spec(), "norm:0.05:3");
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        for bad in [
+            "",
+            "bogus:1",
+            "entropy",
+            "entropy:x",
+            "entropy:0.5:9",
+            "any()",
+            "any(entropy:0.5",
+            "any(entropy:0.5,)",
+            "all()",
+            "min(entropy:0.5)",
+            "min(x,entropy:0.5)",
+            "ema(0.3)",
+            "nope(entropy:0.5)",
+            "any(bogus:1,entropy:0.5)",
+        ] {
+            assert!(parse_policy(bad).is_none(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn registry_accepts_custom_primitives() {
+        // an out-of-tree policy: halt when switches exceed a threshold
+        #[derive(Clone, Copy)]
+        struct Churn {
+            limit: f32,
+        }
+        impl HaltPolicy for Churn {
+            fn observe(&mut self, _step: usize, st: &StepStats) -> Decision {
+                if st.switches >= self.limit {
+                    Decision::Halt { reason: "churn" }
+                } else {
+                    Decision::Continue
+                }
+            }
+            fn name(&self) -> &'static str {
+                "churn"
+            }
+            fn to_spec(&self) -> String {
+                format!("churn:{}", self.limit)
+            }
+            fn clone_box(&self) -> BoxedPolicy {
+                Box::new(*self)
+            }
+        }
+        let mut reg = Registry::builtin();
+        reg.register("churn", |args| {
+            if args.len() != 1 {
+                return None;
+            }
+            Some(Box::new(Churn {
+                limit: args[0].parse().ok()?,
+            }))
+        });
+        let p = reg.parse("any(churn:5,fixed:9)").unwrap();
+        let trace = vec![stats(1.0, 1.0, 7.0); 4];
+        assert_eq!(drive(&mut *p.clone(), &trace), Some((1, "churn")));
+        // custom names still unknown to the default registry
+        assert!(parse_policy("churn:5").is_none());
     }
 }

@@ -1,0 +1,310 @@
+//! Primitive halting policies: the paper's Algorithms 1-3, the fixed-step
+//! baseline, and two signals the closed enum API could not express
+//! (norm stabilisation, relative-KL-slope).
+
+use super::{BoxedPolicy, Decision, HaltPolicy, StepStats};
+
+/// Algorithm 1: halt when the entropy of p(x0|x_t, t) drops to
+/// `threshold`.
+#[derive(Clone, Copy, Debug)]
+pub struct Entropy {
+    pub threshold: f32,
+}
+
+impl Entropy {
+    pub fn new(threshold: f32) -> Entropy {
+        Entropy { threshold }
+    }
+}
+
+impl HaltPolicy for Entropy {
+    fn observe(&mut self, _step: usize, stats: &StepStats) -> Decision {
+        if stats.entropy <= self.threshold {
+            Decision::Halt { reason: "entropy" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "entropy"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("entropy:{}", self.threshold)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Algorithm 2: halt after `patience` consecutive steps whose argmax
+/// tokens changed at most `tolerance` positions.  Step 0 is ignored (no
+/// previous tokens to compare against).
+#[derive(Clone, Copy, Debug)]
+pub struct Patience {
+    pub patience: usize,
+    pub tolerance: f32,
+    run: usize,
+}
+
+impl Patience {
+    pub fn new(patience: usize, tolerance: f32) -> Patience {
+        Patience {
+            patience,
+            tolerance,
+            run: 0,
+        }
+    }
+}
+
+impl HaltPolicy for Patience {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        if step > 0 && stats.switches <= self.tolerance {
+            self.run += 1;
+        } else {
+            self.run = 0;
+        }
+        if self.run >= self.patience {
+            Decision::Halt { reason: "patience" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn reset(&mut self) {
+        self.run = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "patience"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("patience:{}:{}", self.patience, self.tolerance)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Algorithm 3: halt when KL(p_t || p_{t-1}) <= `threshold`, after at
+/// least `min_steps` steps (paper: min_steps ~ 0.25 N_max).  Step 0 never
+/// fires (no previous distribution).
+#[derive(Clone, Copy, Debug)]
+pub struct Kl {
+    pub threshold: f32,
+    pub min_steps: usize,
+}
+
+impl Kl {
+    pub fn new(threshold: f32, min_steps: usize) -> Kl {
+        Kl {
+            threshold,
+            min_steps,
+        }
+    }
+}
+
+impl HaltPolicy for Kl {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        if step > 0 && step + 1 >= self.min_steps && stats.kl <= self.threshold
+        {
+            Decision::Halt { reason: "kl" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "kl"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("kl:{}:{}", self.threshold, self.min_steps)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Fixed-step baseline: halt unconditionally once `step` steps ran.  A
+/// zero-step budget resolves in `preflight`, before any device step.
+#[derive(Clone, Copy, Debug)]
+pub struct Fixed {
+    pub step: usize,
+}
+
+impl Fixed {
+    pub fn new(step: usize) -> Fixed {
+        Fixed { step }
+    }
+}
+
+impl HaltPolicy for Fixed {
+    fn observe(&mut self, step: usize, _stats: &StepStats) -> Decision {
+        if step + 1 >= self.step {
+            Decision::Halt { reason: "fixed" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn preflight(&self) -> Decision {
+        if self.step == 0 {
+            Decision::Halt { reason: "fixed" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("fixed:{}", self.step)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Never halt (full-schedule baseline).
+#[derive(Clone, Copy, Debug)]
+pub struct NoHalt;
+
+impl HaltPolicy for NoHalt {
+    fn observe(&mut self, _step: usize, _stats: &StepStats) -> Decision {
+        Decision::Continue
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn to_spec(&self) -> String {
+        "none".to_string()
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Norm stabilisation: ||x|| relaxes toward ||x0_hat|| as denoising
+/// settles (paper Fig 2).  Halts after `patience` consecutive steps with
+/// |norm_x - norm_x0| <= threshold * norm_x0.
+#[derive(Clone, Copy, Debug)]
+pub struct NormStable {
+    pub threshold: f32,
+    pub patience: usize,
+    run: usize,
+}
+
+impl NormStable {
+    pub fn new(threshold: f32, patience: usize) -> NormStable {
+        NormStable {
+            threshold,
+            patience: patience.max(1),
+            run: 0,
+        }
+    }
+}
+
+impl HaltPolicy for NormStable {
+    fn observe(&mut self, _step: usize, stats: &StepStats) -> Decision {
+        let gap = (stats.norm_x - stats.norm_x0).abs();
+        if gap <= self.threshold * stats.norm_x0.max(1e-6) {
+            self.run += 1;
+        } else {
+            self.run = 0;
+        }
+        if self.run >= self.patience {
+            Decision::Halt { reason: "norm" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn reset(&mut self) {
+        self.run = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "norm"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("norm:{}:{}", self.threshold, self.patience)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Relative-KL-slope: halt when the per-step KL stops shrinking — the
+/// relative decrease (kl_prev - kl) / kl_prev stays at or below `flat`
+/// for `window` consecutive steps.  Scale-free alternative to an
+/// absolute KL threshold (robust across schedule lengths).
+#[derive(Clone, Copy, Debug)]
+pub struct KlSlope {
+    pub flat: f32,
+    pub window: usize,
+    prev: Option<f32>,
+    run: usize,
+}
+
+impl KlSlope {
+    pub fn new(flat: f32, window: usize) -> KlSlope {
+        KlSlope {
+            flat,
+            window: window.max(1),
+            prev: None,
+            run: 0,
+        }
+    }
+}
+
+impl HaltPolicy for KlSlope {
+    fn observe(&mut self, _step: usize, stats: &StepStats) -> Decision {
+        let rel_decrease = match self.prev {
+            Some(p) if p > 0.0 => (p - stats.kl) / p,
+            Some(_) => 0.0, // KL already at zero: flat
+            None => f32::INFINITY,
+        };
+        self.prev = Some(stats.kl);
+        if rel_decrease <= self.flat {
+            self.run += 1;
+        } else {
+            self.run = 0;
+        }
+        if self.run >= self.window {
+            Decision::Halt { reason: "klslope" }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn reset(&mut self) {
+        self.prev = None;
+        self.run = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "klslope"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("klslope:{}:{}", self.flat, self.window)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}

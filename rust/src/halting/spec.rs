@@ -1,0 +1,210 @@
+//! Spec DSL for halting policies — the single string form used by the
+//! CLI (`--criterion`), the JSON wire protocol, and experiment labels.
+//!
+//! Grammar (whitespace-insensitive at argument boundaries):
+//!
+//! ```text
+//! policy     := combinator | primitive
+//! combinator := "any" "(" policy {"," policy} ")"
+//!             | "all" "(" policy {"," policy} ")"
+//!             | "min" "(" INT "," policy ")"
+//!             | "ema" "(" FLOAT "," policy ")"
+//! primitive  := NAME {":" NUMBER}
+//! ```
+//!
+//! Built-in primitives: `entropy:T`, `patience:P[:TOL]`, `kl:T[:MIN]`,
+//! `fixed:N`, `none`, `norm:T[:P]`, `klslope:F[:W]`.  The bracketed
+//! arguments default to the legacy enum's values, so every pre-DSL spec
+//! string (`entropy:0.5`, `patience:20`, `kl:1e-3:250`, `fixed:600`,
+//! `none`) parses to an equivalent policy.  `HaltPolicy::to_spec` emits
+//! the canonical fully-argumented form and round-trips through
+//! [`parse_policy`].
+
+use super::combinators::{All, Any, Ema, MinSteps};
+use super::policies::{
+    Entropy, Fixed, Kl, KlSlope, NoHalt, NormStable, Patience,
+};
+use super::BoxedPolicy;
+
+/// Constructor for a primitive policy from its `:`-separated arguments.
+pub type PrimitiveCtor = fn(&[&str]) -> Option<BoxedPolicy>;
+
+/// Open registry of primitive policies.  `Registry::builtin()` knows the
+/// in-tree primitives; `register` adds out-of-tree ones (combinators are
+/// part of the grammar and compose over every registered primitive).
+pub struct Registry {
+    ctors: Vec<(&'static str, PrimitiveCtor)>,
+}
+
+impl Registry {
+    /// Registry with all in-tree primitives.
+    pub fn builtin() -> Registry {
+        let mut r = Registry { ctors: Vec::new() };
+        r.register("none", ctor_none);
+        r.register("entropy", ctor_entropy);
+        r.register("patience", ctor_patience);
+        r.register("kl", ctor_kl);
+        r.register("fixed", ctor_fixed);
+        r.register("norm", ctor_norm);
+        r.register("klslope", ctor_klslope);
+        r
+    }
+
+    /// Add (or shadow) a primitive; later registrations win.
+    pub fn register(&mut self, name: &'static str, ctor: PrimitiveCtor) {
+        self.ctors.retain(|(n, _)| *n != name);
+        self.ctors.push((name, ctor));
+    }
+
+    /// Parse a spec string into a policy; `None` on any malformed input.
+    pub fn parse(&self, s: &str) -> Option<BoxedPolicy> {
+        let s = s.trim();
+        if s.is_empty() {
+            return None;
+        }
+        // combinator form: name(arg,...)
+        if let Some(open) = s.find('(') {
+            if !s.ends_with(')') {
+                return None;
+            }
+            let name = s[..open].trim();
+            let args = split_top_level(&s[open + 1..s.len() - 1])?;
+            return match name {
+                "any" => Some(Box::new(Any::new(self.parse_all(&args)?))),
+                "all" => Some(Box::new(All::new(self.parse_all(&args)?))),
+                "min" => {
+                    if args.len() != 2 {
+                        return None;
+                    }
+                    let min: usize = args[0].trim().parse().ok()?;
+                    Some(Box::new(MinSteps::new(min, self.parse(args[1])?)))
+                }
+                "ema" => {
+                    if args.len() != 2 {
+                        return None;
+                    }
+                    let alpha: f32 = args[0].trim().parse().ok()?;
+                    if alpha.is_nan() || alpha <= 0.0 || alpha > 1.0 {
+                        return None;
+                    }
+                    Some(Box::new(Ema::new(alpha, self.parse(args[1])?)))
+                }
+                _ => None,
+            };
+        }
+        // primitive form: name[:arg]*
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        let (name, args) = (parts[0], &parts[1..]);
+        self.ctors
+            .iter()
+            .find(|(n, _)| *n == name)
+            .and_then(|(_, ctor)| ctor(args))
+    }
+
+    fn parse_all(&self, args: &[&str]) -> Option<Vec<BoxedPolicy>> {
+        if args.is_empty() {
+            return None;
+        }
+        args.iter().map(|a| self.parse(a)).collect()
+    }
+}
+
+/// Parse with the built-in registry (the common path: CLI and wire).
+pub fn parse_policy(s: &str) -> Option<BoxedPolicy> {
+    Registry::builtin().parse(s)
+}
+
+/// Split on commas at parenthesis depth 0; rejects unbalanced parens and
+/// empty arguments.
+fn split_top_level(s: &str) -> Option<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.checked_sub(1)?,
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return None;
+    }
+    out.push(&s[start..]);
+    if out.iter().any(|a| a.trim().is_empty()) {
+        return None;
+    }
+    Some(out)
+}
+
+fn ctor_none(args: &[&str]) -> Option<BoxedPolicy> {
+    args.is_empty().then(|| Box::new(NoHalt) as BoxedPolicy)
+}
+
+fn ctor_entropy(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.len() != 1 {
+        return None;
+    }
+    Some(Box::new(Entropy::new(args[0].parse().ok()?)))
+}
+
+fn ctor_patience(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.is_empty() || args.len() > 2 {
+        return None;
+    }
+    let patience: usize = args[0].parse().ok()?;
+    let tolerance: f32 = match args.get(1) {
+        Some(t) => t.parse().ok()?,
+        None => 0.0,
+    };
+    Some(Box::new(Patience::new(patience, tolerance)))
+}
+
+fn ctor_kl(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.is_empty() || args.len() > 2 {
+        return None;
+    }
+    let threshold: f32 = args[0].parse().ok()?;
+    let min_steps: usize = match args.get(1) {
+        Some(m) => m.parse().ok()?,
+        None => 0,
+    };
+    Some(Box::new(Kl::new(threshold, min_steps)))
+}
+
+fn ctor_fixed(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.len() != 1 {
+        return None;
+    }
+    // fixed:0 is deliberately accepted: a zero-step budget resolves in
+    // preflight (see `Fixed::preflight`), not after one executed step
+    Some(Box::new(Fixed::new(args[0].parse().ok()?)))
+}
+
+fn ctor_norm(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.is_empty() || args.len() > 2 {
+        return None;
+    }
+    let threshold: f32 = args[0].parse().ok()?;
+    let patience: usize = match args.get(1) {
+        Some(p) => p.parse().ok()?,
+        None => 3,
+    };
+    Some(Box::new(NormStable::new(threshold, patience)))
+}
+
+fn ctor_klslope(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.is_empty() || args.len() > 2 {
+        return None;
+    }
+    let flat: f32 = args[0].parse().ok()?;
+    let window: usize = match args.get(1) {
+        Some(w) => w.parse().ok()?,
+        None => 5,
+    };
+    Some(Box::new(KlSlope::new(flat, window)))
+}

@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
 use repro::corpus::dataset::Masking;
 use repro::exp;
-use repro::halting::Criterion;
+use repro::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
 use repro::sampler::{Family, Session};
@@ -59,11 +59,16 @@ fn print_help() {
          \u{20}                                 ddlm_ck<k>.pbin checkpoints\n\
          train    --family ddlm|ssd|plaid|ar --steps N [--masking m]\n\
          \u{20}        [--tmax T] [--no-tw] [--out ckpt.pbin]\n\
-         gen      --family F [--steps N] [--criterion kl:1e-4:50] [--n 4]\n\
+         gen      --family F [--steps N] [--criterion SPEC] [--n 4]\n\
          \u{20}        [--prefix-len 32] [--noise 1.0]\n\
          serve    --family F [--addr 127.0.0.1:7411] [--batch 8]\n\
-         client   --addr HOST:PORT [--n 16] [--steps N] [--criterion C]\n\
-         exp      <id>|all  [--quick]   ids: {}",
+         client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
+         exp      <id>|all  [--quick]   ids: {}\n\
+         \n\
+         criterion SPEC is the halting-policy DSL: entropy:T, \n\
+         patience:P[:TOL], kl:T[:MIN], fixed:N, none, norm:T[:P],\n\
+         klslope:F[:W], and combinators any(p,...), all(p,...),\n\
+         min(N,p), ema(A,p) — e.g. 'any(entropy:0.25,patience:20)'",
         exp::all_ids().join(" ")
     );
 }
@@ -167,10 +172,10 @@ fn cmd_gen(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 4);
     let prefix_len = args.usize_or("prefix-len", 0);
     let noise = args.f64_or("noise", 1.0) as f32;
-    let crit = match args.get("criterion") {
-        Some(c) => Criterion::parse(c)
+    let policy = match args.get("criterion") {
+        Some(c) => parse_policy(c)
             .ok_or_else(|| anyhow::anyhow!("bad --criterion {c}"))?,
-        None => Criterion::None,
+        None => Box::new(NoHalt) as BoxedPolicy,
     };
 
     let ckpt = format!("{runs}/{}.pbin", fam.name());
@@ -202,10 +207,22 @@ fn cmd_gen(args: &Args) -> Result<()> {
         for slot in group.len()..batch {
             session.release_slot(slot);
         }
-        let mut states: Vec<repro::halting::CriterionState> =
-            group.iter().map(|_| Default::default()).collect();
+        let mut policies: Vec<BoxedPolicy> =
+            group.iter().map(|_| policy.clone()).collect();
         let mut exits = vec![usize::MAX; group.len()];
+        for (slot, p) in policies.iter_mut().enumerate() {
+            p.reset();
+            if p.preflight().halted() {
+                exits[slot] = 0;
+                session.release_slot(slot);
+            }
+        }
+        // skip device work entirely if every slot resolved in preflight
+        let mut live_slots = exits.iter().any(|&e| e == usize::MAX);
         for step in 0..n_steps {
+            if !live_slots {
+                break;
+            }
             let stats = session.step()?;
             let mut any_running = false;
             for (slot, _) in group.iter().enumerate() {
@@ -213,7 +230,7 @@ fn cmd_gen(args: &Args) -> Result<()> {
                     continue; // already halted
                 }
                 if let Some(st) = stats[slot] {
-                    if states[slot].observe(&crit, &st) {
+                    if policies[slot].observe(step, &st).halted() {
                         exits[slot] = step + 1;
                         session.release_slot(slot);
                     } else {
@@ -221,17 +238,24 @@ fn cmd_gen(args: &Args) -> Result<()> {
                     }
                 }
             }
-            if !any_running {
-                break;
-            }
+            live_slots = any_running;
         }
         for (slot, &i) in group.iter().enumerate() {
-            let toks = session.slot_output(slot);
             let exit = if exits[slot] == usize::MAX {
                 n_steps
             } else {
                 exits[slot]
             };
+            if exit == 0 {
+                // preflight halt: no denoise step ran, the slot holds
+                // raw initialization noise, not model output
+                println!(
+                    "--- sample {i} (exit 0/{n_steps} steps) ---\n\
+                     (no steps executed)"
+                );
+                continue;
+            }
+            let toks = session.slot_output(slot);
             println!(
                 "--- sample {i} (exit {exit}/{n_steps} steps) ---\n{}",
                 tok.decode(&toks)
@@ -269,7 +293,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     let mut total_steps = 0usize;
     for i in 0..n {
         let mut req = GenRequest::new(i as u64, steps);
-        req.criterion = Criterion::parse(&crit)
+        req.policy = parse_policy(&crit)
             .ok_or_else(|| anyhow::anyhow!("bad --criterion"))?;
         let resp = client.generate(&req)?;
         total_steps += resp.steps_executed;
@@ -277,7 +301,10 @@ fn cmd_client(args: &Args) -> Result<()> {
             "req {i}: {} steps, {:.1} ms{}",
             resp.steps_executed,
             resp.latency_ms,
-            if resp.halted_early { " (halted early)" } else { "" }
+            match &resp.halt_reason {
+                Some(r) => format!(" (halted early: {r})"),
+                None => String::new(),
+            }
         );
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -1,8 +1,8 @@
 //! Integration: the engine's continuous batcher end-to-end — admission,
-//! early-exit slot recycling, metrics accounting.
+//! early-exit slot recycling, per-policy halting, metrics accounting.
 
 use repro::coordinator::{start, EngineConfig, GenRequest};
-use repro::halting::Criterion;
+use repro::halting::parse_policy;
 use repro::sampler::Family;
 use repro::util::json::Json;
 
@@ -27,7 +27,7 @@ fn engine_serves_mixed_criteria_batch() {
     for i in 0..10u64 {
         let mut req = GenRequest::new(i, 12);
         if i % 2 == 0 {
-            req.criterion = Criterion::Fixed { step: 5 };
+            req.policy = parse_policy("fixed:5").unwrap();
         }
         rxs.push((i, engine.submit(req)));
     }
@@ -40,10 +40,12 @@ fn engine_serves_mixed_criteria_batch() {
         if i % 2 == 0 {
             assert_eq!(resp.steps_executed, 5, "id {i}");
             assert!(resp.halted_early);
+            assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
             early += 1;
         } else {
             assert_eq!(resp.steps_executed, 12, "id {i}");
             assert!(!resp.halted_early);
+            assert_eq!(resp.halt_reason, None);
             full += 1;
         }
     }
@@ -60,11 +62,84 @@ fn engine_serves_mixed_criteria_batch() {
         m.get("steps_executed").unwrap().as_f64().unwrap(),
         5.0 * 5.0 + 5.0 * 12.0
     );
+    // every early halt is attributed to the fixed policy
+    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 5.0);
     // continuous batching must beat 10 sequential runs: with batch=4 and
     // 85 total steps, device calls must be well under 85
     let calls = m.get("device_calls").unwrap().as_f64().unwrap();
     assert!(calls < 60.0, "device_calls={calls}");
 
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn engine_serves_mixed_policy_batch_with_combinators() {
+    // one batch, four different policies — each request must halt per
+    // its own policy, freed slots must be recycled for the queue tail
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.batch = 4;
+    let (engine, join) = start(cfg);
+
+    // (spec, expected steps, expected reason) at a 16-step budget;
+    // entropy:1e9 fires on the very first observed step
+    let cases: &[(&str, usize, Option<&str>)] = &[
+        ("fixed:3", 3, Some("fixed")),
+        ("none", 16, None),
+        ("any(fixed:6,entropy:-1)", 6, Some("fixed")),
+        ("min(4,entropy:1000000000)", 4, Some("entropy")),
+        ("all(entropy:1000000000,fixed:5)", 5, Some("fixed")),
+        // queue tail: admitted into slots freed by the early exits above
+        ("fixed:2", 2, Some("fixed")),
+        ("ema(0.5,entropy:1000000000)", 1, Some("entropy")),
+    ];
+    let mut rxs = Vec::new();
+    for (i, (spec, ..)) in cases.iter().enumerate() {
+        let mut req = GenRequest::new(i as u64, 16);
+        req.policy = parse_policy(spec).unwrap();
+        rxs.push(engine.submit(req));
+    }
+    for (rx, (spec, steps, reason)) in rxs.into_iter().zip(cases) {
+        let resp = rx.recv().unwrap();
+        assert_eq!(
+            resp.steps_executed, *steps,
+            "policy {spec} ran {} steps",
+            resp.steps_executed
+        );
+        assert_eq!(resp.halt_reason.as_deref(), *reason, "policy {spec}");
+        assert_eq!(resp.halted_early, reason.is_some(), "policy {spec}");
+    }
+
+    let m = engine.metrics().unwrap();
+    // reasons aggregate across plain and combinator policies alike
+    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 4.0);
+    assert_eq!(m.get("halted_by_entropy").unwrap().as_f64().unwrap(), 2.0);
+    // 7 requests x 16 budget = 112; executed 3+16+6+4+5+2+1 = 37; the
+    // recycling bound: batch=4 must finish in far fewer device calls
+    assert_eq!(m.get("steps_executed").unwrap().as_f64().unwrap(), 37.0);
+    let calls = m.get("device_calls").unwrap().as_f64().unwrap();
+    assert!(calls < 37.0, "device_calls={calls}");
+
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn zero_step_budget_resolves_without_device_steps() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, join) = start(cfg);
+    let mut req = GenRequest::new(1, 10);
+    req.policy = parse_policy("fixed:0").unwrap();
+    let resp = engine.generate(req).unwrap();
+    assert_eq!(resp.steps_executed, 0);
+    assert!(resp.halted_early);
+    assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
+    assert!(resp.tokens.is_empty());
+    let m = engine.metrics().unwrap();
+    assert_eq!(m.get("steps_saved").unwrap().as_f64().unwrap(), 10.0);
+    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 1.0);
     engine.shutdown();
     join.join().unwrap().unwrap();
 }

@@ -1,9 +1,9 @@
-//! Integration: the generation session + halting criteria over real
-//! artifacts — slot isolation, prefix clamping, criterion firing.
+//! Integration: the generation session + halting policies over real
+//! artifacts — slot isolation, prefix clamping, policy firing.
 
 use std::rc::Rc;
 
-use repro::halting::{Criterion, CriterionState};
+use repro::halting::{parse_policy, HaltPolicy};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
 use repro::sampler::{Family, Session};
@@ -107,7 +107,7 @@ fn mid_flight_slot_recycling_works() {
 }
 
 #[test]
-fn fixed_criterion_halts_generation_loop() {
+fn fixed_policy_halts_generation_loop() {
     let Some(dir) = artifacts_dir() else { return };
     let rt = Runtime::new(&dir).unwrap();
     let store = Rc::new(ParamStore::load_init(&dir, "plaid").unwrap());
@@ -115,17 +115,46 @@ fn fixed_criterion_halts_generation_loop() {
     let mut s =
         Session::new(&rt, Family::Plaid, store, 1, m.seq_len).unwrap();
     s.reset_slot(0, 9, 50, 1.0, m.t_max, m.t_min, &[]);
-    let crit = Criterion::Fixed { step: 6 };
-    let mut cs = CriterionState::default();
+    let mut policy = parse_policy("fixed:6").unwrap();
+    policy.reset();
     let mut executed = 0;
-    for _ in 0..50 {
+    let mut reason = None;
+    for step in 0..50 {
         let st = s.step().unwrap()[0].unwrap();
         executed += 1;
-        if cs.observe(&crit, &st) {
+        let d = policy.observe(step, &st);
+        if d.halted() {
+            reason = d.reason();
             break;
         }
     }
     assert_eq!(executed, 6);
+    assert_eq!(reason, Some("fixed"));
+}
+
+#[test]
+fn combinator_policy_halts_generation_loop() {
+    // any(fixed:7, entropy:-1): the entropy leg can never fire, so the
+    // composed policy must exit via the fixed leg with its reason
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(&dir, "ddlm").unwrap());
+    let m = rt.manifest.model.clone();
+    let mut s =
+        Session::new(&rt, Family::Ddlm, store, 1, m.seq_len).unwrap();
+    s.reset_slot(0, 17, 50, 1.0, m.t_max, m.t_min, &[]);
+    let mut policy = parse_policy("any(fixed:7,entropy:-1)").unwrap();
+    policy.reset();
+    let mut exit = None;
+    for step in 0..50 {
+        let st = s.step().unwrap()[0].unwrap();
+        let d = policy.observe(step, &st);
+        if d.halted() {
+            exit = Some((step + 1, d.reason().unwrap()));
+            break;
+        }
+    }
+    assert_eq!(exit, Some((7, "fixed")));
 }
 
 #[test]

@@ -1,7 +1,8 @@
-//! Integration: TCP JSON-lines server round-trips over a live engine.
+//! Integration: TCP JSON-lines server round-trips over a live engine —
+//! policy specs on the wire, halt reasons in responses and metrics.
 
 use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
-use repro::halting::Criterion;
+use repro::halting::parse_policy;
 use repro::sampler::Family;
 use repro::util::json::Json;
 
@@ -23,16 +24,23 @@ fn server_roundtrip_and_metrics() {
 
     let mut client = Client::connect(&server.addr).unwrap();
     let mut req = GenRequest::new(42, 5);
-    req.criterion = Criterion::Fixed { step: 3 };
+    req.policy = parse_policy("fixed:3").unwrap();
     let resp = client.generate(&req).unwrap();
     assert_eq!(resp.id, 42);
     assert_eq!(resp.steps_executed, 3);
     assert!(resp.halted_early);
+    assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
     assert_eq!(resp.tokens.len(), 64);
 
     let m = client.metrics().unwrap();
     assert!(
         m.get("requests_completed").unwrap().as_f64().unwrap() >= 1.0
+    );
+    // per-reason halt counters are part of the metrics snapshot
+    assert!(
+        m.get("halted_by_fixed").unwrap().as_f64().unwrap() >= 1.0,
+        "missing halted_by_fixed in {}",
+        m.encode()
     );
 
     // concurrent clients
@@ -55,6 +63,34 @@ fn server_roundtrip_and_metrics() {
 }
 
 #[test]
+fn server_serves_combinator_policy_end_to_end() {
+    // a composed policy travels the wire as its spec string, halts in
+    // the engine, and comes back with the firing primitive's reason
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, _join) = start(cfg);
+    let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let mut req = GenRequest::new(7, 12);
+    req.policy = parse_policy("any(entropy:-1,min(4,fixed:2))").unwrap();
+    // sanity: the request JSON carries the canonical spec
+    assert_eq!(
+        req.to_json().get("criterion").and_then(Json::as_str),
+        Some("any(entropy:-1,min(4,fixed:2))")
+    );
+    let resp = client.generate(&req).unwrap();
+    // fixed:2 fires from step 2 but the min() guard holds it to step 4
+    assert_eq!(resp.steps_executed, 4);
+    assert!(resp.halted_early);
+    assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 1.0);
+    engine.shutdown();
+}
+
+#[test]
 fn server_rejects_malformed_lines() {
     let Some(dir) = artifacts_dir() else { return };
     let cfg = EngineConfig::new(&dir, Family::Ddlm);
@@ -63,6 +99,17 @@ fn server_rejects_malformed_lines() {
     let mut client = Client::connect(&server.addr).unwrap();
 
     let r = client.roundtrip(&Json::parse("{\"junk\": 1}").unwrap()).unwrap();
+    assert!(r.get("error").is_some());
+
+    // malformed policy specs are rejected at the wire boundary
+    let r = client
+        .roundtrip(
+            &Json::parse(
+                r#"{"id":1,"steps":4,"criterion":"any(entropy:0.5"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
     assert!(r.get("error").is_some());
 
     // and the connection still works afterwards

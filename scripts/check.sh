@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Repo gate: formatting, lints, tests.  Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (all targets, warnings are errors) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "check.sh: all green"
