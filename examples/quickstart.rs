@@ -12,7 +12,7 @@ use repro::corpus::dataset::Dataset;
 use repro::halting::{HaltPolicy, Kl};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
-use repro::sampler::{Family, Session};
+use repro::sampler::{Family, Session, SlotRequest};
 
 fn main() -> anyhow::Result<()> {
     repro::util::log::init();
@@ -38,7 +38,9 @@ fn main() -> anyhow::Result<()> {
     let prompts = ds.val_prompts(1, batch);
     for (slot, p) in prompts.iter().enumerate() {
         session.reset_slot(
-            slot, 100 + slot as u64, n_steps, 1.0, m.t_max, m.t_min, &p[..32],
+            slot,
+            &SlotRequest::new(100 + slot as u64, n_steps, m.t_max, m.t_min)
+                .prefix(&p[..32]),
         );
     }
 

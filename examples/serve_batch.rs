@@ -58,14 +58,16 @@ fn main() -> anyhow::Result<()> {
     let n = args.usize_or("n", 24);
     let n_steps = args.usize_or("steps", 120);
 
+    // two shards of the same family: a batch-1 latency worker next to a
+    // batch-8 throughput worker, fed from one priority-classed queue
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.batch = 8;
+    cfg.worker_batches = vec![1, 8];
     if std::path::Path::new("runs/ddlm.pbin").exists() {
         cfg.checkpoint = Some("runs/ddlm.pbin".into());
     }
     let (engine, _join) = start(cfg);
-    let server = Server::start("127.0.0.1:0", engine.clone())?;
-    println!("coordinator up on {} (batch=8, ddlm)", server.addr);
+    let mut server = Server::start("127.0.0.1:0", engine.clone())?;
+    println!("coordinator up on {} (workers b1+b8, ddlm)", server.addr);
 
     let ds = Dataset::new(512, 64);
     let prompts = ds.val_prompts(3, 8);
@@ -95,5 +97,6 @@ fn main() -> anyhow::Result<()> {
         m.get("latency_p95_ms").and_then(Json::as_f64).unwrap_or(0.0),
     );
     engine.shutdown();
+    server.stop();
     Ok(())
 }

@@ -13,7 +13,7 @@ use repro::corpus::dataset::Dataset;
 use repro::eval::arnll::ArScorer;
 use repro::halting::{parse_policy, BoxedPolicy, HaltPolicy};
 use repro::runtime::Runtime;
-use repro::sampler::{Family, Session};
+use repro::sampler::{Family, Session, SlotRequest};
 use repro::train::{TrainConfig, TrainTarget, Trainer};
 use repro::util::cli::Args;
 use repro::util::table::sparkline;
@@ -86,8 +86,9 @@ fn main() -> anyhow::Result<()> {
             Session::new(&rt, Family::Ddlm, store.clone(), batch, m.seq_len)?;
         for (slot, p) in prompts.iter().enumerate() {
             session.reset_slot(
-                slot, 100 + slot as u64, n_steps, 1.0, m.t_max, m.t_min,
-                &p[..32],
+                slot,
+                &SlotRequest::new(100 + slot as u64, n_steps, m.t_max, m.t_min)
+                    .prefix(&p[..32]),
             );
         }
         let mut policies: Vec<BoxedPolicy> =

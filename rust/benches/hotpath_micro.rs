@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
-use repro::sampler::{Family, Session};
+use repro::sampler::{Family, Session, SlotRequest};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     // warmup
@@ -43,7 +43,13 @@ fn main() {
                 Session::new(&rt, fam, store, b, m.seq_len).unwrap();
             for slot in 0..b {
                 s.reset_slot(
-                    slot, slot as u64, 1_000_000, 1.0, m.t_max, m.t_min, &[],
+                    slot,
+                    &SlotRequest::new(
+                        slot as u64,
+                        1_000_000,
+                        m.t_max,
+                        m.t_min,
+                    ),
                 );
             }
             bench(

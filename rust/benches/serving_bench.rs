@@ -1,0 +1,150 @@
+//! Headline serving bench: drives the sharded scheduler/worker stack
+//! over TCP and writes `BENCH_serving.json` (p50/p95 latency, req/s,
+//! steps/s) so the serving-path perf trajectory is tracked PR-over-PR.
+//!
+//!     cargo bench --bench serving_bench
+//!     scripts/check.sh --bench
+//!
+//! Knobs: --n 32 --steps 120 --workers 2 --batch 8 --criterion SPEC
+//! (default: the paper's adaptive KL + entropy-fallback policy).
+//! Skips cleanly when artifacts are not built.
+
+use std::time::Instant;
+
+use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
+use repro::corpus::dataset::Dataset;
+use repro::halting::parse_policy;
+use repro::sampler::Family;
+use repro::util::cli::Args;
+use repro::util::json::Json;
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    repro::util::log::init();
+    let args = Args::from_env();
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!(
+            "serving_bench: no artifacts at {dir}/ — skipping \
+             (run `make artifacts`)"
+        );
+        return Ok(());
+    }
+    let n = args.usize_or("n", 32);
+    let n_steps = args.usize_or("steps", 120);
+    let workers = args.usize_or("workers", 2);
+    let batch = args.usize_or("batch", 8);
+    let spec = args
+        .get_or("criterion", "any(kl:0.0002:30,entropy:0.05)")
+        .to_string();
+    let policy = parse_policy(&spec)
+        .ok_or_else(|| anyhow::anyhow!("bad --criterion {spec:?}"))?;
+
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_batches = vec![batch; workers];
+    if std::path::Path::new("runs/ddlm.pbin").exists() {
+        cfg.checkpoint = Some("runs/ddlm.pbin".into());
+    }
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone())?;
+    println!(
+        "serving_bench: {workers} worker(s) x batch {batch} on {}",
+        server.addr
+    );
+
+    let ds = Dataset::new(512, 64);
+    let prompts = ds.val_prompts(3, 8);
+
+    // warmup: force every worker's one-off artifact compile off the clock
+    {
+        let mut c = Client::connect(&server.addr)?;
+        for i in 0..workers {
+            let mut req = GenRequest::new(1_000_000 + i as u64, 4);
+            req.policy = parse_policy("none").unwrap();
+            c.generate(&req)?;
+        }
+    }
+
+    // measured run: 4 client threads, Prefix-32 requests, one policy
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..4usize)
+        .map(|c| {
+            let addr = server.addr.clone();
+            let prompts = prompts.clone();
+            let policy = policy.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<(f64, usize)>> {
+                let mut client = Client::connect(&addr)?;
+                let mut out = Vec::new();
+                for i in (c..n).step_by(4) {
+                    let mut req = GenRequest::new(i as u64, n_steps);
+                    req.prefix = prompts[i % prompts.len()][..32].to_vec();
+                    req.policy = policy.clone();
+                    req.seed = 9000 + i as u64;
+                    let resp = client.generate(&req)?;
+                    out.push((resp.latency_ms, resp.steps_executed));
+                }
+                Ok(out)
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut total_steps = 0usize;
+    for h in handles {
+        for (lat, steps) in h.join().unwrap()? {
+            latencies.push(lat);
+            total_steps += steps;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = quantile(&latencies, 0.50);
+    let p95 = quantile(&latencies, 0.95);
+    let req_per_s = n as f64 / wall_s;
+    let steps_per_s = total_steps as f64 / wall_s;
+
+    let m = {
+        let mut c = Client::connect(&server.addr)?;
+        c.metrics()?
+    };
+    let device_calls = m
+        .get("device_calls")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("criterion", Json::str(spec.clone())),
+        ("n_requests", Json::num(n as f64)),
+        ("steps_budget", Json::num(n_steps as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("batch", Json::num(batch as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("req_per_s", Json::num(req_per_s)),
+        ("steps_per_s", Json::num(steps_per_s)),
+        ("latency_p50_ms", Json::num(p50)),
+        ("latency_p95_ms", Json::num(p95)),
+        (
+            "mean_steps",
+            Json::num(total_steps as f64 / n as f64),
+        ),
+        ("device_calls", Json::num(device_calls)),
+    ]);
+    std::fs::write("BENCH_serving.json", format!("{}\n", out.encode()))?;
+    println!(
+        "serving_bench: {n} reqs in {wall_s:.2}s — {req_per_s:.2} req/s, \
+         {steps_per_s:.0} steps/s, p50 {p50:.0} ms, p95 {p95:.0} ms \
+         -> BENCH_serving.json"
+    );
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap()?;
+    Ok(())
+}

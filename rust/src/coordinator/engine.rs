@@ -1,82 +1,50 @@
-//! The serving engine: a continuous batcher with early-exit slot recycling.
+//! The serving engine: a thin composition of the admission
+//! [`Scheduler`] and N worker shards ([`super::worker`]).
 //!
-//! One engine thread owns the (non-`Send`) PJRT runtime and a batched
-//! generation `Session`.  Requests arrive over a channel; the scheduler
-//! admits them into free batch slots immediately — *including slots freed
-//! mid-schedule by another request's early exit* (the per-slot timestep
-//! design in the step artifacts makes mixed-phase batches legal).  This is
-//! the serving-side payoff of the paper: halting doesn't just cut one
-//! request's latency, it raises fleet throughput because the freed slot
-//! starts the next request `saved_steps` earlier.
+//! `start()` builds one shared scheduler (bounded priority queue,
+//! deadlines, cancellation, backpressure) and spawns one worker thread
+//! per `EngineConfig::worker_batches` entry; each worker owns its own
+//! PJRT runtime and a batched `Session` bound to that batch size's
+//! compiled artifact.  This is the serving-side payoff of the paper:
+//! halting doesn't just cut one request's latency, it raises fleet
+//! throughput because every freed batch slot starts the next request
+//! `saved_steps` earlier — and with multiple shards, a small-batch
+//! worker can soak latency-sensitive traffic while large-batch workers
+//! soak throughput traffic.
 //!
-//! Scheduling policy: FIFO admission; a device step runs whenever at least
-//! one slot is active; responses are emitted the moment a slot's halting
-//! policy fires or its schedule exhausts.  Each running slot owns a boxed
-//! [`crate::halting::HaltPolicy`] cloned from its request, so arbitrary
-//! policy mixes (including combinators) coexist in one batch, and every
-//! early halt is attributed to the primitive reason that fired.
+//! [`EngineHandle`] is the cheap, cloneable front-end: blocking
+//! `submit`/`generate`, non-blocking `try_submit` (typed `overloaded`
+//! rejection), `cancel(id)`, a merged fleet `metrics()` snapshot, and
+//! `shutdown()` (drain then exit).
 
-use std::collections::VecDeque;
-use std::rc::Rc;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
-use crate::halting::{BoxedPolicy, Decision, HaltPolicy, StepStats};
-use crate::log_info;
-use crate::models::store::ParamStore;
-use crate::runtime::Runtime;
-use crate::sampler::{Family, Session};
+use super::scheduler::{CancelOutcome, GenOutcome, Scheduler, ServeError};
+use super::worker::{self, WorkerConfig};
+use crate::sampler::Family;
 use crate::util::json::Json;
-
-pub enum EngineMsg {
-    Submit(GenRequest, mpsc::Sender<GenResponse>),
-    /// fetch a metrics snapshot
-    Metrics(mpsc::Sender<Json>),
-    Shutdown,
-}
-
-#[derive(Clone)]
-pub struct EngineHandle {
-    tx: mpsc::Sender<EngineMsg>,
-}
-
-impl EngineHandle {
-    /// Submit a request; returns the receiver for its response.
-    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenResponse> {
-        let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(EngineMsg::Submit(req, tx));
-        rx
-    }
-
-    /// Convenience: submit and wait.
-    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
-        Ok(self.submit(req).recv()?)
-    }
-
-    pub fn metrics(&self) -> Result<Json> {
-        let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(EngineMsg::Metrics(tx));
-        Ok(rx.recv()?)
-    }
-
-    pub fn shutdown(&self) {
-        let _ = self.tx.send(EngineMsg::Shutdown);
-    }
-}
 
 pub struct EngineConfig {
     pub artifact_dir: String,
     pub family: Family,
-    pub batch: usize,
+    /// one worker thread per entry: the batch size that worker requests
+    /// (resolved to the nearest compiled artifact).  Mixing sizes shards
+    /// traffic — e.g. `vec![1, 8]` runs a latency shard next to a
+    /// throughput shard of the same model family.
+    pub worker_batches: Vec<usize>,
     /// trained checkpoint (PBIN); falls back to init params when None
     pub checkpoint: Option<String>,
     pub t_max: f32,
     pub t_min: f32,
+    /// admission-queue bound (all priority classes combined); submits
+    /// beyond it are rejected with a typed `overloaded` error
+    pub queue_depth: usize,
 }
 
 impl EngineConfig {
@@ -84,216 +52,144 @@ impl EngineConfig {
         EngineConfig {
             artifact_dir: artifact_dir.to_string(),
             family,
-            batch: 8,
+            worker_batches: vec![8],
             checkpoint: None,
             t_max: 10.0,
             t_min: 0.05,
+            queue_depth: 256,
         }
     }
 }
 
-struct Pending {
-    req: GenRequest,
-    reply: mpsc::Sender<GenResponse>,
-    submitted: Instant,
+/// Cloneable front-end to the scheduler + worker fleet.
+#[derive(Clone)]
+pub struct EngineHandle {
+    sched: Arc<Scheduler>,
+    worker_metrics: Vec<Arc<Mutex<Metrics>>>,
 }
 
-struct Running {
-    req: GenRequest,
-    reply: mpsc::Sender<GenResponse>,
-    /// this slot's live policy (cloned from the request and reset on
-    /// admission; the request keeps the pristine copy for its spec)
-    policy: BoxedPolicy,
-    submitted: Instant,
-    started: Instant,
-}
-
-/// Spawn the engine thread; returns a cloneable handle plus the join
-/// handle (joining after `shutdown()` surfaces engine errors).
-pub fn start(cfg: EngineConfig) -> (EngineHandle, JoinHandle<Result<()>>) {
-    let (tx, rx) = mpsc::channel::<EngineMsg>();
-    let handle = EngineHandle { tx };
-    let join = std::thread::spawn(move || run_engine(cfg, rx));
-    (handle, join)
-}
-
-fn run_engine(cfg: EngineConfig, rx: mpsc::Receiver<EngineMsg>) -> Result<()> {
-    let rt = Runtime::new(&cfg.artifact_dir)?;
-    let m = rt.manifest.model.clone();
-    let store = match &cfg.checkpoint {
-        Some(path) => ParamStore::load(path, cfg.family.name())?,
-        None => ParamStore::load_init(&cfg.artifact_dir, cfg.family.name())?,
-    };
-    // artifacts are compiled for fixed batch sizes; resolve the nearest
-    // available one (>= requested, else the largest)
-    let batch = rt.manifest.resolve_step_batch(
-        cfg.family.name(),
-        m.seq_len,
-        cfg.batch,
-    )?;
-    let mut session =
-        Session::new(&rt, cfg.family, Rc::new(store), batch, m.seq_len)?;
-    log_info!(
-        "engine up: family={} batch={} (requested {}) seq_len={}",
-        cfg.family.name(),
-        batch,
-        cfg.batch,
-        m.seq_len
-    );
-
-    let mut waiting: VecDeque<Pending> = VecDeque::new();
-    let mut running: Vec<Option<Running>> = (0..batch).map(|_| None).collect();
-    let mut metrics = Metrics::default();
-    let mut shutdown = false;
-
-    loop {
-        // 1) ingest control messages (block only when fully idle)
-        let idle = waiting.is_empty() && running.iter().all(Option::is_none);
-        if idle && !shutdown {
-            match rx.recv() {
-                Ok(msg) => {
-                    if handle_msg(msg, &mut waiting, &mut metrics, &mut shutdown)
-                    {
-                        continue;
-                    }
-                }
-                Err(_) => break, // all senders dropped
-            }
+impl EngineHandle {
+    /// Submit a request; returns the receiver for its outcome.  Failures
+    /// (overload, cancellation, deadline expiry) arrive through the
+    /// channel as `Err(ServeError)`.
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenOutcome> {
+        let (tx, rx) = mpsc::channel();
+        if let Err(e) = self.sched.submit(req, tx.clone()) {
+            let _ = tx.send(Err(e));
         }
-        while let Ok(msg) = rx.try_recv() {
-            handle_msg(msg, &mut waiting, &mut metrics, &mut shutdown);
-        }
-        if shutdown && waiting.is_empty() && running.iter().all(Option::is_none)
-        {
-            break;
-        }
-
-        // 2) admit waiting requests into free slots (continuous batching);
-        //    preflight-resolvable requests never reach the queue (see
-        //    handle_msg), so everything here needs a device slot
-        for slot in 0..batch {
-            if running[slot].is_none() {
-                if let Some(p) = waiting.pop_front() {
-                    let mut policy = p.req.policy.clone();
-                    policy.reset();
-                    session.reset_slot(
-                        slot,
-                        p.req.seed,
-                        p.req.n_steps,
-                        p.req.noise_scale,
-                        cfg.t_max,
-                        cfg.t_min,
-                        &p.req.prefix,
-                    );
-                    running[slot] = Some(Running {
-                        policy,
-                        started: Instant::now(),
-                        submitted: p.submitted,
-                        req: p.req,
-                        reply: p.reply,
-                    });
-                }
-            }
-        }
-
-        // 3) one batched device step
-        if running.iter().any(Option::is_some) {
-            let stats = session.step()?;
-            metrics.device_calls += 1;
-            for slot in 0..batch {
-                let Some(st) = stats[slot] else { continue };
-                let Some(r) = running[slot].as_mut() else { continue };
-                metrics.steps_executed += 1;
-                let executed = session.slots[slot].step;
-                let decision = r.policy.observe(executed - 1, &st);
-                let exhausted = session.slot_exhausted(slot);
-                if decision.halted() || exhausted {
-                    let r = running[slot].take().unwrap();
-                    let budget = r.req.n_steps;
-                    let halted_early = decision.halted() && !exhausted;
-                    let resp = GenResponse {
-                        id: r.req.id,
-                        tokens: session.slot_output(slot),
-                        steps_executed: executed,
-                        steps_budget: budget,
-                        halted_early,
-                        halt_reason: if halted_early {
-                            decision.reason().map(str::to_string)
-                        } else {
-                            None
-                        },
-                        latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
-                        queue_ms: (r.started - r.submitted).as_secs_f64()
-                            * 1e3,
-                        final_stats: st,
-                    };
-                    metrics.requests_completed += 1;
-                    metrics.steps_saved +=
-                        (budget.saturating_sub(executed)) as u64;
-                    if halted_early {
-                        if let Some(reason) = decision.reason() {
-                            metrics.record_halt(reason);
-                        }
-                    }
-                    metrics.latency_ms.observe(resp.latency_ms);
-                    let _ = r.reply.send(resp);
-                    session.release_slot(slot);
-                }
-            }
-        }
+        rx
     }
-    log_info!(
-        "engine down: {} completed, saving ratio {:.3}",
-        metrics.requests_completed,
-        metrics.step_saving_ratio()
-    );
-    Ok(())
+
+    /// Non-blocking admission: a full queue returns `Err(Overloaded)`
+    /// synchronously instead of through the channel.
+    pub fn try_submit(
+        &self,
+        req: GenRequest,
+    ) -> Result<mpsc::Receiver<GenOutcome>, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        self.sched.submit(req, tx)?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait (serve errors become `anyhow` ones).
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        Ok(self.submit(req).recv()??)
+    }
+
+    /// Cancel a queued or running request by id.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        self.sched.cancel(id)
+    }
+
+    /// Merged fleet snapshot: the scheduler's admission metrics folded
+    /// with every worker's, plus queue-depth / slot-occupancy gauges and
+    /// a per-worker breakdown under `"workers"`.
+    pub fn metrics(&self) -> Result<Json> {
+        let mut merged = self.sched.metrics.lock().unwrap().clone();
+        let mut per_worker = Vec::new();
+        for (i, wm) in self.worker_metrics.iter().enumerate() {
+            let w = wm.lock().unwrap().clone();
+            per_worker.push(Json::obj(vec![
+                ("worker", Json::num(i as f64)),
+                ("slots_total", Json::num(w.slots_total as f64)),
+                ("slots_busy", Json::num(w.slots_busy as f64)),
+                (
+                    "requests_completed",
+                    Json::num(w.requests_completed as f64),
+                ),
+                ("steps_executed", Json::num(w.steps_executed as f64)),
+                ("device_calls", Json::num(w.device_calls as f64)),
+            ]));
+            merged.merge(&w);
+        }
+        let Json::Obj(mut m) = merged.to_json() else { unreachable!() };
+        m.insert(
+            "queue_depth".to_string(),
+            Json::num(self.sched.queue_depth() as f64),
+        );
+        m.insert(
+            "running_requests".to_string(),
+            Json::num(self.sched.running_count() as f64),
+        );
+        m.insert("workers".to_string(), Json::Arr(per_worker));
+        Ok(Json::Obj(m))
+    }
+
+    /// Stop admitting new work; workers drain the queue and exit.
+    pub fn shutdown(&self) {
+        self.sched.shutdown();
+    }
 }
 
-fn handle_msg(
-    msg: EngineMsg,
-    waiting: &mut VecDeque<Pending>,
-    metrics: &mut Metrics,
-    shutdown: &mut bool,
-) -> bool {
-    match msg {
-        EngineMsg::Submit(req, reply) => {
-            metrics.requests_submitted += 1;
-            // a policy that resolves before any step (e.g. fixed:0) is
-            // answered at ingest — it must not wait for a batch slot
-            if let Decision::Halt { reason } = req.policy.preflight() {
-                let resp = GenResponse {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    steps_executed: 0,
-                    steps_budget: req.n_steps,
-                    halted_early: true,
-                    halt_reason: Some(reason.to_string()),
-                    latency_ms: 0.0,
-                    queue_ms: 0.0,
-                    final_stats: StepStats::default(),
-                };
-                metrics.requests_completed += 1;
-                metrics.steps_saved += req.n_steps as u64;
-                metrics.record_halt(reason);
-                metrics.latency_ms.observe(0.0);
-                let _ = reply.send(resp);
-                return false;
+/// Join handle over the worker fleet; `join()` surfaces the first worker
+/// error (mirroring the old single-thread engine contract).
+pub struct EngineJoin {
+    handles: Vec<JoinHandle<Result<()>>>,
+}
+
+impl EngineJoin {
+    pub fn join(self) -> std::thread::Result<Result<()>> {
+        let mut first_err = Ok(());
+        for h in self.handles {
+            let r = h.join()?;
+            if first_err.is_ok() && r.is_err() {
+                first_err = r;
             }
-            waiting.push_back(Pending {
-                req,
-                reply,
-                submitted: Instant::now(),
-            });
-            false
         }
-        EngineMsg::Metrics(reply) => {
-            let _ = reply.send(metrics.to_json());
-            true
-        }
-        EngineMsg::Shutdown => {
-            *shutdown = true;
-            false
-        }
+        Ok(first_err)
     }
+}
+
+/// Spawn the scheduler + worker fleet; returns a cloneable handle plus
+/// the fleet join handle (joining after `shutdown()` surfaces worker
+/// errors).
+pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
+    let sched =
+        Arc::new(Scheduler::new(cfg.queue_depth, cfg.worker_batches.len()));
+    let mut handles = Vec::new();
+    let mut worker_metrics = Vec::new();
+    for (id, &batch) in cfg.worker_batches.iter().enumerate() {
+        let m = Arc::new(Mutex::new(Metrics::default()));
+        worker_metrics.push(m.clone());
+        handles.push(worker::spawn(
+            WorkerConfig {
+                id,
+                artifact_dir: cfg.artifact_dir.clone(),
+                family: cfg.family,
+                batch,
+                checkpoint: cfg.checkpoint.clone(),
+                t_max: cfg.t_max,
+                t_min: cfg.t_min,
+            },
+            sched.clone(),
+            m,
+        ));
+    }
+    (
+        EngineHandle {
+            sched,
+            worker_metrics,
+        },
+        EngineJoin { handles },
+    )
 }

@@ -1,9 +1,22 @@
-//! Serving metrics: latency histogram, step accounting, steps-saved,
+//! Serving metrics: latency histograms, step accounting, steps-saved,
 //! per-reason halt counters — the numbers behind the paper's headline
 //! "10-40% faster generation".
+//!
+//! Ownership after the scheduler/worker split: every worker owns one
+//! `Metrics` value (behind an `Arc<Mutex<..>>`), and the scheduler owns
+//! one more for admission-side events (preflight completions, overload
+//! rejections, queued-side cancels and deadline drops).  The engine's
+//! `/metrics` snapshot is the [`Metrics::merge`] of all of them plus
+//! queue-depth / slot-occupancy gauges — see `EngineHandle::metrics`.
+//!
+//! Every completed request — preflight-resolved or worker-stepped — goes
+//! through the single [`Metrics::record_completion`] path, so the two
+//! cannot drift in what they count.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+use super::request::{GenResponse, Priority};
 
 /// Fixed-bucket latency histogram (milliseconds).
 #[derive(Clone, Debug)]
@@ -44,6 +57,18 @@ impl Histogram {
         }
     }
 
+    /// Fold another histogram in (identical fixed bounds by construction).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.n += other.n;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -81,23 +106,41 @@ impl Histogram {
     }
 }
 
-/// Aggregate serving metrics for one engine.
-#[derive(Debug)]
+/// Serving metrics for one worker shard (or the scheduler's admission
+/// side); merged across the fleet for the `/metrics` snapshot.
+#[derive(Clone, Debug)]
 pub struct Metrics {
     pub started_at: Instant,
     pub requests_submitted: u64,
     pub requests_completed: u64,
     pub halted_early: u64,
-    /// denoiser steps actually executed (per-request accounting)
+    /// denoiser steps actually executed (per-request accounting; aborted
+    /// requests contribute the steps they burned before the abort)
     pub steps_executed: u64,
     /// steps the requests budgeted but never ran (saved by halting)
     pub steps_saved: u64,
     /// device calls (batched steps)
     pub device_calls: u64,
+    /// admission rejections from the bounded queue (backpressure)
+    pub rejected_overloaded: u64,
+    /// requests cancelled while queued or running
+    pub cancelled: u64,
+    /// requests dropped because `deadline_ms` expired
+    pub deadline_exceeded: u64,
+    /// slot-occupancy gauges (workers refresh these every loop)
+    pub slots_total: u64,
+    pub slots_busy: u64,
+    /// steps burned by requests still in flight (gauge; completed and
+    /// aborted requests move their steps into `steps_executed`)
+    pub steps_in_flight: u64,
     pub latency_ms: Histogram,
+    /// queueing delay before the first denoise step
+    pub queue_ms: Histogram,
+    /// service latency split by admission class (high / normal / low)
+    pub latency_by_priority: [Histogram; Priority::COUNT],
     /// early halts per policy reason (`entropy`, `patience`, ...);
     /// surfaced in the JSON snapshot as `halted_by_<reason>`
-    pub halted_by: BTreeMap<&'static str, u64>,
+    pub halted_by: BTreeMap<String, u64>,
 }
 
 impl Default for Metrics {
@@ -110,7 +153,19 @@ impl Default for Metrics {
             steps_executed: 0,
             steps_saved: 0,
             device_calls: 0,
+            rejected_overloaded: 0,
+            cancelled: 0,
+            deadline_exceeded: 0,
+            slots_total: 0,
+            slots_busy: 0,
+            steps_in_flight: 0,
             latency_ms: Histogram::default(),
+            queue_ms: Histogram::default(),
+            latency_by_priority: [
+                Histogram::default(),
+                Histogram::default(),
+                Histogram::default(),
+            ],
             halted_by: BTreeMap::new(),
         }
     }
@@ -118,9 +173,58 @@ impl Default for Metrics {
 
 impl Metrics {
     /// Account one early halt attributed to a policy reason.
-    pub fn record_halt(&mut self, reason: &'static str) {
+    pub fn record_halt(&mut self, reason: &str) {
         self.halted_early += 1;
-        *self.halted_by.entry(reason).or_insert(0) += 1;
+        *self.halted_by.entry(reason.to_string()).or_insert(0) += 1;
+    }
+
+    /// The single bookkeeping path for every answered request — preflight
+    /// resolutions and worker completions alike — so the two can't drift
+    /// in steps/latency/halt accounting.
+    pub fn record_completion(&mut self, resp: &GenResponse, prio: Priority) {
+        self.requests_completed += 1;
+        self.steps_executed += resp.steps_executed as u64;
+        self.steps_saved +=
+            resp.steps_budget.saturating_sub(resp.steps_executed) as u64;
+        if resp.halted_early {
+            if let Some(reason) = &resp.halt_reason {
+                self.record_halt(reason);
+            }
+        }
+        self.latency_ms.observe(resp.latency_ms);
+        self.queue_ms.observe(resp.queue_ms);
+        self.latency_by_priority[prio.index()].observe(resp.latency_ms);
+    }
+
+    /// Fold another shard's metrics in (fleet snapshot).
+    pub fn merge(&mut self, other: &Metrics) {
+        if other.started_at < self.started_at {
+            self.started_at = other.started_at;
+        }
+        self.requests_submitted += other.requests_submitted;
+        self.requests_completed += other.requests_completed;
+        self.halted_early += other.halted_early;
+        self.steps_executed += other.steps_executed;
+        self.steps_saved += other.steps_saved;
+        self.device_calls += other.device_calls;
+        self.rejected_overloaded += other.rejected_overloaded;
+        self.cancelled += other.cancelled;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.slots_total += other.slots_total;
+        self.slots_busy += other.slots_busy;
+        self.steps_in_flight += other.steps_in_flight;
+        self.latency_ms.merge(&other.latency_ms);
+        self.queue_ms.merge(&other.queue_ms);
+        for (h, o) in self
+            .latency_by_priority
+            .iter_mut()
+            .zip(&other.latency_by_priority)
+        {
+            h.merge(o);
+        }
+        for (reason, n) in &other.halted_by {
+            *self.halted_by.entry(reason.clone()).or_insert(0) += n;
+        }
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -152,12 +256,37 @@ impl Metrics {
             ("steps_saved", Json::num(self.steps_saved as f64)),
             ("step_saving_ratio", Json::num(self.step_saving_ratio())),
             ("device_calls", Json::num(self.device_calls as f64)),
+            (
+                "rejected_overloaded",
+                Json::num(self.rejected_overloaded as f64),
+            ),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
+            ("slots_total", Json::num(self.slots_total as f64)),
+            ("slots_busy", Json::num(self.slots_busy as f64)),
+            ("steps_in_flight", Json::num(self.steps_in_flight as f64)),
             ("latency_mean_ms", Json::num(self.latency_ms.mean())),
             ("latency_p50_ms", Json::num(self.latency_ms.quantile(0.5))),
             ("latency_p95_ms", Json::num(self.latency_ms.quantile(0.95))),
+            ("queue_mean_ms", Json::num(self.queue_ms.mean())),
+            ("queue_p95_ms", Json::num(self.queue_ms.quantile(0.95))),
             ("throughput_rps", Json::num(self.throughput_rps())),
         ]);
         let Json::Obj(mut m) = base else { unreachable!() };
+        for prio in Priority::ALL {
+            let h = &self.latency_by_priority[prio.index()];
+            if h.count() > 0 {
+                let name = prio.name();
+                m.insert(
+                    format!("latency_p50_ms_{name}"),
+                    Json::num(h.quantile(0.5)),
+                );
+                m.insert(
+                    format!("latency_p95_ms_{name}"),
+                    Json::num(h.quantile(0.95)),
+                );
+            }
+        }
         for (reason, n) in &self.halted_by {
             m.insert(format!("halted_by_{reason}"), Json::num(*n as f64));
         }
@@ -168,6 +297,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::GenRequest;
 
     #[test]
     fn histogram_mean_and_quantiles() {
@@ -189,6 +319,22 @@ mod tests {
     }
 
     #[test]
+    fn histogram_merge_sums_counts_and_moments() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        for v in [1.0, 2.0] {
+            a.observe(v);
+        }
+        for v in [4.0, 64.0] {
+            b.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 17.75).abs() < 1e-9);
+        assert_eq!(a.max(), 64.0);
+    }
+
+    #[test]
     fn saving_ratio() {
         let mut m = Metrics::default();
         m.steps_executed = 600;
@@ -202,6 +348,14 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("step_saving_ratio").is_some());
         assert!(j.get("latency_p95_ms").is_some());
+        // the serving-stack counters are always present, even at zero
+        for key in ["rejected_overloaded", "cancelled", "deadline_exceeded"] {
+            assert_eq!(
+                j.get(key).and_then(|v| v.as_f64()),
+                Some(0.0),
+                "missing {key}"
+            );
+        }
     }
 
     #[test]
@@ -218,5 +372,80 @@ mod tests {
         );
         assert_eq!(j.get("halted_by_kl").and_then(|v| v.as_f64()), Some(1.0));
         assert!(j.get("halted_by_patience").is_none());
+    }
+
+    #[test]
+    fn record_completion_unifies_preflight_and_worker_paths() {
+        use crate::coordinator::request::GenResponse;
+        use crate::halting::parse_policy;
+
+        let mut m = Metrics::default();
+        // preflight path: fixed:0 resolves with zero executed steps
+        let mut req = GenRequest::new(1, 10);
+        req.policy = parse_policy("fixed:0").unwrap();
+        let pre = GenResponse::preflight(&req, "fixed");
+        m.record_completion(&pre, req.priority);
+        // worker path: early halt at step 4 of 10
+        let worker = GenResponse {
+            id: 2,
+            tokens: vec![0; 8],
+            steps_executed: 4,
+            steps_budget: 10,
+            halted_early: true,
+            halt_reason: Some("fixed".to_string()),
+            latency_ms: 12.0,
+            queue_ms: 3.0,
+            final_stats: Default::default(),
+        };
+        m.record_completion(&worker, Priority::High);
+        assert_eq!(m.requests_completed, 2);
+        assert_eq!(m.steps_executed, 4);
+        assert_eq!(m.steps_saved, 16);
+        assert_eq!(m.halted_by.get("fixed"), Some(&2));
+        // both paths observe latency + queue histograms
+        assert_eq!(m.latency_ms.count(), 2);
+        assert_eq!(m.queue_ms.count(), 2);
+        assert_eq!(m.latency_by_priority[Priority::High.index()].count(), 1);
+        assert_eq!(m.latency_by_priority[Priority::Normal.index()].count(), 1);
+    }
+
+    #[test]
+    fn merge_folds_counters_histograms_and_reasons() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.record_halt("entropy");
+        b.record_halt("entropy");
+        b.record_halt("kl");
+        a.requests_completed = 3;
+        b.requests_completed = 4;
+        b.rejected_overloaded = 2;
+        b.cancelled = 1;
+        b.deadline_exceeded = 5;
+        a.slots_total = 1;
+        b.slots_total = 8;
+        b.slots_busy = 6;
+        a.latency_ms.observe(2.0);
+        b.latency_ms.observe(8.0);
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 7);
+        assert_eq!(a.rejected_overloaded, 2);
+        assert_eq!(a.cancelled, 1);
+        assert_eq!(a.deadline_exceeded, 5);
+        assert_eq!(a.slots_total, 9);
+        assert_eq!(a.slots_busy, 6);
+        assert_eq!(a.latency_ms.count(), 2);
+        assert_eq!(a.halted_by.get("entropy"), Some(&2));
+        assert_eq!(a.halted_by.get("kl"), Some(&1));
+    }
+
+    #[test]
+    fn per_priority_latency_appears_only_when_observed() {
+        let mut m = Metrics::default();
+        let j = m.to_json();
+        assert!(j.get("latency_p50_ms_high").is_none());
+        m.latency_by_priority[Priority::High.index()].observe(4.0);
+        let j = m.to_json();
+        assert!(j.get("latency_p50_ms_high").is_some());
+        assert!(j.get("latency_p50_ms_low").is_none());
     }
 }

@@ -1,11 +1,36 @@
-//! The L3 coordination contribution: request router, continuous batcher
-//! with early-exit slot recycling, TCP JSON-lines server, metrics.
+//! The L3 coordination contribution: a sharded serving stack around the
+//! paper's early-halting payoff.
+//!
+//! Layers (one module each):
+//!
+//! * [`scheduler`] — admission control: a bounded queue with priority
+//!   classes (high/normal/low), per-request deadlines, explicit
+//!   cancellation, and backpressure (full queue ⇒ typed `overloaded`
+//!   rejection instead of unbounded growth).
+//! * [`worker`] — N worker shards, each an OS thread owning one PJRT
+//!   runtime and one batched `Session` (continuous batching with
+//!   early-exit slot recycling).  Shards may bind different compiled
+//!   batch sizes of one family: small-batch shards soak
+//!   latency-sensitive traffic, large-batch shards soak throughput.
+//! * [`engine`] — thin composition: `start()` wires scheduler + workers;
+//!   [`EngineHandle`] exposes `submit`/`try_submit`/`generate`,
+//!   `cancel(id)`, merged fleet `metrics()`, and `shutdown()`.
+//! * [`server`] — TCP JSON-lines front-end (wire fields `priority`,
+//!   `deadline_ms`, control cmds `metrics`/`cancel`) with a joinable
+//!   `Server::stop()`.
+//! * [`metrics`] — per-worker metrics merged into one fleet snapshot:
+//!   queue-depth and slot-occupancy gauges, per-priority latency
+//!   histograms, `rejected_overloaded`/`cancelled`/`deadline_exceeded`
+//!   counters, per-reason `halted_by_*`.
 
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod scheduler;
 pub mod server;
+pub mod worker;
 
-pub use engine::{start, EngineConfig, EngineHandle};
-pub use request::{GenRequest, GenResponse};
+pub use engine::{start, EngineConfig, EngineHandle, EngineJoin};
+pub use request::{GenRequest, GenResponse, Priority};
+pub use scheduler::{CancelOutcome, GenOutcome, Scheduler, ServeError};
 pub use server::{Client, Server};

@@ -4,11 +4,59 @@
 //! the legacy `criterion` key (`"entropy:0.5"`, `"any(entropy:0.5,
 //! patience:20:0)"`, ...).  Serialization goes through the policy's
 //! canonical `to_spec()` — there is no second formatting path.
+//!
+//! Scheduling fields: `priority` ("high" | "normal" | "low", default
+//! normal) picks the admission class, `deadline_ms` (optional) bounds the
+//! request's total wall-clock time — the scheduler answers with a typed
+//! `deadline_exceeded` error if it can't make it.
 
 use anyhow::{anyhow, Result};
 
 use crate::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt, StepStats};
 use crate::util::json::Json;
+
+/// Admission class: the scheduler drains `High` before `Normal` before
+/// `Low` (FIFO within a class).  Pair high-priority traffic with a
+/// small-batch worker shard for latency isolation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub const COUNT: usize = 3;
+    pub const ALL: [Priority; Priority::COUNT] =
+        [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Scan/storage index: 0 = high .. 2 = low.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct GenRequest {
@@ -22,6 +70,11 @@ pub struct GenRequest {
     /// initial noise scale (paper Fig 3 / Table 1 knob)
     pub noise_scale: f32,
     pub seed: u64,
+    /// admission class (wire field `priority`, default normal)
+    pub priority: Priority,
+    /// total wall-clock budget from submission; expired requests are
+    /// answered with a typed `deadline_exceeded` error (None = no limit)
+    pub deadline_ms: Option<f64>,
 }
 
 impl GenRequest {
@@ -33,11 +86,13 @@ impl GenRequest {
             policy: Box::new(NoHalt),
             noise_scale: 1.0,
             seed: id,
+            priority: Priority::Normal,
+            deadline_ms: None,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::num(self.id as f64)),
             (
                 "prefix",
@@ -49,7 +104,12 @@ impl GenRequest {
             ("criterion", Json::str(self.policy.to_spec())),
             ("noise_scale", Json::num(self.noise_scale as f64)),
             ("seed", Json::num(self.seed as f64)),
-        ])
+            ("priority", Json::str(self.priority.name())),
+        ];
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::num(d)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<GenRequest> {
@@ -75,6 +135,11 @@ impl GenRequest {
                 .ok_or_else(|| anyhow!("bad criterion {s:?}"))?,
             None => Box::new(NoHalt) as BoxedPolicy,
         };
+        let priority = match j.get("priority").and_then(Json::as_str) {
+            Some(s) => Priority::parse(s)
+                .ok_or_else(|| anyhow!("bad priority {s:?}"))?,
+            None => Priority::Normal,
+        };
         Ok(GenRequest {
             id,
             prefix,
@@ -86,6 +151,8 @@ impl GenRequest {
                 .unwrap_or(1.0) as f32,
             seed: j.get("seed").and_then(Json::as_f64).unwrap_or(id as f64)
                 as u64,
+            priority,
+            deadline_ms: j.get("deadline_ms").and_then(Json::as_f64),
         })
     }
 }
@@ -106,6 +173,24 @@ pub struct GenResponse {
 }
 
 impl GenResponse {
+    /// Zero-step response for a request whose policy resolved in
+    /// preflight (e.g. `fixed:0`) — answered at admission, before any
+    /// batch slot or device step.  Goes through the same metrics
+    /// bookkeeping (`Metrics::record_completion`) as worker completions.
+    pub fn preflight(req: &GenRequest, reason: &str) -> GenResponse {
+        GenResponse {
+            id: req.id,
+            tokens: Vec::new(),
+            steps_executed: 0,
+            steps_budget: req.n_steps,
+            halted_early: true,
+            halt_reason: Some(reason.to_string()),
+            latency_ms: 0.0,
+            queue_ms: 0.0,
+            final_stats: StepStats::default(),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("id", Json::num(self.id as f64)),
@@ -181,6 +266,8 @@ mod tests {
         r.prefix = vec![1, 2, 3];
         r.policy = parse_policy("kl:0.001:50").unwrap();
         r.noise_scale = 0.9;
+        r.priority = Priority::High;
+        r.deadline_ms = Some(2500.0);
         let j = r.to_json();
         assert_eq!(
             j.get("criterion").and_then(Json::as_str),
@@ -192,6 +279,38 @@ mod tests {
         assert_eq!(back.n_steps, 200);
         assert_eq!(back.policy.to_spec(), r.policy.to_spec());
         assert!((back.noise_scale - 0.9).abs() < 1e-6);
+        assert_eq!(back.priority, Priority::High);
+        assert_eq!(back.deadline_ms, Some(2500.0));
+    }
+
+    #[test]
+    fn request_scheduling_fields_default_on_legacy_wire() {
+        // pre-split clients send neither priority nor deadline_ms
+        let back = GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"criterion":"none"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.priority, Priority::Normal);
+        assert_eq!(back.deadline_ms, None);
+        assert!(back.to_json().get("deadline_ms").is_none());
+        // and bad priorities are rejected at the wire boundary
+        assert!(GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"priority":"urgent"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn preflight_response_shape() {
+        let mut r = GenRequest::new(9, 40);
+        r.policy = parse_policy("fixed:0").unwrap();
+        let resp = GenResponse::preflight(&r, "fixed");
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.steps_executed, 0);
+        assert_eq!(resp.steps_budget, 40);
+        assert!(resp.halted_early);
+        assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
+        assert_eq!(resp.queue_ms, 0.0);
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! Admission control for the serving fleet: a bounded, priority-classed
+//! queue between the front-ends and the worker shards.
+//!
+//! Responsibilities:
+//!
+//! * **admission** — requests whose policy resolves in preflight (e.g.
+//!   `fixed:0`) are answered here, without touching a worker; everything
+//!   else enters a bounded queue, and a full queue rejects with the typed
+//!   [`ServeError::Overloaded`] instead of growing without bound
+//!   (backpressure);
+//! * **priority** — three classes (high / normal / low), FIFO within a
+//!   class; workers always drain higher classes first;
+//! * **deadlines** — a request carrying `deadline_ms` is dropped with
+//!   [`ServeError::DeadlineExceeded`] if it expires while queued (the
+//!   owning worker enforces the same deadline once it is running);
+//! * **cancellation** — [`Scheduler::cancel`] removes a queued request
+//!   immediately, or flags a running one so its worker aborts it between
+//!   device steps.
+//!
+//! The scheduler is shared (`Arc`) between every front-end thread and
+//! every worker; all state sits behind one mutex, with a condvar waking
+//! idle workers on new work or shutdown.  Lock discipline: the state
+//! mutex and the metrics mutex are never held at the same time.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResponse, Priority};
+use crate::halting::Decision;
+
+/// Typed serving-path failure, delivered instead of a [`GenResponse`]
+/// (on the wire: `{"error": "<as_str()>"}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// the bounded admission queue is full (or the engine is shutting
+    /// down) — back off and retry
+    Overloaded,
+    /// request cancelled via `cancel(id)` while queued or running
+    Cancelled,
+    /// `deadline_ms` elapsed before the request completed
+    DeadlineExceeded,
+    /// no live worker is left to serve the queue (startup failure)
+    Unavailable,
+}
+
+impl ServeError {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServeError::Overloaded => "overloaded",
+            ServeError::Cancelled => "cancelled",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::Unavailable => "unavailable",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a submitted request resolves to: exactly one `Ok(response)` or
+/// `Err(serve_error)` arrives per submission.
+pub type GenOutcome = Result<GenResponse, ServeError>;
+
+/// Reply channel for one request.
+pub type ReplyTx = mpsc::Sender<GenOutcome>;
+
+/// A queued request plus its reply channel and timing/deadline state.
+pub struct QueuedReq {
+    pub req: GenRequest,
+    pub reply: ReplyTx,
+    pub submitted: Instant,
+    /// absolute expiry computed from `req.deadline_ms` at submission
+    pub deadline: Option<Instant>,
+}
+
+impl QueuedReq {
+    fn new(req: GenRequest, reply: ReplyTx) -> QueuedReq {
+        let submitted = Instant::now();
+        let deadline = req
+            .deadline_ms
+            .map(|ms| submitted + Duration::from_secs_f64(ms.max(0.0) / 1e3));
+        QueuedReq {
+            req,
+            reply,
+            submitted,
+            deadline,
+        }
+    }
+}
+
+/// What [`Scheduler::cancel`] found.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// removed from the queue; the submitter got `Err(Cancelled)`
+    Queued,
+    /// flagged; the owning worker aborts it between device steps
+    Running,
+    NotFound,
+}
+
+impl CancelOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelOutcome::Queued => "queued",
+            CancelOutcome::Running => "running",
+            CancelOutcome::NotFound => "not_found",
+        }
+    }
+
+    /// True when the cancel reached a live request.
+    pub fn found(self) -> bool {
+        !matches!(self, CancelOutcome::NotFound)
+    }
+}
+
+/// Outcome of an idle worker's wait.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdleWait {
+    /// work is queued — go admit it
+    Work,
+    /// shutdown with a drained queue — exit the worker loop
+    Exit,
+}
+
+struct State {
+    queues: [VecDeque<QueuedReq>; Priority::COUNT],
+    queued: usize,
+    /// request id -> owning worker, for every admitted-but-unfinished
+    /// request (cancellation routing; ids should be unique fleet-wide)
+    running: HashMap<u64, usize>,
+    /// running ids flagged for cancellation
+    cancel_flags: HashSet<u64>,
+    /// workers that have not exited (starts at the spawned count)
+    workers_live: usize,
+    shutdown: bool,
+}
+
+pub struct Scheduler {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    queue_cap: usize,
+    /// admission-side bookkeeping: submissions, preflight completions,
+    /// overload rejections, queued-side cancels and deadline drops
+    pub metrics: Mutex<Metrics>,
+}
+
+impl Scheduler {
+    /// `queue_cap` bounds the admission queue across all priority
+    /// classes; `workers` is the number of worker shards that will pull
+    /// from this scheduler.
+    pub fn new(queue_cap: usize, workers: usize) -> Scheduler {
+        Scheduler {
+            state: Mutex::new(State {
+                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                queued: 0,
+                running: HashMap::new(),
+                cancel_flags: HashSet::new(),
+                workers_live: workers,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            queue_cap,
+            metrics: Mutex::new(Metrics::default()),
+        }
+    }
+
+    /// Admit one request.  Preflight-resolvable policies are answered
+    /// inline (no queue slot, no device work) — but only on a live,
+    /// accepting engine, so they can't sneak past shutdown or a dead
+    /// fleet.  A full queue returns `Err(Overloaded)` — the caller
+    /// decides whether to surface that synchronously (`try_submit`) or
+    /// through the reply channel.
+    pub fn submit(
+        &self,
+        req: GenRequest,
+        reply: ReplyTx,
+    ) -> Result<(), ServeError> {
+        self.metrics.lock().unwrap().requests_submitted += 1;
+        // fast-fail on a dead or draining engine before anything else
+        {
+            let st = self.state.lock().unwrap();
+            if st.workers_live == 0 {
+                return Err(ServeError::Unavailable);
+            }
+            if st.shutdown {
+                drop(st);
+                self.metrics.lock().unwrap().rejected_overloaded += 1;
+                return Err(ServeError::Overloaded);
+            }
+        }
+        if let Decision::Halt { reason } = req.policy.preflight() {
+            let resp = GenResponse::preflight(&req, reason);
+            self.metrics
+                .lock()
+                .unwrap()
+                .record_completion(&resp, req.priority);
+            let _ = reply.send(Ok(resp));
+            return Ok(());
+        }
+        let admitted = {
+            let mut st = self.state.lock().unwrap();
+            if st.queued >= self.queue_cap {
+                false
+            } else {
+                let q = QueuedReq::new(req, reply);
+                let class = q.req.priority.index();
+                st.queues[class].push_back(q);
+                st.queued += 1;
+                true
+            }
+        };
+        if admitted {
+            self.work_ready.notify_all();
+            Ok(())
+        } else {
+            self.metrics.lock().unwrap().rejected_overloaded += 1;
+            Err(ServeError::Overloaded)
+        }
+    }
+
+    /// Pop the next runnable request for `worker` (high before normal
+    /// before low, FIFO within a class), answering and skipping queued
+    /// requests whose deadline already expired.
+    pub fn next_for(&self, worker: usize) -> Option<QueuedReq> {
+        let now = Instant::now();
+        let mut expired: Vec<QueuedReq> = Vec::new();
+        let picked = {
+            let mut st = self.state.lock().unwrap();
+            let mut picked = None;
+            'scan: for pi in 0..Priority::COUNT {
+                while let Some(q) = st.queues[pi].pop_front() {
+                    st.queued -= 1;
+                    if q.deadline.is_some_and(|d| now >= d) {
+                        expired.push(q);
+                        continue;
+                    }
+                    st.running.insert(q.req.id, worker);
+                    picked = Some(q);
+                    break 'scan;
+                }
+            }
+            picked
+        };
+        if !expired.is_empty() {
+            let mut m = self.metrics.lock().unwrap();
+            m.deadline_exceeded += expired.len() as u64;
+            drop(m);
+            for q in expired {
+                let _ = q.reply.send(Err(ServeError::DeadlineExceeded));
+            }
+        }
+        picked
+    }
+
+    /// Answer and drop every queued request whose deadline has expired.
+    /// Workers call this once per step loop, so a request that can't be
+    /// admitted in time is answered within one device-step latency even
+    /// while every slot is busy (not just lazily at pop time).
+    pub fn reap_expired(&self) {
+        let now = Instant::now();
+        let expired = {
+            let mut st = self.state.lock().unwrap();
+            let mut expired = Vec::new();
+            for q in st.queues.iter_mut() {
+                let mut k = 0;
+                while k < q.len() {
+                    if q[k].deadline.is_some_and(|d| now >= d) {
+                        expired.push(q.remove(k).unwrap());
+                    } else {
+                        k += 1;
+                    }
+                }
+            }
+            st.queued -= expired.len();
+            expired
+        };
+        if !expired.is_empty() {
+            self.metrics.lock().unwrap().deadline_exceeded +=
+                expired.len() as u64;
+            for q in expired {
+                let _ = q.reply.send(Err(ServeError::DeadlineExceeded));
+            }
+        }
+    }
+
+    /// Cancel by request id: a queued request is removed and answered
+    /// here; a running one is flagged for its worker.
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let (outcome, victim) = {
+            let mut st = self.state.lock().unwrap();
+            let mut victim = None;
+            for pi in 0..Priority::COUNT {
+                if let Some(k) =
+                    st.queues[pi].iter().position(|q| q.req.id == id)
+                {
+                    victim = st.queues[pi].remove(k);
+                    st.queued -= 1;
+                    break;
+                }
+            }
+            if victim.is_some() {
+                (CancelOutcome::Queued, victim)
+            } else if st.running.contains_key(&id) {
+                st.cancel_flags.insert(id);
+                (CancelOutcome::Running, None)
+            } else {
+                (CancelOutcome::NotFound, None)
+            }
+        };
+        if let Some(q) = victim {
+            self.metrics.lock().unwrap().cancelled += 1;
+            let _ = q.reply.send(Err(ServeError::Cancelled));
+        }
+        outcome
+    }
+
+    /// Worker-side: has this running request been flagged for abort?
+    pub fn cancel_requested(&self, id: u64) -> bool {
+        self.state.lock().unwrap().cancel_flags.contains(&id)
+    }
+
+    /// Worker-side: a request left the running set (completed, aborted,
+    /// or deadline-dropped).
+    pub fn finish(&self, id: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.running.remove(&id);
+        st.cancel_flags.remove(&id);
+    }
+
+    /// Block until work is queued (`Work`) or the engine is shut down
+    /// with a drained queue (`Exit`).  Only fully-idle workers wait here;
+    /// busy workers are driven by their own step loop.
+    pub fn wait_for_work(&self) -> IdleWait {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.queued > 0 {
+                return IdleWait::Work;
+            }
+            if st.shutdown {
+                return IdleWait::Exit;
+            }
+            st = self.work_ready.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting; idle workers wake, drain the queue, and exit.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.work_ready.notify_all();
+    }
+
+    /// A worker exited (normally or on error).  When the last one goes
+    /// with requests still queued, fail them over to `Unavailable` so
+    /// submitters never block on a queue nobody will drain.
+    pub fn worker_down(&self) {
+        let orphans = {
+            let mut st = self.state.lock().unwrap();
+            st.workers_live = st.workers_live.saturating_sub(1);
+            if st.workers_live == 0 {
+                let drained: Vec<QueuedReq> = st
+                    .queues
+                    .iter_mut()
+                    .flat_map(std::mem::take)
+                    .collect();
+                st.queued = 0;
+                drained
+            } else {
+                Vec::new()
+            }
+        };
+        for q in orphans {
+            let _ = q.reply.send(Err(ServeError::Unavailable));
+        }
+    }
+
+    /// Current admission-queue depth (fleet gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.state.lock().unwrap().queued
+    }
+
+    /// Requests admitted to a worker and not yet finished (fleet gauge).
+    pub fn running_count(&self) -> usize {
+        self.state.lock().unwrap().running.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halting::parse_policy;
+
+    fn req(id: u64, steps: usize) -> GenRequest {
+        GenRequest::new(id, steps)
+    }
+
+    fn chan() -> (ReplyTx, mpsc::Receiver<Result<GenResponse, ServeError>>) {
+        mpsc::channel()
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overloaded() {
+        let s = Scheduler::new(2, 1);
+        for id in 0..2 {
+            let (tx, _rx) = chan();
+            assert!(s.submit(req(id, 10), tx).is_ok());
+        }
+        let (tx, rx) = chan();
+        assert_eq!(s.submit(req(9, 10), tx), Err(ServeError::Overloaded));
+        assert_eq!(s.queue_depth(), 2);
+        assert_eq!(s.metrics.lock().unwrap().rejected_overloaded, 1);
+        assert_eq!(s.metrics.lock().unwrap().requests_submitted, 3);
+        // the sync rejection never uses the reply channel
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn preflight_resolves_without_consuming_queue() {
+        let s = Scheduler::new(1, 1);
+        let (tx, rx) = chan();
+        let mut r = req(7, 25);
+        r.policy = parse_policy("fixed:0").unwrap();
+        s.submit(r, tx).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.steps_executed, 0);
+        assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
+        assert_eq!(s.queue_depth(), 0);
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.steps_saved, 25);
+        assert_eq!(m.halted_by.get("fixed"), Some(&1));
+        // the unified path observes the latency/queue histograms too
+        assert_eq!(m.latency_ms.count(), 1);
+        assert_eq!(m.queue_ms.count(), 1);
+    }
+
+    #[test]
+    fn workers_drain_priority_classes_in_order() {
+        let s = Scheduler::new(16, 1);
+        for (id, prio) in
+            [(1, Priority::Low), (2, Priority::Normal), (3, Priority::High)]
+        {
+            let (tx, _rx) = chan();
+            let mut r = req(id, 10);
+            r.priority = prio;
+            s.submit(r, tx).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| s.next_for(0))
+            .map(|q| q.req.id)
+            .collect();
+        assert_eq!(order, vec![3, 2, 1]);
+        assert_eq!(s.running_count(), 3);
+    }
+
+    #[test]
+    fn cancel_queued_request_replies_and_counts() {
+        let s = Scheduler::new(8, 1);
+        let (tx, rx) = chan();
+        s.submit(req(11, 10), tx).unwrap();
+        assert_eq!(s.cancel(11), CancelOutcome::Queued);
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Cancelled);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.metrics.lock().unwrap().cancelled, 1);
+        // a second cancel finds nothing
+        assert_eq!(s.cancel(11), CancelOutcome::NotFound);
+    }
+
+    #[test]
+    fn cancel_running_request_flags_owning_worker() {
+        let s = Scheduler::new(8, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(21, 10), tx).unwrap();
+        let q = s.next_for(0).unwrap();
+        assert_eq!(q.req.id, 21);
+        assert_eq!(s.cancel(21), CancelOutcome::Running);
+        assert!(s.cancel_requested(21));
+        // the worker aborts it and reports finish
+        s.finish(21);
+        assert!(!s.cancel_requested(21));
+        assert_eq!(s.cancel(21), CancelOutcome::NotFound);
+        assert_eq!(s.running_count(), 0);
+    }
+
+    #[test]
+    fn queued_deadline_expiry_is_answered_at_pop() {
+        let s = Scheduler::new(8, 1);
+        let (tx, rx) = chan();
+        let mut r = req(31, 10);
+        r.deadline_ms = Some(0.0); // expires immediately
+        s.submit(r, tx).unwrap();
+        assert_eq!(s.queue_depth(), 1);
+        assert!(s.next_for(0).is_none());
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.metrics.lock().unwrap().deadline_exceeded, 1);
+    }
+
+    #[test]
+    fn reap_expired_answers_queued_deadlines_without_a_pop() {
+        // a busy fleet never pops, but the per-step reap sweep must
+        // still answer expired queued requests
+        let s = Scheduler::new(8, 1);
+        let (tx, rx) = chan();
+        let mut dead = req(41, 10);
+        dead.deadline_ms = Some(0.0);
+        s.submit(dead, tx).unwrap();
+        let (tx2, rx2) = chan();
+        s.submit(req(42, 10), tx2).unwrap();
+        s.reap_expired();
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+        assert_eq!(s.queue_depth(), 1); // the live request survived
+        assert!(rx2.try_recv().is_err());
+        assert_eq!(s.metrics.lock().unwrap().deadline_exceeded, 1);
+    }
+
+    #[test]
+    fn expired_request_does_not_shadow_runnable_ones() {
+        let s = Scheduler::new(8, 1);
+        let (tx, rx) = chan();
+        let mut dead = req(1, 10);
+        dead.deadline_ms = Some(0.0);
+        s.submit(dead, tx).unwrap();
+        let (tx2, _rx2) = chan();
+        s.submit(req(2, 10), tx2).unwrap();
+        // one pop skips the expired head and lands on the live request
+        assert_eq!(s.next_for(0).unwrap().req.id, 2);
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_and_wakes_idle_workers() {
+        let s = Scheduler::new(8, 1);
+        s.shutdown();
+        let (tx, _rx) = chan();
+        assert_eq!(s.submit(req(1, 10), tx), Err(ServeError::Overloaded));
+        // preflight-resolvable policies don't sneak past shutdown either
+        let (tx2, _rx2) = chan();
+        let mut pre = req(2, 10);
+        pre.policy = parse_policy("fixed:0").unwrap();
+        assert_eq!(s.submit(pre, tx2), Err(ServeError::Overloaded));
+        assert_eq!(s.wait_for_work(), IdleWait::Exit);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work_before_exit() {
+        let s = Scheduler::new(8, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 10), tx).unwrap();
+        s.shutdown();
+        // queued work still wins over exit, so shutdown drains
+        assert_eq!(s.wait_for_work(), IdleWait::Work);
+        assert!(s.next_for(0).is_some());
+        assert_eq!(s.wait_for_work(), IdleWait::Exit);
+    }
+
+    #[test]
+    fn last_worker_down_fails_queue_to_unavailable() {
+        let s = Scheduler::new(8, 1);
+        let (tx, rx) = chan();
+        s.submit(req(5, 10), tx).unwrap();
+        s.worker_down();
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Unavailable);
+        assert_eq!(s.queue_depth(), 0);
+        // with no workers left, new submits fail fast
+        let (tx2, _rx2) = chan();
+        assert_eq!(s.submit(req(6, 10), tx2), Err(ServeError::Unavailable));
+    }
+}

@@ -2,8 +2,21 @@
 //! usual tokio stack — DESIGN.md §8).
 //!
 //! Protocol: one JSON object per line.
-//!   request  : GenRequest JSON (see `request.rs`), or `{"cmd":"metrics"}`
-//!   response : GenResponse JSON / metrics object / `{"error": "..."}`
+//!
+//!   request  : GenRequest JSON (see `request.rs`) —
+//!              `{"id":1,"steps":200,"criterion":"entropy:0.25",
+//!                "priority":"high","deadline_ms":2500}`.
+//!              `priority` ("high"|"normal"|"low", default normal) picks
+//!              the admission class; `deadline_ms` (optional) bounds the
+//!              request's total wall-clock time.
+//!   control  : `{"cmd":"metrics"}` — merged fleet metrics snapshot
+//!              `{"cmd":"cancel","id":7}` — cancel a queued or running
+//!              request; replies `{"id":7,"cancelled":true,
+//!              "state":"queued"|"running"|"not_found"}`
+//!   response : GenResponse JSON, or a typed serving error
+//!              `{"id":1,"error":"overloaded"|"cancelled"|
+//!                "deadline_exceeded"|"unavailable"}`, or
+//!              `{"error":"parse: ..."}` for malformed lines.
 //!
 //! The request's `criterion` field carries a halting-policy spec string
 //! (`"entropy:0.25"`, `"any(entropy:0.25,patience:20:0)"`, ... — see the
@@ -11,12 +24,15 @@
 //! primitive in `halt_reason`, and the metrics snapshot exposes
 //! per-reason `halted_by_*` counters.
 //!
-//! Each connection gets a handler thread; handlers forward requests to the
-//! engine handle (cheap mpsc clone) and stream responses back in arrival
-//! order per connection.
+//! Each connection gets a handler thread; handlers forward requests to
+//! the engine handle (cheap clone of the scheduler front-end) and stream
+//! responses back in arrival order per connection.  `Server::stop()` (or
+//! drop) closes the listener and joins the accept thread.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
@@ -29,6 +45,7 @@ use crate::util::json::Json;
 pub struct Server {
     pub addr: String,
     accept_thread: Option<JoinHandle<()>>,
+    stopping: Arc<AtomicBool>,
 }
 
 impl Server {
@@ -39,8 +56,13 @@ impl Server {
             TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?.to_string();
         log_info!("server listening on {addr}");
+        let stopping = Arc::new(AtomicBool::new(false));
+        let stop_flag = stopping.clone();
         let accept_thread = std::thread::spawn(move || {
             for stream in listener.incoming() {
+                if stop_flag.load(Ordering::SeqCst) {
+                    break;
+                }
                 match stream {
                     Ok(s) => {
                         let eng = engine.clone();
@@ -61,21 +83,51 @@ impl Server {
         Ok(Server {
             addr,
             accept_thread: Some(accept_thread),
+            stopping,
         })
+    }
+
+    /// Stop accepting and join the accept thread.  In-flight connection
+    /// handlers finish their current line and exit when their client
+    /// disconnects.  Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        let Some(t) = self.accept_thread.take() else { return };
+        self.stopping.store(true, Ordering::SeqCst);
+        // poke the listener so the blocking accept observes the flag;
+        // fall back to loopback for wildcard binds and retry briefly —
+        // only detach (leak) the thread if the listener is unreachable
+        let loopback = self
+            .addr
+            .rsplit_once(':')
+            .map(|(_, port)| format!("127.0.0.1:{port}"));
+        for attempt in 0..3 {
+            let woke = TcpStream::connect(&self.addr).is_ok()
+                || loopback
+                    .as_deref()
+                    .is_some_and(|a| TcpStream::connect(a).is_ok());
+            if woke {
+                let _ = t.join();
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(
+                10 << attempt,
+            ));
+        }
+        crate::util::log::log(
+            crate::util::log::Level::Debug,
+            "server",
+            "stop: listener unreachable; detaching accept thread",
+        );
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // the accept thread exits when the process does; detach it
-        if let Some(t) = self.accept_thread.take() {
-            drop(t);
-        }
+        self.stop();
     }
 }
 
 fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
-    let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -84,32 +136,57 @@ fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
             continue;
         }
         let reply = match Json::parse(&line) {
-            Err(e) => Json::obj(vec![("error", Json::str(format!("parse: {e}")))]),
-            Ok(j) => {
-                if j.get("cmd").and_then(Json::as_str) == Some("metrics") {
-                    engine.metrics().unwrap_or(Json::Null)
-                } else {
-                    match GenRequest::from_json(&j) {
-                        Err(e) => Json::obj(vec![(
-                            "error",
-                            Json::str(format!("bad request: {e}")),
-                        )]),
-                        Ok(req) => match engine.generate(req) {
-                            Ok(resp) => resp.to_json(),
-                            Err(e) => Json::obj(vec![(
-                                "error",
-                                Json::str(format!("engine: {e}")),
-                            )]),
-                        },
-                    }
-                }
+            Err(e) => {
+                Json::obj(vec![("error", Json::str(format!("parse: {e}")))])
             }
+            Ok(j) => handle_line(&j, &engine),
         };
         writer.write_all(reply.encode().as_bytes())?;
         writer.write_all(b"\n")?;
     }
-    let _ = peer;
     Ok(())
+}
+
+fn handle_line(j: &Json, engine: &EngineHandle) -> Json {
+    match j.get("cmd").and_then(Json::as_str) {
+        Some("metrics") => engine.metrics().unwrap_or(Json::Null),
+        Some("cancel") => match j.get("id").and_then(Json::as_f64) {
+            None => {
+                Json::obj(vec![("error", Json::str("cancel: missing id"))])
+            }
+            Some(id) => {
+                let outcome = engine.cancel(id as u64);
+                Json::obj(vec![
+                    ("id", Json::num(id)),
+                    ("cancelled", Json::Bool(outcome.found())),
+                    ("state", Json::str(outcome.as_str())),
+                ])
+            }
+        },
+        Some(other) => {
+            Json::obj(vec![("error", Json::str(format!("unknown cmd {other:?}")))])
+        }
+        None => match GenRequest::from_json(j) {
+            Err(e) => Json::obj(vec![(
+                "error",
+                Json::str(format!("bad request: {e}")),
+            )]),
+            Ok(req) => {
+                let id = req.id;
+                match engine.submit(req).recv() {
+                    Ok(Ok(resp)) => resp.to_json(),
+                    Ok(Err(serve_err)) => Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("error", Json::str(serve_err.as_str())),
+                    ]),
+                    Err(_) => Json::obj(vec![(
+                        "error",
+                        Json::str("engine: reply channel closed"),
+                    )]),
+                }
+            }
+        },
+    }
 }
 
 /// Minimal blocking client for examples / benches / tests.
@@ -136,6 +213,9 @@ impl Client {
         Json::parse(&line).map_err(|e| anyhow::anyhow!("response parse: {e}"))
     }
 
+    /// Blocking generate; typed serving errors (`overloaded`,
+    /// `cancelled`, `deadline_exceeded`, ...) surface as `Err` with the
+    /// error string in the message.
     pub fn generate(
         &mut self,
         req: &GenRequest,
@@ -145,6 +225,15 @@ impl Client {
             anyhow::bail!("server error: {err}");
         }
         super::request::GenResponse::from_json(&j)
+    }
+
+    /// Cancel a queued or running request by id (typically from a second
+    /// connection); returns the raw `{"cancelled":..,"state":..}` reply.
+    pub fn cancel(&mut self, id: u64) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![
+            ("cmd", Json::str("cancel")),
+            ("id", Json::num(id as f64)),
+        ]))
     }
 
     pub fn metrics(&mut self) -> Result<Json> {

@@ -1,0 +1,246 @@
+//! A worker shard: one OS thread owning one PJRT runtime and one batched
+//! generation `Session`, pulling work from the shared [`Scheduler`].
+//!
+//! The xla handles are not `Send`, so each worker constructs its own
+//! `Runtime` and compiles its own step artifact.  Workers may bind
+//! *different* compiled batch sizes of the same family: a `batch=1`
+//! worker turns individual requests around quickly (latency shard) while
+//! a `batch=8` worker soaks throughput traffic — the scheduler's
+//! priority classes decide what every worker picks up next (high before
+//! normal before low), so pairing high-priority traffic with a
+//! small-batch shard gives latency isolation without a separate fleet.
+//!
+//! Per loop iteration a worker: admits queued requests into free slots
+//! (continuous batching — slots freed by an early halt are refilled
+//! mid-schedule), aborts slots whose request was cancelled or whose
+//! deadline expired, then advances all active slots with one device
+//! call.  Every completed request goes through the shared
+//! [`Metrics::record_completion`] bookkeeping.
+
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::request::GenResponse;
+use super::scheduler::{IdleWait, QueuedReq, Scheduler, ServeError};
+use crate::halting::BoxedPolicy;
+use crate::log_info;
+use crate::models::store::ParamStore;
+use crate::runtime::Runtime;
+use crate::sampler::{Family, Session, SlotRequest};
+
+pub struct WorkerConfig {
+    pub id: usize,
+    pub artifact_dir: String,
+    pub family: Family,
+    /// requested batch size; resolved to the nearest compiled artifact
+    pub batch: usize,
+    /// trained checkpoint (PBIN); falls back to init params when None
+    pub checkpoint: Option<String>,
+    pub t_max: f32,
+    pub t_min: f32,
+}
+
+struct Running {
+    q: QueuedReq,
+    /// this slot's live policy (cloned from the request and reset on
+    /// admission; the request keeps the pristine copy for its spec)
+    policy: BoxedPolicy,
+    started: Instant,
+}
+
+/// Spawn the worker thread.  It exits when the scheduler reports
+/// shutdown with a drained queue; startup errors (missing artifacts,
+/// bad checkpoint) surface through the join handle.
+pub fn spawn(
+    cfg: WorkerConfig,
+    sched: Arc<Scheduler>,
+    metrics: Arc<Mutex<Metrics>>,
+) -> JoinHandle<Result<()>> {
+    std::thread::spawn(move || {
+        let out = run_worker(&cfg, &sched, &metrics);
+        sched.worker_down();
+        out
+    })
+}
+
+fn run_worker(
+    cfg: &WorkerConfig,
+    sched: &Scheduler,
+    metrics: &Mutex<Metrics>,
+) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifact_dir)?;
+    let m = rt.manifest.model.clone();
+    let store = match &cfg.checkpoint {
+        Some(path) => ParamStore::load(path, cfg.family.name())?,
+        None => ParamStore::load_init(&cfg.artifact_dir, cfg.family.name())?,
+    };
+    // artifacts are compiled for fixed batch sizes; resolve the nearest
+    // available one (>= requested, else the largest)
+    let batch = rt.manifest.resolve_step_batch(
+        cfg.family.name(),
+        m.seq_len,
+        cfg.batch,
+    )?;
+    let mut session =
+        Session::new(&rt, cfg.family, Rc::new(store), batch, m.seq_len)?;
+    log_info!(
+        "worker {} up: family={} batch={} (requested {}) seq_len={}",
+        cfg.id,
+        cfg.family.name(),
+        batch,
+        cfg.batch,
+        m.seq_len
+    );
+    metrics.lock().unwrap().slots_total = batch as u64;
+
+    let mut running: Vec<Option<Running>> = (0..batch).map(|_| None).collect();
+    loop {
+        // 0) fully idle: sleep until work arrives or shutdown drains us
+        if running.iter().all(Option::is_none) {
+            match sched.wait_for_work() {
+                IdleWait::Work => {}
+                IdleWait::Exit => break,
+            }
+        }
+
+        // 1) admit queued requests into free slots (continuous batching)
+        for slot in 0..batch {
+            if running[slot].is_none() {
+                let Some(q) = sched.next_for(cfg.id) else { break };
+                let mut policy = q.req.policy.clone();
+                policy.reset();
+                session.reset_slot(
+                    slot,
+                    &SlotRequest::new(
+                        q.req.seed,
+                        q.req.n_steps,
+                        cfg.t_max,
+                        cfg.t_min,
+                    )
+                    .noise(q.req.noise_scale)
+                    .prefix(&q.req.prefix),
+                );
+                running[slot] = Some(Running {
+                    policy,
+                    started: Instant::now(),
+                    q,
+                });
+            }
+        }
+
+        // 2) sweep expired queued deadlines (so a saturated fleet still
+        //    answers them within one step latency), then abort slots
+        //    whose request was cancelled or whose deadline expired
+        //    mid-schedule
+        sched.reap_expired();
+        let now = Instant::now();
+        for slot in 0..batch {
+            let Some(r) = running[slot].as_ref() else { continue };
+            let err = if sched.cancel_requested(r.q.req.id) {
+                Some(ServeError::Cancelled)
+            } else if r.q.deadline.is_some_and(|d| now >= d) {
+                Some(ServeError::DeadlineExceeded)
+            } else {
+                None
+            };
+            if let Some(err) = err {
+                let r = running[slot].take().unwrap();
+                sched.finish(r.q.req.id);
+                {
+                    let mut wm = metrics.lock().unwrap();
+                    match err {
+                        ServeError::Cancelled => wm.cancelled += 1,
+                        _ => wm.deadline_exceeded += 1,
+                    }
+                    // steps burned before the abort still count
+                    wm.steps_executed += session.slots[slot].step as u64;
+                }
+                session.release_slot(slot);
+                let _ = r.q.reply.send(Err(err));
+            }
+        }
+
+        // 3) one batched device step; emit responses the moment a slot's
+        //    policy fires or its schedule exhausts
+        if running.iter().any(Option::is_some) {
+            let stats = match session.step() {
+                Ok(stats) => stats,
+                Err(e) => {
+                    // device failure: fail this worker's in-flight
+                    // requests over with a typed error (and release
+                    // their scheduler state) before surfacing the error
+                    for r in running.iter_mut().filter_map(Option::take) {
+                        sched.finish(r.q.req.id);
+                        let _ =
+                            r.q.reply.send(Err(ServeError::Unavailable));
+                    }
+                    return Err(e);
+                }
+            };
+            metrics.lock().unwrap().device_calls += 1;
+            for slot in 0..batch {
+                let Some(st) = stats[slot] else { continue };
+                let Some(r) = running[slot].as_mut() else { continue };
+                let executed = session.slots[slot].step;
+                let decision = r.policy.observe(executed - 1, &st);
+                let exhausted = session.slot_exhausted(slot);
+                if decision.halted() || exhausted {
+                    let r = running[slot].take().unwrap();
+                    let halted_early = decision.halted() && !exhausted;
+                    let resp = GenResponse {
+                        id: r.q.req.id,
+                        tokens: session.slot_output(slot),
+                        steps_executed: executed,
+                        steps_budget: r.q.req.n_steps,
+                        halted_early,
+                        halt_reason: if halted_early {
+                            decision.reason().map(str::to_string)
+                        } else {
+                            None
+                        },
+                        latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
+                        queue_ms: (r.started - r.q.submitted).as_secs_f64()
+                            * 1e3,
+                        final_stats: st,
+                    };
+                    sched.finish(resp.id);
+                    metrics
+                        .lock()
+                        .unwrap()
+                        .record_completion(&resp, r.q.req.priority);
+                    let _ = r.q.reply.send(Ok(resp));
+                    session.release_slot(slot);
+                }
+            }
+        }
+
+        // 4) refresh the occupancy/progress gauges
+        {
+            let mut wm = metrics.lock().unwrap();
+            wm.slots_busy =
+                running.iter().filter(|r| r.is_some()).count() as u64;
+            wm.steps_in_flight = running
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.is_some())
+                .map(|(slot, _)| session.slots[slot].step as u64)
+                .sum();
+        }
+    }
+    let (completed, ratio) = {
+        let wm = metrics.lock().unwrap();
+        (wm.requests_completed, wm.step_saving_ratio())
+    };
+    log_info!(
+        "worker {} down: {} completed, saving ratio {:.3}",
+        cfg.id,
+        completed,
+        ratio
+    );
+    Ok(())
+}

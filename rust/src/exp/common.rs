@@ -12,7 +12,7 @@ use anyhow::Result;
 use super::Ctx;
 use crate::halting::{HaltPolicy, StepStats};
 use crate::models::store::ParamStore;
-use crate::sampler::{Family, Session};
+use crate::sampler::{Family, Session, SlotRequest};
 
 #[derive(Clone, Debug)]
 pub struct RunOpts {
@@ -122,6 +122,9 @@ pub fn record_run(
     )?;
     let mut session =
         Session::new(&ctx.rt, opts.family, store, batch, seq_len)?;
+    // x / x0_hat trajectories cost ~L*D floats per slot per step to
+    // download — only pay for them when the caller wants vectors
+    session.set_record_x0(opts.record_vectors);
 
     // deterministic validation prompts (prefix task uses their heads)
     let ds = crate::corpus::dataset::Dataset::new(m.vocab, seq_len);
@@ -137,12 +140,14 @@ pub fn record_run(
             let prefix = &references[sample][..opts.prefix_len];
             session.reset_slot(
                 slot,
-                opts.seed ^ (sample as u64).wrapping_mul(0x9E37_79B9),
-                opts.n_steps,
-                opts.noise_scale,
-                m.t_max,
-                m.t_min,
-                prefix,
+                &SlotRequest::new(
+                    opts.seed ^ (sample as u64).wrapping_mul(0x9E37_79B9),
+                    opts.n_steps,
+                    m.t_max,
+                    m.t_min,
+                )
+                .noise(opts.noise_scale)
+                .prefix(prefix),
             );
         }
         // idle out unused slots in the tail group

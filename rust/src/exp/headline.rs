@@ -38,7 +38,7 @@ fn serve_stream(
     n_steps: usize,
 ) -> Result<ServeResult> {
     let mut cfg = EngineConfig::new(&ctx.artifact_dir, family);
-    cfg.batch = 8;
+    cfg.worker_batches = vec![8];
     let ckpt = format!("{}/{}.pbin", ctx.runs_dir, family.name());
     if std::path::Path::new(&ckpt).exists() {
         cfg.checkpoint = Some(ckpt);
@@ -63,7 +63,7 @@ fn serve_stream(
     let mut lat = 0.0;
     let mut steps = 0usize;
     for rx in rxs {
-        let r = rx.recv()?;
+        let r = rx.recv()??;
         lat += r.latency_ms;
         steps += r.steps_executed;
         outputs.push(r.tokens);

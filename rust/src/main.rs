@@ -21,7 +21,8 @@ use repro::exp;
 use repro::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
-use repro::sampler::{Family, Session};
+use repro::coordinator::Priority;
+use repro::sampler::{Family, Session, SlotRequest};
 use repro::train::{TrainConfig, TrainTarget, Trainer};
 use repro::util::cli::Args;
 use repro::util::log;
@@ -62,7 +63,13 @@ fn print_help() {
          gen      --family F [--steps N] [--criterion SPEC] [--n 4]\n\
          \u{20}        [--prefix-len 32] [--noise 1.0]\n\
          serve    --family F [--addr 127.0.0.1:7411] [--batch 8]\n\
+         \u{20}        [--workers 1] [--queue-depth 256]\n\
+         \u{20}        (N workers, each owning one compiled batch-B\n\
+         \u{20}        session; bounded admission queue rejects with a\n\
+         \u{20}        typed 'overloaded' error; wire supports priority,\n\
+         \u{20}        deadline_ms and {{\"cmd\":\"cancel\",\"id\":..}})\n\
          client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
+         \u{20}        [--priority high|normal|low] [--deadline-ms MS]\n\
          exp      <id>|all  [--quick]   ids: {}\n\
          \n\
          criterion SPEC is the halting-policy DSL: entropy:T, \n\
@@ -196,12 +203,14 @@ fn cmd_gen(args: &Args) -> Result<()> {
         for (slot, &i) in group.iter().enumerate() {
             session.reset_slot(
                 slot,
-                args.u64_or("seed", 7) + i as u64,
-                n_steps,
-                noise,
-                m.t_max,
-                m.t_min,
-                &prompts[i][..prefix_len],
+                &SlotRequest::new(
+                    args.u64_or("seed", 7) + i as u64,
+                    n_steps,
+                    m.t_max,
+                    m.t_min,
+                )
+                .noise(noise)
+                .prefix(&prompts[i][..prefix_len]),
             );
         }
         for slot in group.len()..batch {
@@ -270,17 +279,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let runs = runs_dir(args);
     let fam = parse_family(args)?;
     let mut cfg = EngineConfig::new(&dir, fam);
-    cfg.batch = args.usize_or("batch", 8);
+    let batch = args.usize_or("batch", 8);
+    let workers = args.usize_or("workers", 1).max(1);
+    cfg.worker_batches = vec![batch; workers];
+    cfg.queue_depth = args.usize_or("queue-depth", 256);
     let ckpt = format!("{runs}/{}.pbin", fam.name());
     if std::path::Path::new(&ckpt).exists() {
         cfg.checkpoint = Some(ckpt);
     }
     let (engine, join) = start(cfg);
     let addr = args.get_or("addr", "127.0.0.1:7411");
-    let server = Server::start(addr, engine)?;
-    println!("serving {} on {}", fam.name(), server.addr);
-    join.join().unwrap().context("engine")?;
-    Ok(())
+    let mut server = Server::start(addr, engine)?;
+    println!(
+        "serving {} on {} ({workers} worker(s) x batch {batch})",
+        fam.name(),
+        server.addr
+    );
+    let res = join.join().unwrap().context("engine");
+    server.stop();
+    res
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
@@ -288,6 +305,13 @@ fn cmd_client(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 16);
     let steps = args.usize_or("steps", 200);
     let crit = args.get_or("criterion", "none").to_string();
+    let priority = Priority::parse(args.get_or("priority", "normal"))
+        .ok_or_else(|| anyhow::anyhow!("bad --priority"))?;
+    let deadline_ms = args.get("deadline-ms").map(|s| {
+        s.parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("bad --deadline-ms"))
+    });
+    let deadline_ms = deadline_ms.transpose()?;
     let mut client = Client::connect(addr)?;
     let t0 = std::time::Instant::now();
     let mut total_steps = 0usize;
@@ -295,6 +319,8 @@ fn cmd_client(args: &Args) -> Result<()> {
         let mut req = GenRequest::new(i as u64, steps);
         req.policy = parse_policy(&crit)
             .ok_or_else(|| anyhow::anyhow!("bad --criterion"))?;
+        req.priority = priority;
+        req.deadline_ms = deadline_ms;
         let resp = client.generate(&req)?;
         total_steps += resp.steps_executed;
         println!(

@@ -76,6 +76,41 @@ impl Executable {
         Ok(DeviceTensor { _lit: lit, buf })
     }
 
+    /// Upload a borrowed f32 slice without the `Vec`/`Tensor` clone the
+    /// `buffer_from_tensor` path needs — the per-step state upload
+    /// (§Perf: the serving hot path calls this 3-5x per device step).
+    /// Same literal-lifetime contract as [`Self::buffer_from_tensor`].
+    pub fn buffer_from_f32(
+        &self,
+        shape: &[usize],
+        data: &[f32],
+    ) -> Result<DeviceTensor> {
+        let t0 = Instant::now();
+        let lit = super::tensor::f32_literal(shape, data)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("buffer_from_host_literal")?;
+        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
+    /// i32 twin of [`Self::buffer_from_f32`].
+    pub fn buffer_from_i32(
+        &self,
+        shape: &[usize],
+        data: &[i32],
+    ) -> Result<DeviceTensor> {
+        let t0 = Instant::now();
+        let lit = super::tensor::i32_literal(shape, data)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("buffer_from_host_literal")?;
+        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        Ok(DeviceTensor { _lit: lit, buf })
+    }
+
     /// Execute with caller-owned device buffers (the hot path: persistent
     /// parameter buffers are uploaded once per session and reused).
     pub fn run_buffers(

@@ -95,34 +95,8 @@ impl Tensor {
     // ------------------------------------------------------- xla bridge
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
-            Tensor::F32 { shape, data } => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(
-                        data.as_ptr() as *const u8,
-                        data.len() * 4,
-                    )
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::F32,
-                    shape,
-                    bytes,
-                )
-                .context("f32 literal")
-            }
-            Tensor::I32 { shape, data } => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(
-                        data.as_ptr() as *const u8,
-                        data.len() * 4,
-                    )
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S32,
-                    shape,
-                    bytes,
-                )
-                .context("i32 literal")
-            }
+            Tensor::F32 { shape, data } => f32_literal(shape, data),
+            Tensor::I32 { shape, data } => i32_literal(shape, data),
         }
     }
 
@@ -144,9 +118,57 @@ impl Tensor {
     }
 }
 
+/// Build an f32 literal straight from a borrowed slice — the serving hot
+/// path's upload primitive (no intermediate `Vec`/`Tensor` clone; the
+/// literal's own byte copy is the only host copy).
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    if numel(shape) != data.len() {
+        bail!("shape {shape:?} / data len {} mismatch", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )
+    .context("f32 literal")
+}
+
+/// i32 twin of [`f32_literal`].
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    if numel(shape) != data.len() {
+        bail!("shape {shape:?} / data len {} mismatch", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )
+    .context("i32 literal")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn slice_literal_roundtrips_without_tensor() {
+        let data = [1.5f32, -2.0, 0.0, 7.25];
+        let lit = f32_literal(&[2, 2], &data).unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &data);
+        let ints = [3i32, -9];
+        let lit = i32_literal(&[2], &ints).unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &ints);
+        // shape mismatches are errors, not panics, on the hot path
+        assert!(f32_literal(&[3], &data).is_err());
+    }
 
     #[test]
     fn literal_roundtrip_f32() {

@@ -5,4 +5,4 @@ pub mod schedule;
 pub mod session;
 
 pub use schedule::{Family, Schedule};
-pub use session::{Session, Slot};
+pub use session::{Session, Slot, SlotRequest};

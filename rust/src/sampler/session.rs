@@ -6,8 +6,13 @@
 //! prefix, which is exactly what the coordinator's continuous batcher
 //! needs: a slot whose request halted early is reset and reused while the
 //! other slots keep denoising mid-schedule.
+//!
+//! §Perf: `step()` uploads straight from the session's persistent host
+//! buffers (no per-step `Vec` clones — see `Executable::buffer_from_f32`)
+//! and downloads only the outputs the serving path reads; the bulky
+//! `x0_hat` tensor (L*D floats per slot) converts only when trajectory
+//! recording is switched on via [`Session::set_record_x0`] (Fig 2).
 
-use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
@@ -15,8 +20,52 @@ use anyhow::{bail, Context, Result};
 use super::schedule::{Family, Schedule};
 use crate::halting::StepStats;
 use crate::models::store::ParamStore;
-use crate::runtime::{Executable, Runtime, Tensor};
+use crate::runtime::{Executable, Runtime};
 use crate::util::prng::Prng;
+
+/// Everything `reset_slot` needs to occupy a slot with a fresh request.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotRequest<'a> {
+    pub seed: u64,
+    /// maximum diffusion steps (N_max)
+    pub n_steps: usize,
+    /// initial noise scale (paper Fig 3 / Table 1 knob)
+    pub noise_scale: f32,
+    pub t_max: f32,
+    pub t_min: f32,
+    /// conditioning prefix tokens (empty = unconditional)
+    pub prefix: &'a [i32],
+}
+
+impl<'a> SlotRequest<'a> {
+    /// Unconditional request at the default noise scale (1.0); chain
+    /// [`Self::noise`] / [`Self::prefix`] for the rest.
+    pub fn new(
+        seed: u64,
+        n_steps: usize,
+        t_max: f32,
+        t_min: f32,
+    ) -> SlotRequest<'a> {
+        SlotRequest {
+            seed,
+            n_steps,
+            noise_scale: 1.0,
+            t_max,
+            t_min,
+            prefix: &[],
+        }
+    }
+
+    pub fn noise(mut self, scale: f32) -> SlotRequest<'a> {
+        self.noise_scale = scale;
+        self
+    }
+
+    pub fn prefix(mut self, prefix: &'a [i32]) -> SlotRequest<'a> {
+        self.prefix = prefix;
+        self
+    }
+}
 
 /// Per-slot generation state.
 #[derive(Clone, Debug)]
@@ -35,6 +84,20 @@ pub struct Slot {
     pub tokens: Vec<i32>,
     /// latest step statistics
     pub last_stats: StepStats,
+}
+
+/// Step-artifact output indices, resolved once at session build so the
+/// hot loop never does name lookups.
+struct StepOutIdx {
+    x_next: usize,
+    probs: usize,
+    tokens: usize,
+    entropy: usize,
+    kl: usize,
+    switches: usize,
+    norm_x0: usize,
+    norm_x: usize,
+    x0_hat: usize,
 }
 
 pub struct Session {
@@ -58,8 +121,16 @@ pub struct Session {
     /// input-name for the time tensor ("t2" for ddlm, "tau2" for VP)
     time_input: &'static str,
     needs_z: bool,
-    /// latest x0_hat download [B, L*D] (Fig-2 trajectory analysis)
+    /// per-step (t_cur, t_next) upload scratch [B, 2], reused every step
+    t2_scratch: Vec<f32>,
+    /// per-step noise upload scratch [B, row], reused every step
+    z_scratch: Vec<f32>,
+    /// download x0_hat each step? (trajectory analysis only — serving
+    /// skips ~L*D floats per slot per step when off, the default)
+    record_x0: bool,
+    /// latest x0_hat download [B, L*D] (allocated when recording is on)
     last_x0_hat: Vec<f32>,
+    out_idx: StepOutIdx,
     /// persistent device buffers for the (immutable) parameters, uploaded
     /// once — (input index, buffer); §Perf: params are ~70 % of the
     /// per-step input bytes and never change during generation
@@ -111,6 +182,18 @@ impl Session {
                 data_idx.push((input.name.clone(), i));
             }
         }
+        let out_idx = StepOutIdx {
+            x_next: exe.spec.output_index("x_next")?,
+            probs: exe.spec.output_index("probs")?,
+            tokens: exe.spec.output_index("tokens")?,
+            entropy: exe.spec.output_index("entropy")?,
+            kl: exe.spec.output_index("kl")?,
+            switches: exe.spec.output_index("switches")?,
+            norm_x0: exe.spec.output_index("norm_x0")?,
+            norm_x: exe.spec.output_index("norm_x")?,
+            x0_hat: exe.spec.output_index("x0_hat")?,
+        };
+        let needs_z = !matches!(family, Family::Ddlm);
         let default_schedule =
             Schedule::new(family, 1, m.t_max, m.t_min);
         let slots = (0..batch)
@@ -143,8 +226,12 @@ impl Session {
                 Family::Ddlm => "t2",
                 _ => "tau2",
             },
-            needs_z: !matches!(family, Family::Ddlm),
-            last_x0_hat: vec![0.0; batch * seq_len * d],
+            needs_z,
+            t2_scratch: vec![0.0; batch * 2],
+            z_scratch: if needs_z { vec![0.0; batch * row] } else { Vec::new() },
+            record_x0: false,
+            last_x0_hat: Vec::new(),
+            out_idx,
             param_bufs,
             data_idx,
             device_calls: 0,
@@ -153,21 +240,15 @@ impl Session {
 
     /// Occupy a slot with a fresh request: initialise noise, schedule and
     /// optional conditioning prefix.
-    pub fn reset_slot(
-        &mut self,
-        slot: usize,
-        seed: u64,
-        n_steps: usize,
-        noise_scale: f32,
-        t_max: f32,
-        t_min: f32,
-        prefix: &[i32],
-    ) {
-        assert!(slot < self.batch);
-        assert!(prefix.len() <= self.seq_len);
-        let schedule = Schedule::new(self.family, n_steps, t_max, t_min);
-        let mut rng = Prng::new(seed).fork("gen-noise");
-        let sigma = schedule.init_sigma() * noise_scale;
+    pub fn reset_slot(&mut self, slot: usize, req: &SlotRequest) {
+        assert!(
+            req.prefix.len() <= self.seq_len,
+            "prefix longer than seq_len"
+        );
+        let schedule =
+            Schedule::new(self.family, req.n_steps, req.t_max, req.t_min);
+        let mut rng = Prng::new(req.seed).fork("gen-noise");
+        let sigma = schedule.init_sigma() * req.noise_scale;
         let (l, v) = (self.seq_len, self.vocab);
         let base = slot * self.row;
         match self.family {
@@ -192,7 +273,7 @@ impl Session {
         for t in &mut self.prev_tokens[tb..tb + l] {
             *t = 0;
         }
-        for (i, &tok) in prefix.iter().enumerate() {
+        for (i, &tok) in req.prefix.iter().enumerate() {
             self.prev_tokens[tb + i] = tok;
         }
         let s = &mut self.slots[slot];
@@ -200,7 +281,7 @@ impl Session {
         s.schedule = schedule;
         s.active = true;
         s.rng = rng;
-        s.prefix = prefix.to_vec();
+        s.prefix = req.prefix.to_vec();
         s.tokens = self.prev_tokens[tb..tb + l].to_vec();
         s.last_stats = StepStats::default();
         self.clamp_prefix(slot);
@@ -219,7 +300,6 @@ impl Session {
     /// replacement conditioning, matching how prefix-masked training kept
     /// unmasked positions clean at every noise level.
     fn clamp_prefix(&mut self, slot: usize) {
-        let l = self.seq_len;
         let (v, d) = (self.vocab, self.d_model);
         let prefix = self.slots[slot].prefix.clone();
         let base = slot * self.row;
@@ -245,7 +325,17 @@ impl Session {
                 }
             }
         }
-        let _ = l;
+    }
+
+    /// Enable/disable the per-step `x0_hat` download (Fig-2 trajectory
+    /// analysis).  Off by default: serving workers skip converting
+    /// ~L*D floats per slot per step they would never read.
+    pub fn set_record_x0(&mut self, on: bool) {
+        self.record_x0 = on;
+        if on && self.last_x0_hat.is_empty() {
+            self.last_x0_hat =
+                vec![0.0; self.batch * self.seq_len * self.d_model];
+        }
     }
 
     /// Advance every active slot by one diffusion step (one device call).
@@ -253,8 +343,7 @@ impl Session {
     /// Returns per-slot stats for slots that were active.
     pub fn step(&mut self) -> Result<Vec<Option<StepStats>>> {
         let (b, l, v) = (self.batch, self.seq_len, self.vocab);
-        // per-slot (t_cur, t_next)
-        let mut t2 = vec![0.0f32; b * 2];
+        // per-slot (t_cur, t_next) into the reused scratch
         for (i, s) in self.slots.iter().enumerate() {
             let (c, n) = if s.active && s.step < s.schedule.n_steps() {
                 s.schedule.pair(s.step)
@@ -265,45 +354,45 @@ impl Session {
                     _ => (0.5, 0.5),
                 }
             };
-            t2[i * 2] = c;
-            t2[i * 2 + 1] = n;
+            self.t2_scratch[i * 2] = c;
+            self.t2_scratch[i * 2 + 1] = n;
         }
-
-        let mut data: BTreeMap<String, Tensor> = BTreeMap::new();
-        let x_shape: Vec<usize> = match self.family {
-            Family::Ssd => vec![b, l, v],
-            _ => vec![b, l, self.d_model],
-        };
-        data.insert("x_t".to_string(), Tensor::f32(&x_shape, self.x.clone()));
-        data.insert(
-            "prev_probs".to_string(),
-            Tensor::f32(&[b, l, v], self.prev_probs.clone()),
-        );
-        data.insert(
-            "prev_tokens".to_string(),
-            Tensor::i32(&[b, l], self.prev_tokens.clone()),
-        );
-        data.insert(self.time_input.to_string(), Tensor::f32(&[b, 2], t2));
         if self.needs_z {
-            let mut z = vec![0.0f32; b * self.row];
+            // refresh noise for active slots only; idle slots keep stale
+            // values (their outputs are ignored)
+            let row = self.row;
+            let z = &mut self.z_scratch;
             for (i, s) in self.slots.iter_mut().enumerate() {
                 if s.active {
-                    s.rng.fill_gaussian_f32(
-                        &mut z[i * self.row..(i + 1) * self.row],
-                    );
+                    s.rng.fill_gaussian_f32(&mut z[i * row..(i + 1) * row]);
                 }
             }
-            data.insert("z".to_string(), Tensor::f32(&x_shape, z));
         }
 
-        // assemble device buffers: persistent param buffers + fresh data
-        // buffers (only the per-step tensors cross the host boundary)
+        // assemble device buffers: persistent param buffers + per-step
+        // data uploaded straight from the session's host state (no Vec
+        // clones — only the per-step tensors cross the host boundary)
+        let x_shape: [usize; 3] = match self.family {
+            Family::Ssd => [b, l, v],
+            _ => [b, l, self.d_model],
+        };
         let mut data_bufs = Vec::with_capacity(self.data_idx.len());
         for (name, i) in &self.data_idx {
-            let t = data
-                .remove(name.as_str())
-                .ok_or_else(|| anyhow::anyhow!("missing data input {name}"))?;
-            data_bufs.push((*i, self.exe.buffer_from_tensor(&t)?));
+            let buf = match name.as_str() {
+                "x_t" => self.exe.buffer_from_f32(&x_shape, &self.x)?,
+                "prev_probs" => {
+                    self.exe.buffer_from_f32(&[b, l, v], &self.prev_probs)?
+                }
+                "prev_tokens" => {
+                    self.exe.buffer_from_i32(&[b, l], &self.prev_tokens)?
+                }
+                "z" => self.exe.buffer_from_f32(&x_shape, &self.z_scratch)?,
+                n if n == self.time_input => {
+                    self.exe.buffer_from_f32(&[b, 2], &self.t2_scratch)?
+                }
+                other => bail!("unexpected step input {other}"),
+            };
+            data_bufs.push((*i, buf));
         }
         let n_inputs = self.exe.spec.inputs.len();
         let mut slots_in: Vec<Option<&xla::PjRtBuffer>> = vec![None; n_inputs];
@@ -318,19 +407,31 @@ impl Session {
             .map(|o| o.expect("input gap"))
             .collect();
         let out_lits = self.exe.run_buffers(&refs).context("step execute")?;
-        let out = self.exe.download(out_lits)?;
         self.device_calls += 1;
 
-        let spec = &self.exe.spec;
-        let x_next = out[spec.output_index("x_next")?].as_f32()?;
-        let probs = out[spec.output_index("probs")?].as_f32()?;
-        let tokens = out[spec.output_index("tokens")?].as_i32()?;
-        let entropy = out[spec.output_index("entropy")?].as_f32()?;
-        let kl = out[spec.output_index("kl")?].as_f32()?;
-        let switches = out[spec.output_index("switches")?].as_f32()?;
-        let norm_x0 = out[spec.output_index("norm_x0")?].as_f32()?;
-        let norm_x = out[spec.output_index("norm_x")?].as_f32()?;
-        let x0_hat = out[spec.output_index("x0_hat")?].as_f32()?;
+        // download only what the caller reads; x0_hat converts lazily
+        let o = &self.out_idx;
+        let mut want = vec![
+            o.x_next, o.probs, o.tokens, o.entropy, o.kl, o.switches,
+            o.norm_x0, o.norm_x,
+        ];
+        if self.record_x0 {
+            want.push(o.x0_hat);
+        }
+        let out = self.exe.download_selected(&out_lits, &want)?;
+        let x_next = out[0].as_f32()?;
+        let probs = out[1].as_f32()?;
+        let tokens = out[2].as_i32()?;
+        let entropy = out[3].as_f32()?;
+        let kl = out[4].as_f32()?;
+        let switches = out[5].as_f32()?;
+        let norm_x0 = out[6].as_f32()?;
+        let norm_x = out[7].as_f32()?;
+        let x0_hat = if self.record_x0 {
+            Some(out[8].as_f32()?)
+        } else {
+            None
+        };
 
         let mut results = Vec::with_capacity(b);
         for i in 0..b {
@@ -348,9 +449,11 @@ impl Session {
             let tb = i * l;
             self.prev_tokens[tb..tb + l]
                 .copy_from_slice(&tokens[tb..tb + l]);
-            let w = l * self.d_model;
-            self.last_x0_hat[i * w..(i + 1) * w]
-                .copy_from_slice(&x0_hat[i * w..(i + 1) * w]);
+            if let Some(x0) = x0_hat {
+                let w = l * self.d_model;
+                self.last_x0_hat[i * w..(i + 1) * w]
+                    .copy_from_slice(&x0[i * w..(i + 1) * w]);
+            }
             let stats = StepStats {
                 entropy: entropy[i],
                 kl: kl[i],
@@ -380,7 +483,12 @@ impl Session {
     }
 
     /// Latest x0_hat row of a slot (always L*D) — Fig-2 score analysis.
+    /// Requires [`Self::set_record_x0`]`(true)` before stepping.
     pub fn slot_x0_hat(&self, slot: usize) -> &[f32] {
+        assert!(
+            self.record_x0,
+            "x0_hat recording is off — call set_record_x0(true) first"
+        );
         let w = self.seq_len * self.d_model;
         &self.last_x0_hat[slot * w..(slot + 1) * w]
     }

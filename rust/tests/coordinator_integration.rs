@@ -1,7 +1,12 @@
-//! Integration: the engine's continuous batcher end-to-end — admission,
-//! early-exit slot recycling, per-policy halting, metrics accounting.
+//! Integration: the sharded scheduler/worker engine end-to-end —
+//! admission, early-exit slot recycling, per-policy halting, priorities,
+//! cancellation, deadlines, backpressure, merged fleet metrics.
 
-use repro::coordinator::{start, EngineConfig, GenRequest};
+use std::time::Duration;
+
+use repro::coordinator::{
+    start, CancelOutcome, EngineConfig, GenRequest, ServeError,
+};
 use repro::halting::parse_policy;
 use repro::sampler::Family;
 use repro::util::json::Json;
@@ -14,11 +19,17 @@ fn artifacts_dir() -> Option<String> {
         .then_some(d)
 }
 
+fn metric(m: &Json, key: &str) -> f64 {
+    m.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing metric {key} in {}", m.encode()))
+}
+
 #[test]
 fn engine_serves_mixed_criteria_batch() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.batch = 4;
+    cfg.worker_batches = vec![4];
     let (engine, join) = start(cfg);
 
     // 10 requests, more than slots: forces queueing + recycling.
@@ -34,7 +45,7 @@ fn engine_serves_mixed_criteria_batch() {
     let mut early = 0;
     let mut full = 0;
     for (i, rx) in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, i);
         assert_eq!(resp.tokens.len(), 64);
         if i % 2 == 0 {
@@ -52,21 +63,15 @@ fn engine_serves_mixed_criteria_batch() {
     assert_eq!((early, full), (5, 5));
 
     let m = engine.metrics().unwrap();
-    assert_eq!(
-        m.get("requests_completed").unwrap().as_f64().unwrap(),
-        10.0
-    );
+    assert_eq!(metric(&m, "requests_completed"), 10.0);
     // 5 requests saved 7 steps each
-    assert_eq!(m.get("steps_saved").unwrap().as_f64().unwrap(), 35.0);
-    assert_eq!(
-        m.get("steps_executed").unwrap().as_f64().unwrap(),
-        5.0 * 5.0 + 5.0 * 12.0
-    );
+    assert_eq!(metric(&m, "steps_saved"), 35.0);
+    assert_eq!(metric(&m, "steps_executed"), 5.0 * 5.0 + 5.0 * 12.0);
     // every early halt is attributed to the fixed policy
-    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 5.0);
+    assert_eq!(metric(&m, "halted_by_fixed"), 5.0);
     // continuous batching must beat 10 sequential runs: with batch=4 and
     // 85 total steps, device calls must be well under 85
-    let calls = m.get("device_calls").unwrap().as_f64().unwrap();
+    let calls = metric(&m, "device_calls");
     assert!(calls < 60.0, "device_calls={calls}");
 
     engine.shutdown();
@@ -79,7 +84,7 @@ fn engine_serves_mixed_policy_batch_with_combinators() {
     // its own policy, freed slots must be recycled for the queue tail
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.batch = 4;
+    cfg.worker_batches = vec![4];
     let (engine, join) = start(cfg);
 
     // (spec, expected steps, expected reason) at a 16-step budget;
@@ -101,7 +106,7 @@ fn engine_serves_mixed_policy_batch_with_combinators() {
         rxs.push(engine.submit(req));
     }
     for (rx, (spec, steps, reason)) in rxs.into_iter().zip(cases) {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(
             resp.steps_executed, *steps,
             "policy {spec} ran {} steps",
@@ -113,12 +118,12 @@ fn engine_serves_mixed_policy_batch_with_combinators() {
 
     let m = engine.metrics().unwrap();
     // reasons aggregate across plain and combinator policies alike
-    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 4.0);
-    assert_eq!(m.get("halted_by_entropy").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(metric(&m, "halted_by_fixed"), 4.0);
+    assert_eq!(metric(&m, "halted_by_entropy"), 2.0);
     // 7 requests x 16 budget = 112; executed 3+16+6+4+5+2+1 = 37; the
     // recycling bound: batch=4 must finish in far fewer device calls
-    assert_eq!(m.get("steps_executed").unwrap().as_f64().unwrap(), 37.0);
-    let calls = m.get("device_calls").unwrap().as_f64().unwrap();
+    assert_eq!(metric(&m, "steps_executed"), 37.0);
+    let calls = metric(&m, "device_calls");
     assert!(calls < 37.0, "device_calls={calls}");
 
     engine.shutdown();
@@ -138,8 +143,11 @@ fn zero_step_budget_resolves_without_device_steps() {
     assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
     assert!(resp.tokens.is_empty());
     let m = engine.metrics().unwrap();
-    assert_eq!(m.get("steps_saved").unwrap().as_f64().unwrap(), 10.0);
-    assert_eq!(m.get("halted_by_fixed").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(metric(&m, "steps_saved"), 10.0);
+    assert_eq!(metric(&m, "halted_by_fixed"), 1.0);
+    // preflight resolutions share the completion path: the latency and
+    // queue histograms observed this request too
+    assert_eq!(metric(&m, "requests_completed"), 1.0);
     engine.shutdown();
     join.join().unwrap().unwrap();
 }
@@ -148,7 +156,7 @@ fn zero_step_budget_resolves_without_device_steps() {
 fn engine_handles_prefix_requests() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ssd);
-    cfg.batch = 2;
+    cfg.worker_batches = vec![2];
     let (engine, join) = start(cfg);
     let mut req = GenRequest::new(1, 6);
     req.prefix = (5..37).collect();
@@ -163,9 +171,7 @@ fn engine_metrics_json_shape() {
     let Some(dir) = artifacts_dir() else { return };
     let cfg = EngineConfig::new(&dir, Family::Ddlm);
     let (engine, join) = start(cfg);
-    let resp = engine
-        .generate(GenRequest::new(1, 3))
-        .unwrap();
+    let resp = engine.generate(GenRequest::new(1, 3)).unwrap();
     assert_eq!(resp.steps_budget, 3);
     let m = engine.metrics().unwrap();
     for key in [
@@ -176,10 +182,187 @@ fn engine_metrics_json_shape() {
         "step_saving_ratio",
         "latency_p95_ms",
         "throughput_rps",
+        // serving-stack additions
+        "rejected_overloaded",
+        "cancelled",
+        "deadline_exceeded",
+        "queue_depth",
+        "running_requests",
+        "slots_total",
+        "slots_busy",
     ] {
         assert!(m.get(key).is_some(), "missing {key}");
     }
     assert!(matches!(m.get("latency_mean_ms"), Some(Json::Num(n)) if *n > 0.0));
+    // per-worker breakdown is part of the fleet snapshot
+    let workers = m.get("workers").and_then(Json::as_arr).unwrap();
+    assert_eq!(workers.len(), 1);
+    assert_eq!(
+        workers[0].get("requests_completed").and_then(Json::as_f64),
+        Some(1.0)
+    );
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn two_worker_shard_completes_requests_on_both_workers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    // two single-slot shards: neither can swallow a whole burst, so both
+    // must participate (compiled artifacts exist for batch 1 and 8)
+    cfg.worker_batches = vec![1, 1];
+    let (engine, join) = start(cfg);
+
+    // keep feeding bursts from one client until both shards have
+    // completed work (tolerates one worker compiling its artifact later)
+    let mut id = 0u64;
+    let mut fed = 0usize;
+    loop {
+        let rxs: Vec<_> = (0..8)
+            .map(|_| {
+                id += 1;
+                engine.submit(GenRequest::new(id, 10))
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.steps_executed, 10);
+            fed += 1;
+        }
+        let m = engine.metrics().unwrap();
+        let workers = m.get("workers").and_then(Json::as_arr).unwrap();
+        assert_eq!(workers.len(), 2);
+        let done: Vec<f64> = workers
+            .iter()
+            .map(|w| {
+                w.get("requests_completed")
+                    .and_then(Json::as_f64)
+                    .unwrap()
+            })
+            .collect();
+        if done.iter().all(|&d| d >= 1.0) {
+            // the merged snapshot sums the per-worker counters
+            assert_eq!(metric(&m, "requests_completed"), done.iter().sum());
+            assert_eq!(metric(&m, "slots_total"), 2.0);
+            break;
+        }
+        assert!(fed < 400, "second worker never served: {done:?}");
+    }
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn cancel_running_request_frees_its_slot() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_batches = vec![1];
+    let (engine, join) = start(cfg);
+
+    // a request that would run ~forever without cancellation
+    let rx = engine.submit(GenRequest::new(77, 1_000_000));
+    // wait until a worker owns it (the first poll rounds cover the
+    // worker's one-off artifact compile)
+    for _ in 0..2400 {
+        let m = engine.metrics().unwrap();
+        if metric(&m, "running_requests") >= 1.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert_eq!(engine.cancel(77), CancelOutcome::Running);
+    assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Cancelled);
+    let m = engine.metrics().unwrap();
+    assert_eq!(metric(&m, "cancelled"), 1.0);
+
+    // the freed slot serves the next request normally
+    let resp = engine.generate(GenRequest::new(78, 4)).unwrap();
+    assert_eq!(resp.steps_executed, 4);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn cancel_queued_request_behind_a_long_one() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_batches = vec![1];
+    let (engine, join) = start(cfg);
+
+    let rx_long = engine.submit(GenRequest::new(1, 1_000_000));
+    // this one sits in the queue behind the long request (batch=1)
+    let rx_queued = engine.submit(GenRequest::new(2, 10));
+    assert_eq!(engine.cancel(2), CancelOutcome::Queued);
+    assert_eq!(
+        rx_queued.recv().unwrap().unwrap_err(),
+        ServeError::Cancelled
+    );
+    // the long request is either still queued (worker compiling) or
+    // already running — both cancel paths must reach it
+    assert!(engine.cancel(1).found());
+    assert_eq!(rx_long.recv().unwrap().unwrap_err(), ServeError::Cancelled);
+    let m = engine.metrics().unwrap();
+    assert_eq!(metric(&m, "cancelled"), 2.0);
+    assert_eq!(engine.cancel(3), CancelOutcome::NotFound);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn deadline_expires_mid_schedule() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_batches = vec![1];
+    let (engine, join) = start(cfg);
+
+    let mut req = GenRequest::new(5, 1_000_000);
+    req.deadline_ms = Some(150.0);
+    let rx = engine.submit(req);
+    assert_eq!(
+        rx.recv().unwrap().unwrap_err(),
+        ServeError::DeadlineExceeded
+    );
+    let m = engine.metrics().unwrap();
+    assert_eq!(metric(&m, "deadline_exceeded"), 1.0);
+    // the slot is free again afterwards
+    let resp = engine.generate(GenRequest::new(6, 3)).unwrap();
+    assert_eq!(resp.steps_executed, 3);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn bounded_queue_rejects_with_typed_overload() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_batches = vec![1];
+    cfg.queue_depth = 1;
+    let (engine, join) = start(cfg);
+
+    // fill the single queue slot (plus at most one running request),
+    // then expect a synchronous typed rejection from try_submit
+    let mut accepted = Vec::new();
+    let mut rejected = false;
+    for id in 1..=8u64 {
+        match engine.try_submit(GenRequest::new(id, 1_000_000)) {
+            Ok(rx) => accepted.push((id, rx)),
+            Err(e) => {
+                assert_eq!(e, ServeError::Overloaded);
+                rejected = true;
+                break;
+            }
+        }
+    }
+    assert!(rejected, "queue_depth=1 never overloaded");
+    let m = engine.metrics().unwrap();
+    assert!(metric(&m, "rejected_overloaded") >= 1.0);
+
+    // drain: cancel everything still in flight, then shut down
+    for (id, rx) in accepted {
+        assert!(engine.cancel(id).found());
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Cancelled);
+    }
     engine.shutdown();
     join.join().unwrap().unwrap();
 }

@@ -6,7 +6,7 @@ use std::rc::Rc;
 use repro::halting::{parse_policy, HaltPolicy};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
-use repro::sampler::{Family, Session};
+use repro::sampler::{Family, Session, SlotRequest};
 
 fn artifacts_dir() -> Option<String> {
     let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
@@ -29,7 +29,7 @@ fn slots_are_isolated() {
     let mut s1 = Session::new(&rt, Family::Ddlm, store.clone(), 8, m.seq_len)
         .unwrap();
     // run A: request alone in slot 0
-    s1.reset_slot(0, 777, 10, 1.0, m.t_max, m.t_min, &[]);
+    s1.reset_slot(0, &SlotRequest::new(777, 10, m.t_max, m.t_min));
     let mut trace_alone = Vec::new();
     for _ in 0..10 {
         let st = s1.step().unwrap();
@@ -39,9 +39,13 @@ fn slots_are_isolated() {
 
     // run B: same request in slot 0, plus different requests elsewhere
     let mut s2 = Session::new(&rt, Family::Ddlm, store, 8, m.seq_len).unwrap();
-    s2.reset_slot(0, 777, 10, 1.0, m.t_max, m.t_min, &[]);
+    s2.reset_slot(0, &SlotRequest::new(777, 10, m.t_max, m.t_min));
     for slot in 1..8 {
-        s2.reset_slot(slot, 1000 + slot as u64, 7, 0.8, m.t_max, m.t_min, &[]);
+        s2.reset_slot(
+            slot,
+            &SlotRequest::new(1000 + slot as u64, 7, m.t_max, m.t_min)
+                .noise(0.8),
+        );
     }
     let mut trace_crowded = Vec::new();
     for _ in 0..10 {
@@ -71,7 +75,10 @@ fn prefix_is_preserved_in_output() {
     let mut s =
         Session::new(&rt, Family::Ddlm, store, 1, m.seq_len).unwrap();
     let prefix: Vec<i32> = (10..42).collect(); // 32-token prefix
-    s.reset_slot(0, 5, 8, 1.0, m.t_max, m.t_min, &prefix);
+    s.reset_slot(
+        0,
+        &SlotRequest::new(5, 8, m.t_max, m.t_min).prefix(&prefix),
+    );
     for _ in 0..8 {
         s.step().unwrap();
     }
@@ -88,14 +95,14 @@ fn mid_flight_slot_recycling_works() {
     let m = rt.manifest.model.clone();
     let mut s =
         Session::new(&rt, Family::Ssd, store, 8, m.seq_len).unwrap();
-    s.reset_slot(0, 1, 12, 1.0, m.t_max, m.t_min, &[]);
-    s.reset_slot(1, 2, 12, 1.0, m.t_max, m.t_min, &[]);
+    s.reset_slot(0, &SlotRequest::new(1, 12, m.t_max, m.t_min));
+    s.reset_slot(1, &SlotRequest::new(2, 12, m.t_max, m.t_min));
     for _ in 0..5 {
         s.step().unwrap();
     }
     // slot 0 "halts" and is recycled with a new request mid-flight of slot 1
     s.release_slot(0);
-    s.reset_slot(0, 3, 12, 1.0, m.t_max, m.t_min, &[]);
+    s.reset_slot(0, &SlotRequest::new(3, 12, m.t_max, m.t_min));
     assert_eq!(s.slots[0].step, 0);
     assert_eq!(s.slots[1].step, 5);
     for _ in 0..7 {
@@ -114,7 +121,7 @@ fn fixed_policy_halts_generation_loop() {
     let m = rt.manifest.model.clone();
     let mut s =
         Session::new(&rt, Family::Plaid, store, 1, m.seq_len).unwrap();
-    s.reset_slot(0, 9, 50, 1.0, m.t_max, m.t_min, &[]);
+    s.reset_slot(0, &SlotRequest::new(9, 50, m.t_max, m.t_min));
     let mut policy = parse_policy("fixed:6").unwrap();
     policy.reset();
     let mut executed = 0;
@@ -142,7 +149,7 @@ fn combinator_policy_halts_generation_loop() {
     let m = rt.manifest.model.clone();
     let mut s =
         Session::new(&rt, Family::Ddlm, store, 1, m.seq_len).unwrap();
-    s.reset_slot(0, 17, 50, 1.0, m.t_max, m.t_min, &[]);
+    s.reset_slot(0, &SlotRequest::new(17, 50, m.t_max, m.t_min));
     let mut policy = parse_policy("any(fixed:7,entropy:-1)").unwrap();
     policy.reset();
     let mut exit = None;
@@ -166,7 +173,7 @@ fn all_families_generate_finite_sequences() {
         let store =
             Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
         let mut s = Session::new(&rt, fam, store, 1, m.seq_len).unwrap();
-        s.reset_slot(0, 11, 15, 1.0, m.t_max, m.t_min, &[]);
+        s.reset_slot(0, &SlotRequest::new(11, 15, m.t_max, m.t_min));
         let mut last = None;
         for _ in 0..15 {
             last = s.step().unwrap()[0];

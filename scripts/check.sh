@@ -1,5 +1,10 @@
 #!/usr/bin/env bash
 # Repo gate: formatting, lints, tests.  Run from anywhere.
+#
+#   scripts/check.sh           # fmt + clippy + test
+#   scripts/check.sh --bench   # ...then the headline serving bench,
+#                              # which writes BENCH_serving.json
+#                              # (p50/p95 latency, req/s, steps/s)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,5 +16,10 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+  echo "== serving bench (writes BENCH_serving.json) =="
+  cargo bench --bench serving_bench
+fi
 
 echo "check.sh: all green"
