@@ -62,9 +62,33 @@ fn main() -> anyhow::Result<()> {
     let ds = Dataset::new(512, 64);
     let prompts = ds.val_prompts(3, 8);
 
-    // warmup: force every worker's one-off artifact compile off the clock
+    // warmup: force every worker's one-off artifact compile off the
+    // clock.  Sequential warmup requests alone don't guarantee that —
+    // one fast worker can serve them all while another is still
+    // compiling — so first wait until every shard reports its session
+    // up (a worker publishes its slots_total gauge only after its
+    // session is built), then run one request per worker.
     {
         let mut c = Client::connect(&server.addr)?;
+        for _ in 0..2400 {
+            let all_up = c
+                .metrics()?
+                .get("workers")
+                .and_then(Json::as_arr)
+                .is_some_and(|ws| {
+                    !ws.is_empty()
+                        && ws.iter().all(|w| {
+                            w.get("slots_total")
+                                .and_then(Json::as_f64)
+                                .unwrap_or(0.0)
+                                >= 1.0
+                        })
+                });
+            if all_up {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
         for i in 0..workers {
             let mut req = GenRequest::new(1_000_000 + i as u64, 4);
             req.policy = parse_policy("none").unwrap();

@@ -149,14 +149,29 @@ pub struct EngineJoin {
 
 impl EngineJoin {
     pub fn join(self) -> std::thread::Result<Result<()>> {
+        // join EVERY worker before propagating anything: bailing on the
+        // first panic would detach the surviving workers mid-drain and
+        // swallow their errors
+        let mut first_panic = None;
         let mut first_err = Ok(());
         for h in self.handles {
-            let r = h.join()?;
-            if first_err.is_ok() && r.is_err() {
-                first_err = r;
+            match h.join() {
+                Ok(r) => {
+                    if first_err.is_ok() && r.is_err() {
+                        first_err = r;
+                    }
+                }
+                Err(p) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
             }
         }
-        Ok(first_err)
+        match first_panic {
+            Some(p) => Err(p),
+            None => Ok(first_err),
+        }
     }
 }
 
@@ -164,8 +179,17 @@ impl EngineJoin {
 /// the fleet join handle (joining after `shutdown()` surfaces worker
 /// errors).
 pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
-    let sched =
-        Arc::new(Scheduler::new(cfg.queue_depth, cfg.worker_batches.len()));
+    let mut sched =
+        Scheduler::new(cfg.queue_depth, cfg.worker_batches.len());
+    // admission-side validation needs the compiled seq_len (a longer
+    // prefix must reject with `invalid_request` at the boundary, not
+    // panic a worker).  The manifest read is cheap; if it fails the
+    // workers will surface the real error and enforce the bound
+    // themselves.
+    if let Ok(man) = crate::runtime::Manifest::load(&cfg.artifact_dir) {
+        sched = sched.with_max_prefix(man.model.seq_len);
+    }
+    let sched = Arc::new(sched);
     let mut handles = Vec::new();
     let mut worker_metrics = Vec::new();
     for (id, &batch) in cfg.worker_batches.iter().enumerate() {

@@ -123,6 +123,9 @@ pub struct Metrics {
     pub device_calls: u64,
     /// admission rejections from the bounded queue (backpressure)
     pub rejected_overloaded: u64,
+    /// admission rejections for unserveable requests (overlong prefix,
+    /// duplicate in-flight id)
+    pub rejected_invalid: u64,
     /// requests cancelled while queued or running
     pub cancelled: u64,
     /// requests dropped because `deadline_ms` expired
@@ -154,6 +157,7 @@ impl Default for Metrics {
             steps_saved: 0,
             device_calls: 0,
             rejected_overloaded: 0,
+            rejected_invalid: 0,
             cancelled: 0,
             deadline_exceeded: 0,
             slots_total: 0,
@@ -208,6 +212,7 @@ impl Metrics {
         self.steps_saved += other.steps_saved;
         self.device_calls += other.device_calls;
         self.rejected_overloaded += other.rejected_overloaded;
+        self.rejected_invalid += other.rejected_invalid;
         self.cancelled += other.cancelled;
         self.deadline_exceeded += other.deadline_exceeded;
         self.slots_total += other.slots_total;
@@ -260,6 +265,7 @@ impl Metrics {
                 "rejected_overloaded",
                 Json::num(self.rejected_overloaded as f64),
             ),
+            ("rejected_invalid", Json::num(self.rejected_invalid as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
             ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
             ("slots_total", Json::num(self.slots_total as f64)),
@@ -349,7 +355,12 @@ mod tests {
         assert!(j.get("step_saving_ratio").is_some());
         assert!(j.get("latency_p95_ms").is_some());
         // the serving-stack counters are always present, even at zero
-        for key in ["rejected_overloaded", "cancelled", "deadline_exceeded"] {
+        for key in [
+            "rejected_overloaded",
+            "rejected_invalid",
+            "cancelled",
+            "deadline_exceeded",
+        ] {
             assert_eq!(
                 j.get(key).and_then(|v| v.as_f64()),
                 Some(0.0),

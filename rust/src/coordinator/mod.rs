@@ -5,8 +5,10 @@
 //!
 //! * [`scheduler`] — admission control: a bounded queue with priority
 //!   classes (high/normal/low), per-request deadlines, explicit
-//!   cancellation, and backpressure (full queue ⇒ typed `overloaded`
-//!   rejection instead of unbounded growth).
+//!   cancellation, backpressure (full queue ⇒ typed `overloaded`
+//!   rejection instead of unbounded growth), and boundary validation
+//!   (overlong prefix ⇒ `invalid_request`, in-flight id reuse ⇒
+//!   `duplicate_id`, zero-step budgets answered without a worker).
 //! * [`worker`] — N worker shards, each an OS thread owning one PJRT
 //!   runtime and one batched `Session` (continuous batching with
 //!   early-exit slot recycling).  Shards may bind different compiled

@@ -173,22 +173,29 @@ pub struct GenResponse {
 }
 
 impl GenResponse {
-    /// Zero-step response for a request whose policy resolved in
-    /// preflight (e.g. `fixed:0`) — answered at admission, before any
-    /// batch slot or device step.  Goes through the same metrics
-    /// bookkeeping (`Metrics::record_completion`) as worker completions.
-    pub fn preflight(req: &GenRequest, reason: &str) -> GenResponse {
+    /// Zero-step response answered at admission, before any batch slot
+    /// or device step: `halt_reason` carries the preflight-resolved
+    /// policy primitive (e.g. `fixed:0`), or `None` when the request's
+    /// step budget was simply zero (schedule exhausted before the first
+    /// step).  Goes through the same metrics bookkeeping
+    /// (`Metrics::record_completion`) as worker completions.
+    pub fn immediate(req: &GenRequest, halt_reason: Option<&str>) -> GenResponse {
         GenResponse {
             id: req.id,
             tokens: Vec::new(),
             steps_executed: 0,
             steps_budget: req.n_steps,
-            halted_early: true,
-            halt_reason: Some(reason.to_string()),
+            halted_early: halt_reason.is_some(),
+            halt_reason: halt_reason.map(str::to_string),
             latency_ms: 0.0,
             queue_ms: 0.0,
             final_stats: StepStats::default(),
         }
+    }
+
+    /// [`Self::immediate`] for a policy that halted in preflight.
+    pub fn preflight(req: &GenRequest, reason: &str) -> GenResponse {
+        GenResponse::immediate(req, Some(reason))
     }
 
     pub fn to_json(&self) -> Json {

@@ -4,10 +4,14 @@
 //! Responsibilities:
 //!
 //! * **admission** — requests whose policy resolves in preflight (e.g.
-//!   `fixed:0`) are answered here, without touching a worker; everything
-//!   else enters a bounded queue, and a full queue rejects with the typed
-//!   [`ServeError::Overloaded`] instead of growing without bound
-//!   (backpressure);
+//!   `fixed:0`) or whose step budget is zero are answered here, without
+//!   touching a worker; everything else enters a bounded queue, and a
+//!   full queue rejects with the typed [`ServeError::Overloaded`]
+//!   instead of growing without bound (backpressure);
+//! * **validation** — requests the fleet can never serve (prefix longer
+//!   than the compiled seq_len) or whose id is already in flight are
+//!   rejected with typed errors ([`ServeError::InvalidRequest`],
+//!   [`ServeError::DuplicateId`]) at the boundary, never deeper in;
 //! * **priority** — three classes (high / normal / low), FIFO within a
 //!   class; workers always drain higher classes first;
 //! * **deadlines** — a request carrying `deadline_ms` is dropped with
@@ -29,7 +33,6 @@ use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority};
-use crate::halting::Decision;
 
 /// Typed serving-path failure, delivered instead of a [`GenResponse`]
 /// (on the wire: `{"error": "<as_str()>"}`).
@@ -44,6 +47,12 @@ pub enum ServeError {
     DeadlineExceeded,
     /// no live worker is left to serve the queue (startup failure)
     Unavailable,
+    /// the request can never be served by this fleet (e.g. its prefix
+    /// is longer than the compiled sequence length) — fix and resubmit
+    InvalidRequest,
+    /// another in-flight request already uses this id; ids key the
+    /// cancellation routing, so they must be unique while live
+    DuplicateId,
 }
 
 impl ServeError {
@@ -53,6 +62,8 @@ impl ServeError {
             ServeError::Cancelled => "cancelled",
             ServeError::DeadlineExceeded => "deadline_exceeded",
             ServeError::Unavailable => "unavailable",
+            ServeError::InvalidRequest => "invalid_request",
+            ServeError::DuplicateId => "duplicate_id",
         }
     }
 }
@@ -134,10 +145,14 @@ struct State {
     queues: [VecDeque<QueuedReq>; Priority::COUNT],
     queued: usize,
     /// request id -> owning worker, for every admitted-but-unfinished
-    /// request (cancellation routing; ids should be unique fleet-wide)
+    /// request (cancellation routing)
     running: HashMap<u64, usize>,
     /// running ids flagged for cancellation
     cancel_flags: HashSet<u64>,
+    /// every queued-or-running id; admission rejects duplicates so the
+    /// cancellation routing above can never be corrupted by two live
+    /// requests sharing an id
+    live_ids: HashSet<u64>,
     /// workers that have not exited (starts at the spawned count)
     workers_live: usize,
     shutdown: bool,
@@ -147,6 +162,9 @@ pub struct Scheduler {
     state: Mutex<State>,
     work_ready: Condvar,
     queue_cap: usize,
+    /// longest serveable conditioning prefix (the fleet's compiled
+    /// seq_len); None = unknown, workers enforce it themselves
+    max_prefix: Option<usize>,
     /// admission-side bookkeeping: submissions, preflight completions,
     /// overload rejections, queued-side cancels and deadline drops
     pub metrics: Mutex<Metrics>,
@@ -163,20 +181,33 @@ impl Scheduler {
                 queued: 0,
                 running: HashMap::new(),
                 cancel_flags: HashSet::new(),
+                live_ids: HashSet::new(),
                 workers_live: workers,
                 shutdown: false,
             }),
             work_ready: Condvar::new(),
             queue_cap,
+            max_prefix: None,
             metrics: Mutex::new(Metrics::default()),
         }
     }
 
-    /// Admit one request.  Preflight-resolvable policies are answered
-    /// inline (no queue slot, no device work) — but only on a live,
-    /// accepting engine, so they can't sneak past shutdown or a dead
-    /// fleet.  A full queue returns `Err(Overloaded)` — the caller
-    /// decides whether to surface that synchronously (`try_submit`) or
+    /// Reject requests whose prefix exceeds the fleet's compiled
+    /// sequence length at admission, with a typed `invalid_request` —
+    /// instead of letting a worker panic deep inside `reset_slot`.
+    pub fn with_max_prefix(mut self, max: usize) -> Scheduler {
+        self.max_prefix = Some(max);
+        self
+    }
+
+    /// Admit one request.  Preflight-resolvable policies and zero-step
+    /// budgets are answered inline (no queue slot, no device work) —
+    /// but only on a live, accepting engine, so they can't sneak past
+    /// shutdown or a dead fleet.  Rejections are typed: `Overloaded`
+    /// (full queue or draining engine), `Unavailable` (no workers),
+    /// `InvalidRequest` (prefix longer than the compiled seq_len) and
+    /// `DuplicateId` (id already queued or running) — the caller
+    /// decides whether to surface them synchronously (`try_submit`) or
     /// through the reply channel.
     pub fn submit(
         &self,
@@ -184,45 +215,75 @@ impl Scheduler {
         reply: ReplyTx,
     ) -> Result<(), ServeError> {
         self.metrics.lock().unwrap().requests_submitted += 1;
-        // fast-fail on a dead or draining engine before anything else
-        {
-            let st = self.state.lock().unwrap();
-            if st.workers_live == 0 {
-                return Err(ServeError::Unavailable);
-            }
-            if st.shutdown {
-                drop(st);
-                self.metrics.lock().unwrap().rejected_overloaded += 1;
-                return Err(ServeError::Overloaded);
-            }
+        // wire-level validation first: an overlong prefix can never be
+        // served (a worker's `reset_slot` would assert on it)
+        if self.max_prefix.is_some_and(|max| req.prefix.len() > max) {
+            self.metrics.lock().unwrap().rejected_invalid += 1;
+            return Err(ServeError::InvalidRequest);
         }
-        if let Decision::Halt { reason } = req.policy.preflight() {
-            let resp = GenResponse::preflight(&req, reason);
-            self.metrics
-                .lock()
-                .unwrap()
-                .record_completion(&resp, req.priority);
-            let _ = reply.send(Ok(resp));
-            return Ok(());
+        // resolve the policy's preflight outside the state lock (policy
+        // code is extensible; keep it out of the critical section); a
+        // zero-step budget is equally answerable without a worker — its
+        // schedule is exhausted before the first device step
+        let pre = req.policy.preflight().reason();
+        let immediate = pre.is_some() || req.n_steps == 0;
+
+        // admission verdict and enqueue under ONE lock acquisition: a
+        // submit racing shutdown() or the last worker's exit must never
+        // enqueue onto a fleet nobody will drain (the caller's recv()
+        // would block forever on a reply that can't come)
+        enum Admit {
+            Immediate(GenRequest, ReplyTx),
+            Enqueued,
+            Reject(ServeError),
         }
-        let admitted = {
+        let outcome = {
             let mut st = self.state.lock().unwrap();
-            if st.queued >= self.queue_cap {
-                false
+            if st.workers_live == 0 {
+                Admit::Reject(ServeError::Unavailable)
+            } else if st.shutdown {
+                Admit::Reject(ServeError::Overloaded)
+            } else if st.live_ids.contains(&req.id) {
+                // checked before the immediate path too: answering a
+                // zero-step resubmission of a live id would emit two
+                // completions for one id
+                Admit::Reject(ServeError::DuplicateId)
+            } else if immediate {
+                Admit::Immediate(req, reply)
+            } else if st.queued >= self.queue_cap {
+                Admit::Reject(ServeError::Overloaded)
             } else {
+                st.live_ids.insert(req.id);
                 let q = QueuedReq::new(req, reply);
                 let class = q.req.priority.index();
                 st.queues[class].push_back(q);
                 st.queued += 1;
-                true
+                Admit::Enqueued
             }
         };
-        if admitted {
-            self.work_ready.notify_all();
-            Ok(())
-        } else {
-            self.metrics.lock().unwrap().rejected_overloaded += 1;
-            Err(ServeError::Overloaded)
+        match outcome {
+            Admit::Enqueued => {
+                self.work_ready.notify_all();
+                Ok(())
+            }
+            Admit::Immediate(req, reply) => {
+                let resp = GenResponse::immediate(&req, pre);
+                self.metrics
+                    .lock()
+                    .unwrap()
+                    .record_completion(&resp, req.priority);
+                let _ = reply.send(Ok(resp));
+                Ok(())
+            }
+            Admit::Reject(e) => {
+                let mut m = self.metrics.lock().unwrap();
+                match e {
+                    ServeError::Overloaded => m.rejected_overloaded += 1,
+                    ServeError::DuplicateId => m.rejected_invalid += 1,
+                    _ => {}
+                }
+                Err(e)
+            }
         }
     }
 
@@ -239,6 +300,7 @@ impl Scheduler {
                 while let Some(q) = st.queues[pi].pop_front() {
                     st.queued -= 1;
                     if q.deadline.is_some_and(|d| now >= d) {
+                        st.live_ids.remove(&q.req.id);
                         expired.push(q);
                         continue;
                     }
@@ -280,6 +342,9 @@ impl Scheduler {
                 }
             }
             st.queued -= expired.len();
+            for q in &expired {
+                st.live_ids.remove(&q.req.id);
+            }
             expired
         };
         if !expired.is_empty() {
@@ -306,7 +371,8 @@ impl Scheduler {
                     break;
                 }
             }
-            if victim.is_some() {
+            if let Some(q) = &victim {
+                st.live_ids.remove(&q.req.id);
                 (CancelOutcome::Queued, victim)
             } else if st.running.contains_key(&id) {
                 st.cancel_flags.insert(id);
@@ -333,6 +399,7 @@ impl Scheduler {
         let mut st = self.state.lock().unwrap();
         st.running.remove(&id);
         st.cancel_flags.remove(&id);
+        st.live_ids.remove(&id);
     }
 
     /// Block until work is queued (`Work`) or the engine is shut down
@@ -357,13 +424,26 @@ impl Scheduler {
         self.work_ready.notify_all();
     }
 
-    /// A worker exited (normally or on error).  When the last one goes
-    /// with requests still queued, fail them over to `Unavailable` so
-    /// submitters never block on a queue nobody will drain.
-    pub fn worker_down(&self) {
+    /// `worker` exited (normally, on error, or by panic).  Its running
+    /// state is purged — a panic skips the per-request `finish()` calls,
+    /// and stale entries would reject future reuse of those ids as
+    /// duplicates forever.  When the last worker goes with requests
+    /// still queued, fail them over to `Unavailable` so submitters
+    /// never block on a queue nobody will drain.
+    pub fn worker_down(&self, worker: usize) {
         let orphans = {
             let mut st = self.state.lock().unwrap();
             st.workers_live = st.workers_live.saturating_sub(1);
+            let dead: Vec<u64> = st
+                .running
+                .iter()
+                .filter_map(|(id, w)| (*w == worker).then_some(*id))
+                .collect();
+            for id in dead {
+                st.running.remove(&id);
+                st.cancel_flags.remove(&id);
+                st.live_ids.remove(&id);
+            }
             if st.workers_live == 0 {
                 let drained: Vec<QueuedReq> = st
                     .queues
@@ -371,6 +451,9 @@ impl Scheduler {
                     .flat_map(std::mem::take)
                     .collect();
                 st.queued = 0;
+                for q in &drained {
+                    st.live_ids.remove(&q.req.id);
+                }
                 drained
             } else {
                 Vec::new()
@@ -562,11 +645,113 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_inflight_id_rejected_until_finished() {
+        let s = Scheduler::new(8, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(5, 10), tx).unwrap();
+        // duplicate while queued
+        let (tx2, _rx2) = chan();
+        assert_eq!(s.submit(req(5, 10), tx2), Err(ServeError::DuplicateId));
+        // still duplicate while running
+        assert_eq!(s.next_for(0).unwrap().req.id, 5);
+        let (tx3, _rx3) = chan();
+        assert_eq!(s.submit(req(5, 10), tx3), Err(ServeError::DuplicateId));
+        assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 2);
+        // a finished id is reusable
+        s.finish(5);
+        let (tx4, _rx4) = chan();
+        assert!(s.submit(req(5, 10), tx4).is_ok());
+    }
+
+    #[test]
+    fn immediate_requests_do_not_bypass_duplicate_check() {
+        let s = Scheduler::new(8, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(4, 10), tx).unwrap();
+        // while id 4 is live, a zero-step resubmission must reject —
+        // answering it would emit two completions for one id
+        let (tx2, rx2) = chan();
+        assert_eq!(s.submit(req(4, 0), tx2), Err(ServeError::DuplicateId));
+        assert!(rx2.try_recv().is_err());
+        let (tx3, rx3) = chan();
+        let mut pre = req(4, 10);
+        pre.policy = parse_policy("fixed:0").unwrap();
+        assert_eq!(s.submit(pre, tx3), Err(ServeError::DuplicateId));
+        assert!(rx3.try_recv().is_err());
+    }
+
+    #[test]
+    fn cancelled_queued_id_is_reusable() {
+        let s = Scheduler::new(8, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(6, 10), tx).unwrap();
+        assert_eq!(s.cancel(6), CancelOutcome::Queued);
+        let (tx2, _rx2) = chan();
+        assert!(s.submit(req(6, 10), tx2).is_ok());
+    }
+
+    #[test]
+    fn overlong_prefix_rejected_at_admission() {
+        let s = Scheduler::new(8, 1).with_max_prefix(4);
+        let (tx, rx) = chan();
+        let mut r = req(1, 10);
+        r.prefix = vec![0; 5];
+        assert_eq!(s.submit(r, tx), Err(ServeError::InvalidRequest));
+        // synchronous typed rejection: no queue slot, no reply traffic
+        assert!(rx.try_recv().is_err());
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 1);
+        // exactly at the bound is serveable
+        let (tx2, _rx2) = chan();
+        let mut ok = req(2, 10);
+        ok.prefix = vec![0; 4];
+        assert!(s.submit(ok, tx2).is_ok());
+    }
+
+    #[test]
+    fn zero_step_budget_answered_at_admission() {
+        // steps:0 with a non-preflight policy must not occupy a slot or
+        // execute a device step: it is answered as exhausted right here
+        let s = Scheduler::new(8, 1);
+        let (tx, rx) = chan();
+        s.submit(req(3, 0), tx).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.steps_executed, 0);
+        assert_eq!(resp.steps_budget, 0);
+        assert!(!resp.halted_early);
+        assert_eq!(resp.halt_reason, None);
+        assert_eq!(s.queue_depth(), 0);
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.steps_executed, 0);
+        assert_eq!(m.steps_saved, 0);
+    }
+
+    #[test]
+    fn worker_down_purges_its_running_state() {
+        // two workers; worker 0 dies (e.g. panic) while owning a
+        // request — the id must become reusable and the fleet stays up
+        let s = Scheduler::new(8, 2);
+        let (tx, _rx) = chan();
+        s.submit(req(9, 10), tx).unwrap();
+        assert_eq!(s.next_for(0).unwrap().req.id, 9);
+        // flag a cancel too, so stale cancel state is exercised
+        assert_eq!(s.cancel(9), CancelOutcome::Running);
+        s.worker_down(0);
+        assert_eq!(s.running_count(), 0);
+        assert!(!s.cancel_requested(9));
+        let (tx2, _rx2) = chan();
+        assert!(s.submit(req(9, 10), tx2).is_ok());
+        // the surviving worker still drains the queue
+        assert_eq!(s.next_for(1).unwrap().req.id, 9);
+    }
+
+    #[test]
     fn last_worker_down_fails_queue_to_unavailable() {
         let s = Scheduler::new(8, 1);
         let (tx, rx) = chan();
         s.submit(req(5, 10), tx).unwrap();
-        s.worker_down();
+        s.worker_down(0);
         assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Unavailable);
         assert_eq!(s.queue_depth(), 0);
         // with no workers left, new submits fail fast

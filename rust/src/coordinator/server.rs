@@ -15,8 +15,13 @@
 //!              "state":"queued"|"running"|"not_found"}`
 //!   response : GenResponse JSON, or a typed serving error
 //!              `{"id":1,"error":"overloaded"|"cancelled"|
-//!                "deadline_exceeded"|"unavailable"}`, or
+//!                "deadline_exceeded"|"unavailable"|"invalid_request"|
+//!                "duplicate_id"}`, or
 //!              `{"error":"parse: ..."}` for malformed lines.
+//!              `invalid_request` rejects a prefix longer than the
+//!              fleet's compiled seq_len; `duplicate_id` rejects an id
+//!              that is already queued or running (ids route
+//!              cancellation, so they must be unique while in flight).
 //!
 //! The request's `criterion` field carries a halting-policy spec string
 //! (`"entropy:0.25"`, `"any(entropy:0.25,patience:20:0)"`, ... — see the

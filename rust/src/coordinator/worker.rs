@@ -27,7 +27,7 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use super::request::GenResponse;
 use super::scheduler::{IdleWait, QueuedReq, Scheduler, ServeError};
-use crate::halting::BoxedPolicy;
+use crate::halting::{BoxedPolicy, NoHalt};
 use crate::log_info;
 use crate::models::store::ParamStore;
 use crate::runtime::Runtime;
@@ -62,9 +62,18 @@ pub fn spawn(
     metrics: Arc<Mutex<Metrics>>,
 ) -> JoinHandle<Result<()>> {
     std::thread::spawn(move || {
-        let out = run_worker(&cfg, &sched, &metrics);
-        sched.worker_down();
-        out
+        // worker_down must run even if run_worker panics: a stale
+        // workers_live would keep the scheduler admitting requests
+        // nobody will ever serve (clients hang instead of getting the
+        // typed `unavailable` failover), so tie it to a Drop guard
+        struct Down(Arc<Scheduler>, usize);
+        impl Drop for Down {
+            fn drop(&mut self) {
+                self.0.worker_down(self.1);
+            }
+        }
+        let _down = Down(sched.clone(), cfg.id);
+        run_worker(&cfg, &sched, &metrics)
     })
 }
 
@@ -99,6 +108,47 @@ fn run_worker(
     metrics.lock().unwrap().slots_total = batch as u64;
 
     let mut running: Vec<Option<Running>> = (0..batch).map(|_| None).collect();
+    // extensible policy code runs inside the step loop; if it (or a
+    // session invariant) panics, fail this worker's in-flight requests
+    // over with a typed error before the unwind continues — dropping
+    // their reply channels would surface to clients as an untyped
+    // "reply channel closed" instead of the documented `unavailable`
+    let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || step_loop(cfg, sched, metrics, &mut session, &mut running),
+    ));
+    match stepped {
+        Ok(out) => out?,
+        Err(panic) => {
+            for r in running.iter_mut().filter_map(Option::take) {
+                sched.finish(r.q.req.id);
+                let _ = r.q.reply.send(Err(ServeError::Unavailable));
+            }
+            std::panic::resume_unwind(panic);
+        }
+    }
+    let (completed, ratio) = {
+        let wm = metrics.lock().unwrap();
+        (wm.requests_completed, wm.step_saving_ratio())
+    };
+    log_info!(
+        "worker {} down: {} completed, saving ratio {:.3}",
+        cfg.id,
+        completed,
+        ratio
+    );
+    Ok(())
+}
+
+/// The worker's serve loop: admit / reap / step / account, until the
+/// scheduler reports shutdown with a drained queue.
+fn step_loop(
+    cfg: &WorkerConfig,
+    sched: &Scheduler,
+    metrics: &Mutex<Metrics>,
+    session: &mut Session,
+    running: &mut [Option<Running>],
+) -> Result<()> {
+    let batch = session.batch;
     loop {
         // 0) fully idle: sleep until work arrives or shutdown drains us
         if running.iter().all(Option::is_none) {
@@ -108,28 +158,45 @@ fn run_worker(
             }
         }
 
-        // 1) admit queued requests into free slots (continuous batching)
-        for slot in 0..batch {
-            if running[slot].is_none() {
-                let Some(q) = sched.next_for(cfg.id) else { break };
-                let mut policy = q.req.policy.clone();
-                policy.reset();
-                session.reset_slot(
-                    slot,
-                    &SlotRequest::new(
-                        q.req.seed,
-                        q.req.n_steps,
-                        cfg.t_max,
-                        cfg.t_min,
-                    )
-                    .noise(q.req.noise_scale)
-                    .prefix(&q.req.prefix),
-                );
+        // 1) admit queued requests into free slots (continuous
+        //    batching); requests this session can't hold are rejected
+        //    with a typed error, never a panic — admission normally
+        //    filters them, but the scheduler may not know our seq_len
+        //    (manifest read failed) and must not be trusted with it
+        'admit: for slot in 0..batch {
+            while running[slot].is_none() {
+                let Some(q) = sched.next_for(cfg.id) else { break 'admit };
+                if q.req.prefix.len() > session.seq_len {
+                    sched.finish(q.req.id);
+                    metrics.lock().unwrap().rejected_invalid += 1;
+                    let _ = q.reply.send(Err(ServeError::InvalidRequest));
+                    continue;
+                }
+                // park the request in its slot BEFORE running any
+                // extensible policy code (clone/reset) or session
+                // setup: if one of those panics, the catch_unwind
+                // failover still sees this request and answers it with
+                // a typed error instead of dropping its reply channel
                 running[slot] = Some(Running {
-                    policy,
+                    policy: Box::new(NoHalt),
                     started: Instant::now(),
                     q,
                 });
+                let r = running[slot].as_mut().unwrap();
+                let mut policy = r.q.req.policy.clone();
+                policy.reset();
+                r.policy = policy;
+                session.reset_slot(
+                    slot,
+                    &SlotRequest::new(
+                        r.q.req.seed,
+                        r.q.req.n_steps,
+                        cfg.t_max,
+                        cfg.t_min,
+                    )
+                    .noise(r.q.req.noise_scale)
+                    .prefix(&r.q.req.prefix),
+                );
             }
         }
 
@@ -232,15 +299,5 @@ fn run_worker(
                 .sum();
         }
     }
-    let (completed, ratio) = {
-        let wm = metrics.lock().unwrap();
-        (wm.requests_completed, wm.step_saving_ratio())
-    };
-    log_info!(
-        "worker {} down: {} completed, saving ratio {:.3}",
-        cfg.id,
-        completed,
-        ratio
-    );
     Ok(())
 }

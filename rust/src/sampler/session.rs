@@ -241,6 +241,8 @@ impl Session {
     /// Occupy a slot with a fresh request: initialise noise, schedule and
     /// optional conditioning prefix.
     pub fn reset_slot(&mut self, slot: usize, req: &SlotRequest) {
+        // the serving path rejects overlong prefixes at admission with a
+        // typed `invalid_request`; this assert guards direct library use
         assert!(
             req.prefix.len() <= self.seq_len,
             "prefix longer than seq_len"

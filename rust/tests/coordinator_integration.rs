@@ -153,6 +153,71 @@ fn zero_step_budget_resolves_without_device_steps() {
 }
 
 #[test]
+fn zero_step_budget_with_plain_policy_executes_nothing() {
+    // steps:0 with a policy that does NOT resolve in preflight must
+    // still never reach a device: answered at admission as exhausted
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, join) = start(cfg);
+    let resp = engine.generate(GenRequest::new(1, 0)).unwrap();
+    assert_eq!(resp.steps_executed, 0);
+    assert_eq!(resp.steps_budget, 0);
+    assert!(!resp.halted_early);
+    assert_eq!(resp.halt_reason, None);
+    let m = engine.metrics().unwrap();
+    assert_eq!(metric(&m, "steps_executed"), 0.0);
+    assert_eq!(metric(&m, "device_calls"), 0.0);
+    assert_eq!(metric(&m, "requests_completed"), 1.0);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn overlong_prefix_rejected_without_killing_workers() {
+    // a prefix longer than the compiled seq_len must reject with a
+    // typed error at admission — not panic a worker thread and leave
+    // later submitters hanging on a fleet that looks alive
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, join) = start(cfg);
+    let mut req = GenRequest::new(1, 4);
+    req.prefix = vec![0; 4096]; // far beyond any compiled seq_len
+    let rx = engine.submit(req);
+    assert_eq!(
+        rx.recv().unwrap().unwrap_err(),
+        ServeError::InvalidRequest
+    );
+    // the fleet is still alive and serving
+    let resp = engine.generate(GenRequest::new(2, 3)).unwrap();
+    assert_eq!(resp.steps_executed, 3);
+    let m = engine.metrics().unwrap();
+    assert_eq!(metric(&m, "rejected_invalid"), 1.0);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn duplicate_inflight_id_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_batches = vec![1];
+    let (engine, join) = start(cfg);
+    let rx = engine.submit(GenRequest::new(7, 1_000_000));
+    // the same id resubmitted while the first is in flight
+    assert_eq!(
+        engine.try_submit(GenRequest::new(7, 5)).err(),
+        Some(ServeError::DuplicateId)
+    );
+    assert!(engine.cancel(7).found());
+    assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Cancelled);
+    // once the first is finished the id is reusable
+    let resp = engine.generate(GenRequest::new(7, 3)).unwrap();
+    assert_eq!(resp.steps_executed, 3);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
 fn engine_handles_prefix_requests() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ssd);

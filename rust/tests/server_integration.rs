@@ -132,6 +132,16 @@ fn server_rejects_malformed_lines() {
         .unwrap();
     assert!(r.get("error").is_some());
 
+    // a remote prefix longer than the compiled seq_len is a typed
+    // rejection at admission — it must not panic a worker thread
+    let mut bad = GenRequest::new(3, 4);
+    bad.prefix = vec![0; 4096];
+    let r = client.roundtrip(&bad.to_json()).unwrap();
+    assert_eq!(
+        r.get("error").and_then(Json::as_str),
+        Some("invalid_request")
+    );
+
     // and the connection still works afterwards
     let ok = client.generate(&GenRequest::new(1, 2)).unwrap();
     assert_eq!(ok.steps_executed, 2);
