@@ -16,7 +16,7 @@ fn main() {
     let m = rt.manifest.model.clone();
     let store = Rc::new(ParamStore::load_init(dir, "ddlm").unwrap());
     let mut s = Session::new(&rt, Family::Ddlm, store, 8, m.seq_len).unwrap();
-    for slot in 0..8 { s.reset_slot(slot, &SlotRequest::new(slot as u64, 1_000_000, m.t_max, m.t_min)); }
+    for slot in 0..8 { s.reset_slot(slot, &SlotRequest::new(slot as u64, 1_000_000, m.t_max, m.t_min)).unwrap(); }
     println!("start rss {:.0} MB", rss_mb());
     for i in 0..200 {
         s.step().unwrap();

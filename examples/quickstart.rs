@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             slot,
             &SlotRequest::new(100 + slot as u64, n_steps, m.t_max, m.t_min)
                 .prefix(&p[..32]),
-        );
+        )?;
     }
 
     // 3. step until every slot's KL policy fires (Algorithm 3)

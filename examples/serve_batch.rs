@@ -60,11 +60,10 @@ fn main() -> anyhow::Result<()> {
 
     // two shards of the same family: a batch-1 latency worker next to a
     // batch-8 throughput worker, fed from one priority-classed queue
+    // (mixed-family fleets just list different families here)
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_batches = vec![1, 8];
-    if std::path::Path::new("runs/ddlm.pbin").exists() {
-        cfg.checkpoint = Some("runs/ddlm.pbin".into());
-    }
+    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ddlm, 8)];
+    cfg.discover_checkpoints("runs");
     let (engine, _join) = start(cfg);
     let mut server = Server::start("127.0.0.1:0", engine.clone())?;
     println!("coordinator up on {} (workers b1+b8, ddlm)", server.addr);

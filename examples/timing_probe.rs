@@ -10,7 +10,7 @@ fn main() {
     for (fam, b) in [(Family::Ddlm, 8), (Family::Ddlm, 1), (Family::Ssd, 8), (Family::Plaid, 8)] {
         let store = Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
         let mut s = Session::new(&rt, fam, store, b, m.seq_len).unwrap();
-        for slot in 0..b { s.reset_slot(slot, &SlotRequest::new(slot as u64, 100, m.t_max, m.t_min)); }
+        for slot in 0..b { s.reset_slot(slot, &SlotRequest::new(slot as u64, 100, m.t_max, m.t_min)).unwrap(); }
         let t0 = std::time::Instant::now();
         for _ in 0..20 { s.step().unwrap(); }
         println!("{} b{}: {:.2} ms/step", fam.name(), b, t0.elapsed().as_secs_f64()*1000.0/20.0);

@@ -89,7 +89,7 @@ fn main() -> anyhow::Result<()> {
                 slot,
                 &SlotRequest::new(100 + slot as u64, n_steps, m.t_max, m.t_min)
                     .prefix(&p[..32]),
-            );
+            )?;
         }
         let mut policies: Vec<BoxedPolicy> =
             (0..batch).map(|_| policy.clone()).collect();

@@ -50,7 +50,8 @@ fn main() {
                         m.t_max,
                         m.t_min,
                     ),
-                );
+                )
+                .unwrap();
             }
             bench(
                 &format!("{}_step_b{b} full step (host roundtrip)", fam.name()),

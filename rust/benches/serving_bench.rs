@@ -5,6 +5,16 @@
 //!     cargo bench --bench serving_bench
 //!     scripts/check.sh --bench
 //!
+//! Two scenarios run back to back:
+//!
+//! * **single** — the classic homogeneous fleet (`--workers` ddlm
+//!   shards of `--batch`); its numbers stay at the top level of
+//!   `BENCH_serving.json` so the PR-over-PR trendline is unbroken.
+//! * **mixed** — a heterogeneous `(ddlm, batch) + (ssd, batch)` fleet
+//!   serving interleaved per-family traffic through one scheduler;
+//!   reported under `"mixed"` with per-family rows (completions, p50 /
+//!   p95 latency, steps) pulled from the merged `/metrics` snapshot.
+//!
 //! Knobs: --n 32 --steps 120 --workers 2 --batch 8 --criterion SPEC
 //! (default: the paper's adaptive KL + entropy-fallback policy).
 //! Skips cleanly when artifacts are not built.
@@ -13,7 +23,8 @@ use std::time::Instant;
 
 use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
 use repro::corpus::dataset::Dataset;
-use repro::halting::parse_policy;
+use repro::halting::{parse_policy, BoxedPolicy};
+use repro::runtime::Manifest;
 use repro::sampler::Family;
 use repro::util::cli::Args;
 use repro::util::json::Json;
@@ -24,6 +35,179 @@ fn quantile(sorted: &[f64], q: f64) -> f64 {
     }
     let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
     sorted[idx]
+}
+
+struct ScenarioResult {
+    wall_s: f64,
+    req_per_s: f64,
+    steps_per_s: f64,
+    p50: f64,
+    p95: f64,
+    mean_steps: f64,
+    device_calls: f64,
+    /// measured-run (family, latency_ms, steps) per request — the
+    /// per-family rows come from here, NOT the end-of-run metrics
+    /// snapshot, so they exclude warmup exactly like the top-level
+    /// numbers
+    samples: Vec<(Family, f64, usize)>,
+}
+
+/// Drive one engine configuration over TCP with 4 client threads firing
+/// Prefix-32 requests; request i is routed to `specs[i % specs.len()]`'s
+/// family, so a mixed fleet sees interleaved per-family traffic.
+fn run_scenario(
+    dir: &str,
+    specs: &[(Family, usize)],
+    n: usize,
+    n_steps: usize,
+    policy: &BoxedPolicy,
+    prompts: &[Vec<i32>],
+) -> anyhow::Result<ScenarioResult> {
+    let mut cfg = EngineConfig::new(dir, specs[0].0);
+    cfg.worker_specs = specs.to_vec();
+    cfg.discover_checkpoints("runs");
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone())?;
+
+    // warmup: force every worker's one-off artifact compile off the
+    // clock.  Sequential warmup requests alone don't guarantee that —
+    // one fast worker can serve them all while another is still
+    // compiling — so first wait until every shard reports its session
+    // up (a worker publishes its slots_total gauge only after its
+    // session is built), then run one request per worker, routed to
+    // that worker's family.
+    {
+        let mut c = Client::connect(&server.addr)?;
+        for _ in 0..2400 {
+            let all_up = c
+                .metrics()?
+                .get("workers")
+                .and_then(Json::as_arr)
+                .is_some_and(|ws| {
+                    !ws.is_empty()
+                        && ws.iter().all(|w| {
+                            w.get("slots_total")
+                                .and_then(Json::as_f64)
+                                .unwrap_or(0.0)
+                                >= 1.0
+                        })
+                });
+            if all_up {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        for (i, &(fam, _)) in specs.iter().enumerate() {
+            let mut req = GenRequest::new(1_000_000 + i as u64, 4);
+            req.policy = parse_policy("none").unwrap();
+            req.family = Some(fam);
+            c.generate(&req)?;
+        }
+    }
+
+    // measured run: 4 client threads, Prefix-32 requests, one policy,
+    // families interleaved across the spec list
+    let families: Vec<Family> = specs.iter().map(|&(f, _)| f).collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..4usize)
+        .map(|c| {
+            let addr = server.addr.clone();
+            let prompts = prompts.to_vec();
+            let policy = policy.clone();
+            let families = families.clone();
+            std::thread::spawn(
+                move || -> anyhow::Result<Vec<(Family, f64, usize)>> {
+                    let mut client = Client::connect(&addr)?;
+                    let mut out = Vec::new();
+                    for i in (c..n).step_by(4) {
+                        let fam = families[i % families.len()];
+                        let mut req = GenRequest::new(i as u64, n_steps);
+                        req.prefix =
+                            prompts[i % prompts.len()][..32].to_vec();
+                        req.policy = policy.clone();
+                        req.seed = 9000 + i as u64;
+                        req.family = Some(fam);
+                        let resp = client.generate(&req)?;
+                        anyhow::ensure!(
+                            resp.family == req.family,
+                            "request {i} served by {:?}, wanted {:?}",
+                            resp.family,
+                            req.family
+                        );
+                        out.push((fam, resp.latency_ms, resp.steps_executed));
+                    }
+                    Ok(out)
+                },
+            )
+        })
+        .collect();
+    let mut samples = Vec::new();
+    for h in handles {
+        samples.extend(h.join().unwrap()?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies: Vec<f64> =
+        samples.iter().map(|&(_, lat, _)| lat).collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_steps: usize = samples.iter().map(|&(_, _, s)| s).sum();
+
+    let device_calls = {
+        let mut c = Client::connect(&server.addr)?;
+        c.metrics()?
+            .get("device_calls")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap()?;
+
+    Ok(ScenarioResult {
+        wall_s,
+        req_per_s: n as f64 / wall_s,
+        steps_per_s: total_steps as f64 / wall_s,
+        p50: quantile(&latencies, 0.50),
+        p95: quantile(&latencies, 0.95),
+        mean_steps: total_steps as f64 / n as f64,
+        device_calls,
+        samples,
+    })
+}
+
+/// Per-family rows (completions, latency quantiles, steps) computed
+/// from the measured-run samples — warmup traffic is excluded, so the
+/// rows are directly comparable to the top-level numbers.
+fn per_family_rows(samples: &[(Family, f64, usize)]) -> Json {
+    let mut rows = Vec::new();
+    let mut seen: Vec<Family> = Vec::new();
+    for &(fam, ..) in samples {
+        if seen.contains(&fam) {
+            continue;
+        }
+        seen.push(fam);
+        let mut lats: Vec<f64> = samples
+            .iter()
+            .filter(|&&(f, ..)| f == fam)
+            .map(|&(_, lat, _)| lat)
+            .collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let steps: usize = samples
+            .iter()
+            .filter(|&&(f, ..)| f == fam)
+            .map(|&(_, _, s)| s)
+            .sum();
+        rows.push((
+            fam.name(),
+            Json::obj(vec![
+                ("requests_completed", Json::num(lats.len() as f64)),
+                ("steps_executed", Json::num(steps as f64)),
+                ("latency_p50_ms", Json::num(quantile(&lats, 0.50))),
+                ("latency_p95_ms", Json::num(quantile(&lats, 0.95))),
+            ]),
+        ));
+    }
+    Json::obj(rows)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -47,128 +231,86 @@ fn main() -> anyhow::Result<()> {
     let policy = parse_policy(&spec)
         .ok_or_else(|| anyhow::anyhow!("bad --criterion {spec:?}"))?;
 
-    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_batches = vec![batch; workers];
-    if std::path::Path::new("runs/ddlm.pbin").exists() {
-        cfg.checkpoint = Some("runs/ddlm.pbin".into());
-    }
-    let (engine, join) = start(cfg);
-    let mut server = Server::start("127.0.0.1:0", engine.clone())?;
-    println!(
-        "serving_bench: {workers} worker(s) x batch {batch} on {}",
-        server.addr
-    );
-
     let ds = Dataset::new(512, 64);
     let prompts = ds.val_prompts(3, 8);
 
-    // warmup: force every worker's one-off artifact compile off the
-    // clock.  Sequential warmup requests alone don't guarantee that —
-    // one fast worker can serve them all while another is still
-    // compiling — so first wait until every shard reports its session
-    // up (a worker publishes its slots_total gauge only after its
-    // session is built), then run one request per worker.
-    {
-        let mut c = Client::connect(&server.addr)?;
-        for _ in 0..2400 {
-            let all_up = c
-                .metrics()?
-                .get("workers")
-                .and_then(Json::as_arr)
-                .is_some_and(|ws| {
-                    !ws.is_empty()
-                        && ws.iter().all(|w| {
-                            w.get("slots_total")
-                                .and_then(Json::as_f64)
-                                .unwrap_or(0.0)
-                                >= 1.0
-                        })
-                });
-            if all_up {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(25));
-        }
-        for i in 0..workers {
-            let mut req = GenRequest::new(1_000_000 + i as u64, 4);
-            req.policy = parse_policy("none").unwrap();
-            c.generate(&req)?;
-        }
-    }
+    // scenario 1: the classic homogeneous ddlm fleet (trendline-stable)
+    let single_specs: Vec<(Family, usize)> =
+        vec![(Family::Ddlm, batch); workers];
+    println!(
+        "serving_bench[single]: {workers} ddlm worker(s) x batch {batch}"
+    );
+    let single =
+        run_scenario(&dir, &single_specs, n, n_steps, &policy, &prompts)?;
+    println!(
+        "serving_bench[single]: {n} reqs in {:.2}s — {:.2} req/s, \
+         {:.0} steps/s, p50 {:.0} ms, p95 {:.0} ms",
+        single.wall_s,
+        single.req_per_s,
+        single.steps_per_s,
+        single.p50,
+        single.p95
+    );
 
-    // measured run: 4 client threads, Prefix-32 requests, one policy
-    let t0 = Instant::now();
-    let handles: Vec<_> = (0..4usize)
-        .map(|c| {
-            let addr = server.addr.clone();
-            let prompts = prompts.clone();
-            let policy = policy.clone();
-            std::thread::spawn(move || -> anyhow::Result<Vec<(f64, usize)>> {
-                let mut client = Client::connect(&addr)?;
-                let mut out = Vec::new();
-                for i in (c..n).step_by(4) {
-                    let mut req = GenRequest::new(i as u64, n_steps);
-                    req.prefix = prompts[i % prompts.len()][..32].to_vec();
-                    req.policy = policy.clone();
-                    req.seed = 9000 + i as u64;
-                    let resp = client.generate(&req)?;
-                    out.push((resp.latency_ms, resp.steps_executed));
-                }
-                Ok(out)
-            })
-        })
-        .collect();
-    let mut latencies = Vec::new();
-    let mut total_steps = 0usize;
-    for h in handles {
-        for (lat, steps) in h.join().unwrap()? {
-            latencies.push(lat);
-            total_steps += steps;
-        }
-    }
-    let wall_s = t0.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = quantile(&latencies, 0.50);
-    let p95 = quantile(&latencies, 0.95);
-    let req_per_s = n as f64 / wall_s;
-    let steps_per_s = total_steps as f64 / wall_s;
-
-    let m = {
-        let mut c = Client::connect(&server.addr)?;
-        c.metrics()?
+    // scenario 2: a heterogeneous ddlm+ssd fleet with interleaved
+    // per-family traffic (skipped when ssd artifacts are not compiled)
+    let mixed_specs = vec![(Family::Ddlm, batch), (Family::Ssd, batch)];
+    let have_ssd = Manifest::load(&dir).is_ok_and(|man| {
+        !man.available_step_batches("ssd", man.model.seq_len).is_empty()
+    });
+    let mixed = if have_ssd {
+        println!(
+            "serving_bench[mixed]: (ddlm, {batch}) + (ssd, {batch}) fleet"
+        );
+        let r =
+            run_scenario(&dir, &mixed_specs, n, n_steps, &policy, &prompts)?;
+        println!(
+            "serving_bench[mixed]: {n} reqs in {:.2}s — {:.2} req/s, \
+             p50 {:.0} ms, p95 {:.0} ms",
+            r.wall_s, r.req_per_s, r.p50, r.p95
+        );
+        Some(r)
+    } else {
+        println!("serving_bench[mixed]: no ssd step artifacts — skipping");
+        None
     };
-    let device_calls = m
-        .get("device_calls")
-        .and_then(Json::as_f64)
-        .unwrap_or(0.0);
 
-    let out = Json::obj(vec![
+    // top-level fields mirror the pre-multi-family layout so the
+    // BENCH_serving.json trendline stays comparable PR-over-PR
+    let mut fields = vec![
         ("bench", Json::str("serving")),
         ("criterion", Json::str(spec.clone())),
         ("n_requests", Json::num(n as f64)),
         ("steps_budget", Json::num(n_steps as f64)),
         ("workers", Json::num(workers as f64)),
         ("batch", Json::num(batch as f64)),
-        ("wall_s", Json::num(wall_s)),
-        ("req_per_s", Json::num(req_per_s)),
-        ("steps_per_s", Json::num(steps_per_s)),
-        ("latency_p50_ms", Json::num(p50)),
-        ("latency_p95_ms", Json::num(p95)),
-        (
-            "mean_steps",
-            Json::num(total_steps as f64 / n as f64),
-        ),
-        ("device_calls", Json::num(device_calls)),
-    ]);
+        ("wall_s", Json::num(single.wall_s)),
+        ("req_per_s", Json::num(single.req_per_s)),
+        ("steps_per_s", Json::num(single.steps_per_s)),
+        ("latency_p50_ms", Json::num(single.p50)),
+        ("latency_p95_ms", Json::num(single.p95)),
+        ("mean_steps", Json::num(single.mean_steps)),
+        ("device_calls", Json::num(single.device_calls)),
+        ("per_family", per_family_rows(&single.samples)),
+    ];
+    if let Some(m) = &mixed {
+        fields.push((
+            "mixed",
+            Json::obj(vec![
+                ("workers", Json::num(mixed_specs.len() as f64)),
+                ("wall_s", Json::num(m.wall_s)),
+                ("req_per_s", Json::num(m.req_per_s)),
+                ("steps_per_s", Json::num(m.steps_per_s)),
+                ("latency_p50_ms", Json::num(m.p50)),
+                ("latency_p95_ms", Json::num(m.p95)),
+                ("mean_steps", Json::num(m.mean_steps)),
+                ("device_calls", Json::num(m.device_calls)),
+                ("per_family", per_family_rows(&m.samples)),
+            ]),
+        ));
+    }
+    let out = Json::obj(fields);
     std::fs::write("BENCH_serving.json", format!("{}\n", out.encode()))?;
-    println!(
-        "serving_bench: {n} reqs in {wall_s:.2}s — {req_per_s:.2} req/s, \
-         {steps_per_s:.0} steps/s, p50 {p50:.0} ms, p95 {p95:.0} ms \
-         -> BENCH_serving.json"
-    );
-
-    server.stop();
-    engine.shutdown();
-    join.join().unwrap()?;
+    println!("serving_bench: wrote BENCH_serving.json");
     Ok(())
 }

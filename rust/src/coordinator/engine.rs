@@ -2,20 +2,21 @@
 //! [`Scheduler`] and N worker shards ([`super::worker`]).
 //!
 //! `start()` builds one shared scheduler (bounded priority queue,
-//! deadlines, cancellation, backpressure) and spawns one worker thread
-//! per `EngineConfig::worker_batches` entry; each worker owns its own
-//! PJRT runtime and a batched `Session` bound to that batch size's
-//! compiled artifact.  This is the serving-side payoff of the paper:
-//! halting doesn't just cut one request's latency, it raises fleet
-//! throughput because every freed batch slot starts the next request
-//! `saved_steps` earlier — and with multiple shards, a small-batch
-//! worker can soak latency-sensitive traffic while large-batch workers
-//! soak throughput traffic.
+//! deadlines, cancellation, backpressure, per-family routing) and spawns
+//! one worker thread per `EngineConfig::worker_specs` entry; each worker
+//! owns its own PJRT runtime and a batched `Session` bound to that
+//! entry's `(family, batch)` compiled artifact.  This is the serving-side
+//! payoff of the paper: halting doesn't just cut one request's latency,
+//! it raises fleet throughput because every freed batch slot starts the
+//! next request `saved_steps` earlier — and with heterogeneous shards,
+//! one fleet serves every model family at once (a small-batch ddlm
+//! worker next to a large-batch ssd worker, say), with requests routed
+//! by their `family` wire field.
 //!
 //! [`EngineHandle`] is the cheap, cloneable front-end: blocking
 //! `submit`/`generate`, non-blocking `try_submit` (typed `overloaded`
-//! rejection), `cancel(id)`, a merged fleet `metrics()` snapshot, and
-//! `shutdown()` (drain then exit).
+//! rejection), `cancel(id)`, a merged fleet `metrics()` snapshot (with
+//! per-family counters), and `shutdown()` (drain then exit).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -24,7 +25,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::request::{GenRequest, GenResponse};
+use super::request::{GenRequest, GenResponse, Priority};
 use super::scheduler::{CancelOutcome, GenOutcome, Scheduler, ServeError};
 use super::worker::{self, WorkerConfig};
 use crate::sampler::Family;
@@ -32,31 +33,60 @@ use crate::util::json::Json;
 
 pub struct EngineConfig {
     pub artifact_dir: String,
-    pub family: Family,
-    /// one worker thread per entry: the batch size that worker requests
-    /// (resolved to the nearest compiled artifact).  Mixing sizes shards
-    /// traffic — e.g. `vec![1, 8]` runs a latency shard next to a
-    /// throughput shard of the same model family.
-    pub worker_batches: Vec<usize>,
-    /// trained checkpoint (PBIN); falls back to init params when None
-    pub checkpoint: Option<String>,
+    /// family assumed for requests that don't carry a `family` field —
+    /// every pre-multi-family client keeps working unchanged
+    pub default_family: Family,
+    /// one worker thread per entry: `(family, batch)` — the model
+    /// family that worker serves and the batch size it requests
+    /// (resolved to the nearest compiled artifact).  Mixing entries
+    /// shards traffic by latency class *and* family — e.g.
+    /// `vec![(Ddlm, 1), (Ddlm, 8), (Ssd, 8)]` runs a ddlm latency
+    /// shard, a ddlm throughput shard, and an ssd shard behind one
+    /// scheduler.
+    pub worker_specs: Vec<(Family, usize)>,
+    /// trained checkpoints (PBIN) per family; workers of a family
+    /// without an entry fall back to init params
+    pub checkpoints: Vec<(Family, String)>,
     pub t_max: f32,
     pub t_min: f32,
     /// admission-queue bound (all priority classes combined); submits
     /// beyond it are rejected with a typed `overloaded` error
     pub queue_depth: usize,
+    /// optional per-priority-class queue bounds (high/normal/low in
+    /// `Priority::index()` order); a full class rejects with typed
+    /// `overloaded` without starving the other classes
+    pub class_queue_bounds: Option<[usize; Priority::COUNT]>,
 }
 
 impl EngineConfig {
     pub fn new(artifact_dir: &str, family: Family) -> EngineConfig {
         EngineConfig {
             artifact_dir: artifact_dir.to_string(),
-            family,
-            worker_batches: vec![8],
-            checkpoint: None,
+            default_family: family,
+            worker_specs: vec![(family, 8)],
+            checkpoints: Vec::new(),
             t_max: 10.0,
             t_min: 0.05,
             queue_depth: 256,
+            class_queue_bounds: None,
+        }
+    }
+
+    /// Probe `runs_dir` for per-family trained checkpoints
+    /// (`<runs_dir>/<family>.pbin`) for every family in `worker_specs`
+    /// and register each one found (families with an explicit entry
+    /// keep it) — the one checkpoint-discovery path shared by the CLI,
+    /// examples and benches.
+    pub fn discover_checkpoints(&mut self, runs_dir: &str) {
+        let fams: Vec<Family> =
+            self.worker_specs.iter().map(|&(f, _)| f).collect();
+        for f in fams {
+            let path = format!("{runs_dir}/{}.pbin", f.name());
+            if std::path::Path::new(&path).exists()
+                && !self.checkpoints.iter().any(|(cf, _)| *cf == f)
+            {
+                self.checkpoints.push((f, path));
+            }
         }
     }
 }
@@ -65,7 +95,8 @@ impl EngineConfig {
 #[derive(Clone)]
 pub struct EngineHandle {
     sched: Arc<Scheduler>,
-    worker_metrics: Vec<Arc<Mutex<Metrics>>>,
+    /// (family, metrics) per worker, in spawn order
+    worker_metrics: Vec<(Family, Arc<Mutex<Metrics>>)>,
 }
 
 impl EngineHandle {
@@ -102,15 +133,18 @@ impl EngineHandle {
     }
 
     /// Merged fleet snapshot: the scheduler's admission metrics folded
-    /// with every worker's, plus queue-depth / slot-occupancy gauges and
-    /// a per-worker breakdown under `"workers"`.
+    /// with every worker's — including the per-family completion/latency
+    /// counters — plus queue-depth / slot-occupancy gauges and a
+    /// per-worker breakdown (with each worker's family) under
+    /// `"workers"`.
     pub fn metrics(&self) -> Result<Json> {
         let mut merged = self.sched.metrics.lock().unwrap().clone();
         let mut per_worker = Vec::new();
-        for (i, wm) in self.worker_metrics.iter().enumerate() {
+        for (i, (family, wm)) in self.worker_metrics.iter().enumerate() {
             let w = wm.lock().unwrap().clone();
             per_worker.push(Json::obj(vec![
                 ("worker", Json::num(i as f64)),
+                ("family", Json::str(family.name())),
                 ("slots_total", Json::num(w.slots_total as f64)),
                 ("slots_busy", Json::num(w.slots_busy as f64)),
                 (
@@ -179,8 +213,30 @@ impl EngineJoin {
 /// the fleet join handle (joining after `shutdown()` surfaces worker
 /// errors).
 pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
-    let mut sched =
-        Scheduler::new(cfg.queue_depth, cfg.worker_batches.len());
+    let families: Vec<Family> =
+        cfg.worker_specs.iter().map(|&(f, _)| f).collect();
+    // a default family nobody serves would reject every family-less
+    // (pre-multi-family) request with invalid_request forever — fall
+    // back loudly to the first worker's family instead of building a
+    // silently-broken fleet (the CLI additionally refuses the
+    // misconfiguration up front)
+    let default_family = if families.contains(&cfg.default_family) {
+        cfg.default_family
+    } else if let Some(&first) = families.first() {
+        crate::log_warn!(
+            "engine: default family {} has no worker — falling back to {}",
+            cfg.default_family.name(),
+            first.name()
+        );
+        first
+    } else {
+        cfg.default_family
+    };
+    let mut sched = Scheduler::new(cfg.queue_depth, families)
+        .with_default_family(default_family);
+    if let Some(caps) = cfg.class_queue_bounds {
+        sched = sched.with_class_caps(caps);
+    }
     // admission-side validation needs the compiled seq_len (a longer
     // prefix must reject with `invalid_request` at the boundary, not
     // panic a worker).  The manifest read is cheap; if it fails the
@@ -192,16 +248,21 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
     let sched = Arc::new(sched);
     let mut handles = Vec::new();
     let mut worker_metrics = Vec::new();
-    for (id, &batch) in cfg.worker_batches.iter().enumerate() {
+    for (id, &(family, batch)) in cfg.worker_specs.iter().enumerate() {
         let m = Arc::new(Mutex::new(Metrics::default()));
-        worker_metrics.push(m.clone());
+        worker_metrics.push((family, m.clone()));
+        let checkpoint = cfg
+            .checkpoints
+            .iter()
+            .find(|(f, _)| *f == family)
+            .map(|(_, p)| p.clone());
         handles.push(worker::spawn(
             WorkerConfig {
                 id,
                 artifact_dir: cfg.artifact_dir.clone(),
-                family: cfg.family,
+                family,
                 batch,
-                checkpoint: cfg.checkpoint.clone(),
+                checkpoint,
                 t_max: cfg.t_max,
                 t_min: cfg.t_min,
             },

@@ -11,12 +11,17 @@
 //!
 //! Every completed request — preflight-resolved or worker-stepped — goes
 //! through the single [`Metrics::record_completion`] path, so the two
-//! cannot drift in what they count.
+//! cannot drift in what they count.  Completions additionally feed a
+//! per-family lane ([`FamilyMetrics`]) keyed by the serving kernel, so
+//! a heterogeneous fleet's snapshot reports throughput/latency/halt
+//! counters per model family (`requests_completed_<fam>`,
+//! `latency_p50_ms_<fam>`, `halted_by_<reason>_<fam>`, ...).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::request::{GenResponse, Priority};
+use crate::sampler::Family;
 
 /// Fixed-bucket latency histogram (milliseconds).
 #[derive(Clone, Debug)]
@@ -106,6 +111,49 @@ impl Histogram {
     }
 }
 
+/// Per-family completion/latency/halt accounting — one lane per model
+/// family served, so a heterogeneous fleet's snapshot can split its
+/// throughput claims the way the efficiency literature asks for.
+/// Surfaced in the JSON snapshot as `requests_completed_<fam>`,
+/// `latency_p50_ms_<fam>`, `halted_by_<reason>_<fam>`, ...
+#[derive(Clone, Debug, Default)]
+pub struct FamilyMetrics {
+    pub requests_completed: u64,
+    pub halted_early: u64,
+    pub steps_executed: u64,
+    pub steps_saved: u64,
+    pub latency_ms: Histogram,
+    /// early halts per policy reason within this family
+    pub halted_by: BTreeMap<String, u64>,
+}
+
+impl FamilyMetrics {
+    fn record(&mut self, resp: &GenResponse) {
+        self.requests_completed += 1;
+        self.steps_executed += resp.steps_executed as u64;
+        self.steps_saved +=
+            resp.steps_budget.saturating_sub(resp.steps_executed) as u64;
+        if resp.halted_early {
+            if let Some(reason) = &resp.halt_reason {
+                self.halted_early += 1;
+                *self.halted_by.entry(reason.clone()).or_insert(0) += 1;
+            }
+        }
+        self.latency_ms.observe(resp.latency_ms);
+    }
+
+    fn merge(&mut self, other: &FamilyMetrics) {
+        self.requests_completed += other.requests_completed;
+        self.halted_early += other.halted_early;
+        self.steps_executed += other.steps_executed;
+        self.steps_saved += other.steps_saved;
+        self.latency_ms.merge(&other.latency_ms);
+        for (reason, n) in &other.halted_by {
+            *self.halted_by.entry(reason.clone()).or_insert(0) += n;
+        }
+    }
+}
+
 /// Serving metrics for one worker shard (or the scheduler's admission
 /// side); merged across the fleet for the `/metrics` snapshot.
 #[derive(Clone, Debug)]
@@ -124,7 +172,7 @@ pub struct Metrics {
     /// admission rejections from the bounded queue (backpressure)
     pub rejected_overloaded: u64,
     /// admission rejections for unserveable requests (overlong prefix,
-    /// duplicate in-flight id)
+    /// family with no live worker, duplicate in-flight id)
     pub rejected_invalid: u64,
     /// requests cancelled while queued or running
     pub cancelled: u64,
@@ -144,6 +192,9 @@ pub struct Metrics {
     /// early halts per policy reason (`entropy`, `patience`, ...);
     /// surfaced in the JSON snapshot as `halted_by_<reason>`
     pub halted_by: BTreeMap<String, u64>,
+    /// completion/latency/halt accounting split per model family (keyed
+    /// by `Family::name()`); only families that completed work appear
+    pub per_family: BTreeMap<String, FamilyMetrics>,
 }
 
 impl Default for Metrics {
@@ -171,11 +222,24 @@ impl Default for Metrics {
                 Histogram::default(),
             ],
             halted_by: BTreeMap::new(),
+            per_family: BTreeMap::new(),
         }
     }
 }
 
 impl Metrics {
+    /// Account device steps burned by a request that was aborted
+    /// (cancelled / deadline-expired) before completing — they count in
+    /// the global total AND the family's lane, so per-family steps
+    /// always reconcile with the fleet total.
+    pub fn record_aborted_steps(&mut self, family: Family, steps: u64) {
+        self.steps_executed += steps;
+        self.per_family
+            .entry(family.name().to_string())
+            .or_default()
+            .steps_executed += steps;
+    }
+
     /// Account one early halt attributed to a policy reason.
     pub fn record_halt(&mut self, reason: &str) {
         self.halted_early += 1;
@@ -184,8 +248,15 @@ impl Metrics {
 
     /// The single bookkeeping path for every answered request — preflight
     /// resolutions and worker completions alike — so the two can't drift
-    /// in steps/latency/halt accounting.
-    pub fn record_completion(&mut self, resp: &GenResponse, prio: Priority) {
+    /// in steps/latency/halt accounting.  `family` is the kernel that
+    /// served (or, for admission-side resolutions, would have served)
+    /// the request; it feeds the per-family lanes of the snapshot.
+    pub fn record_completion(
+        &mut self,
+        resp: &GenResponse,
+        prio: Priority,
+        family: Family,
+    ) {
         self.requests_completed += 1;
         self.steps_executed += resp.steps_executed as u64;
         self.steps_saved +=
@@ -198,6 +269,10 @@ impl Metrics {
         self.latency_ms.observe(resp.latency_ms);
         self.queue_ms.observe(resp.queue_ms);
         self.latency_by_priority[prio.index()].observe(resp.latency_ms);
+        self.per_family
+            .entry(family.name().to_string())
+            .or_default()
+            .record(resp);
     }
 
     /// Fold another shard's metrics in (fleet snapshot).
@@ -229,6 +304,9 @@ impl Metrics {
         }
         for (reason, n) in &other.halted_by {
             *self.halted_by.entry(reason.clone()).or_insert(0) += n;
+        }
+        for (fam, fm) in &other.per_family {
+            self.per_family.entry(fam.clone()).or_default().merge(fm);
         }
     }
 
@@ -295,6 +373,40 @@ impl Metrics {
         }
         for (reason, n) in &self.halted_by {
             m.insert(format!("halted_by_{reason}"), Json::num(*n as f64));
+        }
+        for (fam, fm) in &self.per_family {
+            m.insert(
+                format!("requests_completed_{fam}"),
+                Json::num(fm.requests_completed as f64),
+            );
+            m.insert(
+                format!("halted_early_{fam}"),
+                Json::num(fm.halted_early as f64),
+            );
+            m.insert(
+                format!("steps_executed_{fam}"),
+                Json::num(fm.steps_executed as f64),
+            );
+            m.insert(
+                format!("steps_saved_{fam}"),
+                Json::num(fm.steps_saved as f64),
+            );
+            if fm.latency_ms.count() > 0 {
+                m.insert(
+                    format!("latency_p50_ms_{fam}"),
+                    Json::num(fm.latency_ms.quantile(0.5)),
+                );
+                m.insert(
+                    format!("latency_p95_ms_{fam}"),
+                    Json::num(fm.latency_ms.quantile(0.95)),
+                );
+            }
+            for (reason, n) in &fm.halted_by {
+                m.insert(
+                    format!("halted_by_{reason}_{fam}"),
+                    Json::num(*n as f64),
+                );
+            }
         }
         Json::Obj(m)
     }
@@ -395,7 +507,7 @@ mod tests {
         let mut req = GenRequest::new(1, 10);
         req.policy = parse_policy("fixed:0").unwrap();
         let pre = GenResponse::preflight(&req, "fixed");
-        m.record_completion(&pre, req.priority);
+        m.record_completion(&pre, req.priority, Family::Ddlm);
         // worker path: early halt at step 4 of 10
         let worker = GenResponse {
             id: 2,
@@ -406,9 +518,10 @@ mod tests {
             halt_reason: Some("fixed".to_string()),
             latency_ms: 12.0,
             queue_ms: 3.0,
+            family: Some(Family::Ddlm),
             final_stats: Default::default(),
         };
-        m.record_completion(&worker, Priority::High);
+        m.record_completion(&worker, Priority::High, Family::Ddlm);
         assert_eq!(m.requests_completed, 2);
         assert_eq!(m.steps_executed, 4);
         assert_eq!(m.steps_saved, 16);
@@ -418,6 +531,86 @@ mod tests {
         assert_eq!(m.queue_ms.count(), 2);
         assert_eq!(m.latency_by_priority[Priority::High.index()].count(), 1);
         assert_eq!(m.latency_by_priority[Priority::Normal.index()].count(), 1);
+        // ...and both feed the same per-family lane
+        let lane = m.per_family.get("ddlm").unwrap();
+        assert_eq!(lane.requests_completed, 2);
+        assert_eq!(lane.steps_executed, 4);
+        assert_eq!(lane.steps_saved, 16);
+        assert_eq!(lane.halted_by.get("fixed"), Some(&2));
+    }
+
+    #[test]
+    fn per_family_lanes_split_completions_and_flatten_into_json() {
+        let mut m = Metrics::default();
+        let resp = |id: u64, fam: Family| GenResponse {
+            id,
+            tokens: vec![],
+            steps_executed: 5,
+            steps_budget: 10,
+            halted_early: true,
+            halt_reason: Some("entropy".to_string()),
+            latency_ms: 8.0,
+            queue_ms: 1.0,
+            family: Some(fam),
+            final_stats: Default::default(),
+        };
+        m.record_completion(&resp(1, Family::Ddlm), Priority::Normal, Family::Ddlm);
+        m.record_completion(&resp(2, Family::Ddlm), Priority::Normal, Family::Ddlm);
+        m.record_completion(&resp(3, Family::Ssd), Priority::Normal, Family::Ssd);
+        let j = m.to_json();
+        let get = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        assert_eq!(get("requests_completed_ddlm"), Some(2.0));
+        assert_eq!(get("requests_completed_ssd"), Some(1.0));
+        assert_eq!(get("halted_by_entropy_ddlm"), Some(2.0));
+        assert_eq!(get("halted_by_entropy_ssd"), Some(1.0));
+        assert!(get("latency_p95_ms_ddlm").is_some());
+        // families that served nothing stay out of the snapshot
+        assert!(j.get("requests_completed_plaid").is_none());
+    }
+
+    #[test]
+    fn aborted_steps_count_in_global_and_family_lane() {
+        let mut m = Metrics::default();
+        m.record_aborted_steps(Family::Ssd, 50);
+        assert_eq!(m.steps_executed, 50);
+        let lane = m.per_family.get("ssd").unwrap();
+        assert_eq!(lane.steps_executed, 50);
+        // an abort is not a completion
+        assert_eq!(m.requests_completed, 0);
+        assert_eq!(lane.requests_completed, 0);
+        assert_eq!(lane.latency_ms.count(), 0);
+    }
+
+    #[test]
+    fn merge_folds_per_family_lanes() {
+        let mk = |fam: Family, n: u64| {
+            let mut m = Metrics::default();
+            for id in 0..n {
+                let r = GenResponse {
+                    id,
+                    tokens: vec![],
+                    steps_executed: 3,
+                    steps_budget: 3,
+                    halted_early: false,
+                    halt_reason: None,
+                    latency_ms: 4.0,
+                    queue_ms: 0.5,
+                    family: Some(fam),
+                    final_stats: Default::default(),
+                };
+                m.record_completion(&r, Priority::Normal, fam);
+            }
+            m
+        };
+        let mut a = mk(Family::Ddlm, 2);
+        let b = mk(Family::Ddlm, 1);
+        let c = mk(Family::Plaid, 3);
+        a.merge(&b);
+        a.merge(&c);
+        assert_eq!(a.per_family.get("ddlm").unwrap().requests_completed, 3);
+        assert_eq!(a.per_family.get("plaid").unwrap().requests_completed, 3);
+        assert_eq!(a.per_family.get("ddlm").unwrap().latency_ms.count(), 3);
+        assert_eq!(a.requests_completed, 6);
     }
 
     #[test]

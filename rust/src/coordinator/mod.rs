@@ -4,26 +4,30 @@
 //! Layers (one module each):
 //!
 //! * [`scheduler`] — admission control: a bounded queue with priority
-//!   classes (high/normal/low), per-request deadlines, explicit
-//!   cancellation, backpressure (full queue ⇒ typed `overloaded`
-//!   rejection instead of unbounded growth), and boundary validation
-//!   (overlong prefix ⇒ `invalid_request`, in-flight id reuse ⇒
-//!   `duplicate_id`, zero-step budgets answered without a worker).
+//!   classes (high/normal/low, optional per-class bounds), per-request
+//!   deadlines, explicit cancellation, backpressure (full queue or
+//!   class ⇒ typed `overloaded` rejection instead of unbounded growth),
+//!   per-family request routing, and boundary validation (overlong
+//!   prefix or unserved family ⇒ `invalid_request`, in-flight id reuse
+//!   ⇒ `duplicate_id`, zero-step budgets answered without a worker).
 //! * [`worker`] — N worker shards, each an OS thread owning one PJRT
 //!   runtime and one batched `Session` (continuous batching with
 //!   early-exit slot recycling).  Shards may bind different compiled
-//!   batch sizes of one family: small-batch shards soak
-//!   latency-sensitive traffic, large-batch shards soak throughput.
-//! * [`engine`] — thin composition: `start()` wires scheduler + workers;
+//!   batch sizes *and different model families*: small-batch shards
+//!   soak latency-sensitive traffic, large-batch shards soak
+//!   throughput, and one fleet serves a heterogeneous family mix.
+//! * [`engine`] — thin composition: `start()` wires scheduler + workers
+//!   (`EngineConfig::worker_specs` = `(family, batch)` per shard);
 //!   [`EngineHandle`] exposes `submit`/`try_submit`/`generate`,
 //!   `cancel(id)`, merged fleet `metrics()`, and `shutdown()`.
 //! * [`server`] — TCP JSON-lines front-end (wire fields `priority`,
-//!   `deadline_ms`, control cmds `metrics`/`cancel`) with a joinable
-//!   `Server::stop()`.
+//!   `deadline_ms`, `family`, control cmds `metrics`/`cancel`) with a
+//!   joinable `Server::stop()`.
 //! * [`metrics`] — per-worker metrics merged into one fleet snapshot:
 //!   queue-depth and slot-occupancy gauges, per-priority latency
 //!   histograms, `rejected_overloaded`/`cancelled`/`deadline_exceeded`
-//!   counters, per-reason `halted_by_*`.
+//!   counters, per-reason `halted_by_*`, and per-family lanes
+//!   (`requests_completed_<fam>`, `latency_p50_ms_<fam>`, ...).
 
 pub mod engine;
 pub mod metrics;

@@ -8,11 +8,16 @@
 //! Scheduling fields: `priority` ("high" | "normal" | "low", default
 //! normal) picks the admission class, `deadline_ms` (optional) bounds the
 //! request's total wall-clock time — the scheduler answers with a typed
-//! `deadline_exceeded` error if it can't make it.
+//! `deadline_exceeded` error if it can't make it — and `family`
+//! (optional: "ddlm" | "ssd" | "plaid") routes the request to a worker
+//! shard of that model family in a heterogeneous fleet.  Requests that
+//! omit `family` go to the fleet's default family, so every pre-split
+//! client keeps working unchanged; responses echo the serving family.
 
 use anyhow::{anyhow, Result};
 
 use crate::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt, StepStats};
+use crate::sampler::Family;
 use crate::util::json::Json;
 
 /// Admission class: the scheduler drains `High` before `Normal` before
@@ -75,6 +80,10 @@ pub struct GenRequest {
     /// total wall-clock budget from submission; expired requests are
     /// answered with a typed `deadline_exceeded` error (None = no limit)
     pub deadline_ms: Option<f64>,
+    /// model family to route to (wire field `family`); None = the
+    /// fleet's default family.  A family no live worker serves rejects
+    /// with a typed `invalid_request` at admission.
+    pub family: Option<Family>,
 }
 
 impl GenRequest {
@@ -88,6 +97,7 @@ impl GenRequest {
             seed: id,
             priority: Priority::Normal,
             deadline_ms: None,
+            family: None,
         }
     }
 
@@ -108,6 +118,9 @@ impl GenRequest {
         ];
         if let Some(d) = self.deadline_ms {
             fields.push(("deadline_ms", Json::num(d)));
+        }
+        if let Some(f) = self.family {
+            fields.push(("family", Json::str(f.name())));
         }
         Json::obj(fields)
     }
@@ -140,6 +153,15 @@ impl GenRequest {
                 .ok_or_else(|| anyhow!("bad priority {s:?}"))?,
             None => Priority::Normal,
         };
+        // unknown family names are rejected at the wire boundary; a
+        // known-but-unserved family is the scheduler's typed
+        // `invalid_request` instead
+        let family = match j.get("family").and_then(Json::as_str) {
+            Some(s) => {
+                Some(Family::parse(s).ok_or_else(|| anyhow!("bad family {s:?}"))?)
+            }
+            None => None,
+        };
         Ok(GenRequest {
             id,
             prefix,
@@ -153,6 +175,7 @@ impl GenRequest {
                 as u64,
             priority,
             deadline_ms: j.get("deadline_ms").and_then(Json::as_f64),
+            family,
         })
     }
 }
@@ -169,6 +192,9 @@ pub struct GenResponse {
     pub latency_ms: f64,
     /// queueing delay before the first denoise step
     pub queue_ms: f64,
+    /// model family that served the request (wire field `family`;
+    /// absent on responses from pre-multi-family servers)
+    pub family: Option<Family>,
     pub final_stats: StepStats,
 }
 
@@ -189,6 +215,7 @@ impl GenResponse {
             halt_reason: halt_reason.map(str::to_string),
             latency_ms: 0.0,
             queue_ms: 0.0,
+            family: req.family,
             final_stats: StepStats::default(),
         }
     }
@@ -218,6 +245,9 @@ impl GenResponse {
         ];
         if let Some(reason) = &self.halt_reason {
             fields.push(("halt_reason", Json::str(reason.clone())));
+        }
+        if let Some(f) = self.family {
+            fields.push(("family", Json::str(f.name())));
         }
         Json::obj(fields)
     }
@@ -249,6 +279,10 @@ impl GenResponse {
                 .map(str::to_string),
             latency_ms: get_f("latency_ms")?,
             queue_ms: j.get("queue_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            family: j
+                .get("family")
+                .and_then(Json::as_str)
+                .and_then(Family::parse),
             final_stats: StepStats {
                 entropy: j.get("entropy").and_then(Json::as_f64).unwrap_or(0.0)
                     as f32,
@@ -275,11 +309,13 @@ mod tests {
         r.noise_scale = 0.9;
         r.priority = Priority::High;
         r.deadline_ms = Some(2500.0);
+        r.family = Some(Family::Ssd);
         let j = r.to_json();
         assert_eq!(
             j.get("criterion").and_then(Json::as_str),
             Some("kl:0.001:50")
         );
+        assert_eq!(j.get("family").and_then(Json::as_str), Some("ssd"));
         let back = GenRequest::from_json(&j).unwrap();
         assert_eq!(back.id, 7);
         assert_eq!(back.prefix, vec![1, 2, 3]);
@@ -288,23 +324,41 @@ mod tests {
         assert!((back.noise_scale - 0.9).abs() < 1e-6);
         assert_eq!(back.priority, Priority::High);
         assert_eq!(back.deadline_ms, Some(2500.0));
+        assert_eq!(back.family, Some(Family::Ssd));
     }
 
     #[test]
     fn request_scheduling_fields_default_on_legacy_wire() {
-        // pre-split clients send neither priority nor deadline_ms
+        // pre-split clients send neither priority, deadline_ms nor family
         let back = GenRequest::from_json(
             &Json::parse(r#"{"id":1,"steps":10,"criterion":"none"}"#).unwrap(),
         )
         .unwrap();
         assert_eq!(back.priority, Priority::Normal);
         assert_eq!(back.deadline_ms, None);
+        assert_eq!(back.family, None);
         assert!(back.to_json().get("deadline_ms").is_none());
+        assert!(back.to_json().get("family").is_none());
         // and bad priorities are rejected at the wire boundary
         assert!(GenRequest::from_json(
             &Json::parse(r#"{"id":1,"steps":10,"priority":"urgent"}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn unknown_family_rejected_at_wire_boundary() {
+        assert!(GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"family":"gpt"}"#).unwrap()
+        )
+        .is_err());
+        for fam in Family::all() {
+            let line =
+                format!(r#"{{"id":1,"steps":10,"family":"{}"}}"#, fam.name());
+            let back =
+                GenRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back.family, Some(fam));
+        }
     }
 
     #[test]
@@ -358,6 +412,7 @@ mod tests {
             halt_reason: Some("kl".to_string()),
             latency_ms: 45.5,
             queue_ms: 1.25,
+            family: Some(Family::Plaid),
             final_stats: StepStats {
                 entropy: 0.5,
                 kl: 1e-4,
@@ -373,6 +428,7 @@ mod tests {
         assert!(back.halted_early);
         assert_eq!(back.halt_reason.as_deref(), Some("kl"));
         assert_eq!(back.steps_executed, 120);
+        assert_eq!(back.family, Some(Family::Plaid));
         assert!((back.final_stats.entropy - 0.5).abs() < 1e-6);
     }
 
@@ -387,12 +443,15 @@ mod tests {
             halt_reason: None,
             latency_ms: 1.0,
             queue_ms: 0.0,
+            family: None,
             final_stats: StepStats::default(),
         };
         let j = resp.to_json();
         assert!(j.get("halt_reason").is_none());
+        assert!(j.get("family").is_none());
         let back = GenResponse::from_json(&j).unwrap();
         assert_eq!(back.halt_reason, None);
+        assert_eq!(back.family, None);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Admission control for the serving fleet: a bounded, priority-classed
-//! queue between the front-ends and the worker shards.
+//! Admission control for the serving fleet: a bounded, priority-classed,
+//! family-routed queue between the front-ends and the worker shards.
 //!
 //! Responsibilities:
 //!
@@ -7,11 +7,18 @@
 //!   `fixed:0`) or whose step budget is zero are answered here, without
 //!   touching a worker; everything else enters a bounded queue, and a
 //!   full queue rejects with the typed [`ServeError::Overloaded`]
-//!   instead of growing without bound (backpressure);
+//!   instead of growing without bound (backpressure).  Optional
+//!   per-priority-class bounds reject a full class the same way without
+//!   starving the other classes;
 //! * **validation** — requests the fleet can never serve (prefix longer
-//!   than the compiled seq_len) or whose id is already in flight are
-//!   rejected with typed errors ([`ServeError::InvalidRequest`],
-//!   [`ServeError::DuplicateId`]) at the boundary, never deeper in;
+//!   than the compiled seq_len, or a family no live worker runs) or
+//!   whose id is already in flight are rejected with typed errors
+//!   ([`ServeError::InvalidRequest`], [`ServeError::DuplicateId`]) at
+//!   the boundary, never deeper in;
+//! * **family routing** — the fleet may mix worker shards of different
+//!   model families; a request (wire field `family`, default = the
+//!   fleet's default family) is only ever handed to a worker whose
+//!   kernel matches;
 //! * **priority** — three classes (high / normal / low), FIFO within a
 //!   class; workers always drain higher classes first;
 //! * **deadlines** — a request carrying `deadline_ms` is dropped with
@@ -33,13 +40,14 @@ use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority};
+use crate::sampler::Family;
 
 /// Typed serving-path failure, delivered instead of a [`GenResponse`]
 /// (on the wire: `{"error": "<as_str()>"}`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServeError {
-    /// the bounded admission queue is full (or the engine is shutting
-    /// down) — back off and retry
+    /// the bounded admission queue (or the request's priority class) is
+    /// full, or the engine is shutting down — back off and retry
     Overloaded,
     /// request cancelled via `cancel(id)` while queued or running
     Cancelled,
@@ -48,7 +56,8 @@ pub enum ServeError {
     /// no live worker is left to serve the queue (startup failure)
     Unavailable,
     /// the request can never be served by this fleet (e.g. its prefix
-    /// is longer than the compiled sequence length) — fix and resubmit
+    /// is longer than the compiled sequence length, or it names a
+    /// family no live worker runs) — fix and resubmit
     InvalidRequest,
     /// another in-flight request already uses this id; ids key the
     /// cancellation routing, so they must be unique while live
@@ -83,17 +92,21 @@ pub type GenOutcome = Result<GenResponse, ServeError>;
 /// Reply channel for one request.
 pub type ReplyTx = mpsc::Sender<GenOutcome>;
 
-/// A queued request plus its reply channel and timing/deadline state.
+/// A queued request plus its reply channel, resolved family, and
+/// timing/deadline state.
 pub struct QueuedReq {
     pub req: GenRequest,
     pub reply: ReplyTx,
+    /// model family resolved at admission (request field, else the
+    /// fleet default) — the routing key
+    pub family: Family,
     pub submitted: Instant,
     /// absolute expiry computed from `req.deadline_ms` at submission
     pub deadline: Option<Instant>,
 }
 
 impl QueuedReq {
-    fn new(req: GenRequest, reply: ReplyTx) -> QueuedReq {
+    fn new(req: GenRequest, reply: ReplyTx, family: Family) -> QueuedReq {
         let submitted = Instant::now();
         let deadline = req
             .deadline_ms
@@ -101,6 +114,7 @@ impl QueuedReq {
         QueuedReq {
             req,
             reply,
+            family,
             submitted,
             deadline,
         }
@@ -135,7 +149,7 @@ impl CancelOutcome {
 /// Outcome of an idle worker's wait.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IdleWait {
-    /// work is queued — go admit it
+    /// work this worker's family can serve is queued — go admit it
     Work,
     /// shutdown with a drained queue — exit the worker loop
     Exit,
@@ -144,6 +158,9 @@ pub enum IdleWait {
 struct State {
     queues: [VecDeque<QueuedReq>; Priority::COUNT],
     queued: usize,
+    /// queued requests per family — the idle-wait predicate (a worker
+    /// must not busy-wake on work only another family can serve)
+    queued_by_family: [usize; Family::COUNT],
     /// request id -> owning worker, for every admitted-but-unfinished
     /// request (cancellation routing)
     running: HashMap<u64, usize>,
@@ -155,6 +172,9 @@ struct State {
     live_ids: HashSet<u64>,
     /// workers that have not exited (starts at the spawned count)
     workers_live: usize,
+    /// live workers per family — admission rejects families nobody
+    /// serves with a typed `invalid_request`
+    family_live: [usize; Family::COUNT],
     shutdown: bool,
 }
 
@@ -162,9 +182,17 @@ pub struct Scheduler {
     state: Mutex<State>,
     work_ready: Condvar,
     queue_cap: usize,
+    /// optional per-priority-class caps (defaults to the shared
+    /// `queue_cap` only); a full class rejects with `overloaded`
+    /// without starving the other classes
+    class_caps: [usize; Priority::COUNT],
     /// longest serveable conditioning prefix (the fleet's compiled
     /// seq_len); None = unknown, workers enforce it themselves
     max_prefix: Option<usize>,
+    /// family assumed for requests that don't name one
+    default_family: Family,
+    /// family per worker id (the routing table)
+    worker_family: Vec<Family>,
     /// admission-side bookkeeping: submissions, preflight completions,
     /// overload rejections, queued-side cancels and deadline drops
     pub metrics: Mutex<Metrics>,
@@ -172,43 +200,80 @@ pub struct Scheduler {
 
 impl Scheduler {
     /// `queue_cap` bounds the admission queue across all priority
-    /// classes; `workers` is the number of worker shards that will pull
-    /// from this scheduler.
-    pub fn new(queue_cap: usize, workers: usize) -> Scheduler {
+    /// classes; `worker_families` names the family of each worker shard
+    /// (index = worker id) that will pull from this scheduler.
+    pub fn new(queue_cap: usize, worker_families: Vec<Family>) -> Scheduler {
+        let mut family_live = [0usize; Family::COUNT];
+        for f in &worker_families {
+            family_live[f.index()] += 1;
+        }
+        let default_family =
+            worker_families.first().copied().unwrap_or(Family::Ddlm);
         Scheduler {
             state: Mutex::new(State {
                 queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
                 queued: 0,
+                queued_by_family: [0; Family::COUNT],
                 running: HashMap::new(),
                 cancel_flags: HashSet::new(),
                 live_ids: HashSet::new(),
-                workers_live: workers,
+                workers_live: worker_families.len(),
+                family_live,
                 shutdown: false,
             }),
             work_ready: Condvar::new(),
             queue_cap,
+            class_caps: [usize::MAX; Priority::COUNT],
             max_prefix: None,
+            default_family,
+            worker_family: worker_families,
             metrics: Mutex::new(Metrics::default()),
         }
     }
 
     /// Reject requests whose prefix exceeds the fleet's compiled
     /// sequence length at admission, with a typed `invalid_request` —
-    /// instead of letting a worker panic deep inside `reset_slot`.
+    /// instead of letting a worker reject (or worse) deep in the stack.
     pub fn with_max_prefix(mut self, max: usize) -> Scheduler {
         self.max_prefix = Some(max);
         self
+    }
+
+    /// Family assumed for requests that don't carry one (the fleet
+    /// default; `Scheduler::new` seeds it from the first worker).
+    pub fn with_default_family(mut self, family: Family) -> Scheduler {
+        self.default_family = family;
+        self
+    }
+
+    /// Per-priority-class queue bounds (high/normal/low, in
+    /// `Priority::index()` order).  A class at its bound rejects with a
+    /// typed `overloaded` while the other classes keep admitting.
+    pub fn with_class_caps(
+        mut self,
+        caps: [usize; Priority::COUNT],
+    ) -> Scheduler {
+        self.class_caps = caps;
+        self
+    }
+
+    fn family_of_worker(&self, worker: usize) -> Family {
+        self.worker_family
+            .get(worker)
+            .copied()
+            .unwrap_or(self.default_family)
     }
 
     /// Admit one request.  Preflight-resolvable policies and zero-step
     /// budgets are answered inline (no queue slot, no device work) —
     /// but only on a live, accepting engine, so they can't sneak past
     /// shutdown or a dead fleet.  Rejections are typed: `Overloaded`
-    /// (full queue or draining engine), `Unavailable` (no workers),
-    /// `InvalidRequest` (prefix longer than the compiled seq_len) and
-    /// `DuplicateId` (id already queued or running) — the caller
-    /// decides whether to surface them synchronously (`try_submit`) or
-    /// through the reply channel.
+    /// (full queue or class, or draining engine), `Unavailable` (no
+    /// workers), `InvalidRequest` (prefix longer than the compiled
+    /// seq_len, or a family no live worker serves) and `DuplicateId`
+    /// (id already queued or running) — the caller decides whether to
+    /// surface them synchronously (`try_submit`) or through the reply
+    /// channel.
     pub fn submit(
         &self,
         req: GenRequest,
@@ -216,17 +281,19 @@ impl Scheduler {
     ) -> Result<(), ServeError> {
         self.metrics.lock().unwrap().requests_submitted += 1;
         // wire-level validation first: an overlong prefix can never be
-        // served (a worker's `reset_slot` would assert on it)
+        // served (a worker's `reset_slot` would reject it anyway)
         if self.max_prefix.is_some_and(|max| req.prefix.len() > max) {
             self.metrics.lock().unwrap().rejected_invalid += 1;
             return Err(ServeError::InvalidRequest);
         }
+        let family = req.family.unwrap_or(self.default_family);
         // resolve the policy's preflight outside the state lock (policy
         // code is extensible; keep it out of the critical section); a
         // zero-step budget is equally answerable without a worker — its
         // schedule is exhausted before the first device step
         let pre = req.policy.preflight().reason();
         let immediate = pre.is_some() || req.n_steps == 0;
+        let class = req.priority.index();
 
         // admission verdict and enqueue under ONE lock acquisition: a
         // submit racing shutdown() or the last worker's exit must never
@@ -243,6 +310,12 @@ impl Scheduler {
                 Admit::Reject(ServeError::Unavailable)
             } else if st.shutdown {
                 Admit::Reject(ServeError::Overloaded)
+            } else if st.family_live[family.index()] == 0 {
+                // no live worker runs this family's kernel: the fleet
+                // can never serve it — typed rejection, even for
+                // preflight-resolvable requests (consistency: an
+                // unserveable request is invalid, not answerable)
+                Admit::Reject(ServeError::InvalidRequest)
             } else if st.live_ids.contains(&req.id) {
                 // checked before the immediate path too: answering a
                 // zero-step resubmission of a live id would emit two
@@ -250,14 +323,16 @@ impl Scheduler {
                 Admit::Reject(ServeError::DuplicateId)
             } else if immediate {
                 Admit::Immediate(req, reply)
-            } else if st.queued >= self.queue_cap {
+            } else if st.queued >= self.queue_cap
+                || st.queues[class].len() >= self.class_caps[class]
+            {
                 Admit::Reject(ServeError::Overloaded)
             } else {
                 st.live_ids.insert(req.id);
-                let q = QueuedReq::new(req, reply);
-                let class = q.req.priority.index();
+                let q = QueuedReq::new(req, reply, family);
                 st.queues[class].push_back(q);
                 st.queued += 1;
+                st.queued_by_family[family.index()] += 1;
                 Admit::Enqueued
             }
         };
@@ -267,11 +342,13 @@ impl Scheduler {
                 Ok(())
             }
             Admit::Immediate(req, reply) => {
-                let resp = GenResponse::immediate(&req, pre);
-                self.metrics
-                    .lock()
-                    .unwrap()
-                    .record_completion(&resp, req.priority);
+                let mut resp = GenResponse::immediate(&req, pre);
+                resp.family = Some(family);
+                self.metrics.lock().unwrap().record_completion(
+                    &resp,
+                    req.priority,
+                    family,
+                );
                 let _ = reply.send(Ok(resp));
                 Ok(())
             }
@@ -279,7 +356,9 @@ impl Scheduler {
                 let mut m = self.metrics.lock().unwrap();
                 match e {
                     ServeError::Overloaded => m.rejected_overloaded += 1,
-                    ServeError::DuplicateId => m.rejected_invalid += 1,
+                    ServeError::DuplicateId | ServeError::InvalidRequest => {
+                        m.rejected_invalid += 1
+                    }
                     _ => {}
                 }
                 Err(e)
@@ -288,25 +367,36 @@ impl Scheduler {
     }
 
     /// Pop the next runnable request for `worker` (high before normal
-    /// before low, FIFO within a class), answering and skipping queued
-    /// requests whose deadline already expired.
+    /// before low, FIFO within a class, restricted to the worker's
+    /// family), answering and removing queued requests whose deadline
+    /// already expired along the way.
     pub fn next_for(&self, worker: usize) -> Option<QueuedReq> {
+        let fam = self.family_of_worker(worker);
         let now = Instant::now();
         let mut expired: Vec<QueuedReq> = Vec::new();
         let picked = {
             let mut st = self.state.lock().unwrap();
             let mut picked = None;
             'scan: for pi in 0..Priority::COUNT {
-                while let Some(q) = st.queues[pi].pop_front() {
-                    st.queued -= 1;
-                    if q.deadline.is_some_and(|d| now >= d) {
+                let mut k = 0;
+                while k < st.queues[pi].len() {
+                    if st.queues[pi][k].deadline.is_some_and(|d| now >= d) {
+                        let q = st.queues[pi].remove(k).unwrap();
+                        st.queued -= 1;
+                        st.queued_by_family[q.family.index()] -= 1;
                         st.live_ids.remove(&q.req.id);
                         expired.push(q);
                         continue;
                     }
-                    st.running.insert(q.req.id, worker);
-                    picked = Some(q);
-                    break 'scan;
+                    if st.queues[pi][k].family == fam {
+                        let q = st.queues[pi].remove(k).unwrap();
+                        st.queued -= 1;
+                        st.queued_by_family[fam.index()] -= 1;
+                        st.running.insert(q.req.id, worker);
+                        picked = Some(q);
+                        break 'scan;
+                    }
+                    k += 1;
                 }
             }
             picked
@@ -343,6 +433,7 @@ impl Scheduler {
             }
             st.queued -= expired.len();
             for q in &expired {
+                st.queued_by_family[q.family.index()] -= 1;
                 st.live_ids.remove(&q.req.id);
             }
             expired
@@ -372,6 +463,7 @@ impl Scheduler {
                 }
             }
             if let Some(q) = &victim {
+                st.queued_by_family[q.family.index()] -= 1;
                 st.live_ids.remove(&q.req.id);
                 (CancelOutcome::Queued, victim)
             } else if st.running.contains_key(&id) {
@@ -402,13 +494,16 @@ impl Scheduler {
         st.live_ids.remove(&id);
     }
 
-    /// Block until work is queued (`Work`) or the engine is shut down
-    /// with a drained queue (`Exit`).  Only fully-idle workers wait here;
-    /// busy workers are driven by their own step loop.
-    pub fn wait_for_work(&self) -> IdleWait {
+    /// Block until work this worker's family can serve is queued
+    /// (`Work`) or the engine is shut down with a drained queue
+    /// (`Exit`).  Only fully-idle workers wait here; busy workers are
+    /// driven by their own step loop.  The predicate is per-family so a
+    /// worker never busy-wakes on work only another kernel can serve.
+    pub fn wait_for_work(&self, worker: usize) -> IdleWait {
+        let fam = self.family_of_worker(worker);
         let mut st = self.state.lock().unwrap();
         loop {
-            if st.queued > 0 {
+            if st.queued_by_family[fam.index()] > 0 {
                 return IdleWait::Work;
             }
             if st.shutdown {
@@ -427,13 +522,17 @@ impl Scheduler {
     /// `worker` exited (normally, on error, or by panic).  Its running
     /// state is purged — a panic skips the per-request `finish()` calls,
     /// and stale entries would reject future reuse of those ids as
-    /// duplicates forever.  When the last worker goes with requests
-    /// still queued, fail them over to `Unavailable` so submitters
-    /// never block on a queue nobody will drain.
+    /// duplicates forever.  When the last worker of a *family* goes
+    /// with that family's requests still queued, they fail over to
+    /// `Unavailable` so submitters never block on work nobody will
+    /// drain (other families' shards keep serving their own queues).
     pub fn worker_down(&self, worker: usize) {
+        let fam = self.family_of_worker(worker);
         let orphans = {
             let mut st = self.state.lock().unwrap();
             st.workers_live = st.workers_live.saturating_sub(1);
+            let fi = fam.index();
+            st.family_live[fi] = st.family_live[fi].saturating_sub(1);
             let dead: Vec<u64> = st
                 .running
                 .iter()
@@ -444,13 +543,20 @@ impl Scheduler {
                 st.cancel_flags.remove(&id);
                 st.live_ids.remove(&id);
             }
-            if st.workers_live == 0 {
-                let drained: Vec<QueuedReq> = st
-                    .queues
-                    .iter_mut()
-                    .flat_map(std::mem::take)
-                    .collect();
-                st.queued = 0;
+            if st.family_live[fi] == 0 {
+                let mut drained = Vec::new();
+                for q in st.queues.iter_mut() {
+                    let mut k = 0;
+                    while k < q.len() {
+                        if q[k].family == fam {
+                            drained.push(q.remove(k).unwrap());
+                        } else {
+                            k += 1;
+                        }
+                    }
+                }
+                st.queued -= drained.len();
+                st.queued_by_family[fi] = 0;
                 for q in &drained {
                     st.live_ids.remove(&q.req.id);
                 }
@@ -488,9 +594,13 @@ mod tests {
         mpsc::channel()
     }
 
+    fn sched(queue_cap: usize, workers: usize) -> Scheduler {
+        Scheduler::new(queue_cap, vec![Family::Ddlm; workers])
+    }
+
     #[test]
     fn bounded_queue_rejects_overloaded() {
-        let s = Scheduler::new(2, 1);
+        let s = sched(2, 1);
         for id in 0..2 {
             let (tx, _rx) = chan();
             assert!(s.submit(req(id, 10), tx).is_ok());
@@ -505,8 +615,41 @@ mod tests {
     }
 
     #[test]
+    fn class_bound_rejects_full_class_without_starving_others() {
+        // global cap is roomy; the low class alone is capped at 1
+        let s = sched(16, 1).with_class_caps([usize::MAX, usize::MAX, 1]);
+        let mut low = req(1, 10);
+        low.priority = Priority::Low;
+        let (tx, _rx) = chan();
+        assert!(s.submit(low, tx).is_ok());
+        // the low class is full: typed overload, no reply traffic
+        let mut low2 = req(2, 10);
+        low2.priority = Priority::Low;
+        let (tx2, rx2) = chan();
+        assert_eq!(s.submit(low2, tx2), Err(ServeError::Overloaded));
+        assert!(rx2.try_recv().is_err());
+        assert_eq!(s.metrics.lock().unwrap().rejected_overloaded, 1);
+        // ...but normal and high traffic still admits
+        for (id, prio) in [(3, Priority::Normal), (4, Priority::High)] {
+            let mut r = req(id, 10);
+            r.priority = prio;
+            let (tx, _rx) = chan();
+            assert!(s.submit(r, tx).is_ok(), "{prio:?} starved");
+        }
+        assert_eq!(s.queue_depth(), 3);
+        // draining the low class frees its slot again
+        assert_eq!(s.next_for(0).unwrap().req.id, 4);
+        assert_eq!(s.next_for(0).unwrap().req.id, 3);
+        assert_eq!(s.next_for(0).unwrap().req.id, 1);
+        let mut low3 = req(5, 10);
+        low3.priority = Priority::Low;
+        let (tx3, _rx3) = chan();
+        assert!(s.submit(low3, tx3).is_ok());
+    }
+
+    #[test]
     fn preflight_resolves_without_consuming_queue() {
-        let s = Scheduler::new(1, 1);
+        let s = sched(1, 1);
         let (tx, rx) = chan();
         let mut r = req(7, 25);
         r.policy = parse_policy("fixed:0").unwrap();
@@ -515,6 +658,8 @@ mod tests {
         assert_eq!(resp.id, 7);
         assert_eq!(resp.steps_executed, 0);
         assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
+        // the immediate path resolves the family too
+        assert_eq!(resp.family, Some(Family::Ddlm));
         assert_eq!(s.queue_depth(), 0);
         let m = s.metrics.lock().unwrap();
         assert_eq!(m.requests_completed, 1);
@@ -527,7 +672,7 @@ mod tests {
 
     #[test]
     fn workers_drain_priority_classes_in_order() {
-        let s = Scheduler::new(16, 1);
+        let s = sched(16, 1);
         for (id, prio) in
             [(1, Priority::Low), (2, Priority::Normal), (3, Priority::High)]
         {
@@ -544,8 +689,84 @@ mod tests {
     }
 
     #[test]
+    fn requests_route_only_to_matching_family_workers() {
+        // worker 0 = ddlm, worker 1 = ssd
+        let s = Scheduler::new(16, vec![Family::Ddlm, Family::Ssd]);
+        for (id, fam) in [
+            (1, Family::Ddlm),
+            (2, Family::Ssd),
+            (3, Family::Ddlm),
+            (4, Family::Ssd),
+        ] {
+            let mut r = req(id, 10);
+            r.family = Some(fam);
+            let (tx, _rx) = chan();
+            s.submit(r, tx).unwrap();
+        }
+        // the ssd worker only ever sees ssd requests, FIFO among them,
+        // and skipping the ddlm head does not disturb ddlm's order
+        assert_eq!(s.next_for(1).unwrap().req.id, 2);
+        assert_eq!(s.next_for(0).unwrap().req.id, 1);
+        assert_eq!(s.next_for(1).unwrap().req.id, 4);
+        assert_eq!(s.next_for(0).unwrap().req.id, 3);
+        assert!(s.next_for(0).is_none());
+        assert!(s.next_for(1).is_none());
+    }
+
+    #[test]
+    fn family_defaults_to_fleet_default_at_admission() {
+        let s = Scheduler::new(8, vec![Family::Ssd]);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 10), tx).unwrap(); // no family named
+        let q = s.next_for(0).unwrap();
+        assert_eq!(q.family, Family::Ssd);
+    }
+
+    #[test]
+    fn unserved_family_rejected_with_invalid_request() {
+        let s = Scheduler::new(8, vec![Family::Ddlm]);
+        let (tx, rx) = chan();
+        let mut r = req(1, 10);
+        r.family = Some(Family::Plaid);
+        assert_eq!(s.submit(r, tx), Err(ServeError::InvalidRequest));
+        assert!(rx.try_recv().is_err());
+        assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 1);
+        // even preflight-resolvable requests don't sneak through
+        let (tx2, _rx2) = chan();
+        let mut pre = req(2, 10);
+        pre.family = Some(Family::Plaid);
+        pre.policy = parse_policy("fixed:0").unwrap();
+        assert_eq!(s.submit(pre, tx2), Err(ServeError::InvalidRequest));
+    }
+
+    #[test]
+    fn last_family_worker_down_fails_only_that_familys_queue() {
+        // two families; the ddlm shard dies with work queued for both
+        let s = Scheduler::new(8, vec![Family::Ddlm, Family::Ssd]);
+        let (tx_d, rx_d) = chan();
+        s.submit(req(1, 10), tx_d).unwrap(); // defaults to ddlm
+        let (tx_s, rx_s) = chan();
+        let mut rs = req(2, 10);
+        rs.family = Some(Family::Ssd);
+        s.submit(rs, tx_s).unwrap();
+        s.worker_down(0);
+        // the ddlm request failed over; the ssd one still waits
+        assert_eq!(rx_d.recv().unwrap().unwrap_err(), ServeError::Unavailable);
+        assert!(rx_s.try_recv().is_err());
+        assert_eq!(s.queue_depth(), 1);
+        // new ddlm submits reject as unserveable; ssd still admits
+        let (tx3, _rx3) = chan();
+        assert_eq!(s.submit(req(3, 10), tx3), Err(ServeError::InvalidRequest));
+        let (tx4, _rx4) = chan();
+        let mut r4 = req(4, 10);
+        r4.family = Some(Family::Ssd);
+        assert!(s.submit(r4, tx4).is_ok());
+        assert_eq!(s.next_for(1).unwrap().req.id, 2);
+    }
+
+    #[test]
     fn cancel_queued_request_replies_and_counts() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, rx) = chan();
         s.submit(req(11, 10), tx).unwrap();
         assert_eq!(s.cancel(11), CancelOutcome::Queued);
@@ -558,7 +779,7 @@ mod tests {
 
     #[test]
     fn cancel_running_request_flags_owning_worker() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, _rx) = chan();
         s.submit(req(21, 10), tx).unwrap();
         let q = s.next_for(0).unwrap();
@@ -574,7 +795,7 @@ mod tests {
 
     #[test]
     fn queued_deadline_expiry_is_answered_at_pop() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, rx) = chan();
         let mut r = req(31, 10);
         r.deadline_ms = Some(0.0); // expires immediately
@@ -590,7 +811,7 @@ mod tests {
     fn reap_expired_answers_queued_deadlines_without_a_pop() {
         // a busy fleet never pops, but the per-step reap sweep must
         // still answer expired queued requests
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, rx) = chan();
         let mut dead = req(41, 10);
         dead.deadline_ms = Some(0.0);
@@ -606,7 +827,7 @@ mod tests {
 
     #[test]
     fn expired_request_does_not_shadow_runnable_ones() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, rx) = chan();
         let mut dead = req(1, 10);
         dead.deadline_ms = Some(0.0);
@@ -620,7 +841,7 @@ mod tests {
 
     #[test]
     fn shutdown_rejects_new_work_and_wakes_idle_workers() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         s.shutdown();
         let (tx, _rx) = chan();
         assert_eq!(s.submit(req(1, 10), tx), Err(ServeError::Overloaded));
@@ -629,24 +850,43 @@ mod tests {
         let mut pre = req(2, 10);
         pre.policy = parse_policy("fixed:0").unwrap();
         assert_eq!(s.submit(pre, tx2), Err(ServeError::Overloaded));
-        assert_eq!(s.wait_for_work(), IdleWait::Exit);
+        assert_eq!(s.wait_for_work(0), IdleWait::Exit);
     }
 
     #[test]
     fn shutdown_drains_queued_work_before_exit() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, _rx) = chan();
         s.submit(req(1, 10), tx).unwrap();
         s.shutdown();
         // queued work still wins over exit, so shutdown drains
-        assert_eq!(s.wait_for_work(), IdleWait::Work);
+        assert_eq!(s.wait_for_work(0), IdleWait::Work);
         assert!(s.next_for(0).is_some());
-        assert_eq!(s.wait_for_work(), IdleWait::Exit);
+        assert_eq!(s.wait_for_work(0), IdleWait::Exit);
+    }
+
+    #[test]
+    fn idle_wait_ignores_other_families_work() {
+        // ssd work queued; the ddlm worker's idle predicate must stay
+        // false (no busy wake), and shutdown still exits it
+        let s = Scheduler::new(8, vec![Family::Ddlm, Family::Ssd]);
+        let (tx, _rx) = chan();
+        let mut r = req(1, 10);
+        r.family = Some(Family::Ssd);
+        s.submit(r, tx).unwrap();
+        assert_eq!(s.wait_for_work(1), IdleWait::Work);
+        s.shutdown();
+        // worker 0 (ddlm) sees no ddlm work → exits instead of spinning
+        assert_eq!(s.wait_for_work(0), IdleWait::Exit);
+        // worker 1 still drains its family first
+        assert_eq!(s.wait_for_work(1), IdleWait::Work);
+        assert_eq!(s.next_for(1).unwrap().req.id, 1);
+        assert_eq!(s.wait_for_work(1), IdleWait::Exit);
     }
 
     #[test]
     fn duplicate_inflight_id_rejected_until_finished() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, _rx) = chan();
         s.submit(req(5, 10), tx).unwrap();
         // duplicate while queued
@@ -665,7 +905,7 @@ mod tests {
 
     #[test]
     fn immediate_requests_do_not_bypass_duplicate_check() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, _rx) = chan();
         s.submit(req(4, 10), tx).unwrap();
         // while id 4 is live, a zero-step resubmission must reject —
@@ -682,7 +922,7 @@ mod tests {
 
     #[test]
     fn cancelled_queued_id_is_reusable() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, _rx) = chan();
         s.submit(req(6, 10), tx).unwrap();
         assert_eq!(s.cancel(6), CancelOutcome::Queued);
@@ -692,7 +932,7 @@ mod tests {
 
     #[test]
     fn overlong_prefix_rejected_at_admission() {
-        let s = Scheduler::new(8, 1).with_max_prefix(4);
+        let s = sched(8, 1).with_max_prefix(4);
         let (tx, rx) = chan();
         let mut r = req(1, 10);
         r.prefix = vec![0; 5];
@@ -712,7 +952,7 @@ mod tests {
     fn zero_step_budget_answered_at_admission() {
         // steps:0 with a non-preflight policy must not occupy a slot or
         // execute a device step: it is answered as exhausted right here
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, rx) = chan();
         s.submit(req(3, 0), tx).unwrap();
         let resp = rx.recv().unwrap().unwrap();
@@ -731,7 +971,7 @@ mod tests {
     fn worker_down_purges_its_running_state() {
         // two workers; worker 0 dies (e.g. panic) while owning a
         // request — the id must become reusable and the fleet stays up
-        let s = Scheduler::new(8, 2);
+        let s = sched(8, 2);
         let (tx, _rx) = chan();
         s.submit(req(9, 10), tx).unwrap();
         assert_eq!(s.next_for(0).unwrap().req.id, 9);
@@ -748,7 +988,7 @@ mod tests {
 
     #[test]
     fn last_worker_down_fails_queue_to_unavailable() {
-        let s = Scheduler::new(8, 1);
+        let s = sched(8, 1);
         let (tx, rx) = chan();
         s.submit(req(5, 10), tx).unwrap();
         s.worker_down(0);

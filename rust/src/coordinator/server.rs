@@ -5,10 +5,13 @@
 //!
 //!   request  : GenRequest JSON (see `request.rs`) —
 //!              `{"id":1,"steps":200,"criterion":"entropy:0.25",
-//!                "priority":"high","deadline_ms":2500}`.
+//!                "priority":"high","deadline_ms":2500,"family":"ssd"}`.
 //!              `priority` ("high"|"normal"|"low", default normal) picks
 //!              the admission class; `deadline_ms` (optional) bounds the
-//!              request's total wall-clock time.
+//!              request's total wall-clock time; `family` (optional:
+//!              "ddlm"|"ssd"|"plaid", default = the fleet's default
+//!              family) routes to a worker shard of that model family —
+//!              responses echo the serving family.
 //!   control  : `{"cmd":"metrics"}` — merged fleet metrics snapshot
 //!              `{"cmd":"cancel","id":7}` — cancel a queued or running
 //!              request; replies `{"id":7,"cancelled":true,
@@ -19,9 +22,10 @@
 //!                "duplicate_id"}`, or
 //!              `{"error":"parse: ..."}` for malformed lines.
 //!              `invalid_request` rejects a prefix longer than the
-//!              fleet's compiled seq_len; `duplicate_id` rejects an id
-//!              that is already queued or running (ids route
-//!              cancellation, so they must be unique while in flight).
+//!              fleet's compiled seq_len or a `family` no live worker
+//!              serves; `duplicate_id` rejects an id that is already
+//!              queued or running (ids route cancellation, so they must
+//!              be unique while in flight).
 //!
 //! The request's `criterion` field carries a halting-policy spec string
 //! (`"entropy:0.25"`, `"any(entropy:0.25,patience:20:0)"`, ... — see the

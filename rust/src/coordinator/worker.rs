@@ -3,12 +3,13 @@
 //!
 //! The xla handles are not `Send`, so each worker constructs its own
 //! `Runtime` and compiles its own step artifact.  Workers may bind
-//! *different* compiled batch sizes of the same family: a `batch=1`
-//! worker turns individual requests around quickly (latency shard) while
-//! a `batch=8` worker soaks throughput traffic — the scheduler's
-//! priority classes decide what every worker picks up next (high before
-//! normal before low), so pairing high-priority traffic with a
-//! small-batch shard gives latency isolation without a separate fleet.
+//! different compiled batch sizes *and different model families*: a
+//! `(Ddlm, 1)` worker turns individual ddlm requests around quickly
+//! (latency shard) while a `(Ssd, 8)` worker soaks ssd throughput
+//! traffic — the scheduler routes each request to a worker of its
+//! family and its priority classes decide what every worker picks up
+//! next (high before normal before low), so one fleet serves a
+//! heterogeneous model mix without separate deployments.
 //!
 //! Per loop iteration a worker: admits queued requests into free slots
 //! (continuous batching — slots freed by an early halt are refilled
@@ -150,28 +151,24 @@ fn step_loop(
 ) -> Result<()> {
     let batch = session.batch;
     loop {
-        // 0) fully idle: sleep until work arrives or shutdown drains us
+        // 0) fully idle: sleep until work our family can serve arrives
+        //    or shutdown drains us
         if running.iter().all(Option::is_none) {
-            match sched.wait_for_work() {
+            match sched.wait_for_work(cfg.id) {
                 IdleWait::Work => {}
                 IdleWait::Exit => break,
             }
         }
 
         // 1) admit queued requests into free slots (continuous
-        //    batching); requests this session can't hold are rejected
+        //    batching; the scheduler only hands us our own family's
+        //    requests).  Requests this session can't hold are rejected
         //    with a typed error, never a panic — admission normally
         //    filters them, but the scheduler may not know our seq_len
         //    (manifest read failed) and must not be trusted with it
         'admit: for slot in 0..batch {
             while running[slot].is_none() {
                 let Some(q) = sched.next_for(cfg.id) else { break 'admit };
-                if q.req.prefix.len() > session.seq_len {
-                    sched.finish(q.req.id);
-                    metrics.lock().unwrap().rejected_invalid += 1;
-                    let _ = q.reply.send(Err(ServeError::InvalidRequest));
-                    continue;
-                }
                 // park the request in its slot BEFORE running any
                 // extensible policy code (clone/reset) or session
                 // setup: if one of those panics, the catch_unwind
@@ -186,7 +183,7 @@ fn step_loop(
                 let mut policy = r.q.req.policy.clone();
                 policy.reset();
                 r.policy = policy;
-                session.reset_slot(
+                let reset = session.reset_slot(
                     slot,
                     &SlotRequest::new(
                         r.q.req.seed,
@@ -197,6 +194,22 @@ fn step_loop(
                     .noise(r.q.req.noise_scale)
                     .prefix(&r.q.req.prefix),
                 );
+                if let Err(e) = reset {
+                    // typed backstop (overlong prefix / zero-step
+                    // budget the scheduler should have filtered): the
+                    // reset validated-then-left the slot untouched, so
+                    // just answer and move on
+                    let r = running[slot].take().unwrap();
+                    log_info!(
+                        "worker {} rejected request {}: {e}",
+                        cfg.id,
+                        r.q.req.id
+                    );
+                    sched.finish(r.q.req.id);
+                    metrics.lock().unwrap().rejected_invalid += 1;
+                    let _ = r.q.reply.send(Err(ServeError::InvalidRequest));
+                    continue;
+                }
             }
         }
 
@@ -224,8 +237,13 @@ fn step_loop(
                         ServeError::Cancelled => wm.cancelled += 1,
                         _ => wm.deadline_exceeded += 1,
                     }
-                    // steps burned before the abort still count
-                    wm.steps_executed += session.slots[slot].step as u64;
+                    // steps burned before the abort still count — in
+                    // the family lane too, so per-family steps
+                    // reconcile with the fleet total
+                    wm.record_aborted_steps(
+                        cfg.family,
+                        session.slots[slot].step as u64,
+                    );
                 }
                 session.release_slot(slot);
                 let _ = r.q.reply.send(Err(err));
@@ -273,13 +291,15 @@ fn step_loop(
                         latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
                         queue_ms: (r.started - r.q.submitted).as_secs_f64()
                             * 1e3,
+                        family: Some(cfg.family),
                         final_stats: st,
                     };
                     sched.finish(resp.id);
-                    metrics
-                        .lock()
-                        .unwrap()
-                        .record_completion(&resp, r.q.req.priority);
+                    metrics.lock().unwrap().record_completion(
+                        &resp,
+                        r.q.req.priority,
+                        cfg.family,
+                    );
                     let _ = r.q.reply.send(Ok(resp));
                     session.release_slot(slot);
                 }

@@ -148,7 +148,7 @@ pub fn record_run(
                 )
                 .noise(opts.noise_scale)
                 .prefix(prefix),
-            );
+            )?;
         }
         // idle out unused slots in the tail group
         for slot in group.len()..batch {

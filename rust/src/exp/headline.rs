@@ -38,11 +38,8 @@ fn serve_stream(
     n_steps: usize,
 ) -> Result<ServeResult> {
     let mut cfg = EngineConfig::new(&ctx.artifact_dir, family);
-    cfg.worker_batches = vec![8];
-    let ckpt = format!("{}/{}.pbin", ctx.runs_dir, family.name());
-    if std::path::Path::new(&ckpt).exists() {
-        cfg.checkpoint = Some(ckpt);
-    }
+    cfg.worker_specs = vec![(family, 8)];
+    cfg.discover_checkpoints(&ctx.runs_dir);
     let (engine, join) = start(cfg);
 
     let ds = ctx.dataset();

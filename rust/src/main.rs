@@ -50,26 +50,38 @@ fn main() {
 }
 
 fn print_help() {
+    // the family list is derived from the kernel registry, so new
+    // pluggable kernels show up here without a hand-edited string
+    let fams = Family::all()
+        .iter()
+        .map(|f| f.name())
+        .collect::<Vec<_>>()
+        .join("|");
     println!(
         "repro — early-halting diffusion-LM serving & training stack\n\
          \n\
          USAGE: repro <cmd> [--artifacts DIR] [--runs DIR] [options]\n\
          \n\
-         prepare  --steps N (default 1200)      train ar+ddlm+ssd+plaid,\n\
-         \u{20}                                 save runs/<fam>.pbin and\n\
+         prepare  --steps N (default 1200)      train ar + every DLM\n\
+         \u{20}                                 family ({fams}), save\n\
+         \u{20}                                 runs/<fam>.pbin and\n\
          \u{20}                                 ddlm_ck<k>.pbin checkpoints\n\
-         train    --family ddlm|ssd|plaid|ar --steps N [--masking m]\n\
+         train    --family {fams}|ar --steps N [--masking m]\n\
          \u{20}        [--tmax T] [--no-tw] [--out ckpt.pbin]\n\
          gen      --family F [--steps N] [--criterion SPEC] [--n 4]\n\
          \u{20}        [--prefix-len 32] [--noise 1.0]\n\
          serve    --family F [--addr 127.0.0.1:7411] [--batch 8]\n\
          \u{20}        [--workers 1] [--queue-depth 256]\n\
-         \u{20}        (N workers, each owning one compiled batch-B\n\
-         \u{20}        session; bounded admission queue rejects with a\n\
-         \u{20}        typed 'overloaded' error; wire supports priority,\n\
-         \u{20}        deadline_ms and {{\"cmd\":\"cancel\",\"id\":..}})\n\
+         \u{20}        [--fleet fam:batch,fam:batch,...]\n\
+         \u{20}        (one worker per fleet entry — mixed families are\n\
+         \u{20}        routed per request; without --fleet, N identical\n\
+         \u{20}        workers of --family; bounded admission queue\n\
+         \u{20}        rejects with a typed 'overloaded' error; wire\n\
+         \u{20}        supports priority, deadline_ms, family and\n\
+         \u{20}        {{\"cmd\":\"cancel\",\"id\":..}})\n\
          client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
          \u{20}        [--priority high|normal|low] [--deadline-ms MS]\n\
+         \u{20}        [--family {fams}]\n\
          exp      <id>|all  [--quick]   ids: {}\n\
          \n\
          criterion SPEC is the halting-policy DSL: entropy:T, \n\
@@ -211,7 +223,7 @@ fn cmd_gen(args: &Args) -> Result<()> {
                 )
                 .noise(noise)
                 .prefix(&prompts[i][..prefix_len]),
-            );
+            )?;
         }
         for slot in group.len()..batch {
             session.release_slot(slot);
@@ -274,6 +286,31 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--fleet` spec: comma-separated `family[:batch]` entries,
+/// e.g. `ddlm:1,ddlm:8,ssd:8` — one worker shard per entry.
+fn parse_fleet(spec: &str, default_batch: usize) -> Result<Vec<(Family, usize)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').filter(|e| !e.is_empty()) {
+        let (fam_str, batch) = match entry.split_once(':') {
+            Some((f, b)) => (
+                f,
+                b.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("bad batch in --fleet entry {entry:?}")
+                })?,
+            ),
+            None => (entry, default_batch),
+        };
+        let fam = Family::parse(fam_str).ok_or_else(|| {
+            anyhow::anyhow!("bad family in --fleet entry {entry:?}")
+        })?;
+        out.push((fam, batch));
+    }
+    if out.is_empty() {
+        anyhow::bail!("--fleet needs at least one family[:batch] entry");
+    }
+    Ok(out)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let runs = runs_dir(args);
@@ -281,19 +318,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::new(&dir, fam);
     let batch = args.usize_or("batch", 8);
     let workers = args.usize_or("workers", 1).max(1);
-    cfg.worker_batches = vec![batch; workers];
+    cfg.worker_specs = match args.get("fleet") {
+        // heterogeneous fleet: one worker per family[:batch] entry; the
+        // default family (for requests without a `family` field) stays
+        // --family, or the first fleet entry when --family isn't given
+        Some(spec) => {
+            let specs = parse_fleet(spec, batch)?;
+            if args.get("family").is_none() {
+                cfg.default_family = specs[0].0;
+            }
+            // a default family outside the fleet would silently reject
+            // every family-less (pre-multi-family) request — refuse to
+            // start misconfigured
+            if !specs.iter().any(|&(f, _)| f == cfg.default_family) {
+                anyhow::bail!(
+                    "--family {} is not served by --fleet {spec} — \
+                     requests without a family field could never be \
+                     admitted",
+                    cfg.default_family.name()
+                );
+            }
+            specs
+        }
+        None => vec![(fam, batch); workers],
+    };
     cfg.queue_depth = args.usize_or("queue-depth", 256);
-    let ckpt = format!("{runs}/{}.pbin", fam.name());
-    if std::path::Path::new(&ckpt).exists() {
-        cfg.checkpoint = Some(ckpt);
-    }
+    cfg.discover_checkpoints(&runs);
+    let shards = cfg
+        .worker_specs
+        .iter()
+        .map(|(f, b)| format!("{}:b{b}", f.name()))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let default_family = cfg.default_family;
     let (engine, join) = start(cfg);
     let addr = args.get_or("addr", "127.0.0.1:7411");
     let mut server = Server::start(addr, engine)?;
     println!(
-        "serving {} on {} ({workers} worker(s) x batch {batch})",
-        fam.name(),
-        server.addr
+        "serving [{shards}] on {} (default family {})",
+        server.addr,
+        default_family.name()
     );
     let res = join.join().unwrap().context("engine");
     server.stop();
@@ -312,6 +376,15 @@ fn cmd_client(args: &Args) -> Result<()> {
             .map_err(|_| anyhow::anyhow!("bad --deadline-ms"))
     });
     let deadline_ms = deadline_ms.transpose()?;
+    // optional family routing (heterogeneous fleets); omitted = the
+    // server's default family
+    let family = match args.get("family") {
+        Some(f) => Some(
+            Family::parse(f)
+                .ok_or_else(|| anyhow::anyhow!("bad --family {f}"))?,
+        ),
+        None => None,
+    };
     let mut client = Client::connect(addr)?;
     let t0 = std::time::Instant::now();
     let mut total_steps = 0usize;
@@ -321,6 +394,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad --criterion"))?;
         req.priority = priority;
         req.deadline_ms = deadline_ms;
+        req.family = family;
         let resp = client.generate(&req)?;
         total_steps += resp.steps_executed;
         println!(

@@ -1,0 +1,498 @@
+//! Family-polymorphic sampler kernels.
+//!
+//! Everything the generation plumbing used to branch on per family —
+//! state-row width (`L*D` embedding space vs `L*V` simplex logit
+//! space), initial-state synthesis, timestamp-schedule construction
+//! (geometric VE vs linear-tau VP), step-input packing and step-output
+//! parsing — lives behind the [`FamilyKernel`] trait.  `Session` and
+//! `Schedule` are family-agnostic plumbing over a kernel; the three
+//! paper families ([`DdlmKernel`], [`SsdKernel`], [`PlaidKernel`]) are
+//! the built-in implementations, and a heterogeneous serving fleet can
+//! mix workers of different kernels behind one scheduler.
+
+use crate::halting::StepStats;
+use crate::util::prng::Prng;
+
+/// Which diffusion parameterisation a family samples under.
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Family {
+    /// variance-exploding PF-ODE (CDCD / the paper's DDLM), Euler sampler
+    Ddlm,
+    /// variance-preserving simplex diffusion, "Simplex" sampler
+    Ssd,
+    /// variance-preserving embedding diffusion, DDPM ancestral sampler
+    Plaid,
+}
+
+impl Family {
+    pub const COUNT: usize = 3;
+
+    /// The family's sampler kernel — the single dispatch point from the
+    /// closed enum into the open trait surface.
+    pub fn kernel(self) -> &'static dyn FamilyKernel {
+        match self {
+            Family::Ddlm => &DdlmKernel,
+            Family::Ssd => &SsdKernel,
+            Family::Plaid => &PlaidKernel,
+        }
+    }
+
+    /// Dense index for per-family tables (0..COUNT).
+    pub fn index(self) -> usize {
+        match self {
+            Family::Ddlm => 0,
+            Family::Ssd => 1,
+            Family::Plaid => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.kernel().name()
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        Family::all().into_iter().find(|f| f.name() == s)
+    }
+
+    pub fn all() -> [Family; Family::COUNT] {
+        [Family::Ddlm, Family::Ssd, Family::Plaid]
+    }
+}
+
+/// Per-slot scalar outputs of one device step, viewed batch-wide.  The
+/// session downloads these once per step; the kernel turns slot `i`'s
+/// scalars into the [`StepStats`] the halting policies observe.
+pub struct StepOutputs<'a> {
+    pub entropy: &'a [f32],
+    pub kl: &'a [f32],
+    pub switches: &'a [f32],
+    pub norm_x0: &'a [f32],
+    pub norm_x: &'a [f32],
+}
+
+/// One family's generation workflow: everything the family-agnostic
+/// `Session`/`Schedule` plumbing must ask a family about.
+pub trait FamilyKernel: Send + Sync {
+    /// The enum tag this kernel implements.
+    fn family(&self) -> Family;
+
+    /// Canonical lowercase name (artifact prefix, wire value, metrics
+    /// suffix).
+    fn name(&self) -> &'static str;
+
+    /// Diffusion-state row width per slot: `L*D` for embedding-space
+    /// families, `L*V` for simplex logit space.
+    fn state_row(&self, seq_len: usize, vocab: usize, d_model: usize)
+        -> usize;
+
+    /// Timestamp array for `n_steps` generation steps (length
+    /// `n_steps + 1`; index i is fed as `t_cur` at step i, index
+    /// `n_steps` is the terminal time).  `n_steps >= 1` is guaranteed
+    /// by `Schedule::new`.
+    fn times(&self, n_steps: usize, t_max: f32, t_min: f32) -> Vec<f32>;
+
+    /// Initial state scale, given the schedule's timestamp array
+    /// (multiplied by the caller's noise-scale knob, paper Fig 3 /
+    /// Table 1).
+    fn init_sigma(&self, times: &[f32]) -> f32;
+
+    /// Synthesize the initial diffusion state into one slot row.
+    fn init_state(
+        &self,
+        x: &mut [f32],
+        sigma: f32,
+        simplex_k: f32,
+        rng: &mut Prng,
+    );
+
+    /// Name of the per-step time input tensor in the step artifact.
+    fn time_input(&self) -> &'static str;
+
+    /// Whether the step artifact consumes a fresh gaussian noise tensor
+    /// `z` every step (stochastic samplers).
+    fn needs_z(&self) -> bool;
+
+    /// Neutral, numerically-safe `(t_cur, t_next)` for idle batch slots
+    /// (their outputs are ignored).
+    fn idle_times(&self) -> (f32, f32);
+
+    /// Device shape of the state tensor for a batch.
+    fn x_shape(
+        &self,
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+        d_model: usize,
+    ) -> [usize; 3] {
+        let row = self.state_row(seq_len, vocab, d_model);
+        [batch, seq_len, row / seq_len]
+    }
+
+    /// Overwrite one prefix position with its clean representation —
+    /// replacement conditioning.  `dst` is that position's slice of the
+    /// state row; `emb_row` is the (normalised) embedding row of `tok`.
+    fn clamp_token(
+        &self,
+        dst: &mut [f32],
+        tok: usize,
+        emb_row: &[f32],
+        simplex_k: f32,
+    );
+
+    /// Parse slot `i`'s step outputs into the stats the halting
+    /// policies observe.  The default reads the shared per-slot scalar
+    /// outputs; a kernel with extra signals may override.
+    fn parse_stats(&self, slot: usize, out: &StepOutputs<'_>) -> StepStats {
+        StepStats {
+            entropy: out.entropy[slot],
+            kl: out.kl[slot],
+            switches: out.switches[slot],
+            norm_x0: out.norm_x0[slot],
+            norm_x: out.norm_x[slot],
+        }
+    }
+}
+
+/// Variance-exploding PF-ODE over normalised embeddings (CDCD / the
+/// paper's DDLM): geometric (Karras-style) schedule from `t_max` down
+/// to `t_min`, deterministic Euler steps, `X(t_max) ~ N(0, t_max^2 I)`.
+pub struct DdlmKernel;
+
+impl FamilyKernel for DdlmKernel {
+    fn family(&self) -> Family {
+        Family::Ddlm
+    }
+
+    fn name(&self) -> &'static str {
+        "ddlm"
+    }
+
+    fn state_row(
+        &self,
+        seq_len: usize,
+        _vocab: usize,
+        d_model: usize,
+    ) -> usize {
+        seq_len * d_model
+    }
+
+    fn times(&self, n_steps: usize, t_max: f32, t_min: f32) -> Vec<f32> {
+        // geometric (log-uniform) from t_max down to t_min
+        let ratio = (t_min / t_max).max(1e-6) as f64;
+        (0..=n_steps)
+            .map(|i| {
+                let f = i as f64 / n_steps as f64;
+                (t_max as f64 * ratio.powf(f)) as f32
+            })
+            .collect()
+    }
+
+    fn init_sigma(&self, times: &[f32]) -> f32 {
+        // X(t_max) ~ N(0, t_max^2 I)
+        times[0]
+    }
+
+    fn init_state(
+        &self,
+        x: &mut [f32],
+        sigma: f32,
+        _simplex_k: f32,
+        rng: &mut Prng,
+    ) {
+        for xi in x.iter_mut() {
+            *xi = sigma * rng.gaussian() as f32;
+        }
+    }
+
+    fn time_input(&self) -> &'static str {
+        "t2"
+    }
+
+    fn needs_z(&self) -> bool {
+        false
+    }
+
+    fn idle_times(&self) -> (f32, f32) {
+        (1.0, 1.0)
+    }
+
+    fn clamp_token(
+        &self,
+        dst: &mut [f32],
+        _tok: usize,
+        emb_row: &[f32],
+        _simplex_k: f32,
+    ) {
+        dst.copy_from_slice(emb_row);
+    }
+}
+
+/// Variance-preserving simplex diffusion ("Simplex" sampler): linear
+/// tau schedule, `L*V` logit-space state initialised at `K * z`, fresh
+/// noise every step.
+pub struct SsdKernel;
+
+/// Linear tau in `[tau0, 1]`; `tau0 > 0` keeps `abar_cur` strictly
+/// inside `(0, 1)` for the DDPM coefficients.
+fn vp_times(n_steps: usize) -> Vec<f32> {
+    let tau0 = 1e-3;
+    (0..=n_steps)
+        .map(|i| tau0 + (1.0 - tau0) * (i as f32 / n_steps as f32))
+        .collect()
+}
+
+impl FamilyKernel for SsdKernel {
+    fn family(&self) -> Family {
+        Family::Ssd
+    }
+
+    fn name(&self) -> &'static str {
+        "ssd"
+    }
+
+    fn state_row(
+        &self,
+        seq_len: usize,
+        vocab: usize,
+        _d_model: usize,
+    ) -> usize {
+        seq_len * vocab
+    }
+
+    fn times(&self, n_steps: usize, _t_max: f32, _t_min: f32) -> Vec<f32> {
+        vp_times(n_steps)
+    }
+
+    fn init_sigma(&self, _times: &[f32]) -> f32 {
+        // simplex logit space: K * sqrt(1 - abar(tau0)) ~ K
+        1.0
+    }
+
+    fn init_state(
+        &self,
+        x: &mut [f32],
+        sigma: f32,
+        simplex_k: f32,
+        rng: &mut Prng,
+    ) {
+        // logit-space init: x = K * z at max noise (abar ~ 0)
+        for xi in x.iter_mut() {
+            *xi = simplex_k * sigma * rng.gaussian() as f32;
+        }
+    }
+
+    fn time_input(&self) -> &'static str {
+        "tau2"
+    }
+
+    fn needs_z(&self) -> bool {
+        true
+    }
+
+    fn idle_times(&self) -> (f32, f32) {
+        (0.5, 0.5)
+    }
+
+    fn clamp_token(
+        &self,
+        dst: &mut [f32],
+        tok: usize,
+        _emb_row: &[f32],
+        simplex_k: f32,
+    ) {
+        for (j, xj) in dst.iter_mut().enumerate() {
+            *xj = if j == tok { simplex_k } else { -simplex_k };
+        }
+    }
+}
+
+/// Variance-preserving embedding diffusion (Plaid), DDPM ancestral
+/// sampler: linear tau schedule, unit-gaussian `L*D` init, fresh noise
+/// every step.
+pub struct PlaidKernel;
+
+impl FamilyKernel for PlaidKernel {
+    fn family(&self) -> Family {
+        Family::Plaid
+    }
+
+    fn name(&self) -> &'static str {
+        "plaid"
+    }
+
+    fn state_row(
+        &self,
+        seq_len: usize,
+        _vocab: usize,
+        d_model: usize,
+    ) -> usize {
+        seq_len * d_model
+    }
+
+    fn times(&self, n_steps: usize, _t_max: f32, _t_min: f32) -> Vec<f32> {
+        vp_times(n_steps)
+    }
+
+    fn init_sigma(&self, _times: &[f32]) -> f32 {
+        // VP embedding space: unit gaussian at tau ~ 0
+        1.0
+    }
+
+    fn init_state(
+        &self,
+        x: &mut [f32],
+        sigma: f32,
+        _simplex_k: f32,
+        rng: &mut Prng,
+    ) {
+        for xi in x.iter_mut() {
+            *xi = sigma * rng.gaussian() as f32;
+        }
+    }
+
+    fn time_input(&self) -> &'static str {
+        "tau2"
+    }
+
+    fn needs_z(&self) -> bool {
+        true
+    }
+
+    fn idle_times(&self) -> (f32, f32) {
+        (0.5, 0.5)
+    }
+
+    fn clamp_token(
+        &self,
+        dst: &mut [f32],
+        _tok: usize,
+        emb_row: &[f32],
+        _simplex_k: f32,
+    ) {
+        dst.copy_from_slice(emb_row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_parse_roundtrip_and_index_is_dense() {
+        for (i, f) in Family::all().into_iter().enumerate() {
+            assert_eq!(Family::parse(f.name()), Some(f));
+            assert_eq!(f.index(), i);
+            assert_eq!(f.kernel().family(), f);
+            assert_eq!(f.kernel().name(), f.name());
+        }
+        assert_eq!(Family::parse("gpt"), None);
+        assert_eq!(Family::all().len(), Family::COUNT);
+    }
+
+    #[test]
+    fn ddlm_times_are_decreasing_geometric() {
+        let k = Family::Ddlm.kernel();
+        let t = k.times(100, 10.0, 0.05);
+        assert_eq!(t.len(), 101);
+        assert!((t[0] - 10.0).abs() < 1e-5);
+        assert!((t[100] - 0.05).abs() < 1e-4);
+        for w in t.windows(2) {
+            assert!(w[1] < w[0], "must decrease");
+        }
+        // geometric: ratio roughly constant
+        let r0 = t[1] / t[0];
+        let r50 = t[51] / t[50];
+        assert!((r0 - r50).abs() < 1e-4);
+        // init sigma tracks the starting time
+        assert!((k.init_sigma(&t) - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn vp_times_are_increasing_to_one() {
+        for fam in [Family::Ssd, Family::Plaid] {
+            let k = fam.kernel();
+            let t = k.times(50, 10.0, 0.05);
+            assert!(t[0] > 0.0 && t[0] < 0.01);
+            assert!((t[50] - 1.0).abs() < 1e-6);
+            for w in t.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+            // VP families start from a unit-scale state
+            assert_eq!(k.init_sigma(&t), 1.0);
+        }
+    }
+
+    #[test]
+    fn state_widths_split_embedding_vs_simplex() {
+        let (l, v, d) = (64, 512, 48);
+        assert_eq!(Family::Ddlm.kernel().state_row(l, v, d), l * d);
+        assert_eq!(Family::Plaid.kernel().state_row(l, v, d), l * d);
+        assert_eq!(Family::Ssd.kernel().state_row(l, v, d), l * v);
+        // x_shape is consistent with the row width
+        for f in Family::all() {
+            let k = f.kernel();
+            let [b, sl, w] = k.x_shape(8, l, v, d);
+            assert_eq!((b, sl), (8, l));
+            assert_eq!(sl * w, k.state_row(l, v, d));
+        }
+    }
+
+    #[test]
+    fn step_input_contract_per_family() {
+        assert_eq!(Family::Ddlm.kernel().time_input(), "t2");
+        assert!(!Family::Ddlm.kernel().needs_z());
+        for fam in [Family::Ssd, Family::Plaid] {
+            assert_eq!(fam.kernel().time_input(), "tau2");
+            assert!(fam.kernel().needs_z());
+        }
+    }
+
+    #[test]
+    fn init_state_scales_per_family() {
+        let mut rng = Prng::new(7);
+        let mut x = vec![0.0f32; 256];
+        let k_simplex = 5.0f32;
+        Family::Ddlm.kernel().init_state(&mut x, 10.0, k_simplex, &mut rng);
+        let rms =
+            (x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32).sqrt();
+        assert!((rms - 10.0).abs() < 2.0, "ddlm rms={rms}");
+        Family::Ssd.kernel().init_state(&mut x, 1.0, k_simplex, &mut rng);
+        let rms =
+            (x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32).sqrt();
+        assert!((rms - k_simplex).abs() < 1.0, "ssd rms={rms}");
+        Family::Plaid.kernel().init_state(&mut x, 1.0, k_simplex, &mut rng);
+        let rms =
+            (x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32).sqrt();
+        assert!((rms - 1.0).abs() < 0.2, "plaid rms={rms}");
+    }
+
+    #[test]
+    fn clamp_token_writes_clean_representation() {
+        let emb_row = [1.0f32, 2.0, 3.0];
+        let mut dst = [0.0f32; 3];
+        Family::Ddlm.kernel().clamp_token(&mut dst, 1, &emb_row, 5.0);
+        assert_eq!(dst, emb_row);
+        let mut logits = [0.0f32; 4];
+        Family::Ssd.kernel().clamp_token(&mut logits, 2, &emb_row, 5.0);
+        assert_eq!(logits, [-5.0, -5.0, 5.0, -5.0]);
+    }
+
+    #[test]
+    fn parse_stats_reads_slot_scalars() {
+        let out = StepOutputs {
+            entropy: &[0.1, 0.2],
+            kl: &[1e-3, 2e-3],
+            switches: &[3.0, 4.0],
+            norm_x0: &[8.0, 9.0],
+            norm_x: &[10.0, 11.0],
+        };
+        for f in Family::all() {
+            let st = f.kernel().parse_stats(1, &out);
+            assert_eq!(st.entropy, 0.2);
+            assert_eq!(st.kl, 2e-3);
+            assert_eq!(st.switches, 4.0);
+            assert_eq!(st.norm_x0, 9.0);
+            assert_eq!(st.norm_x, 11.0);
+        }
+    }
+}

@@ -1,8 +1,17 @@
-//! Generation layer: noise schedules + the batched step-session state
-//! machine the coordinator and the experiment harness both drive.
+//! Generation layer: family-polymorphic sampler kernels, noise
+//! schedules, and the batched step-session state machine the coordinator
+//! and the experiment harness both drive.
+//!
+//! Per-family behaviour (state width, init, schedule shape, step-tensor
+//! packing) lives behind [`kernel::FamilyKernel`]; `Schedule` and
+//! `Session` are family-agnostic plumbing over a kernel.
 
+pub mod kernel;
 pub mod schedule;
 pub mod session;
 
-pub use schedule::{Family, Schedule};
-pub use session::{Session, Slot, SlotRequest};
+pub use kernel::{
+    DdlmKernel, Family, FamilyKernel, PlaidKernel, SsdKernel, StepOutputs,
+};
+pub use schedule::{Schedule, ScheduleError};
+pub use session::{Session, Slot, SlotError, SlotRequest};

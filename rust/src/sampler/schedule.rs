@@ -1,43 +1,37 @@
-//! Noise schedules / timestamp arrays per family.
+//! Noise schedules / timestamp arrays, family-agnostic.
 //!
 //! The schedule is *host-side state*: the paper's whole point is that the
 //! generation loop must be haltable per step, so the rust coordinator owns
 //! the timestamp array and feeds (t_cur, t_next) pairs into single-step
 //! artifacts (per batch slot — see the step kernels).
+//!
+//! The per-family timestamp synthesis (geometric VE for DDLM, linear-tau
+//! VP for SSD/Plaid) lives on [`super::kernel::FamilyKernel`]; `Schedule`
+//! only holds the resulting array and delegates.
 
-/// Which diffusion parameterisation a family samples under.
+pub use super::kernel::Family;
+
+/// Typed schedule-construction failure: a malformed caller gets an error
+/// it can surface (the serving path maps it to `invalid_request`), never
+/// a panic inside a worker.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Family {
-    /// variance-exploding PF-ODE (CDCD / the paper's DDLM), Euler sampler
-    Ddlm,
-    /// variance-preserving simplex diffusion, "Simplex" sampler
-    Ssd,
-    /// variance-preserving embedding diffusion, DDPM ancestral sampler
-    Plaid,
+pub enum ScheduleError {
+    /// a schedule needs at least one generation step (zero-step budgets
+    /// are resolved at admission, before any schedule is built)
+    ZeroSteps,
 }
 
-impl Family {
-    pub fn name(&self) -> &'static str {
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            Family::Ddlm => "ddlm",
-            Family::Ssd => "ssd",
-            Family::Plaid => "plaid",
+            ScheduleError::ZeroSteps => {
+                f.write_str("schedule needs at least one step")
+            }
         }
-    }
-
-    pub fn parse(s: &str) -> Option<Family> {
-        match s {
-            "ddlm" => Some(Family::Ddlm),
-            "ssd" => Some(Family::Ssd),
-            "plaid" => Some(Family::Plaid),
-            _ => None,
-        }
-    }
-
-    pub fn all() -> [Family; 3] {
-        [Family::Ddlm, Family::Ssd, Family::Plaid]
     }
 }
+
+impl std::error::Error for ScheduleError {}
 
 /// Timestamp array for `n_steps` generation steps.  Index i holds the time
 /// fed as `t_cur` at step i; index n_steps is the terminal time.
@@ -48,34 +42,21 @@ pub struct Schedule {
 }
 
 impl Schedule {
-    /// Build the standard schedule for a family.
-    ///
-    /// * DDLM: geometric (log-uniform) from `t_max` down to `t_min`
-    ///   (Karras-style for VE diffusion).
-    /// * SSD / Plaid: tau linear from ~0 (max noise) up to 1 (clean);
-    ///   the models map tau -> cosine alpha-bar internally.
-    pub fn new(family: Family, n_steps: usize, t_max: f32, t_min: f32) -> Schedule {
-        assert!(n_steps >= 1);
-        let times = match family {
-            Family::Ddlm => {
-                let ratio = (t_min / t_max).max(1e-6) as f64;
-                (0..=n_steps)
-                    .map(|i| {
-                        let f = i as f64 / n_steps as f64;
-                        (t_max as f64 * ratio.powf(f)) as f32
-                    })
-                    .collect()
-            }
-            Family::Ssd | Family::Plaid => (0..=n_steps)
-                .map(|i| {
-                    // tau in [tau0, 1]; tau0 > 0 keeps abar_cur strictly
-                    // inside (0,1) for the DDPM coefficients
-                    let tau0 = 1e-3;
-                    tau0 + (1.0 - tau0) * (i as f32 / n_steps as f32)
-                })
-                .collect(),
-        };
-        Schedule { family, times }
+    /// Build the family's standard schedule by delegating to its kernel
+    /// (see [`super::kernel::FamilyKernel::times`] for the per-family
+    /// shapes).
+    pub fn new(
+        family: Family,
+        n_steps: usize,
+        t_max: f32,
+        t_min: f32,
+    ) -> Result<Schedule, ScheduleError> {
+        if n_steps == 0 {
+            return Err(ScheduleError::ZeroSteps);
+        }
+        let times = family.kernel().times(n_steps, t_max, t_min);
+        debug_assert_eq!(times.len(), n_steps + 1);
+        Ok(Schedule { family, times })
     }
 
     pub fn n_steps(&self) -> usize {
@@ -90,14 +71,7 @@ impl Schedule {
     /// Initial state scale for the family (multiplied by the caller's
     /// noise-scale knob, paper Fig 3 / Table 1).
     pub fn init_sigma(&self) -> f32 {
-        match self.family {
-            // X(t_max) ~ N(0, t_max^2 I)
-            Family::Ddlm => self.times[0],
-            // simplex logit space: K * sqrt(1 - abar(tau0)) ~ K
-            Family::Ssd => 1.0,
-            // VP embedding space: unit gaussian at tau ~ 0
-            Family::Plaid => 1.0,
-        }
+        self.family.kernel().init_sigma(&self.times)
     }
 }
 
@@ -107,7 +81,7 @@ mod tests {
 
     #[test]
     fn ddlm_schedule_is_decreasing_geometric() {
-        let s = Schedule::new(Family::Ddlm, 100, 10.0, 0.05);
+        let s = Schedule::new(Family::Ddlm, 100, 10.0, 0.05).unwrap();
         assert_eq!(s.times.len(), 101);
         assert!((s.times[0] - 10.0).abs() < 1e-5);
         assert!((s.times[100] - 0.05).abs() < 1e-4);
@@ -118,23 +92,26 @@ mod tests {
         let r0 = s.times[1] / s.times[0];
         let r50 = s.times[51] / s.times[50];
         assert!((r0 - r50).abs() < 1e-4);
+        // init sigma delegates to the kernel: VE starts at t_max
+        assert!((s.init_sigma() - 10.0).abs() < 1e-5);
     }
 
     #[test]
     fn vp_schedule_is_increasing_to_one() {
         for fam in [Family::Ssd, Family::Plaid] {
-            let s = Schedule::new(fam, 50, 10.0, 0.05);
+            let s = Schedule::new(fam, 50, 10.0, 0.05).unwrap();
             assert!(s.times[0] > 0.0 && s.times[0] < 0.01);
             assert!((s.times[50] - 1.0).abs() < 1e-6);
             for w in s.times.windows(2) {
                 assert!(w[1] > w[0]);
             }
+            assert_eq!(s.init_sigma(), 1.0);
         }
     }
 
     #[test]
     fn pair_indexing() {
-        let s = Schedule::new(Family::Ddlm, 10, 10.0, 0.1);
+        let s = Schedule::new(Family::Ddlm, 10, 10.0, 0.1).unwrap();
         let (a, b) = s.pair(0);
         assert_eq!(a, s.times[0]);
         assert_eq!(b, s.times[1]);
@@ -142,10 +119,21 @@ mod tests {
     }
 
     #[test]
-    fn family_parse_roundtrip() {
-        for f in Family::all() {
-            assert_eq!(Family::parse(f.name()), Some(f));
+    fn zero_steps_is_a_typed_error_not_a_panic() {
+        for fam in Family::all() {
+            assert_eq!(
+                Schedule::new(fam, 0, 10.0, 0.05).unwrap_err(),
+                ScheduleError::ZeroSteps
+            );
         }
-        assert_eq!(Family::parse("gpt"), None);
+    }
+
+    #[test]
+    fn schedule_matches_its_kernels_times() {
+        for fam in Family::all() {
+            let s = Schedule::new(fam, 12, 10.0, 0.05).unwrap();
+            assert_eq!(s.times, fam.kernel().times(12, 10.0, 0.05));
+            assert_eq!(s.init_sigma(), fam.kernel().init_sigma(&s.times));
+        }
     }
 }

@@ -7,6 +7,11 @@
 //! needs: a slot whose request halted early is reset and reused while the
 //! other slots keep denoising mid-schedule.
 //!
+//! The session is family-agnostic plumbing: everything per-family —
+//! state-row width, init synthesis, schedule shape, step-input packing,
+//! step-output parsing — is delegated to the slot's
+//! [`FamilyKernel`](super::kernel::FamilyKernel).
+//!
 //! §Perf: `step()` uploads straight from the session's persistent host
 //! buffers (no per-step `Vec` clones — see `Executable::buffer_from_f32`)
 //! and downloads only the outputs the serving path reads; the bulky
@@ -17,11 +22,49 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use super::schedule::{Family, Schedule};
+use super::kernel::{FamilyKernel, StepOutputs};
+use super::schedule::{Family, Schedule, ScheduleError};
 use crate::halting::StepStats;
 use crate::models::store::ParamStore;
 use crate::runtime::{Executable, Runtime};
 use crate::util::prng::Prng;
+
+/// Typed slot-reset failure.  The serving path rejects both cases at
+/// admission; this surfaces the same contract to direct library callers
+/// (and lets a worker answer a mis-validated request with a typed
+/// `invalid_request` instead of panicking).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotError {
+    /// `n_steps == 0`: no schedule can be built (zero-step budgets are
+    /// answered before touching a session)
+    ZeroSteps,
+    /// conditioning prefix longer than the compiled sequence length
+    PrefixTooLong { len: usize, max: usize },
+}
+
+impl std::fmt::Display for SlotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SlotError::ZeroSteps => {
+                f.write_str("slot request needs at least one step")
+            }
+            SlotError::PrefixTooLong { len, max } => write!(
+                f,
+                "prefix of {len} tokens exceeds the compiled seq_len {max}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SlotError {}
+
+impl From<ScheduleError> for SlotError {
+    fn from(e: ScheduleError) -> SlotError {
+        match e {
+            ScheduleError::ZeroSteps => SlotError::ZeroSteps,
+        }
+    }
+}
 
 /// Everything `reset_slot` needs to occupy a slot with a fresh request.
 #[derive(Clone, Copy, Debug)]
@@ -102,13 +145,16 @@ struct StepOutIdx {
 
 pub struct Session {
     pub family: Family,
+    /// the family's sampler kernel — all per-family behaviour routes
+    /// through this one seam
+    kernel: &'static dyn FamilyKernel,
     exe: Rc<Executable>,
     store: Rc<ParamStore>,
     pub batch: usize,
     pub seq_len: usize,
     pub vocab: usize,
     pub d_model: usize,
-    /// state row width: L*D (ddlm/plaid) or L*V (ssd)
+    /// state row width per slot (kernel-defined: L*D or L*V)
     row: usize,
     /// diffusion state [B, row]
     x: Vec<f32>,
@@ -118,9 +164,6 @@ pub struct Session {
     /// normalised embedding rows [V, D] for prefix clamping
     emb_n: Vec<f32>,
     simplex_k: f32,
-    /// input-name for the time tensor ("t2" for ddlm, "tau2" for VP)
-    time_input: &'static str,
-    needs_z: bool,
     /// per-step (t_cur, t_next) upload scratch [B, 2], reused every step
     t2_scratch: Vec<f32>,
     /// per-step noise upload scratch [B, row], reused every step
@@ -150,14 +193,12 @@ impl Session {
         batch: usize,
         seq_len: usize,
     ) -> Result<Session> {
-        let name = format!("{}_step_b{batch}_l{seq_len}", family.name());
+        let kernel = family.kernel();
+        let name = format!("{}_step_b{batch}_l{seq_len}", kernel.name());
         let exe = rt.executable(&name)?;
         let m = &rt.manifest.model;
         let (v, d) = (m.vocab, m.d_model);
-        let row = match family {
-            Family::Ssd => seq_len * v,
-            _ => seq_len * d,
-        };
+        let row = kernel.state_row(seq_len, v, d);
         // normalised embeddings (CDCD: rows scaled to sqrt(D))
         let emb = store.get("emb")?.as_f32()?.to_vec();
         if emb.len() != v * d {
@@ -193,9 +234,9 @@ impl Session {
             norm_x: exe.spec.output_index("norm_x")?,
             x0_hat: exe.spec.output_index("x0_hat")?,
         };
-        let needs_z = !matches!(family, Family::Ddlm);
-        let default_schedule =
-            Schedule::new(family, 1, m.t_max, m.t_min);
+        let needs_z = kernel.needs_z();
+        let default_schedule = Schedule::new(family, 1, m.t_max, m.t_min)
+            .expect("one-step default schedule");
         let slots = (0..batch)
             .map(|_| Slot {
                 step: 0,
@@ -209,6 +250,7 @@ impl Session {
             .collect();
         Ok(Session {
             family,
+            kernel,
             exe,
             store,
             batch,
@@ -222,11 +264,6 @@ impl Session {
             slots,
             emb_n,
             simplex_k: m.simplex_k,
-            time_input: match family {
-                Family::Ddlm => "t2",
-                _ => "tau2",
-            },
-            needs_z,
             t2_scratch: vec![0.0; batch * 2],
             z_scratch: if needs_z { vec![0.0; batch * row] } else { Vec::new() },
             record_x0: false,
@@ -239,34 +276,35 @@ impl Session {
     }
 
     /// Occupy a slot with a fresh request: initialise noise, schedule and
-    /// optional conditioning prefix.
-    pub fn reset_slot(&mut self, slot: usize, req: &SlotRequest) {
-        // the serving path rejects overlong prefixes at admission with a
-        // typed `invalid_request`; this assert guards direct library use
-        assert!(
-            req.prefix.len() <= self.seq_len,
-            "prefix longer than seq_len"
-        );
+    /// optional conditioning prefix.  Fails with a typed [`SlotError`]
+    /// (never a panic) on a zero-step budget or an overlong prefix — the
+    /// serving path rejects both at admission with `invalid_request`;
+    /// this is the backstop for direct library use.
+    pub fn reset_slot(
+        &mut self,
+        slot: usize,
+        req: &SlotRequest,
+    ) -> Result<(), SlotError> {
+        // validate before mutating anything, so a failed reset leaves
+        // the slot exactly as it was
+        if req.prefix.len() > self.seq_len {
+            return Err(SlotError::PrefixTooLong {
+                len: req.prefix.len(),
+                max: self.seq_len,
+            });
+        }
         let schedule =
-            Schedule::new(self.family, req.n_steps, req.t_max, req.t_min);
+            Schedule::new(self.family, req.n_steps, req.t_max, req.t_min)?;
         let mut rng = Prng::new(req.seed).fork("gen-noise");
         let sigma = schedule.init_sigma() * req.noise_scale;
         let (l, v) = (self.seq_len, self.vocab);
         let base = slot * self.row;
-        match self.family {
-            Family::Ddlm | Family::Plaid => {
-                for i in 0..self.row {
-                    self.x[base + i] = sigma * rng.gaussian() as f32;
-                }
-            }
-            Family::Ssd => {
-                // logit-space init: x = K * z at max noise (abar ~ 0)
-                for i in 0..self.row {
-                    self.x[base + i] =
-                        self.simplex_k * sigma * rng.gaussian() as f32;
-                }
-            }
-        }
+        self.kernel.init_state(
+            &mut self.x[base..base + self.row],
+            sigma,
+            self.simplex_k,
+            &mut rng,
+        );
         let pb = slot * l * v;
         for p in &mut self.prev_probs[pb..pb + l * v] {
             *p = 1.0 / v as f32;
@@ -287,6 +325,7 @@ impl Session {
         s.tokens = self.prev_tokens[tb..tb + l].to_vec();
         s.last_stats = StepStats::default();
         self.clamp_prefix(slot);
+        Ok(())
     }
 
     /// Mark a slot free (halted / finished / cancelled).
@@ -300,32 +339,23 @@ impl Session {
 
     /// Overwrite prefix positions with their clean representation —
     /// replacement conditioning, matching how prefix-masked training kept
-    /// unmasked positions clean at every noise level.
+    /// unmasked positions clean at every noise level.  The per-family
+    /// representation (embedding row vs ±K logits) is the kernel's.
     fn clamp_prefix(&mut self, slot: usize) {
         let (v, d) = (self.vocab, self.d_model);
+        let kernel = self.kernel;
+        let w = self.row / self.seq_len;
         let prefix = self.slots[slot].prefix.clone();
         let base = slot * self.row;
         for (pos, &tok) in prefix.iter().enumerate() {
             let tok = tok.clamp(0, v as i32 - 1) as usize;
-            match self.family {
-                Family::Ddlm | Family::Plaid => {
-                    let dst = base + pos * d;
-                    let src = tok * d;
-                    self.x[dst..dst + d]
-                        .copy_from_slice(&self.emb_n[src..src + d]);
-                }
-                Family::Ssd => {
-                    let dst = base + pos * v;
-                    for (j, xj) in self.x[dst..dst + v].iter_mut().enumerate()
-                    {
-                        *xj = if j == tok {
-                            self.simplex_k
-                        } else {
-                            -self.simplex_k
-                        };
-                    }
-                }
-            }
+            let dst = base + pos * w;
+            kernel.clamp_token(
+                &mut self.x[dst..dst + w],
+                tok,
+                &self.emb_n[tok * d..(tok + 1) * d],
+                self.simplex_k,
+            );
         }
     }
 
@@ -346,20 +376,18 @@ impl Session {
     pub fn step(&mut self) -> Result<Vec<Option<StepStats>>> {
         let (b, l, v) = (self.batch, self.seq_len, self.vocab);
         // per-slot (t_cur, t_next) into the reused scratch
+        let idle = self.kernel.idle_times();
         for (i, s) in self.slots.iter().enumerate() {
             let (c, n) = if s.active && s.step < s.schedule.n_steps() {
                 s.schedule.pair(s.step)
             } else {
                 // neutral, numerically-safe times for idle slots
-                match self.family {
-                    Family::Ddlm => (1.0, 1.0),
-                    _ => (0.5, 0.5),
-                }
+                idle
             };
             self.t2_scratch[i * 2] = c;
             self.t2_scratch[i * 2 + 1] = n;
         }
-        if self.needs_z {
+        if self.kernel.needs_z() {
             // refresh noise for active slots only; idle slots keep stale
             // values (their outputs are ignored)
             let row = self.row;
@@ -374,10 +402,8 @@ impl Session {
         // assemble device buffers: persistent param buffers + per-step
         // data uploaded straight from the session's host state (no Vec
         // clones — only the per-step tensors cross the host boundary)
-        let x_shape: [usize; 3] = match self.family {
-            Family::Ssd => [b, l, v],
-            _ => [b, l, self.d_model],
-        };
+        let x_shape = self.kernel.x_shape(b, l, v, self.d_model);
+        let time_input = self.kernel.time_input();
         let mut data_bufs = Vec::with_capacity(self.data_idx.len());
         for (name, i) in &self.data_idx {
             let buf = match name.as_str() {
@@ -389,7 +415,7 @@ impl Session {
                     self.exe.buffer_from_i32(&[b, l], &self.prev_tokens)?
                 }
                 "z" => self.exe.buffer_from_f32(&x_shape, &self.z_scratch)?,
-                n if n == self.time_input => {
+                n if n == time_input => {
                     self.exe.buffer_from_f32(&[b, 2], &self.t2_scratch)?
                 }
                 other => bail!("unexpected step input {other}"),
@@ -424,11 +450,13 @@ impl Session {
         let x_next = out[0].as_f32()?;
         let probs = out[1].as_f32()?;
         let tokens = out[2].as_i32()?;
-        let entropy = out[3].as_f32()?;
-        let kl = out[4].as_f32()?;
-        let switches = out[5].as_f32()?;
-        let norm_x0 = out[6].as_f32()?;
-        let norm_x = out[7].as_f32()?;
+        let step_out = StepOutputs {
+            entropy: out[3].as_f32()?,
+            kl: out[4].as_f32()?,
+            switches: out[5].as_f32()?,
+            norm_x0: out[6].as_f32()?,
+            norm_x: out[7].as_f32()?,
+        };
         let x0_hat = if self.record_x0 {
             Some(out[8].as_f32()?)
         } else {
@@ -456,13 +484,7 @@ impl Session {
                 self.last_x0_hat[i * w..(i + 1) * w]
                     .copy_from_slice(&x0[i * w..(i + 1) * w]);
             }
-            let stats = StepStats {
-                entropy: entropy[i],
-                kl: kl[i],
-                switches: switches[i],
-                norm_x0: norm_x0[i],
-                norm_x: norm_x[i],
-            };
+            let stats = self.kernel.parse_stats(i, &step_out);
             let slot = &mut self.slots[i];
             slot.tokens.copy_from_slice(&tokens[tb..tb + l]);
             slot.last_stats = stats;
@@ -478,8 +500,9 @@ impl Session {
         Ok(results)
     }
 
-    /// Current diffusion-state row of a slot (L*D for ddlm/plaid, L*V for
-    /// ssd) — used by the Fig-2 trajectory analysis.
+    /// Current diffusion-state row of a slot (kernel-defined width: L*D
+    /// for embedding families, L*V for simplex) — used by the Fig-2
+    /// trajectory analysis.
     pub fn slot_x(&self, slot: usize) -> &[f32] {
         &self.x[slot * self.row..(slot + 1) * self.row]
     }

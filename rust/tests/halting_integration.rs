@@ -6,7 +6,7 @@ use std::rc::Rc;
 use repro::halting::{parse_policy, HaltPolicy};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
-use repro::sampler::{Family, Session, SlotRequest};
+use repro::sampler::{Family, Session, SlotError, SlotRequest};
 
 fn artifacts_dir() -> Option<String> {
     let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
@@ -29,7 +29,8 @@ fn slots_are_isolated() {
     let mut s1 = Session::new(&rt, Family::Ddlm, store.clone(), 8, m.seq_len)
         .unwrap();
     // run A: request alone in slot 0
-    s1.reset_slot(0, &SlotRequest::new(777, 10, m.t_max, m.t_min));
+    s1.reset_slot(0, &SlotRequest::new(777, 10, m.t_max, m.t_min))
+        .unwrap();
     let mut trace_alone = Vec::new();
     for _ in 0..10 {
         let st = s1.step().unwrap();
@@ -39,13 +40,15 @@ fn slots_are_isolated() {
 
     // run B: same request in slot 0, plus different requests elsewhere
     let mut s2 = Session::new(&rt, Family::Ddlm, store, 8, m.seq_len).unwrap();
-    s2.reset_slot(0, &SlotRequest::new(777, 10, m.t_max, m.t_min));
+    s2.reset_slot(0, &SlotRequest::new(777, 10, m.t_max, m.t_min))
+        .unwrap();
     for slot in 1..8 {
         s2.reset_slot(
             slot,
             &SlotRequest::new(1000 + slot as u64, 7, m.t_max, m.t_min)
                 .noise(0.8),
-        );
+        )
+        .unwrap();
     }
     let mut trace_crowded = Vec::new();
     for _ in 0..10 {
@@ -78,7 +81,8 @@ fn prefix_is_preserved_in_output() {
     s.reset_slot(
         0,
         &SlotRequest::new(5, 8, m.t_max, m.t_min).prefix(&prefix),
-    );
+    )
+    .unwrap();
     for _ in 0..8 {
         s.step().unwrap();
     }
@@ -95,14 +99,17 @@ fn mid_flight_slot_recycling_works() {
     let m = rt.manifest.model.clone();
     let mut s =
         Session::new(&rt, Family::Ssd, store, 8, m.seq_len).unwrap();
-    s.reset_slot(0, &SlotRequest::new(1, 12, m.t_max, m.t_min));
-    s.reset_slot(1, &SlotRequest::new(2, 12, m.t_max, m.t_min));
+    s.reset_slot(0, &SlotRequest::new(1, 12, m.t_max, m.t_min))
+        .unwrap();
+    s.reset_slot(1, &SlotRequest::new(2, 12, m.t_max, m.t_min))
+        .unwrap();
     for _ in 0..5 {
         s.step().unwrap();
     }
     // slot 0 "halts" and is recycled with a new request mid-flight of slot 1
     s.release_slot(0);
-    s.reset_slot(0, &SlotRequest::new(3, 12, m.t_max, m.t_min));
+    s.reset_slot(0, &SlotRequest::new(3, 12, m.t_max, m.t_min))
+        .unwrap();
     assert_eq!(s.slots[0].step, 0);
     assert_eq!(s.slots[1].step, 5);
     for _ in 0..7 {
@@ -121,7 +128,8 @@ fn fixed_policy_halts_generation_loop() {
     let m = rt.manifest.model.clone();
     let mut s =
         Session::new(&rt, Family::Plaid, store, 1, m.seq_len).unwrap();
-    s.reset_slot(0, &SlotRequest::new(9, 50, m.t_max, m.t_min));
+    s.reset_slot(0, &SlotRequest::new(9, 50, m.t_max, m.t_min))
+        .unwrap();
     let mut policy = parse_policy("fixed:6").unwrap();
     policy.reset();
     let mut executed = 0;
@@ -149,7 +157,8 @@ fn combinator_policy_halts_generation_loop() {
     let m = rt.manifest.model.clone();
     let mut s =
         Session::new(&rt, Family::Ddlm, store, 1, m.seq_len).unwrap();
-    s.reset_slot(0, &SlotRequest::new(17, 50, m.t_max, m.t_min));
+    s.reset_slot(0, &SlotRequest::new(17, 50, m.t_max, m.t_min))
+        .unwrap();
     let mut policy = parse_policy("any(fixed:7,entropy:-1)").unwrap();
     policy.reset();
     let mut exit = None;
@@ -165,6 +174,41 @@ fn combinator_policy_halts_generation_loop() {
 }
 
 #[test]
+fn reset_slot_rejects_malformed_requests_with_typed_errors() {
+    // a zero-step budget or an overlong prefix must come back as a
+    // typed SlotError (the serving path maps it to invalid_request),
+    // never panic — and a failed reset leaves the slot untouched
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(&dir, "ddlm").unwrap());
+    let m = rt.manifest.model.clone();
+    let mut s = Session::new(&rt, Family::Ddlm, store, 1, m.seq_len).unwrap();
+    assert_eq!(
+        s.reset_slot(0, &SlotRequest::new(1, 0, m.t_max, m.t_min)),
+        Err(SlotError::ZeroSteps)
+    );
+    let long = vec![0i32; m.seq_len + 1];
+    assert_eq!(
+        s.reset_slot(
+            0,
+            &SlotRequest::new(1, 10, m.t_max, m.t_min).prefix(&long)
+        ),
+        Err(SlotError::PrefixTooLong {
+            len: m.seq_len + 1,
+            max: m.seq_len
+        })
+    );
+    assert!(!s.slots[0].active, "failed reset must not occupy the slot");
+    // the session still serves a valid request afterwards
+    s.reset_slot(0, &SlotRequest::new(1, 3, m.t_max, m.t_min))
+        .unwrap();
+    for _ in 0..3 {
+        s.step().unwrap();
+    }
+    assert!(s.slot_exhausted(0));
+}
+
+#[test]
 fn all_families_generate_finite_sequences() {
     let Some(dir) = artifacts_dir() else { return };
     let rt = Runtime::new(&dir).unwrap();
@@ -173,7 +217,8 @@ fn all_families_generate_finite_sequences() {
         let store =
             Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
         let mut s = Session::new(&rt, fam, store, 1, m.seq_len).unwrap();
-        s.reset_slot(0, &SlotRequest::new(11, 15, m.t_max, m.t_min));
+        s.reset_slot(0, &SlotRequest::new(11, 15, m.t_max, m.t_min))
+            .unwrap();
         let mut last = None;
         for _ in 0..15 {
             last = s.step().unwrap()[0];

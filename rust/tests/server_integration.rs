@@ -1,7 +1,9 @@
 //! Integration: TCP JSON-lines server round-trips over a live engine —
 //! policy specs on the wire, halt reasons in responses and metrics,
 //! priorities/deadlines/cancel on the wire, typed serving errors,
-//! multi-worker sharding, clean server shutdown.
+//! multi-worker sharding, heterogeneous multi-family fleets (per-request
+//! routing, unserved-family rejection, per-family metrics), clean
+//! server shutdown.
 
 use std::time::Duration;
 
@@ -30,7 +32,7 @@ fn metric(m: &Json, key: &str) -> f64 {
 fn server_roundtrip_and_metrics() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_batches = vec![2];
+    cfg.worker_specs = vec![(Family::Ddlm, 2)];
     let (engine, _join) = start(cfg);
     let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
 
@@ -174,6 +176,156 @@ fn server_stop_joins_accept_thread_and_closes_listener() {
     join.join().unwrap().unwrap();
 }
 
+/// A heterogeneous (ddlm + ssd) fleet over TCP: the `family` wire field
+/// routes each request to a worker of that kernel, a family with no
+/// live worker rejects with typed `invalid_request`, an unknown family
+/// string is rejected at the wire boundary, and the merged `/metrics`
+/// snapshot splits completions per family.
+#[test]
+fn mixed_family_fleet_routes_and_rejects_over_tcp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ssd, 1)];
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // interleaved per-family traffic; every response must echo the
+    // family whose kernel served it
+    for (id, fam) in [
+        (1u64, Family::Ddlm),
+        (2, Family::Ssd),
+        (3, Family::Ddlm),
+        (4, Family::Ssd),
+    ] {
+        let mut req = GenRequest::new(id, 4);
+        req.family = Some(fam);
+        let resp = client.generate(&req).unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.family, Some(fam), "request {id}");
+        assert_eq!(resp.steps_executed, 4);
+    }
+    // a request without a family goes to the fleet default (ddlm here)
+    let resp = client.generate(&GenRequest::new(5, 3)).unwrap();
+    assert_eq!(resp.family, Some(Family::Ddlm));
+
+    // plaid has no live worker in this fleet: typed invalid_request
+    let mut plaid = GenRequest::new(6, 4);
+    plaid.family = Some(Family::Plaid);
+    let r = client.roundtrip(&plaid.to_json()).unwrap();
+    assert_eq!(
+        r.get("error").and_then(Json::as_str),
+        Some("invalid_request")
+    );
+
+    // an unknown family string never reaches the scheduler: wire error
+    let r = client
+        .roundtrip(
+            &Json::parse(r#"{"id":7,"steps":4,"family":"gpt"}"#).unwrap(),
+        )
+        .unwrap();
+    let err = r.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("bad family"), "got {err:?}");
+
+    // per-family lanes in the merged snapshot
+    let m = client.metrics().unwrap();
+    assert_eq!(metric(&m, "requests_completed_ddlm"), 3.0);
+    assert_eq!(metric(&m, "requests_completed_ssd"), 2.0);
+    assert!(m.get("requests_completed_plaid").is_none());
+    assert!(metric(&m, "rejected_invalid") >= 1.0);
+    assert!(m.get("latency_p50_ms_ddlm").is_some());
+    // the per-worker breakdown names each worker's family
+    let workers = m.get("workers").and_then(Json::as_arr).unwrap();
+    let fams: Vec<&str> = workers
+        .iter()
+        .map(|w| w.get("family").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(fams, vec!["ddlm", "ssd"]);
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// The acceptance scenario for multi-family serving: ONE engine with
+/// `worker_specs = [(Ddlm,1),(Ssd,1),(Plaid,1)]` serves interleaved
+/// requests for all three families over TCP — each response comes from
+/// the right family's kernel, `/metrics` reports non-zero per-family
+/// completion counters for all three, and (on a second, ddlm-only
+/// fleet) a request for a family with no live worker rejects with a
+/// typed `invalid_request`.
+#[test]
+fn three_family_fleet_serves_interleaved_requests_over_tcp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs =
+        vec![(Family::Ddlm, 1), (Family::Ssd, 1), (Family::Plaid, 1)];
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // 9 interleaved requests, 3 per family, mixed policies
+    let fams = Family::all();
+    for id in 0..9u64 {
+        let fam = fams[id as usize % 3];
+        let mut req = GenRequest::new(id, 6);
+        if id % 2 == 0 {
+            req.policy = parse_policy("fixed:2").unwrap();
+        }
+        req.family = Some(fam);
+        let resp = client.generate(&req).unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.family, Some(fam), "request {id}");
+        assert_eq!(
+            resp.steps_executed,
+            if id % 2 == 0 { 2 } else { 6 },
+            "request {id}"
+        );
+        assert_eq!(resp.tokens.len(), 64);
+    }
+
+    // non-zero per-family completion counters for all three families
+    let m = client.metrics().unwrap();
+    for fam in Family::all() {
+        let key = format!("requests_completed_{}", fam.name());
+        assert_eq!(
+            m.get(&key).and_then(Json::as_f64),
+            Some(3.0),
+            "missing/short {key} in {}",
+            m.encode()
+        );
+    }
+    assert_eq!(metric(&m, "requests_completed"), 9.0);
+    assert!(metric(&m, "halted_by_fixed") >= 1.0);
+    let workers = m.get("workers").and_then(Json::as_arr).unwrap();
+    assert_eq!(workers.len(), 3);
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+
+    // a family with no live worker rejects with typed invalid_request:
+    // a ddlm-only fleet can never serve ssd traffic
+    let cfg = EngineConfig::new(&dir, Family::Ddlm);
+    let (engine, join) = start(cfg);
+    let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let mut ssd = GenRequest::new(1, 4);
+    ssd.family = Some(Family::Ssd);
+    let r = client.roundtrip(&ssd.to_json()).unwrap();
+    assert_eq!(
+        r.get("error").and_then(Json::as_str),
+        Some("invalid_request")
+    );
+    // the fleet still serves its own family afterwards
+    let ok = client.generate(&GenRequest::new(2, 2)).unwrap();
+    assert_eq!(ok.steps_executed, 2);
+    assert_eq!(ok.family, Some(Family::Ddlm));
+    drop(server);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
 /// The acceptance scenario: a 2-worker engine serving a mixed-policy,
 /// mixed-priority workload over TCP with at least one request cancelled,
 /// one rejected for overload, and one deadline-expired — all visible as
@@ -184,7 +336,7 @@ fn multi_worker_mixed_workload_over_tcp() {
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
     // two single-slot shards + a 2-deep queue: a 10-request burst must
     // overflow (compiled step artifacts exist for batch 1 and 8)
-    cfg.worker_batches = vec![1, 1];
+    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ddlm, 1)];
     cfg.queue_depth = 2;
     let (engine, join) = start(cfg);
     let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();

@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
 # Repo gate: formatting, lints, tests.  Run from anywhere.
 #
-#   scripts/check.sh           # fmt + clippy + test
+#   scripts/check.sh           # fmt + clippy + test + bench compile
 #   scripts/check.sh --bench   # ...then the headline serving bench,
 #                              # which writes BENCH_serving.json
 #                              # (p50/p95 latency, req/s, steps/s)
+#
+# `cargo bench --no-run` is part of the default gate so bench targets
+# (including the mixed-family serving scenario) can never rot
+# uncompiled even where artifacts are absent.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,6 +20,9 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== cargo bench --no-run (bench targets must keep compiling) =="
+cargo bench --no-run
 
 if [[ "${1:-}" == "--bench" ]]; then
   echo "== serving bench (writes BENCH_serving.json) =="
