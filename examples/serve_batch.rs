@@ -62,7 +62,8 @@ fn main() -> anyhow::Result<()> {
     // batch-8 throughput worker, fed from one priority-classed queue
     // (mixed-family fleets just list different families here)
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ddlm, 8)];
+    cfg.worker_specs =
+        vec![(Family::Ddlm.into(), 1), (Family::Ddlm.into(), 8)];
     cfg.discover_checkpoints("runs");
     let (engine, _join) = start(cfg);
     let mut server = Server::start("127.0.0.1:0", engine.clone())?;

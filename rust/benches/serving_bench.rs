@@ -5,19 +5,25 @@
 //!     cargo bench --bench serving_bench
 //!     scripts/check.sh --bench
 //!
-//! Two scenarios run back to back:
+//! Three scenarios run back to back:
 //!
 //! * **single** — the classic homogeneous fleet (`--workers` ddlm
 //!   shards of `--batch`); its numbers stay at the top level of
 //!   `BENCH_serving.json` so the PR-over-PR trendline is unbroken.
+//! * **stream** — the same fleet and workload with v1 progress events
+//!   on (`progress_every`, default 25): every client subscribes and
+//!   drains streamed per-step completeness events.  Reported under
+//!   `"stream"` plus a top-level `stream_overhead_pct` (stream p50 vs
+//!   single p50) so event fan-out can never silently regress the hot
+//!   path — the acceptance bar is within 5% of the non-streaming p50.
 //! * **mixed** — a heterogeneous `(ddlm, batch) + (ssd, batch)` fleet
 //!   serving interleaved per-family traffic through one scheduler;
 //!   reported under `"mixed"` with per-family rows (completions, p50 /
-//!   p95 latency, steps) pulled from the merged `/metrics` snapshot.
+//!   p95 latency, steps) computed from measured-run samples.
 //!
 //! Knobs: --n 32 --steps 120 --workers 2 --batch 8 --criterion SPEC
-//! (default: the paper's adaptive KL + entropy-fallback policy).
-//! Skips cleanly when artifacts are not built.
+//! --progress-every 25 (default policy: the paper's adaptive KL +
+//! entropy-fallback).  Skips cleanly when artifacts are not built.
 
 use std::time::Instant;
 
@@ -25,7 +31,7 @@ use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
 use repro::corpus::dataset::Dataset;
 use repro::halting::{parse_policy, BoxedPolicy};
 use repro::runtime::Manifest;
-use repro::sampler::Family;
+use repro::sampler::{Family, FamilyId};
 use repro::util::cli::Args;
 use repro::util::json::Json;
 
@@ -45,23 +51,29 @@ struct ScenarioResult {
     p95: f64,
     mean_steps: f64,
     device_calls: f64,
+    /// streamed progress events drained during the measured run (0 in
+    /// non-streaming scenarios)
+    progress_events: usize,
     /// measured-run (family, latency_ms, steps) per request — the
     /// per-family rows come from here, NOT the end-of-run metrics
     /// snapshot, so they exclude warmup exactly like the top-level
     /// numbers
-    samples: Vec<(Family, f64, usize)>,
+    samples: Vec<(FamilyId, f64, usize)>,
 }
 
 /// Drive one engine configuration over TCP with 4 client threads firing
 /// Prefix-32 requests; request i is routed to `specs[i % specs.len()]`'s
-/// family, so a mixed fleet sees interleaved per-family traffic.
+/// family, so a mixed fleet sees interleaved per-family traffic.  When
+/// `progress_every` is set, every request subscribes to streamed
+/// progress events and the clients drain them (the streaming scenario).
 fn run_scenario(
     dir: &str,
-    specs: &[(Family, usize)],
+    specs: &[(FamilyId, usize)],
     n: usize,
     n_steps: usize,
     policy: &BoxedPolicy,
     prompts: &[Vec<i32>],
+    progress_every: Option<usize>,
 ) -> anyhow::Result<ScenarioResult> {
     let mut cfg = EngineConfig::new(dir, specs[0].0);
     cfg.worker_specs = specs.to_vec();
@@ -107,43 +119,47 @@ fn run_scenario(
 
     // measured run: 4 client threads, Prefix-32 requests, one policy,
     // families interleaved across the spec list
-    let families: Vec<Family> = specs.iter().map(|&(f, _)| f).collect();
+    let families: Vec<FamilyId> = specs.iter().map(|&(f, _)| f).collect();
     let t0 = Instant::now();
+    type ThreadOut = (Vec<(FamilyId, f64, usize)>, usize);
     let handles: Vec<_> = (0..4usize)
         .map(|c| {
             let addr = server.addr.clone();
             let prompts = prompts.to_vec();
             let policy = policy.clone();
             let families = families.clone();
-            std::thread::spawn(
-                move || -> anyhow::Result<Vec<(Family, f64, usize)>> {
-                    let mut client = Client::connect(&addr)?;
-                    let mut out = Vec::new();
-                    for i in (c..n).step_by(4) {
-                        let fam = families[i % families.len()];
-                        let mut req = GenRequest::new(i as u64, n_steps);
-                        req.prefix =
-                            prompts[i % prompts.len()][..32].to_vec();
-                        req.policy = policy.clone();
-                        req.seed = 9000 + i as u64;
-                        req.family = Some(fam);
-                        let resp = client.generate(&req)?;
-                        anyhow::ensure!(
-                            resp.family == req.family,
-                            "request {i} served by {:?}, wanted {:?}",
-                            resp.family,
-                            req.family
-                        );
-                        out.push((fam, resp.latency_ms, resp.steps_executed));
-                    }
-                    Ok(out)
-                },
-            )
+            std::thread::spawn(move || -> anyhow::Result<ThreadOut> {
+                let mut client = Client::connect(&addr)?;
+                let mut out = Vec::new();
+                let mut events = 0usize;
+                for i in (c..n).step_by(4) {
+                    let fam = families[i % families.len()];
+                    let mut req = GenRequest::new(i as u64, n_steps);
+                    req.prefix = prompts[i % prompts.len()][..32].to_vec();
+                    req.policy = policy.clone();
+                    req.seed = 9000 + i as u64;
+                    req.family = Some(fam);
+                    req.progress_every = progress_every;
+                    let resp =
+                        client.generate_with(&req, |_ev| events += 1)?;
+                    anyhow::ensure!(
+                        resp.family == req.family,
+                        "request {i} served by {:?}, wanted {:?}",
+                        resp.family,
+                        req.family
+                    );
+                    out.push((fam, resp.latency_ms, resp.steps_executed));
+                }
+                Ok((out, events))
+            })
         })
         .collect();
     let mut samples = Vec::new();
+    let mut progress_events = 0usize;
     for h in handles {
-        samples.extend(h.join().unwrap()?);
+        let (out, events) = h.join().unwrap()?;
+        samples.extend(out);
+        progress_events += events;
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let mut latencies: Vec<f64> =
@@ -171,6 +187,7 @@ fn run_scenario(
         p95: quantile(&latencies, 0.95),
         mean_steps: total_steps as f64 / n as f64,
         device_calls,
+        progress_events,
         samples,
     })
 }
@@ -178,9 +195,9 @@ fn run_scenario(
 /// Per-family rows (completions, latency quantiles, steps) computed
 /// from the measured-run samples — warmup traffic is excluded, so the
 /// rows are directly comparable to the top-level numbers.
-fn per_family_rows(samples: &[(Family, f64, usize)]) -> Json {
+fn per_family_rows(samples: &[(FamilyId, f64, usize)]) -> Json {
     let mut rows = Vec::new();
-    let mut seen: Vec<Family> = Vec::new();
+    let mut seen: Vec<FamilyId> = Vec::new();
     for &(fam, ..) in samples {
         if seen.contains(&fam) {
             continue;
@@ -231,17 +248,26 @@ fn main() -> anyhow::Result<()> {
     let policy = parse_policy(&spec)
         .ok_or_else(|| anyhow::anyhow!("bad --criterion {spec:?}"))?;
 
+    let progress_every = args.usize_or("progress-every", 25);
+
     let ds = Dataset::new(512, 64);
     let prompts = ds.val_prompts(3, 8);
 
     // scenario 1: the classic homogeneous ddlm fleet (trendline-stable)
-    let single_specs: Vec<(Family, usize)> =
-        vec![(Family::Ddlm, batch); workers];
+    let single_specs: Vec<(FamilyId, usize)> =
+        vec![(Family::Ddlm.into(), batch); workers];
     println!(
         "serving_bench[single]: {workers} ddlm worker(s) x batch {batch}"
     );
-    let single =
-        run_scenario(&dir, &single_specs, n, n_steps, &policy, &prompts)?;
+    let single = run_scenario(
+        &dir,
+        &single_specs,
+        n,
+        n_steps,
+        &policy,
+        &prompts,
+        None,
+    )?;
     println!(
         "serving_bench[single]: {n} reqs in {:.2}s — {:.2} req/s, \
          {:.0} steps/s, p50 {:.0} ms, p95 {:.0} ms",
@@ -252,9 +278,37 @@ fn main() -> anyhow::Result<()> {
         single.p95
     );
 
-    // scenario 2: a heterogeneous ddlm+ssd fleet with interleaved
+    // scenario 2: the SAME fleet and workload with streamed progress
+    // events on — the v1 envelope's per-step completeness fan-out must
+    // stay within 5% of the non-streaming p50
+    println!(
+        "serving_bench[stream]: progress events every {progress_every} steps"
+    );
+    let stream = run_scenario(
+        &dir,
+        &single_specs,
+        n,
+        n_steps,
+        &policy,
+        &prompts,
+        Some(progress_every),
+    )?;
+    let stream_overhead_pct = if single.p50 > 0.0 {
+        100.0 * (stream.p50 - single.p50) / single.p50
+    } else {
+        0.0
+    };
+    println!(
+        "serving_bench[stream]: {n} reqs in {:.2}s — p50 {:.0} ms \
+         ({} progress events, overhead {:+.1}% vs single p50)",
+        stream.wall_s, stream.p50, stream.progress_events,
+        stream_overhead_pct
+    );
+
+    // scenario 3: a heterogeneous ddlm+ssd fleet with interleaved
     // per-family traffic (skipped when ssd artifacts are not compiled)
-    let mixed_specs = vec![(Family::Ddlm, batch), (Family::Ssd, batch)];
+    let mixed_specs: Vec<(FamilyId, usize)> =
+        vec![(Family::Ddlm.into(), batch), (Family::Ssd.into(), batch)];
     let have_ssd = Manifest::load(&dir).is_ok_and(|man| {
         !man.available_step_batches("ssd", man.model.seq_len).is_empty()
     });
@@ -262,8 +316,15 @@ fn main() -> anyhow::Result<()> {
         println!(
             "serving_bench[mixed]: (ddlm, {batch}) + (ssd, {batch}) fleet"
         );
-        let r =
-            run_scenario(&dir, &mixed_specs, n, n_steps, &policy, &prompts)?;
+        let r = run_scenario(
+            &dir,
+            &mixed_specs,
+            n,
+            n_steps,
+            &policy,
+            &prompts,
+            None,
+        )?;
         println!(
             "serving_bench[mixed]: {n} reqs in {:.2}s — {:.2} req/s, \
              p50 {:.0} ms, p95 {:.0} ms",
@@ -292,6 +353,26 @@ fn main() -> anyhow::Result<()> {
         ("mean_steps", Json::num(single.mean_steps)),
         ("device_calls", Json::num(single.device_calls)),
         ("per_family", per_family_rows(&single.samples)),
+        // streaming overhead rides at the top level so the trendline
+        // catches an event-fan-out regression at a glance
+        ("stream_overhead_pct", Json::num(stream_overhead_pct)),
+        (
+            "stream",
+            Json::obj(vec![
+                ("progress_every", Json::num(progress_every as f64)),
+                (
+                    "progress_events",
+                    Json::num(stream.progress_events as f64),
+                ),
+                ("wall_s", Json::num(stream.wall_s)),
+                ("req_per_s", Json::num(stream.req_per_s)),
+                ("steps_per_s", Json::num(stream.steps_per_s)),
+                ("latency_p50_ms", Json::num(stream.p50)),
+                ("latency_p95_ms", Json::num(stream.p95)),
+                ("mean_steps", Json::num(stream.mean_steps)),
+                ("stream_overhead_pct", Json::num(stream_overhead_pct)),
+            ]),
+        ),
     ];
     if let Some(m) = &mixed {
         fields.push((

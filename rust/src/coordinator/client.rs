@@ -1,0 +1,210 @@
+//! First-class v1 client for the serving API — the ONE client
+//! implementation shared by `repro client`, the examples, the serving
+//! bench and the integration tests (instead of ad-hoc JSON in each).
+//!
+//! The client speaks the v1 envelope protocol ([`super::envelope`])
+//! over one blocking TCP connection: [`Client::submit`] sends a
+//! request frame, [`Client::next_event`] pulls the next server frame
+//! (buffered events first), and the typed verbs
+//! [`Client::halt`] / [`Client::cancel`] / [`Client::metrics`] can be
+//! issued between `next_event` calls *while a generation streams* —
+//! their acks are matched out of the interleaved frame stream and
+//! everything else is buffered for the next `next_event` call.  [`Client::generate`] /
+//! [`Client::generate_with`] are the blocking conveniences most
+//! callers want.
+//!
+//! [`Client::roundtrip`] remains as the legacy escape hatch (send one
+//! bare JSON line, read one line) for compatibility tests against the
+//! pre-envelope protocol; do not mix it with in-flight v1 streams.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::envelope::{Command, Event};
+use super::request::{GenRequest, GenResponse, ProgressEvent};
+use crate::util::json::Json;
+
+/// Typed reply to [`Client::cancel`].
+#[derive(Clone, Debug)]
+pub struct CancelAck {
+    /// true when the cancel reached a live (queued or running) request
+    pub cancelled: bool,
+    /// `"queued" | "running" | "not_found"`
+    pub state: String,
+}
+
+/// Typed reply to [`Client::halt`].
+#[derive(Clone, Debug)]
+pub struct HaltAck {
+    /// true when the halt reached a live request (its normal completion
+    /// — `halt_reason:"client"` — is delivered to the submitter's
+    /// stream, which may be this same connection)
+    pub found: bool,
+    /// `"queued" | "running" | "not_found"`
+    pub state: String,
+}
+
+/// Blocking v1 serving-API client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// frames read while waiting for a specific ack, replayed by
+    /// [`Client::next_event`] in arrival order
+    pending: VecDeque<Event>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+            pending: VecDeque::new(),
+        })
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn read_event(&mut self) -> Result<Event> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("connection closed by server");
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line.trim_end())
+                .map_err(|e| anyhow::anyhow!("frame parse: {e}"))?;
+            return Event::from_json(&j);
+        }
+    }
+
+    /// Next server frame: buffered events first, then the wire.
+    pub fn next_event(&mut self) -> Result<Event> {
+        match self.pending.pop_front() {
+            Some(ev) => Ok(ev),
+            None => self.read_event(),
+        }
+    }
+
+    /// Send a submit frame; events for it arrive through
+    /// [`Self::next_event`] (progress frames if `req.progress_every`
+    /// is set, then exactly one `done` or `error`).
+    pub fn submit(&mut self, req: &GenRequest) -> Result<()> {
+        // cheap clone-free framing: reuse the request's JSON and stamp
+        // the envelope fields on
+        let Json::Obj(mut m) = req.to_json() else { unreachable!() };
+        m.insert("v".to_string(), Json::uint(1));
+        m.insert("type".to_string(), Json::str("submit"));
+        self.send_line(&Json::Obj(m).encode())
+    }
+
+    /// Blocking generate: submit, drain this request's events, return
+    /// its final response.  Progress events (if subscribed) are
+    /// discarded — use [`Self::generate_with`] to observe them.
+    pub fn generate(&mut self, req: &GenRequest) -> Result<GenResponse> {
+        self.generate_with(req, |_| {})
+    }
+
+    /// Blocking generate with a progress callback: every streamed
+    /// [`ProgressEvent`] for this request is handed to `on_progress`
+    /// as it arrives; frames for other in-flight requests are buffered
+    /// for [`Self::next_event`].
+    pub fn generate_with(
+        &mut self,
+        req: &GenRequest,
+        mut on_progress: impl FnMut(&ProgressEvent),
+    ) -> Result<GenResponse> {
+        let id = req.id;
+        self.submit(req)?;
+        loop {
+            match self.next_event()? {
+                Event::Progress(ev) if ev.id == id => on_progress(&ev),
+                Event::Done(resp) if resp.id == id => return Ok(resp),
+                Event::Error { id: eid, code, message }
+                    if eid == Some(id) || eid.is_none() =>
+                {
+                    match message {
+                        Some(m) => bail!("server error: {code} ({m})"),
+                        None => bail!("server error: {code}"),
+                    }
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Gracefully halt a request by id.  The halted request finishes
+    /// with a NORMAL response carrying its current decode and
+    /// `halt_reason:"client"`.
+    ///
+    /// To halt based on streamed completeness, drive the stream
+    /// yourself ([`Self::submit`] + [`Self::next_event`]) and call
+    /// this between events — `generate_with`'s callback cannot call
+    /// back into the client (it borrows it for the whole call); see
+    /// the streaming integration tests for the pattern.
+    pub fn halt(&mut self, id: u64) -> Result<HaltAck> {
+        self.send_line(&Command::Halt { id }.to_json().encode())?;
+        loop {
+            match self.read_event()? {
+                Event::HaltAck { id: aid, found, state } if aid == id => {
+                    return Ok(HaltAck { found, state });
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Cancel (abort) a queued or running request by id; the submitter
+    /// receives a typed `cancelled` error.
+    pub fn cancel(&mut self, id: u64) -> Result<CancelAck> {
+        self.send_line(&Command::Cancel { id }.to_json().encode())?;
+        loop {
+            match self.read_event()? {
+                Event::CancelAck { id: aid, cancelled, state }
+                    if aid == id =>
+                {
+                    return Ok(CancelAck { cancelled, state });
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Merged fleet metrics snapshot (the unwrapped `data` object of
+    /// the v1 metrics frame — same shape the legacy `{"cmd":"metrics"}`
+    /// control returns).
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.send_line(&Command::Metrics.to_json().encode())?;
+        loop {
+            match self.read_event()? {
+                Event::Metrics(data) => return Ok(data),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Legacy escape hatch: send one bare (pre-envelope) JSON line and
+    /// read exactly one reply line.  For compatibility tests against
+    /// the legacy one-shot protocol — do not interleave with in-flight
+    /// v1 streams on the same connection.
+    pub fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
+        self.send_line(&msg.encode())?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("connection closed by server");
+        }
+        Json::parse(line.trim_end())
+            .map_err(|e| anyhow::anyhow!("response parse: {e}"))
+    }
+}

@@ -26,29 +26,39 @@ use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority};
-use super::scheduler::{CancelOutcome, GenOutcome, Scheduler, ServeError};
+use super::scheduler::{
+    CancelOutcome, GenOutcome, ProgressTx, Scheduler, ServeError,
+};
 use super::worker::{self, WorkerConfig};
-use crate::sampler::Family;
+use crate::sampler::FamilyId;
 use crate::util::json::Json;
 
 pub struct EngineConfig {
     pub artifact_dir: String,
     /// family assumed for requests that don't carry a `family` field —
     /// every pre-multi-family client keeps working unchanged
-    pub default_family: Family,
+    pub default_family: FamilyId,
     /// one worker thread per entry: `(family, batch)` — the model
     /// family that worker serves and the batch size it requests
     /// (resolved to the nearest compiled artifact).  Mixing entries
     /// shards traffic by latency class *and* family — e.g.
-    /// `vec![(Ddlm, 1), (Ddlm, 8), (Ssd, 8)]` runs a ddlm latency
-    /// shard, a ddlm throughput shard, and an ssd shard behind one
-    /// scheduler.
-    pub worker_specs: Vec<(Family, usize)>,
+    /// `vec![(Ddlm.into(), 1), (Ddlm.into(), 8), (Ssd.into(), 8)]`
+    /// runs a ddlm latency shard, a ddlm throughput shard, and an ssd
+    /// shard behind one scheduler.  Families are registry ids, so a
+    /// kernel registered at runtime is a valid shard spec.
+    pub worker_specs: Vec<(FamilyId, usize)>,
     /// trained checkpoints (PBIN) per family; workers of a family
     /// without an entry fall back to init params
-    pub checkpoints: Vec<(Family, String)>,
+    pub checkpoints: Vec<(FamilyId, String)>,
+    /// fleet-wide schedule envelope, used by every family without an
+    /// override below
     pub t_max: f32,
     pub t_min: f32,
+    /// per-family `(family, t_max, t_min)` overrides (ROADMAP open
+    /// item): a family's workers build their schedules inside this
+    /// envelope instead of the fleet default.  Surfaced to clients in
+    /// the metrics snapshot under `"families"`.
+    pub schedule_overrides: Vec<(FamilyId, f32, f32)>,
     /// admission-queue bound (all priority classes combined); submits
     /// beyond it are rejected with a typed `overloaded` error
     pub queue_depth: usize,
@@ -59,7 +69,11 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
-    pub fn new(artifact_dir: &str, family: Family) -> EngineConfig {
+    pub fn new(
+        artifact_dir: &str,
+        family: impl Into<FamilyId>,
+    ) -> EngineConfig {
+        let family = family.into();
         EngineConfig {
             artifact_dir: artifact_dir.to_string(),
             default_family: family,
@@ -67,27 +81,43 @@ impl EngineConfig {
             checkpoints: Vec::new(),
             t_max: 10.0,
             t_min: 0.05,
+            schedule_overrides: Vec::new(),
             queue_depth: 256,
             class_queue_bounds: None,
         }
     }
 
     /// Probe `runs_dir` for per-family trained checkpoints
-    /// (`<runs_dir>/<family>.pbin`) for every family in `worker_specs`
-    /// and register each one found (families with an explicit entry
-    /// keep it) — the one checkpoint-discovery path shared by the CLI,
-    /// examples and benches.
+    /// (`<runs_dir>/<artifact_prefix>.pbin`) for every family in
+    /// `worker_specs` and register each one found (families with an
+    /// explicit entry keep it) — the one checkpoint-discovery path
+    /// shared by the CLI, examples and benches.  Registered wrapper
+    /// kernels discover the checkpoint of the family whose artifacts
+    /// they reuse.
     pub fn discover_checkpoints(&mut self, runs_dir: &str) {
-        let fams: Vec<Family> =
+        let fams: Vec<FamilyId> =
             self.worker_specs.iter().map(|&(f, _)| f).collect();
         for f in fams {
-            let path = format!("{runs_dir}/{}.pbin", f.name());
+            let path = format!(
+                "{runs_dir}/{}.pbin",
+                f.kernel().artifact_prefix()
+            );
             if std::path::Path::new(&path).exists()
                 && !self.checkpoints.iter().any(|(cf, _)| *cf == f)
             {
                 self.checkpoints.push((f, path));
             }
         }
+    }
+
+    /// Resolved `(t_max, t_min)` for one family: its override, else
+    /// the fleet default.
+    fn schedule_for(&self, family: FamilyId) -> (f32, f32) {
+        self.schedule_overrides
+            .iter()
+            .find(|&&(f, ..)| f == family)
+            .map(|&(_, t_max, t_min)| (t_max, t_min))
+            .unwrap_or((self.t_max, self.t_min))
     }
 }
 
@@ -96,7 +126,10 @@ impl EngineConfig {
 pub struct EngineHandle {
     sched: Arc<Scheduler>,
     /// (family, metrics) per worker, in spawn order
-    worker_metrics: Vec<(Family, Arc<Mutex<Metrics>>)>,
+    worker_metrics: Vec<(FamilyId, Arc<Mutex<Metrics>>)>,
+    /// resolved `(family, t_max, t_min)` per served family — the
+    /// schedule envelope clients see in the metrics snapshot
+    schedule_envelope: Vec<(FamilyId, f32, f32)>,
 }
 
 impl EngineHandle {
@@ -104,8 +137,23 @@ impl EngineHandle {
     /// (overload, cancellation, deadline expiry) arrive through the
     /// channel as `Err(ServeError)`.
     pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenOutcome> {
+        self.submit_with_progress(req, None)
+    }
+
+    /// [`Self::submit`] with an optional progress subscriber: the
+    /// owning worker streams a `ProgressEvent` every
+    /// `req.progress_every` executed steps until the request finishes
+    /// (sender dropped = end of stream).  Admission failures still
+    /// arrive through the returned outcome channel.
+    pub fn submit_with_progress(
+        &self,
+        req: GenRequest,
+        progress: Option<ProgressTx>,
+    ) -> mpsc::Receiver<GenOutcome> {
         let (tx, rx) = mpsc::channel();
-        if let Err(e) = self.sched.submit(req, tx.clone()) {
+        if let Err(e) =
+            self.sched.submit_with_progress(req, tx.clone(), progress)
+        {
             let _ = tx.send(Err(e));
         }
         rx
@@ -130,6 +178,14 @@ impl EngineHandle {
     /// Cancel a queued or running request by id.
     pub fn cancel(&self, id: u64) -> CancelOutcome {
         self.sched.cancel(id)
+    }
+
+    /// Gracefully halt a queued or running request by id: the
+    /// submitter receives a *normal* completion with the current x0
+    /// decode and `halt_reason:"client"` — the client-visible form of
+    /// the paper's early exit, distinct from [`Self::cancel`].
+    pub fn halt(&self, id: u64) -> CancelOutcome {
+        self.sched.halt(id)
     }
 
     /// Merged fleet snapshot: the scheduler's admission metrics folded
@@ -166,6 +222,23 @@ impl EngineHandle {
             Json::num(self.sched.running_count() as f64),
         );
         m.insert("workers".to_string(), Json::Arr(per_worker));
+        // per-family schedule envelope (t_max/t_min, including any
+        // per-family overrides) so remote clients can see the schedule
+        // each family's workers generate under
+        let families: Vec<(&str, Json)> = self
+            .schedule_envelope
+            .iter()
+            .map(|&(f, t_max, t_min)| {
+                (
+                    f.name(),
+                    Json::obj(vec![
+                        ("t_max", Json::num(t_max as f64)),
+                        ("t_min", Json::num(t_min as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        m.insert("families".to_string(), Json::obj(families));
         Ok(Json::Obj(m))
     }
 
@@ -213,7 +286,7 @@ impl EngineJoin {
 /// the fleet join handle (joining after `shutdown()` surfaces worker
 /// errors).
 pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
-    let families: Vec<Family> =
+    let families: Vec<FamilyId> =
         cfg.worker_specs.iter().map(|&(f, _)| f).collect();
     // a default family nobody serves would reject every family-less
     // (pre-multi-family) request with invalid_request forever — fall
@@ -248,6 +321,7 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
     let sched = Arc::new(sched);
     let mut handles = Vec::new();
     let mut worker_metrics = Vec::new();
+    let mut schedule_envelope: Vec<(FamilyId, f32, f32)> = Vec::new();
     for (id, &(family, batch)) in cfg.worker_specs.iter().enumerate() {
         let m = Arc::new(Mutex::new(Metrics::default()));
         worker_metrics.push((family, m.clone()));
@@ -256,6 +330,11 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
             .iter()
             .find(|(f, _)| *f == family)
             .map(|(_, p)| p.clone());
+        // per-family t_max/t_min override, else the fleet default
+        let (t_max, t_min) = cfg.schedule_for(family);
+        if !schedule_envelope.iter().any(|&(f, ..)| f == family) {
+            schedule_envelope.push((family, t_max, t_min));
+        }
         handles.push(worker::spawn(
             WorkerConfig {
                 id,
@@ -263,8 +342,8 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
                 family,
                 batch,
                 checkpoint,
-                t_max: cfg.t_max,
-                t_min: cfg.t_min,
+                t_max,
+                t_min,
             },
             sched.clone(),
             m,
@@ -274,6 +353,7 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
         EngineHandle {
             sched,
             worker_metrics,
+            schedule_envelope,
         },
         EngineJoin { handles },
     )

@@ -1,0 +1,498 @@
+//! Versioned wire envelope (v1): typed frames over a multiplexed
+//! JSON-lines connection.
+//!
+//! Every v1 frame is one JSON object per line carrying `"v":1` and a
+//! `"type"` tag; a line *without* a `v` key is a legacy one-shot
+//! request/control and is served by the pre-envelope path unchanged
+//! (autodetect is per line, so one connection may mix both).
+//!
+//! Client → server ([`Command`]):
+//!
+//! | frame | shape |
+//! |---|---|
+//! | submit  | `{"v":1,"type":"submit", ...GenRequest fields...}` — may set `progress_every:K` |
+//! | cancel  | `{"v":1,"type":"cancel","id":N}` — abort, answers the submitter with `error:"cancelled"` |
+//! | halt    | `{"v":1,"type":"halt","id":N}` — *graceful* finalize: the submitter receives a normal `done` with the current x0 decode and `halt_reason:"client"` |
+//! | metrics | `{"v":1,"type":"metrics"}` |
+//!
+//! Server → client ([`Event`]):
+//!
+//! | frame | shape |
+//! |---|---|
+//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..}` |
+//! | done     | `{"v":1,"type":"done", ...GenResponse fields...}` |
+//! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT]}` |
+//! | cancel   | ack: `{"v":1,"type":"cancel","id":N,"cancelled":BOOL,"state":"queued"\|"running"\|"not_found"}` |
+//! | halt     | ack: `{"v":1,"type":"halt","id":N,"found":BOOL,"state":...}` |
+//! | metrics  | `{"v":1,"type":"metrics","data":{...snapshot...}}` |
+//!
+//! Error codes: the scheduler's typed serving errors (`overloaded`,
+//! `cancelled`, `deadline_exceeded`, `unavailable`, `invalid_request`,
+//! `duplicate_id`) plus `unsupported_version` (a `v` the server does
+//! not speak) and `internal`.  Malformed frames map to
+//! `invalid_request` with a human-readable `message`.
+//!
+//! Frames of different requests interleave freely on one connection
+//! (that is the multiplexing); *within* one request, every `progress`
+//! event precedes its terminal `done`/`error` frame.
+
+use anyhow::{anyhow, Result};
+
+use super::request::{GenRequest, GenResponse, ProgressEvent};
+use crate::halting::StepStats;
+use crate::util::json::Json;
+
+/// The one protocol version this build speaks.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// True when a parsed line is a versioned envelope frame; false means
+/// the legacy bare-object protocol.
+pub fn is_envelope(j: &Json) -> bool {
+    j.get("v").is_some()
+}
+
+/// Typed failure turning a line into a [`Command`]; [`Self::code`] is
+/// the wire error code, `Display` the human-readable message.
+#[derive(Debug)]
+pub enum FrameError {
+    UnsupportedVersion(String),
+    MissingType,
+    UnknownType(String),
+    MissingId(&'static str),
+    BadSubmit(String),
+}
+
+impl FrameError {
+    pub fn code(&self) -> &'static str {
+        match self {
+            FrameError::UnsupportedVersion(_) => "unsupported_version",
+            _ => "invalid_request",
+        }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::UnsupportedVersion(v) => write!(
+                f,
+                "unsupported protocol version {v} (this server speaks \
+                 v{PROTOCOL_VERSION})"
+            ),
+            FrameError::MissingType => f.write_str("missing frame type"),
+            FrameError::UnknownType(t) => write!(f, "unknown frame type {t:?}"),
+            FrameError::MissingId(t) => {
+                write!(f, "{t} frame needs an integer id")
+            }
+            FrameError::BadSubmit(m) => write!(f, "bad submit: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A client-side frame (what the server parses off the wire).
+pub enum Command {
+    Submit(Box<GenRequest>),
+    Cancel { id: u64 },
+    Halt { id: u64 },
+    Metrics,
+}
+
+impl Command {
+    pub fn from_json(j: &Json) -> Result<Command, FrameError> {
+        match j.get("v").and_then(Json::as_u64) {
+            Some(PROTOCOL_VERSION) => {}
+            _ => {
+                return Err(FrameError::UnsupportedVersion(
+                    j.get("v").map_or("?".to_string(), |v| v.encode()),
+                ))
+            }
+        }
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or(FrameError::MissingType)?;
+        let need_id = |t| {
+            j.get("id").and_then(Json::as_u64).ok_or(FrameError::MissingId(t))
+        };
+        match ty {
+            "submit" => GenRequest::from_json(j)
+                .map(|r| Command::Submit(Box::new(r)))
+                .map_err(|e| FrameError::BadSubmit(format!("{e:#}"))),
+            "cancel" => Ok(Command::Cancel { id: need_id("cancel")? }),
+            "halt" => Ok(Command::Halt { id: need_id("halt")? }),
+            "metrics" => Ok(Command::Metrics),
+            other => Err(FrameError::UnknownType(other.to_string())),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = match self {
+            Command::Submit(req) => {
+                let Json::Obj(m) = req.to_json() else { unreachable!() };
+                m
+            }
+            Command::Cancel { id } | Command::Halt { id } => {
+                let Json::Obj(m) =
+                    Json::obj(vec![("id", Json::uint(*id))])
+                else {
+                    unreachable!()
+                };
+                m
+            }
+            Command::Metrics => Default::default(),
+        };
+        let ty = match self {
+            Command::Submit(_) => "submit",
+            Command::Cancel { .. } => "cancel",
+            Command::Halt { .. } => "halt",
+            Command::Metrics => "metrics",
+        };
+        m.insert("v".to_string(), Json::uint(PROTOCOL_VERSION));
+        m.insert("type".to_string(), Json::str(ty));
+        Json::Obj(m)
+    }
+}
+
+/// A server-side frame (what a v1 client parses off the wire).
+#[derive(Debug)]
+pub enum Event {
+    Progress(ProgressEvent),
+    Done(GenResponse),
+    Error {
+        /// absent when the failing line carried no parseable id
+        id: Option<u64>,
+        code: String,
+        message: Option<String>,
+    },
+    CancelAck {
+        id: u64,
+        cancelled: bool,
+        state: String,
+    },
+    HaltAck {
+        id: u64,
+        found: bool,
+        state: String,
+    },
+    Metrics(Json),
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let (ty, mut m) = match self {
+            Event::Progress(p) => {
+                let Json::Obj(m) = Json::obj(vec![
+                    ("id", Json::uint(p.id)),
+                    ("step", Json::uint(p.step as u64)),
+                    ("steps_budget", Json::uint(p.steps_budget as u64)),
+                    ("entropy", Json::num(p.stats.entropy as f64)),
+                    ("kl", Json::num(p.stats.kl as f64)),
+                    ("switches", Json::num(p.stats.switches as f64)),
+                    ("norm_x", Json::num(p.stats.norm_x as f64)),
+                    ("norm_x0", Json::num(p.stats.norm_x0 as f64)),
+                ]) else {
+                    unreachable!()
+                };
+                ("progress", m)
+            }
+            Event::Done(resp) => {
+                let Json::Obj(m) = resp.to_json() else { unreachable!() };
+                ("done", m)
+            }
+            Event::Error { id, code, message } => {
+                let mut fields = vec![("error", Json::str(code.clone()))];
+                if let Some(id) = id {
+                    fields.push(("id", Json::uint(*id)));
+                }
+                if let Some(msg) = message {
+                    fields.push(("message", Json::str(msg.clone())));
+                }
+                let Json::Obj(m) = Json::obj(fields) else { unreachable!() };
+                ("error", m)
+            }
+            Event::CancelAck { id, cancelled, state } => {
+                let Json::Obj(m) = Json::obj(vec![
+                    ("id", Json::uint(*id)),
+                    ("cancelled", Json::Bool(*cancelled)),
+                    ("state", Json::str(state.clone())),
+                ]) else {
+                    unreachable!()
+                };
+                ("cancel", m)
+            }
+            Event::HaltAck { id, found, state } => {
+                let Json::Obj(m) = Json::obj(vec![
+                    ("id", Json::uint(*id)),
+                    ("found", Json::Bool(*found)),
+                    ("state", Json::str(state.clone())),
+                ]) else {
+                    unreachable!()
+                };
+                ("halt", m)
+            }
+            Event::Metrics(data) => {
+                let Json::Obj(m) =
+                    Json::obj(vec![("data", data.clone())])
+                else {
+                    unreachable!()
+                };
+                ("metrics", m)
+            }
+        };
+        m.insert("v".to_string(), Json::uint(PROTOCOL_VERSION));
+        m.insert("type".to_string(), Json::str(ty));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Event> {
+        match j.get("v").and_then(Json::as_u64) {
+            Some(PROTOCOL_VERSION) => {}
+            other => {
+                return Err(anyhow!("unsupported event version {other:?}"))
+            }
+        }
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event without a type"))?;
+        let need_id = || {
+            j.get("id")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("{ty} event without an integer id"))
+        };
+        let need_str = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{ty} event missing {k}"))
+        };
+        let stat = |k: &str| {
+            j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as f32
+        };
+        Ok(match ty {
+            "progress" => Event::Progress(ProgressEvent {
+                id: need_id()?,
+                step: j
+                    .get("step")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("progress event missing step"))?,
+                steps_budget: j
+                    .get("steps_budget")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                stats: StepStats {
+                    entropy: stat("entropy"),
+                    kl: stat("kl"),
+                    switches: stat("switches"),
+                    norm_x: stat("norm_x"),
+                    norm_x0: stat("norm_x0"),
+                },
+            }),
+            "done" => Event::Done(GenResponse::from_json(j)?),
+            "error" => Event::Error {
+                id: j.get("id").and_then(Json::as_u64),
+                code: need_str("error")?,
+                message: j
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            },
+            "cancel" => Event::CancelAck {
+                id: need_id()?,
+                cancelled: j
+                    .get("cancelled")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                state: need_str("state")?,
+            },
+            "halt" => Event::HaltAck {
+                id: need_id()?,
+                found: j
+                    .get("found")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                state: need_str("state")?,
+            },
+            "metrics" => Event::Metrics(
+                j.get("data").cloned().unwrap_or(Json::Null),
+            ),
+            other => anyhow::bail!("unknown event type {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halting::parse_policy;
+
+    #[test]
+    fn legacy_lines_are_not_envelopes() {
+        let legacy =
+            Json::parse(r#"{"id":1,"steps":10,"criterion":"none"}"#).unwrap();
+        assert!(!is_envelope(&legacy));
+        let v1 = Json::parse(r#"{"v":1,"type":"metrics"}"#).unwrap();
+        assert!(is_envelope(&v1));
+    }
+
+    #[test]
+    fn command_roundtrip_all_variants() {
+        let mut req = GenRequest::new(u64::MAX, 200);
+        req.policy = parse_policy("any(entropy:0.25,patience:20:0)").unwrap();
+        req.progress_every = Some(50);
+        for cmd in [
+            Command::Submit(Box::new(req)),
+            Command::Cancel { id: 7 },
+            Command::Halt { id: (1 << 53) + 1 },
+            Command::Metrics,
+        ] {
+            let j = cmd.to_json();
+            assert_eq!(j.get("v").and_then(Json::as_u64), Some(1));
+            let encoded = j.encode();
+            let back =
+                Command::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+            match (&cmd, &back) {
+                (Command::Submit(a), Command::Submit(b)) => {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(a.progress_every, b.progress_every);
+                    assert_eq!(a.policy.to_spec(), b.policy.to_spec());
+                }
+                (Command::Cancel { id: a }, Command::Cancel { id: b })
+                | (Command::Halt { id: a }, Command::Halt { id: b }) => {
+                    assert_eq!(a, b)
+                }
+                (Command::Metrics, Command::Metrics) => {}
+                _ => panic!("variant changed over the wire: {encoded}"),
+            }
+        }
+    }
+
+    #[test]
+    fn commands_reject_bad_versions_and_types() {
+        let e = Command::from_json(
+            &Json::parse(r#"{"v":2,"type":"submit","id":1,"steps":5}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(e.code(), "unsupported_version");
+        let e = Command::from_json(
+            &Json::parse(r#"{"v":1,"type":"selfdestruct"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(e.code(), "invalid_request");
+        let e = Command::from_json(
+            &Json::parse(r#"{"v":1,"type":"halt"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(e.code(), "invalid_request");
+        assert!(e.to_string().contains("halt"));
+        // a submit with a malformed prefix is a typed bad-submit
+        let e = Command::from_json(
+            &Json::parse(
+                r#"{"v":1,"type":"submit","id":1,"steps":5,"prefix":["x"]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(e.code(), "invalid_request");
+    }
+
+    #[test]
+    fn event_roundtrip_all_variants() {
+        let events = vec![
+            Event::Progress(ProgressEvent {
+                id: u64::MAX,
+                step: 50,
+                steps_budget: 200,
+                stats: StepStats {
+                    entropy: 0.5,
+                    kl: 0.25,
+                    switches: 3.0,
+                    norm_x: 8.0,
+                    norm_x0: 7.5,
+                },
+            }),
+            Event::Error {
+                id: Some(4),
+                code: "overloaded".to_string(),
+                message: None,
+            },
+            Event::Error {
+                id: None,
+                code: "invalid_request".to_string(),
+                message: Some("bad criterion".to_string()),
+            },
+            Event::CancelAck {
+                id: 9,
+                cancelled: true,
+                state: "queued".to_string(),
+            },
+            Event::HaltAck {
+                id: 9,
+                found: true,
+                state: "running".to_string(),
+            },
+            Event::Metrics(Json::obj(vec![(
+                "requests_completed",
+                Json::uint(3),
+            )])),
+        ];
+        for ev in events {
+            let encoded = ev.to_json().encode();
+            let back =
+                Event::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+            match (&ev, &back) {
+                (Event::Progress(a), Event::Progress(b)) => {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(a.step, b.step);
+                    assert_eq!(a.steps_budget, b.steps_budget);
+                    assert!((a.stats.entropy - b.stats.entropy).abs() < 1e-6);
+                    assert!((a.stats.kl - b.stats.kl).abs() < 1e-9);
+                }
+                (
+                    Event::Error { id: a, code: ca, message: ma },
+                    Event::Error { id: b, code: cb, message: mb },
+                ) => {
+                    assert_eq!((a, ca, ma), (b, cb, mb));
+                }
+                (
+                    Event::CancelAck { id: a, cancelled: xa, state: sa },
+                    Event::CancelAck { id: b, cancelled: xb, state: sb },
+                ) => assert_eq!((a, xa, sa), (b, xb, sb)),
+                (
+                    Event::HaltAck { id: a, found: xa, state: sa },
+                    Event::HaltAck { id: b, found: xb, state: sb },
+                ) => assert_eq!((a, xa, sa), (b, xb, sb)),
+                (Event::Metrics(a), Event::Metrics(b)) => assert_eq!(a, b),
+                _ => panic!("variant changed over the wire: {encoded}"),
+            }
+        }
+    }
+
+    #[test]
+    fn done_event_roundtrips_response() {
+        let resp = GenResponse {
+            id: (1 << 60) + 3,
+            tokens: vec![5, 6, 7],
+            steps_executed: 120,
+            steps_budget: 200,
+            halted_early: true,
+            halt_reason: Some("client".to_string()),
+            latency_ms: 45.5,
+            queue_ms: 1.25,
+            family: None,
+            final_stats: StepStats::default(),
+        };
+        let encoded = Event::Done(resp).to_json().encode();
+        let Event::Done(back) =
+            Event::from_json(&Json::parse(&encoded).unwrap()).unwrap()
+        else {
+            panic!("not a done frame: {encoded}")
+        };
+        assert_eq!(back.id, (1 << 60) + 3);
+        assert_eq!(back.halt_reason.as_deref(), Some("client"));
+        assert_eq!(back.tokens, vec![5, 6, 7]);
+    }
+}

@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::request::{GenResponse, Priority};
-use crate::sampler::Family;
+use crate::sampler::FamilyId;
 
 /// Fixed-bucket latency histogram (milliseconds).
 #[derive(Clone, Debug)]
@@ -232,10 +232,14 @@ impl Metrics {
     /// (cancelled / deadline-expired) before completing — they count in
     /// the global total AND the family's lane, so per-family steps
     /// always reconcile with the fleet total.
-    pub fn record_aborted_steps(&mut self, family: Family, steps: u64) {
+    pub fn record_aborted_steps(
+        &mut self,
+        family: impl Into<FamilyId>,
+        steps: u64,
+    ) {
         self.steps_executed += steps;
         self.per_family
-            .entry(family.name().to_string())
+            .entry(family.into().name().to_string())
             .or_default()
             .steps_executed += steps;
     }
@@ -255,8 +259,9 @@ impl Metrics {
         &mut self,
         resp: &GenResponse,
         prio: Priority,
-        family: Family,
+        family: impl Into<FamilyId>,
     ) {
+        let family = family.into();
         self.requests_completed += 1;
         self.steps_executed += resp.steps_executed as u64;
         self.steps_saved +=
@@ -416,6 +421,7 @@ impl Metrics {
 mod tests {
     use super::*;
     use crate::coordinator::request::GenRequest;
+    use crate::sampler::Family;
 
     #[test]
     fn histogram_mean_and_quantiles() {
@@ -518,7 +524,7 @@ mod tests {
             halt_reason: Some("fixed".to_string()),
             latency_ms: 12.0,
             queue_ms: 3.0,
-            family: Some(Family::Ddlm),
+            family: Some(Family::Ddlm.into()),
             final_stats: Default::default(),
         };
         m.record_completion(&worker, Priority::High, Family::Ddlm);
@@ -551,7 +557,7 @@ mod tests {
             halt_reason: Some("entropy".to_string()),
             latency_ms: 8.0,
             queue_ms: 1.0,
-            family: Some(fam),
+            family: Some(fam.into()),
             final_stats: Default::default(),
         };
         m.record_completion(&resp(1, Family::Ddlm), Priority::Normal, Family::Ddlm);
@@ -595,7 +601,7 @@ mod tests {
                     halt_reason: None,
                     latency_ms: 4.0,
                     queue_ms: 0.5,
-                    family: Some(fam),
+                    family: Some(fam.into()),
                     final_stats: Default::default(),
                 };
                 m.record_completion(&r, Priority::Normal, fam);

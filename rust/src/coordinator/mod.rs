@@ -7,9 +7,12 @@
 //!   classes (high/normal/low, optional per-class bounds), per-request
 //!   deadlines, explicit cancellation, backpressure (full queue or
 //!   class ⇒ typed `overloaded` rejection instead of unbounded growth),
-//!   per-family request routing, and boundary validation (overlong
+//!   per-family request routing, boundary validation (overlong
 //!   prefix or unserved family ⇒ `invalid_request`, in-flight id reuse
-//!   ⇒ `duplicate_id`, zero-step budgets answered without a worker).
+//!   ⇒ `duplicate_id`, zero-step budgets answered without a worker),
+//!   the graceful client `halt` verb (finalize with the current
+//!   decode, `halt_reason:"client"`), and per-request progress
+//!   subscribers.
 //! * [`worker`] — N worker shards, each an OS thread owning one PJRT
 //!   runtime and one batched `Session` (continuous batching with
 //!   early-exit slot recycling).  Shards may bind different compiled
@@ -20,23 +23,45 @@
 //!   (`EngineConfig::worker_specs` = `(family, batch)` per shard);
 //!   [`EngineHandle`] exposes `submit`/`try_submit`/`generate`,
 //!   `cancel(id)`, merged fleet `metrics()`, and `shutdown()`.
-//! * [`server`] — TCP JSON-lines front-end (wire fields `priority`,
-//!   `deadline_ms`, `family`, control cmds `metrics`/`cancel`) with a
-//!   joinable `Server::stop()`.
+//! * [`envelope`] — the versioned (v1) wire protocol: typed frames
+//!   (`submit`/`progress`/`done`/`error`/`cancel`/`halt`/`metrics`)
+//!   over a multiplexed connection, with an error taxonomy and
+//!   per-line legacy autodetect (lines without a `"v"` key take the
+//!   one-shot path unchanged).
+//! * [`server`] — TCP JSON-lines front-end: per-connection writer
+//!   thread multiplexing legacy replies, v1 acks and streaming
+//!   forwarders; legacy wire fields `priority`, `deadline_ms`,
+//!   `family` and control cmds `metrics`/`cancel` behave exactly as
+//!   before; joinable `Server::stop()`.
+//! * [`client`] — the first-class typed [`Client`] (submit / stream /
+//!   halt / cancel / metrics) shared by the CLI, examples, benches and
+//!   tests.
 //! * [`metrics`] — per-worker metrics merged into one fleet snapshot:
 //!   queue-depth and slot-occupancy gauges, per-priority latency
 //!   histograms, `rejected_overloaded`/`cancelled`/`deadline_exceeded`
-//!   counters, per-reason `halted_by_*`, and per-family lanes
-//!   (`requests_completed_<fam>`, `latency_p50_ms_<fam>`, ...).
+//!   counters, per-reason `halted_by_*` (client halts appear as
+//!   `halted_by_client`), per-family lanes
+//!   (`requests_completed_<fam>`, `latency_p50_ms_<fam>`, ...), and
+//!   the per-family schedule envelope under `"families"`.
+//!
+//! Families on the wire are open: request/response `family` strings
+//! resolve through `sampler::registry`, so kernels registered at
+//! runtime serve end-to-end without touching the `Family` enum.
 
+pub mod client;
 pub mod engine;
+pub mod envelope;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod worker;
 
+pub use client::{CancelAck, Client, HaltAck};
 pub use engine::{start, EngineConfig, EngineHandle, EngineJoin};
-pub use request::{GenRequest, GenResponse, Priority};
-pub use scheduler::{CancelOutcome, GenOutcome, Scheduler, ServeError};
-pub use server::{Client, Server};
+pub use envelope::{Command, Event, PROTOCOL_VERSION};
+pub use request::{GenRequest, GenResponse, Priority, ProgressEvent};
+pub use scheduler::{
+    CancelOutcome, GenOutcome, ProgressTx, Scheduler, ServeError,
+};
+pub use server::Server;

@@ -9,15 +9,30 @@
 //! normal) picks the admission class, `deadline_ms` (optional) bounds the
 //! request's total wall-clock time — the scheduler answers with a typed
 //! `deadline_exceeded` error if it can't make it — and `family`
-//! (optional: "ddlm" | "ssd" | "plaid") routes the request to a worker
-//! shard of that model family in a heterogeneous fleet.  Requests that
-//! omit `family` go to the fleet's default family, so every pre-split
-//! client keeps working unchanged; responses echo the serving family.
+//! (optional) routes the request to a worker shard of that model family
+//! in a heterogeneous fleet.  Family strings resolve through the open
+//! `sampler::registry` (built-ins `"ddlm" | "ssd" | "plaid"` plus any
+//! kernel registered at runtime), so the wire is not closed over the
+//! `Family` enum.  Requests that omit `family` go to the fleet's
+//! default family, so every pre-split client keeps working unchanged;
+//! responses echo the serving family.
+//!
+//! Integer fields (`id`, `seed`, `prefix` / `tokens` entries, step
+//! counts) travel as *exact* integers — `util::json` holds integer
+//! literals losslessly, so a u64 id above 2^53 round-trips bit-exact
+//! instead of silently rounding through f64.  A non-integer entry in
+//! `prefix` is a hard parse error (`invalid_request` on the wire), not
+//! a silent truncation of the conditioning text.
+//!
+//! `progress_every: K` (v1 envelope connections only) subscribes the
+//! request to throttled per-step `progress` events carrying the paper's
+//! completeness estimates ([`StepStats`]: entropy, KL, argmax switches)
+//! every K executed steps — see `coordinator::envelope`.
 
 use anyhow::{anyhow, Result};
 
 use crate::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt, StepStats};
-use crate::sampler::Family;
+use crate::sampler::registry::{self, FamilyId};
 use crate::util::json::Json;
 
 /// Admission class: the scheduler drains `High` before `Normal` before
@@ -80,10 +95,14 @@ pub struct GenRequest {
     /// total wall-clock budget from submission; expired requests are
     /// answered with a typed `deadline_exceeded` error (None = no limit)
     pub deadline_ms: Option<f64>,
-    /// model family to route to (wire field `family`); None = the
-    /// fleet's default family.  A family no live worker serves rejects
-    /// with a typed `invalid_request` at admission.
-    pub family: Option<Family>,
+    /// model family to route to (wire field `family`, resolved through
+    /// `sampler::registry`); None = the fleet's default family.  A
+    /// family no live worker serves rejects with a typed
+    /// `invalid_request` at admission.
+    pub family: Option<FamilyId>,
+    /// emit a `progress` event every K executed steps (v1 envelope
+    /// connections; ignored — never emitted — on legacy one-shot lines)
+    pub progress_every: Option<usize>,
 }
 
 impl GenRequest {
@@ -98,22 +117,23 @@ impl GenRequest {
             priority: Priority::Normal,
             deadline_ms: None,
             family: None,
+            progress_every: None,
         }
     }
 
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
-            ("id", Json::num(self.id as f64)),
+            ("id", Json::uint(self.id)),
             (
                 "prefix",
                 Json::Arr(
-                    self.prefix.iter().map(|&t| Json::num(t as f64)).collect(),
+                    self.prefix.iter().map(|&t| Json::int(t as i64)).collect(),
                 ),
             ),
-            ("steps", Json::num(self.n_steps as f64)),
+            ("steps", Json::uint(self.n_steps as u64)),
             ("criterion", Json::str(self.policy.to_spec())),
             ("noise_scale", Json::num(self.noise_scale as f64)),
-            ("seed", Json::num(self.seed as f64)),
+            ("seed", Json::uint(self.seed)),
             ("priority", Json::str(self.priority.name())),
         ];
         if let Some(d) = self.deadline_ms {
@@ -122,27 +142,42 @@ impl GenRequest {
         if let Some(f) = self.family {
             fields.push(("family", Json::str(f.name())));
         }
+        if let Some(k) = self.progress_every {
+            fields.push(("progress_every", Json::uint(k as u64)));
+        }
         Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<GenRequest> {
         let id = j
             .get("id")
-            .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("missing id"))? as u64;
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing or non-integer id"))?;
         let n_steps = j
             .get("steps")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("missing steps"))?;
-        let prefix = j
-            .get("prefix")
-            .and_then(Json::as_arr)
-            .map(|a| {
-                a.iter()
-                    .filter_map(|x| x.as_f64().map(|v| v as i32))
-                    .collect()
-            })
-            .unwrap_or_default();
+            .ok_or_else(|| anyhow!("missing or non-integer steps"))?;
+        // a malformed prefix entry is a hard rejection: silently
+        // dropping it would truncate the conditioning text
+        let prefix = match j.get("prefix") {
+            None => Vec::new(),
+            Some(p) => {
+                let arr = p
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("prefix must be an array"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, x) in arr.iter().enumerate() {
+                    let tok = x
+                        .as_i64()
+                        .and_then(|t| i32::try_from(t).ok())
+                        .ok_or_else(|| {
+                            anyhow!("prefix[{i}] is not an integer token")
+                        })?;
+                    out.push(tok);
+                }
+                out
+            }
+        };
         let policy = match j.get("criterion").and_then(Json::as_str) {
             Some(s) => parse_policy(s)
                 .ok_or_else(|| anyhow!("bad criterion {s:?}"))?,
@@ -153,14 +188,26 @@ impl GenRequest {
                 .ok_or_else(|| anyhow!("bad priority {s:?}"))?,
             None => Priority::Normal,
         };
-        // unknown family names are rejected at the wire boundary; a
+        // unknown family names are rejected at the wire boundary
+        // (lookup is the open registry, not the builtin enum); a
         // known-but-unserved family is the scheduler's typed
         // `invalid_request` instead
         let family = match j.get("family").and_then(Json::as_str) {
-            Some(s) => {
-                Some(Family::parse(s).ok_or_else(|| anyhow!("bad family {s:?}"))?)
-            }
+            Some(s) => Some(
+                registry::resolve(s)
+                    .ok_or_else(|| anyhow!("unknown family {s:?}"))?,
+            ),
             None => None,
+        };
+        let progress_every = match j.get("progress_every") {
+            None => None,
+            Some(k) => {
+                let k = k.as_usize().ok_or_else(|| {
+                    anyhow!("progress_every must be a non-negative integer")
+                })?;
+                // 0 = no throttle subscription (same as absent)
+                (k > 0).then_some(k)
+            }
         };
         Ok(GenRequest {
             id,
@@ -171,13 +218,27 @@ impl GenRequest {
                 .get("noise_scale")
                 .and_then(Json::as_f64)
                 .unwrap_or(1.0) as f32,
-            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(id as f64)
-                as u64,
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(id),
             priority,
             deadline_ms: j.get("deadline_ms").and_then(Json::as_f64),
             family,
+            progress_every,
         })
     }
+}
+
+/// Mid-generation progress notification for one request — the paper's
+/// completeness estimates ([`StepStats`]) sampled every
+/// `progress_every` executed steps, streamed to v1 envelope clients so
+/// they can act on completeness (e.g. issue a `halt`) while denoising
+/// runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressEvent {
+    pub id: u64,
+    /// steps executed so far (the event fires after this step)
+    pub step: usize,
+    pub steps_budget: usize,
+    pub stats: StepStats,
 }
 
 #[derive(Clone, Debug)]
@@ -194,7 +255,7 @@ pub struct GenResponse {
     pub queue_ms: f64,
     /// model family that served the request (wire field `family`;
     /// absent on responses from pre-multi-family servers)
-    pub family: Option<Family>,
+    pub family: Option<FamilyId>,
     pub final_stats: StepStats,
 }
 
@@ -227,15 +288,15 @@ impl GenResponse {
 
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
-            ("id", Json::num(self.id as f64)),
+            ("id", Json::uint(self.id)),
             (
                 "tokens",
                 Json::Arr(
-                    self.tokens.iter().map(|&t| Json::num(t as f64)).collect(),
+                    self.tokens.iter().map(|&t| Json::int(t as i64)).collect(),
                 ),
             ),
-            ("steps_executed", Json::num(self.steps_executed as f64)),
-            ("steps_budget", Json::num(self.steps_budget as f64)),
+            ("steps_executed", Json::uint(self.steps_executed as u64)),
+            ("steps_budget", Json::uint(self.steps_budget as u64)),
             ("halted_early", Json::Bool(self.halted_early)),
             ("latency_ms", Json::num(self.latency_ms)),
             ("queue_ms", Json::num(self.queue_ms)),
@@ -258,17 +319,32 @@ impl GenResponse {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow!("missing {k}"))
         };
+        let get_u = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("missing or non-integer {k}"))
+        };
+        let mut tokens = Vec::new();
+        for (i, x) in j
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing tokens"))?
+            .iter()
+            .enumerate()
+        {
+            tokens.push(
+                x.as_i64()
+                    .and_then(|t| i32::try_from(t).ok())
+                    .ok_or_else(|| {
+                        anyhow!("tokens[{i}] is not an integer token")
+                    })?,
+            );
+        }
         Ok(GenResponse {
-            id: get_f("id")? as u64,
-            tokens: j
-                .get("tokens")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("missing tokens"))?
-                .iter()
-                .filter_map(|x| x.as_f64().map(|v| v as i32))
-                .collect(),
-            steps_executed: get_f("steps_executed")? as usize,
-            steps_budget: get_f("steps_budget")? as usize,
+            id: get_u("id")?,
+            tokens,
+            steps_executed: get_u("steps_executed")? as usize,
+            steps_budget: get_u("steps_budget")? as usize,
             halted_early: j
                 .get("halted_early")
                 .and_then(Json::as_bool)
@@ -282,7 +358,7 @@ impl GenResponse {
             family: j
                 .get("family")
                 .and_then(Json::as_str)
-                .and_then(Family::parse),
+                .and_then(registry::resolve),
             final_stats: StepStats {
                 entropy: j.get("entropy").and_then(Json::as_f64).unwrap_or(0.0)
                     as f32,
@@ -300,6 +376,7 @@ impl GenResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampler::Family;
 
     #[test]
     fn request_json_roundtrip() {
@@ -309,7 +386,8 @@ mod tests {
         r.noise_scale = 0.9;
         r.priority = Priority::High;
         r.deadline_ms = Some(2500.0);
-        r.family = Some(Family::Ssd);
+        r.family = Some(Family::Ssd.into());
+        r.progress_every = Some(50);
         let j = r.to_json();
         assert_eq!(
             j.get("criterion").and_then(Json::as_str),
@@ -324,7 +402,71 @@ mod tests {
         assert!((back.noise_scale - 0.9).abs() < 1e-6);
         assert_eq!(back.priority, Priority::High);
         assert_eq!(back.deadline_ms, Some(2500.0));
-        assert_eq!(back.family, Some(Family::Ssd));
+        assert_eq!(back.family, Some(Family::Ssd.into()));
+        assert_eq!(back.progress_every, Some(50));
+    }
+
+    #[test]
+    fn ids_and_seeds_roundtrip_exactly_beyond_f64_precision() {
+        // u64 values above 2^53 must survive the wire bit-exact — the
+        // old as_f64 path silently rounded them
+        let mut r = GenRequest::new(u64::MAX, 10);
+        r.seed = (1u64 << 53) + 1;
+        let encoded = r.to_json().encode();
+        assert!(encoded.contains("18446744073709551615"), "{encoded}");
+        let back =
+            GenRequest::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(back.id, u64::MAX);
+        assert_eq!(back.seed, (1u64 << 53) + 1);
+        // non-integer ids are rejected, not rounded
+        assert!(GenRequest::from_json(
+            &Json::parse(r#"{"id":1.5,"steps":10}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn malformed_prefix_rejected_not_truncated() {
+        // a non-numeric prefix entry must be a hard error — the old
+        // filter_map silently dropped it, truncating the conditioning
+        for bad in [
+            r#"{"id":1,"steps":10,"prefix":[1,"a",3]}"#,
+            r#"{"id":1,"steps":10,"prefix":[1,1.5,3]}"#,
+            r#"{"id":1,"steps":10,"prefix":[1,null]}"#,
+            r#"{"id":1,"steps":10,"prefix":[99999999999]}"#, // > i32::MAX
+            r#"{"id":1,"steps":10,"prefix":7}"#,
+        ] {
+            assert!(
+                GenRequest::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted {bad}"
+            );
+        }
+        // well-formed prefixes (including negatives) still parse
+        let ok = GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"prefix":[3,0,-1]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ok.prefix, vec![3, 0, -1]);
+    }
+
+    #[test]
+    fn progress_every_zero_or_absent_disables_events() {
+        let none = GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(none.progress_every, None);
+        assert!(none.to_json().get("progress_every").is_none());
+        let zero = GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"progress_every":0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(zero.progress_every, None);
+        assert!(GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10,"progress_every":1.5}"#)
+                .unwrap()
+        )
+        .is_err());
     }
 
     #[test]
@@ -357,7 +499,7 @@ mod tests {
                 format!(r#"{{"id":1,"steps":10,"family":"{}"}}"#, fam.name());
             let back =
                 GenRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
-            assert_eq!(back.family, Some(fam));
+            assert_eq!(back.family, Some(fam.into()));
         }
     }
 
@@ -412,7 +554,7 @@ mod tests {
             halt_reason: Some("kl".to_string()),
             latency_ms: 45.5,
             queue_ms: 1.25,
-            family: Some(Family::Plaid),
+            family: Some(Family::Plaid.into()),
             final_stats: StepStats {
                 entropy: 0.5,
                 kl: 1e-4,
@@ -428,7 +570,7 @@ mod tests {
         assert!(back.halted_early);
         assert_eq!(back.halt_reason.as_deref(), Some("kl"));
         assert_eq!(back.steps_executed, 120);
-        assert_eq!(back.family, Some(Family::Plaid));
+        assert_eq!(back.family, Some(Family::Plaid.into()));
         assert!((back.final_stats.entropy - 0.5).abs() < 1e-6);
     }
 

@@ -26,12 +26,26 @@
 //!   owning worker enforces the same deadline once it is running);
 //! * **cancellation** — [`Scheduler::cancel`] removes a queued request
 //!   immediately, or flags a running one so its worker aborts it between
-//!   device steps.
+//!   device steps;
+//! * **graceful halting** — [`Scheduler::halt`] is the client-visible
+//!   form of the paper's early exit: a queued request is finalized here
+//!   with a zero-step decode, a running one is flagged so its worker
+//!   *completes* it between device steps — a normal response carrying
+//!   the current x0 decode and `halt_reason:"client"`, not an error;
+//! * **progress fan-out** — a submit may attach a progress subscriber
+//!   ([`ProgressTx`]); the owning worker streams throttled per-step
+//!   [`ProgressEvent`]s (the paper's completeness estimates) to it.
 //!
 //! The scheduler is shared (`Arc`) between every front-end thread and
 //! every worker; all state sits behind one mutex, with a condvar waking
 //! idle workers on new work or shutdown.  Lock discipline: the state
 //! mutex and the metrics mutex are never held at the same time.
+//!
+//! Families are [`FamilyId`]s from the open `sampler::registry`, so a
+//! kernel registered at runtime routes exactly like a built-in; the
+//! per-family tables grow on demand (an id registered after this
+//! scheduler was built simply counts zero live workers until a fleet
+//! serves it).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc;
@@ -39,8 +53,8 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
-use super::request::{GenRequest, GenResponse, Priority};
-use crate::sampler::Family;
+use super::request::{GenRequest, GenResponse, Priority, ProgressEvent};
+use crate::sampler::{Family, FamilyId};
 
 /// Typed serving-path failure, delivered instead of a [`GenResponse`]
 /// (on the wire: `{"error": "<as_str()>"}`).
@@ -92,21 +106,33 @@ pub type GenOutcome = Result<GenResponse, ServeError>;
 /// Reply channel for one request.
 pub type ReplyTx = mpsc::Sender<GenOutcome>;
 
-/// A queued request plus its reply channel, resolved family, and
-/// timing/deadline state.
+/// Progress-subscriber channel for one request: the owning worker sends
+/// a throttled [`ProgressEvent`] every `progress_every` executed steps.
+pub type ProgressTx = mpsc::Sender<ProgressEvent>;
+
+/// A queued request plus its reply channel, progress subscriber,
+/// resolved family, and timing/deadline state.
 pub struct QueuedReq {
     pub req: GenRequest,
     pub reply: ReplyTx,
+    /// per-step progress subscriber (None = one-shot request); dropped
+    /// by the worker on the first failed send
+    pub progress: Option<ProgressTx>,
     /// model family resolved at admission (request field, else the
     /// fleet default) — the routing key
-    pub family: Family,
+    pub family: FamilyId,
     pub submitted: Instant,
     /// absolute expiry computed from `req.deadline_ms` at submission
     pub deadline: Option<Instant>,
 }
 
 impl QueuedReq {
-    fn new(req: GenRequest, reply: ReplyTx, family: Family) -> QueuedReq {
+    fn new(
+        req: GenRequest,
+        reply: ReplyTx,
+        progress: Option<ProgressTx>,
+        family: FamilyId,
+    ) -> QueuedReq {
         let submitted = Instant::now();
         let deadline = req
             .deadline_ms
@@ -114,6 +140,7 @@ impl QueuedReq {
         QueuedReq {
             req,
             reply,
+            progress,
             family,
             submitted,
             deadline,
@@ -155,17 +182,49 @@ pub enum IdleWait {
     Exit,
 }
 
+/// What [`Scheduler::flagged`] found for a running request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flagged {
+    /// abort: answer `Err(Cancelled)`
+    Cancel,
+    /// graceful client halt: finalize with the current decode
+    Halt,
+}
+
+/// Grow-on-demand per-family counter table (indexed by
+/// `FamilyId::index()`; ids registered after construction land beyond
+/// the initial length and the table stretches to hold them).
+fn tab_inc(tab: &mut Vec<usize>, idx: usize) {
+    if idx >= tab.len() {
+        tab.resize(idx + 1, 0);
+    }
+    tab[idx] += 1;
+}
+
+fn tab_dec(tab: &mut [usize], idx: usize) {
+    if let Some(v) = tab.get_mut(idx) {
+        *v = v.saturating_sub(1);
+    }
+}
+
+fn tab_get(tab: &[usize], idx: usize) -> usize {
+    tab.get(idx).copied().unwrap_or(0)
+}
+
 struct State {
     queues: [VecDeque<QueuedReq>; Priority::COUNT],
     queued: usize,
     /// queued requests per family — the idle-wait predicate (a worker
     /// must not busy-wake on work only another family can serve)
-    queued_by_family: [usize; Family::COUNT],
+    queued_by_family: Vec<usize>,
     /// request id -> owning worker, for every admitted-but-unfinished
     /// request (cancellation routing)
     running: HashMap<u64, usize>,
     /// running ids flagged for cancellation
     cancel_flags: HashSet<u64>,
+    /// running ids flagged for graceful client halt (the worker
+    /// *completes* these with the current decode, not an error)
+    halt_flags: HashSet<u64>,
     /// every queued-or-running id; admission rejects duplicates so the
     /// cancellation routing above can never be corrupted by two live
     /// requests sharing an id
@@ -174,7 +233,7 @@ struct State {
     workers_live: usize,
     /// live workers per family — admission rejects families nobody
     /// serves with a typed `invalid_request`
-    family_live: [usize; Family::COUNT],
+    family_live: Vec<usize>,
     shutdown: bool,
 }
 
@@ -190,9 +249,9 @@ pub struct Scheduler {
     /// seq_len); None = unknown, workers enforce it themselves
     max_prefix: Option<usize>,
     /// family assumed for requests that don't name one
-    default_family: Family,
+    default_family: FamilyId,
     /// family per worker id (the routing table)
-    worker_family: Vec<Family>,
+    worker_family: Vec<FamilyId>,
     /// admission-side bookkeeping: submissions, preflight completions,
     /// overload rejections, queued-side cancels and deadline drops
     pub metrics: Mutex<Metrics>,
@@ -202,20 +261,23 @@ impl Scheduler {
     /// `queue_cap` bounds the admission queue across all priority
     /// classes; `worker_families` names the family of each worker shard
     /// (index = worker id) that will pull from this scheduler.
-    pub fn new(queue_cap: usize, worker_families: Vec<Family>) -> Scheduler {
-        let mut family_live = [0usize; Family::COUNT];
+    pub fn new(queue_cap: usize, worker_families: Vec<FamilyId>) -> Scheduler {
+        let mut family_live = vec![0usize; crate::sampler::registry::count()];
         for f in &worker_families {
-            family_live[f.index()] += 1;
+            tab_inc(&mut family_live, f.index());
         }
-        let default_family =
-            worker_families.first().copied().unwrap_or(Family::Ddlm);
+        let default_family = worker_families
+            .first()
+            .copied()
+            .unwrap_or(Family::Ddlm.into());
         Scheduler {
             state: Mutex::new(State {
                 queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
                 queued: 0,
-                queued_by_family: [0; Family::COUNT],
+                queued_by_family: vec![0; family_live.len()],
                 running: HashMap::new(),
                 cancel_flags: HashSet::new(),
+                halt_flags: HashSet::new(),
                 live_ids: HashSet::new(),
                 workers_live: worker_families.len(),
                 family_live,
@@ -241,8 +303,11 @@ impl Scheduler {
 
     /// Family assumed for requests that don't carry one (the fleet
     /// default; `Scheduler::new` seeds it from the first worker).
-    pub fn with_default_family(mut self, family: Family) -> Scheduler {
-        self.default_family = family;
+    pub fn with_default_family(
+        mut self,
+        family: impl Into<FamilyId>,
+    ) -> Scheduler {
+        self.default_family = family.into();
         self
     }
 
@@ -257,7 +322,7 @@ impl Scheduler {
         self
     }
 
-    fn family_of_worker(&self, worker: usize) -> Family {
+    fn family_of_worker(&self, worker: usize) -> FamilyId {
         self.worker_family
             .get(worker)
             .copied()
@@ -278,6 +343,20 @@ impl Scheduler {
         &self,
         req: GenRequest,
         reply: ReplyTx,
+    ) -> Result<(), ServeError> {
+        self.submit_with_progress(req, reply, None)
+    }
+
+    /// [`Self::submit`] with an optional progress subscriber: the
+    /// owning worker streams a [`ProgressEvent`] every
+    /// `req.progress_every` executed steps to `progress` until the
+    /// request finishes (the sender is dropped with the request, which
+    /// is the subscriber's end-of-stream signal).
+    pub fn submit_with_progress(
+        &self,
+        req: GenRequest,
+        reply: ReplyTx,
+        progress: Option<ProgressTx>,
     ) -> Result<(), ServeError> {
         self.metrics.lock().unwrap().requests_submitted += 1;
         // wire-level validation first: an overlong prefix can never be
@@ -310,7 +389,7 @@ impl Scheduler {
                 Admit::Reject(ServeError::Unavailable)
             } else if st.shutdown {
                 Admit::Reject(ServeError::Overloaded)
-            } else if st.family_live[family.index()] == 0 {
+            } else if tab_get(&st.family_live, family.index()) == 0 {
                 // no live worker runs this family's kernel: the fleet
                 // can never serve it — typed rejection, even for
                 // preflight-resolvable requests (consistency: an
@@ -329,10 +408,10 @@ impl Scheduler {
                 Admit::Reject(ServeError::Overloaded)
             } else {
                 st.live_ids.insert(req.id);
-                let q = QueuedReq::new(req, reply, family);
+                let q = QueuedReq::new(req, reply, progress, family);
                 st.queues[class].push_back(q);
                 st.queued += 1;
-                st.queued_by_family[family.index()] += 1;
+                tab_inc(&mut st.queued_by_family, family.index());
                 Admit::Enqueued
             }
         };
@@ -383,7 +462,7 @@ impl Scheduler {
                     if st.queues[pi][k].deadline.is_some_and(|d| now >= d) {
                         let q = st.queues[pi].remove(k).unwrap();
                         st.queued -= 1;
-                        st.queued_by_family[q.family.index()] -= 1;
+                        tab_dec(&mut st.queued_by_family, q.family.index());
                         st.live_ids.remove(&q.req.id);
                         expired.push(q);
                         continue;
@@ -391,7 +470,7 @@ impl Scheduler {
                     if st.queues[pi][k].family == fam {
                         let q = st.queues[pi].remove(k).unwrap();
                         st.queued -= 1;
-                        st.queued_by_family[fam.index()] -= 1;
+                        tab_dec(&mut st.queued_by_family, fam.index());
                         st.running.insert(q.req.id, worker);
                         picked = Some(q);
                         break 'scan;
@@ -433,7 +512,7 @@ impl Scheduler {
             }
             st.queued -= expired.len();
             for q in &expired {
-                st.queued_by_family[q.family.index()] -= 1;
+                tab_dec(&mut st.queued_by_family, q.family.index());
                 st.live_ids.remove(&q.req.id);
             }
             expired
@@ -463,7 +542,7 @@ impl Scheduler {
                 }
             }
             if let Some(q) = &victim {
-                st.queued_by_family[q.family.index()] -= 1;
+                tab_dec(&mut st.queued_by_family, q.family.index());
                 st.live_ids.remove(&q.req.id);
                 (CancelOutcome::Queued, victim)
             } else if st.running.contains_key(&id) {
@@ -480,17 +559,88 @@ impl Scheduler {
         outcome
     }
 
+    /// Gracefully finalize a request by id — the client-visible form of
+    /// the paper's early exit, distinct from [`Self::cancel`]: the
+    /// submitter receives a *normal* completion with
+    /// `halt_reason:"client"`, never an error.  A queued request (no
+    /// steps executed yet) is answered here with an empty zero-step
+    /// decode; a running one is flagged so its owning worker finalizes
+    /// it with the current x0 decode between device steps.
+    pub fn halt(&self, id: u64) -> CancelOutcome {
+        let (outcome, victim) = {
+            let mut st = self.state.lock().unwrap();
+            let mut victim = None;
+            for pi in 0..Priority::COUNT {
+                if let Some(k) =
+                    st.queues[pi].iter().position(|q| q.req.id == id)
+                {
+                    victim = st.queues[pi].remove(k);
+                    st.queued -= 1;
+                    break;
+                }
+            }
+            if let Some(q) = &victim {
+                tab_dec(&mut st.queued_by_family, q.family.index());
+                st.live_ids.remove(&q.req.id);
+                (CancelOutcome::Queued, victim)
+            } else if st.running.contains_key(&id) {
+                st.halt_flags.insert(id);
+                (CancelOutcome::Running, None)
+            } else {
+                (CancelOutcome::NotFound, None)
+            }
+        };
+        if let Some(q) = victim {
+            // still queued = zero steps executed: the "current decode"
+            // is empty, and the whole budget counts as saved
+            let mut resp = GenResponse::immediate(&q.req, Some("client"));
+            resp.family = Some(q.family);
+            resp.queue_ms = q.submitted.elapsed().as_secs_f64() * 1e3;
+            resp.latency_ms = resp.queue_ms;
+            self.metrics.lock().unwrap().record_completion(
+                &resp,
+                q.req.priority,
+                q.family,
+            );
+            let _ = q.reply.send(Ok(resp));
+        }
+        outcome
+    }
+
     /// Worker-side: has this running request been flagged for abort?
     pub fn cancel_requested(&self, id: u64) -> bool {
         self.state.lock().unwrap().cancel_flags.contains(&id)
     }
 
+    /// Worker-side: has this running request been flagged for a
+    /// graceful client halt?  (An explicit cancel outranks a graceful
+    /// halt.)
+    pub fn halt_requested(&self, id: u64) -> bool {
+        self.state.lock().unwrap().halt_flags.contains(&id)
+    }
+
+    /// Worker-side: both flag checks under ONE lock acquisition — the
+    /// per-slot sweep runs every device step, so checking cancel and
+    /// halt separately would double the hot loop's traffic on the
+    /// state mutex.  Cancel outranks halt.
+    pub fn flagged(&self, id: u64) -> Option<Flagged> {
+        let st = self.state.lock().unwrap();
+        if st.cancel_flags.contains(&id) {
+            Some(Flagged::Cancel)
+        } else if st.halt_flags.contains(&id) {
+            Some(Flagged::Halt)
+        } else {
+            None
+        }
+    }
+
     /// Worker-side: a request left the running set (completed, aborted,
-    /// or deadline-dropped).
+    /// halted, or deadline-dropped).
     pub fn finish(&self, id: u64) {
         let mut st = self.state.lock().unwrap();
         st.running.remove(&id);
         st.cancel_flags.remove(&id);
+        st.halt_flags.remove(&id);
         st.live_ids.remove(&id);
     }
 
@@ -503,7 +653,7 @@ impl Scheduler {
         let fam = self.family_of_worker(worker);
         let mut st = self.state.lock().unwrap();
         loop {
-            if st.queued_by_family[fam.index()] > 0 {
+            if tab_get(&st.queued_by_family, fam.index()) > 0 {
                 return IdleWait::Work;
             }
             if st.shutdown {
@@ -532,7 +682,7 @@ impl Scheduler {
             let mut st = self.state.lock().unwrap();
             st.workers_live = st.workers_live.saturating_sub(1);
             let fi = fam.index();
-            st.family_live[fi] = st.family_live[fi].saturating_sub(1);
+            tab_dec(&mut st.family_live, fi);
             let dead: Vec<u64> = st
                 .running
                 .iter()
@@ -541,9 +691,10 @@ impl Scheduler {
             for id in dead {
                 st.running.remove(&id);
                 st.cancel_flags.remove(&id);
+                st.halt_flags.remove(&id);
                 st.live_ids.remove(&id);
             }
-            if st.family_live[fi] == 0 {
+            if tab_get(&st.family_live, fi) == 0 {
                 let mut drained = Vec::new();
                 for q in st.queues.iter_mut() {
                     let mut k = 0;
@@ -556,7 +707,9 @@ impl Scheduler {
                     }
                 }
                 st.queued -= drained.len();
-                st.queued_by_family[fi] = 0;
+                if let Some(v) = st.queued_by_family.get_mut(fi) {
+                    *v = 0;
+                }
                 for q in &drained {
                     st.live_ids.remove(&q.req.id);
                 }
@@ -595,7 +748,11 @@ mod tests {
     }
 
     fn sched(queue_cap: usize, workers: usize) -> Scheduler {
-        Scheduler::new(queue_cap, vec![Family::Ddlm; workers])
+        Scheduler::new(queue_cap, vec![Family::Ddlm.into(); workers])
+    }
+
+    fn fleet(families: &[Family]) -> Vec<FamilyId> {
+        families.iter().map(|&f| f.into()).collect()
     }
 
     #[test]
@@ -659,7 +816,7 @@ mod tests {
         assert_eq!(resp.steps_executed, 0);
         assert_eq!(resp.halt_reason.as_deref(), Some("fixed"));
         // the immediate path resolves the family too
-        assert_eq!(resp.family, Some(Family::Ddlm));
+        assert_eq!(resp.family, Some(Family::Ddlm.into()));
         assert_eq!(s.queue_depth(), 0);
         let m = s.metrics.lock().unwrap();
         assert_eq!(m.requests_completed, 1);
@@ -691,7 +848,7 @@ mod tests {
     #[test]
     fn requests_route_only_to_matching_family_workers() {
         // worker 0 = ddlm, worker 1 = ssd
-        let s = Scheduler::new(16, vec![Family::Ddlm, Family::Ssd]);
+        let s = Scheduler::new(16, fleet(&[Family::Ddlm, Family::Ssd]));
         for (id, fam) in [
             (1, Family::Ddlm),
             (2, Family::Ssd),
@@ -699,7 +856,7 @@ mod tests {
             (4, Family::Ssd),
         ] {
             let mut r = req(id, 10);
-            r.family = Some(fam);
+            r.family = Some(fam.into());
             let (tx, _rx) = chan();
             s.submit(r, tx).unwrap();
         }
@@ -715,7 +872,7 @@ mod tests {
 
     #[test]
     fn family_defaults_to_fleet_default_at_admission() {
-        let s = Scheduler::new(8, vec![Family::Ssd]);
+        let s = Scheduler::new(8, fleet(&[Family::Ssd]));
         let (tx, _rx) = chan();
         s.submit(req(1, 10), tx).unwrap(); // no family named
         let q = s.next_for(0).unwrap();
@@ -724,17 +881,17 @@ mod tests {
 
     #[test]
     fn unserved_family_rejected_with_invalid_request() {
-        let s = Scheduler::new(8, vec![Family::Ddlm]);
+        let s = Scheduler::new(8, fleet(&[Family::Ddlm]));
         let (tx, rx) = chan();
         let mut r = req(1, 10);
-        r.family = Some(Family::Plaid);
+        r.family = Some(Family::Plaid.into());
         assert_eq!(s.submit(r, tx), Err(ServeError::InvalidRequest));
         assert!(rx.try_recv().is_err());
         assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 1);
         // even preflight-resolvable requests don't sneak through
         let (tx2, _rx2) = chan();
         let mut pre = req(2, 10);
-        pre.family = Some(Family::Plaid);
+        pre.family = Some(Family::Plaid.into());
         pre.policy = parse_policy("fixed:0").unwrap();
         assert_eq!(s.submit(pre, tx2), Err(ServeError::InvalidRequest));
     }
@@ -742,12 +899,12 @@ mod tests {
     #[test]
     fn last_family_worker_down_fails_only_that_familys_queue() {
         // two families; the ddlm shard dies with work queued for both
-        let s = Scheduler::new(8, vec![Family::Ddlm, Family::Ssd]);
+        let s = Scheduler::new(8, fleet(&[Family::Ddlm, Family::Ssd]));
         let (tx_d, rx_d) = chan();
         s.submit(req(1, 10), tx_d).unwrap(); // defaults to ddlm
         let (tx_s, rx_s) = chan();
         let mut rs = req(2, 10);
-        rs.family = Some(Family::Ssd);
+        rs.family = Some(Family::Ssd.into());
         s.submit(rs, tx_s).unwrap();
         s.worker_down(0);
         // the ddlm request failed over; the ssd one still waits
@@ -759,7 +916,7 @@ mod tests {
         assert_eq!(s.submit(req(3, 10), tx3), Err(ServeError::InvalidRequest));
         let (tx4, _rx4) = chan();
         let mut r4 = req(4, 10);
-        r4.family = Some(Family::Ssd);
+        r4.family = Some(Family::Ssd.into());
         assert!(s.submit(r4, tx4).is_ok());
         assert_eq!(s.next_for(1).unwrap().req.id, 2);
     }
@@ -869,10 +1026,10 @@ mod tests {
     fn idle_wait_ignores_other_families_work() {
         // ssd work queued; the ddlm worker's idle predicate must stay
         // false (no busy wake), and shutdown still exits it
-        let s = Scheduler::new(8, vec![Family::Ddlm, Family::Ssd]);
+        let s = Scheduler::new(8, fleet(&[Family::Ddlm, Family::Ssd]));
         let (tx, _rx) = chan();
         let mut r = req(1, 10);
-        r.family = Some(Family::Ssd);
+        r.family = Some(Family::Ssd.into());
         s.submit(r, tx).unwrap();
         assert_eq!(s.wait_for_work(1), IdleWait::Work);
         s.shutdown();
@@ -997,5 +1154,78 @@ mod tests {
         // with no workers left, new submits fail fast
         let (tx2, _rx2) = chan();
         assert_eq!(s.submit(req(6, 10), tx2), Err(ServeError::Unavailable));
+    }
+
+    #[test]
+    fn halt_queued_request_finalizes_gracefully() {
+        // halt (unlike cancel) answers a queued request with a NORMAL
+        // zero-step completion carrying halt_reason:"client"
+        let s = sched(8, 1);
+        let (tx, rx) = chan();
+        s.submit(req(11, 40), tx).unwrap();
+        assert_eq!(s.halt(11), CancelOutcome::Queued);
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 11);
+        assert_eq!(resp.steps_executed, 0);
+        assert_eq!(resp.steps_budget, 40);
+        assert!(resp.halted_early);
+        assert_eq!(resp.halt_reason.as_deref(), Some("client"));
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.family, Some(Family::Ddlm.into()));
+        assert_eq!(s.queue_depth(), 0);
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.steps_saved, 40);
+        assert_eq!(m.halted_by.get("client"), Some(&1));
+        drop(m);
+        // a halted id is reusable and a second halt finds nothing
+        assert_eq!(s.halt(11), CancelOutcome::NotFound);
+        let (tx2, _rx2) = chan();
+        assert!(s.submit(req(11, 10), tx2).is_ok());
+    }
+
+    #[test]
+    fn halt_running_request_flags_owning_worker() {
+        let s = sched(8, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(21, 10), tx).unwrap();
+        assert_eq!(s.next_for(0).unwrap().req.id, 21);
+        assert_eq!(s.halt(21), CancelOutcome::Running);
+        assert!(s.halt_requested(21));
+        assert_eq!(s.flagged(21), Some(Flagged::Halt));
+        // halt and cancel flags are independent: an explicit cancel
+        // outranks the graceful halt in the combined check
+        assert!(!s.cancel_requested(21));
+        assert_eq!(s.cancel(21), CancelOutcome::Running);
+        assert_eq!(s.flagged(21), Some(Flagged::Cancel));
+        s.finish(21);
+        assert!(!s.halt_requested(21));
+        assert_eq!(s.flagged(21), None);
+        assert_eq!(s.halt(21), CancelOutcome::NotFound);
+    }
+
+    #[test]
+    fn progress_subscriber_travels_with_the_queued_request() {
+        let s = sched(8, 1);
+        let (tx, _rx) = chan();
+        let (ptx, prx) = mpsc::channel();
+        let mut r = req(31, 100);
+        r.progress_every = Some(10);
+        s.submit_with_progress(r, tx, Some(ptx)).unwrap();
+        let q = s.next_for(0).unwrap();
+        assert_eq!(q.req.progress_every, Some(10));
+        let ptx = q.progress.expect("progress subscriber lost at admission");
+        ptx.send(ProgressEvent {
+            id: 31,
+            step: 10,
+            steps_budget: 100,
+            stats: Default::default(),
+        })
+        .unwrap();
+        let ev = prx.recv().unwrap();
+        assert_eq!((ev.id, ev.step), (31, 10));
+        // dropping the sender ends the subscriber's stream
+        drop(ptx);
+        assert!(prx.recv().is_err());
     }
 }

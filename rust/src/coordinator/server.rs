@@ -1,52 +1,49 @@
 //! TCP JSON-lines front-end for the engine (std-thread substitute for the
 //! usual tokio stack — DESIGN.md §8).
 //!
-//! Protocol: one JSON object per line.
+//! One JSON object per line, with **per-line protocol autodetect**:
 //!
-//!   request  : GenRequest JSON (see `request.rs`) —
-//!              `{"id":1,"steps":200,"criterion":"entropy:0.25",
-//!                "priority":"high","deadline_ms":2500,"family":"ssd"}`.
-//!              `priority` ("high"|"normal"|"low", default normal) picks
-//!              the admission class; `deadline_ms` (optional) bounds the
-//!              request's total wall-clock time; `family` (optional:
-//!              "ddlm"|"ssd"|"plaid", default = the fleet's default
-//!              family) routes to a worker shard of that model family —
-//!              responses echo the serving family.
-//!   control  : `{"cmd":"metrics"}` — merged fleet metrics snapshot
-//!              `{"cmd":"cancel","id":7}` — cancel a queued or running
-//!              request; replies `{"id":7,"cancelled":true,
-//!              "state":"queued"|"running"|"not_found"}`
-//!   response : GenResponse JSON, or a typed serving error
-//!              `{"id":1,"error":"overloaded"|"cancelled"|
-//!                "deadline_exceeded"|"unavailable"|"invalid_request"|
-//!                "duplicate_id"}`, or
-//!              `{"error":"parse: ..."}` for malformed lines.
-//!              `invalid_request` rejects a prefix longer than the
-//!              fleet's compiled seq_len or a `family` no live worker
-//!              serves; `duplicate_id` rejects an id that is already
-//!              queued or running (ids route cancellation, so they must
-//!              be unique while in flight).
+//! * a line carrying `"v":1` is a **v1 envelope frame** (see
+//!   [`super::envelope`]) — submits stream back interleaved `progress`
+//!   / `done` / `error` frames over the shared per-connection writer,
+//!   and the control verbs `cancel` (abort), `halt` (graceful
+//!   finalize: a normal `done` with the current x0 decode and
+//!   `halt_reason:"client"`) and `metrics` are answered with typed ack
+//!   frames;
+//! * a bare object without a `v` key is the **legacy one-shot
+//!   protocol**, served unchanged: a GenRequest JSON line
+//!   (`{"id":1,"steps":200,"criterion":"entropy:0.25","priority":
+//!   "high","deadline_ms":2500,"family":"ssd"}`) answers with exactly
+//!   one GenResponse line in arrival order, and the control lines
+//!   `{"cmd":"metrics"}` / `{"cmd":"cancel","id":7}` behave as they
+//!   always have.  Pre-envelope clients keep working byte-for-byte.
 //!
-//! The request's `criterion` field carries a halting-policy spec string
-//! (`"entropy:0.25"`, `"any(entropy:0.25,patience:20:0)"`, ... — see the
-//! `halting` module docs); early-halted responses carry the firing
-//! primitive in `halt_reason`, and the metrics snapshot exposes
-//! per-reason `halted_by_*` counters.
+//! Typed serving errors (`overloaded`, `cancelled`,
+//! `deadline_exceeded`, `unavailable`, `invalid_request`,
+//! `duplicate_id`) come back as `{"id":N,"error":CODE}` on the legacy
+//! path and as `error` frames on v1.  A legacy request line that fails
+//! validation answers `{"error":"invalid_request","message":...}`
+//! (plus `"id"` when one was parseable); malformed JSON answers
+//! `{"error":"parse: ..."}`.
 //!
-//! Each connection gets a handler thread; handlers forward requests to
-//! the engine handle (cheap clone of the scheduler front-end) and stream
-//! responses back in arrival order per connection.  `Server::stop()` (or
-//! drop) closes the listener and joins the accept thread.
+//! Each connection gets a reader thread (this handler) plus one writer
+//! thread draining an mpsc channel — the multiplexing point where
+//! legacy replies, v1 acks and per-request streaming forwarders all
+//! meet.  Legacy lines are still handled synchronously in arrival
+//! order; v1 submits spawn a forwarder thread so many requests stream
+//! concurrently on one connection.  `Server::stop()` (or drop) closes
+//! the listener and joins the accept thread.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
 use super::engine::EngineHandle;
+use super::envelope::{self, Command, Event};
 use super::request::GenRequest;
 use crate::log_info;
 use crate::util::json::Json;
@@ -136,37 +133,152 @@ impl Drop for Server {
     }
 }
 
+/// Per-connection frame sink: encoded lines from the reader loop, the
+/// v1 control path, and every streaming forwarder thread funnel through
+/// one channel into one writer thread, so concurrent frames never
+/// interleave bytes mid-line.
+type ConnTx = mpsc::Sender<String>;
+
 fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
     let mut writer = stream.try_clone()?;
+    let (tx, rx) = mpsc::channel::<String>();
+    // writer thread: lives until every sender (reader loop + streaming
+    // forwarders) is gone, so a long-running streamed request keeps its
+    // line open even after the reader saw EOF
+    std::thread::spawn(move || {
+        for line in rx {
+            if writer
+                .write_all(line.as_bytes())
+                .and_then(|()| writer.write_all(b"\n"))
+                .is_err()
+            {
+                break; // client gone; senders observe the closed channel
+            }
+        }
+    });
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match Json::parse(&line) {
+        match Json::parse(&line) {
             Err(e) => {
-                Json::obj(vec![("error", Json::str(format!("parse: {e}")))])
+                let reply =
+                    Json::obj(vec![("error", Json::str(format!("parse: {e}")))]);
+                if tx.send(reply.encode()).is_err() {
+                    break;
+                }
             }
-            Ok(j) => handle_line(&j, &engine),
-        };
-        writer.write_all(reply.encode().as_bytes())?;
-        writer.write_all(b"\n")?;
+            Ok(j) if envelope::is_envelope(&j) => {
+                handle_frame(&j, &engine, &tx);
+            }
+            Ok(j) => {
+                // legacy one-shot path: synchronous, arrival order
+                let reply = handle_line(&j, &engine);
+                if tx.send(reply.encode()).is_err() {
+                    break;
+                }
+            }
+        }
     }
     Ok(())
+}
+
+/// Dispatch one v1 envelope frame.  Control verbs answer inline;
+/// submits spawn a forwarder thread that streams the request's progress
+/// events and terminal frame to the connection writer.
+fn handle_frame(j: &Json, engine: &EngineHandle, tx: &ConnTx) {
+    let cmd = match Command::from_json(j) {
+        Ok(cmd) => cmd,
+        Err(e) => {
+            let ev = Event::Error {
+                id: j.get("id").and_then(Json::as_u64),
+                code: e.code().to_string(),
+                message: Some(e.to_string()),
+            };
+            let _ = tx.send(ev.to_json().encode());
+            return;
+        }
+    };
+    match cmd {
+        Command::Metrics => {
+            let data = engine.metrics().unwrap_or(Json::Null);
+            let _ = tx.send(Event::Metrics(data).to_json().encode());
+        }
+        Command::Cancel { id } => {
+            let outcome = engine.cancel(id);
+            let ev = Event::CancelAck {
+                id,
+                cancelled: outcome.found(),
+                state: outcome.as_str().to_string(),
+            };
+            let _ = tx.send(ev.to_json().encode());
+        }
+        Command::Halt { id } => {
+            let outcome = engine.halt(id);
+            let ev = Event::HaltAck {
+                id,
+                found: outcome.found(),
+                state: outcome.as_str().to_string(),
+            };
+            let _ = tx.send(ev.to_json().encode());
+        }
+        Command::Submit(req) => {
+            let id = req.id;
+            let wants_progress = req.progress_every.is_some();
+            let (prog_tx, prog_rx) = mpsc::channel();
+            let reply_rx = engine
+                .submit_with_progress(*req, wants_progress.then_some(prog_tx));
+            let tx = tx.clone();
+            let engine = engine.clone();
+            // one forwarder per streamed request: drains progress until
+            // the request drops its sender (end of stream), then relays
+            // the terminal outcome — so within one request, progress
+            // frames always precede the done/error frame
+            std::thread::spawn(move || {
+                for ev in prog_rx {
+                    if tx.send(Event::Progress(ev).to_json().encode()).is_err()
+                    {
+                        // the connection is gone: nobody can ever read
+                        // this stream's decode OR halt it, so cancel
+                        // instead of burning the remaining step budget
+                        // for a dead client (frees the slot within one
+                        // device step)
+                        engine.cancel(id);
+                        break;
+                    }
+                }
+                let frame = match reply_rx.recv() {
+                    Ok(Ok(resp)) => Event::Done(resp),
+                    Ok(Err(serve_err)) => Event::Error {
+                        id: Some(id),
+                        code: serve_err.as_str().to_string(),
+                        message: None,
+                    },
+                    Err(_) => Event::Error {
+                        id: Some(id),
+                        code: "internal".to_string(),
+                        message: Some("reply channel closed".to_string()),
+                    },
+                };
+                let _ = tx.send(frame.to_json().encode());
+            });
+        }
+    }
 }
 
 fn handle_line(j: &Json, engine: &EngineHandle) -> Json {
     match j.get("cmd").and_then(Json::as_str) {
         Some("metrics") => engine.metrics().unwrap_or(Json::Null),
-        Some("cancel") => match j.get("id").and_then(Json::as_f64) {
+        Some("cancel") => match j.get("id").and_then(Json::as_u64) {
             None => {
                 Json::obj(vec![("error", Json::str("cancel: missing id"))])
             }
             Some(id) => {
-                let outcome = engine.cancel(id as u64);
+                let outcome = engine.cancel(id);
                 Json::obj(vec![
-                    ("id", Json::num(id)),
+                    ("id", Json::uint(id)),
                     ("cancelled", Json::Bool(outcome.found())),
                     ("state", Json::str(outcome.as_str())),
                 ])
@@ -176,16 +288,25 @@ fn handle_line(j: &Json, engine: &EngineHandle) -> Json {
             Json::obj(vec![("error", Json::str(format!("unknown cmd {other:?}")))])
         }
         None => match GenRequest::from_json(j) {
-            Err(e) => Json::obj(vec![(
-                "error",
-                Json::str(format!("bad request: {e}")),
-            )]),
+            Err(e) => {
+                // typed rejection (satisfying e.g. the malformed-prefix
+                // contract: reject, never truncate); the human-readable
+                // cause rides in `message`
+                let mut fields = vec![
+                    ("error", Json::str("invalid_request")),
+                    ("message", Json::str(format!("{e:#}"))),
+                ];
+                if let Some(id) = j.get("id").and_then(Json::as_u64) {
+                    fields.push(("id", Json::uint(id)));
+                }
+                Json::obj(fields)
+            }
             Ok(req) => {
                 let id = req.id;
                 match engine.submit(req).recv() {
                     Ok(Ok(resp)) => resp.to_json(),
                     Ok(Err(serve_err)) => Json::obj(vec![
-                        ("id", Json::num(id as f64)),
+                        ("id", Json::uint(id)),
                         ("error", Json::str(serve_err.as_str())),
                     ]),
                     Err(_) => Json::obj(vec![(
@@ -195,57 +316,5 @@ fn handle_line(j: &Json, engine: &EngineHandle) -> Json {
                 }
             }
         },
-    }
-}
-
-/// Minimal blocking client for examples / benches / tests.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    pub fn connect(addr: &str) -> Result<Client> {
-        let stream =
-            TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        Ok(Client {
-            writer: stream.try_clone()?,
-            reader: BufReader::new(stream),
-        })
-    }
-
-    pub fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
-        self.writer.write_all(msg.encode().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(|e| anyhow::anyhow!("response parse: {e}"))
-    }
-
-    /// Blocking generate; typed serving errors (`overloaded`,
-    /// `cancelled`, `deadline_exceeded`, ...) surface as `Err` with the
-    /// error string in the message.
-    pub fn generate(
-        &mut self,
-        req: &GenRequest,
-    ) -> Result<super::request::GenResponse> {
-        let j = self.roundtrip(&req.to_json())?;
-        if let Some(err) = j.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {err}");
-        }
-        super::request::GenResponse::from_json(&j)
-    }
-
-    /// Cancel a queued or running request by id (typically from a second
-    /// connection); returns the raw `{"cancelled":..,"state":..}` reply.
-    pub fn cancel(&mut self, id: u64) -> Result<Json> {
-        self.roundtrip(&Json::obj(vec![
-            ("cmd", Json::str("cancel")),
-            ("id", Json::num(id as f64)),
-        ]))
-    }
-
-    pub fn metrics(&mut self) -> Result<Json> {
-        self.roundtrip(&Json::obj(vec![("cmd", Json::str("metrics"))]))
     }
 }

@@ -14,9 +14,18 @@
 //! Per loop iteration a worker: admits queued requests into free slots
 //! (continuous batching — slots freed by an early halt are refilled
 //! mid-schedule), aborts slots whose request was cancelled or whose
-//! deadline expired, then advances all active slots with one device
-//! call.  Every completed request goes through the shared
+//! deadline expired, *finalizes* slots whose request was gracefully
+//! halted by the client (a normal completion carrying the current x0
+//! decode and `halt_reason:"client"`), then advances all active slots
+//! with one device call — emitting a throttled [`ProgressEvent`] to any
+//! subscribed slot every `progress_every` executed steps.  Every
+//! completed request goes through the shared
 //! [`Metrics::record_completion`] bookkeeping.
+//!
+//! Families are registry ids ([`FamilyId`]): the worker resolves its
+//! kernel through the open `sampler::registry`, and loads artifacts /
+//! checkpoints under the kernel's `artifact_prefix()` — so a kernel
+//! registered at runtime can serve on existing compiled artifacts.
 
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
@@ -26,22 +35,24 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::request::GenResponse;
-use super::scheduler::{IdleWait, QueuedReq, Scheduler, ServeError};
+use super::request::{GenResponse, ProgressEvent};
+use super::scheduler::{Flagged, IdleWait, QueuedReq, Scheduler, ServeError};
 use crate::halting::{BoxedPolicy, NoHalt};
 use crate::log_info;
 use crate::models::store::ParamStore;
 use crate::runtime::Runtime;
-use crate::sampler::{Family, Session, SlotRequest};
+use crate::sampler::{FamilyId, Session, SlotRequest};
 
 pub struct WorkerConfig {
     pub id: usize,
     pub artifact_dir: String,
-    pub family: Family,
+    pub family: FamilyId,
     /// requested batch size; resolved to the nearest compiled artifact
     pub batch: usize,
     /// trained checkpoint (PBIN); falls back to init params when None
     pub checkpoint: Option<String>,
+    /// schedule envelope this shard serves (engine-level default or a
+    /// per-family override)
     pub t_max: f32,
     pub t_min: f32,
 }
@@ -85,17 +96,18 @@ fn run_worker(
 ) -> Result<()> {
     let rt = Runtime::new(&cfg.artifact_dir)?;
     let m = rt.manifest.model.clone();
+    // artifacts and checkpoints live under the kernel's artifact
+    // prefix — for built-ins that is the family name, for registered
+    // wrapper kernels the family whose compiled artifacts they reuse
+    let prefix = cfg.family.kernel().artifact_prefix();
     let store = match &cfg.checkpoint {
-        Some(path) => ParamStore::load(path, cfg.family.name())?,
-        None => ParamStore::load_init(&cfg.artifact_dir, cfg.family.name())?,
+        Some(path) => ParamStore::load(path, prefix)?,
+        None => ParamStore::load_init(&cfg.artifact_dir, prefix)?,
     };
     // artifacts are compiled for fixed batch sizes; resolve the nearest
     // available one (>= requested, else the largest)
-    let batch = rt.manifest.resolve_step_batch(
-        cfg.family.name(),
-        m.seq_len,
-        cfg.batch,
-    )?;
+    let batch =
+        rt.manifest.resolve_step_batch(prefix, m.seq_len, cfg.batch)?;
     let mut session =
         Session::new(&rt, cfg.family, Rc::new(store), batch, m.seq_len)?;
     log_info!(
@@ -216,37 +228,79 @@ fn step_loop(
         // 2) sweep expired queued deadlines (so a saturated fleet still
         //    answers them within one step latency), then abort slots
         //    whose request was cancelled or whose deadline expired
-        //    mid-schedule
+        //    mid-schedule, and gracefully finalize slots whose request
+        //    the client halted (cancel outranks halt)
         sched.reap_expired();
         let now = Instant::now();
+        enum Sweep {
+            Abort(ServeError),
+            Finalize,
+        }
         for slot in 0..batch {
             let Some(r) = running[slot].as_ref() else { continue };
-            let err = if sched.cancel_requested(r.q.req.id) {
-                Some(ServeError::Cancelled)
+            // one lock acquisition covers both abort flags (hot loop);
+            // precedence: cancel > deadline > graceful halt
+            let flagged = sched.flagged(r.q.req.id);
+            let action = if flagged == Some(Flagged::Cancel) {
+                Some(Sweep::Abort(ServeError::Cancelled))
             } else if r.q.deadline.is_some_and(|d| now >= d) {
-                Some(ServeError::DeadlineExceeded)
+                Some(Sweep::Abort(ServeError::DeadlineExceeded))
+            } else if flagged == Some(Flagged::Halt) {
+                Some(Sweep::Finalize)
             } else {
                 None
             };
-            if let Some(err) = err {
-                let r = running[slot].take().unwrap();
-                sched.finish(r.q.req.id);
-                {
-                    let mut wm = metrics.lock().unwrap();
-                    match err {
-                        ServeError::Cancelled => wm.cancelled += 1,
-                        _ => wm.deadline_exceeded += 1,
+            match action {
+                None => {}
+                Some(Sweep::Abort(err)) => {
+                    let r = running[slot].take().unwrap();
+                    sched.finish(r.q.req.id);
+                    {
+                        let mut wm = metrics.lock().unwrap();
+                        match err {
+                            ServeError::Cancelled => wm.cancelled += 1,
+                            _ => wm.deadline_exceeded += 1,
+                        }
+                        // steps burned before the abort still count —
+                        // in the family lane too, so per-family steps
+                        // reconcile with the fleet total
+                        wm.record_aborted_steps(
+                            cfg.family,
+                            session.slots[slot].step as u64,
+                        );
                     }
-                    // steps burned before the abort still count — in
-                    // the family lane too, so per-family steps
-                    // reconcile with the fleet total
-                    wm.record_aborted_steps(
-                        cfg.family,
-                        session.slots[slot].step as u64,
-                    );
+                    session.release_slot(slot);
+                    let _ = r.q.reply.send(Err(err));
                 }
-                session.release_slot(slot);
-                let _ = r.q.reply.send(Err(err));
+                Some(Sweep::Finalize) => {
+                    // graceful client halt: a NORMAL completion with
+                    // the slot's current x0 decode — the wire-visible
+                    // form of the paper's early exit, so it shares the
+                    // one completion bookkeeping path
+                    let r = running[slot].take().unwrap();
+                    let steps = session.slots[slot].step;
+                    let resp = GenResponse {
+                        id: r.q.req.id,
+                        tokens: session.slot_output(slot),
+                        steps_executed: steps,
+                        steps_budget: r.q.req.n_steps,
+                        halted_early: true,
+                        halt_reason: Some("client".to_string()),
+                        latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
+                        queue_ms: (r.started - r.q.submitted).as_secs_f64()
+                            * 1e3,
+                        family: Some(cfg.family),
+                        final_stats: session.slots[slot].last_stats,
+                    };
+                    sched.finish(resp.id);
+                    metrics.lock().unwrap().record_completion(
+                        &resp,
+                        r.q.req.priority,
+                        cfg.family,
+                    );
+                    session.release_slot(slot);
+                    let _ = r.q.reply.send(Ok(resp));
+                }
             }
         }
 
@@ -274,6 +328,31 @@ fn step_loop(
                 let executed = session.slots[slot].step;
                 let decision = r.policy.observe(executed - 1, &st);
                 let exhausted = session.slot_exhausted(slot);
+                // throttled progress fan-out: subscribed requests get
+                // the paper's completeness estimates every
+                // `progress_every` executed steps (terminal steps are
+                // reported by the done frame instead).  A dead
+                // subscriber is dropped on the first failed send so
+                // the hot loop never retries into a closed channel.
+                if !(decision.halted() || exhausted) {
+                    let every = r.q.req.progress_every.unwrap_or(0);
+                    if every > 0 && executed % every == 0 {
+                        let ev = ProgressEvent {
+                            id: r.q.req.id,
+                            step: executed,
+                            steps_budget: r.q.req.n_steps,
+                            stats: st,
+                        };
+                        let dead = r
+                            .q
+                            .progress
+                            .as_ref()
+                            .is_some_and(|ptx| ptx.send(ev).is_err());
+                        if dead {
+                            r.q.progress = None;
+                        }
+                    }
+                }
                 if decision.halted() || exhausted {
                     let r = running[slot].take().unwrap();
                     let halted_early = decision.halted() && !exhausted;

@@ -38,7 +38,7 @@ fn serve_stream(
     n_steps: usize,
 ) -> Result<ServeResult> {
     let mut cfg = EngineConfig::new(&ctx.artifact_dir, family);
-    cfg.worker_specs = vec![(family, 8)];
+    cfg.worker_specs = vec![(family.into(), 8)];
     cfg.discover_checkpoints(&ctx.runs_dir);
     let (engine, join) = start(cfg);
 

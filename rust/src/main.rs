@@ -22,7 +22,8 @@ use repro::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt};
 use repro::models::store::ParamStore;
 use repro::runtime::Runtime;
 use repro::coordinator::Priority;
-use repro::sampler::{Family, Session, SlotRequest};
+use repro::sampler::registry;
+use repro::sampler::{Family, FamilyId, Session, SlotRequest};
 use repro::train::{TrainConfig, TrainTarget, Trainer};
 use repro::util::cli::Args;
 use repro::util::log;
@@ -73,15 +74,18 @@ fn print_help() {
          serve    --family F [--addr 127.0.0.1:7411] [--batch 8]\n\
          \u{20}        [--workers 1] [--queue-depth 256]\n\
          \u{20}        [--fleet fam:batch,fam:batch,...]\n\
+         \u{20}        [--schedule fam:tmax:tmin,...]\n\
          \u{20}        (one worker per fleet entry — mixed families are\n\
          \u{20}        routed per request; without --fleet, N identical\n\
          \u{20}        workers of --family; bounded admission queue\n\
-         \u{20}        rejects with a typed 'overloaded' error; wire\n\
-         \u{20}        supports priority, deadline_ms, family and\n\
-         \u{20}        {{\"cmd\":\"cancel\",\"id\":..}})\n\
+         \u{20}        rejects with a typed 'overloaded' error; legacy\n\
+         \u{20}        wire supports priority, deadline_ms, family and\n\
+         \u{20}        {{\"cmd\":\"cancel\",\"id\":..}}; v1 envelope frames\n\
+         \u{20}        ({{\"v\":1,\"type\":...}}) add streamed progress\n\
+         \u{20}        events and the graceful halt verb — see API.md)\n\
          client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
          \u{20}        [--priority high|normal|low] [--deadline-ms MS]\n\
-         \u{20}        [--family {fams}]\n\
+         \u{20}        [--family {fams}] [--progress-every K]\n\
          exp      <id>|all  [--quick]   ids: {}\n\
          \n\
          criterion SPEC is the halting-policy DSL: entropy:T, \n\
@@ -287,8 +291,13 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 /// Parse a `--fleet` spec: comma-separated `family[:batch]` entries,
-/// e.g. `ddlm:1,ddlm:8,ssd:8` — one worker shard per entry.
-fn parse_fleet(spec: &str, default_batch: usize) -> Result<Vec<(Family, usize)>> {
+/// e.g. `ddlm:1,ddlm:8,ssd:8` — one worker shard per entry.  Family
+/// names resolve through the open `sampler::registry`, so a kernel
+/// registered at runtime is a valid shard.
+fn parse_fleet(
+    spec: &str,
+    default_batch: usize,
+) -> Result<Vec<(FamilyId, usize)>> {
     let mut out = Vec::new();
     for entry in spec.split(',').filter(|e| !e.is_empty()) {
         let (fam_str, batch) = match entry.split_once(':') {
@@ -300,13 +309,40 @@ fn parse_fleet(spec: &str, default_batch: usize) -> Result<Vec<(Family, usize)>>
             ),
             None => (entry, default_batch),
         };
-        let fam = Family::parse(fam_str).ok_or_else(|| {
-            anyhow::anyhow!("bad family in --fleet entry {entry:?}")
+        let fam = registry::resolve(fam_str).ok_or_else(|| {
+            anyhow::anyhow!("unknown family in --fleet entry {entry:?}")
         })?;
         out.push((fam, batch));
     }
     if out.is_empty() {
         anyhow::bail!("--fleet needs at least one family[:batch] entry");
+    }
+    Ok(out)
+}
+
+/// Parse a `--schedule` spec: comma-separated `family:tmax:tmin`
+/// entries overriding the fleet-wide schedule envelope per family
+/// (surfaced to clients under `"families"` in the metrics snapshot).
+fn parse_schedule_overrides(
+    spec: &str,
+) -> Result<Vec<(FamilyId, f32, f32)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').filter(|e| !e.is_empty()) {
+        let parts: Vec<&str> = entry.split(':').collect();
+        let [fam_str, t_max, t_min] = parts.as_slice() else {
+            anyhow::bail!(
+                "bad --schedule entry {entry:?} (want family:tmax:tmin)"
+            );
+        };
+        let fam = registry::resolve(fam_str).ok_or_else(|| {
+            anyhow::anyhow!("unknown family in --schedule entry {entry:?}")
+        })?;
+        let parse = |s: &str| {
+            s.parse::<f32>().map_err(|_| {
+                anyhow::anyhow!("bad number in --schedule entry {entry:?}")
+            })
+        };
+        out.push((fam, parse(t_max)?, parse(t_min)?));
     }
     Ok(out)
 }
@@ -340,9 +376,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             specs
         }
-        None => vec![(fam, batch); workers],
+        None => vec![(fam.into(), batch); workers],
     };
     cfg.queue_depth = args.usize_or("queue-depth", 256);
+    if let Some(spec) = args.get("schedule") {
+        cfg.schedule_overrides = parse_schedule_overrides(spec)?;
+    }
     cfg.discover_checkpoints(&runs);
     let shards = cfg
         .worker_specs
@@ -377,12 +416,20 @@ fn cmd_client(args: &Args) -> Result<()> {
     });
     let deadline_ms = deadline_ms.transpose()?;
     // optional family routing (heterogeneous fleets); omitted = the
-    // server's default family
+    // server's default family.  Resolution goes through the open
+    // registry, so runtime-registered families are addressable too.
     let family = match args.get("family") {
         Some(f) => Some(
-            Family::parse(f)
+            registry::resolve(f)
                 .ok_or_else(|| anyhow::anyhow!("bad --family {f}"))?,
         ),
+        None => None,
+    };
+    // subscribe to streamed per-step completeness events (v1 envelope)
+    let progress_every = match args.get("progress-every") {
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("bad --progress-every (want a step count)")
+        })?),
         None => None,
     };
     let mut client = Client::connect(addr)?;
@@ -395,7 +442,18 @@ fn cmd_client(args: &Args) -> Result<()> {
         req.priority = priority;
         req.deadline_ms = deadline_ms;
         req.family = family;
-        let resp = client.generate(&req)?;
+        req.progress_every = progress_every;
+        let resp = client.generate_with(&req, |ev| {
+            println!(
+                "req {i}: progress {}/{} — entropy {:.3}, kl {:.6}, \
+                 switches {:.1}",
+                ev.step,
+                ev.steps_budget,
+                ev.stats.entropy,
+                ev.stats.kl,
+                ev.stats.switches
+            );
+        })?;
         total_steps += resp.steps_executed;
         println!(
             "req {i}: {} steps, {:.1} ms{}",

@@ -72,13 +72,23 @@ pub struct StepOutputs<'a> {
 
 /// One family's generation workflow: everything the family-agnostic
 /// `Session`/`Schedule` plumbing must ask a family about.
+///
+/// Out-of-tree kernels implement this trait and enter serving through
+/// [`super::registry::register`]; the wire addresses them by
+/// [`Self::name`], and [`Self::artifact_prefix`] lets a wrapper kernel
+/// reuse another family's compiled step artifacts and checkpoints.
 pub trait FamilyKernel: Send + Sync {
-    /// The enum tag this kernel implements.
-    fn family(&self) -> Family;
-
-    /// Canonical lowercase name (artifact prefix, wire value, metrics
-    /// suffix).
+    /// Canonical lowercase name (wire value, metrics suffix).
     fn name(&self) -> &'static str;
+
+    /// Prefix of the compiled step artifacts / checkpoints this kernel
+    /// executes (`<prefix>_step_b<batch>_l<seq>`, `<prefix>.pbin`).
+    /// Defaults to [`Self::name`]; a registered kernel that varies only
+    /// host-side behaviour (schedule shape, init, clamping) points this
+    /// at the family whose device artifacts it reuses.
+    fn artifact_prefix(&self) -> &'static str {
+        self.name()
+    }
 
     /// Diffusion-state row width per slot: `L*D` for embedding-space
     /// families, `L*V` for simplex logit space.
@@ -159,10 +169,6 @@ pub trait FamilyKernel: Send + Sync {
 pub struct DdlmKernel;
 
 impl FamilyKernel for DdlmKernel {
-    fn family(&self) -> Family {
-        Family::Ddlm
-    }
-
     fn name(&self) -> &'static str {
         "ddlm"
     }
@@ -242,10 +248,6 @@ fn vp_times(n_steps: usize) -> Vec<f32> {
 }
 
 impl FamilyKernel for SsdKernel {
-    fn family(&self) -> Family {
-        Family::Ssd
-    }
-
     fn name(&self) -> &'static str {
         "ssd"
     }
@@ -312,10 +314,6 @@ impl FamilyKernel for SsdKernel {
 pub struct PlaidKernel;
 
 impl FamilyKernel for PlaidKernel {
-    fn family(&self) -> Family {
-        Family::Plaid
-    }
-
     fn name(&self) -> &'static str {
         "plaid"
     }
@@ -382,8 +380,9 @@ mod tests {
         for (i, f) in Family::all().into_iter().enumerate() {
             assert_eq!(Family::parse(f.name()), Some(f));
             assert_eq!(f.index(), i);
-            assert_eq!(f.kernel().family(), f);
             assert_eq!(f.kernel().name(), f.name());
+            // built-ins run their own artifacts
+            assert_eq!(f.kernel().artifact_prefix(), f.name());
         }
         assert_eq!(Family::parse("gpt"), None);
         assert_eq!(Family::all().len(), Family::COUNT);

@@ -4,14 +4,19 @@
 //!
 //! Per-family behaviour (state width, init, schedule shape, step-tensor
 //! packing) lives behind [`kernel::FamilyKernel`]; `Schedule` and
-//! `Session` are family-agnostic plumbing over a kernel.
+//! `Session` are family-agnostic plumbing over a kernel.  Kernels are
+//! addressed by [`registry::FamilyId`] — an open registry seeded with
+//! the three built-ins, so out-of-tree kernels registered at runtime
+//! are servable end-to-end without touching the `Family` enum.
 
 pub mod kernel;
+pub mod registry;
 pub mod schedule;
 pub mod session;
 
 pub use kernel::{
     DdlmKernel, Family, FamilyKernel, PlaidKernel, SsdKernel, StepOutputs,
 };
+pub use registry::FamilyId;
 pub use schedule::{Schedule, ScheduleError};
 pub use session::{Session, Slot, SlotError, SlotRequest};

@@ -1,0 +1,302 @@
+//! Open, process-wide registry of sampler kernels.
+//!
+//! The `Family` enum stays the ergonomic handle for the three paper
+//! families, but the *wire* no longer closes over it: every kernel —
+//! built-in or registered at runtime — is addressed by a [`FamilyId`],
+//! a dense handle resolved from the kernel's canonical name.  The
+//! serving stack (requests, routing tables, metrics lanes, worker
+//! specs) speaks `FamilyId` exclusively, so an out-of-tree
+//! [`FamilyKernel`] registered through [`register`] is servable
+//! end-to-end — CLI `--fleet`, wire `"family"` field, per-family
+//! metrics — without touching the enum.
+//!
+//! Registration is a process-lifetime act: kernels are leaked into
+//! `'static` storage and ids are never reused.  The registry is seeded
+//! with the built-ins at indices matching `Family::index()`, so
+//! `FamilyId::from(Family)` is a constant-time conversion.
+
+use std::sync::{OnceLock, RwLock};
+
+use super::kernel::{DdlmKernel, Family, FamilyKernel, PlaidKernel, SsdKernel};
+
+/// Dense handle for a registered sampler kernel — the serving stack's
+/// family currency (wire field `family`, routing tables, metrics lanes).
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FamilyId(u16);
+
+fn kernels() -> &'static RwLock<Vec<&'static dyn FamilyKernel>> {
+    static REG: OnceLock<RwLock<Vec<&'static dyn FamilyKernel>>> =
+        OnceLock::new();
+    REG.get_or_init(|| RwLock::new(vec![&DdlmKernel, &SsdKernel, &PlaidKernel]))
+}
+
+impl FamilyId {
+    /// Dense index (stable for the process lifetime; built-ins occupy
+    /// `0..Family::COUNT` in `Family::index()` order).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// The kernel this id resolves to.
+    pub fn kernel(self) -> &'static dyn FamilyKernel {
+        kernels().read().unwrap()[self.0 as usize]
+    }
+
+    /// Canonical lowercase name (wire value, metrics suffix).
+    pub fn name(self) -> &'static str {
+        self.kernel().name()
+    }
+
+    /// The built-in enum variant, when this id names one (runtime
+    /// registrations return `None`).
+    pub fn builtin(self) -> Option<Family> {
+        Family::all().into_iter().find(|f| f.index() == self.index())
+    }
+}
+
+impl From<Family> for FamilyId {
+    fn from(f: Family) -> FamilyId {
+        FamilyId(f.index() as u16)
+    }
+}
+
+impl PartialEq<Family> for FamilyId {
+    fn eq(&self, other: &Family) -> bool {
+        self.index() == other.index()
+    }
+}
+
+impl PartialEq<FamilyId> for Family {
+    fn eq(&self, other: &FamilyId) -> bool {
+        self.index() == other.index()
+    }
+}
+
+impl std::fmt::Display for FamilyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed registration failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// another kernel already owns this name (names key wire routing,
+    /// so they must be unique)
+    DuplicateName(String),
+    /// the name cannot travel everywhere a family name must: it is
+    /// empty, or contains a character outside `[a-z0-9_-]` (`:` and
+    /// `,` delimit CLI `--fleet`/`--schedule` specs, and names suffix
+    /// metrics keys)
+    InvalidName(String),
+    /// the dense-id space is exhausted (u16 — far beyond any real use)
+    Full,
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::DuplicateName(n) => {
+                write!(f, "family {n:?} is already registered")
+            }
+            RegistryError::InvalidName(n) => write!(
+                f,
+                "family name {n:?} is not servable (want non-empty \
+                 [a-z0-9_-])"
+            ),
+            RegistryError::Full => f.write_str("family registry is full"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Register an out-of-tree kernel; its name becomes resolvable on the
+/// wire and the CLI, and the returned id is valid for worker specs,
+/// requests and metrics lanes.  The kernel is leaked into `'static`
+/// storage (registration is for the process lifetime).  Names are
+/// validated here — the one choke point — so every downstream consumer
+/// (CLI spec parsing, metrics key suffixes, wire values) can trust
+/// them.
+pub fn register(
+    kernel: Box<dyn FamilyKernel>,
+) -> Result<FamilyId, RegistryError> {
+    let name = kernel.name();
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+    {
+        return Err(RegistryError::InvalidName(name.to_string()));
+    }
+    let mut reg = kernels().write().unwrap();
+    if reg.iter().any(|k| k.name() == name) {
+        return Err(RegistryError::DuplicateName(name.to_string()));
+    }
+    if reg.len() > u16::MAX as usize {
+        return Err(RegistryError::Full);
+    }
+    let id = FamilyId(reg.len() as u16);
+    reg.push(Box::leak(kernel));
+    Ok(id)
+}
+
+/// A ready-made out-of-tree kernel: serves `base`'s compiled artifacts
+/// and checkpoints under a new wire name, delegating every behaviour.
+/// Registering one is the smallest possible runtime family
+/// (`registry::register(Box::new(AliasKernel::new("ddlm-canary",
+/// &DdlmKernel)))`); for a kernel that varies host-side behaviour,
+/// implement [`FamilyKernel`] directly and point `artifact_prefix()`
+/// at the family whose device artifacts it reuses.
+pub struct AliasKernel {
+    name: &'static str,
+    base: &'static dyn FamilyKernel,
+}
+
+impl AliasKernel {
+    pub fn new(
+        name: &'static str,
+        base: &'static dyn FamilyKernel,
+    ) -> AliasKernel {
+        AliasKernel { name, base }
+    }
+}
+
+impl FamilyKernel for AliasKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn artifact_prefix(&self) -> &'static str {
+        self.base.artifact_prefix()
+    }
+    fn state_row(&self, l: usize, v: usize, d: usize) -> usize {
+        self.base.state_row(l, v, d)
+    }
+    fn times(&self, n_steps: usize, t_max: f32, t_min: f32) -> Vec<f32> {
+        self.base.times(n_steps, t_max, t_min)
+    }
+    fn init_sigma(&self, times: &[f32]) -> f32 {
+        self.base.init_sigma(times)
+    }
+    fn init_state(
+        &self,
+        x: &mut [f32],
+        sigma: f32,
+        simplex_k: f32,
+        rng: &mut crate::util::prng::Prng,
+    ) {
+        self.base.init_state(x, sigma, simplex_k, rng);
+    }
+    fn time_input(&self) -> &'static str {
+        self.base.time_input()
+    }
+    fn needs_z(&self) -> bool {
+        self.base.needs_z()
+    }
+    fn idle_times(&self) -> (f32, f32) {
+        self.base.idle_times()
+    }
+    fn clamp_token(
+        &self,
+        dst: &mut [f32],
+        tok: usize,
+        emb_row: &[f32],
+        simplex_k: f32,
+    ) {
+        self.base.clamp_token(dst, tok, emb_row, simplex_k);
+    }
+    fn parse_stats(
+        &self,
+        slot: usize,
+        out: &super::kernel::StepOutputs<'_>,
+    ) -> crate::halting::StepStats {
+        self.base.parse_stats(slot, out)
+    }
+}
+
+/// Resolve a family name — built-in or registered — to its id.  This is
+/// the wire boundary's lookup; `Family::parse` only knows the enum.
+pub fn resolve(name: &str) -> Option<FamilyId> {
+    kernels()
+        .read()
+        .unwrap()
+        .iter()
+        .position(|k| k.name() == name)
+        .map(|i| FamilyId(i as u16))
+}
+
+/// Number of registered kernels (>= `Family::COUNT`).
+pub fn count() -> usize {
+    kernels().read().unwrap().len()
+}
+
+/// Every registered id, in registration order.
+pub fn all() -> Vec<FamilyId> {
+    (0..count()).map(|i| FamilyId(i as u16)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_preregistered_at_enum_indices() {
+        for f in Family::all() {
+            let id = FamilyId::from(f);
+            assert_eq!(id.index(), f.index());
+            assert_eq!(id.name(), f.name());
+            assert_eq!(resolve(f.name()), Some(id));
+            assert_eq!(id.builtin(), Some(f));
+            assert_eq!(id, f);
+            assert_eq!(f, id);
+        }
+        assert!(count() >= Family::COUNT);
+        assert_eq!(resolve("gpt"), None);
+    }
+
+    #[test]
+    fn runtime_registration_resolves_and_is_not_a_builtin() {
+        let id = register(Box::new(AliasKernel::new(
+            "reg-test-alias",
+            &DdlmKernel,
+        )))
+        .unwrap();
+        assert_eq!(resolve("reg-test-alias"), Some(id));
+        assert_eq!(id.name(), "reg-test-alias");
+        assert_eq!(id.kernel().artifact_prefix(), "ddlm");
+        assert_eq!(id.builtin(), None);
+        assert!(id.index() >= Family::COUNT);
+        assert!(all().contains(&id));
+        // duplicate names are refused — they key wire routing
+        assert_eq!(
+            register(Box::new(AliasKernel::new(
+                "reg-test-alias",
+                &DdlmKernel
+            )))
+            .unwrap_err(),
+            RegistryError::DuplicateName("reg-test-alias".to_string())
+        );
+        // every behaviour delegates to the wrapped kernel
+        assert_eq!(
+            id.kernel().times(10, 10.0, 0.05),
+            DdlmKernel.times(10, 10.0, 0.05)
+        );
+        assert_eq!(id.kernel().state_row(64, 512, 48), 64 * 48);
+        assert_eq!(id.kernel().time_input(), DdlmKernel.time_input());
+    }
+
+    #[test]
+    fn unservable_names_are_refused_at_registration() {
+        // ':' and ',' delimit CLI fleet/schedule specs, names suffix
+        // metrics keys — the registry is the one validation choke point
+        for bad in ["", "fast:v2", "a,b", "Upper", "sp ace", "dot.name"] {
+            assert_eq!(
+                register(Box::new(AliasKernel::new(bad, &DdlmKernel)))
+                    .unwrap_err(),
+                RegistryError::InvalidName(bad.to_string()),
+                "accepted {bad:?}"
+            );
+            assert_eq!(resolve(bad), None);
+        }
+    }
+}

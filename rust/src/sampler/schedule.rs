@@ -10,6 +10,7 @@
 //! only holds the resulting array and delegates.
 
 pub use super::kernel::Family;
+use super::registry::FamilyId;
 
 /// Typed schedule-construction failure: a malformed caller gets an error
 /// it can surface (the serving path maps it to `invalid_request`), never
@@ -37,20 +38,24 @@ impl std::error::Error for ScheduleError {}
 /// fed as `t_cur` at step i; index n_steps is the terminal time.
 #[derive(Clone, Debug)]
 pub struct Schedule {
-    pub family: Family,
+    /// registry handle of the kernel whose shape this schedule follows
+    /// (built-in families convert implicitly)
+    pub family: FamilyId,
     pub times: Vec<f32>,
 }
 
 impl Schedule {
     /// Build the family's standard schedule by delegating to its kernel
     /// (see [`super::kernel::FamilyKernel::times`] for the per-family
-    /// shapes).
+    /// shapes).  Accepts a built-in [`Family`] or any registered
+    /// [`FamilyId`].
     pub fn new(
-        family: Family,
+        family: impl Into<FamilyId>,
         n_steps: usize,
         t_max: f32,
         t_min: f32,
     ) -> Result<Schedule, ScheduleError> {
+        let family = family.into();
         if n_steps == 0 {
             return Err(ScheduleError::ZeroSteps);
         }

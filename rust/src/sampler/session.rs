@@ -23,7 +23,8 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use super::kernel::{FamilyKernel, StepOutputs};
-use super::schedule::{Family, Schedule, ScheduleError};
+use super::registry::FamilyId;
+use super::schedule::{Schedule, ScheduleError};
 use crate::halting::StepStats;
 use crate::models::store::ParamStore;
 use crate::runtime::{Executable, Runtime};
@@ -144,7 +145,8 @@ struct StepOutIdx {
 }
 
 pub struct Session {
-    pub family: Family,
+    /// registry handle of the serving kernel (built-in or registered)
+    pub family: FamilyId,
     /// the family's sampler kernel — all per-family behaviour routes
     /// through this one seam
     kernel: &'static dyn FamilyKernel,
@@ -185,16 +187,20 @@ pub struct Session {
 }
 
 impl Session {
-    /// Create a session bound to `<family>_step_b<batch>_l<seq_len>`.
+    /// Create a session bound to the kernel's compiled step artifact
+    /// `<artifact_prefix>_step_b<batch>_l<seq_len>`.  Accepts a
+    /// built-in [`super::Family`] or any registered [`FamilyId`].
     pub fn new(
         rt: &Runtime,
-        family: Family,
+        family: impl Into<FamilyId>,
         store: Rc<ParamStore>,
         batch: usize,
         seq_len: usize,
     ) -> Result<Session> {
+        let family = family.into();
         let kernel = family.kernel();
-        let name = format!("{}_step_b{batch}_l{seq_len}", kernel.name());
+        let name =
+            format!("{}_step_b{batch}_l{seq_len}", kernel.artifact_prefix());
         let exe = rt.executable(&name)?;
         let m = &rt.manifest.model;
         let (v, d) = (m.vocab, m.d_model);

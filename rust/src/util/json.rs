@@ -2,20 +2,54 @@
 //!
 //! Covers exactly what the repo needs: parsing `artifacts/manifest.json`
 //! and the coordinator's JSON-lines wire protocol, plus encoding metrics /
-//! experiment rows.  Number handling is f64 (ints round-trip exactly up to
-//! 2^53, far beyond anything here).
+//! experiment rows.  Numbers come in two flavours: [`Json::Int`] holds
+//! integer literals *exactly* (the wire protocol's request ids and seeds
+//! are full-range u64 — going through f64 would silently round above
+//! 2^53), and [`Json::Num`] holds everything with a fraction or exponent.
+//! The two compare numerically equal when they denote the same value, so
+//! callers never have to care which variant the parser produced.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-#[derive(Clone, Debug, PartialEq)]
+/// Largest magnitude an f64 represents exactly as an integer (2^53);
+/// beyond it, only [`Json::Int`] round-trips without loss.
+const F64_EXACT: f64 = 9_007_199_254_740_992.0;
+
+#[derive(Clone, Debug)]
 pub enum Json {
     Null,
     Bool(bool),
+    /// integer literal, held exactly (covers the full u64 and i64 ranges)
+    Int(i128),
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            // Int and Num compare numerically: parsing "3" yields Int(3)
+            // but programmatic construction often yields Num(3.0).  The
+            // back-conversion guard keeps ints beyond f64 precision from
+            // colliding with their rounded neighbours.
+            (Json::Int(a), Json::Num(b)) | (Json::Num(b), Json::Int(a)) => {
+                b.fract() == 0.0
+                    && b.abs() < F64_EXACT
+                    && *a == (*b as i128)
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -44,12 +78,39 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned integer: `Int` within u64 range, or a `Num` whose
+    /// value is a non-negative integer small enough (< 2^53) that the
+    /// f64 representation is known to be exact.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(i) => u64::try_from(*i).ok(),
+            Json::Num(n)
+                if n.fract() == 0.0 && *n >= 0.0 && *n < F64_EXACT =>
+            {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Exact signed integer (same exactness rules as [`Self::as_u64`]).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => i64::try_from(*i).ok(),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < F64_EXACT => {
+                Some(*n as i64)
+            }
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_u64().and_then(|n| usize::try_from(n).ok())
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -84,6 +145,17 @@ impl Json {
         Json::Num(n.into())
     }
 
+    /// Exact unsigned integer (ids, seeds, token values) — never loses
+    /// precision, unlike routing a u64 through `num`.
+    pub fn uint(n: u64) -> Json {
+        Json::Int(n as i128)
+    }
+
+    /// Exact signed integer.
+    pub fn int(n: i64) -> Json {
+        Json::Int(n as i128)
+    }
+
     // ---------------------------------------------------------- encoding
     pub fn encode(&self) -> String {
         let mut out = String::new();
@@ -95,6 +167,9 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
             Json::Num(n) => {
                 if n.is_finite() {
                     if n.fract() == 0.0 && n.abs() < 9e15 {
@@ -224,19 +299,30 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
+        let mut integral = true;
         while let Some(c) = self.peek() {
-            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
-            {
+            if c.is_ascii_digit() {
+                self.i += 1;
+            } else if matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                integral = false;
                 self.i += 1;
             } else {
                 break;
             }
         }
-        std::str::from_utf8(&self.b[start..self.i])
-            .ok()
-            .and_then(|s| s.parse::<f64>().ok())
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| format!("bad number at byte {start}"))?;
+        // pure-integer literals are held exactly (u64 ids/seeds beyond
+        // 2^53 must not round through f64); absurdly long ones fall back
+        // to f64 like any other out-of-range number
+        if integral {
+            if let Ok(i) = text.parse::<i128>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        text.parse::<f64>()
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+            .map_err(|_| format!("bad number at byte {start}"))
     }
 
     fn string(&mut self) -> Result<String, String> {
@@ -380,6 +466,37 @@ mod tests {
     fn integers_encode_without_fraction() {
         assert_eq!(Json::num(3.0).encode(), "3");
         assert_eq!(Json::num(3.25).encode(), "3.25");
+    }
+
+    #[test]
+    fn exact_integers_beyond_f64_precision() {
+        // u64::MAX and 2^53 + 1 are NOT representable in f64; the Int
+        // variant must carry them exactly through parse -> encode
+        for text in ["18446744073709551615", "9007199254740993"] {
+            let j = Json::parse(text).unwrap();
+            assert_eq!(j.encode(), text, "lossy round-trip of {text}");
+            assert_eq!(j.as_u64(), Some(text.parse::<u64>().unwrap()));
+        }
+        assert_eq!(Json::uint(u64::MAX).encode(), "18446744073709551615");
+        assert_eq!(Json::int(-42).encode(), "-42");
+        assert_eq!(Json::parse("-42").unwrap().as_i64(), Some(-42));
+        // negative or fractional values are not unsigned integers
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::Num(3.0).as_u64(), Some(3));
+        // a Num beyond the f64-exact range is refused rather than
+        // silently rounded
+        assert_eq!(Json::Num(1e18).as_u64(), None);
+    }
+
+    #[test]
+    fn int_and_num_compare_numerically() {
+        assert_eq!(Json::parse("3").unwrap(), Json::num(3.0));
+        assert_eq!(Json::num(3.0), Json::parse("3").unwrap());
+        assert_ne!(Json::parse("3").unwrap(), Json::num(3.5));
+        assert_eq!(Json::parse("[1,2]").unwrap(), {
+            Json::Arr(vec![Json::num(1.0), Json::num(2.0)])
+        });
     }
 
     #[test]

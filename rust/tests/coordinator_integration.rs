@@ -29,7 +29,7 @@ fn metric(m: &Json, key: &str) -> f64 {
 fn engine_serves_mixed_criteria_batch() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 4)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 4)];
     let (engine, join) = start(cfg);
 
     // 10 requests, more than slots: forces queueing + recycling.
@@ -84,7 +84,7 @@ fn engine_serves_mixed_policy_batch_with_combinators() {
     // its own policy, freed slots must be recycled for the queue tail
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 4)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 4)];
     let (engine, join) = start(cfg);
 
     // (spec, expected steps, expected reason) at a 16-step budget;
@@ -200,7 +200,7 @@ fn overlong_prefix_rejected_without_killing_workers() {
 fn duplicate_inflight_id_rejected() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
     let (engine, join) = start(cfg);
     let rx = engine.submit(GenRequest::new(7, 1_000_000));
     // the same id resubmitted while the first is in flight
@@ -221,7 +221,7 @@ fn duplicate_inflight_id_rejected() {
 fn engine_handles_prefix_requests() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ssd);
-    cfg.worker_specs = vec![(Family::Ssd, 2)];
+    cfg.worker_specs = vec![(Family::Ssd.into(), 2)];
     let (engine, join) = start(cfg);
     let mut req = GenRequest::new(1, 6);
     req.prefix = (5..37).collect();
@@ -276,7 +276,7 @@ fn two_worker_shard_completes_requests_on_both_workers() {
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
     // two single-slot shards: neither can swallow a whole burst, so both
     // must participate (compiled artifacts exist for batch 1 and 8)
-    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1), (Family::Ddlm.into(), 1)];
     let (engine, join) = start(cfg);
 
     // keep feeding bursts from one client until both shards have
@@ -322,7 +322,7 @@ fn two_worker_shard_completes_requests_on_both_workers() {
 fn cancel_running_request_frees_its_slot() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
     let (engine, join) = start(cfg);
 
     // a request that would run ~forever without cancellation
@@ -352,7 +352,7 @@ fn cancel_running_request_frees_its_slot() {
 fn cancel_queued_request_behind_a_long_one() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
     let (engine, join) = start(cfg);
 
     let rx_long = engine.submit(GenRequest::new(1, 1_000_000));
@@ -378,7 +378,7 @@ fn cancel_queued_request_behind_a_long_one() {
 fn deadline_expires_mid_schedule() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
     let (engine, join) = start(cfg);
 
     let mut req = GenRequest::new(5, 1_000_000);
@@ -404,7 +404,7 @@ fn class_queue_bound_rejects_only_the_full_class() {
     // cannot starve the other classes
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
     cfg.class_queue_bounds = Some([8, 8, 0]);
     let (engine, join) = start(cfg);
 
@@ -427,7 +427,7 @@ fn class_queue_bound_rejects_only_the_full_class() {
 fn bounded_queue_rejects_with_typed_overload() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
     cfg.queue_depth = 1;
     let (engine, join) = start(cfg);
 

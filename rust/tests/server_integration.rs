@@ -32,7 +32,7 @@ fn metric(m: &Json, key: &str) -> f64 {
 fn server_roundtrip_and_metrics() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 2)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 2)];
     let (engine, _join) = start(cfg);
     let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
 
@@ -185,7 +185,7 @@ fn server_stop_joins_accept_thread_and_closes_listener() {
 fn mixed_family_fleet_routes_and_rejects_over_tcp() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
-    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ssd, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1), (Family::Ssd.into(), 1)];
     let (engine, join) = start(cfg);
     let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
     let mut client = Client::connect(&server.addr).unwrap();
@@ -199,33 +199,38 @@ fn mixed_family_fleet_routes_and_rejects_over_tcp() {
         (4, Family::Ssd),
     ] {
         let mut req = GenRequest::new(id, 4);
-        req.family = Some(fam);
+        req.family = Some(fam.into());
         let resp = client.generate(&req).unwrap();
         assert_eq!(resp.id, id);
-        assert_eq!(resp.family, Some(fam), "request {id}");
+        assert_eq!(resp.family, Some(fam.into()), "request {id}");
         assert_eq!(resp.steps_executed, 4);
     }
     // a request without a family goes to the fleet default (ddlm here)
     let resp = client.generate(&GenRequest::new(5, 3)).unwrap();
-    assert_eq!(resp.family, Some(Family::Ddlm));
+    assert_eq!(resp.family, Some(Family::Ddlm.into()));
 
     // plaid has no live worker in this fleet: typed invalid_request
     let mut plaid = GenRequest::new(6, 4);
-    plaid.family = Some(Family::Plaid);
+    plaid.family = Some(Family::Plaid.into());
     let r = client.roundtrip(&plaid.to_json()).unwrap();
     assert_eq!(
         r.get("error").and_then(Json::as_str),
         Some("invalid_request")
     );
 
-    // an unknown family string never reaches the scheduler: wire error
+    // an unknown family string never reaches the scheduler: typed wire
+    // rejection with the cause in `message`
     let r = client
         .roundtrip(
             &Json::parse(r#"{"id":7,"steps":4,"family":"gpt"}"#).unwrap(),
         )
         .unwrap();
-    let err = r.get("error").and_then(Json::as_str).unwrap();
-    assert!(err.contains("bad family"), "got {err:?}");
+    assert_eq!(
+        r.get("error").and_then(Json::as_str),
+        Some("invalid_request")
+    );
+    let msg = r.get("message").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("unknown family"), "got {msg:?}");
 
     // per-family lanes in the merged snapshot
     let m = client.metrics().unwrap();
@@ -259,7 +264,7 @@ fn three_family_fleet_serves_interleaved_requests_over_tcp() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
     cfg.worker_specs =
-        vec![(Family::Ddlm, 1), (Family::Ssd, 1), (Family::Plaid, 1)];
+        vec![(Family::Ddlm.into(), 1), (Family::Ssd.into(), 1), (Family::Plaid.into(), 1)];
     let (engine, join) = start(cfg);
     let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
     let mut client = Client::connect(&server.addr).unwrap();
@@ -272,10 +277,10 @@ fn three_family_fleet_serves_interleaved_requests_over_tcp() {
         if id % 2 == 0 {
             req.policy = parse_policy("fixed:2").unwrap();
         }
-        req.family = Some(fam);
+        req.family = Some(fam.into());
         let resp = client.generate(&req).unwrap();
         assert_eq!(resp.id, id);
-        assert_eq!(resp.family, Some(fam), "request {id}");
+        assert_eq!(resp.family, Some(fam.into()), "request {id}");
         assert_eq!(
             resp.steps_executed,
             if id % 2 == 0 { 2 } else { 6 },
@@ -311,7 +316,7 @@ fn three_family_fleet_serves_interleaved_requests_over_tcp() {
     let server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
     let mut client = Client::connect(&server.addr).unwrap();
     let mut ssd = GenRequest::new(1, 4);
-    ssd.family = Some(Family::Ssd);
+    ssd.family = Some(Family::Ssd.into());
     let r = client.roundtrip(&ssd.to_json()).unwrap();
     assert_eq!(
         r.get("error").and_then(Json::as_str),
@@ -320,7 +325,7 @@ fn three_family_fleet_serves_interleaved_requests_over_tcp() {
     // the fleet still serves its own family afterwards
     let ok = client.generate(&GenRequest::new(2, 2)).unwrap();
     assert_eq!(ok.steps_executed, 2);
-    assert_eq!(ok.family, Some(Family::Ddlm));
+    assert_eq!(ok.family, Some(Family::Ddlm.into()));
     drop(server);
     engine.shutdown();
     join.join().unwrap().unwrap();
@@ -336,7 +341,7 @@ fn multi_worker_mixed_workload_over_tcp() {
     let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
     // two single-slot shards + a 2-deep queue: a 10-request burst must
     // overflow (compiled step artifacts exist for batch 1 and 8)
-    cfg.worker_specs = vec![(Family::Ddlm, 1), (Family::Ddlm, 1)];
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1), (Family::Ddlm.into(), 1)];
     cfg.queue_depth = 2;
     let (engine, join) = start(cfg);
     let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
@@ -359,7 +364,7 @@ fn multi_worker_mixed_workload_over_tcp() {
         std::thread::sleep(Duration::from_millis(25));
     }
     let r = ctl.cancel(9001).unwrap();
-    assert_eq!(r.get("cancelled").and_then(Json::as_bool), Some(true));
+    assert!(r.cancelled, "cancel found nothing (state {})", r.state);
     let msg = victim.join().unwrap();
     assert!(msg.contains("cancelled"), "victim got: {msg}");
 

@@ -1,0 +1,251 @@
+//! Integration: the v1 envelope protocol end-to-end — throttled
+//! progress streaming, the graceful client halt verb (mid-schedule and
+//! queued), legacy/v1 coexistence on one port and one connection,
+//! per-family schedule envelopes in the metrics frame, and serving a
+//! family registered at runtime through `sampler::registry` (not the
+//! `Family` enum).
+
+use std::sync::OnceLock;
+
+use repro::coordinator::{
+    start, Client, EngineConfig, Event, GenRequest, Server,
+};
+use repro::sampler::{registry, DdlmKernel, Family, FamilyId};
+use repro::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+fn metric(m: &Json, key: &str) -> f64 {
+    m.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing metric {key} in {}", m.encode()))
+}
+
+/// A 200-step v1 request with `progress_every:50` streams exactly the
+/// non-terminal multiples of 50, then a huge request is gracefully
+/// halted mid-schedule and returns its partial decode with
+/// `halt_reason:"client"` — while legacy bare-JSON lines keep working
+/// on the very same connection.
+#[test]
+fn v1_progress_throttling_halt_and_legacy_on_one_connection() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 2)];
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // 1) throttling: progress fires on executed-step multiples of K,
+    //    and the terminal step is reported by `done`, not `progress`
+    let mut req = GenRequest::new(1, 200);
+    req.progress_every = Some(50);
+    let mut seen = Vec::new();
+    let resp = client
+        .generate_with(&req, |ev| {
+            assert_eq!(ev.id, 1);
+            assert_eq!(ev.steps_budget, 200);
+            seen.push(ev.step);
+        })
+        .unwrap();
+    assert_eq!(resp.steps_executed, 200);
+    assert!(!resp.halted_early);
+    assert_eq!(seen, vec![50, 100, 150], "throttle broke");
+
+    // 2) graceful halt mid-schedule: wait for streamed progress (the
+    //    request is provably running), halt, expect a NORMAL done with
+    //    the current decode
+    let mut req = GenRequest::new(2, 1_000_000);
+    req.progress_every = Some(5);
+    client.submit(&req).unwrap();
+    let first = loop {
+        match client.next_event().unwrap() {
+            Event::Progress(ev) if ev.id == 2 => break ev,
+            other => panic!("unexpected frame before progress: {other:?}"),
+        }
+    };
+    assert!(first.step >= 5);
+    let ack = client.halt(2).unwrap();
+    assert!(ack.found, "halt missed a running request");
+    assert_eq!(ack.state, "running");
+    let resp = loop {
+        match client.next_event().unwrap() {
+            Event::Progress(ev) if ev.id == 2 => continue,
+            Event::Done(resp) if resp.id == 2 => break resp,
+            other => panic!("unexpected frame after halt: {other:?}"),
+        }
+    };
+    assert!(resp.halted_early);
+    assert_eq!(resp.halt_reason.as_deref(), Some("client"));
+    assert!(resp.steps_executed >= 5);
+    assert!(resp.steps_executed < 1_000_000);
+    assert_eq!(resp.tokens.len(), 64, "partial decode missing");
+
+    // 3) the legacy one-shot protocol still works on this connection
+    let legacy =
+        client.roundtrip(&GenRequest::new(3, 4).to_json()).unwrap();
+    assert_eq!(legacy.get("id").and_then(Json::as_u64), Some(3));
+    assert_eq!(
+        legacy.get("steps_executed").and_then(Json::as_f64),
+        Some(4.0)
+    );
+    assert!(legacy.get("v").is_none(), "legacy reply grew a v field");
+    let cancel = client
+        .roundtrip(
+            &Json::parse(r#"{"cmd":"cancel","id":99999}"#).unwrap(),
+        )
+        .unwrap();
+    assert_eq!(
+        cancel.get("state").and_then(Json::as_str),
+        Some("not_found")
+    );
+
+    // 4) the client halt is accounted like any policy halt, in its own
+    //    reason lane, and the metrics frame carries the per-family
+    //    schedule envelope
+    let m = client.metrics().unwrap();
+    assert!(metric(&m, "halted_by_client") >= 1.0);
+    assert!(metric(&m, "requests_completed") >= 3.0);
+    let ddlm = m
+        .get("families")
+        .and_then(|f| f.get("ddlm"))
+        .unwrap_or_else(|| panic!("no families envelope in {}", m.encode()));
+    assert_eq!(ddlm.get("t_max").and_then(Json::as_f64), Some(10.0));
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// Halting a still-queued request finalizes it gracefully with an
+/// empty zero-step decode (`halt_reason:"client"`), not an error.
+#[test]
+fn halt_of_queued_request_returns_empty_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
+    let (engine, join) = start(cfg);
+
+    // a hog occupies the single slot (or the queue head) so the second
+    // request cannot have executed any steps yet
+    let rx_hog = engine.submit(GenRequest::new(1, 1_000_000));
+    let rx = engine.submit(GenRequest::new(2, 500));
+    assert!(engine.halt(2).found());
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!(resp.id, 2);
+    assert_eq!(resp.steps_executed, 0);
+    assert_eq!(resp.steps_budget, 500);
+    assert!(resp.halted_early);
+    assert_eq!(resp.halt_reason.as_deref(), Some("client"));
+    assert!(resp.tokens.is_empty());
+    // halting an unknown id finds nothing
+    assert!(!engine.halt(777).found());
+
+    assert!(engine.cancel(1).found());
+    assert!(rx_hog.recv().unwrap().is_err());
+    let m = engine.metrics().unwrap();
+    assert!(metric(&m, "halted_by_client") >= 1.0);
+    assert_eq!(metric(&m, "steps_saved"), 500.0);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// Per-family `t_max`/`t_min` overrides flow from `EngineConfig` into
+/// the workers and out through the metrics `families` envelope.
+#[test]
+fn per_family_schedule_override_surfaces_in_metrics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
+    cfg.schedule_overrides = vec![(Family::Ddlm.into(), 5.0, 0.1)];
+    let (engine, join) = start(cfg);
+
+    let m = engine.metrics().unwrap();
+    let ddlm = m.get("families").and_then(|f| f.get("ddlm")).unwrap();
+    assert_eq!(ddlm.get("t_max").and_then(Json::as_f64), Some(5.0));
+    let t_min = ddlm.get("t_min").and_then(Json::as_f64).unwrap();
+    assert!((t_min - 0.1).abs() < 1e-6, "t_min={t_min}");
+    // generation still completes under the tighter envelope
+    let resp = engine.generate(GenRequest::new(1, 6)).unwrap();
+    assert_eq!(resp.steps_executed, 6);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// Register an out-of-tree family once per process: ddlm's compiled
+/// artifacts served under the new wire name "ddlm64" (the
+/// registry-provided [`registry::AliasKernel`] delegates every
+/// behaviour; a kernel varying host-side behaviour would implement
+/// `FamilyKernel` directly).
+fn alias_family() -> FamilyId {
+    static ALIAS: OnceLock<FamilyId> = OnceLock::new();
+    *ALIAS.get_or_init(|| {
+        registry::register(Box::new(registry::AliasKernel::new(
+            "ddlm64",
+            &DdlmKernel,
+        )))
+        .unwrap()
+    })
+}
+
+/// The acceptance scenario for the open wire: a family registered at
+/// runtime through `sampler::registry` — NOT a `Family` enum variant —
+/// is configured as a worker shard, addressed by name over TCP, echoed
+/// in responses, and split out in the per-family metrics lanes.
+#[test]
+fn runtime_registered_family_serves_over_tcp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let fam = alias_family();
+    assert_eq!(registry::resolve("ddlm64"), Some(fam));
+    assert_eq!(fam.builtin(), None, "alias leaked into the enum");
+
+    let mut cfg = EngineConfig::new(&dir, fam);
+    cfg.worker_specs = vec![(fam, 1)];
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // v1 submit routed by registry id, response echoes it
+    let mut req = GenRequest::new(1, 4);
+    req.family = Some(fam);
+    assert_eq!(
+        req.to_json().get("family").and_then(Json::as_str),
+        Some("ddlm64")
+    );
+    let resp = client.generate(&req).unwrap();
+    assert_eq!(resp.family, Some(fam));
+    assert_eq!(resp.steps_executed, 4);
+    assert_eq!(resp.tokens.len(), 64);
+
+    // a legacy bare line naming the registered family works too — the
+    // wire resolves through the registry, not the enum
+    let r = client
+        .roundtrip(
+            &Json::parse(r#"{"id":2,"steps":3,"family":"ddlm64"}"#).unwrap(),
+        )
+        .unwrap();
+    assert_eq!(r.get("family").and_then(Json::as_str), Some("ddlm64"));
+    assert_eq!(r.get("steps_executed").and_then(Json::as_f64), Some(3.0));
+
+    // per-family metrics lane under the registered name
+    let m = client.metrics().unwrap();
+    assert_eq!(metric(&m, "requests_completed_ddlm64"), 2.0);
+    assert!(m.get("families").and_then(|f| f.get("ddlm64")).is_some());
+    // a built-in family has no live worker in this fleet: typed reject
+    let mut ssd = GenRequest::new(3, 4);
+    ssd.family = Some(Family::Ssd.into());
+    let r = client.roundtrip(&ssd.to_json()).unwrap();
+    assert_eq!(
+        r.get("error").and_then(Json::as_str),
+        Some("invalid_request")
+    );
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}

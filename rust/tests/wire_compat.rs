@@ -1,0 +1,236 @@
+//! Wire-compatibility gate: the golden legacy corpus must parse and
+//! re-encode byte-identically forever, sparse PR1-era lines must keep
+//! their semantics, and random envelopes must round-trip.  These tests
+//! are pure codec work — no artifacts, no device — so they run
+//! everywhere (see the `wire compat` stage of `scripts/check.sh`).
+
+use repro::coordinator::{Command, Event, GenRequest, GenResponse, Priority};
+use repro::halting::parse_policy;
+use repro::sampler::Family;
+use repro::util::json::Json;
+use repro::util::prng::Prng;
+
+fn corpus() -> Vec<String> {
+    let path = format!(
+        "{}/rust/tests/data/legacy_wire.jsonl",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {path}: {e}"))
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Every corpus line (canonical encoding of a PR1–PR3-era request or
+/// response) must parse through the CURRENT codec and re-encode to the
+/// exact same bytes.
+#[test]
+fn golden_corpus_roundtrips_byte_identically() {
+    let lines = corpus();
+    assert!(lines.len() >= 10, "corpus shrank to {} lines", lines.len());
+    let (mut requests, mut responses) = (0, 0);
+    for line in &lines {
+        let j = Json::parse(line).unwrap_or_else(|e| {
+            panic!("corpus line no longer parses: {line}\n  {e}")
+        });
+        let reencoded = if j.get("steps").is_some() {
+            requests += 1;
+            GenRequest::from_json(&j)
+                .unwrap_or_else(|e| {
+                    panic!("legacy request rejected: {line}\n  {e:#}")
+                })
+                .to_json()
+                .encode()
+        } else {
+            responses += 1;
+            GenResponse::from_json(&j)
+                .unwrap_or_else(|e| {
+                    panic!("legacy response rejected: {line}\n  {e:#}")
+                })
+                .to_json()
+                .encode()
+        };
+        assert_eq!(&reencoded, line, "byte-identity broken");
+    }
+    assert!(requests >= 6, "corpus lost request coverage");
+    assert!(responses >= 3, "corpus lost response coverage");
+}
+
+/// Sparse legacy lines (fields the old clients actually omitted) keep
+/// their defaulting semantics, and canonicalize to a stable expansion.
+#[test]
+fn sparse_legacy_requests_keep_their_semantics() {
+    let cases: &[(&str, &str)] = &[
+        (
+            r#"{"id":1,"steps":10,"criterion":"none"}"#,
+            r#"{"criterion":"none","id":1,"noise_scale":1,"prefix":[],"priority":"normal","seed":1,"steps":10}"#,
+        ),
+        (
+            r#"{"id":5,"steps":200,"criterion":"entropy:0.25","seed":77}"#,
+            r#"{"criterion":"entropy:0.25","id":5,"noise_scale":1,"prefix":[],"priority":"normal","seed":77,"steps":200}"#,
+        ),
+        // no criterion at all = never halt (the PR1-era default)
+        (
+            r#"{"id":2,"steps":40}"#,
+            r#"{"criterion":"none","id":2,"noise_scale":1,"prefix":[],"priority":"normal","seed":2,"steps":40}"#,
+        ),
+    ];
+    for (sparse, canonical) in cases {
+        let req =
+            GenRequest::from_json(&Json::parse(sparse).unwrap()).unwrap();
+        assert_eq!(&req.to_json().encode(), canonical, "from {sparse}");
+        assert_eq!(req.priority, Priority::Normal);
+        assert_eq!(req.family, None);
+        assert_eq!(req.progress_every, None);
+    }
+}
+
+fn random_request(r: &mut Prng, id: u64) -> GenRequest {
+    const SPECS: &[&str] = &[
+        "none",
+        "entropy:0.25",
+        "patience:20:0",
+        "kl:0.001:250",
+        "fixed:600",
+        "norm:0.05:3",
+        "klslope:0.02:5",
+        "any(entropy:0.5,patience:20:0)",
+        "all(kl:0.001:0,fixed:90)",
+        "min(50,any(entropy:0.25,klslope:0.02:5))",
+        "ema(0.3,norm:0.05:3)",
+    ];
+    let mut req = GenRequest::new(id, 1 + r.below(2000));
+    req.policy = parse_policy(SPECS[r.below(SPECS.len())]).unwrap();
+    req.seed = r.next_u64();
+    req.prefix = (0..r.below(40)).map(|_| r.below(512) as i32).collect();
+    req.priority = [Priority::High, Priority::Normal, Priority::Low]
+        [r.below(3)];
+    if r.below(2) == 0 {
+        req.deadline_ms = Some((r.below(100_000) as f64) / 4.0);
+    }
+    if r.below(2) == 0 {
+        req.family = Some(Family::all()[r.below(Family::COUNT)].into());
+    }
+    if r.below(3) == 0 {
+        req.progress_every = Some(1 + r.below(100));
+    }
+    req
+}
+
+/// Property: random requests — full-range u64 ids/seeds included —
+/// survive encode → parse → encode as a fixed point with identical
+/// semantics.
+#[test]
+fn random_requests_roundtrip_exactly() {
+    let mut r = Prng::new(20260728);
+    for i in 0..200 {
+        let id = r.next_u64();
+        let req = random_request(&mut r, id);
+        let encoded = req.to_json().encode();
+        let back =
+            GenRequest::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(back.id, req.id, "{encoded}");
+        assert_eq!(back.seed, req.seed, "{encoded}");
+        assert_eq!(back.prefix, req.prefix, "{encoded}");
+        assert_eq!(back.n_steps, req.n_steps, "{encoded}");
+        assert_eq!(back.priority, req.priority, "{encoded}");
+        assert_eq!(back.deadline_ms, req.deadline_ms, "{encoded}");
+        assert_eq!(back.family, req.family, "{encoded}");
+        assert_eq!(back.progress_every, req.progress_every, "{encoded}");
+        assert_eq!(back.policy.to_spec(), req.policy.to_spec(), "{encoded}");
+        // fixed point: a second trip is byte-identical
+        assert_eq!(back.to_json().encode(), encoded, "iteration {i}");
+    }
+}
+
+/// Property: random v1 submit envelopes round-trip through the frame
+/// codec (Command) with the request intact.
+#[test]
+fn random_submit_frames_roundtrip() {
+    let mut r = Prng::new(777);
+    for _ in 0..100 {
+        let id = r.next_u64();
+        let req = random_request(&mut r, id);
+        let frame = Command::Submit(Box::new(req)).to_json();
+        assert_eq!(frame.get("v").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            frame.get("type").and_then(Json::as_str),
+            Some("submit")
+        );
+        let encoded = frame.encode();
+        let Command::Submit(back) =
+            Command::from_json(&Json::parse(&encoded).unwrap()).unwrap()
+        else {
+            panic!("submit decoded as another frame: {encoded}")
+        };
+        // the envelope's extra keys must not disturb the request codec
+        let expect =
+            GenRequest::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(back.id, expect.id);
+        assert_eq!(back.policy.to_spec(), expect.policy.to_spec());
+        assert_eq!(back.prefix, expect.prefix);
+    }
+}
+
+/// Property: random server events round-trip through the Event codec.
+#[test]
+fn random_events_roundtrip() {
+    let mut r = Prng::new(4242);
+    for _ in 0..200 {
+        let ev = match r.below(4) {
+            0 => Event::Progress(repro::coordinator::ProgressEvent {
+                id: r.next_u64(),
+                step: r.below(1000),
+                steps_budget: 1000 + r.below(1000),
+                stats: Default::default(),
+            }),
+            1 => Event::Done(GenResponse {
+                id: r.next_u64(),
+                tokens: (0..r.below(8)).map(|_| r.below(512) as i32).collect(),
+                steps_executed: r.below(500),
+                steps_budget: 500 + r.below(500),
+                halted_early: r.below(2) == 0,
+                halt_reason: (r.below(2) == 0)
+                    .then(|| "client".to_string()),
+                latency_ms: r.below(10_000) as f64 / 4.0,
+                queue_ms: r.below(1000) as f64 / 4.0,
+                family: (r.below(2) == 0)
+                    .then(|| Family::all()[r.below(Family::COUNT)].into()),
+                final_stats: Default::default(),
+            }),
+            2 => Event::Error {
+                id: (r.below(2) == 0).then(|| r.next_u64()),
+                code: ["overloaded", "cancelled", "invalid_request"]
+                    [r.below(3)]
+                .to_string(),
+                message: (r.below(2) == 0).then(|| "detail".to_string()),
+            },
+            _ => Event::HaltAck {
+                id: r.next_u64(),
+                found: r.below(2) == 0,
+                state: ["queued", "running", "not_found"][r.below(3)]
+                    .to_string(),
+            },
+        };
+        let encoded = ev.to_json().encode();
+        let back = Event::from_json(&Json::parse(&encoded).unwrap())
+            .unwrap_or_else(|e| panic!("event rejected: {encoded}\n  {e:#}"));
+        // fixed point byte-identity is the strongest cheap check
+        assert_eq!(back.to_json().encode(), encoded);
+    }
+}
+
+/// The halted-early response of a *client* halt (the new graceful verb)
+/// parses on a legacy client exactly like any policy halt — the reason
+/// string is just "client".
+#[test]
+fn client_halt_reason_is_legacy_parseable() {
+    let line = r#"{"entropy":0.5,"halt_reason":"client","halted_early":true,"id":8,"kl":0,"latency_ms":30,"queue_ms":1,"steps_budget":500,"steps_executed":60,"switches":0,"tokens":[1,2]}"#;
+    let resp = GenResponse::from_json(&Json::parse(line).unwrap()).unwrap();
+    assert!(resp.halted_early);
+    assert_eq!(resp.halt_reason.as_deref(), Some("client"));
+    assert_eq!(resp.to_json().encode(), line);
+}

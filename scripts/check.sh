@@ -1,14 +1,20 @@
 #!/usr/bin/env bash
-# Repo gate: formatting, lints, tests.  Run from anywhere.
+# Repo gate: formatting, lints, wire compat, tests.  Run from anywhere.
 #
-#   scripts/check.sh           # fmt + clippy + test + bench compile
+#   scripts/check.sh           # fmt + clippy + wire-compat + test
+#                              # + bench compile
 #   scripts/check.sh --bench   # ...then the headline serving bench,
 #                              # which writes BENCH_serving.json
-#                              # (p50/p95 latency, req/s, steps/s)
+#                              # (p50/p95 latency, req/s, steps/s,
+#                              # stream_overhead_pct)
 #
-# `cargo bench --no-run` is part of the default gate so bench targets
-# (including the mixed-family serving scenario) can never rot
-# uncompiled even where artifacts are absent.
+# The wire-compat stage runs the golden-corpus / envelope round-trip
+# tests explicitly (they are pure codec tests, so they run even where
+# artifacts are absent) — the legacy JSON-lines protocol is a
+# compatibility contract and breaking it must fail loudly, not hide in
+# the big test run.  `cargo bench --no-run` is part of the default
+# gate so bench targets (including the mixed-family and streaming
+# serving scenarios) can never rot uncompiled.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,6 +23,9 @@ cargo fmt --check
 
 echo "== cargo clippy (all targets, warnings are errors) =="
 cargo clippy --all-targets -- -D warnings
+
+echo "== wire compat (golden legacy corpus + envelope round-trips) =="
+cargo test -q --test wire_compat
 
 echo "== cargo test -q =="
 cargo test -q
