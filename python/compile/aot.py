@@ -59,6 +59,10 @@ def build_step(art: ArtifactConfig, params):
         "x_next", "probs", "x0_hat", "tokens",
         "entropy", "kl", "switches", "norm_x0", "norm_x",
     ]
+    # format-2 step artifacts take on-device prefix-clamp inputs (the
+    # state row width W is per-family: D for embedding space, V for the
+    # simplex), so the device-resident serving path never round-trips
+    # the state through the host just to re-clamp conditioning positions
     if art.family == "ddlm":
         def fn(*a):
             p = transformer.unflatten(names, list(a[:n]))
@@ -68,6 +72,8 @@ def build_step(art: ArtifactConfig, params):
             ("prev_probs", spec((b, l, v))),
             ("prev_tokens", spec((b, l), I32)),
             ("t2", spec((b, 2))),
+            ("prefix_mask", spec((b, l))),
+            ("prefix_x", spec((b, l, d))),
         ]
     elif art.family == "ssd":
         def fn(*a):
@@ -79,6 +85,8 @@ def build_step(art: ArtifactConfig, params):
             ("prev_tokens", spec((b, l), I32)),
             ("tau2", spec((b, 2))),
             ("z", spec((b, l, v))),
+            ("prefix_mask", spec((b, l))),
+            ("prefix_x", spec((b, l, v))),
         ]
     else:  # plaid
         def fn(*a):
@@ -90,6 +98,8 @@ def build_step(art: ArtifactConfig, params):
             ("prev_tokens", spec((b, l), I32)),
             ("tau2", spec((b, 2))),
             ("z", spec((b, l, d))),
+            ("prefix_mask", spec((b, l))),
+            ("prefix_x", spec((b, l, d))),
         ]
     in_names = names + [nm for nm, _ in data]
     in_specs = pspecs + [s for _, s in data]
@@ -204,8 +214,12 @@ def export(out_dir: str, only=None) -> None:
             [(k, p[k]) for k in transformer.flatten_names(p)],
         )
 
+    # format 2: step artifacts carry on-device prefix-clamp inputs
+    # (prefix_mask/prefix_x), enabling the rust session's
+    # device-resident state path; format-1 manifests (no such inputs)
+    # are still served via the host-roundtrip reference path.
     manifest = {
-        "format": 1,
+        "format": 2,
         "model": {
             "vocab": BASE.vocab,
             "seq_len": BASE.seq_len,

@@ -134,18 +134,41 @@ def train_step(cfg: ModelConfig, names):
     return step
 
 
-def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2):
+def clamp_prefix(x, prefix_mask, prefix_x):
+    """On-device replacement conditioning (manifest format >= 2).
+
+    prefix_mask: [B,L] (1 = conditioning position); prefix_x: [B,L,W]
+    clean per-position representation, written by the rust session with
+    the *same* values its host-side clamp uses.  A ``where`` select (not
+    an arithmetic blend) keeps the substitution a bit-exact copy, so the
+    device-resident serving path stays bit-identical to the
+    host-roundtrip reference path.  An all-zero mask is a pass-through —
+    that is how the reference path (which still clamps on the host)
+    drives format-2 artifacts.
+    """
+    return jnp.where(prefix_mask[:, :, None] > 0.5, prefix_x, x)
+
+
+def gen_step(
+    p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2,
+    prefix_mask, prefix_x,
+):
     """One generation step + halting statistics (the step artifact body).
 
     x_t: [B,L,D]; prev_probs: [B,L,V]; prev_tokens: [B,L] i32;
     t2: [B,2] per-slot (t_cur, t_next) — per-slot times let the serving
     coordinator recycle batch slots mid-schedule (continuous batching).
+    prefix_mask: [B,L]; prefix_x: [B,L,D] — on-device prefix clamping
+    (see ``clamp_prefix``), applied to the input state and the updated
+    state so conditioning positions stay clean without a host roundtrip.
 
     Returns (x_next, probs, x0_hat, tokens, entropy, kl, switches,
              norm_x0 [B], norm_x [B]).
     """
+    x_t = clamp_prefix(x_t, prefix_mask, prefix_x)
     logits, e_n = logits_fn(p, cfg, x_t, t2[:, 0], use_pallas=True)
     x_next, probs, x0_hat = score.score_euler(logits, e_n, x_t, t2)
+    x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
     tokens, entropy, kl, switches = stats.halt_stats(
         probs, prev_probs, prev_tokens
     )
@@ -156,8 +179,12 @@ def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2):
     )
 
 
-def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2):
+def gen_step_ref(
+    p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2,
+    prefix_mask, prefix_x,
+):
     """Oracle twin of ``gen_step`` on the pure-jnp path (pytest parity)."""
+    x_t = clamp_prefix(x_t, prefix_mask, prefix_x)
     t_cur = t2[:, 0]
     e_n = transformer.normalized_emb(p, cfg)
     h = transformer.forward(
@@ -169,6 +196,7 @@ def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2):
     )
     logits = h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
     x_next, probs, x0_hat = ref.score_euler_ref(logits, e_n, x_t, t2)
+    x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
     tokens, entropy, kl, switches = ref.halt_stats_ref(
         probs, prev_probs, prev_tokens
     )

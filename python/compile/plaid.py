@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from . import optim, transformer
 from .configs import ModelConfig
+from .ddlm import clamp_prefix
 from .kernels import diffuse, ref, stats
 from .ssd import abar_cosine
 
@@ -64,19 +65,26 @@ def train_step(cfg: ModelConfig, names):
     return step
 
 
-def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+def gen_step(
+    p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z,
+    prefix_mask, prefix_x,
+):
     """One DDPM ancestral step + halting stats.
 
     x_t/z: [B,L,D]; tau2: [B,2] per-slot (tau_cur, tau_next),
     tau_next > tau_cur; per-slot times support continuous batching.
+    prefix_mask: [B,L]; prefix_x: [B,L,D] clean embedding rows — the
+    on-device form of the host clamp (see ``ddlm.clamp_prefix``).
     Returns (x_next, probs, x0_hat, tokens, entropy, kl, switches,
              norm_x0, norm_x).
     """
+    x_t = clamp_prefix(x_t, prefix_mask, prefix_x)
     x0_hat, logits, _ = x0_and_logits(
         p, cfg, x_t, tau2[:, 0], use_pallas=True
     )
     probs = jax.nn.softmax(logits, axis=-1)
     x_next = diffuse.ddpm_step(x_t, x0_hat, abar_cosine(tau2), z)
+    x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
     tokens, entropy, kl, switches = stats.halt_stats(
         probs, prev_probs, prev_tokens
     )
@@ -87,13 +95,18 @@ def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
     )
 
 
-def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+def gen_step_ref(
+    p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z,
+    prefix_mask, prefix_x,
+):
     """Oracle twin of ``gen_step`` (pytest parity)."""
+    x_t = clamp_prefix(x_t, prefix_mask, prefix_x)
     x0_hat, logits, _ = x0_and_logits(
         p, cfg, x_t, tau2[:, 0], use_pallas=False
     )
     probs = jax.nn.softmax(logits, axis=-1)
     x_next = ref.ddpm_step_ref(x_t, x0_hat, abar_cosine(tau2), z)
+    x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
     tokens, entropy, kl, switches = ref.halt_stats_ref(
         probs, prev_probs, prev_tokens
     )

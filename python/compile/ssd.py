@@ -15,7 +15,7 @@ Fig 4: ~step 850 of 1000).
 import jax
 import jax.numpy as jnp
 
-from . import optim, transformer
+from . import ddlm, optim, transformer
 from .configs import ModelConfig
 from .kernels import diffuse, ref, stats
 
@@ -71,21 +71,28 @@ def train_step(cfg: ModelConfig, names):
     return step
 
 
-def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+def gen_step(
+    p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z,
+    prefix_mask, prefix_x,
+):
     """One simplex generation step + halting stats.
 
     x_t/z: [B,L,V]; tau2: [B,2] per-slot (tau_cur, tau_next) with
     tau_next > tau_cur (generation walks towards clean tau=1); per-slot
     times support the coordinator's continuous batching.
+    prefix_mask: [B,L]; prefix_x: [B,L,V] ±K one-hot logit rows — the
+    on-device form of the host clamp (see ``ddlm.clamp_prefix``).
 
     Returns (x_next, probs, x0_hat_emb, tokens, entropy, kl, switches,
              norm_x0, norm_x).
     """
+    x_t = ddlm.clamp_prefix(x_t, prefix_mask, prefix_x)
     logits = logits_fn(p, cfg, x_t, tau2[:, 0], use_pallas=True)
     probs = jax.nn.softmax(logits, axis=-1)
     x_next = diffuse.simplex_step(
         probs, cfg.simplex_k, abar_cosine(tau2[:, 1:2]), z
     )
+    x_next = ddlm.clamp_prefix(x_next, prefix_mask, prefix_x)
     tokens, entropy, kl, switches = stats.halt_stats(
         probs, prev_probs, prev_tokens
     )
@@ -98,13 +105,18 @@ def gen_step(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
     )
 
 
-def gen_step_ref(p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z):
+def gen_step_ref(
+    p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, tau2, z,
+    prefix_mask, prefix_x,
+):
     """Oracle twin of ``gen_step`` (pytest parity)."""
+    x_t = ddlm.clamp_prefix(x_t, prefix_mask, prefix_x)
     logits = logits_fn(p, cfg, x_t, tau2[:, 0], use_pallas=False)
     probs = jax.nn.softmax(logits, axis=-1)
     x_next = ref.simplex_step_ref(
         probs, cfg.simplex_k, abar_cosine(tau2[:, 1:2]), z
     )
+    x_next = ddlm.clamp_prefix(x_next, prefix_mask, prefix_x)
     tokens, entropy, kl, switches = ref.halt_stats_ref(
         probs, prev_probs, prev_tokens
     )

@@ -34,6 +34,13 @@ def _state(seed=0):
     return x_d, x_v, pp, pt, z_d, z_v
 
 
+def _no_prefix(w):
+    """All-zero prefix-clamp inputs: a bit-exact pass-through."""
+    pm = jnp.zeros((B, CFG.seq_len), jnp.float32)
+    px = jnp.zeros((B, CFG.seq_len, w), jnp.float32)
+    return pm, px
+
+
 def _assert_close(got, want):
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
@@ -43,33 +50,39 @@ def _assert_close(got, want):
 def test_ddlm_step_parity(params):
     x_d, _, pp, pt, _, _ = _state()
     t2 = jnp.asarray([[10.0, 9.0]] * B, jnp.float32)
-    _assert_close(ddlm.gen_step(params, CFG, x_d, pp, pt, t2),
-                  ddlm.gen_step_ref(params, CFG, x_d, pp, pt, t2))
+    pm, px = _no_prefix(CFG.d_model)
+    _assert_close(ddlm.gen_step(params, CFG, x_d, pp, pt, t2, pm, px),
+                  ddlm.gen_step_ref(params, CFG, x_d, pp, pt, t2, pm, px))
 
 
 def test_ssd_step_parity(params):
     _, x_v, pp, pt, _, z_v = _state()
     tau2 = jnp.asarray([[0.3, 0.4]] * B, jnp.float32)
-    _assert_close(ssd.gen_step(params, CFG, x_v, pp, pt, tau2, z_v),
-                  ssd.gen_step_ref(params, CFG, x_v, pp, pt, tau2, z_v))
+    pm, px = _no_prefix(CFG.vocab)
+    _assert_close(ssd.gen_step(params, CFG, x_v, pp, pt, tau2, z_v, pm, px),
+                  ssd.gen_step_ref(params, CFG, x_v, pp, pt, tau2, z_v, pm,
+                                   px))
 
 
 def test_plaid_step_parity(params):
     x_d, _, pp, pt, z_d, _ = _state()
     tau2 = jnp.asarray([[0.3, 0.4]] * B, jnp.float32)
-    _assert_close(plaid.gen_step(params, CFG, x_d, pp, pt, tau2, z_d),
-                  plaid.gen_step_ref(params, CFG, x_d, pp, pt, tau2, z_d))
+    pm, px = _no_prefix(CFG.d_model)
+    _assert_close(plaid.gen_step(params, CFG, x_d, pp, pt, tau2, z_d, pm, px),
+                  plaid.gen_step_ref(params, CFG, x_d, pp, pt, tau2, z_d, pm,
+                                     px))
 
 
 def test_ddlm_multi_step_state_evolution(params):
     """Euler PF-ODE: ||X|| must move from the noise scale towards the
     embedding sphere; outputs finite throughout (untrained weights)."""
     x_d, _, pp, pt, _, _ = _state(1)
+    pm, px = _no_prefix(CFG.d_model)
     ts = np.geomspace(10.0, 0.1, 21).astype(np.float32)
     norms = []
     for i in range(len(ts) - 1):
         t2 = jnp.asarray([[ts[i], ts[i + 1]]] * B, jnp.float32)
-        out = ddlm.gen_step_ref(params, CFG, x_d, pp, pt, t2)
+        out = ddlm.gen_step_ref(params, CFG, x_d, pp, pt, t2, pm, px)
         x_d, pp, pt = out[0], out[1], out[3]
         norms.append(float(out[8][0]))
         assert np.all(np.isfinite(np.asarray(out[0])))
@@ -80,7 +93,8 @@ def test_ddlm_multi_step_state_evolution(params):
 def test_ssd_step_keeps_simplex_scale(params):
     _, x_v, pp, pt, _, z_v = _state(2)
     tau2 = jnp.asarray([[0.95, 0.99]] * B, jnp.float32)
-    out = ssd.gen_step_ref(params, CFG, x_v, pp, pt, tau2, z_v)
+    pm, px = _no_prefix(CFG.vocab)
+    out = ssd.gen_step_ref(params, CFG, x_v, pp, pt, tau2, z_v, pm, px)
     x_next = np.asarray(out[0])
     assert np.all(np.abs(x_next) < CFG.simplex_k * 4.0)
 
@@ -90,9 +104,35 @@ def test_plaid_step_noise_injection_nonzero(params):
     x_next (this is *why* Plaid can't halt adaptively, paper Fig 4)."""
     x_d, _, pp, pt, z_d, _ = _state(3)
     tau2 = jnp.asarray([[0.3, 0.35]] * B, jnp.float32)
-    out1 = plaid.gen_step_ref(params, CFG, x_d, pp, pt, tau2, z_d)
-    out2 = plaid.gen_step_ref(params, CFG, x_d, pp, pt, tau2, -z_d)
+    pm, px = _no_prefix(CFG.d_model)
+    out1 = plaid.gen_step_ref(params, CFG, x_d, pp, pt, tau2, z_d, pm, px)
+    out2 = plaid.gen_step_ref(params, CFG, x_d, pp, pt, tau2, -z_d, pm, px)
     assert not np.allclose(np.asarray(out1[0]), np.asarray(out2[0]))
     # but the *probs* at this step agree (same x_t input)
     np.testing.assert_allclose(np.asarray(out1[1]), np.asarray(out2[1]),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_prefix_clamp_pins_positions_bit_exact(params):
+    """Format-2 on-device clamping: conditioning positions of x_next are
+    the prefix_x rows *bit-exactly* (a where-select copy, never an
+    arithmetic blend), free positions match the unclamped step, and an
+    all-zero mask is a pass-through — the contract the rust session's
+    device-resident path relies on for host/device equivalence."""
+    x_d, _, pp, pt, _, _ = _state(4)
+    t2 = jnp.asarray([[10.0, 9.0]] * B, jnp.float32)
+    n_pin = 5
+    pm = jnp.zeros((B, CFG.seq_len), jnp.float32).at[:, :n_pin].set(1.0)
+    rng = np.random.default_rng(7)
+    px = jnp.asarray(rng.normal(size=(B, CFG.seq_len, CFG.d_model)),
+                     jnp.float32)
+    out = ddlm.gen_step_ref(params, CFG, x_d, pp, pt, t2, pm, px)
+    x_next = np.asarray(out[0])
+    np.testing.assert_array_equal(x_next[:, :n_pin], np.asarray(px)[:, :n_pin])
+    # free positions evolve exactly as the same step seeded with the
+    # already-clamped input state (the invariant the feedback loop keeps)
+    x_clamped = jnp.where(pm[:, :, None] > 0.5, px, x_d)
+    pm0, px0 = _no_prefix(CFG.d_model)
+    base = ddlm.gen_step_ref(params, CFG, x_clamped, pp, pt, t2, pm0, px0)
+    np.testing.assert_array_equal(x_next[:, n_pin:],
+                                  np.asarray(base[0])[:, n_pin:])

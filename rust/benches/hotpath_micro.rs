@@ -39,37 +39,83 @@ fn main() {
             }
             let store =
                 Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
-            let mut s =
-                Session::new(&rt, fam, store, b, m.seq_len).unwrap();
-            for slot in 0..b {
-                s.reset_slot(
-                    slot,
-                    &SlotRequest::new(
-                        slot as u64,
-                        1_000_000,
-                        m.t_max,
-                        m.t_min,
-                    ),
-                )
-                .unwrap();
-            }
-            bench(
-                &format!("{}_step_b{b} full step (host roundtrip)", fam.name()),
-                20,
-                || {
+            // resident (device-fed state, the serving default) vs the
+            // host-roundtrip reference path; ExecStats live on the
+            // shared cached Executable, so each mode reports deltas
+            // from its own post-warmup baseline
+            for resident in [true, false] {
+                let mut s =
+                    Session::new(&rt, fam, store.clone(), b, m.seq_len)
+                        .unwrap();
+                if s.set_resident(resident).unwrap() != resident {
+                    continue; // format-1 artifacts: no resident path
+                }
+                for slot in 0..b {
+                    s.reset_slot(
+                        slot,
+                        &SlotRequest::new(
+                            slot as u64,
+                            1_000_000,
+                            m.t_max,
+                            m.t_min,
+                        ),
+                    )
+                    .unwrap();
+                }
+                let label = if resident {
+                    "device-resident"
+                } else {
+                    "host roundtrip"
+                };
+                // burn the resident path's one-off state-entry upload
+                // before the baseline snapshot, so the deltas below are
+                // pure steady state (and per-mode: the two sessions
+                // share one cached Executable, so cumulative stats mix)
+                for _ in 0..3 {
                     s.step().unwrap();
-                },
-            );
-            let st = s.exec_stats();
-            println!(
-                "    breakdown: exec {:.1}% | upload {:.1}% | download {:.1}%",
-                100.0 * st.exec_seconds
-                    / (st.exec_seconds + st.upload_seconds + st.download_seconds),
-                100.0 * st.upload_seconds
-                    / (st.exec_seconds + st.upload_seconds + st.download_seconds),
-                100.0 * st.download_seconds
-                    / (st.exec_seconds + st.upload_seconds + st.download_seconds),
-            );
+                }
+                if s.resident() != resident {
+                    // first-step downgrade (runtime returned one tuple
+                    // buffer): don't print reference numbers under the
+                    // resident label
+                    println!(
+                        "{}_step_b{b}: resident path unavailable on \
+                         this runtime — skipping",
+                        fam.name()
+                    );
+                    continue;
+                }
+                let st0 = s.exec_stats();
+                bench(
+                    &format!(
+                        "{}_step_b{b} full step ({label})",
+                        fam.name()
+                    ),
+                    20,
+                    || {
+                        s.step().unwrap();
+                    },
+                );
+                let st = s.exec_stats();
+                let (d_exec, d_up, d_down) = (
+                    st.exec_seconds - st0.exec_seconds,
+                    st.upload_seconds - st0.upload_seconds,
+                    st.download_seconds - st0.download_seconds,
+                );
+                let total = d_exec + d_up + d_down;
+                let calls = (st.executions - st0.executions).max(1);
+                println!(
+                    "    breakdown: exec {:.1}% | upload {:.1}% | \
+                     download {:.1}% | host bytes/step {:.0}",
+                    100.0 * d_exec / total,
+                    100.0 * d_up / total,
+                    100.0 * d_down / total,
+                    ((st.upload_bytes - st0.upload_bytes)
+                        + (st.download_bytes - st0.download_bytes))
+                        as f64
+                        / calls as f64,
+                );
+            }
         }
     }
 

@@ -5,7 +5,7 @@
 //!     cargo bench --bench serving_bench
 //!     scripts/check.sh --bench
 //!
-//! Three scenarios run back to back:
+//! Four scenarios run back to back:
 //!
 //! * **single** — the classic homogeneous fleet (`--workers` ddlm
 //!   shards of `--batch`); its numbers stay at the top level of
@@ -21,17 +21,30 @@
 //!   reported under `"mixed"` with per-family rows (completions, p50 /
 //!   p95 latency, steps) computed from measured-run samples.
 //!
+//! * **session_step** — a microbench directly on one batched `Session`
+//!   (no TCP): the device-resident state path vs the host-roundtrip
+//!   reference path, reporting steps/s and `host_bytes_per_step` from
+//!   the runtime's `ExecStats` byte counters.  The resident figure also
+//!   rides at the top level as `host_bytes_per_step`, giving the
+//!   per-step host-boundary traffic its own PR-over-PR trendline (the
+//!   acceptance bar: no `[B,L,V]` / `[B,row]` tensor per steady-state
+//!   step — stats `[B]`, times `[B,2]`, lazy tokens and `needs_z`
+//!   noise only).
+//!
 //! Knobs: --n 32 --steps 120 --workers 2 --batch 8 --criterion SPEC
-//! --progress-every 25 (default policy: the paper's adaptive KL +
-//! entropy-fallback).  Skips cleanly when artifacts are not built.
+//! --progress-every 25 --session-steps 40 (default policy: the paper's
+//! adaptive KL + entropy-fallback).  Skips cleanly when artifacts are
+//! not built.
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
 use repro::corpus::dataset::Dataset;
 use repro::halting::{parse_policy, BoxedPolicy};
-use repro::runtime::Manifest;
-use repro::sampler::{Family, FamilyId};
+use repro::models::store::ParamStore;
+use repro::runtime::{Manifest, Runtime};
+use repro::sampler::{Family, FamilyId, Session, SlotRequest};
 use repro::util::cli::Args;
 use repro::util::json::Json;
 
@@ -192,6 +205,68 @@ fn run_scenario(
     })
 }
 
+struct SessionBench {
+    /// slot-steps per second (device calls x batch / wall)
+    steps_per_s: f64,
+    /// host↔device boundary bytes per device call, steady state
+    host_bytes_per_step: f64,
+}
+
+/// Drive one batched ddlm `Session` directly (no serving stack) for
+/// `iters` steady-state steps and measure throughput + per-step host
+/// boundary traffic from the runtime byte counters.  The warmup covers
+/// compilation and the resident path's one-off state-entry upload, so
+/// the measured window is the steady state the acceptance bar speaks
+/// about.
+fn bench_session(
+    dir: &str,
+    resident: bool,
+    iters: usize,
+) -> anyhow::Result<SessionBench> {
+    let rt = Runtime::new(dir)?;
+    let m = rt.manifest.model.clone();
+    let batch = rt.manifest.resolve_step_batch("ddlm", m.seq_len, 8)?;
+    let store = Rc::new(ParamStore::load_init(dir, "ddlm")?);
+    let mut s = Session::new(&rt, Family::Ddlm, store, batch, m.seq_len)?;
+    let got = s.set_resident(resident)?;
+    anyhow::ensure!(
+        got == resident,
+        "artifacts at {dir} do not support the resident path — \
+         rebuild with `make artifacts` (format 2)"
+    );
+    // the caller probed capability, so `got == resident` always holds
+    for slot in 0..batch {
+        s.reset_slot(
+            slot,
+            &SlotRequest::new(slot as u64, 1_000_000, m.t_max, m.t_min),
+        )?;
+    }
+    for _ in 0..3 {
+        s.step()?;
+    }
+    // the first step may downgrade losslessly on a runtime that hands
+    // back un-decomposed tuple buffers — labelling reference-path
+    // numbers "resident" would blind the trendline, so refuse instead
+    anyhow::ensure!(
+        s.resident() == resident,
+        "session downgraded during warmup (runtime lacks decomposed \
+         output buffers) — session_step numbers would be mislabelled"
+    );
+    let before = s.exec_stats();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        s.step()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let after = s.exec_stats();
+    let bytes = (after.upload_bytes - before.upload_bytes)
+        + (after.download_bytes - before.download_bytes);
+    Ok(SessionBench {
+        steps_per_s: iters as f64 * batch as f64 / wall,
+        host_bytes_per_step: bytes as f64 / iters as f64,
+    })
+}
+
 /// Per-family rows (completions, latency quantiles, steps) computed
 /// from the measured-run samples — warmup traffic is excluded, so the
 /// rows are directly comparable to the top-level numbers.
@@ -336,6 +411,50 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // scenario 4: session_step microbench — device-resident state vs
+    // the host-roundtrip reference, on one ddlm session.  Skipped (not
+    // failed) on pre-format-2 artifacts, which lack the resident path.
+    let session_iters = args.usize_or("session-steps", 40);
+    let session_capable = Manifest::load(&dir).is_ok_and(|man| {
+        man.resolve_step_batch("ddlm", man.model.seq_len, 8)
+            .ok()
+            .and_then(|b| {
+                man.step_artifact("ddlm", b, man.model.seq_len).ok().map(
+                    repro::sampler::resident_capable,
+                )
+            })
+            .unwrap_or(false)
+    });
+    let session_bench = if session_capable {
+        println!(
+            "serving_bench[session_step]: {session_iters} steady-state \
+             steps, resident vs reference"
+        );
+        let sess_res = bench_session(&dir, true, session_iters)?;
+        let sess_ref = bench_session(&dir, false, session_iters)?;
+        let bytes_reduction = if sess_res.host_bytes_per_step > 0.0 {
+            sess_ref.host_bytes_per_step / sess_res.host_bytes_per_step
+        } else {
+            0.0
+        };
+        println!(
+            "serving_bench[session_step]: resident {:.0} steps/s @ {:.0} \
+             B/step | reference {:.0} steps/s @ {:.0} B/step \
+             ({bytes_reduction:.0}x less host traffic)",
+            sess_res.steps_per_s,
+            sess_res.host_bytes_per_step,
+            sess_ref.steps_per_s,
+            sess_ref.host_bytes_per_step,
+        );
+        Some((sess_res, sess_ref, bytes_reduction))
+    } else {
+        println!(
+            "serving_bench[session_step]: artifacts lack the format-2 \
+             prefix-clamp inputs — skipping (rebuild with `make artifacts`)"
+        );
+        None
+    };
+
     // top-level fields mirror the pre-multi-family layout so the
     // BENCH_serving.json trendline stays comparable PR-over-PR
     let mut fields = vec![
@@ -374,6 +493,42 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
     ];
+    if let Some((sess_res, sess_ref, bytes_reduction)) = &session_bench {
+        // steady-state host boundary traffic of the (default) resident
+        // session path rides at the top level — the acceptance bar for
+        // the device-resident state design: O(B) per step, not O(B·L·V)
+        fields.push((
+            "host_bytes_per_step",
+            Json::num(sess_res.host_bytes_per_step),
+        ));
+        fields.push((
+            "session_step",
+            Json::obj(vec![
+                ("iters", Json::num(session_iters as f64)),
+                (
+                    "resident",
+                    Json::obj(vec![
+                        ("steps_per_s", Json::num(sess_res.steps_per_s)),
+                        (
+                            "host_bytes_per_step",
+                            Json::num(sess_res.host_bytes_per_step),
+                        ),
+                    ]),
+                ),
+                (
+                    "reference",
+                    Json::obj(vec![
+                        ("steps_per_s", Json::num(sess_ref.steps_per_s)),
+                        (
+                            "host_bytes_per_step",
+                            Json::num(sess_ref.host_bytes_per_step),
+                        ),
+                    ]),
+                ),
+                ("bytes_reduction_x", Json::num(*bytes_reduction)),
+            ]),
+        ));
+    }
     if let Some(m) = &mixed {
         fields.push((
             "mixed",

@@ -19,7 +19,7 @@
 //!
 //! | frame | shape |
 //! |---|---|
-//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..}` |
+//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..[,"tokens":[..]]}` — `tokens` is the current decode (prefix positions forced), attached by workers |
 //! | done     | `{"v":1,"type":"done", ...GenResponse fields...}` |
 //! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT]}` |
 //! | cancel   | ack: `{"v":1,"type":"cancel","id":N,"cancelled":BOOL,"state":"queued"\|"running"\|"not_found"}` |
@@ -183,7 +183,7 @@ impl Event {
     pub fn to_json(&self) -> Json {
         let (ty, mut m) = match self {
             Event::Progress(p) => {
-                let Json::Obj(m) = Json::obj(vec![
+                let mut fields = vec![
                     ("id", Json::uint(p.id)),
                     ("step", Json::uint(p.step as u64)),
                     ("steps_budget", Json::uint(p.steps_budget as u64)),
@@ -192,7 +192,18 @@ impl Event {
                     ("switches", Json::num(p.stats.switches as f64)),
                     ("norm_x", Json::num(p.stats.norm_x as f64)),
                     ("norm_x0", Json::num(p.stats.norm_x0 as f64)),
-                ]) else {
+                ];
+                if let Some(toks) = &p.tokens {
+                    fields.push((
+                        "tokens",
+                        Json::Arr(
+                            toks.iter()
+                                .map(|&t| Json::int(t as i64))
+                                .collect(),
+                        ),
+                    ));
+                }
+                let Json::Obj(m) = Json::obj(fields) else {
                     unreachable!()
                 };
                 ("progress", m)
@@ -272,24 +283,54 @@ impl Event {
             j.get(k).and_then(Json::as_f64).unwrap_or(0.0) as f32
         };
         Ok(match ty {
-            "progress" => Event::Progress(ProgressEvent {
-                id: need_id()?,
-                step: j
-                    .get("step")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("progress event missing step"))?,
-                steps_budget: j
-                    .get("steps_budget")
-                    .and_then(Json::as_usize)
-                    .unwrap_or(0),
-                stats: StepStats {
-                    entropy: stat("entropy"),
-                    kl: stat("kl"),
-                    switches: stat("switches"),
-                    norm_x: stat("norm_x"),
-                    norm_x0: stat("norm_x0"),
-                },
-            }),
+            "progress" => {
+                // mid-generation decode is optional (older servers
+                // don't attach one); a present-but-malformed entry is
+                // a hard error, mirroring the done frame's strictness
+                let tokens = match j.get("tokens") {
+                    None => None,
+                    Some(arr) => {
+                        let arr = arr.as_arr().ok_or_else(|| {
+                            anyhow!("progress tokens must be an array")
+                        })?;
+                        let mut out = Vec::with_capacity(arr.len());
+                        for (i, x) in arr.iter().enumerate() {
+                            out.push(
+                                x.as_i64()
+                                    .and_then(|t| i32::try_from(t).ok())
+                                    .ok_or_else(|| {
+                                        anyhow!(
+                                            "progress tokens[{i}] is not \
+                                             an integer token"
+                                        )
+                                    })?,
+                            );
+                        }
+                        Some(out)
+                    }
+                };
+                Event::Progress(ProgressEvent {
+                    id: need_id()?,
+                    step: j
+                        .get("step")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| {
+                            anyhow!("progress event missing step")
+                        })?,
+                    steps_budget: j
+                        .get("steps_budget")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    stats: StepStats {
+                        entropy: stat("entropy"),
+                        kl: stat("kl"),
+                        switches: stat("switches"),
+                        norm_x: stat("norm_x"),
+                        norm_x0: stat("norm_x0"),
+                    },
+                    tokens,
+                })
+            }
             "done" => Event::Done(GenResponse::from_json(j)?),
             "error" => Event::Error {
                 id: j.get("id").and_then(Json::as_u64),
@@ -413,6 +454,15 @@ mod tests {
                     norm_x: 8.0,
                     norm_x0: 7.5,
                 },
+                tokens: Some(vec![3, 0, -1]),
+            }),
+            // older servers attach no decode: the field is optional
+            Event::Progress(ProgressEvent {
+                id: 2,
+                step: 10,
+                steps_budget: 100,
+                stats: StepStats::default(),
+                tokens: None,
             }),
             Event::Error {
                 id: Some(4),
@@ -450,6 +500,7 @@ mod tests {
                     assert_eq!(a.steps_budget, b.steps_budget);
                     assert!((a.stats.entropy - b.stats.entropy).abs() < 1e-6);
                     assert!((a.stats.kl - b.stats.kl).abs() < 1e-9);
+                    assert_eq!(a.tokens, b.tokens);
                 }
                 (
                     Event::Error { id: a, code: ca, message: ma },

@@ -232,13 +232,18 @@ impl GenRequest {
 /// `progress_every` executed steps, streamed to v1 envelope clients so
 /// they can act on completeness (e.g. issue a `halt`) while denoising
 /// runs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ProgressEvent {
     pub id: u64,
     /// steps executed so far (the event fires after this step)
     pub step: usize,
     pub steps_budget: usize,
     pub stats: StepStats,
+    /// current decode at this step (prefix positions forced), when the
+    /// server attached one — workers do, at the cost of one lazy
+    /// `[B, L]` token download shared by every subscribed slot that
+    /// step; `None` on frames from servers that don't
+    pub tokens: Option<Vec<i32>>,
 }
 
 #[derive(Clone, Debug)]

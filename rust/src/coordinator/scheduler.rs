@@ -625,6 +625,37 @@ impl Scheduler {
     /// state mutex.  Cancel outranks halt.
     pub fn flagged(&self, id: u64) -> Option<Flagged> {
         let st = self.state.lock().unwrap();
+        Self::flagged_in(&st, id)
+    }
+
+    /// Worker-side: the whole sweep's flag checks under ONE lock
+    /// acquisition — the per-id [`Self::flagged`] costs one scheduler
+    /// lock per occupied slot per loop iteration, which at batch 8 is
+    /// 8x the necessary traffic on the state mutex.  Returns the
+    /// verdicts in `ids` order; cancel outranks halt.
+    pub fn flagged_sweep(&self, ids: &[u64]) -> Vec<Option<Flagged>> {
+        let mut out = Vec::new();
+        self.flagged_sweep_into(ids, &mut out);
+        out
+    }
+
+    /// [`Self::flagged_sweep`] into caller-owned scratch (cleared
+    /// first) — the worker's steady loop reuses one buffer so the
+    /// sweep allocates nothing per iteration.
+    pub fn flagged_sweep_into(
+        &self,
+        ids: &[u64],
+        out: &mut Vec<Option<Flagged>>,
+    ) {
+        out.clear();
+        if ids.is_empty() {
+            return;
+        }
+        let st = self.state.lock().unwrap();
+        out.extend(ids.iter().map(|&id| Self::flagged_in(&st, id)));
+    }
+
+    fn flagged_in(st: &State, id: u64) -> Option<Flagged> {
         if st.cancel_flags.contains(&id) {
             Some(Flagged::Cancel)
         } else if st.halt_flags.contains(&id) {
@@ -1205,6 +1236,41 @@ mod tests {
     }
 
     #[test]
+    fn flagged_sweep_matches_per_id_checks_under_one_lock() {
+        let s = sched(8, 1);
+        for id in [41u64, 42, 43] {
+            let (tx, _rx) = chan();
+            s.submit(req(id, 10), tx).unwrap();
+            assert_eq!(s.next_for(0).unwrap().req.id, id);
+        }
+        assert_eq!(s.cancel(41), CancelOutcome::Running);
+        assert_eq!(s.halt(42), CancelOutcome::Running);
+        // cancel outranks halt in the combined verdict
+        assert_eq!(s.halt(41), CancelOutcome::Running);
+        let verdicts = s.flagged_sweep(&[41, 42, 43, 99]);
+        assert_eq!(
+            verdicts,
+            vec![
+                Some(Flagged::Cancel),
+                Some(Flagged::Halt),
+                None,
+                None // unknown ids are simply unflagged
+            ]
+        );
+        // order follows the input ids, and agrees with flagged()
+        for (&id, v) in [41u64, 42, 43, 99].iter().zip(&verdicts) {
+            assert_eq!(s.flagged(id), *v);
+        }
+        assert!(s.flagged_sweep(&[]).is_empty());
+        // the into-variant clears and refills caller scratch
+        let mut scratch = vec![Some(Flagged::Halt); 7];
+        s.flagged_sweep_into(&[43, 41], &mut scratch);
+        assert_eq!(scratch, vec![None, Some(Flagged::Cancel)]);
+        s.flagged_sweep_into(&[], &mut scratch);
+        assert!(scratch.is_empty());
+    }
+
+    #[test]
     fn progress_subscriber_travels_with_the_queued_request() {
         let s = sched(8, 1);
         let (tx, _rx) = chan();
@@ -1220,6 +1286,7 @@ mod tests {
             step: 10,
             steps_budget: 100,
             stats: Default::default(),
+            tokens: None,
         })
         .unwrap();
         let ev = prx.recv().unwrap();

@@ -111,12 +111,14 @@ fn run_worker(
     let mut session =
         Session::new(&rt, cfg.family, Rc::new(store), batch, m.seq_len)?;
     log_info!(
-        "worker {} up: family={} batch={} (requested {}) seq_len={}",
+        "worker {} up: family={} batch={} (requested {}) seq_len={} \
+         resident={}",
         cfg.id,
         cfg.family.name(),
         batch,
         cfg.batch,
-        m.seq_len
+        m.seq_len,
+        session.resident()
     );
     metrics.lock().unwrap().slots_total = batch as u64;
 
@@ -162,6 +164,12 @@ fn step_loop(
     running: &mut [Option<Running>],
 ) -> Result<()> {
     let batch = session.batch;
+    // reusable sweep scratch (occupied slots, their request ids, and
+    // the scheduler's verdicts) — the hot loop allocates nothing per
+    // iteration for the flag sweep
+    let mut flag_slots: Vec<usize> = Vec::with_capacity(batch);
+    let mut flag_ids: Vec<u64> = Vec::with_capacity(batch);
+    let mut flags: Vec<Option<Flagged>> = Vec::with_capacity(batch);
     loop {
         // 0) fully idle: sleep until work our family can serve arrives
         //    or shutdown drains us
@@ -236,11 +244,20 @@ fn step_loop(
             Abort(ServeError),
             Finalize,
         }
-        for slot in 0..batch {
+        // ONE scheduler lock answers the cancel/halt flags for the
+        // whole sweep (the per-slot check cost one lock per occupied
+        // slot per iteration); precedence: cancel > deadline > halt
+        flag_slots.clear();
+        flag_ids.clear();
+        for (slot, r) in running.iter().enumerate() {
+            if let Some(r) = r {
+                flag_slots.push(slot);
+                flag_ids.push(r.q.req.id);
+            }
+        }
+        sched.flagged_sweep_into(&flag_ids, &mut flags);
+        for (&slot, &flagged) in flag_slots.iter().zip(&flags) {
             let Some(r) = running[slot].as_ref() else { continue };
-            // one lock acquisition covers both abort flags (hot loop);
-            // precedence: cancel > deadline > graceful halt
-            let flagged = sched.flagged(r.q.req.id);
             let action = if flagged == Some(Flagged::Cancel) {
                 Some(Sweep::Abort(ServeError::Cancelled))
             } else if r.q.deadline.is_some_and(|d| now >= d) {
@@ -304,9 +321,12 @@ fn step_loop(
             }
         }
 
-        // 3) one batched device step; emit responses the moment a slot's
-        //    policy fires or its schedule exhausts
-        if running.iter().any(Option::is_some) {
+        // 3) one batched device step; responses are *collected* first —
+        //    bookkeeping commits under the single metrics guard below,
+        //    then the replies go out on the wire
+        let stepped = running.iter().any(Option::is_some);
+        let mut done: Vec<(GenResponse, Running)> = Vec::new();
+        if stepped {
             let stats = match session.step() {
                 Ok(stats) => stats,
                 Err(e) => {
@@ -321,7 +341,6 @@ fn step_loop(
                     return Err(e);
                 }
             };
-            metrics.lock().unwrap().device_calls += 1;
             for slot in 0..batch {
                 let Some(st) = stats[slot] else { continue };
                 let Some(r) = running[slot].as_mut() else { continue };
@@ -329,19 +348,25 @@ fn step_loop(
                 let decision = r.policy.observe(executed - 1, &st);
                 let exhausted = session.slot_exhausted(slot);
                 // throttled progress fan-out: subscribed requests get
-                // the paper's completeness estimates every
-                // `progress_every` executed steps (terminal steps are
-                // reported by the done frame instead).  A dead
-                // subscriber is dropped on the first failed send so
-                // the hot loop never retries into a closed channel.
+                // the paper's completeness estimates — and the current
+                // decode (one lazy [B,L] token download shared by every
+                // subscribed slot this step) — every `progress_every`
+                // executed steps (terminal steps are reported by the
+                // done frame instead).  A dead subscriber is dropped on
+                // the first failed send so the hot loop never retries
+                // into a closed channel.
                 if !(decision.halted() || exhausted) {
                     let every = r.q.req.progress_every.unwrap_or(0);
-                    if every > 0 && executed % every == 0 {
+                    if every > 0
+                        && executed % every == 0
+                        && r.q.progress.is_some()
+                    {
                         let ev = ProgressEvent {
                             id: r.q.req.id,
                             step: executed,
                             steps_budget: r.q.req.n_steps,
                             stats: st,
+                            tokens: Some(session.slot_output(slot)),
                         };
                         let dead = r
                             .q
@@ -358,6 +383,8 @@ fn step_loop(
                     let halted_early = decision.halted() && !exhausted;
                     let resp = GenResponse {
                         id: r.q.req.id,
+                        // lazy token fetch: on the resident session
+                        // path this is the step's one [B,L] download
                         tokens: session.slot_output(slot),
                         steps_executed: executed,
                         steps_budget: r.q.req.n_steps,
@@ -374,20 +401,23 @@ fn step_loop(
                         final_stats: st,
                     };
                     sched.finish(resp.id);
-                    metrics.lock().unwrap().record_completion(
-                        &resp,
-                        r.q.req.priority,
-                        cfg.family,
-                    );
-                    let _ = r.q.reply.send(Ok(resp));
                     session.release_slot(slot);
+                    done.push((resp, r));
                 }
             }
         }
 
-        // 4) refresh the occupancy/progress gauges
+        // 4) ONE metrics guard per loop iteration (the steady-state hot
+        //    path used to take 2-4): device-call counter, completion
+        //    bookkeeping, occupancy/progress gauges
         {
             let mut wm = metrics.lock().unwrap();
+            if stepped {
+                wm.device_calls += 1;
+            }
+            for (resp, r) in &done {
+                wm.record_completion(resp, r.q.req.priority, cfg.family);
+            }
             wm.slots_busy =
                 running.iter().filter(|r| r.is_some()).count() as u64;
             wm.steps_in_flight = running
@@ -396,6 +426,13 @@ fn step_loop(
                 .filter(|(_, r)| r.is_some())
                 .map(|(slot, _)| session.slots[slot].step as u64)
                 .sum();
+        }
+        // replies go out after the metrics commit (a client that reads
+        // /metrics right after its done frame sees itself counted);
+        // dropping `r` here ends its progress stream only after the
+        // terminal response is on its way
+        for (resp, r) in done {
+            let _ = r.q.reply.send(Ok(resp));
         }
     }
     Ok(())

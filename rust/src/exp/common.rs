@@ -124,7 +124,8 @@ pub fn record_run(
         Session::new(&ctx.rt, opts.family, store, batch, seq_len)?;
     // x / x0_hat trajectories cost ~L*D floats per slot per step to
     // download — only pay for them when the caller wants vectors
-    session.set_record_x0(opts.record_vectors);
+    // (recording pins the session to the host-roundtrip path)
+    session.set_record_x0(opts.record_vectors)?;
 
     // deterministic validation prompts (prefix task uses their heads)
     let ds = crate::corpus::dataset::Dataset::new(m.vocab, seq_len);

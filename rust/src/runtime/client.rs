@@ -10,6 +10,21 @@
 //! coordinator therefore runs a single engine thread that owns the
 //! `Runtime`, and server threads talk to it over channels (see
 //! `coordinator::engine`).
+//!
+//! §Perf — two execution paths share one `execute_b` core:
+//!
+//! * [`Executable::run_buffers`] is the **host-roundtrip reference
+//!   path**: every output materialises to a host literal (the whole
+//!   tuple, ~2·B·L·V floats per step at our step-artifact shapes).
+//! * [`Executable::run_buffers_device`] is the **device-resident
+//!   path**: outputs stay on the device as owned `PjRtBuffer`s, the
+//!   session feeds them straight back as the next step's inputs, and
+//!   only the tensors the caller asks for cross the boundary through
+//!   [`Executable::download_output`] (per step: the `[B]` stat rows).
+//!
+//! [`ExecStats`] counts bytes at every boundary crossing so
+//! `BENCH_serving.json`'s `host_bytes_per_step` can trend the
+//! difference (see ROADMAP §Perf: device-resident diffusion state).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -23,12 +38,59 @@ use super::tensor::Tensor;
 use crate::log_info;
 
 /// Cumulative execution counters (perf accounting, EXPERIMENTS.md §Perf).
+///
+/// The byte counters measure actual host↔device boundary traffic:
+/// `upload_bytes` grows at every `buffer_from_host_literal` transfer,
+/// `download_bytes` at every literal materialisation of device output —
+/// so `(upload_bytes + download_bytes) / executions` is the
+/// host-bytes-per-step figure `serving_bench` trends in
+/// `BENCH_serving.json`.  The device-resident session path exists to
+/// drive this number from O(B·L·V) down to O(B) per step.
 #[derive(Default, Debug, Clone, Copy)]
 pub struct ExecStats {
     pub executions: u64,
     pub exec_seconds: f64,
     pub upload_seconds: f64,
     pub download_seconds: f64,
+    /// bytes crossing host→device (literal → device buffer transfers)
+    pub upload_bytes: u64,
+    /// bytes crossing device→host (device output → literal conversions)
+    pub download_bytes: u64,
+}
+
+/// Typed failure of [`Executable::run_buffers_device`]: this PJRT
+/// runtime answered the execution with one opaque *tuple* buffer
+/// instead of decomposed per-output leaf buffers, so outputs cannot be
+/// kept device-resident individually.  `Session` downcasts to this to
+/// downgrade gracefully to the host-roundtrip reference path (the
+/// downgrade happens before any state is committed, so it is lossless).
+#[derive(Clone, Copy, Debug)]
+pub struct TupleNotDecomposed {
+    /// buffers the runtime returned
+    pub got: usize,
+    /// leaf outputs the artifact declares
+    pub want: usize,
+}
+
+impl std::fmt::Display for TupleNotDecomposed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "runtime returned {} output buffer(s) for {} declared outputs \
+             (tuple not decomposed) — device-resident outputs unavailable",
+            self.got, self.want
+        )
+    }
+}
+
+impl std::error::Error for TupleNotDecomposed {}
+
+/// Host bytes of an array literal (f32/i32 are the only dtypes in this
+/// stack, both 4 bytes; scalars count as one element).
+fn literal_bytes(lit: &xla::Literal) -> u64 {
+    lit.array_shape()
+        .map(|s| s.dims().iter().map(|&d| d as u64).product::<u64>() * 4)
+        .unwrap_or(0)
 }
 
 /// A device buffer plus the host literal backing its (asynchronous)
@@ -72,7 +134,9 @@ impl Executable {
             .client
             .buffer_from_host_literal(None, &lit)
             .context("buffer_from_host_literal")?;
-        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        let mut s = self.stats.borrow_mut();
+        s.upload_seconds += t0.elapsed().as_secs_f64();
+        s.upload_bytes += (t.len() * 4) as u64;
         Ok(DeviceTensor { _lit: lit, buf })
     }
 
@@ -91,7 +155,9 @@ impl Executable {
             .client
             .buffer_from_host_literal(None, &lit)
             .context("buffer_from_host_literal")?;
-        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        let mut s = self.stats.borrow_mut();
+        s.upload_seconds += t0.elapsed().as_secs_f64();
+        s.upload_bytes += (data.len() * 4) as u64;
         Ok(DeviceTensor { _lit: lit, buf })
     }
 
@@ -107,16 +173,83 @@ impl Executable {
             .client
             .buffer_from_host_literal(None, &lit)
             .context("buffer_from_host_literal")?;
-        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        let mut s = self.stats.borrow_mut();
+        s.upload_seconds += t0.elapsed().as_secs_f64();
+        s.upload_bytes += (data.len() * 4) as u64;
         Ok(DeviceTensor { _lit: lit, buf })
     }
 
-    /// Execute with caller-owned device buffers (the hot path: persistent
-    /// parameter buffers are uploaded once per session and reused).
+    /// Execute with caller-owned device buffers, materialising every
+    /// output to a host literal — the reference (host-roundtrip) path.
+    /// Persistent parameter buffers are uploaded once per session and
+    /// reused; see [`Self::run_buffers_device`] for the path that keeps
+    /// the outputs on the device.
     pub fn run_buffers(
         &self,
         bufs: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
+        let row = self.execute_row(bufs)?;
+        let t0 = Instant::now();
+        // two PJRT output layouts exist in the wild: one opaque tuple
+        // buffer (decomposed on the host after materialisation), or
+        // already-decomposed per-output leaf buffers.  A single buffer
+        // for a single declared output is ambiguous — aot.py lowers
+        // with return_tuple=True, so probe the materialised literal
+        // (array shape = leaf, else a 1-tuple to decompose).
+        let lits: Vec<xla::Literal> = if row.len() == 1 {
+            let lit =
+                row[0].to_literal_sync().context("to_literal_sync")?;
+            if self.spec.outputs.len() == 1 && lit.array_shape().is_ok() {
+                vec![lit]
+            } else {
+                lit.to_tuple().context("tuple decompose")?
+            }
+        } else {
+            let mut lits = Vec::with_capacity(row.len());
+            for b in &row {
+                lits.push(b.to_literal_sync().context("to_literal_sync")?);
+            }
+            lits
+        };
+        let mut s = self.stats.borrow_mut();
+        s.download_seconds += t0.elapsed().as_secs_f64();
+        s.download_bytes += lits.iter().map(literal_bytes).sum::<u64>();
+        Ok(lits)
+    }
+
+    /// Execute with caller-owned device buffers and return **owned
+    /// output buffers** — nothing is materialised to the host.  The
+    /// device-resident serving path feeds these straight back as the
+    /// next step's inputs and downloads only the scalar stat rows it
+    /// actually reads ([`Self::download_output`]).
+    ///
+    /// Requires the runtime to hand back decomposed leaf buffers; a
+    /// runtime that answers with one opaque tuple buffer fails with a
+    /// downcastable [`TupleNotDecomposed`] *before any output crosses
+    /// the boundary*, so the caller can fall back to
+    /// [`Self::run_buffers`] losslessly.  (Single-output artifacts are
+    /// ambiguous under this check and are not driven through the
+    /// device path — only multi-output step artifacts are.)
+    pub fn run_buffers_device(
+        &self,
+        bufs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let row = self.execute_row(bufs)?;
+        if row.len() != self.spec.outputs.len() {
+            return Err(anyhow::Error::new(TupleNotDecomposed {
+                got: row.len(),
+                want: self.spec.outputs.len(),
+            }));
+        }
+        Ok(row)
+    }
+
+    /// Shared execute half of [`Self::run_buffers`] /
+    /// [`Self::run_buffers_device`]: arity check, `execute_b`, stats.
+    fn execute_row(
+        &self,
+        bufs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         if bufs.len() != self.spec.inputs.len() {
             bail!(
                 "artifact {}: expected {} inputs, got {}",
@@ -130,15 +263,29 @@ impl Executable {
             .exe
             .execute_b(bufs)
             .with_context(|| format!("execute_b {}", self.spec.name))?;
-        let result = out[0][0]
-            .to_literal_sync()
-            .context("to_literal_sync")?;
+        let row = out
+            .into_iter()
+            .next()
+            .with_context(|| format!("{}: no output row", self.spec.name))?;
         {
             let mut s = self.stats.borrow_mut();
             s.executions += 1;
             s.exec_seconds += t0.elapsed().as_secs_f64();
         }
-        result.to_tuple().context("tuple decompose")
+        Ok(row)
+    }
+
+    /// Materialise ONE device output buffer to a host tensor — the
+    /// device-resident path's download primitive (per-step it converts
+    /// only the `[B]` stat rows, plus `[B, L]` tokens on demand).
+    pub fn download_output(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let lit = buf.to_literal_sync().context("to_literal_sync")?;
+        let t = Tensor::from_literal(&lit)?;
+        let mut s = self.stats.borrow_mut();
+        s.download_seconds += t0.elapsed().as_secs_f64();
+        s.download_bytes += (t.len() * 4) as u64;
+        Ok(t)
     }
 
     /// Validate + convert host tensors to literals (upload half).
@@ -192,7 +339,11 @@ impl Executable {
                     .context("buffer_from_host_literal")
             })
             .collect::<Result<_>>()?;
-        self.stats.borrow_mut().upload_seconds += t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.upload_seconds += t0.elapsed().as_secs_f64();
+            s.upload_bytes += lits.iter().map(literal_bytes).sum::<u64>();
+        }
         let refs: Vec<&xla::PjRtBuffer> = owned.iter().collect();
         // aot.py lowers with return_tuple=True: always a tuple
         self.run_buffers(&refs)
@@ -218,8 +369,10 @@ impl Executable {
         Ok(out)
     }
 
-    /// Download only the selected output indices (skips host conversion of
-    /// bulky tensors the caller doesn't need — perf pass, DESIGN.md §10).
+    /// Convert only the selected output indices to host tensors (skips
+    /// `Tensor` conversion of bulky literals the caller doesn't need;
+    /// the literals themselves were already materialised by
+    /// [`Self::run_buffers`], which is where their bytes are counted).
     pub fn download_selected(
         &self,
         lits: &[xla::Literal],
@@ -299,6 +452,8 @@ impl Runtime {
             agg.exec_seconds += s.exec_seconds;
             agg.upload_seconds += s.upload_seconds;
             agg.download_seconds += s.download_seconds;
+            agg.upload_bytes += s.upload_bytes;
+            agg.download_bytes += s.download_bytes;
         }
         agg
     }

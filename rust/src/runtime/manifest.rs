@@ -35,6 +35,14 @@ pub struct ArtifactSpec {
 }
 
 impl ArtifactSpec {
+    /// Whether the artifact takes a named input — capability probing
+    /// (e.g. format-2 step artifacts carry `prefix_mask`/`prefix_x` for
+    /// on-device prefix clamping; format-1 ones don't, and sessions on
+    /// them fall back to the host-roundtrip path).
+    pub fn has_input(&self, name: &str) -> bool {
+        self.inputs.iter().any(|i| i.name == name)
+    }
+
     /// Index of a named input in the artifact's flat input list.
     pub fn input_index(&self, name: &str) -> Result<usize> {
         self.inputs
@@ -69,6 +77,13 @@ pub struct ModelDims {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// manifest schema version (`"format"`; absent = 1).  Format 2 step
+    /// artifacts carry the on-device prefix-clamp inputs that enable
+    /// the session's device-resident state path; capability is probed
+    /// per artifact via [`ArtifactSpec::has_input`], so a format-1
+    /// manifest (or a hand-pruned artifact) transparently serves
+    /// through the host-roundtrip reference path instead.
+    pub format: u64,
     pub model: ModelDims,
     pub param_names: BTreeMap<String, Vec<String>>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
@@ -82,6 +97,7 @@ impl Manifest {
             .with_context(|| format!("read {path:?} — run `make artifacts`"))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
 
+        let format = j.get("format").and_then(Json::as_u64).unwrap_or(1);
         let m = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
         let dim = |k: &str| -> Result<usize> {
             m.get(k)
@@ -187,6 +203,7 @@ impl Manifest {
 
         Ok(Manifest {
             dir,
+            format,
             model,
             param_names,
             artifacts,
@@ -279,9 +296,14 @@ mod tests {
         assert_eq!(m.model.vocab, 512);
         assert!(m.artifacts.contains_key("ddlm_step_b8_l64"));
         let a = m.artifact("ddlm_step_b8_l64").unwrap();
-        // jax prunes unused params at lowering, so kept inputs <= full set
+        // jax prunes unused params at lowering, so kept inputs <= full
+        // set (4 legacy data inputs + 2 format-2 prefix-clamp inputs)
         let n_params = m.params_of("ddlm").unwrap().len();
-        assert!(a.inputs.len() > 4 && a.inputs.len() <= n_params + 4);
+        assert!(a.inputs.len() > 4 && a.inputs.len() <= n_params + 6);
+        // freshly-built artifacts are format 2: on-device prefix clamp
+        assert!(m.format >= 2, "format {}", m.format);
+        assert!(a.has_input("prefix_mask") && a.has_input("prefix_x"));
+        assert!(!a.has_input("bogus"));
         assert_eq!(a.output_index("entropy").unwrap(), 4);
         // x_t input: [8, 64, 64] f32
         let xi = a.input_index("x_t").unwrap();

@@ -126,6 +126,22 @@ pub trait FamilyKernel: Send + Sync {
     /// (their outputs are ignored).
     fn idle_times(&self) -> (f32, f32);
 
+    /// Whether the session may keep this kernel's generation state
+    /// **device-resident** (feed step outputs straight back as the next
+    /// step's inputs, host boundary reduced to the `[B]` stat rows —
+    /// see `Session` §Perf).  Residency also requires a format-2
+    /// artifact whose step inputs include the on-device prefix-clamp
+    /// pair (`prefix_mask`/`prefix_x`).
+    ///
+    /// Default `true`: [`Self::clamp_token`] is per-position pure, so
+    /// every built-in's host clamp is exactly representable on the
+    /// device.  An out-of-tree kernel that mutates host-side state
+    /// between steps in ways the step artifact cannot express opts out
+    /// here, and its sessions stay on the host-roundtrip path.
+    fn supports_device_residency(&self) -> bool {
+        true
+    }
+
     /// Device shape of the state tensor for a batch.
     fn x_shape(
         &self,
@@ -443,6 +459,11 @@ mod tests {
         for fam in [Family::Ssd, Family::Plaid] {
             assert_eq!(fam.kernel().time_input(), "tau2");
             assert!(fam.kernel().needs_z());
+        }
+        // every built-in clamp is per-position pure, so all built-ins
+        // serve on the device-resident path
+        for fam in Family::all() {
+            assert!(fam.kernel().supports_device_residency());
         }
     }
 

@@ -196,6 +196,9 @@ impl FamilyKernel for AliasKernel {
     fn idle_times(&self) -> (f32, f32) {
         self.base.idle_times()
     }
+    fn supports_device_residency(&self) -> bool {
+        self.base.supports_device_residency()
+    }
     fn clamp_token(
         &self,
         dst: &mut [f32],

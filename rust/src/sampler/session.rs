@@ -12,11 +12,37 @@
 //! step-output parsing — is delegated to the slot's
 //! [`FamilyKernel`](super::kernel::FamilyKernel).
 //!
-//! §Perf: `step()` uploads straight from the session's persistent host
-//! buffers (no per-step `Vec` clones — see `Executable::buffer_from_f32`)
-//! and downloads only the outputs the serving path reads; the bulky
-//! `x0_hat` tensor (L*D floats per slot) converts only when trajectory
-//! recording is switched on via [`Session::set_record_x0`] (Fig 2).
+//! §Perf — two step paths, one contract (see ROADMAP §Perf):
+//!
+//! * **Device-resident** (the default on format-2 artifacts whose step
+//!   inputs include `prefix_mask`/`prefix_x`): step N's `x_next` /
+//!   `probs` / `tokens` output buffers are fed straight back as step
+//!   N+1's `x_t` / `prev_probs` / `prev_tokens` inputs — the `[B,L,V]`
+//!   probability tensor and the `[B,row]` state never cross the host
+//!   boundary in steady state.  Per step the host uploads only the
+//!   `[B,2]` times (plus the noise scratch for `needs_z` kernels) and
+//!   downloads only the five `[B]` stat rows the halting policies read;
+//!   decoded tokens download lazily ([`Session::slot_output`]).  Prefix
+//!   clamping happens on the device through the `prefix_mask`/`prefix_x`
+//!   step inputs, which are re-uploaded only when a reset changes them.
+//! * **Host-roundtrip reference** (format-1 artifacts, runtimes whose
+//!   PJRT hands back un-decomposed tuple buffers, explicit
+//!   [`Session::set_resident`]`(false)`, and the Fig-2
+//!   [`Session::set_record_x0`] trajectory mode): every step's outputs
+//!   materialise into the session's host mirrors, exactly the pre-PR-5
+//!   behaviour — the equivalence baseline the resident path is tested
+//!   against (`tests/residency_equivalence.rs`).
+//!
+//! Host mutation points go through a per-slot **dirty protocol**:
+//! [`Session::reset_slot`] rewrites the slot's host-mirror rows and
+//! marks the slot dirty; the next resident step folds the device rows
+//! of the *other* (non-dirty) slots into the mirrors, re-uploads the
+//! merged state once, and goes resident again.  The full roundtrip is
+//! paid only on steps where a reset actually happened.
+//!
+//! Hot-loop allocation discipline: the per-step input table reuses
+//! persistent scratch (no `Vec` allocation per device call), and prefix
+//! clamping split-borrows the slot instead of cloning its prefix.
 
 use std::rc::Rc;
 
@@ -26,7 +52,10 @@ use super::kernel::{FamilyKernel, StepOutputs};
 use super::registry::FamilyId;
 use super::schedule::{Schedule, ScheduleError};
 use crate::halting::StepStats;
+use crate::log_warn;
 use crate::models::store::ParamStore;
+use crate::runtime::client::{DeviceTensor, TupleNotDecomposed};
+use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::{Executable, Runtime};
 use crate::util::prng::Prng;
 
@@ -124,7 +153,8 @@ pub struct Slot {
     rng: Prng,
     /// conditioning prefix tokens (Prefix-32 task), clamped every step
     prefix: Vec<i32>,
-    /// latest argmax tokens (decoded output)
+    /// latest argmax tokens (decoded output; refreshed lazily on the
+    /// resident path — see [`Session::slot_output`])
     pub tokens: Vec<i32>,
     /// latest step statistics
     pub last_stats: StepStats,
@@ -144,6 +174,52 @@ struct StepOutIdx {
     x0_hat: usize,
 }
 
+/// Which per-step data tensor an artifact input consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DataKind {
+    X,
+    PrevProbs,
+    PrevTokens,
+    Z,
+    Time,
+    PrefixMask,
+    PrefixX,
+}
+
+/// Where one artifact input comes from, resolved once at session build:
+/// a persistent parameter buffer or a per-step data tensor.
+enum Src {
+    Param(usize),
+    Data(DataKind),
+}
+
+/// Device-resident generation state: the previous step's output buffers,
+/// fed back as the next step's inputs without touching the host.
+struct DevState {
+    x: xla::PjRtBuffer,
+    probs: xla::PjRtBuffer,
+    tokens: xla::PjRtBuffer,
+}
+
+/// Per-step upload slots, reused every device call (old buffers drop on
+/// overwrite).  On the resident steady path only `time` (and `z` for
+/// stochastic kernels) are populated; the state slots fill only on
+/// dirty-sync steps and on the reference path.
+#[derive(Default)]
+struct StepUploads {
+    x: Option<DeviceTensor>,
+    prev_probs: Option<DeviceTensor>,
+    prev_tokens: Option<DeviceTensor>,
+    z: Option<DeviceTensor>,
+    time: Option<DeviceTensor>,
+}
+
+/// True when a step artifact carries the format-2 on-device
+/// prefix-clamp inputs the resident path requires.
+pub fn resident_capable(spec: &ArtifactSpec) -> bool {
+    spec.has_input("prefix_mask") && spec.has_input("prefix_x")
+}
+
 pub struct Session {
     /// registry handle of the serving kernel (built-in or registered)
     pub family: FamilyId,
@@ -158,7 +234,9 @@ pub struct Session {
     pub d_model: usize,
     /// state row width per slot (kernel-defined: L*D or L*V)
     row: usize,
-    /// diffusion state [B, row]
+    /// diffusion-state host mirror [B, row] (authoritative on the
+    /// reference path; on the resident path authoritative only while
+    /// `state_synced`)
     x: Vec<f32>,
     prev_probs: Vec<f32>,
     prev_tokens: Vec<i32>,
@@ -170,18 +248,50 @@ pub struct Session {
     t2_scratch: Vec<f32>,
     /// per-step noise upload scratch [B, row], reused every step
     z_scratch: Vec<f32>,
-    /// download x0_hat each step? (trajectory analysis only — serving
-    /// skips ~L*D floats per slot per step when off, the default)
+    /// download x0_hat each step? (trajectory analysis only; forces the
+    /// reference path — x0_hat only exists host-side)
     record_x0: bool,
     /// latest x0_hat download [B, L*D] (allocated when recording is on)
     last_x0_hat: Vec<f32>,
     out_idx: StepOutIdx,
-    /// persistent device buffers for the (immutable) parameters, uploaded
-    /// once — (input index, buffer); §Perf: params are ~70 % of the
-    /// per-step input bytes and never change during generation
-    param_bufs: Vec<(usize, crate::runtime::client::DeviceTensor)>,
-    /// input indices of the per-step data tensors, in spec order
-    data_idx: Vec<(String, usize)>,
+    /// persistent device buffers for the (immutable) parameters,
+    /// uploaded once; §Perf: params never change during generation
+    param_bufs: Vec<DeviceTensor>,
+    /// artifact-input source table in spec order, resolved at build
+    in_src: Vec<Src>,
+    /// artifact supports the resident path (format-2 prefix inputs
+    /// present AND the kernel opts in)
+    resident_capable: bool,
+    /// resident path currently enabled (capability-gated switch)
+    resident: bool,
+    /// previous step's output buffers, device-resident feedback state
+    dev_state: Option<DevState>,
+    /// host mirrors reflect the latest device state
+    state_synced: bool,
+    /// per-slot token caches reflect the latest device tokens
+    tokens_synced: bool,
+    /// slots whose mirror rows were rewritten on the host since the
+    /// last upload (reset protocol); folded in on the next step
+    dirty: Vec<bool>,
+    any_dirty: bool,
+    /// on-device prefix clamp rows: mask [B, L], clean state [B, row]
+    prefix_mask: Vec<f32>,
+    prefix_x: Vec<f32>,
+    /// uploaded clamp inputs + the mode they encode (true = real masks
+    /// for the resident path, false = all-zero pass-through for the
+    /// reference path, which clamps on the host)
+    prefix_bufs: Option<(DeviceTensor, DeviceTensor)>,
+    prefix_bufs_resident: bool,
+    prefix_dirty: bool,
+    /// per-step upload slots, reused every device call
+    step_up: StepUploads,
+    /// a device error swallowed on a best-effort path (lazy token
+    /// download in `slot_output`/`release_slot`); surfaced as a hard
+    /// error on the next `step()` so a broken device cannot keep
+    /// serving silently-stale decodes
+    deferred_err: Option<String>,
+    /// reference-path download selection, rebuilt on record_x0 toggles
+    want: Vec<usize>,
     /// steps executed (device calls)
     pub device_calls: u64,
 }
@@ -190,6 +300,11 @@ impl Session {
     /// Create a session bound to the kernel's compiled step artifact
     /// `<artifact_prefix>_step_b<batch>_l<seq_len>`.  Accepts a
     /// built-in [`super::Family`] or any registered [`FamilyId`].
+    ///
+    /// On format-2 artifacts (on-device prefix-clamp inputs present)
+    /// the session starts on the device-resident path; on older
+    /// artifacts it transparently serves through the host-roundtrip
+    /// reference path.
     pub fn new(
         rt: &Runtime,
         family: impl Into<FamilyId>,
@@ -219,14 +334,27 @@ impl Session {
                 *x *= target / n;
             }
         }
-        // upload immutable parameters to persistent device buffers once
+        // upload immutable parameters to persistent device buffers once,
+        // and resolve every other input to its per-step data source
+        let time_input = kernel.time_input();
         let mut param_bufs = Vec::new();
-        let mut data_idx = Vec::new();
-        for (i, input) in exe.spec.inputs.iter().enumerate() {
+        let mut in_src = Vec::with_capacity(exe.spec.inputs.len());
+        for input in &exe.spec.inputs {
             if let Some(t) = store.tensors.get(&input.name) {
-                param_bufs.push((i, exe.buffer_from_tensor(t)?));
+                param_bufs.push(exe.buffer_from_tensor(t)?);
+                in_src.push(Src::Param(param_bufs.len() - 1));
             } else {
-                data_idx.push((input.name.clone(), i));
+                let kind = match input.name.as_str() {
+                    "x_t" => DataKind::X,
+                    "prev_probs" => DataKind::PrevProbs,
+                    "prev_tokens" => DataKind::PrevTokens,
+                    "z" => DataKind::Z,
+                    "prefix_mask" => DataKind::PrefixMask,
+                    "prefix_x" => DataKind::PrefixX,
+                    n if n == time_input => DataKind::Time,
+                    other => bail!("unexpected step input {other}"),
+                };
+                in_src.push(Src::Data(kind));
             }
         }
         let out_idx = StepOutIdx {
@@ -241,6 +369,8 @@ impl Session {
             x0_hat: exe.spec.output_index("x0_hat")?,
         };
         let needs_z = kernel.needs_z();
+        let capable = resident_capable(&exe.spec)
+            && kernel.supports_device_residency();
         let default_schedule = Schedule::new(family, 1, m.t_max, m.t_min)
             .expect("one-step default schedule");
         let slots = (0..batch)
@@ -254,7 +384,7 @@ impl Session {
                 last_stats: StepStats::default(),
             })
             .collect();
-        Ok(Session {
+        let mut s = Session {
             family,
             kernel,
             exe,
@@ -271,14 +401,35 @@ impl Session {
             emb_n,
             simplex_k: m.simplex_k,
             t2_scratch: vec![0.0; batch * 2],
-            z_scratch: if needs_z { vec![0.0; batch * row] } else { Vec::new() },
+            z_scratch: if needs_z {
+                vec![0.0; batch * row]
+            } else {
+                Vec::new()
+            },
             record_x0: false,
             last_x0_hat: Vec::new(),
             out_idx,
             param_bufs,
-            data_idx,
+            in_src,
+            resident_capable: capable,
+            resident: capable,
+            dev_state: None,
+            state_synced: true,
+            tokens_synced: true,
+            dirty: vec![false; batch],
+            any_dirty: false,
+            prefix_mask: vec![0.0; batch * seq_len],
+            prefix_x: vec![0.0; batch * row],
+            prefix_bufs: None,
+            prefix_bufs_resident: false,
+            prefix_dirty: false,
+            step_up: StepUploads::default(),
+            deferred_err: None,
+            want: Vec::new(),
             device_calls: 0,
-        })
+        };
+        s.rebuild_want();
+        Ok(s)
     }
 
     /// Occupy a slot with a fresh request: initialise noise, schedule and
@@ -286,6 +437,11 @@ impl Session {
     /// (never a panic) on a zero-step budget or an overlong prefix — the
     /// serving path rejects both at admission with `invalid_request`;
     /// this is the backstop for direct library use.
+    ///
+    /// Resident path: the slot's host-mirror rows are rewritten here and
+    /// the slot is marked dirty; the next [`Session::step`] folds the
+    /// other slots' device rows in and re-uploads the merged state once
+    /// (download-merge-upload only when a reset actually happened).
     pub fn reset_slot(
         &mut self,
         slot: usize,
@@ -322,6 +478,32 @@ impl Session {
         for (i, &tok) in req.prefix.iter().enumerate() {
             self.prev_tokens[tb + i] = tok;
         }
+        // rebuild the slot's on-device clamp rows through the SAME
+        // helper the host clamp uses, so the two representations are
+        // bit-identical by construction.  A prefix-less request
+        // replacing a prefix-less occupant leaves the rows untouched —
+        // no prefix_dirty, so the (state-sized) clamp buffers are NOT
+        // re-uploaded on plain continuous-batching recycles
+        let had_prefix =
+            self.prefix_mask[tb..tb + l].iter().any(|&m| m != 0.0);
+        if had_prefix || !req.prefix.is_empty() {
+            self.prefix_mask[tb..tb + l].fill(0.0);
+            self.prefix_mask[tb..tb + req.prefix.len()].fill(1.0);
+            self.prefix_x[base..base + self.row].fill(0.0);
+            clamp_positions(
+                self.kernel,
+                &mut self.prefix_x[base..base + self.row],
+                req.prefix,
+                self.row / l,
+                v,
+                self.d_model,
+                &self.emb_n,
+                self.simplex_k,
+            );
+            self.prefix_dirty = true;
+        }
+        self.dirty[slot] = true;
+        self.any_dirty = true;
         let s = &mut self.slots[slot];
         s.step = 0;
         s.schedule = schedule;
@@ -335,7 +517,20 @@ impl Session {
     }
 
     /// Mark a slot free (halted / finished / cancelled).
+    ///
+    /// Resident path: the slot's decode cache is snapshotted first (one
+    /// lazy `[B, L]` token download, skipped when already synced this
+    /// step), because an idle slot's *device* state keeps cycling with
+    /// neutral times after release — exactly like the reference path,
+    /// a released slot's decode stays frozen at its final step.
     pub fn release_slot(&mut self, slot: usize) {
+        if let Err(e) = self.sync_tokens() {
+            log_warn!(
+                "session[{}]: token snapshot at release failed ({e})",
+                self.family.name()
+            );
+            self.deferred_err = Some(format!("{e:#}"));
+        }
         self.slots[slot].active = false;
     }
 
@@ -343,59 +538,208 @@ impl Session {
         self.slots.iter().any(|s| s.active)
     }
 
-    /// Overwrite prefix positions with their clean representation —
-    /// replacement conditioning, matching how prefix-masked training kept
-    /// unmasked positions clean at every noise level.  The per-family
-    /// representation (embedding row vs ±K logits) is the kernel's.
+    /// Overwrite prefix positions of the host mirror with their clean
+    /// representation — replacement conditioning, matching how
+    /// prefix-masked training kept unmasked positions clean at every
+    /// noise level.  The per-family representation (embedding row vs ±K
+    /// logits) is the kernel's.  Split-borrows the slot: no per-call
+    /// clone of the prefix (§Perf).
     fn clamp_prefix(&mut self, slot: usize) {
         let (v, d) = (self.vocab, self.d_model);
-        let kernel = self.kernel;
+        let simplex_k = self.simplex_k;
         let w = self.row / self.seq_len;
-        let prefix = self.slots[slot].prefix.clone();
         let base = slot * self.row;
-        for (pos, &tok) in prefix.iter().enumerate() {
-            let tok = tok.clamp(0, v as i32 - 1) as usize;
-            let dst = base + pos * w;
-            kernel.clamp_token(
-                &mut self.x[dst..dst + w],
-                tok,
-                &self.emb_n[tok * d..(tok + 1) * d],
-                self.simplex_k,
-            );
-        }
+        let row = self.row;
+        let kernel = self.kernel;
+        let Self { slots, x, emb_n, .. } = self;
+        clamp_positions(
+            kernel,
+            &mut x[base..base + row],
+            &slots[slot].prefix,
+            w,
+            v,
+            d,
+            emb_n,
+            simplex_k,
+        );
     }
 
     /// Enable/disable the per-step `x0_hat` download (Fig-2 trajectory
-    /// analysis).  Off by default: serving workers skip converting
-    /// ~L*D floats per slot per step they would never read.
-    pub fn set_record_x0(&mut self, on: bool) {
+    /// analysis).  Recording forces the host-roundtrip reference path —
+    /// `x0_hat` only exists host-side — so any device-resident state is
+    /// folded back into the host mirrors first.
+    pub fn set_record_x0(&mut self, on: bool) -> Result<()> {
+        if on {
+            self.adopt_device_state()?;
+        }
         self.record_x0 = on;
         if on && self.last_x0_hat.is_empty() {
             self.last_x0_hat =
                 vec![0.0; self.batch * self.seq_len * self.d_model];
         }
+        self.rebuild_want();
+        Ok(())
     }
 
-    /// Advance every active slot by one diffusion step (one device call).
-    /// Inactive slots are stepped with neutral times and ignored.
-    /// Returns per-slot stats for slots that were active.
-    pub fn step(&mut self) -> Result<Vec<Option<StepStats>>> {
-        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
-        // per-slot (t_cur, t_next) into the reused scratch
+    /// Switch the device-resident path on or off; returns the effective
+    /// state (enabling is capability-gated: format-2 artifact + kernel
+    /// opt-in).  Disabling folds the device state back into the host
+    /// mirrors, so the reference path continues bit-identically.
+    pub fn set_resident(&mut self, on: bool) -> Result<bool> {
+        if on {
+            self.resident = self.resident_capable;
+        } else {
+            self.adopt_device_state()?;
+            self.resident = false;
+        }
+        Ok(self.resident)
+    }
+
+    /// Is the device-resident path currently enabled?
+    pub fn resident(&self) -> bool {
+        self.resident
+    }
+
+    /// Could this session go resident at all (format-2 artifact whose
+    /// kernel supports residency)?
+    pub fn resident_supported(&self) -> bool {
+        self.resident_capable
+    }
+
+    fn rebuild_want(&mut self) {
+        let o = &self.out_idx;
+        self.want.clear();
+        self.want.extend([
+            o.x_next, o.probs, o.tokens, o.entropy, o.kl, o.switches,
+            o.norm_x0, o.norm_x,
+        ]);
+        if self.record_x0 {
+            self.want.push(o.x0_hat);
+        }
+    }
+
+    /// Fold the device-resident state back into the host mirrors and
+    /// drop the device copies; the mirrors become authoritative.  Rows
+    /// of dirty slots are NOT overwritten — their mirrors already hold
+    /// a fresh reset that the device has never seen.
+    fn adopt_device_state(&mut self) -> Result<()> {
+        let Some(ds) = self.dev_state.take() else {
+            self.state_synced = true;
+            return Ok(());
+        };
+        if !self.state_synced {
+            let x = self.exe.download_output(&ds.x)?;
+            let probs = self.exe.download_output(&ds.probs)?;
+            let tokens = self.exe.download_output(&ds.tokens)?;
+            let (xs, ps, ts) = (x.as_f32()?, probs.as_f32()?, tokens.as_i32()?);
+            let (l, v, row) = (self.seq_len, self.vocab, self.row);
+            for i in 0..self.batch {
+                if self.dirty[i] {
+                    continue;
+                }
+                self.x[i * row..(i + 1) * row]
+                    .copy_from_slice(&xs[i * row..(i + 1) * row]);
+                self.prev_probs[i * l * v..(i + 1) * l * v]
+                    .copy_from_slice(&ps[i * l * v..(i + 1) * l * v]);
+                self.prev_tokens[i * l..(i + 1) * l]
+                    .copy_from_slice(&ts[i * l..(i + 1) * l]);
+                // decode caches refresh for live slots only — a
+                // released slot keeps its final-step snapshot (the
+                // device row idled on after release)
+                let slot = &mut self.slots[i];
+                if slot.active {
+                    slot.tokens.copy_from_slice(&ts[i * l..(i + 1) * l]);
+                }
+            }
+        }
+        self.state_synced = true;
+        self.tokens_synced = true;
+        Ok(())
+    }
+
+    /// Refresh the per-slot token caches from the device (one `[B,L]`
+    /// i32 download), if they are stale.  No-op on the reference path.
+    fn sync_tokens(&mut self) -> Result<()> {
+        if self.tokens_synced {
+            return Ok(());
+        }
+        let Some(ds) = &self.dev_state else {
+            self.tokens_synced = true;
+            return Ok(());
+        };
+        let t = self.exe.download_output(&ds.tokens)?;
+        let toks = t.as_i32()?;
+        let l = self.seq_len;
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            // only live slots refresh: a dirty slot was reset after the
+            // last device step (its cache already holds the fresh
+            // reset), and a released slot's cache stays frozen at its
+            // final decode — the device row has moved on with idle
+            // times since (matching reference-path commit semantics)
+            if s.active && !self.dirty[i] {
+                s.tokens.copy_from_slice(&toks[i * l..(i + 1) * l]);
+            }
+        }
+        self.tokens_synced = true;
+        Ok(())
+    }
+
+    /// Ensure the prefix-clamp input buffers match `resident_mode`:
+    /// real per-slot masks for the resident path (device clamps), an
+    /// all-zero pass-through for the reference path (host clamps —
+    /// byte-identical legacy behaviour).  Re-uploads only on resets and
+    /// mode switches, never per step.
+    fn ensure_prefix_bufs(&mut self, resident_mode: bool) -> Result<()> {
+        if !self.resident_capable && resident_mode {
+            bail!("resident step on a non-capable artifact");
+        }
+        if !self.exe.spec.has_input("prefix_mask") {
+            return Ok(()); // format-1 artifact: no clamp inputs at all
+        }
+        let fresh = self.prefix_bufs.is_some()
+            && self.prefix_bufs_resident == resident_mode
+            && !(resident_mode && self.prefix_dirty);
+        if fresh {
+            return Ok(());
+        }
+        let (b, l) = (self.batch, self.seq_len);
+        let w = self.row / l;
+        let bufs = if resident_mode {
+            (
+                self.exe.buffer_from_f32(&[b, l], &self.prefix_mask)?,
+                self.exe.buffer_from_f32(&[b, l, w], &self.prefix_x)?,
+            )
+        } else {
+            let zero_mask = vec![0.0f32; b * l];
+            let zero_x = vec![0.0f32; b * self.row];
+            (
+                self.exe.buffer_from_f32(&[b, l], &zero_mask)?,
+                self.exe.buffer_from_f32(&[b, l, w], &zero_x)?,
+            )
+        };
+        self.prefix_bufs = Some(bufs);
+        self.prefix_bufs_resident = resident_mode;
+        if resident_mode {
+            self.prefix_dirty = false;
+        }
+        Ok(())
+    }
+
+    /// Fill the per-slot (t_cur, t_next) scratch and refresh noise for
+    /// active slots (idle slots keep neutral times / stale noise; their
+    /// outputs are ignored) — shared by both step paths.
+    fn prepare_times_and_noise(&mut self) {
         let idle = self.kernel.idle_times();
         for (i, s) in self.slots.iter().enumerate() {
             let (c, n) = if s.active && s.step < s.schedule.n_steps() {
                 s.schedule.pair(s.step)
             } else {
-                // neutral, numerically-safe times for idle slots
                 idle
             };
             self.t2_scratch[i * 2] = c;
             self.t2_scratch[i * 2 + 1] = n;
         }
         if self.kernel.needs_z() {
-            // refresh noise for active slots only; idle slots keep stale
-            // values (their outputs are ignored)
             let row = self.row;
             let z = &mut self.z_scratch;
             for (i, s) in self.slots.iter_mut().enumerate() {
@@ -404,55 +748,179 @@ impl Session {
                 }
             }
         }
+    }
 
-        // assemble device buffers: persistent param buffers + per-step
-        // data uploaded straight from the session's host state (no Vec
-        // clones — only the per-step tensors cross the host boundary)
+    /// Advance every active slot by one diffusion step (one device call).
+    /// Inactive slots are stepped with neutral times and ignored.
+    /// Returns per-slot stats for slots that were active.
+    pub fn step(&mut self) -> Result<Vec<Option<StepStats>>> {
+        // a device error swallowed by a best-effort token download must
+        // not stay silent: fail the next step through the caller's
+        // normal device-failure path
+        if let Some(e) = self.deferred_err.take() {
+            bail!("deferred device failure: {e}");
+        }
+        self.prepare_times_and_noise();
+        if self.resident && !self.record_x0 {
+            match self.step_resident() {
+                Err(e) if e.downcast_ref::<TupleNotDecomposed>().is_some() =>
+                {
+                    // can only fire on the first resident execution (the
+                    // output layout is a property of the runtime), and
+                    // the resident path commits nothing before it — the
+                    // host mirrors are still authoritative, so the
+                    // reference path continues losslessly.  The probe
+                    // execution is discarded (one extra device call +
+                    // ExecStats execution, once per session lifetime)
+                    log_warn!(
+                        "session[{}]: {e}; downgrading to the \
+                         host-roundtrip path",
+                        self.family.name()
+                    );
+                    self.resident = false;
+                    self.dev_state = None;
+                    self.step_reference()
+                }
+                out => out,
+            }
+        } else {
+            self.step_reference()
+        }
+    }
+
+    /// One device-resident step: feed back the previous step's output
+    /// buffers, upload only times (+ noise), download only the `[B]`
+    /// stat rows.
+    fn step_resident(&mut self) -> Result<Vec<Option<StepStats>>> {
+        let exe = self.exe.clone();
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        // dirty protocol: fold the device rows of non-dirty slots into
+        // the mirrors, then re-upload the merged state once below
+        if self.any_dirty {
+            self.adopt_device_state()?;
+            self.dirty.fill(false);
+            self.any_dirty = false;
+        }
+        self.ensure_prefix_bufs(true)?;
         let x_shape = self.kernel.x_shape(b, l, v, self.d_model);
-        let time_input = self.kernel.time_input();
-        let mut data_bufs = Vec::with_capacity(self.data_idx.len());
-        for (name, i) in &self.data_idx {
-            let buf = match name.as_str() {
-                "x_t" => self.exe.buffer_from_f32(&x_shape, &self.x)?,
-                "prev_probs" => {
-                    self.exe.buffer_from_f32(&[b, l, v], &self.prev_probs)?
-                }
-                "prev_tokens" => {
-                    self.exe.buffer_from_i32(&[b, l], &self.prev_tokens)?
-                }
-                "z" => self.exe.buffer_from_f32(&x_shape, &self.z_scratch)?,
-                n if n == time_input => {
-                    self.exe.buffer_from_f32(&[b, 2], &self.t2_scratch)?
-                }
-                other => bail!("unexpected step input {other}"),
-            };
-            data_bufs.push((*i, buf));
+        self.step_up.time =
+            Some(exe.buffer_from_f32(&[b, 2], &self.t2_scratch)?);
+        if self.kernel.needs_z() {
+            self.step_up.z =
+                Some(exe.buffer_from_f32(&x_shape, &self.z_scratch)?);
         }
-        let n_inputs = self.exe.spec.inputs.len();
-        let mut slots_in: Vec<Option<&xla::PjRtBuffer>> = vec![None; n_inputs];
-        for (i, b) in &self.param_bufs {
-            slots_in[*i] = Some(&b.buf);
+        if self.dev_state.is_none() {
+            // first step after build / reset-sync / mode switch: the
+            // state enters the device from the host mirrors once
+            self.step_up.x =
+                Some(exe.buffer_from_f32(&x_shape, &self.x)?);
+            self.step_up.prev_probs =
+                Some(exe.buffer_from_f32(&[b, l, v], &self.prev_probs)?);
+            self.step_up.prev_tokens =
+                Some(exe.buffer_from_i32(&[b, l], &self.prev_tokens)?);
+        } else {
+            self.step_up.x = None;
+            self.step_up.prev_probs = None;
+            self.step_up.prev_tokens = None;
         }
-        for (i, b) in &data_bufs {
-            slots_in[*i] = Some(&b.buf);
-        }
-        let refs: Vec<&xla::PjRtBuffer> = slots_in
-            .into_iter()
-            .map(|o| o.expect("input gap"))
-            .collect();
-        let out_lits = self.exe.run_buffers(&refs).context("step execute")?;
+
+        let refs = build_refs(
+            &self.in_src,
+            &self.param_bufs,
+            &self.step_up,
+            self.dev_state.as_ref(),
+            self.prefix_bufs.as_ref(),
+        )?;
+        let outs = exe.run_buffers_device(&refs).context("step execute")?;
+        drop(refs);
         self.device_calls += 1;
 
-        // download only what the caller reads; x0_hat converts lazily
+        // the only per-step downloads: five [B] stat rows
         let o = &self.out_idx;
-        let mut want = vec![
-            o.x_next, o.probs, o.tokens, o.entropy, o.kl, o.switches,
-            o.norm_x0, o.norm_x,
-        ];
-        if self.record_x0 {
-            want.push(o.x0_hat);
+        let ent = exe.download_output(&outs[o.entropy])?;
+        let kl = exe.download_output(&outs[o.kl])?;
+        let sw = exe.download_output(&outs[o.switches])?;
+        let n0 = exe.download_output(&outs[o.norm_x0])?;
+        let nx = exe.download_output(&outs[o.norm_x])?;
+        let step_out = StepOutputs {
+            entropy: ent.as_f32()?,
+            kl: kl.as_f32()?,
+            switches: sw.as_f32()?,
+            norm_x0: n0.as_f32()?,
+            norm_x: nx.as_f32()?,
+        };
+        let mut results = Vec::with_capacity(b);
+        for i in 0..b {
+            if !self.slots[i].active {
+                results.push(None);
+                continue;
+            }
+            let stats = self.kernel.parse_stats(i, &step_out);
+            let slot = &mut self.slots[i];
+            slot.last_stats = stats;
+            slot.step += 1;
+            results.push(Some(stats));
         }
-        let out = self.exe.download_selected(&out_lits, &want)?;
+        // the bulky outputs stay on the device, becoming the next
+        // step's inputs; decoded tokens download lazily (slot_output).
+        // Buffer lifetime: the stat downloads above forced this
+        // execution to complete, so dropping the previous step's
+        // feedback buffers (the old dev_state, replaced here) and this
+        // step's one-off uploads (overwritten next call) is safe even
+        // under an asynchronous PJRT execute.
+        let mut outs: Vec<Option<xla::PjRtBuffer>> =
+            outs.into_iter().map(Some).collect();
+        let mut take = |i: usize| {
+            outs[i].take().expect("step output consumed twice")
+        };
+        self.dev_state = Some(DevState {
+            x: take(o.x_next),
+            probs: take(o.probs),
+            tokens: take(o.tokens),
+        });
+        self.state_synced = false;
+        self.tokens_synced = false;
+        Ok(results)
+    }
+
+    /// One host-roundtrip step — the reference path: every output
+    /// materialises into the host mirrors (pre-resident behaviour, and
+    /// the baseline the equivalence tests pin the resident path to).
+    fn step_reference(&mut self) -> Result<Vec<Option<StepStats>>> {
+        let exe = self.exe.clone();
+        let (b, l, v) = (self.batch, self.seq_len, self.vocab);
+        // a mode switch may leave device state adrift; fold it back in
+        // so the mirrors are authoritative (no-op otherwise)
+        self.adopt_device_state()?;
+        self.dirty.fill(false);
+        self.any_dirty = false;
+        self.ensure_prefix_bufs(false)?;
+        let x_shape = self.kernel.x_shape(b, l, v, self.d_model);
+        self.step_up.x = Some(exe.buffer_from_f32(&x_shape, &self.x)?);
+        self.step_up.prev_probs =
+            Some(exe.buffer_from_f32(&[b, l, v], &self.prev_probs)?);
+        self.step_up.prev_tokens =
+            Some(exe.buffer_from_i32(&[b, l], &self.prev_tokens)?);
+        self.step_up.time =
+            Some(exe.buffer_from_f32(&[b, 2], &self.t2_scratch)?);
+        if self.kernel.needs_z() {
+            self.step_up.z =
+                Some(exe.buffer_from_f32(&x_shape, &self.z_scratch)?);
+        }
+
+        let refs = build_refs(
+            &self.in_src,
+            &self.param_bufs,
+            &self.step_up,
+            None,
+            self.prefix_bufs.as_ref(),
+        )?;
+        let out_lits = exe.run_buffers(&refs).context("step execute")?;
+        drop(refs);
+        self.device_calls += 1;
+
+        // convert only what the caller reads; x0_hat converts lazily
+        let out = exe.download_selected(&out_lits, &self.want)?;
         let x_next = out[0].as_f32()?;
         let probs = out[1].as_f32()?;
         let tokens = out[2].as_i32()?;
@@ -503,13 +971,21 @@ impl Session {
                 self.clamp_prefix(i);
             }
         }
+        self.state_synced = true;
+        self.tokens_synced = true;
         Ok(results)
     }
 
     /// Current diffusion-state row of a slot (kernel-defined width: L*D
     /// for embedding families, L*V for simplex) — used by the Fig-2
-    /// trajectory analysis.
+    /// trajectory analysis, which runs on the reference path
+    /// ([`Self::set_record_x0`]); asserts the host mirror is current.
     pub fn slot_x(&self, slot: usize) -> &[f32] {
+        assert!(
+            self.state_synced,
+            "slot_x on stale host mirrors — the device-resident path \
+             does not maintain them; use set_record_x0/set_resident(false)"
+        );
         &self.x[slot * self.row..(slot + 1) * self.row]
     }
 
@@ -525,7 +1001,21 @@ impl Session {
     }
 
     /// Decoded tokens of a slot (prefix positions forced to the prefix).
-    pub fn slot_output(&self, slot: usize) -> Vec<i32> {
+    /// On the resident path this triggers the lazy `[B, L]` token
+    /// download (once per step, shared by every slot read); a failed
+    /// download degrades to the last synced decode with a warning AND
+    /// arms a deferred error, so the next `step()` fails through the
+    /// caller's normal device-failure path instead of the session
+    /// silently serving stale decodes.
+    pub fn slot_output(&mut self, slot: usize) -> Vec<i32> {
+        if let Err(e) = self.sync_tokens() {
+            log_warn!(
+                "session[{}]: token download failed ({e}); serving the \
+                 last synced decode",
+                self.family.name()
+            );
+            self.deferred_err = Some(format!("{e:#}"));
+        }
         let s = &self.slots[slot];
         let mut out = s.tokens.clone();
         for (i, &t) in s.prefix.iter().enumerate() {
@@ -543,5 +1033,142 @@ impl Session {
     /// Hot-loop accounting (per-call stats live on the executable).
     pub fn exec_stats(&self) -> crate::runtime::ExecStats {
         self.exe.stats()
+    }
+}
+
+/// Write each prefix token's clean per-family representation into its
+/// position of one state row (`dst` = the slot's `[row]` slice, `w` =
+/// per-position width).  The ONE addressing + `clamp_token` call both
+/// the host clamp (`clamp_prefix` → mirror `x`) and the on-device
+/// clamp rows (`reset_slot` → `prefix_x`) go through — keeping the two
+/// representations bit-identical by construction, which the resident /
+/// reference equivalence depends on.
+#[allow(clippy::too_many_arguments)]
+fn clamp_positions(
+    kernel: &dyn FamilyKernel,
+    dst: &mut [f32],
+    prefix: &[i32],
+    w: usize,
+    v: usize,
+    d: usize,
+    emb_n: &[f32],
+    simplex_k: f32,
+) {
+    for (pos, &tok) in prefix.iter().enumerate() {
+        let tok = tok.clamp(0, v as i32 - 1) as usize;
+        kernel.clamp_token(
+            &mut dst[pos * w..(pos + 1) * w],
+            tok,
+            &emb_n[tok * d..(tok + 1) * d],
+            simplex_k,
+        );
+    }
+}
+
+/// Assemble the artifact's input table in spec order.  The exact-sized
+/// pointer `Vec` is the hot loop's one remaining per-step allocation:
+/// it holds borrows of buffers owned by `self`, so it cannot live in
+/// persistent scratch without `unsafe` — and at one machine word per
+/// input it is noise next to the execute itself.
+fn build_refs<'a>(
+    in_src: &[Src],
+    param_bufs: &'a [DeviceTensor],
+    step_up: &'a StepUploads,
+    dev_state: Option<&'a DevState>,
+    prefix_bufs: Option<&'a (DeviceTensor, DeviceTensor)>,
+) -> Result<Vec<&'a xla::PjRtBuffer>> {
+    let mut refs = Vec::with_capacity(in_src.len());
+    for src in in_src {
+        let buf: &xla::PjRtBuffer = match src {
+            Src::Param(k) => &param_bufs[*k].buf,
+            Src::Data(kind) => match kind {
+                DataKind::X => match (&step_up.x, dev_state) {
+                    (Some(up), _) => &up.buf,
+                    (None, Some(ds)) => &ds.x,
+                    (None, None) => bail!("x_t input has no source"),
+                },
+                DataKind::PrevProbs => {
+                    match (&step_up.prev_probs, dev_state) {
+                        (Some(up), _) => &up.buf,
+                        (None, Some(ds)) => &ds.probs,
+                        (None, None) => {
+                            bail!("prev_probs input has no source")
+                        }
+                    }
+                }
+                DataKind::PrevTokens => {
+                    match (&step_up.prev_tokens, dev_state) {
+                        (Some(up), _) => &up.buf,
+                        (None, Some(ds)) => &ds.tokens,
+                        (None, None) => {
+                            bail!("prev_tokens input has no source")
+                        }
+                    }
+                }
+                DataKind::Z => match &step_up.z {
+                    Some(up) => &up.buf,
+                    None => bail!("z input has no source"),
+                },
+                DataKind::Time => match &step_up.time {
+                    Some(up) => &up.buf,
+                    None => bail!("time input has no source"),
+                },
+                DataKind::PrefixMask => match prefix_bufs {
+                    Some((mask, _)) => &mask.buf,
+                    None => bail!("prefix_mask input has no source"),
+                },
+                DataKind::PrefixX => match prefix_bufs {
+                    Some((_, px)) => &px.buf,
+                    None => bail!("prefix_x input has no source"),
+                },
+            },
+        };
+        refs.push(buf);
+    }
+    Ok(refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, InputSpec};
+
+    fn spec_with_inputs(names: &[&str]) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "ddlm_step_b1_l64".into(),
+            file: "ddlm_step_b1_l64.hlo.txt".into(),
+            family: "ddlm".into(),
+            role: "step".into(),
+            batch: 1,
+            seq_len: 64,
+            inputs: names
+                .iter()
+                .map(|n| InputSpec {
+                    name: n.to_string(),
+                    shape: vec![1],
+                    dtype: Dtype::F32,
+                })
+                .collect(),
+            outputs: vec!["x_next".into()],
+        }
+    }
+
+    #[test]
+    fn residency_capability_is_probed_per_artifact() {
+        // format-2 step artifacts carry both clamp inputs
+        let v2 = spec_with_inputs(&[
+            "x_t", "prev_probs", "prev_tokens", "t2", "prefix_mask",
+            "prefix_x",
+        ]);
+        assert!(resident_capable(&v2));
+        // format-1 artifacts (or a partially pruned one) are not
+        // resident-capable: sessions fall back to the reference path
+        let v1 =
+            spec_with_inputs(&["x_t", "prev_probs", "prev_tokens", "t2"]);
+        assert!(!resident_capable(&v1));
+        let half = spec_with_inputs(&[
+            "x_t", "prev_probs", "prev_tokens", "t2", "prefix_mask",
+        ]);
+        assert!(!resident_capable(&half));
     }
 }

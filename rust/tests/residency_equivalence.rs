@@ -1,0 +1,326 @@
+//! Equivalence: the device-resident session path must be
+//! **bit-identical** to the host-roundtrip reference path — same
+//! tokens, same `StepStats` — for every built-in family, with and
+//! without conditioning prefixes, across a mid-schedule slot reset
+//! (the dirty download-merge-upload protocol), and the steady-state
+//! host boundary must actually shrink (byte counters).  Plus the
+//! fallback contract: a session on an old-format manifest (no
+//! on-device prefix-clamp inputs) transparently serves through the
+//! reference path.
+//!
+//! Skips cleanly when artifacts are not built (`make artifacts`).
+
+use std::rc::Rc;
+
+use repro::halting::StepStats;
+use repro::models::store::ParamStore;
+use repro::runtime::{Manifest, Runtime};
+use repro::sampler::{Family, Session, SlotRequest};
+use repro::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+fn assert_stats_eq(a: &StepStats, b: &StepStats, ctx: &str) {
+    assert_eq!(a.entropy, b.entropy, "{ctx}: entropy");
+    assert_eq!(a.kl, b.kl, "{ctx}: kl");
+    assert_eq!(a.switches, b.switches, "{ctx}: switches");
+    assert_eq!(a.norm_x0, b.norm_x0, "{ctx}: norm_x0");
+    assert_eq!(a.norm_x, b.norm_x, "{ctx}: norm_x");
+}
+
+/// One scripted continuous-batching scenario: two occupied slots (one
+/// with a Prefix-32-style prefix), a mid-schedule reset of slot 0 onto
+/// a new prefixed request, stepping throughout.  Records every
+/// observable: per-step stats and per-step decodes for both slots.
+#[allow(clippy::type_complexity)]
+fn run_script(
+    session: &mut Session,
+    t_max: f32,
+    t_min: f32,
+) -> (Vec<Vec<(usize, StepStats)>>, Vec<Vec<(usize, Vec<i32>)>>) {
+    let prefix_a = [5i32, 6, 7, 8];
+    let prefix_b = [9i32, 10, 11];
+    session
+        .reset_slot(0, &SlotRequest::new(101, 12, t_max, t_min))
+        .unwrap();
+    if session.batch > 1 {
+        session
+            .reset_slot(
+                1,
+                &SlotRequest::new(202, 12, t_max, t_min).prefix(&prefix_a),
+            )
+            .unwrap();
+    }
+    let observed = session.batch.min(2);
+    let mut stats_log: Vec<Vec<(usize, StepStats)>> = Vec::new();
+    let mut decode_log: Vec<Vec<(usize, Vec<i32>)>> = Vec::new();
+    let mut record = |session: &mut Session| {
+        let stats = session.step().unwrap();
+        let mut st_row = Vec::new();
+        let mut tok_row = Vec::new();
+        for slot in 0..observed {
+            if let Some(st) = stats[slot] {
+                st_row.push((slot, st));
+                tok_row.push((slot, session.slot_output(slot)));
+            }
+        }
+        stats_log.push(st_row);
+        decode_log.push(tok_row);
+    };
+    for _ in 0..5 {
+        record(session);
+    }
+    // mid-schedule continuous-batching reset: slot 0 is recycled onto a
+    // fresh prefixed request while slot 1 keeps denoising — on the
+    // resident path this exercises the dirty download-merge-upload sync
+    session
+        .reset_slot(
+            0,
+            &SlotRequest::new(303, 10, t_max, t_min).prefix(&prefix_b),
+        )
+        .unwrap();
+    for _ in 0..5 {
+        record(session);
+    }
+    (stats_log, decode_log)
+}
+
+/// The headline guarantee: resident and reference paths produce
+/// bit-identical stats and decodes for all three built-in families.
+#[test]
+fn resident_path_is_bit_identical_to_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let m = man.model.clone();
+    for fam in Family::all() {
+        if man
+            .available_step_batches(fam.name(), m.seq_len)
+            .is_empty()
+        {
+            continue;
+        }
+        let batch =
+            man.resolve_step_batch(fam.name(), m.seq_len, 2).unwrap();
+        // two separate runtimes so each path owns its executable (and
+        // its ExecStats) outright
+        let mk = || -> Session {
+            let rt = Runtime::new(&dir).unwrap();
+            let store =
+                Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
+            Session::new(&rt, fam, store, batch, m.seq_len).unwrap()
+        };
+        let mut resident = mk();
+        assert!(
+            resident.resident_supported() && resident.resident(),
+            "{}: fresh artifacts must enable the resident path",
+            fam.name()
+        );
+        let mut reference = mk();
+        assert!(!reference.set_resident(false).unwrap());
+
+        let (stats_r, toks_r) = run_script(&mut resident, m.t_max, m.t_min);
+        let (stats_h, toks_h) = run_script(&mut reference, m.t_max, m.t_min);
+        assert_eq!(stats_r.len(), stats_h.len());
+        for (step, (row_r, row_h)) in
+            stats_r.iter().zip(&stats_h).enumerate()
+        {
+            assert_eq!(row_r.len(), row_h.len());
+            for ((slot_r, st_r), (slot_h, st_h)) in row_r.iter().zip(row_h)
+            {
+                assert_eq!(slot_r, slot_h);
+                assert_stats_eq(
+                    st_r,
+                    st_h,
+                    &format!("{} step {step} slot {slot_r}", fam.name()),
+                );
+            }
+        }
+        for (step, (row_r, row_h)) in toks_r.iter().zip(&toks_h).enumerate()
+        {
+            assert_eq!(
+                row_r,
+                row_h,
+                "{} step {step}: decodes diverged",
+                fam.name()
+            );
+        }
+        // prefix positions are forced in the decode on both paths
+        let last = toks_r.last().unwrap();
+        if batch > 1 {
+            let slot1 = &last.iter().find(|(s, _)| *s == 1).unwrap().1;
+            assert_eq!(&slot1[..4], &[5, 6, 7, 8], "{}", fam.name());
+        }
+        let slot0 = &last.iter().find(|(s, _)| *s == 0).unwrap().1;
+        assert_eq!(&slot0[..3], &[9, 10, 11], "{}", fam.name());
+    }
+}
+
+/// The perf contract behind the whole PR: in steady state (no resets,
+/// no host reads) the resident path's per-step boundary traffic carries
+/// no `[B, L, V]` or `[B, row]` tensor — only times up and stat rows
+/// down (plus the noise scratch for `needs_z` kernels) — while the
+/// reference path hauls the full state both ways every step.
+#[test]
+fn resident_steady_state_host_bytes_shrink() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let m = man.model.clone();
+    for fam in Family::all() {
+        if man
+            .available_step_batches(fam.name(), m.seq_len)
+            .is_empty()
+        {
+            continue;
+        }
+        let batch =
+            man.resolve_step_batch(fam.name(), m.seq_len, 2).unwrap();
+        let (b, l, v) = (batch, m.seq_len, m.vocab);
+        let row = fam.kernel().state_row(l, v, m.d_model);
+        let steps = 4u64;
+        let mut measure = |go_resident: bool| -> (u64, u64) {
+            let rt = Runtime::new(&dir).unwrap();
+            let store =
+                Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
+            let mut s =
+                Session::new(&rt, fam, store, batch, m.seq_len).unwrap();
+            s.set_resident(go_resident).unwrap();
+            for slot in 0..batch {
+                s.reset_slot(
+                    slot,
+                    &SlotRequest::new(slot as u64, 64, m.t_max, m.t_min),
+                )
+                .unwrap();
+            }
+            s.step().unwrap(); // entry step (params + state upload)
+            assert!(
+                s.resident() == go_resident,
+                "{}: runtime downgraded at the first step — resident \
+                 path unavailable (un-decomposed tuple outputs)",
+                fam.name()
+            );
+            let before = s.exec_stats();
+            for _ in 0..steps {
+                s.step().unwrap();
+            }
+            let after = s.exec_stats();
+            (
+                after.upload_bytes - before.upload_bytes,
+                after.download_bytes - before.download_bytes,
+            )
+        };
+        let (up_res, down_res) = measure(true);
+        let (up_ref, down_ref) = measure(false);
+        // exact steady-state budget of the resident path
+        let z_bytes =
+            if fam.kernel().needs_z() { b * row * 4 } else { 0 } as u64;
+        assert_eq!(
+            up_res,
+            steps * (b as u64 * 2 * 4 + z_bytes),
+            "{}: resident uploads must be times (+noise) only",
+            fam.name()
+        );
+        assert_eq!(
+            down_res,
+            steps * (5 * b as u64 * 4),
+            "{}: resident downloads must be the five [B] stat rows",
+            fam.name()
+        );
+        // the reference path hauls the state + probs both ways: it must
+        // dominate the resident boundary by orders of magnitude
+        assert!(
+            down_ref >= steps * ((b * l * v + b * row) * 4) as u64,
+            "{}: reference path downloads less than the state?",
+            fam.name()
+        );
+        assert!(
+            up_ref > up_res && down_ref > 100 * down_res,
+            "{}: resident path did not shrink the boundary \
+             (up {up_res} vs {up_ref}, down {down_res} vs {down_ref})",
+            fam.name()
+        );
+    }
+}
+
+/// Fallback: a manifest without the format-2 prefix-clamp inputs (an
+/// old artifact build) still constructs a working session — pinned to
+/// the host-roundtrip path, with `set_resident(true)` refusing.
+///
+/// Scope note: genuine format-1 HLO no longer exists in a freshly-built
+/// artifacts dir, so this synthesizes a format-1 *manifest* over the
+/// format-2 HLO files — the executable still expects the clamp inputs,
+/// so the test can validate capability probing, path selection and
+/// slot admission, but not execute a step.  Reference-path *stepping*
+/// itself is exercised by the bit-identity test above
+/// (`set_resident(false)`), whose only difference from true format-1
+/// serving is the zero-mask clamp inputs the v2 artifact consumes.
+#[test]
+fn old_format_manifest_falls_back_to_reference_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    // synthesize a format-1 manifest in a temp dir: the real HLO files
+    // (absolute paths), but the prefix inputs stripped from the specs
+    let text =
+        std::fs::read_to_string(format!("{dir}/manifest.json")).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    let abs = std::fs::canonicalize(&dir).unwrap();
+    {
+        let Json::Obj(top) = &mut j else { panic!("manifest not an object") };
+        top.insert("format".to_string(), Json::uint(1));
+        let Some(Json::Arr(arts)) = top.get_mut("artifacts") else {
+            panic!("no artifacts array")
+        };
+        for a in arts.iter_mut() {
+            let Json::Obj(art) = a else { continue };
+            if let Some(Json::Str(f)) = art.get("file").cloned().as_ref() {
+                art.insert(
+                    "file".to_string(),
+                    Json::str(abs.join(f).to_string_lossy().to_string()),
+                );
+            }
+            if let Some(Json::Arr(inputs)) = art.get_mut("inputs") {
+                inputs.retain(|i| {
+                    !matches!(
+                        i.get("name").and_then(Json::as_str),
+                        Some("prefix_mask") | Some("prefix_x")
+                    )
+                });
+            }
+        }
+    }
+    let tmp = std::env::temp_dir().join(format!(
+        "repro_v1_manifest_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("manifest.json"), j.encode()).unwrap();
+
+    let rt = Runtime::new(tmp.to_str().unwrap()).unwrap();
+    assert_eq!(rt.manifest.format, 1);
+    let spec = rt.manifest.artifact("ddlm_step_b1_l64").unwrap();
+    assert!(!spec.has_input("prefix_mask"));
+    assert!(!repro::sampler::resident_capable(spec));
+
+    // a session on the old manifest is pinned to the reference path
+    let store = Rc::new(ParamStore::load_init(&dir, "ddlm").unwrap());
+    let mut s = Session::new(&rt, Family::Ddlm, store, 1, 64).unwrap();
+    assert!(!s.resident_supported());
+    assert!(!s.resident());
+    assert!(
+        !s.set_resident(true).unwrap(),
+        "residency must refuse on a format-1 artifact"
+    );
+    // the host path still occupies and validates slots normally
+    s.reset_slot(
+        0,
+        &SlotRequest::new(7, 5, rt.manifest.model.t_max,
+                          rt.manifest.model.t_min),
+    )
+    .unwrap();
+
+    std::fs::remove_dir_all(&tmp).ok();
+}

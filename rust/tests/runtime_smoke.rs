@@ -39,6 +39,12 @@ fn ddlm_step_executes_and_stats_are_sane() {
         "t2".to_string(),
         Tensor::f32(&[b, 2], vec![t_max, t_max * 0.95]),
     );
+    // format-2 artifacts take on-device prefix-clamp inputs; an
+    // all-zero mask is the documented pass-through
+    if exe.spec.has_input("prefix_mask") {
+        data.insert("prefix_mask".to_string(), Tensor::zeros_f32(&[b, l]));
+        data.insert("prefix_x".to_string(), Tensor::zeros_f32(&[b, l, d]));
+    }
     let inputs = store.assemble(&exe.spec, data.clone()).unwrap();
     let out = exe.run(&inputs).unwrap();
     assert_eq!(out.len(), 9);

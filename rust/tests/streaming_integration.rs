@@ -50,6 +50,12 @@ fn v1_progress_throttling_halt_and_legacy_on_one_connection() {
         .generate_with(&req, |ev| {
             assert_eq!(ev.id, 1);
             assert_eq!(ev.steps_budget, 200);
+            // every worker progress frame carries the current decode
+            assert_eq!(
+                ev.tokens.as_ref().map(Vec::len),
+                Some(64),
+                "progress frame without a mid-generation decode"
+            );
             seen.push(ev.step);
         })
         .unwrap();

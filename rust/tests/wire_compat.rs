@@ -186,6 +186,9 @@ fn random_events_roundtrip() {
                 step: r.below(1000),
                 steps_budget: 1000 + r.below(1000),
                 stats: Default::default(),
+                tokens: (r.below(2) == 0).then(|| {
+                    (0..r.below(8)).map(|_| r.below(512) as i32).collect()
+                }),
             }),
             1 => Event::Done(GenResponse {
                 id: r.next_u64(),
