@@ -21,6 +21,14 @@
 //!   reported under `"mixed"` with per-family rows (completions, p50 /
 //!   p95 latency, steps) computed from measured-run samples.
 //!
+//! * **predictor** — a deadline-laden workload served twice on one
+//!   ddlm shard: completeness predictor off (baseline) then on (wire
+//!   estimates + `infeasible_deadline` admission + SRPT packing), on
+//!   the same calibrated deadline ladder.  Reported under
+//!   `"predictor"` with per-run goodput-under-deadline rows, the
+//!   on-vs-off `goodput_delta_pct`, and the realized
+//!   `prediction_mae_steps`.
+//!
 //! * **session_step** — a microbench directly on one batched `Session`
 //!   (no TCP): the device-resident state path vs the host-roundtrip
 //!   reference path, reporting steps/s and `host_bytes_per_step` from
@@ -32,9 +40,9 @@
 //!   noise only).
 //!
 //! Knobs: --n 32 --steps 120 --workers 2 --batch 8 --criterion SPEC
-//! --progress-every 25 --session-steps 40 (default policy: the paper's
-//! adaptive KL + entropy-fallback).  Skips cleanly when artifacts are
-//! not built.
+//! --progress-every 25 --session-steps 40 --predictor-train 12
+//! (default policy: the paper's adaptive KL + entropy-fallback).
+//! Skips cleanly when artifacts are not built.
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -43,6 +51,7 @@ use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
 use repro::corpus::dataset::Dataset;
 use repro::halting::{parse_policy, BoxedPolicy};
 use repro::models::store::ParamStore;
+use repro::predictor::PackingMode;
 use repro::runtime::{Manifest, Runtime};
 use repro::sampler::{Family, FamilyId, Session, SlotRequest};
 use repro::util::cli::Args;
@@ -267,6 +276,128 @@ fn bench_session(
     })
 }
 
+struct PredictorRun {
+    wall_s: f64,
+    completed: usize,
+    /// completions whose end-to-end latency fit their deadline
+    met_deadline: usize,
+    rejected_infeasible: usize,
+    deadline_exceeded: usize,
+    /// deadline-met completions per second — the goodput the admission
+    /// gate is supposed to protect
+    goodput_rps: f64,
+    /// fleet `prediction_mae_steps` from the end-of-run snapshot
+    /// (absent when the predictor graded nothing, e.g. the off run)
+    prediction_mae: Option<f64>,
+    predictions_made: f64,
+    /// calibrated deadline ladder used for the measured phase
+    ladder: [f64; 4],
+}
+
+/// Drive one single-worker ddlm fleet through a deadline-laden workload,
+/// with the completeness predictor on or off.  A train phase without
+/// deadlines warms the artifact compile AND (in the on run) the
+/// estimator's per-family EMAs; its mean latency calibrates a deadline
+/// ladder from hopeless (5% of a typical request) to comfortable (10x),
+/// reused verbatim for the paired run so on/off goodput is comparable.
+#[allow(clippy::too_many_arguments)]
+fn run_predictor_scenario(
+    dir: &str,
+    batch: usize,
+    n: usize,
+    train_n: usize,
+    n_steps: usize,
+    policy: &BoxedPolicy,
+    prompts: &[Vec<i32>],
+    predictor_on: bool,
+    ladder: Option<[f64; 4]>,
+) -> anyhow::Result<PredictorRun> {
+    let mut cfg = EngineConfig::new(dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), batch)];
+    cfg.discover_checkpoints("runs");
+    if predictor_on {
+        cfg.predictor.enabled = true;
+        cfg.predictor.admission = true;
+        cfg.predictor.packing = PackingMode::Srpt;
+    }
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone())?;
+    let mut client = Client::connect(&server.addr)?;
+
+    // train phase (off the clock): no deadlines, so every request is
+    // admitted and the estimator observes real halt steps + latencies
+    let mut train_lat = 0.0;
+    for i in 0..train_n {
+        let mut req = GenRequest::new(2_000_000 + i as u64, n_steps);
+        req.prefix = prompts[i % prompts.len()][..32].to_vec();
+        req.policy = policy.clone();
+        req.seed = 7000 + i as u64;
+        let resp = client.generate(&req)?;
+        train_lat += resp.latency_ms;
+    }
+    let mean_lat = (train_lat / train_n as f64).max(1.0);
+    let ladder = ladder
+        .unwrap_or([mean_lat * 0.05, mean_lat * 0.5, mean_lat * 2.0, mean_lat * 10.0]);
+
+    // measured phase: every request carries a deadline from the ladder
+    let t0 = Instant::now();
+    let mut completed = 0usize;
+    let mut met_deadline = 0usize;
+    let mut rejected_infeasible = 0usize;
+    let mut deadline_exceeded = 0usize;
+    for i in 0..n {
+        let deadline = ladder[i % ladder.len()];
+        let mut req = GenRequest::new(3_000_000 + i as u64, n_steps);
+        req.prefix = prompts[i % prompts.len()][..32].to_vec();
+        req.policy = policy.clone();
+        req.seed = 8000 + i as u64;
+        req.deadline_ms = Some(deadline);
+        match client.generate(&req) {
+            Ok(resp) => {
+                completed += 1;
+                if resp.latency_ms <= deadline {
+                    met_deadline += 1;
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.contains("infeasible_deadline") {
+                    rejected_infeasible += 1;
+                } else if msg.contains("deadline_exceeded") {
+                    deadline_exceeded += 1;
+                } else {
+                    return Err(e);
+                }
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let snapshot = client.metrics()?;
+    let prediction_mae =
+        snapshot.get("prediction_mae_steps").and_then(Json::as_f64);
+    let predictions_made = snapshot
+        .get("predictions_made")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap()?;
+
+    Ok(PredictorRun {
+        wall_s,
+        completed,
+        met_deadline,
+        rejected_infeasible,
+        deadline_exceeded,
+        goodput_rps: met_deadline as f64 / wall_s.max(1e-9),
+        prediction_mae,
+        predictions_made,
+        ladder,
+    })
+}
+
 /// Per-family rows (completions, latency quantiles, steps) computed
 /// from the measured-run samples — warmup traffic is excluded, so the
 /// rows are directly comparable to the top-level numbers.
@@ -455,6 +586,46 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // scenario 5: predictor — a deadline-laden workload served twice,
+    // predictor off (baseline) then on (wire estimates + admission gate
+    // + SRPT packing), on the same calibrated deadline ladder; reports
+    // prediction MAE and the goodput-under-deadline delta
+    let predictor_train = args.usize_or("predictor-train", 12);
+    println!(
+        "serving_bench[predictor]: {predictor_train} train reqs, \
+         {n} deadline-laden reqs, off vs on"
+    );
+    let pred_off = run_predictor_scenario(
+        &dir, batch, n, predictor_train, n_steps, &policy, &prompts,
+        false, None,
+    )?;
+    let pred_on = run_predictor_scenario(
+        &dir, batch, n, predictor_train, n_steps, &policy, &prompts,
+        true, Some(pred_off.ladder),
+    )?;
+    let goodput_delta_pct = if pred_off.goodput_rps > 0.0 {
+        100.0 * (pred_on.goodput_rps - pred_off.goodput_rps)
+            / pred_off.goodput_rps
+    } else {
+        0.0
+    };
+    println!(
+        "serving_bench[predictor]: off {:.2} goodput req/s \
+         ({} met / {} done / {} missed) | on {:.2} goodput req/s \
+         ({} met / {} done / {} rejected infeasible) — \
+         delta {goodput_delta_pct:+.1}%, MAE {:.1} steps over {} predictions",
+        pred_off.goodput_rps,
+        pred_off.met_deadline,
+        pred_off.completed,
+        pred_off.deadline_exceeded,
+        pred_on.goodput_rps,
+        pred_on.met_deadline,
+        pred_on.completed,
+        pred_on.rejected_infeasible,
+        pred_on.prediction_mae.unwrap_or(f64::NAN),
+        pred_on.predictions_made,
+    );
+
     // top-level fields mirror the pre-multi-family layout so the
     // BENCH_serving.json trendline stays comparable PR-over-PR
     let mut fields = vec![
@@ -545,6 +716,37 @@ fn main() -> anyhow::Result<()> {
             ]),
         ));
     }
+    let run_row = |r: &PredictorRun| {
+        Json::obj(vec![
+            ("wall_s", Json::num(r.wall_s)),
+            ("completed", Json::num(r.completed as f64)),
+            ("met_deadline", Json::num(r.met_deadline as f64)),
+            (
+                "rejected_infeasible",
+                Json::num(r.rejected_infeasible as f64),
+            ),
+            (
+                "deadline_exceeded",
+                Json::num(r.deadline_exceeded as f64),
+            ),
+            ("goodput_rps", Json::num(r.goodput_rps)),
+        ])
+    };
+    let mut pred_fields = vec![
+        ("train_requests", Json::num(predictor_train as f64)),
+        (
+            "deadline_ladder_ms",
+            Json::Arr(pred_off.ladder.iter().map(|&d| Json::num(d)).collect()),
+        ),
+        ("off", run_row(&pred_off)),
+        ("on", run_row(&pred_on)),
+        ("goodput_delta_pct", Json::num(goodput_delta_pct)),
+        ("predictions_made", Json::num(pred_on.predictions_made)),
+    ];
+    if let Some(mae) = pred_on.prediction_mae {
+        pred_fields.push(("prediction_mae_steps", Json::num(mae)));
+    }
+    fields.push(("predictor", Json::obj(pred_fields)));
     let out = Json::obj(fields);
     std::fs::write("BENCH_serving.json", format!("{}\n", out.encode()))?;
     println!("serving_bench: wrote BENCH_serving.json");

@@ -30,6 +30,7 @@ use super::scheduler::{
     CancelOutcome, GenOutcome, ProgressTx, Scheduler, ServeError,
 };
 use super::worker::{self, WorkerConfig};
+use crate::predictor::{Estimator, PredictorConfig};
 use crate::sampler::FamilyId;
 use crate::util::json::Json;
 
@@ -66,6 +67,14 @@ pub struct EngineConfig {
     /// `Priority::index()` order); a full class rejects with typed
     /// `overloaded` without starving the other classes
     pub class_queue_bounds: Option<[usize; Priority::COUNT]>,
+    /// optional per-family queue bounds: a family whose queued count
+    /// reaches its cap rejects new submits with typed `overloaded`
+    /// without blocking the other families' admission
+    pub family_queue_bounds: Vec<(FamilyId, usize)>,
+    /// completeness-predictor wiring (wire fields, admission gate,
+    /// SRPT packing); the default leaves every gate off and behavior
+    /// bit-identical to a predictor-less build
+    pub predictor: PredictorConfig,
 }
 
 impl EngineConfig {
@@ -84,6 +93,8 @@ impl EngineConfig {
             schedule_overrides: Vec::new(),
             queue_depth: 256,
             class_queue_bounds: None,
+            family_queue_bounds: Vec::new(),
+            predictor: PredictorConfig::default(),
         }
     }
 
@@ -130,6 +141,10 @@ pub struct EngineHandle {
     /// resolved `(family, t_max, t_min)` per served family — the
     /// schedule envelope clients see in the metrics snapshot
     schedule_envelope: Vec<(FamilyId, f32, f32)>,
+    /// shared steps-to-halt estimator, present when any predictor
+    /// feature is active; its per-family state appears in the metrics
+    /// snapshot under `"predictor"`
+    predictor: Option<Arc<Estimator>>,
 }
 
 impl EngineHandle {
@@ -239,6 +254,9 @@ impl EngineHandle {
             })
             .collect();
         m.insert("families".to_string(), Json::obj(families));
+        if let Some(est) = &self.predictor {
+            m.insert("predictor".to_string(), est.snapshot_json());
+        }
         Ok(Json::Obj(m))
     }
 
@@ -310,6 +328,24 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
     if let Some(caps) = cfg.class_queue_bounds {
         sched = sched.with_class_caps(caps);
     }
+    if !cfg.family_queue_bounds.is_empty() {
+        sched = sched.with_family_caps(cfg.family_queue_bounds.clone());
+    }
+    // one estimator shared by the scheduler (admission + packing) and
+    // every worker (observation + wire predictions); absent entirely
+    // when no predictor feature is on, so the default config cannot
+    // perturb scheduling or the wire
+    let estimator = cfg
+        .predictor
+        .active()
+        .then(|| Arc::new(Estimator::new()));
+    if let Some(est) = &estimator {
+        sched = sched.with_predictor(
+            est.clone(),
+            cfg.predictor.admission,
+            cfg.predictor.packing,
+        );
+    }
     // admission-side validation needs the compiled seq_len (a longer
     // prefix must reject with `invalid_request` at the boundary, not
     // panic a worker).  The manifest read is cheap; if it fails the
@@ -344,6 +380,8 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
                 checkpoint,
                 t_max,
                 t_min,
+                predictor: estimator.clone(),
+                predict_wire: cfg.predictor.enabled,
             },
             sched.clone(),
             m,
@@ -354,6 +392,7 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
             sched,
             worker_metrics,
             schedule_envelope,
+            predictor: estimator,
         },
         EngineJoin { handles },
     )

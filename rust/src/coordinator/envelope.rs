@@ -19,17 +19,19 @@
 //!
 //! | frame | shape |
 //! |---|---|
-//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..[,"tokens":[..]]}` — `tokens` is the current decode (prefix positions forced), attached by workers |
-//! | done     | `{"v":1,"type":"done", ...GenResponse fields...}` |
+//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..[,"tokens":[..]][,"predicted_steps_remaining":R,"predicted_total_steps":T]}` — `tokens` is the current decode (prefix positions forced), attached by workers; the `predicted_*` pair is the fleet predictor's live steps-to-halt estimate, present only when the engine runs with prediction enabled |
+//! | done     | `{"v":1,"type":"done", ...GenResponse fields...}` — gains the same optional `predicted_*` pair under prediction |
 //! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT]}` |
 //! | cancel   | ack: `{"v":1,"type":"cancel","id":N,"cancelled":BOOL,"state":"queued"\|"running"\|"not_found"}` |
 //! | halt     | ack: `{"v":1,"type":"halt","id":N,"found":BOOL,"state":...}` |
 //! | metrics  | `{"v":1,"type":"metrics","data":{...snapshot...}}` |
 //!
 //! Error codes: the scheduler's typed serving errors (`overloaded`,
-//! `cancelled`, `deadline_exceeded`, `unavailable`, `invalid_request`,
-//! `duplicate_id`) plus `unsupported_version` (a `v` the server does
-//! not speak) and `internal`.  Malformed frames map to
+//! `cancelled`, `deadline_exceeded`, `infeasible_deadline`,
+//! `unavailable`, `invalid_request`, `duplicate_id`) plus
+//! `unsupported_version` (a `v` the server does not speak) and
+//! `internal` (carrying a `message` detail such as
+//! `"token_download_failed"`).  Malformed frames map to
 //! `invalid_request` with a human-readable `message`.
 //!
 //! Frames of different requests interleave freely on one connection
@@ -203,6 +205,16 @@ impl Event {
                         ),
                     ));
                 }
+                if let Some(r) = p.predicted_steps_remaining {
+                    fields.push((
+                        "predicted_steps_remaining",
+                        Json::uint(r as u64),
+                    ));
+                }
+                if let Some(t) = p.predicted_total_steps {
+                    fields
+                        .push(("predicted_total_steps", Json::uint(t as u64)));
+                }
                 let Json::Obj(m) = Json::obj(fields) else {
                     unreachable!()
                 };
@@ -329,6 +341,12 @@ impl Event {
                         norm_x0: stat("norm_x0"),
                     },
                     tokens,
+                    predicted_steps_remaining: j
+                        .get("predicted_steps_remaining")
+                        .and_then(Json::as_usize),
+                    predicted_total_steps: j
+                        .get("predicted_total_steps")
+                        .and_then(Json::as_usize),
                 })
             }
             "done" => Event::Done(GenResponse::from_json(j)?),
@@ -455,14 +473,19 @@ mod tests {
                     norm_x0: 7.5,
                 },
                 tokens: Some(vec![3, 0, -1]),
+                predicted_steps_remaining: Some(30),
+                predicted_total_steps: Some(80),
             }),
-            // older servers attach no decode: the field is optional
+            // older servers attach no decode and no prediction: the
+            // fields are optional
             Event::Progress(ProgressEvent {
                 id: 2,
                 step: 10,
                 steps_budget: 100,
                 stats: StepStats::default(),
                 tokens: None,
+                predicted_steps_remaining: None,
+                predicted_total_steps: None,
             }),
             Event::Error {
                 id: Some(4),
@@ -501,6 +524,14 @@ mod tests {
                     assert!((a.stats.entropy - b.stats.entropy).abs() < 1e-6);
                     assert!((a.stats.kl - b.stats.kl).abs() < 1e-9);
                     assert_eq!(a.tokens, b.tokens);
+                    assert_eq!(
+                        a.predicted_steps_remaining,
+                        b.predicted_steps_remaining
+                    );
+                    assert_eq!(
+                        a.predicted_total_steps,
+                        b.predicted_total_steps
+                    );
                 }
                 (
                     Event::Error { id: a, code: ca, message: ma },
@@ -534,6 +565,8 @@ mod tests {
             latency_ms: 45.5,
             queue_ms: 1.25,
             family: None,
+            predicted_steps_remaining: Some(2),
+            predicted_total_steps: Some(118),
             final_stats: StepStats::default(),
         };
         let encoded = Event::Done(resp).to_json().encode();
@@ -545,5 +578,23 @@ mod tests {
         assert_eq!(back.id, (1 << 60) + 3);
         assert_eq!(back.halt_reason.as_deref(), Some("client"));
         assert_eq!(back.tokens, vec![5, 6, 7]);
+        assert_eq!(back.predicted_steps_remaining, Some(2));
+        assert_eq!(back.predicted_total_steps, Some(118));
+    }
+
+    #[test]
+    fn progress_without_prediction_omits_fields_on_wire() {
+        let encoded = Event::Progress(ProgressEvent {
+            id: 1,
+            step: 5,
+            steps_budget: 50,
+            stats: StepStats::default(),
+            tokens: None,
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
+        })
+        .to_json()
+        .encode();
+        assert!(!encoded.contains("predicted"), "{encoded}");
     }
 }

@@ -125,6 +125,11 @@ pub struct FamilyMetrics {
     pub latency_ms: Histogram,
     /// early halts per policy reason within this family
     pub halted_by: BTreeMap<String, u64>,
+    /// sum of |predicted_total_steps − steps_executed| over graded
+    /// predictions; divide by `predictions` for the family's MAE
+    pub prediction_err_steps: f64,
+    /// number of graded predictions in this lane
+    pub predictions: u64,
 }
 
 impl FamilyMetrics {
@@ -151,6 +156,8 @@ impl FamilyMetrics {
         for (reason, n) in &other.halted_by {
             *self.halted_by.entry(reason.clone()).or_insert(0) += n;
         }
+        self.prediction_err_steps += other.prediction_err_steps;
+        self.predictions += other.predictions;
     }
 }
 
@@ -178,6 +185,12 @@ pub struct Metrics {
     pub cancelled: u64,
     /// requests dropped because `deadline_ms` expired
     pub deadline_exceeded: u64,
+    /// admission rejections because the predicted wall time exceeded
+    /// the request's `deadline_ms` (predictor admission gate)
+    pub rejected_infeasible: u64,
+    /// total steps-to-halt predictions graded against an actual
+    /// completion (feeds the `prediction_mae_steps` lanes)
+    pub predictions_made: u64,
     /// slot-occupancy gauges (workers refresh these every loop)
     pub slots_total: u64,
     pub slots_busy: u64,
@@ -211,6 +224,8 @@ impl Default for Metrics {
             rejected_invalid: 0,
             cancelled: 0,
             deadline_exceeded: 0,
+            rejected_infeasible: 0,
+            predictions_made: 0,
             slots_total: 0,
             slots_busy: 0,
             steps_in_flight: 0,
@@ -242,6 +257,27 @@ impl Metrics {
             .entry(family.into().name().to_string())
             .or_default()
             .steps_executed += steps;
+    }
+
+    /// Grade one steps-to-halt prediction against the steps the
+    /// request actually executed.  The absolute error accumulates in
+    /// the family's lane; the snapshot surfaces it as
+    /// `prediction_mae_steps_<fam>` plus a fleet-wide
+    /// `prediction_mae_steps`.
+    pub fn record_prediction(
+        &mut self,
+        family: impl Into<FamilyId>,
+        predicted_steps: u64,
+        actual_steps: u64,
+    ) {
+        self.predictions_made += 1;
+        let lane = self
+            .per_family
+            .entry(family.into().name().to_string())
+            .or_default();
+        lane.prediction_err_steps +=
+            predicted_steps.abs_diff(actual_steps) as f64;
+        lane.predictions += 1;
     }
 
     /// Account one early halt attributed to a policy reason.
@@ -295,6 +331,8 @@ impl Metrics {
         self.rejected_invalid += other.rejected_invalid;
         self.cancelled += other.cancelled;
         self.deadline_exceeded += other.deadline_exceeded;
+        self.rejected_infeasible += other.rejected_infeasible;
+        self.predictions_made += other.predictions_made;
         self.slots_total += other.slots_total;
         self.slots_busy += other.slots_busy;
         self.steps_in_flight += other.steps_in_flight;
@@ -351,6 +389,11 @@ impl Metrics {
             ("rejected_invalid", Json::num(self.rejected_invalid as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
             ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
+            (
+                "rejected_infeasible",
+                Json::num(self.rejected_infeasible as f64),
+            ),
+            ("predictions_made", Json::num(self.predictions_made as f64)),
             ("slots_total", Json::num(self.slots_total as f64)),
             ("slots_busy", Json::num(self.slots_busy as f64)),
             ("steps_in_flight", Json::num(self.steps_in_flight as f64)),
@@ -412,6 +455,18 @@ impl Metrics {
                     Json::num(*n as f64),
                 );
             }
+            if fm.predictions > 0 {
+                m.insert(
+                    format!("prediction_mae_steps_{fam}"),
+                    Json::num(fm.prediction_err_steps / fm.predictions as f64),
+                );
+            }
+        }
+        let (err, n) = self.per_family.values().fold((0.0, 0u64), |(e, n), fm| {
+            (e + fm.prediction_err_steps, n + fm.predictions)
+        });
+        if n > 0 {
+            m.insert("prediction_mae_steps".to_string(), Json::num(err / n as f64));
         }
         Json::Obj(m)
     }
@@ -526,6 +581,8 @@ mod tests {
             queue_ms: 3.0,
             family: Some(Family::Ddlm.into()),
             final_stats: Default::default(),
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
         };
         m.record_completion(&worker, Priority::High, Family::Ddlm);
         assert_eq!(m.requests_completed, 2);
@@ -559,6 +616,8 @@ mod tests {
             queue_ms: 1.0,
             family: Some(fam.into()),
             final_stats: Default::default(),
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
         };
         m.record_completion(&resp(1, Family::Ddlm), Priority::Normal, Family::Ddlm);
         m.record_completion(&resp(2, Family::Ddlm), Priority::Normal, Family::Ddlm);
@@ -603,6 +662,8 @@ mod tests {
                     queue_ms: 0.5,
                     family: Some(fam.into()),
                     final_stats: Default::default(),
+                    predicted_steps_remaining: None,
+                    predicted_total_steps: None,
                 };
                 m.record_completion(&r, Priority::Normal, fam);
             }
@@ -646,6 +707,47 @@ mod tests {
         assert_eq!(a.latency_ms.count(), 2);
         assert_eq!(a.halted_by.get("entropy"), Some(&2));
         assert_eq!(a.halted_by.get("kl"), Some(&1));
+    }
+
+    #[test]
+    fn prediction_mae_lanes_flatten_into_json() {
+        let mut m = Metrics::default();
+        // no predictions yet → counter present at zero, no MAE keys
+        let j = m.to_json();
+        assert_eq!(
+            j.get("predictions_made").and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        assert_eq!(
+            j.get("rejected_infeasible").and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        assert!(j.get("prediction_mae_steps").is_none());
+        m.record_prediction(Family::Ddlm, 100, 90);
+        m.record_prediction(Family::Ddlm, 100, 110);
+        m.record_prediction(Family::Ssd, 50, 50);
+        let j = m.to_json();
+        let get = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        assert_eq!(get("predictions_made"), Some(3.0));
+        assert_eq!(get("prediction_mae_steps_ddlm"), Some(10.0));
+        assert_eq!(get("prediction_mae_steps_ssd"), Some(0.0));
+        let fleet = get("prediction_mae_steps").unwrap();
+        assert!((fleet - 20.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_folds_prediction_lanes() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.record_prediction(Family::Ddlm, 10, 14);
+        b.record_prediction(Family::Ddlm, 10, 6);
+        b.rejected_infeasible = 2;
+        a.merge(&b);
+        assert_eq!(a.predictions_made, 2);
+        assert_eq!(a.rejected_infeasible, 2);
+        let lane = a.per_family.get("ddlm").unwrap();
+        assert_eq!(lane.predictions, 2);
+        assert!((lane.prediction_err_steps - 8.0).abs() < 1e-9);
     }
 
     #[test]

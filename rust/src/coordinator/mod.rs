@@ -11,8 +11,10 @@
 //!   prefix or unserved family ⇒ `invalid_request`, in-flight id reuse
 //!   ⇒ `duplicate_id`, zero-step budgets answered without a worker),
 //!   the graceful client `halt` verb (finalize with the current
-//!   decode, `halt_reason:"client"`), and per-request progress
-//!   subscribers.
+//!   decode, `halt_reason:"client"`), per-request progress
+//!   subscribers, and the opt-in completeness-predictor hooks
+//!   (deadline-aware admission rejecting with `infeasible_deadline`,
+//!   SRPT slot packing) fed by [`crate::predictor::Estimator`].
 //! * [`worker`] — N worker shards, each an OS thread owning one PJRT
 //!   runtime and one batched `Session` (continuous batching with
 //!   early-exit slot recycling).  Shards may bind different compiled

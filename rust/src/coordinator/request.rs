@@ -244,6 +244,11 @@ pub struct ProgressEvent {
     /// `[B, L]` token download shared by every subscribed slot that
     /// step; `None` on frames from servers that don't
     pub tokens: Option<Vec<i32>>,
+    /// live steps-to-halt estimate from the fleet predictor (present
+    /// only when the engine runs with prediction enabled)
+    pub predicted_steps_remaining: Option<usize>,
+    /// `step + predicted_steps_remaining` at estimation time
+    pub predicted_total_steps: Option<usize>,
 }
 
 #[derive(Clone, Debug)]
@@ -261,6 +266,12 @@ pub struct GenResponse {
     /// model family that served the request (wire field `family`;
     /// absent on responses from pre-multi-family servers)
     pub family: Option<FamilyId>,
+    /// steps the predictor still expected at completion (0 on a clean
+    /// finish); present only when the engine predicts on the wire
+    pub predicted_steps_remaining: Option<usize>,
+    /// total steps the predictor expected at admission; compare with
+    /// `steps_executed` for the realized prediction error
+    pub predicted_total_steps: Option<usize>,
     pub final_stats: StepStats,
 }
 
@@ -282,6 +293,8 @@ impl GenResponse {
             latency_ms: 0.0,
             queue_ms: 0.0,
             family: req.family,
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
             final_stats: StepStats::default(),
         }
     }
@@ -314,6 +327,12 @@ impl GenResponse {
         }
         if let Some(f) = self.family {
             fields.push(("family", Json::str(f.name())));
+        }
+        if let Some(r) = self.predicted_steps_remaining {
+            fields.push(("predicted_steps_remaining", Json::uint(r as u64)));
+        }
+        if let Some(t) = self.predicted_total_steps {
+            fields.push(("predicted_total_steps", Json::uint(t as u64)));
         }
         Json::obj(fields)
     }
@@ -364,6 +383,12 @@ impl GenResponse {
                 .get("family")
                 .and_then(Json::as_str)
                 .and_then(registry::resolve),
+            predicted_steps_remaining: j
+                .get("predicted_steps_remaining")
+                .and_then(Json::as_usize),
+            predicted_total_steps: j
+                .get("predicted_total_steps")
+                .and_then(Json::as_usize),
             final_stats: StepStats {
                 entropy: j.get("entropy").and_then(Json::as_f64).unwrap_or(0.0)
                     as f32,
@@ -560,6 +585,8 @@ mod tests {
             latency_ms: 45.5,
             queue_ms: 1.25,
             family: Some(Family::Plaid.into()),
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
             final_stats: StepStats {
                 entropy: 0.5,
                 kl: 1e-4,
@@ -591,14 +618,34 @@ mod tests {
             latency_ms: 1.0,
             queue_ms: 0.0,
             family: None,
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
             final_stats: StepStats::default(),
         };
         let j = resp.to_json();
         assert!(j.get("halt_reason").is_none());
         assert!(j.get("family").is_none());
+        assert!(j.get("predicted_steps_remaining").is_none());
+        assert!(j.get("predicted_total_steps").is_none());
         let back = GenResponse::from_json(&j).unwrap();
         assert_eq!(back.halt_reason, None);
         assert_eq!(back.family, None);
+        assert_eq!(back.predicted_steps_remaining, None);
+        assert_eq!(back.predicted_total_steps, None);
+    }
+
+    #[test]
+    fn predicted_fields_roundtrip_when_present() {
+        let mut resp = GenResponse::immediate(&GenRequest::new(4, 80), None);
+        resp.steps_executed = 60;
+        resp.predicted_steps_remaining = Some(0);
+        resp.predicted_total_steps = Some(64);
+        let encoded = resp.to_json().encode();
+        assert!(encoded.contains(r#""predicted_total_steps":64"#), "{encoded}");
+        let back =
+            GenResponse::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(back.predicted_steps_remaining, Some(0));
+        assert_eq!(back.predicted_total_steps, Some(64));
     }
 
     #[test]

@@ -23,7 +23,18 @@
 //!   class; workers always drain higher classes first;
 //! * **deadlines** — a request carrying `deadline_ms` is dropped with
 //!   [`ServeError::DeadlineExceeded`] if it expires while queued (the
-//!   owning worker enforces the same deadline once it is running);
+//!   owning worker enforces the same deadline once it is running); with
+//!   the fleet predictor's admission gate on, a deadline that is
+//!   infeasible *up front* (predicted steps × observed per-step latency
+//!   exceeds it) is rejected at submit with the typed
+//!   [`ServeError::InfeasibleDeadline`] before any device work;
+//! * **predictive packing** — with the predictor's SRPT gate on,
+//!   `next_for` picks the same-priority candidate with the fewest
+//!   predicted remaining steps instead of strict FIFO (ties and
+//!   cold-start estimates keep submission order);
+//! * **per-family bounds** — optional per-family queue caps keep one
+//!   family's burst from consuming the whole shared queue; a full
+//!   family rejects with the typed [`ServeError::Overloaded`];
 //! * **cancellation** — [`Scheduler::cancel`] removes a queued request
 //!   immediately, or flags a running one so its worker aborts it between
 //!   device steps;
@@ -49,11 +60,12 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority, ProgressEvent};
+use crate::predictor::{check_feasibility, Estimator, Feasibility, PackingMode};
 use crate::sampler::{Family, FamilyId};
 
 /// Typed serving-path failure, delivered instead of a [`GenResponse`]
@@ -67,6 +79,10 @@ pub enum ServeError {
     Cancelled,
     /// `deadline_ms` elapsed before the request completed
     DeadlineExceeded,
+    /// the fleet predictor judged `deadline_ms` unmeetable at submit
+    /// (predicted steps × observed per-step latency exceeds it) —
+    /// rejected before any device work; raise the deadline or drop it
+    InfeasibleDeadline,
     /// no live worker is left to serve the queue (startup failure)
     Unavailable,
     /// the request can never be served by this fleet (e.g. its prefix
@@ -76,6 +92,10 @@ pub enum ServeError {
     /// another in-flight request already uses this id; ids key the
     /// cancellation routing, so they must be unique while live
     DuplicateId,
+    /// server-side failure while serving an otherwise-valid request;
+    /// the payload is a machine-readable detail (e.g.
+    /// `"token_download_failed"`) carried as the v1 error `message`
+    Internal(&'static str),
 }
 
 impl ServeError {
@@ -84,9 +104,20 @@ impl ServeError {
             ServeError::Overloaded => "overloaded",
             ServeError::Cancelled => "cancelled",
             ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::InfeasibleDeadline => "infeasible_deadline",
             ServeError::Unavailable => "unavailable",
             ServeError::InvalidRequest => "invalid_request",
             ServeError::DuplicateId => "duplicate_id",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// Machine-readable detail beyond the taxonomy code, when one
+    /// exists (today: the `internal` payload).
+    pub fn detail(self) -> Option<&'static str> {
+        match self {
+            ServeError::Internal(d) => Some(d),
+            _ => None,
         }
     }
 }
@@ -124,6 +155,10 @@ pub struct QueuedReq {
     pub submitted: Instant,
     /// absolute expiry computed from `req.deadline_ms` at submission
     pub deadline: Option<Instant>,
+    /// total steps the fleet predictor expected at admission (None when
+    /// the scheduler runs without a predictor) — drives SRPT packing
+    /// and, via the worker, the wire's `predicted_total_steps`
+    pub predicted_steps: Option<usize>,
 }
 
 impl QueuedReq {
@@ -132,6 +167,7 @@ impl QueuedReq {
         reply: ReplyTx,
         progress: Option<ProgressTx>,
         family: FamilyId,
+        predicted_steps: Option<usize>,
     ) -> QueuedReq {
         let submitted = Instant::now();
         let deadline = req
@@ -144,6 +180,7 @@ impl QueuedReq {
             family,
             submitted,
             deadline,
+            predicted_steps,
         }
     }
 }
@@ -237,6 +274,16 @@ struct State {
     shutdown: bool,
 }
 
+/// The scheduler's handle on the fleet predictor: the shared estimator
+/// plus which of its admission-side features are switched on.
+struct SchedPredictor {
+    est: Arc<Estimator>,
+    /// reject infeasible deadlines with `InfeasibleDeadline`
+    admission: bool,
+    /// queue-ordering discipline for `next_for`
+    packing: PackingMode,
+}
+
 pub struct Scheduler {
     state: Mutex<State>,
     work_ready: Condvar,
@@ -245,6 +292,13 @@ pub struct Scheduler {
     /// `queue_cap` only); a full class rejects with `overloaded`
     /// without starving the other classes
     class_caps: [usize; Priority::COUNT],
+    /// optional per-family queue caps (sparse; families not listed are
+    /// bounded only by `queue_cap`) — one family's burst can't consume
+    /// the whole shared queue
+    family_caps: Vec<(FamilyId, usize)>,
+    /// fleet predictor hookup (None = no prediction at admission; the
+    /// estimator has its own lock, consulted OUTSIDE the state mutex)
+    predictor: Option<SchedPredictor>,
     /// longest serveable conditioning prefix (the fleet's compiled
     /// seq_len); None = unknown, workers enforce it themselves
     max_prefix: Option<usize>,
@@ -286,6 +340,8 @@ impl Scheduler {
             work_ready: Condvar::new(),
             queue_cap,
             class_caps: [usize::MAX; Priority::COUNT],
+            family_caps: Vec::new(),
+            predictor: None,
             max_prefix: None,
             default_family,
             worker_family: worker_families,
@@ -319,6 +375,34 @@ impl Scheduler {
         caps: [usize; Priority::COUNT],
     ) -> Scheduler {
         self.class_caps = caps;
+        self
+    }
+
+    /// Per-family queue caps (sparse: `(family, cap)` pairs; families
+    /// not listed are unbounded beyond the shared `queue_cap`).  A
+    /// family at its cap rejects with a typed `overloaded` while other
+    /// families keep admitting — no head-of-line blocking across
+    /// families.
+    pub fn with_family_caps(
+        mut self,
+        caps: Vec<(FamilyId, usize)>,
+    ) -> Scheduler {
+        self.family_caps = caps;
+        self
+    }
+
+    /// Hook up the fleet predictor: `admission` turns on the
+    /// infeasible-deadline gate, `packing` picks the `next_for`
+    /// discipline.  The estimator is shared with the workers (they
+    /// feed it observations); it carries its own lock and is only ever
+    /// consulted outside the scheduler's state mutex.
+    pub fn with_predictor(
+        mut self,
+        est: Arc<Estimator>,
+        admission: bool,
+        packing: PackingMode,
+    ) -> Scheduler {
+        self.predictor = Some(SchedPredictor { est, admission, packing });
         self
     }
 
@@ -374,6 +458,25 @@ impl Scheduler {
         let immediate = pre.is_some() || req.n_steps == 0;
         let class = req.priority.index();
 
+        // predictor consults happen here, BEFORE the state lock: the
+        // estimator has its own mutex and the lock discipline (state
+        // mutex never nested with any other) must hold
+        let (predicted_steps, infeasible) = match &self.predictor {
+            Some(p) if !immediate => {
+                let predicted =
+                    Some(p.est.predict_total(family, req.n_steps).steps);
+                let infeasible = p.admission
+                    && req.deadline_ms.is_some_and(|d| {
+                        matches!(
+                            check_feasibility(&p.est, family, req.n_steps, d),
+                            Feasibility::Infeasible { .. }
+                        )
+                    });
+                (predicted, infeasible)
+            }
+            _ => (None, false),
+        };
+
         // admission verdict and enqueue under ONE lock acquisition: a
         // submit racing shutdown() or the last worker's exit must never
         // enqueue onto a fleet nobody will drain (the caller's recv()
@@ -402,13 +505,33 @@ impl Scheduler {
                 Admit::Reject(ServeError::DuplicateId)
             } else if immediate {
                 Admit::Immediate(req, reply)
+            } else if infeasible {
+                // predicted wall time exceeds the request's own
+                // deadline: reject up front instead of burning device
+                // steps on a guaranteed `deadline_exceeded`
+                Admit::Reject(ServeError::InfeasibleDeadline)
             } else if st.queued >= self.queue_cap
                 || st.queues[class].len() >= self.class_caps[class]
             {
                 Admit::Reject(ServeError::Overloaded)
+            } else if self
+                .family_caps
+                .iter()
+                .find(|(f, _)| *f == family)
+                .is_some_and(|&(_, cap)| {
+                    tab_get(&st.queued_by_family, family.index()) >= cap
+                })
+            {
+                Admit::Reject(ServeError::Overloaded)
             } else {
                 st.live_ids.insert(req.id);
-                let q = QueuedReq::new(req, reply, progress, family);
+                let q = QueuedReq::new(
+                    req,
+                    reply,
+                    progress,
+                    family,
+                    predicted_steps,
+                );
                 st.queues[class].push_back(q);
                 st.queued += 1;
                 tab_inc(&mut st.queued_by_family, family.index());
@@ -435,6 +558,9 @@ impl Scheduler {
                 let mut m = self.metrics.lock().unwrap();
                 match e {
                     ServeError::Overloaded => m.rejected_overloaded += 1,
+                    ServeError::InfeasibleDeadline => {
+                        m.rejected_infeasible += 1
+                    }
                     ServeError::DuplicateId | ServeError::InvalidRequest => {
                         m.rejected_invalid += 1
                     }
@@ -446,17 +572,29 @@ impl Scheduler {
     }
 
     /// Pop the next runnable request for `worker` (high before normal
-    /// before low, FIFO within a class, restricted to the worker's
-    /// family), answering and removing queued requests whose deadline
-    /// already expired along the way.
+    /// before low, FIFO within a class — or
+    /// shortest-predicted-remaining-first under SRPT packing,
+    /// restricted to the worker's family), answering and removing
+    /// queued requests whose deadline already expired along the way.
     pub fn next_for(&self, worker: usize) -> Option<QueuedReq> {
         let fam = self.family_of_worker(worker);
+        let srpt = self
+            .predictor
+            .as_ref()
+            .is_some_and(|p| p.packing == PackingMode::Srpt);
         let now = Instant::now();
         let mut expired: Vec<QueuedReq> = Vec::new();
         let picked = {
             let mut st = self.state.lock().unwrap();
             let mut picked = None;
             'scan: for pi in 0..Priority::COUNT {
+                // under SRPT, the whole class is scanned and the
+                // family match with the fewest predicted remaining
+                // steps wins (strict `<` keeps ties FIFO-stable);
+                // under FIFO the first match wins, as ever.  A request
+                // admitted without a prediction (predictor added
+                // mid-flight) counts its full budget.
+                let mut best: Option<(usize, usize)> = None;
                 let mut k = 0;
                 while k < st.queues[pi].len() {
                     if st.queues[pi][k].deadline.is_some_and(|d| now >= d) {
@@ -465,17 +603,35 @@ impl Scheduler {
                         tab_dec(&mut st.queued_by_family, q.family.index());
                         st.live_ids.remove(&q.req.id);
                         expired.push(q);
+                        // `best` indexes an earlier position (< k), so
+                        // this removal at k never shifts it
                         continue;
                     }
                     if st.queues[pi][k].family == fam {
-                        let q = st.queues[pi].remove(k).unwrap();
-                        st.queued -= 1;
-                        tab_dec(&mut st.queued_by_family, fam.index());
-                        st.running.insert(q.req.id, worker);
-                        picked = Some(q);
-                        break 'scan;
+                        if !srpt {
+                            best = Some((k, 0));
+                            break;
+                        }
+                        let q = &st.queues[pi][k];
+                        let pred =
+                            q.predicted_steps.unwrap_or(q.req.n_steps);
+                        let better = match best {
+                            None => true,
+                            Some((_, b)) => pred < b,
+                        };
+                        if better {
+                            best = Some((k, pred));
+                        }
                     }
                     k += 1;
+                }
+                if let Some((k, _)) = best {
+                    let q = st.queues[pi].remove(k).unwrap();
+                    st.queued -= 1;
+                    tab_dec(&mut st.queued_by_family, fam.index());
+                    st.running.insert(q.req.id, worker);
+                    picked = Some(q);
+                    break 'scan;
                 }
             }
             picked
@@ -1287,6 +1443,8 @@ mod tests {
             steps_budget: 100,
             stats: Default::default(),
             tokens: None,
+            predicted_steps_remaining: None,
+            predicted_total_steps: None,
         })
         .unwrap();
         let ev = prx.recv().unwrap();
@@ -1294,5 +1452,179 @@ mod tests {
         // dropping the sender ends the subscriber's stream
         drop(ptx);
         assert!(prx.recv().is_err());
+    }
+
+    /// Estimator trained to ~100 steps at ~2ms/step for ddlm.
+    fn trained_est() -> Arc<Estimator> {
+        let est = Arc::new(Estimator::new());
+        let fam: FamilyId = Family::Ddlm.into();
+        for _ in 0..30 {
+            est.observe_completion(fam, 100, &[]);
+            est.observe_step_latency(fam, 2.0);
+        }
+        est
+    }
+
+    #[test]
+    fn infeasible_deadline_rejected_when_admission_enabled() {
+        let s = sched(8, 1).with_predictor(
+            trained_est(),
+            true,
+            PackingMode::Fifo,
+        );
+        // ~100 steps × ~2ms = ~200ms predicted; a 50ms deadline can't
+        // be met — typed rejection before any queue slot or device work
+        let (tx, rx) = chan();
+        let mut r = req(1, 600);
+        r.deadline_ms = Some(50.0);
+        assert_eq!(s.submit(r, tx), Err(ServeError::InfeasibleDeadline));
+        assert!(rx.try_recv().is_err());
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.metrics.lock().unwrap().rejected_infeasible, 1);
+        // a roomy deadline admits, and carries its prediction along
+        let (tx2, _rx2) = chan();
+        let mut ok = req(2, 600);
+        ok.deadline_ms = Some(5_000.0);
+        assert!(s.submit(ok, tx2).is_ok());
+        assert_eq!(s.next_for(0).unwrap().predicted_steps, Some(100));
+        // no deadline = nothing to be infeasible against
+        let (tx3, _rx3) = chan();
+        assert!(s.submit(req(3, 600), tx3).is_ok());
+    }
+
+    #[test]
+    fn cold_start_estimator_admits_any_deadline() {
+        // no latency observations → feasibility is Unknown → admit
+        let s = sched(8, 1).with_predictor(
+            Arc::new(Estimator::new()),
+            true,
+            PackingMode::Fifo,
+        );
+        let (tx, _rx) = chan();
+        let mut r = req(1, 600);
+        r.deadline_ms = Some(1.0);
+        assert!(s.submit(r, tx).is_ok());
+        // cold-start prediction = the budget
+        assert_eq!(s.next_for(0).unwrap().predicted_steps, Some(600));
+    }
+
+    #[test]
+    fn admission_gate_off_never_rejects_infeasible() {
+        // predictor present (e.g. for SRPT) but the admission gate off:
+        // even a hopeless deadline is admitted
+        let s = sched(8, 1).with_predictor(
+            trained_est(),
+            false,
+            PackingMode::Fifo,
+        );
+        let (tx, _rx) = chan();
+        let mut r = req(1, 600);
+        r.deadline_ms = Some(1.0);
+        assert!(s.submit(r, tx).is_ok());
+        assert_eq!(s.metrics.lock().unwrap().rejected_infeasible, 0);
+    }
+
+    #[test]
+    fn srpt_orders_same_class_by_predicted_steps() {
+        // cold estimator: prediction = budget, so SRPT degrades to
+        // shortest-budget-first within the class
+        let s = sched(16, 1).with_predictor(
+            Arc::new(Estimator::new()),
+            false,
+            PackingMode::Srpt,
+        );
+        for (id, steps) in [(1, 300), (2, 50), (3, 100)] {
+            let (tx, _rx) = chan();
+            s.submit(req(id, steps), tx).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| s.next_for(0))
+            .map(|q| q.req.id)
+            .collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn srpt_never_reorders_across_priority_classes() {
+        let s = sched(16, 1).with_predictor(
+            Arc::new(Estimator::new()),
+            false,
+            PackingMode::Srpt,
+        );
+        // a huge high-priority request still outranks a tiny normal one
+        let mut big = req(1, 1000);
+        big.priority = Priority::High;
+        let (tx, _rx) = chan();
+        s.submit(big, tx).unwrap();
+        let (tx2, _rx2) = chan();
+        s.submit(req(2, 10), tx2).unwrap();
+        assert_eq!(s.next_for(0).unwrap().req.id, 1);
+        assert_eq!(s.next_for(0).unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn srpt_ties_keep_fifo_order() {
+        let s = sched(16, 1).with_predictor(
+            Arc::new(Estimator::new()),
+            false,
+            PackingMode::Srpt,
+        );
+        for id in [1u64, 2, 3] {
+            let (tx, _rx) = chan();
+            s.submit(req(id, 100), tx).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| s.next_for(0))
+            .map(|q| q.req.id)
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn fifo_default_ignores_predictions_entirely() {
+        // no predictor configured: submissions drain in FIFO order and
+        // carry no prediction
+        let s = sched(16, 1);
+        for (id, steps) in [(1, 300), (2, 50), (3, 100)] {
+            let (tx, _rx) = chan();
+            s.submit(req(id, steps), tx).unwrap();
+        }
+        let popped: Vec<QueuedReq> =
+            std::iter::from_fn(|| s.next_for(0)).collect();
+        let order: Vec<u64> = popped.iter().map(|q| q.req.id).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert!(popped.iter().all(|q| q.predicted_steps.is_none()));
+    }
+
+    #[test]
+    fn family_cap_rejects_full_family_without_blocking_others() {
+        let s = Scheduler::new(16, fleet(&[Family::Ddlm, Family::Ssd]))
+            .with_family_caps(vec![(Family::Ddlm.into(), 1)]);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 10), tx).unwrap(); // ddlm slot taken
+        // ddlm is at its cap: typed overload...
+        let (tx2, rx2) = chan();
+        assert_eq!(s.submit(req(2, 10), tx2), Err(ServeError::Overloaded));
+        assert!(rx2.try_recv().is_err());
+        assert_eq!(s.metrics.lock().unwrap().rejected_overloaded, 1);
+        // ...but ssd admission is untouched by ddlm's burst
+        let (tx3, _rx3) = chan();
+        let mut r3 = req(3, 10);
+        r3.family = Some(Family::Ssd.into());
+        assert!(s.submit(r3, tx3).is_ok());
+        // draining the ddlm queue frees its family slot again
+        assert_eq!(s.next_for(0).unwrap().req.id, 1);
+        let (tx4, _rx4) = chan();
+        assert!(s.submit(req(4, 10), tx4).is_ok());
+    }
+
+    #[test]
+    fn internal_error_carries_detail() {
+        let e = ServeError::Internal("token_download_failed");
+        assert_eq!(e.as_str(), "internal");
+        assert_eq!(e.detail(), Some("token_download_failed"));
+        assert_eq!(ServeError::Overloaded.detail(), None);
+        assert_eq!(
+            ServeError::InfeasibleDeadline.as_str(),
+            "infeasible_deadline"
+        );
     }
 }

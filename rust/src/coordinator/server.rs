@@ -20,24 +20,31 @@
 //!
 //! Typed serving errors (`overloaded`, `cancelled`,
 //! `deadline_exceeded`, `unavailable`, `invalid_request`,
-//! `duplicate_id`) come back as `{"id":N,"error":CODE}` on the legacy
-//! path and as `error` frames on v1.  A legacy request line that fails
-//! validation answers `{"error":"invalid_request","message":...}`
-//! (plus `"id"` when one was parseable); malformed JSON answers
-//! `{"error":"parse: ..."}`.
+//! `duplicate_id`, `infeasible_deadline`, `internal`) come back as
+//! `{"id":N,"error":CODE}` on the legacy path and as `error` frames on
+//! v1; errors carrying a machine-readable detail (e.g. `internal` /
+//! `"token_download_failed"`) put it in `message`.  A legacy request
+//! line that fails validation answers
+//! `{"error":"invalid_request","message":...}` (plus `"id"` when one
+//! was parseable); malformed JSON answers `{"error":"parse: ..."}`.
 //!
 //! Each connection gets a reader thread (this handler) plus one writer
 //! thread draining an mpsc channel — the multiplexing point where
 //! legacy replies, v1 acks and per-request streaming forwarders all
 //! meet.  Legacy lines are still handled synchronously in arrival
 //! order; v1 submits spawn a forwarder thread so many requests stream
-//! concurrently on one connection.  `Server::stop()` (or drop) closes
-//! the listener and joins the accept thread.
+//! concurrently on one connection.  A dropped connection cancels the
+//! v1 requests it still has in flight — streamed ones when their next
+//! progress frame fails to write, every one (streamed or not) when the
+//! reader sees the disconnect — so a dead client never burns the rest
+//! of its step budget.  `Server::stop()` (or drop) closes the listener
+//! and joins the accept thread.
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
@@ -139,6 +146,11 @@ impl Drop for Server {
 /// interleave bytes mid-line.
 type ConnTx = mpsc::Sender<String>;
 
+/// v1 request ids this connection submitted whose terminal frame has
+/// not been relayed yet; drained with `engine.cancel` when the reader
+/// observes the disconnect (see `handle_conn`).
+type Inflight = Arc<Mutex<HashSet<u64>>>;
+
 fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let (tx, rx) = mpsc::channel::<String>();
@@ -157,8 +169,16 @@ fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
         }
     });
     let reader = BufReader::new(stream);
+    let inflight: Inflight = Arc::new(Mutex::new(HashSet::new()));
+    let mut read_err = None;
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                read_err = Some(e);
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -171,7 +191,7 @@ fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
                 }
             }
             Ok(j) if envelope::is_envelope(&j) => {
-                handle_frame(&j, &engine, &tx);
+                handle_frame(&j, &engine, &tx, &inflight);
             }
             Ok(j) => {
                 // legacy one-shot path: synchronous, arrival order
@@ -182,13 +202,31 @@ fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
             }
         }
     }
-    Ok(())
+    // the client disconnected (EOF or error): nobody can ever read the
+    // decodes of — or halt — the v1 requests still in flight on this
+    // connection, so cancel them instead of burning their remaining
+    // step budgets (each counts toward the `cancelled` metric).  Ids
+    // whose reply raced the disconnect are already out of the set, and
+    // a cancel of an already-finished id is a typed no-op.
+    let stale: Vec<u64> = inflight.lock().unwrap().drain().collect();
+    for id in stale {
+        engine.cancel(id);
+    }
+    match read_err {
+        Some(e) => Err(e.into()),
+        None => Ok(()),
+    }
 }
 
 /// Dispatch one v1 envelope frame.  Control verbs answer inline;
 /// submits spawn a forwarder thread that streams the request's progress
 /// events and terminal frame to the connection writer.
-fn handle_frame(j: &Json, engine: &EngineHandle, tx: &ConnTx) {
+fn handle_frame(
+    j: &Json,
+    engine: &EngineHandle,
+    tx: &ConnTx,
+    inflight: &Inflight,
+) {
     let cmd = match Command::from_json(j) {
         Ok(cmd) => cmd,
         Err(e) => {
@@ -228,10 +266,14 @@ fn handle_frame(j: &Json, engine: &EngineHandle, tx: &ConnTx) {
             let id = req.id;
             let wants_progress = req.progress_every.is_some();
             let (prog_tx, prog_rx) = mpsc::channel();
+            // register BEFORE submitting so a disconnect racing the
+            // submit still finds the id in the set
+            inflight.lock().unwrap().insert(id);
             let reply_rx = engine
                 .submit_with_progress(*req, wants_progress.then_some(prog_tx));
             let tx = tx.clone();
             let engine = engine.clone();
+            let inflight = inflight.clone();
             // one forwarder per streamed request: drains progress until
             // the request drops its sender (end of stream), then relays
             // the terminal outcome — so within one request, progress
@@ -249,12 +291,14 @@ fn handle_frame(j: &Json, engine: &EngineHandle, tx: &ConnTx) {
                         break;
                     }
                 }
-                let frame = match reply_rx.recv() {
+                let outcome = reply_rx.recv();
+                inflight.lock().unwrap().remove(&id);
+                let frame = match outcome {
                     Ok(Ok(resp)) => Event::Done(resp),
                     Ok(Err(serve_err)) => Event::Error {
                         id: Some(id),
                         code: serve_err.as_str().to_string(),
-                        message: None,
+                        message: serve_err.detail().map(str::to_string),
                     },
                     Err(_) => Event::Error {
                         id: Some(id),
@@ -305,10 +349,16 @@ fn handle_line(j: &Json, engine: &EngineHandle) -> Json {
                 let id = req.id;
                 match engine.submit(req).recv() {
                     Ok(Ok(resp)) => resp.to_json(),
-                    Ok(Err(serve_err)) => Json::obj(vec![
-                        ("id", Json::uint(id)),
-                        ("error", Json::str(serve_err.as_str())),
-                    ]),
+                    Ok(Err(serve_err)) => {
+                        let mut fields = vec![
+                            ("id", Json::uint(id)),
+                            ("error", Json::str(serve_err.as_str())),
+                        ];
+                        if let Some(d) = serve_err.detail() {
+                            fields.push(("message", Json::str(d)));
+                        }
+                        Json::obj(fields)
+                    }
                     Err(_) => Json::obj(vec![(
                         "error",
                         Json::str("engine: reply channel closed"),

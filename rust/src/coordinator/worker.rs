@@ -40,6 +40,7 @@ use super::scheduler::{Flagged, IdleWait, QueuedReq, Scheduler, ServeError};
 use crate::halting::{BoxedPolicy, NoHalt};
 use crate::log_info;
 use crate::models::store::ParamStore;
+use crate::predictor::{bucket_for, Estimator, N_BUCKETS};
 use crate::runtime::Runtime;
 use crate::sampler::{FamilyId, Session, SlotRequest};
 
@@ -55,6 +56,13 @@ pub struct WorkerConfig {
     /// per-family override)
     pub t_max: f32,
     pub t_min: f32,
+    /// shared fleet estimator: this worker feeds it per-step latency
+    /// and per-completion halt-step observations, and reads live
+    /// remaining-steps estimates from it (None = no predictor)
+    pub predictor: Option<Arc<Estimator>>,
+    /// emit `predicted_steps_remaining` / `predicted_total_steps` on
+    /// progress and done frames (the wire-visible predictor gate)
+    pub predict_wire: bool,
 }
 
 struct Running {
@@ -63,6 +71,11 @@ struct Running {
     /// admission; the request keeps the pristine copy for its spec)
     policy: BoxedPolicy,
     started: Instant,
+    /// step at which this generation *first* entered each entropy
+    /// bucket — the estimator's conditioned-EMA training signal
+    bucket_entry: [Option<usize>; N_BUCKETS],
+    /// latest live re-estimate `(remaining, total)` for the wire
+    last_prediction: Option<(usize, usize)>,
 }
 
 /// Spawn the worker thread.  It exits when the scheduler reports
@@ -197,6 +210,8 @@ fn step_loop(
                 running[slot] = Some(Running {
                     policy: Box::new(NoHalt),
                     started: Instant::now(),
+                    bucket_entry: [None; N_BUCKETS],
+                    last_prediction: None,
                     q,
                 });
                 let r = running[slot].as_mut().unwrap();
@@ -296,9 +311,21 @@ fn step_loop(
                     // one completion bookkeeping path
                     let r = running[slot].take().unwrap();
                     let steps = session.slots[slot].step;
+                    let tokens = session.slot_output(slot);
+                    if let Some(e) = session.take_deferred_err() {
+                        // the lazy decode download failed: this
+                        // completion has no trustworthy tokens — fail
+                        // THIS request with a typed internal error
+                        // instead of poisoning the whole batch at the
+                        // next step()
+                        abort_download_failed(
+                            cfg, sched, metrics, session, slot, r, steps, &e,
+                        );
+                        continue;
+                    }
                     let resp = GenResponse {
                         id: r.q.req.id,
-                        tokens: session.slot_output(slot),
+                        tokens,
                         steps_executed: steps,
                         steps_budget: r.q.req.n_steps,
                         halted_early: true,
@@ -307,8 +334,25 @@ fn step_loop(
                         queue_ms: (r.started - r.q.submitted).as_secs_f64()
                             * 1e3,
                         family: Some(cfg.family),
+                        predicted_steps_remaining: if cfg.predict_wire {
+                            r.last_prediction.map(|(rem, _)| rem)
+                        } else {
+                            None
+                        },
+                        predicted_total_steps: if cfg.predict_wire {
+                            r.q.predicted_steps
+                        } else {
+                            None
+                        },
                         final_stats: session.slots[slot].last_stats,
                     };
+                    if let Some(est) = &cfg.predictor {
+                        est.observe_completion(
+                            cfg.family,
+                            steps,
+                            &visited_buckets(&r.bucket_entry),
+                        );
+                    }
                     sched.finish(resp.id);
                     metrics.lock().unwrap().record_completion(
                         &resp,
@@ -327,6 +371,7 @@ fn step_loop(
         let stepped = running.iter().any(Option::is_some);
         let mut done: Vec<(GenResponse, Running)> = Vec::new();
         if stepped {
+            let step_started = Instant::now();
             let stats = match session.step() {
                 Ok(stats) => stats,
                 Err(e) => {
@@ -341,12 +386,40 @@ fn step_loop(
                     return Err(e);
                 }
             };
+            // the batched step latency is the admission gate's
+            // wall-time basis: one observation per device call
+            if let Some(est) = &cfg.predictor {
+                est.observe_step_latency(
+                    cfg.family,
+                    step_started.elapsed().as_secs_f64() * 1e3,
+                );
+            }
             for slot in 0..batch {
                 let Some(st) = stats[slot] else { continue };
                 let Some(r) = running[slot].as_mut() else { continue };
                 let executed = session.slots[slot].step;
                 let decision = r.policy.observe(executed - 1, &st);
                 let exhausted = session.slot_exhausted(slot);
+                // predictor plumbing: remember when this generation
+                // first entered each entropy bucket (the estimator's
+                // training signal), and — when prediction is on the
+                // wire — refresh the live remaining-steps estimate
+                if let Some(est) = &cfg.predictor {
+                    let b = bucket_for(&st);
+                    if r.bucket_entry[b].is_none() {
+                        r.bucket_entry[b] = Some(executed);
+                    }
+                    if cfg.predict_wire {
+                        let p = est.predict_remaining(
+                            cfg.family,
+                            &st,
+                            executed,
+                            r.q.req.n_steps,
+                        );
+                        r.last_prediction =
+                            Some((p.steps, executed + p.steps));
+                    }
+                }
                 // throttled progress fan-out: subscribed requests get
                 // the paper's completeness estimates — and the current
                 // decode (one lazy [B,L] token download shared by every
@@ -355,37 +428,70 @@ fn step_loop(
                 // done frame instead).  A dead subscriber is dropped on
                 // the first failed send so the hot loop never retries
                 // into a closed channel.
+                let mut download_err: Option<String> = None;
                 if !(decision.halted() || exhausted) {
                     let every = r.q.req.progress_every.unwrap_or(0);
                     if every > 0
                         && executed % every == 0
                         && r.q.progress.is_some()
                     {
-                        let ev = ProgressEvent {
-                            id: r.q.req.id,
-                            step: executed,
-                            steps_budget: r.q.req.n_steps,
-                            stats: st,
-                            tokens: Some(session.slot_output(slot)),
-                        };
-                        let dead = r
-                            .q
-                            .progress
-                            .as_ref()
-                            .is_some_and(|ptx| ptx.send(ev).is_err());
-                        if dead {
-                            r.q.progress = None;
+                        let toks = session.slot_output(slot);
+                        match session.take_deferred_err() {
+                            Some(e) => download_err = Some(e),
+                            None => {
+                                let ev = ProgressEvent {
+                                    id: r.q.req.id,
+                                    step: executed,
+                                    steps_budget: r.q.req.n_steps,
+                                    stats: st,
+                                    tokens: Some(toks),
+                                    predicted_steps_remaining: r
+                                        .last_prediction
+                                        .map(|(rem, _)| rem),
+                                    predicted_total_steps: r
+                                        .last_prediction
+                                        .map(|(_, tot)| tot),
+                                };
+                                let dead =
+                                    r.q.progress.as_ref().is_some_and(
+                                        |ptx| ptx.send(ev).is_err(),
+                                    );
+                                if dead {
+                                    r.q.progress = None;
+                                }
+                            }
                         }
                     }
+                }
+                if let Some(e) = download_err {
+                    // the lazy decode download behind this request's
+                    // progress stream failed: answer THIS request with
+                    // a typed internal error (wire code `internal`,
+                    // detail `token_download_failed`) instead of
+                    // serving it a stale decode or failing the whole
+                    // batch at the next step()
+                    let r = running[slot].take().unwrap();
+                    abort_download_failed(
+                        cfg, sched, metrics, session, slot, r, executed, &e,
+                    );
+                    continue;
                 }
                 if decision.halted() || exhausted {
                     let r = running[slot].take().unwrap();
                     let halted_early = decision.halted() && !exhausted;
+                    // lazy token fetch: on the resident session path
+                    // this is the step's one [B,L] download
+                    let tokens = session.slot_output(slot);
+                    if let Some(e) = session.take_deferred_err() {
+                        abort_download_failed(
+                            cfg, sched, metrics, session, slot, r, executed,
+                            &e,
+                        );
+                        continue;
+                    }
                     let resp = GenResponse {
                         id: r.q.req.id,
-                        // lazy token fetch: on the resident session
-                        // path this is the step's one [B,L] download
-                        tokens: session.slot_output(slot),
+                        tokens,
                         steps_executed: executed,
                         steps_budget: r.q.req.n_steps,
                         halted_early,
@@ -398,8 +504,28 @@ fn step_loop(
                         queue_ms: (r.started - r.q.submitted).as_secs_f64()
                             * 1e3,
                         family: Some(cfg.family),
+                        predicted_steps_remaining: if cfg.predict_wire {
+                            r.last_prediction.map(|(rem, _)| rem)
+                        } else {
+                            None
+                        },
+                        predicted_total_steps: if cfg.predict_wire {
+                            r.q.predicted_steps
+                        } else {
+                            None
+                        },
                         final_stats: st,
                     };
+                    // every natural completion trains the estimator:
+                    // total halt-steps plus the per-bucket first-entry
+                    // steps this generation recorded along the way
+                    if let Some(est) = &cfg.predictor {
+                        est.observe_completion(
+                            cfg.family,
+                            executed,
+                            &visited_buckets(&r.bucket_entry),
+                        );
+                    }
                     sched.finish(resp.id);
                     session.release_slot(slot);
                     done.push((resp, r));
@@ -417,6 +543,17 @@ fn step_loop(
             }
             for (resp, r) in &done {
                 wm.record_completion(resp, r.q.req.priority, cfg.family);
+                // realized prediction error for the admission-time
+                // estimate (MAE lane; natural completions only — a
+                // client halt would grade the predictor on the
+                // client's timing, not the halting signal's)
+                if let Some(pred) = r.q.predicted_steps {
+                    wm.record_prediction(
+                        cfg.family,
+                        pred as u64,
+                        resp.steps_executed as u64,
+                    );
+                }
             }
             wm.slots_busy =
                 running.iter().filter(|r| r.is_some()).count() as u64;
@@ -436,4 +573,51 @@ fn step_loop(
         }
     }
     Ok(())
+}
+
+/// The estimator's training signal from one finished slot: every
+/// entropy bucket the generation visited, with the step it first
+/// entered it at.
+fn visited_buckets(entry: &[Option<usize>; N_BUCKETS]) -> Vec<(usize, usize)> {
+    entry
+        .iter()
+        .enumerate()
+        .filter_map(|(b, s)| s.map(|s| (b, s)))
+        .collect()
+}
+
+/// Fail one request whose lazy decode download died: typed `internal`
+/// error with detail `token_download_failed` to the submitter, steps
+/// burned recorded, slot released.  `release_slot` may re-arm the
+/// session's deferred error (it snapshots the decode again); that
+/// re-arm is drained too — this slot's failure has been surfaced on
+/// the affected request, it must not also poison the whole batch at
+/// the next `step()`.
+#[allow(clippy::too_many_arguments)]
+fn abort_download_failed(
+    cfg: &WorkerConfig,
+    sched: &Scheduler,
+    metrics: &Mutex<Metrics>,
+    session: &mut Session,
+    slot: usize,
+    r: Running,
+    steps: usize,
+    err: &str,
+) {
+    log_info!(
+        "worker {}: token download failed for request {} ({err})",
+        cfg.id,
+        r.q.req.id
+    );
+    sched.finish(r.q.req.id);
+    metrics
+        .lock()
+        .unwrap()
+        .record_aborted_steps(cfg.family, steps as u64);
+    session.release_slot(slot);
+    let _ = session.take_deferred_err();
+    let _ = r
+        .q
+        .reply
+        .send(Err(ServeError::Internal("token_download_failed")));
 }

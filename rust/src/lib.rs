@@ -11,6 +11,7 @@ pub mod halting;
 pub mod eval;
 pub mod exp;
 pub mod models;
+pub mod predictor;
 pub mod runtime;
 pub mod sampler;
 pub mod train;

@@ -20,6 +20,7 @@ use repro::corpus::dataset::Masking;
 use repro::exp;
 use repro::halting::{parse_policy, BoxedPolicy, HaltPolicy, NoHalt};
 use repro::models::store::ParamStore;
+use repro::predictor::PackingMode;
 use repro::runtime::Runtime;
 use repro::coordinator::Priority;
 use repro::sampler::registry;
@@ -75,6 +76,9 @@ fn print_help() {
          \u{20}        [--workers 1] [--queue-depth 256]\n\
          \u{20}        [--fleet fam:batch,fam:batch,...]\n\
          \u{20}        [--schedule fam:tmax:tmin,...]\n\
+         \u{20}        [--family-queue-depth fam:N,...]\n\
+         \u{20}        [--predictor] [--admission-control]\n\
+         \u{20}        [--packing fifo|srpt]\n\
          \u{20}        (one worker per fleet entry — mixed families are\n\
          \u{20}        routed per request; without --fleet, N identical\n\
          \u{20}        workers of --family; bounded admission queue\n\
@@ -82,7 +86,11 @@ fn print_help() {
          \u{20}        wire supports priority, deadline_ms, family and\n\
          \u{20}        {{\"cmd\":\"cancel\",\"id\":..}}; v1 envelope frames\n\
          \u{20}        ({{\"v\":1,\"type\":...}}) add streamed progress\n\
-         \u{20}        events and the graceful halt verb — see API.md)\n\
+         \u{20}        events and the graceful halt verb; --predictor\n\
+         \u{20}        streams predicted_steps_remaining on v1 frames,\n\
+         \u{20}        --admission-control rejects infeasible deadlines\n\
+         \u{20}        with typed 'infeasible_deadline', --packing srpt\n\
+         \u{20}        runs shortest-predicted work first — see API.md)\n\
          client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
          \u{20}        [--priority high|normal|low] [--deadline-ms MS]\n\
          \u{20}        [--family {fams}] [--progress-every K]\n\
@@ -320,6 +328,34 @@ fn parse_fleet(
     Ok(out)
 }
 
+/// Parse a `--family-queue-depth` spec: comma-separated `family:N`
+/// entries bounding each family's share of the admission queue (a full
+/// family rejects with typed `overloaded` without blocking the rest).
+fn parse_family_queue_bounds(
+    spec: &str,
+) -> Result<Vec<(FamilyId, usize)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').filter(|e| !e.is_empty()) {
+        let Some((fam_str, depth)) = entry.split_once(':') else {
+            anyhow::bail!(
+                "bad --family-queue-depth entry {entry:?} (want family:N)"
+            );
+        };
+        let fam = registry::resolve(fam_str).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown family in --family-queue-depth entry {entry:?}"
+            )
+        })?;
+        let depth = depth.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!(
+                "bad depth in --family-queue-depth entry {entry:?}"
+            )
+        })?;
+        out.push((fam, depth));
+    }
+    Ok(out)
+}
+
 /// Parse a `--schedule` spec: comma-separated `family:tmax:tmin`
 /// entries overriding the fleet-wide schedule envelope per family
 /// (surfaced to clients under `"families"` in the metrics snapshot).
@@ -382,6 +418,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(spec) = args.get("schedule") {
         cfg.schedule_overrides = parse_schedule_overrides(spec)?;
     }
+    if let Some(spec) = args.get("family-queue-depth") {
+        cfg.family_queue_bounds = parse_family_queue_bounds(spec)?;
+    }
+    // completeness-predictor gates (each independent, all default off):
+    // --predictor puts predicted_steps_remaining / predicted_total_steps
+    // on v1 frames, --admission-control rejects infeasible deadlines,
+    // --packing srpt orders same-priority work shortest-predicted-first
+    cfg.predictor.enabled = args.flag("predictor");
+    cfg.predictor.admission = args.flag("admission-control");
+    if let Some(p) = args.get("packing") {
+        cfg.predictor.packing = PackingMode::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("bad --packing {p} (fifo|srpt)"))?;
+    }
     cfg.discover_checkpoints(&runs);
     let shards = cfg
         .worker_specs
@@ -390,11 +439,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect::<Vec<_>>()
         .join(", ");
     let default_family = cfg.default_family;
+    let predictor_note = if cfg.predictor.active() {
+        format!(
+            ", predictor[wire:{} admission:{} packing:{}]",
+            cfg.predictor.enabled,
+            cfg.predictor.admission,
+            cfg.predictor.packing.name()
+        )
+    } else {
+        String::new()
+    };
     let (engine, join) = start(cfg);
     let addr = args.get_or("addr", "127.0.0.1:7411");
     let mut server = Server::start(addr, engine)?;
     println!(
-        "serving [{shards}] on {} (default family {})",
+        "serving [{shards}] on {} (default family {}{predictor_note})",
         server.addr,
         default_family.name()
     );

@@ -1,0 +1,104 @@
+//! Deadline feasibility check for admission control.
+//!
+//! At submit time the scheduler knows three things: the request's
+//! `deadline_ms`, its step budget, and (via the shared
+//! [`Estimator`]) how many steps requests of this family actually
+//! take and how long one batched device step costs.  Multiplying the
+//! two estimates gives a predicted wall time; a deadline the fleet
+//! cannot possibly meet is rejected up front with a typed
+//! `infeasible_deadline` error instead of burning device steps on a
+//! request whose submitter will see `deadline_exceeded` anyway.
+//!
+//! The check is deliberately conservative about cold starts: with no
+//! observed per-step latency there is no basis for a wall-time
+//! estimate, so the verdict is [`Feasibility::Unknown`] and the
+//! request is admitted.  (Steps-side cold start is fine — the budget
+//! upper-bounds the step count, making the estimate pessimistic, and
+//! a pessimistic estimate that still fits the deadline is safe to
+//! admit.)  Queue wait is intentionally NOT modelled: admission
+//! rejects only deadlines that are infeasible even on an idle fleet,
+//! leaving queue-induced misses to the existing expiry sweep.
+
+use crate::sampler::FamilyId;
+
+use super::estimator::Estimator;
+
+/// Verdict of the admission-time deadline check.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Feasibility {
+    /// predicted wall time fits inside the deadline
+    Feasible,
+    /// predicted wall time exceeds the deadline — reject
+    Infeasible {
+        /// predicted wall time (ms) that exceeded the deadline
+        predicted_ms: f64,
+    },
+    /// no latency data yet for this family — admit (cold start)
+    Unknown,
+}
+
+/// Check whether `deadline_ms` is feasible for a request of `family`
+/// with step budget `budget`.
+pub fn check(
+    est: &Estimator,
+    family: FamilyId,
+    budget: usize,
+    deadline_ms: f64,
+) -> Feasibility {
+    let Some(per_step_ms) = est.step_latency_ms(family) else {
+        return Feasibility::Unknown;
+    };
+    let steps = est.predict_total(family, budget).steps;
+    let predicted_ms = steps as f64 * per_step_ms;
+    if predicted_ms > deadline_ms {
+        Feasibility::Infeasible { predicted_ms }
+    } else {
+        Feasibility::Feasible
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::registry;
+
+    fn fam() -> FamilyId {
+        registry::resolve("ddlm").unwrap()
+    }
+
+    #[test]
+    fn cold_start_is_unknown() {
+        let est = Estimator::new();
+        assert_eq!(check(&est, fam(), 600, 1.0), Feasibility::Unknown);
+    }
+
+    #[test]
+    fn trained_estimator_splits_feasible_from_infeasible() {
+        let est = Estimator::new();
+        for _ in 0..20 {
+            est.observe_completion(fam(), 100, &[]);
+            est.observe_step_latency(fam(), 2.0);
+        }
+        // ~100 steps × ~2ms = ~200ms predicted
+        assert_eq!(check(&est, fam(), 600, 1_000.0), Feasibility::Feasible);
+        match check(&est, fam(), 600, 50.0) {
+            Feasibility::Infeasible { predicted_ms } => {
+                assert!(predicted_ms > 150.0 && predicted_ms < 250.0);
+            }
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn steps_cold_start_uses_budget_pessimistically() {
+        let est = Estimator::new();
+        // latency known, steps unknown → budget upper-bounds steps
+        est.observe_step_latency(fam(), 10.0);
+        // 600-step budget × 10ms = 6000ms predicted
+        assert!(matches!(
+            check(&est, fam(), 600, 1_000.0),
+            Feasibility::Infeasible { .. }
+        ));
+        assert_eq!(check(&est, fam(), 600, 10_000.0), Feasibility::Feasible);
+    }
+}

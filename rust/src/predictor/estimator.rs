@@ -1,0 +1,413 @@
+//! Online steps-to-halt estimator.
+//!
+//! The paper's halting criteria watch a convergence signal (entropy /
+//! KL trajectory) and stop once it crosses a threshold.  The same
+//! signal is *predictive* long before the halt fires: a generation
+//! whose entropy has already collapsed will halt soon, one still at
+//! high entropy will not.  This module turns that observation into a
+//! cheap per-family estimator — an EMA of observed halt-steps,
+//! conditioned on the current entropy bucket — that the scheduler and
+//! workers can consult in O(1) with no device work.
+//!
+//! Two kinds of estimate:
+//!
+//! - [`Estimator::predict_total`] — before any steps have run, how
+//!   many steps will this request take?  (Unconditional per-family
+//!   EMA; cold start falls back to the schedule budget.)
+//! - [`Estimator::predict_remaining`] — a slot is at step `s` with
+//!   stats `st`; how many more steps?  (Bucket-conditioned EMA of
+//!   "steps remaining when a completion first entered this bucket";
+//!   falls back to the unconditional estimate, then the budget.)
+//!
+//! All state lives behind one `Mutex` so the estimator can be shared
+//! (`Arc<Estimator>`) between the scheduler (admission-time reads) and
+//! every worker (per-step reads, per-completion writes) without
+//! touching the scheduler's state lock or any metrics lock.
+
+use std::sync::Mutex;
+
+use crate::halting::StepStats;
+use crate::sampler::FamilyId;
+use crate::util::json::Json;
+
+/// Number of entropy buckets the remaining-steps estimate is
+/// conditioned on.
+pub const N_BUCKETS: usize = 8;
+
+/// Geometric entropy ladder: bucket 0 is "converged" (entropy below
+/// 0.02 nats/token), bucket 7 is "still noise".  Entropy is the
+/// paper's primary completeness signal and is always populated in
+/// [`StepStats`], unlike KL slope which needs a window.
+const BUCKET_EDGES: [f32; N_BUCKETS - 1] =
+    [0.02, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6];
+
+/// Map per-step stats to the entropy bucket they fall in.
+pub fn bucket_for(stats: &StepStats) -> usize {
+    let e = stats.entropy;
+    for (i, edge) in BUCKET_EDGES.iter().enumerate() {
+        if e < *edge {
+            return i;
+        }
+    }
+    N_BUCKETS - 1
+}
+
+/// Exponential moving average that knows whether it has ever observed
+/// anything (cold start must be distinguishable from "EMA happens to
+/// be zero").
+#[derive(Clone, Debug, Default)]
+struct Ema {
+    value: f64,
+    n: u64,
+}
+
+impl Ema {
+    fn observe(&mut self, v: f64, alpha: f64) {
+        if self.n == 0 {
+            self.value = v;
+        } else {
+            self.value += alpha * (v - self.value);
+        }
+        self.n += 1;
+    }
+
+    fn get(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.value)
+    }
+}
+
+/// Per-family estimator state.
+#[derive(Clone, Debug)]
+struct FamilyEntry {
+    /// family display name, captured at first touch (for snapshots)
+    name: String,
+    /// unconditional EMA of total steps-to-halt
+    total_steps: Ema,
+    /// EMA of steps-remaining at first entry into each entropy bucket
+    remaining_by_bucket: Vec<Ema>,
+    /// EMA of observed per-step device latency (batched step, ms)
+    step_latency_ms: Ema,
+    /// completions observed (same as `total_steps.n`, kept explicit)
+    completions: u64,
+}
+
+impl FamilyEntry {
+    fn new(name: String) -> FamilyEntry {
+        FamilyEntry {
+            name,
+            total_steps: Ema::default(),
+            remaining_by_bucket: vec![Ema::default(); N_BUCKETS],
+            step_latency_ms: Ema::default(),
+            completions: 0,
+        }
+    }
+}
+
+/// A steps estimate plus whether it came from observed data or is the
+/// cold-start budget fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Prediction {
+    /// predicted number of steps (total or remaining, per call)
+    pub steps: usize,
+    /// true when backed by at least one observed completion; false
+    /// when it is just the schedule budget echoed back
+    pub informed: bool,
+}
+
+/// Shared online steps-to-halt estimator (see module docs).
+#[derive(Debug)]
+pub struct Estimator {
+    /// indexed by `FamilyId::index()`, grown on demand
+    inner: Mutex<Vec<Option<FamilyEntry>>>,
+    alpha: f64,
+}
+
+impl Default for Estimator {
+    fn default() -> Estimator {
+        Estimator::new()
+    }
+}
+
+impl Estimator {
+    /// Default smoothing (alpha 0.2): ~5 recent completions dominate,
+    /// fast enough to track workload shifts, slow enough not to chase
+    /// one outlier.
+    pub fn new() -> Estimator {
+        Estimator::with_alpha(0.2)
+    }
+
+    pub fn with_alpha(alpha: f64) -> Estimator {
+        Estimator { inner: Mutex::new(Vec::new()), alpha }
+    }
+
+    fn with_entry<R>(
+        &self,
+        family: FamilyId,
+        f: impl FnOnce(&mut FamilyEntry, f64) -> R,
+    ) -> R {
+        let mut g = self.inner.lock().unwrap();
+        let idx = family.index();
+        if g.len() <= idx {
+            g.resize(idx + 1, None);
+        }
+        let entry = g[idx]
+            .get_or_insert_with(|| FamilyEntry::new(family.name().to_string()));
+        f(entry, self.alpha)
+    }
+
+    fn read_entry<R>(
+        &self,
+        family: FamilyId,
+        f: impl FnOnce(&FamilyEntry) -> R,
+    ) -> Option<R> {
+        let g = self.inner.lock().unwrap();
+        g.get(family.index()).and_then(|e| e.as_ref()).map(f)
+    }
+
+    /// Predict the total steps a fresh request will take, clamped to
+    /// its schedule budget.  Cold start echoes the budget.
+    pub fn predict_total(&self, family: FamilyId, budget: usize) -> Prediction {
+        let ema = self
+            .read_entry(family, |e| e.total_steps.get())
+            .flatten();
+        match ema {
+            Some(v) => Prediction {
+                steps: (v.round().max(0.0) as usize).min(budget),
+                informed: true,
+            },
+            None => Prediction { steps: budget, informed: false },
+        }
+    }
+
+    /// Predict the steps remaining for a slot at `step` with current
+    /// `stats`, clamped to `[0, budget - step]`.  Prefers the
+    /// entropy-bucket-conditioned EMA, falls back to the unconditional
+    /// total minus executed steps, then to the remaining budget.
+    pub fn predict_remaining(
+        &self,
+        family: FamilyId,
+        stats: &StepStats,
+        step: usize,
+        budget: usize,
+    ) -> Prediction {
+        let cap = budget.saturating_sub(step);
+        let bucket = bucket_for(stats);
+        let (by_bucket, total) = self
+            .read_entry(family, |e| {
+                (e.remaining_by_bucket[bucket].get(), e.total_steps.get())
+            })
+            .unwrap_or((None, None));
+        if let Some(v) = by_bucket {
+            return Prediction {
+                steps: (v.round().max(0.0) as usize).min(cap),
+                informed: true,
+            };
+        }
+        if let Some(v) = total {
+            let rem = (v.round().max(0.0) as usize).saturating_sub(step);
+            return Prediction { steps: rem.min(cap), informed: true };
+        }
+        Prediction { steps: cap, informed: false }
+    }
+
+    /// Record a finished generation: `total_steps` executed, and for
+    /// every entropy bucket the generation visited, the step at which
+    /// it *first* entered that bucket (so the bucket EMA learns
+    /// "steps remaining from here").
+    pub fn observe_completion(
+        &self,
+        family: FamilyId,
+        total_steps: usize,
+        visited: &[(usize, usize)],
+    ) {
+        self.with_entry(family, |e, alpha| {
+            e.total_steps.observe(total_steps as f64, alpha);
+            e.completions += 1;
+            for &(bucket, entry_step) in visited {
+                if bucket < N_BUCKETS {
+                    let rem = total_steps.saturating_sub(entry_step);
+                    e.remaining_by_bucket[bucket].observe(rem as f64, alpha);
+                }
+            }
+        });
+    }
+
+    /// Record one observed batched-step device latency.
+    pub fn observe_step_latency(&self, family: FamilyId, ms: f64) {
+        if ms.is_finite() && ms >= 0.0 {
+            self.with_entry(family, |e, alpha| {
+                e.step_latency_ms.observe(ms, alpha);
+            });
+        }
+    }
+
+    /// Current per-step latency estimate (ms), if any step has been
+    /// observed for this family.
+    pub fn step_latency_ms(&self, family: FamilyId) -> Option<f64> {
+        self.read_entry(family, |e| e.step_latency_ms.get()).flatten()
+    }
+
+    /// Completions observed for a family (0 when cold).
+    pub fn observations(&self, family: FamilyId) -> u64 {
+        self.read_entry(family, |e| e.completions).unwrap_or(0)
+    }
+
+    /// Per-family estimator state for the metrics snapshot:
+    /// `{ "<fam>": { observations, ema_total_steps, step_latency_ms,
+    ///    buckets: [..] } }` — only families with at least one write.
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut fields = Vec::new();
+        for e in g.iter().flatten() {
+            let buckets: Vec<Json> = e
+                .remaining_by_bucket
+                .iter()
+                .map(|b| match b.get() {
+                    Some(v) => Json::num(v),
+                    None => Json::Null,
+                })
+                .collect();
+            let mut obj = vec![
+                ("observations", Json::uint(e.completions)),
+                ("buckets", Json::Arr(buckets)),
+            ];
+            if let Some(v) = e.total_steps.get() {
+                obj.push(("ema_total_steps", Json::num(v)));
+            }
+            if let Some(v) = e.step_latency_ms.get() {
+                obj.push(("step_latency_ms", Json::num(v)));
+            }
+            fields.push((e.name.clone(), Json::obj(obj)));
+        }
+        let mut m = std::collections::BTreeMap::new();
+        for (k, v) in fields {
+            m.insert(k, v);
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::registry;
+
+    fn fam() -> FamilyId {
+        registry::resolve("ddlm").unwrap()
+    }
+
+    fn stats(entropy: f32) -> StepStats {
+        StepStats { entropy, ..Default::default() }
+    }
+
+    #[test]
+    fn cold_start_echoes_budget() {
+        let est = Estimator::new();
+        let p = est.predict_total(fam(), 600);
+        assert_eq!(p, Prediction { steps: 600, informed: false });
+        let r = est.predict_remaining(fam(), &stats(0.5), 100, 600);
+        assert_eq!(r, Prediction { steps: 500, informed: false });
+        assert_eq!(est.observations(fam()), 0);
+        assert!(est.step_latency_ms(fam()).is_none());
+    }
+
+    #[test]
+    fn ema_converges_to_observed_halt_steps() {
+        let est = Estimator::new();
+        for _ in 0..50 {
+            est.observe_completion(fam(), 120, &[]);
+        }
+        let p = est.predict_total(fam(), 600);
+        assert!(p.informed);
+        assert_eq!(p.steps, 120);
+        // budget clamps the estimate
+        assert_eq!(est.predict_total(fam(), 80).steps, 80);
+        assert_eq!(est.observations(fam()), 50);
+    }
+
+    #[test]
+    fn ema_tracks_workload_shift() {
+        let est = Estimator::new();
+        for _ in 0..30 {
+            est.observe_completion(fam(), 100, &[]);
+        }
+        for _ in 0..30 {
+            est.observe_completion(fam(), 300, &[]);
+        }
+        let p = est.predict_total(fam(), 600);
+        // alpha 0.2 over 30 observations: essentially converged to 300
+        assert!(p.steps > 290 && p.steps <= 300, "steps={}", p.steps);
+    }
+
+    #[test]
+    fn bucket_edges_are_monotonic() {
+        assert_eq!(bucket_for(&stats(0.001)), 0);
+        assert_eq!(bucket_for(&stats(0.03)), 1);
+        assert_eq!(bucket_for(&stats(5.0)), N_BUCKETS - 1);
+        let mut prev = 0;
+        for e in [0.01, 0.04, 0.07, 0.15, 0.3, 0.6, 1.2, 2.0] {
+            let b = bucket_for(&stats(e));
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bucket_conditioned_remaining_beats_unconditional() {
+        let est = Estimator::new();
+        // generations run 200 steps total; they first hit low entropy
+        // (bucket 0) at step 180 → 20 steps remaining from there
+        for _ in 0..40 {
+            est.observe_completion(fam(), 200, &[(0, 180), (7, 0)]);
+        }
+        let near_done = est.predict_remaining(fam(), &stats(0.001), 150, 600);
+        assert!(near_done.informed);
+        assert_eq!(near_done.steps, 20);
+        // high-entropy slot at step 0 → bucket 7 learned 200 remaining
+        let fresh = est.predict_remaining(fam(), &stats(5.0), 0, 600);
+        assert_eq!(fresh.steps, 200);
+        // unvisited bucket falls back to unconditional total - step
+        let mid = est.predict_remaining(fam(), &stats(0.3), 50, 600);
+        assert!(mid.informed);
+        assert_eq!(mid.steps, 150);
+    }
+
+    #[test]
+    fn remaining_is_clamped_to_remaining_budget() {
+        let est = Estimator::new();
+        est.observe_completion(fam(), 500, &[(7, 0)]);
+        let p = est.predict_remaining(fam(), &stats(5.0), 90, 100);
+        assert_eq!(p.steps, 10);
+        // step past budget → zero, never underflow
+        let z = est.predict_remaining(fam(), &stats(5.0), 200, 100);
+        assert_eq!(z.steps, 0);
+    }
+
+    #[test]
+    fn step_latency_ema() {
+        let est = Estimator::new();
+        est.observe_step_latency(fam(), 10.0);
+        assert_eq!(est.step_latency_ms(fam()), Some(10.0));
+        for _ in 0..50 {
+            est.observe_step_latency(fam(), 20.0);
+        }
+        let v = est.step_latency_ms(fam()).unwrap();
+        assert!((v - 20.0).abs() < 0.5, "v={v}");
+        // non-finite observations are ignored
+        est.observe_step_latency(fam(), f64::NAN);
+        assert!(est.step_latency_ms(fam()).unwrap().is_finite());
+    }
+
+    #[test]
+    fn snapshot_lists_touched_families_only() {
+        let est = Estimator::new();
+        let snap = est.snapshot_json();
+        assert_eq!(snap.encode(), "{}");
+        est.observe_completion(fam(), 42, &[(3, 10)]);
+        let Json::Obj(m) = est.snapshot_json() else { panic!() };
+        assert_eq!(m.len(), 1);
+        let entry = m.get("ddlm").unwrap();
+        assert_eq!(entry.get("observations").and_then(Json::as_u64), Some(1));
+        assert!(entry.get("ema_total_steps").is_some());
+    }
+}

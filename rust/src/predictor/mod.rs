@@ -1,0 +1,76 @@
+//! Completeness predictor: the paper's halting signal as a
+//! *scheduling primitive*.
+//!
+//! The halting criteria ([`crate::halting`]) watch entropy/KL
+//! trajectories and stop generation when text is complete.  This
+//! subsystem observes the same trajectories fleet-wide and turns them
+//! into predictions — "this request will halt in ~N steps" — that
+//! drive three serving features:
+//!
+//! - **deadline-aware admission** ([`admission`]): reject requests
+//!   whose `deadline_ms` cannot be met given predicted steps ×
+//!   observed per-step latency (typed `infeasible_deadline` error);
+//! - **SRPT slot packing** ([`packing`]): when slots are scarce,
+//!   run the shortest-predicted generation first;
+//! - **wire-visible estimates**: v1 `progress`/`done` frames carry
+//!   `predicted_steps_remaining` / `predicted_total_steps` so clients
+//!   can implement smart client-side halts.
+//!
+//! Everything hangs off one shared [`Estimator`] (`Arc`ed between the
+//! scheduler and all workers); [`PredictorConfig`] on
+//! `EngineConfig` gates each feature independently, all off by
+//! default so the fleet's behavior is bit-identical unless opted in.
+
+pub mod admission;
+pub mod estimator;
+pub mod packing;
+
+pub use admission::{check as check_feasibility, Feasibility};
+pub use estimator::{bucket_for, Estimator, Prediction, N_BUCKETS};
+pub use packing::PackingMode;
+
+/// Per-engine predictor feature gates (all default off).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PredictorConfig {
+    /// emit `predicted_steps_remaining` / `predicted_total_steps` on
+    /// v1 progress and done frames
+    pub enabled: bool,
+    /// reject infeasible `deadline_ms` at submit (`infeasible_deadline`)
+    pub admission: bool,
+    /// queue-ordering discipline for slot packing
+    pub packing: PackingMode,
+}
+
+impl PredictorConfig {
+    /// True when any feature needs the estimator to learn — the
+    /// engine builds and feeds an [`Estimator`] iff this holds.
+    pub fn active(&self) -> bool {
+        self.enabled || self.admission || self.packing == PackingMode::Srpt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_fully_off() {
+        let c = PredictorConfig::default();
+        assert!(!c.enabled && !c.admission);
+        assert_eq!(c.packing, PackingMode::Fifo);
+        assert!(!c.active());
+    }
+
+    #[test]
+    fn any_gate_activates_the_estimator() {
+        assert!(PredictorConfig { enabled: true, ..Default::default() }
+            .active());
+        assert!(PredictorConfig { admission: true, ..Default::default() }
+            .active());
+        assert!(PredictorConfig {
+            packing: PackingMode::Srpt,
+            ..Default::default()
+        }
+        .active());
+    }
+}

@@ -1,0 +1,54 @@
+//! Slot-packing policy for the continuous-batching admission loop.
+//!
+//! When a worker has more queued work than free slots, the order in
+//! which `next_for` hands out requests decides tail latency.  FIFO is
+//! the safe default.  SRPT (shortest-predicted-remaining-time-first)
+//! uses the [`super::Estimator`]'s per-family steps prediction to pull
+//! short generations ahead of long ones within the same priority
+//! class — the classic mean-latency-optimal discipline, made possible
+//! here because the halting signal gives a usable length estimate.
+//! Priority classes still dominate: SRPT only reorders candidates of
+//! equal priority, and ties keep FIFO order (stable).
+
+/// Queue-ordering discipline used by the scheduler's `next_for`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PackingMode {
+    /// strict submission order within a priority class (default)
+    #[default]
+    Fifo,
+    /// shortest-predicted-remaining-steps first within a priority
+    /// class; ties and cold-start fall back to FIFO / budget order
+    Srpt,
+}
+
+impl PackingMode {
+    /// Parse a CLI value (`"fifo"` / `"srpt"`).
+    pub fn parse(s: &str) -> Option<PackingMode> {
+        match s {
+            "fifo" => Some(PackingMode::Fifo),
+            "srpt" => Some(PackingMode::Srpt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackingMode::Fifo => "fifo",
+            PackingMode::Srpt => "srpt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(PackingMode::parse("fifo"), Some(PackingMode::Fifo));
+        assert_eq!(PackingMode::parse("srpt"), Some(PackingMode::Srpt));
+        assert_eq!(PackingMode::parse("lifo"), None);
+        assert_eq!(PackingMode::Srpt.name(), "srpt");
+        assert_eq!(PackingMode::default(), PackingMode::Fifo);
+    }
+}

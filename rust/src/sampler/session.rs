@@ -538,6 +538,16 @@ impl Session {
         self.slots.iter().any(|s| s.active)
     }
 
+    /// Drain the deferred best-effort-path device error, if one is
+    /// armed (see the `deferred_err` field).  Callers that consume a
+    /// lazy decode (e.g. the serving worker after `slot_output` /
+    /// `release_slot`) can check here to surface the failure on the
+    /// *affected* request instead of failing the whole batch at the
+    /// next `step()`.  Draining disarms the step-time bail.
+    pub fn take_deferred_err(&mut self) -> Option<String> {
+        self.deferred_err.take()
+    }
+
     /// Overwrite prefix positions of the host mirror with their clean
     /// representation — replacement conditioning, matching how
     /// prefix-masked training kept unmasked positions clean at every

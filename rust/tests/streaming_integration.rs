@@ -1,15 +1,18 @@
 //! Integration: the v1 envelope protocol end-to-end — throttled
 //! progress streaming, the graceful client halt verb (mid-schedule and
 //! queued), legacy/v1 coexistence on one port and one connection,
-//! per-family schedule envelopes in the metrics frame, and serving a
+//! per-family schedule envelopes in the metrics frame, serving a
 //! family registered at runtime through `sampler::registry` (not the
-//! `Family` enum).
+//! `Family` enum), the completeness predictor's wire estimates and
+//! `infeasible_deadline` admission gate (absent/off by default), and
+//! disconnect detection for in-flight v1 requests.
 
 use std::sync::OnceLock;
 
 use repro::coordinator::{
-    start, Client, EngineConfig, Event, GenRequest, Server,
+    start, Client, Command, EngineConfig, Event, GenRequest, Server,
 };
+use repro::predictor::PackingMode;
 use repro::sampler::{registry, DdlmKernel, Family, FamilyId};
 use repro::util::json::Json;
 
@@ -179,6 +182,151 @@ fn per_family_schedule_override_surfaces_in_metrics() {
     // generation still completes under the tighter envelope
     let resp = engine.generate(GenRequest::new(1, 6)).unwrap();
     assert_eq!(resp.steps_executed, 6);
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// With every predictor gate on (wire + admission + SRPT), v1 progress
+/// frames carry live `predicted_steps_remaining` estimates, the done
+/// frame reports the admission-time `predicted_total_steps`, the
+/// estimator state appears in the metrics snapshot, and — once the
+/// first completion has trained the per-step latency EMA — a hopeless
+/// deadline is rejected with typed `infeasible_deadline` before any
+/// device step.
+#[test]
+fn predictor_streams_estimates_and_rejects_infeasible_deadlines() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 2)];
+    cfg.predictor.enabled = true;
+    cfg.predictor.admission = true;
+    cfg.predictor.packing = PackingMode::Srpt;
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let mut req = GenRequest::new(1, 60);
+    req.progress_every = Some(20);
+    let mut with_estimate = 0usize;
+    let resp = client
+        .generate_with(&req, |ev| {
+            if ev.predicted_steps_remaining.is_some() {
+                with_estimate += 1;
+                assert!(ev.predicted_total_steps.is_some());
+            }
+        })
+        .unwrap();
+    assert!(with_estimate >= 1, "no progress frame carried an estimate");
+    // cold-start admission prediction echoes the budget, and the done
+    // frame reports both it and the final live re-estimate
+    assert_eq!(resp.predicted_total_steps, Some(60));
+    assert!(resp.predicted_steps_remaining.is_some());
+
+    // that completion trained the estimator (halt steps AND per-step
+    // latency): a microsecond deadline is now provably infeasible and
+    // rejects up front with the typed error
+    let mut hopeless = GenRequest::new(2, 600);
+    hopeless.deadline_ms = Some(0.001);
+    let err = client.generate(&hopeless).unwrap_err().to_string();
+    assert!(err.contains("infeasible_deadline"), "got: {err}");
+
+    let m = client.metrics().unwrap();
+    assert!(metric(&m, "rejected_infeasible") >= 1.0);
+    assert!(metric(&m, "predictions_made") >= 1.0);
+    assert!(metric(&m, "prediction_mae_steps_ddlm") >= 0.0);
+    let est = m
+        .get("predictor")
+        .and_then(|p| p.get("ddlm"))
+        .unwrap_or_else(|| panic!("no estimator snapshot in {}", m.encode()));
+    assert!(
+        est.get("observations").and_then(Json::as_f64).unwrap_or(0.0)
+            >= 1.0
+    );
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// With the predictor off (the default) no frame gains the new fields:
+/// progress, done and legacy replies stay bit-identical to the
+/// pre-predictor wire, and the metrics snapshot carries no estimator
+/// state.
+#[test]
+fn default_engine_emits_no_predictor_fields() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let mut req = GenRequest::new(1, 30);
+    req.progress_every = Some(10);
+    let resp = client
+        .generate_with(&req, |ev| {
+            assert_eq!(ev.predicted_steps_remaining, None);
+            assert_eq!(ev.predicted_total_steps, None);
+        })
+        .unwrap();
+    assert_eq!(resp.predicted_steps_remaining, None);
+    assert_eq!(resp.predicted_total_steps, None);
+    // raw wire check: the reply object has no predicted keys at all
+    let raw = client.roundtrip(&GenRequest::new(2, 4).to_json()).unwrap();
+    assert!(raw.get("predicted_steps_remaining").is_none());
+    assert!(raw.get("predicted_total_steps").is_none());
+    let m = client.metrics().unwrap();
+    assert!(m.get("predictor").is_none(), "estimator built while off");
+    assert_eq!(metric(&m, "predictions_made"), 0.0);
+    assert_eq!(metric(&m, "rejected_infeasible"), 0.0);
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+/// Dropping a connection cancels the v1 requests it still has in
+/// flight — a dead client must not burn the rest of its step budget —
+/// and the abort is accounted under the `cancelled` metric.
+#[test]
+fn dropped_connection_cancels_inflight_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone()).unwrap();
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(&server.addr).unwrap();
+        // a NON-streamed v1 submit: no progress subscription, so only
+        // the reader-side disconnect sweep can reap it
+        let req = GenRequest::new(1, 1_000_000);
+        let line = Command::Submit(Box::new(req)).to_json().encode();
+        s.write_all(line.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        s.flush().unwrap();
+        // wait until it is provably running, then drop the connection
+        let mut running = 0.0;
+        for _ in 0..400 {
+            running = metric(&engine.metrics().unwrap(), "running_requests");
+            if running >= 1.0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        assert!(running >= 1.0, "request never started running");
+    }
+    let mut cancelled = 0.0;
+    for _ in 0..400 {
+        cancelled = metric(&engine.metrics().unwrap(), "cancelled");
+        if cancelled >= 1.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(cancelled >= 1.0, "disconnect did not cancel the request");
+
+    server.stop();
     engine.shutdown();
     join.join().unwrap().unwrap();
 }

@@ -189,6 +189,10 @@ fn random_events_roundtrip() {
                 tokens: (r.below(2) == 0).then(|| {
                     (0..r.below(8)).map(|_| r.below(512) as i32).collect()
                 }),
+                predicted_steps_remaining: (r.below(2) == 0)
+                    .then(|| r.below(200)),
+                predicted_total_steps: (r.below(2) == 0)
+                    .then(|| r.below(1000)),
             }),
             1 => Event::Done(GenResponse {
                 id: r.next_u64(),
@@ -202,6 +206,10 @@ fn random_events_roundtrip() {
                 queue_ms: r.below(1000) as f64 / 4.0,
                 family: (r.below(2) == 0)
                     .then(|| Family::all()[r.below(Family::COUNT)].into()),
+                predicted_steps_remaining: (r.below(2) == 0)
+                    .then(|| r.below(100)),
+                predicted_total_steps: (r.below(2) == 0)
+                    .then(|| r.below(600)),
                 final_stats: Default::default(),
             }),
             2 => Event::Error {

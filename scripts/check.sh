@@ -6,7 +6,9 @@
 #   scripts/check.sh --bench   # ...then the headline serving bench,
 #                              # which writes BENCH_serving.json
 #                              # (p50/p95 latency, req/s, steps/s,
-#                              # stream_overhead_pct)
+#                              # stream_overhead_pct, and the predictor
+#                              # scenario: prediction MAE + goodput
+#                              # under deadlines, predictor on vs off)
 #
 # The wire-compat stage runs the golden-corpus / envelope round-trip
 # tests explicitly (they are pure codec tests, so they run even where
