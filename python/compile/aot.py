@@ -55,9 +55,14 @@ def build_step(art: ArtifactConfig, params):
     l, v, d = cfg.seq_len, cfg.vocab, cfg.d_model
     names, pspecs = param_specs(params)
     n = len(names)
+    # "stats_fused" ([B, 5+2L]: the five scalar rows + per-token entropy
+    # + per-token argmax-changed lanes) is appended LAST so the indices
+    # of the format-2 outputs never shift — format-2 consumers keep
+    # working against format-3 artifacts.
     out_names = [
         "x_next", "probs", "x0_hat", "tokens",
         "entropy", "kl", "switches", "norm_x0", "norm_x",
+        "stats_fused",
     ]
     # format-2 step artifacts take on-device prefix-clamp inputs (the
     # state row width W is per-family: D for embedding space, V for the
@@ -218,8 +223,14 @@ def export(out_dir: str, only=None) -> None:
     # (prefix_mask/prefix_x), enabling the rust session's
     # device-resident state path; format-1 manifests (no such inputs)
     # are still served via the host-roundtrip reference path.
+    # format 3: step artifacts additionally emit the fused stat tensor
+    # ("stats_fused" [B, 5+2L] — five scalar rows + per-token entropy +
+    # argmax-changed lanes) so the resident path pays ONE download per
+    # step and token-level halting gets its per-position signals;
+    # format-2 artifacts fall back to the five-row split download with
+    # token-level halting unavailable.
     manifest = {
-        "format": 2,
+        "format": 3,
         "model": {
             "vocab": BASE.vocab,
             "seq_len": BASE.seq_len,

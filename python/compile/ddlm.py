@@ -149,6 +149,20 @@ def clamp_prefix(x, prefix_mask, prefix_x):
     return jnp.where(prefix_mask[:, :, None] > 0.5, prefix_x, x)
 
 
+def fuse_stats(entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg):
+    """Stack every per-step halting statistic into ONE [B, 5+2L] tensor.
+
+    Row layout: [entropy, kl, switches, norm_x0, norm_x,
+    tok_entropy(L), tok_changed(L)].  The rust session downloads this
+    single output per steady-state step — one device sync instead of
+    five [B] rows — and stride-slices the lanes back out on the host.
+    The individual outputs are kept in the artifact for the split
+    fallback and for format-2 consumers.
+    """
+    scalars = jnp.stack([entropy, kl, switches, norm_x0, norm_x], axis=-1)
+    return jnp.concatenate([scalars, tok_ent, tok_chg], axis=-1)
+
+
 def gen_step(
     p, cfg: ModelConfig, x_t, prev_probs, prev_tokens, t2,
     prefix_mask, prefix_x,
@@ -163,19 +177,21 @@ def gen_step(
     state so conditioning positions stay clean without a host roundtrip.
 
     Returns (x_next, probs, x0_hat, tokens, entropy, kl, switches,
-             norm_x0 [B], norm_x [B]).
+             norm_x0 [B], norm_x [B], stats_fused [B, 5+2L]).
     """
     x_t = clamp_prefix(x_t, prefix_mask, prefix_x)
     logits, e_n = logits_fn(p, cfg, x_t, t2[:, 0], use_pallas=True)
     x_next, probs, x0_hat = score.score_euler(logits, e_n, x_t, t2)
     x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
-    tokens, entropy, kl, switches = stats.halt_stats(
+    tokens, entropy, kl, switches, tok_ent, tok_chg = stats.halt_stats(
         probs, prev_probs, prev_tokens
     )
     norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
     norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    fused = fuse_stats(entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg)
     return (
-        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x,
+        fused,
     )
 
 
@@ -197,11 +213,13 @@ def gen_step_ref(
     logits = h @ e_n.T / jnp.sqrt(jnp.float32(cfg.d_model))
     x_next, probs, x0_hat = ref.score_euler_ref(logits, e_n, x_t, t2)
     x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
-    tokens, entropy, kl, switches = ref.halt_stats_ref(
+    tokens, entropy, kl, switches, tok_ent, tok_chg = ref.halt_stats_ref(
         probs, prev_probs, prev_tokens
     )
     norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
     norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    fused = fuse_stats(entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg)
     return (
-        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x,
+        fused,
     )

@@ -65,20 +65,25 @@ def halt_stats_ref(probs, prev_probs, prev_tokens):
 
     probs, prev_probs: [B, L, V]; prev_tokens: [B, L] int32.
 
-    Returns (tokens [B,L] i32, entropy [B], kl [B], switches [B] f32):
-      entropy  = mean_l H(p_l)                      (Algorithm 1)
-      kl       = mean_l KL(p_l || prev_p_l)         (Algorithm 3)
-      switches = sum_l [argmax p_l != prev_token_l] (Algorithm 2)
+    Returns (tokens [B,L] i32, entropy [B], kl [B], switches [B] f32,
+    tok_entropy [B,L] f32, tok_changed [B,L] f32):
+      entropy     = mean_l H(p_l)                      (Algorithm 1)
+      kl          = mean_l KL(p_l || prev_p_l)         (Algorithm 3)
+      switches    = sum_l [argmax p_l != prev_token_l] (Algorithm 2)
+      tok_entropy = H(p_l) per position                (token-level halting)
+      tok_changed = [argmax p_l != prev_token_l] per position
     """
     eps = jnp.float32(1e-12)
     logp = jnp.log(probs + eps)
-    entropy = -jnp.sum(probs * logp, axis=-1).mean(axis=-1)
+    tok_entropy = -jnp.sum(probs * logp, axis=-1)
+    entropy = tok_entropy.mean(axis=-1)
     kl = jnp.sum(probs * (logp - jnp.log(prev_probs + eps)), axis=-1).mean(
         axis=-1
     )
     tokens = jnp.argmax(probs, axis=-1).astype(jnp.int32)
-    switches = jnp.sum((tokens != prev_tokens).astype(jnp.float32), axis=-1)
-    return tokens, entropy, kl, switches
+    tok_changed = (tokens != prev_tokens).astype(jnp.float32)
+    switches = jnp.sum(tok_changed, axis=-1)
+    return tokens, entropy, kl, switches, tok_entropy, tok_changed
 
 
 def ddpm_step_ref(x_t, x0_hat, ab2, z):

@@ -21,28 +21,41 @@ _EPS = 1e-12
 
 
 def _stats_kernel(
-    p_ref, prev_p_ref, prev_tok_ref, tok_ref, ent_ref, kl_ref, sw_ref
+    p_ref,
+    prev_p_ref,
+    prev_tok_ref,
+    tok_ref,
+    ent_ref,
+    kl_ref,
+    sw_ref,
+    tok_ent_ref,
+    tok_chg_ref,
 ):
     p = p_ref[...]  # [B, L, V]
     prev_p = prev_p_ref[...]
     logp = jnp.log(p + _EPS)
-    ent_ref[...] = -jnp.mean(jnp.sum(p * logp, axis=-1), axis=-1)
+    tok_ent = -jnp.sum(p * logp, axis=-1)  # [B, L] per-position entropy
+    tok_ent_ref[...] = tok_ent
+    ent_ref[...] = jnp.mean(tok_ent, axis=-1)
     kl_ref[...] = jnp.mean(
         jnp.sum(p * (logp - jnp.log(prev_p + _EPS)), axis=-1), axis=-1
     )
     tokens = jnp.argmax(p, axis=-1).astype(jnp.int32)
     tok_ref[...] = tokens
-    sw_ref[...] = jnp.sum(
-        (tokens != prev_tok_ref[...]).astype(jnp.float32), axis=-1
-    )
+    changed = (tokens != prev_tok_ref[...]).astype(jnp.float32)
+    tok_chg_ref[...] = changed
+    sw_ref[...] = jnp.sum(changed, axis=-1)
 
 
 @jax.jit
 def halt_stats(probs, prev_probs, prev_tokens):
     """probs/prev_probs: [B,L,V]; prev_tokens: [B,L] i32.
 
-    Returns (tokens [B,L] i32, entropy [B], kl [B], switches [B]).
-    Matches ``ref.halt_stats_ref`` (pytest-enforced).
+    Returns (tokens [B,L] i32, entropy [B], kl [B], switches [B],
+    tok_entropy [B,L], tok_changed [B,L]).  The two [B,L] lanes feed
+    token-level halting (per-position entropy, argmax-changed flags);
+    the [B] rows are their sequence reductions.  Matches
+    ``ref.halt_stats_ref`` (pytest-enforced).
     """
     b, seq_len, v = probs.shape
     pspec = pl.BlockSpec((b, seq_len, v), lambda i: (0, 0, 0))
@@ -52,12 +65,14 @@ def halt_stats(probs, prev_probs, prev_tokens):
         _stats_kernel,
         grid=(1,),
         in_specs=[pspec, pspec, tspec],
-        out_specs=(tspec, sspec, sspec, sspec),
+        out_specs=(tspec, sspec, sspec, sspec, tspec, tspec),
         out_shape=(
             jax.ShapeDtypeStruct((b, seq_len), jnp.int32),
             jax.ShapeDtypeStruct((b,), jnp.float32),
             jax.ShapeDtypeStruct((b,), jnp.float32),
             jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, seq_len), jnp.float32),
+            jax.ShapeDtypeStruct((b, seq_len), jnp.float32),
         ),
         interpret=True,
     )(probs, prev_probs, prev_tokens)

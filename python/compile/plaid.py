@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from . import optim, transformer
 from .configs import ModelConfig
-from .ddlm import clamp_prefix
+from .ddlm import clamp_prefix, fuse_stats
 from .kernels import diffuse, ref, stats
 from .ssd import abar_cosine
 
@@ -76,7 +76,7 @@ def gen_step(
     prefix_mask: [B,L]; prefix_x: [B,L,D] clean embedding rows — the
     on-device form of the host clamp (see ``ddlm.clamp_prefix``).
     Returns (x_next, probs, x0_hat, tokens, entropy, kl, switches,
-             norm_x0, norm_x).
+             norm_x0, norm_x, stats_fused [B, 5+2L]).
     """
     x_t = clamp_prefix(x_t, prefix_mask, prefix_x)
     x0_hat, logits, _ = x0_and_logits(
@@ -85,13 +85,17 @@ def gen_step(
     probs = jax.nn.softmax(logits, axis=-1)
     x_next = diffuse.ddpm_step(x_t, x0_hat, abar_cosine(tau2), z)
     x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
-    tokens, entropy, kl, switches = stats.halt_stats(
+    tokens, entropy, kl, switches, tok_ent, tok_chg = stats.halt_stats(
         probs, prev_probs, prev_tokens
     )
     norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
     norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    fused = fuse_stats(
+        entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg
+    )
     return (
-        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x,
+        fused,
     )
 
 
@@ -107,11 +111,15 @@ def gen_step_ref(
     probs = jax.nn.softmax(logits, axis=-1)
     x_next = ref.ddpm_step_ref(x_t, x0_hat, abar_cosine(tau2), z)
     x_next = clamp_prefix(x_next, prefix_mask, prefix_x)
-    tokens, entropy, kl, switches = ref.halt_stats_ref(
+    tokens, entropy, kl, switches, tok_ent, tok_chg = ref.halt_stats_ref(
         probs, prev_probs, prev_tokens
     )
     norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
     norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    fused = fuse_stats(
+        entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg
+    )
     return (
-        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x,
+        fused,
     )

@@ -84,7 +84,7 @@ def gen_step(
     on-device form of the host clamp (see ``ddlm.clamp_prefix``).
 
     Returns (x_next, probs, x0_hat_emb, tokens, entropy, kl, switches,
-             norm_x0, norm_x).
+             norm_x0, norm_x, stats_fused [B, 5+2L]).
     """
     x_t = ddlm.clamp_prefix(x_t, prefix_mask, prefix_x)
     logits = logits_fn(p, cfg, x_t, tau2[:, 0], use_pallas=True)
@@ -93,15 +93,19 @@ def gen_step(
         probs, cfg.simplex_k, abar_cosine(tau2[:, 1:2]), z
     )
     x_next = ddlm.clamp_prefix(x_next, prefix_mask, prefix_x)
-    tokens, entropy, kl, switches = stats.halt_stats(
+    tokens, entropy, kl, switches, tok_ent, tok_chg = stats.halt_stats(
         probs, prev_probs, prev_tokens
     )
     e_n = transformer.normalized_emb(p, cfg)
     x0_hat = probs @ e_n
     norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
     norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    fused = ddlm.fuse_stats(
+        entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg
+    )
     return (
-        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x,
+        fused,
     )
 
 
@@ -117,13 +121,17 @@ def gen_step_ref(
         probs, cfg.simplex_k, abar_cosine(tau2[:, 1:2]), z
     )
     x_next = ddlm.clamp_prefix(x_next, prefix_mask, prefix_x)
-    tokens, entropy, kl, switches = ref.halt_stats_ref(
+    tokens, entropy, kl, switches, tok_ent, tok_chg = ref.halt_stats_ref(
         probs, prev_probs, prev_tokens
     )
     e_n = transformer.normalized_emb(p, cfg)
     x0_hat = probs @ e_n
     norm_x0 = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x0_hat), axis=-1), axis=-1))
     norm_x = jnp.sqrt(jnp.mean(jnp.sum(jnp.square(x_t), axis=-1), axis=-1))
+    fused = ddlm.fuse_stats(
+        entropy, kl, switches, norm_x0, norm_x, tok_ent, tok_chg
+    )
     return (
-        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x
+        x_next, probs, x0_hat, tokens, entropy, kl, switches, norm_x0, norm_x,
+        fused,
     )

@@ -157,12 +157,16 @@ def test_halt_stats_invariants():
     b, l, v = 2, 16, 64
     p = _probs(rng, b, l, v)
     tok = jnp.argmax(p, axis=-1).astype(jnp.int32)
-    tokens, ent, kl, sw = stats.halt_stats(p, p, tok)
+    tokens, ent, kl, sw, tok_ent, tok_chg = stats.halt_stats(p, p, tok)
     assert np.all(np.asarray(ent) >= -1e-6)
     assert np.all(np.asarray(ent) <= np.log(v) + 1e-5)
     np.testing.assert_allclose(kl, 0.0, atol=1e-5)
     np.testing.assert_allclose(sw, 0.0, atol=0)
     np.testing.assert_array_equal(np.asarray(tokens), np.asarray(tok))
+    # token lanes are consistent with their sequence reductions
+    np.testing.assert_allclose(np.asarray(tok_ent).mean(axis=-1),
+                               np.asarray(ent), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(tok_chg, 0.0, atol=0)
 
 
 def test_halt_stats_switch_count_exact():
@@ -172,8 +176,9 @@ def test_halt_stats_switch_count_exact():
     tok = np.asarray(jnp.argmax(p, -1), np.int32)
     prev = tok.copy()
     prev[0, :5] = (prev[0, :5] + 1) % v  # force exactly 5 mismatches
-    _, _, _, sw = stats.halt_stats(p, p, jnp.asarray(prev))
+    _, _, _, sw, _, tok_chg = stats.halt_stats(p, p, jnp.asarray(prev))
     np.testing.assert_allclose(sw, [5.0])
+    np.testing.assert_allclose(np.asarray(tok_chg).sum(axis=-1), [5.0])
 
 
 def test_kl_nonneg_property():
@@ -182,7 +187,7 @@ def test_kl_nonneg_property():
         r = _rng(seed)
         p = _probs(r, 2, 8, 32)
         q = _probs(r, 2, 8, 32)
-        _, _, kl, _ = stats.halt_stats(p, q, jnp.zeros((2, 8), jnp.int32))
+        _, _, kl, *_ = stats.halt_stats(p, q, jnp.zeros((2, 8), jnp.int32))
         assert np.all(np.asarray(kl) >= -1e-6), f"KL negative at seed {seed}"
 
 

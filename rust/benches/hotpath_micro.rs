@@ -106,7 +106,8 @@ fn main() {
                 let calls = (st.executions - st0.executions).max(1);
                 println!(
                     "    breakdown: exec {:.1}% | upload {:.1}% | \
-                     download {:.1}% | host bytes/step {:.0}",
+                     download {:.1}% | host bytes/step {:.0} | \
+                     stat syncs/step {:.1}",
                     100.0 * d_exec / total,
                     100.0 * d_up / total,
                     100.0 * d_down / total,
@@ -114,7 +115,38 @@ fn main() {
                         + (st.download_bytes - st0.download_bytes))
                         as f64
                         / calls as f64,
+                    (st.downloads - st0.downloads) as f64 / calls as f64,
                 );
+                // the fused [B,5+2L] stat download (format 3, one sync
+                // per step) vs the split five-row fallback — same
+                // session, same device, only the download plan differs
+                if resident && s.fused_active() {
+                    s.set_fused_stats(false);
+                    let st0 = s.exec_stats();
+                    bench(
+                        &format!(
+                            "{}_step_b{b} full step (resident, split \
+                             stats)",
+                            fam.name()
+                        ),
+                        20,
+                        || {
+                            s.step().unwrap();
+                        },
+                    );
+                    let st = s.exec_stats();
+                    let calls = (st.executions - st0.executions).max(1);
+                    println!(
+                        "    split stats: {:.1} syncs/step | host \
+                         bytes/step {:.0}",
+                        (st.downloads - st0.downloads) as f64
+                            / calls as f64,
+                        ((st.upload_bytes - st0.upload_bytes)
+                            + (st.download_bytes - st0.download_bytes))
+                            as f64
+                            / calls as f64,
+                    );
+                }
             }
         }
     }

@@ -29,6 +29,16 @@
 //!   on-vs-off `goodput_delta_pct`, and the realized
 //!   `prediction_mae_steps`.
 //!
+//! * **token_halting** — the per-token freeze criterion
+//!   (`--token-criterion`, default `tokstab:3`) served on one ddlm
+//!   shard: positions freeze as their argmax stabilises, fully-frozen
+//!   sequences halt with reason `all_frozen`.  Reported under
+//!   `"token_halting"` (tokens frozen, token-level steps saved,
+//!   fraction of token-steps spent frozen) plus a top-level
+//!   `frozen_step_fraction` for the PR-over-PR trendline.  On
+//!   pre-format-3 artifacts the lanes are unavailable and the row
+//!   reports zeros.
+//!
 //! * **session_step** — a microbench directly on one batched `Session`
 //!   (no TCP): the device-resident state path vs the host-roundtrip
 //!   reference path, reporting steps/s and `host_bytes_per_step` from
@@ -41,6 +51,7 @@
 //!
 //! Knobs: --n 32 --steps 120 --workers 2 --batch 8 --criterion SPEC
 //! --progress-every 25 --session-steps 40 --predictor-train 12
+//! --token-criterion SPEC
 //! (default policy: the paper's adaptive KL + entropy-fallback).
 //! Skips cleanly when artifacts are not built.
 
@@ -81,6 +92,10 @@ struct ScenarioResult {
     /// snapshot, so they exclude warmup exactly like the top-level
     /// numbers
     samples: Vec<(FamilyId, f64, usize)>,
+    /// end-of-run metrics snapshot (token-halting lanes live only
+    /// here — they aggregate device-side freeze work the per-request
+    /// samples can't see)
+    metrics: Json,
 }
 
 /// Drive one engine configuration over TCP with 4 client threads firing
@@ -189,13 +204,11 @@ fn run_scenario(
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let total_steps: usize = samples.iter().map(|&(_, _, s)| s).sum();
 
-    let device_calls = {
-        let mut c = Client::connect(&server.addr)?;
-        c.metrics()?
-            .get("device_calls")
-            .and_then(Json::as_f64)
-            .unwrap_or(0.0)
-    };
+    let metrics = Client::connect(&server.addr)?.metrics()?;
+    let device_calls = metrics
+        .get("device_calls")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
 
     server.stop();
     engine.shutdown();
@@ -211,6 +224,7 @@ fn run_scenario(
         device_calls,
         progress_events,
         samples,
+        metrics,
     })
 }
 
@@ -626,6 +640,37 @@ fn main() -> anyhow::Result<()> {
         pred_on.predictions_made,
     );
 
+    // scenario 6: token_halting — the per-token freeze criterion on one
+    // ddlm shard.  Frozen positions stop costing resolution work and a
+    // fully-frozen sequence halts (`all_frozen`); the lanes land in the
+    // metrics snapshot, not the per-request samples
+    let tok_spec = args.get_or("token-criterion", "tokstab:3").to_string();
+    let tok_policy = parse_policy(&tok_spec)
+        .ok_or_else(|| anyhow::anyhow!("bad --token-criterion {tok_spec:?}"))?;
+    println!("serving_bench[token_halting]: criterion {tok_spec}");
+    let token = run_scenario(
+        &dir,
+        &[(Family::Ddlm.into(), batch)],
+        n,
+        n_steps,
+        &tok_policy,
+        &prompts,
+        None,
+    )?;
+    let tokg = |k: &str| {
+        token.metrics.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let frozen_step_fraction = tokg("frozen_step_fraction_ddlm");
+    let tokens_frozen = tokg("tokens_frozen_ddlm");
+    let token_steps_saved = tokg("token_steps_saved_ddlm");
+    println!(
+        "serving_bench[token_halting]: {n} reqs in {:.2}s — mean {:.1} \
+         steps (baseline {:.1}), {tokens_frozen:.0} tokens frozen, \
+         {token_steps_saved:.0} token-steps saved, frozen fraction \
+         {frozen_step_fraction:.3}",
+        token.wall_s, token.mean_steps, single.mean_steps,
+    );
+
     // top-level fields mirror the pre-multi-family layout so the
     // BENCH_serving.json trendline stays comparable PR-over-PR
     let mut fields = vec![
@@ -747,6 +792,25 @@ fn main() -> anyhow::Result<()> {
         pred_fields.push(("prediction_mae_steps", Json::num(mae)));
     }
     fields.push(("predictor", Json::obj(pred_fields)));
+    // token-level halting: the frozen fraction rides at the top level
+    // (the bench-schema gate pins the key; 0 on pre-format-3 artifacts)
+    fields.push((
+        "frozen_step_fraction",
+        Json::num(frozen_step_fraction),
+    ));
+    fields.push((
+        "token_halting",
+        Json::obj(vec![
+            ("criterion", Json::str(tok_spec.clone())),
+            ("wall_s", Json::num(token.wall_s)),
+            ("req_per_s", Json::num(token.req_per_s)),
+            ("mean_steps", Json::num(token.mean_steps)),
+            ("baseline_mean_steps", Json::num(single.mean_steps)),
+            ("tokens_frozen", Json::num(tokens_frozen)),
+            ("steps_saved", Json::num(token_steps_saved)),
+            ("frozen_step_fraction", Json::num(frozen_step_fraction)),
+        ]),
+    ));
     let out = Json::obj(fields);
     std::fs::write("BENCH_serving.json", format!("{}\n", out.encode()))?;
     println!("serving_bench: wrote BENCH_serving.json");

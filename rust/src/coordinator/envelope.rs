@@ -19,7 +19,7 @@
 //!
 //! | frame | shape |
 //! |---|---|
-//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..[,"tokens":[..]][,"predicted_steps_remaining":R,"predicted_total_steps":T]}` — `tokens` is the current decode (prefix positions forced), attached by workers; the `predicted_*` pair is the fleet predictor's live steps-to-halt estimate, present only when the engine runs with prediction enabled |
+//! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..[,"tokens":[..]][,"predicted_steps_remaining":R,"predicted_total_steps":T][,"frozen_mask":[0,1,..]]}` — `tokens` is the current decode (prefix positions forced), attached by workers; the `predicted_*` pair is the fleet predictor's live steps-to-halt estimate, present only when the engine runs with prediction enabled; `frozen_mask` (0/1 per position) is the token-level freeze state, present only when the submit set `frozen_mask:true` |
 //! | done     | `{"v":1,"type":"done", ...GenResponse fields...}` — gains the same optional `predicted_*` pair under prediction |
 //! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT]}` |
 //! | cancel   | ack: `{"v":1,"type":"cancel","id":N,"cancelled":BOOL,"state":"queued"\|"running"\|"not_found"}` |
@@ -215,6 +215,16 @@ impl Event {
                     fields
                         .push(("predicted_total_steps", Json::uint(t as u64)));
                 }
+                if let Some(mask) = &p.frozen_mask {
+                    fields.push((
+                        "frozen_mask",
+                        Json::Arr(
+                            mask.iter()
+                                .map(|&f| Json::uint(u64::from(f)))
+                                .collect(),
+                        ),
+                    ));
+                }
                 let Json::Obj(m) = Json::obj(fields) else {
                     unreachable!()
                 };
@@ -347,6 +357,27 @@ impl Event {
                     predicted_total_steps: j
                         .get("predicted_total_steps")
                         .and_then(Json::as_usize),
+                    // optional (requests opt in); present-but-malformed
+                    // entries are hard errors like the decode above
+                    frozen_mask: match j.get("frozen_mask") {
+                        None => None,
+                        Some(arr) => {
+                            let arr = arr.as_arr().ok_or_else(|| {
+                                anyhow!("progress frozen_mask must be an array")
+                            })?;
+                            let mut out = Vec::with_capacity(arr.len());
+                            for (i, x) in arr.iter().enumerate() {
+                                match x.as_u64() {
+                                    Some(0) => out.push(false),
+                                    Some(1) => out.push(true),
+                                    _ => anyhow::bail!(
+                                        "progress frozen_mask[{i}] is not 0/1"
+                                    ),
+                                }
+                            }
+                            Some(out)
+                        }
+                    },
                 })
             }
             "done" => Event::Done(GenResponse::from_json(j)?),
@@ -475,6 +506,7 @@ mod tests {
                 tokens: Some(vec![3, 0, -1]),
                 predicted_steps_remaining: Some(30),
                 predicted_total_steps: Some(80),
+                frozen_mask: Some(vec![true, false, true]),
             }),
             // older servers attach no decode and no prediction: the
             // fields are optional
@@ -486,6 +518,7 @@ mod tests {
                 tokens: None,
                 predicted_steps_remaining: None,
                 predicted_total_steps: None,
+                frozen_mask: None,
             }),
             Event::Error {
                 id: Some(4),
@@ -532,6 +565,7 @@ mod tests {
                         a.predicted_total_steps,
                         b.predicted_total_steps
                     );
+                    assert_eq!(a.frozen_mask, b.frozen_mask);
                 }
                 (
                     Event::Error { id: a, code: ca, message: ma },
@@ -592,9 +626,13 @@ mod tests {
             tokens: None,
             predicted_steps_remaining: None,
             predicted_total_steps: None,
+            frozen_mask: None,
         })
         .to_json()
         .encode();
         assert!(!encoded.contains("predicted"), "{encoded}");
+        // token halting off (or not requested) leaves the frame
+        // byte-free of the optional freeze field too
+        assert!(!encoded.contains("frozen"), "{encoded}");
     }
 }

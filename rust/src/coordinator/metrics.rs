@@ -130,6 +130,19 @@ pub struct FamilyMetrics {
     pub prediction_err_steps: f64,
     /// number of graded predictions in this lane
     pub predictions: u64,
+    /// positions freeze-pinned by token-level policies (the paper's
+    /// per-token early exit, counted across completions)
+    pub tokens_frozen: u64,
+    /// token-steps the device spent stepping already-frozen positions
+    /// — numerator of `frozen_step_fraction_<fam>`
+    pub frozen_token_steps: u64,
+    /// token-steps executed by completions that froze at least one
+    /// position (`steps_executed × L` summed over those completions) —
+    /// the fraction's denominator
+    pub token_steps_total: u64,
+    /// token-level budget saving: at each freeze, newly-frozen
+    /// positions × the request's remaining step budget
+    pub token_steps_saved: u64,
 }
 
 impl FamilyMetrics {
@@ -158,6 +171,20 @@ impl FamilyMetrics {
         }
         self.prediction_err_steps += other.prediction_err_steps;
         self.predictions += other.predictions;
+        self.tokens_frozen += other.tokens_frozen;
+        self.frozen_token_steps += other.frozen_token_steps;
+        self.token_steps_total += other.token_steps_total;
+        self.token_steps_saved += other.token_steps_saved;
+    }
+
+    /// Fraction of this lane's token-steps spent on already-frozen
+    /// positions (0.0 until a completion froze something).
+    pub fn frozen_step_fraction(&self) -> f64 {
+        if self.token_steps_total == 0 {
+            0.0
+        } else {
+            self.frozen_token_steps as f64 / self.token_steps_total as f64
+        }
     }
 }
 
@@ -278,6 +305,32 @@ impl Metrics {
         lane.prediction_err_steps +=
             predicted_steps.abs_diff(actual_steps) as f64;
         lane.predictions += 1;
+    }
+
+    /// Account one completion's token-level halting: how many positions
+    /// its policy froze, the token-steps spent stepping already-frozen
+    /// positions, the token-level budget saving those freezes
+    /// represent, and the completion's total token-steps
+    /// (`steps_executed × L`).  Workers call this once per completion
+    /// that froze at least one position; the snapshot surfaces the
+    /// lanes as `tokens_frozen_<fam>`, `token_steps_saved_<fam>` and
+    /// `frozen_step_fraction_<fam>` plus fleet-wide aggregates.
+    pub fn record_token_halting(
+        &mut self,
+        family: impl Into<FamilyId>,
+        tokens_frozen: u64,
+        frozen_token_steps: u64,
+        token_steps_saved: u64,
+        token_steps_total: u64,
+    ) {
+        let lane = self
+            .per_family
+            .entry(family.into().name().to_string())
+            .or_default();
+        lane.tokens_frozen += tokens_frozen;
+        lane.frozen_token_steps += frozen_token_steps;
+        lane.token_steps_saved += token_steps_saved;
+        lane.token_steps_total += token_steps_total;
     }
 
     /// Account one early halt attributed to a policy reason.
@@ -461,12 +514,48 @@ impl Metrics {
                     Json::num(fm.prediction_err_steps / fm.predictions as f64),
                 );
             }
+            // token-halting lanes ride only for families that actually
+            // froze positions, so pre-token-halting snapshots (and
+            // fleets with the feature unused) keep their exact key set
+            if fm.token_steps_total > 0 {
+                m.insert(
+                    format!("tokens_frozen_{fam}"),
+                    Json::num(fm.tokens_frozen as f64),
+                );
+                m.insert(
+                    format!("token_steps_saved_{fam}"),
+                    Json::num(fm.token_steps_saved as f64),
+                );
+                m.insert(
+                    format!("frozen_step_fraction_{fam}"),
+                    Json::num(fm.frozen_step_fraction()),
+                );
+            }
         }
         let (err, n) = self.per_family.values().fold((0.0, 0u64), |(e, n), fm| {
             (e + fm.prediction_err_steps, n + fm.predictions)
         });
         if n > 0 {
             m.insert("prediction_mae_steps".to_string(), Json::num(err / n as f64));
+        }
+        let (tf, fts, tss, tst) = self.per_family.values().fold(
+            (0u64, 0u64, 0u64, 0u64),
+            |(tf, fts, tss, tst), fm| {
+                (
+                    tf + fm.tokens_frozen,
+                    fts + fm.frozen_token_steps,
+                    tss + fm.token_steps_saved,
+                    tst + fm.token_steps_total,
+                )
+            },
+        );
+        if tst > 0 {
+            m.insert("tokens_frozen".to_string(), Json::num(tf as f64));
+            m.insert("token_steps_saved".to_string(), Json::num(tss as f64));
+            m.insert(
+                "frozen_step_fraction".to_string(),
+                Json::num(fts as f64 / tst as f64),
+            );
         }
         Json::Obj(m)
     }
@@ -748,6 +837,48 @@ mod tests {
         let lane = a.per_family.get("ddlm").unwrap();
         assert_eq!(lane.predictions, 2);
         assert!((lane.prediction_err_steps - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_halting_lanes_flatten_and_stay_absent_when_unused() {
+        let mut m = Metrics::default();
+        // feature unused → no token keys at all (snapshot key set is
+        // identical to a pre-token-halting server's)
+        let j = m.to_json();
+        assert!(j.get("tokens_frozen").is_none());
+        assert!(j.get("frozen_step_fraction").is_none());
+        assert!(j.get("tokens_frozen_ddlm").is_none());
+        // one ddlm completion: 12 frozen positions, 256 of 640
+        // token-steps spent on pinned positions, 300 budget-steps saved
+        m.record_token_halting(Family::Ddlm, 12, 256, 300, 640);
+        let j = m.to_json();
+        let get = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        assert_eq!(get("tokens_frozen_ddlm"), Some(12.0));
+        assert_eq!(get("token_steps_saved_ddlm"), Some(300.0));
+        assert!((get("frozen_step_fraction_ddlm").unwrap() - 0.4).abs() < 1e-9);
+        // fleet aggregates mirror the single lane
+        assert_eq!(get("tokens_frozen"), Some(12.0));
+        assert_eq!(get("token_steps_saved"), Some(300.0));
+        assert!((get("frozen_step_fraction").unwrap() - 0.4).abs() < 1e-9);
+        // other families stay out
+        assert!(j.get("tokens_frozen_ssd").is_none());
+    }
+
+    #[test]
+    fn merge_folds_token_halting_lanes() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.record_token_halting(Family::Ddlm, 4, 100, 50, 400);
+        b.record_token_halting(Family::Ddlm, 6, 100, 70, 400);
+        b.record_token_halting(Family::Ssd, 2, 10, 5, 100);
+        a.merge(&b);
+        let lane = a.per_family.get("ddlm").unwrap();
+        assert_eq!(lane.tokens_frozen, 10);
+        assert_eq!(lane.frozen_token_steps, 200);
+        assert_eq!(lane.token_steps_saved, 120);
+        assert_eq!(lane.token_steps_total, 800);
+        assert!((lane.frozen_step_fraction() - 0.25).abs() < 1e-9);
+        assert_eq!(a.per_family.get("ssd").unwrap().tokens_frozen, 2);
     }
 
     #[test]

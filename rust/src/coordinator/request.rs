@@ -103,6 +103,11 @@ pub struct GenRequest {
     /// emit a `progress` event every K executed steps (v1 envelope
     /// connections; ignored — never emitted — on legacy one-shot lines)
     pub progress_every: Option<usize>,
+    /// attach the per-position `frozen_mask` to this request's progress
+    /// events (wire field `frozen_mask: true`).  Default off — frames
+    /// for requests that don't ask are byte-identical to pre-token-
+    /// halting servers.
+    pub frozen_mask: bool,
 }
 
 impl GenRequest {
@@ -118,6 +123,7 @@ impl GenRequest {
             deadline_ms: None,
             family: None,
             progress_every: None,
+            frozen_mask: false,
         }
     }
 
@@ -144,6 +150,9 @@ impl GenRequest {
         }
         if let Some(k) = self.progress_every {
             fields.push(("progress_every", Json::uint(k as u64)));
+        }
+        if self.frozen_mask {
+            fields.push(("frozen_mask", Json::Bool(true)));
         }
         Json::obj(fields)
     }
@@ -223,6 +232,10 @@ impl GenRequest {
             deadline_ms: j.get("deadline_ms").and_then(Json::as_f64),
             family,
             progress_every,
+            frozen_mask: j
+                .get("frozen_mask")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
         })
     }
 }
@@ -249,6 +262,11 @@ pub struct ProgressEvent {
     pub predicted_steps_remaining: Option<usize>,
     /// `step + predicted_steps_remaining` at estimation time
     pub predicted_total_steps: Option<usize>,
+    /// per-position freeze state (length L, `true` = pinned by a
+    /// token-level policy) — present only when the request opted in
+    /// with `frozen_mask: true`; absent frames are byte-identical to
+    /// pre-token-halting servers
+    pub frozen_mask: Option<Vec<bool>>,
 }
 
 #[derive(Clone, Debug)]
@@ -534,6 +552,25 @@ mod tests {
     }
 
     #[test]
+    fn frozen_mask_request_flag_roundtrips_and_defaults_off() {
+        // absent on legacy wire, absent when false (default bytes
+        // untouched), carried only when the client opts in
+        let legacy = GenRequest::from_json(
+            &Json::parse(r#"{"id":1,"steps":10}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(!legacy.frozen_mask);
+        assert!(legacy.to_json().get("frozen_mask").is_none());
+        let mut r = GenRequest::new(2, 20);
+        r.frozen_mask = true;
+        let encoded = r.to_json().encode();
+        assert!(encoded.contains(r#""frozen_mask":true"#), "{encoded}");
+        let back =
+            GenRequest::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert!(back.frozen_mask);
+    }
+
+    #[test]
     fn preflight_response_shape() {
         let mut r = GenRequest::new(9, 40);
         r.policy = parse_policy("fixed:0").unwrap();
@@ -563,6 +600,10 @@ mod tests {
             "all(kl:0.001:0,fixed:90)",
             "min(50,any(entropy:0.25,klslope:0.02:5))",
             "ema(0.3,norm:0.05:3)",
+            "tokstab:4",
+            "tokentropy:0.1",
+            "any(tokstab:4,entropy:0.25)",
+            "min(10,tokentropy:0.05)",
         ] {
             let mut r = GenRequest::new(1, 100);
             r.policy = parse_policy(spec).unwrap();

@@ -25,9 +25,12 @@
 //!   [`ServeError::DeadlineExceeded`] if it expires while queued (the
 //!   owning worker enforces the same deadline once it is running); with
 //!   the fleet predictor's admission gate on, a deadline that is
-//!   infeasible *up front* (predicted steps × observed per-step latency
-//!   exceeds it) is rejected at submit with the typed
-//!   [`ServeError::InfeasibleDeadline`] before any device work;
+//!   infeasible *up front* ((predicted steps + predicted steps already
+//!   queued ahead for the family) × observed per-step latency exceeds
+//!   it) is rejected at submit with the typed
+//!   [`ServeError::InfeasibleDeadline`] before any device work — the
+//!   expected queue wait is priced in, so a fast device behind a deep
+//!   backlog rejects just like a slow device;
 //! * **predictive packing** — with the predictor's SRPT gate on,
 //!   `next_for` picks the same-priority candidate with the fewest
 //!   predicted remaining steps instead of strict FIFO (ties and
@@ -248,12 +251,39 @@ fn tab_get(tab: &[usize], idx: usize) -> usize {
     tab.get(idx).copied().unwrap_or(0)
 }
 
+/// Variable-amount variants for the predicted-steps table.
+fn tab_add(tab: &mut Vec<usize>, idx: usize, n: usize) {
+    if idx >= tab.len() {
+        tab.resize(idx + 1, 0);
+    }
+    tab[idx] += n;
+}
+
+fn tab_sub(tab: &mut [usize], idx: usize, n: usize) {
+    if let Some(v) = tab.get_mut(idx) {
+        *v = v.saturating_sub(n);
+    }
+}
+
+/// A queued request's contribution to its family's predicted-steps
+/// backlog: the admission-time prediction, or the full budget when it
+/// was admitted without one (cold start / predictor off — pessimistic,
+/// same convention as SRPT packing).
+fn queued_cost(q: &QueuedReq) -> usize {
+    q.predicted_steps.unwrap_or(q.req.n_steps)
+}
+
 struct State {
     queues: [VecDeque<QueuedReq>; Priority::COUNT],
     queued: usize,
     /// queued requests per family — the idle-wait predicate (a worker
     /// must not busy-wake on work only another family can serve)
     queued_by_family: Vec<usize>,
+    /// predicted steps queued per family ([`queued_cost`] summed over
+    /// the family's queued requests) — the admission gate's expected
+    /// queue wait; kept in lockstep with `queued_by_family` at every
+    /// mutation site
+    queued_steps_by_family: Vec<usize>,
     /// request id -> owning worker, for every admitted-but-unfinished
     /// request (cancellation routing)
     running: HashMap<u64, usize>,
@@ -329,6 +359,7 @@ impl Scheduler {
                 queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
                 queued: 0,
                 queued_by_family: vec![0; family_live.len()],
+                queued_steps_by_family: vec![0; family_live.len()],
                 running: HashMap::new(),
                 cancel_flags: HashSet::new(),
                 halt_flags: HashSet::new(),
@@ -458,17 +489,35 @@ impl Scheduler {
         let immediate = pre.is_some() || req.n_steps == 0;
         let class = req.priority.index();
 
-        // predictor consults happen here, BEFORE the state lock: the
-        // estimator has its own mutex and the lock discipline (state
-        // mutex never nested with any other) must hold
+        // predictor consults happen here, BEFORE the admission lock:
+        // the estimator has its own mutex and the lock discipline
+        // (state mutex never nested with any other) must hold.  The
+        // family's queued predicted-steps backlog — the expected queue
+        // wait the feasibility check prices in — is snapshotted under a
+        // brief state lock of its own, released before the estimator is
+        // consulted (a race with a concurrent pop only makes the
+        // snapshot conservative by one request).
         let (predicted_steps, infeasible) = match &self.predictor {
             Some(p) if !immediate => {
                 let predicted =
                     Some(p.est.predict_total(family, req.n_steps).steps);
                 let infeasible = p.admission
                     && req.deadline_ms.is_some_and(|d| {
+                        let ahead = {
+                            let st = self.state.lock().unwrap();
+                            tab_get(
+                                &st.queued_steps_by_family,
+                                family.index(),
+                            )
+                        };
                         matches!(
-                            check_feasibility(&p.est, family, req.n_steps, d),
+                            check_feasibility(
+                                &p.est,
+                                family,
+                                req.n_steps,
+                                ahead,
+                                d,
+                            ),
                             Feasibility::Infeasible { .. }
                         )
                     });
@@ -532,9 +581,15 @@ impl Scheduler {
                     family,
                     predicted_steps,
                 );
+                let cost = queued_cost(&q);
                 st.queues[class].push_back(q);
                 st.queued += 1;
                 tab_inc(&mut st.queued_by_family, family.index());
+                tab_add(
+                    &mut st.queued_steps_by_family,
+                    family.index(),
+                    cost,
+                );
                 Admit::Enqueued
             }
         };
@@ -601,6 +656,11 @@ impl Scheduler {
                         let q = st.queues[pi].remove(k).unwrap();
                         st.queued -= 1;
                         tab_dec(&mut st.queued_by_family, q.family.index());
+                        tab_sub(
+                            &mut st.queued_steps_by_family,
+                            q.family.index(),
+                            queued_cost(&q),
+                        );
                         st.live_ids.remove(&q.req.id);
                         expired.push(q);
                         // `best` indexes an earlier position (< k), so
@@ -629,6 +689,11 @@ impl Scheduler {
                     let q = st.queues[pi].remove(k).unwrap();
                     st.queued -= 1;
                     tab_dec(&mut st.queued_by_family, fam.index());
+                    tab_sub(
+                        &mut st.queued_steps_by_family,
+                        fam.index(),
+                        queued_cost(&q),
+                    );
                     st.running.insert(q.req.id, worker);
                     picked = Some(q);
                     break 'scan;
@@ -669,6 +734,11 @@ impl Scheduler {
             st.queued -= expired.len();
             for q in &expired {
                 tab_dec(&mut st.queued_by_family, q.family.index());
+                tab_sub(
+                    &mut st.queued_steps_by_family,
+                    q.family.index(),
+                    queued_cost(q),
+                );
                 st.live_ids.remove(&q.req.id);
             }
             expired
@@ -699,6 +769,11 @@ impl Scheduler {
             }
             if let Some(q) = &victim {
                 tab_dec(&mut st.queued_by_family, q.family.index());
+                tab_sub(
+                    &mut st.queued_steps_by_family,
+                    q.family.index(),
+                    queued_cost(q),
+                );
                 st.live_ids.remove(&q.req.id);
                 (CancelOutcome::Queued, victim)
             } else if st.running.contains_key(&id) {
@@ -737,6 +812,11 @@ impl Scheduler {
             }
             if let Some(q) = &victim {
                 tab_dec(&mut st.queued_by_family, q.family.index());
+                tab_sub(
+                    &mut st.queued_steps_by_family,
+                    q.family.index(),
+                    queued_cost(q),
+                );
                 st.live_ids.remove(&q.req.id);
                 (CancelOutcome::Queued, victim)
             } else if st.running.contains_key(&id) {
@@ -897,6 +977,9 @@ impl Scheduler {
                 if let Some(v) = st.queued_by_family.get_mut(fi) {
                     *v = 0;
                 }
+                if let Some(v) = st.queued_steps_by_family.get_mut(fi) {
+                    *v = 0;
+                }
                 for q in &drained {
                     st.live_ids.remove(&q.req.id);
                 }
@@ -918,6 +1001,14 @@ impl Scheduler {
     /// Requests admitted to a worker and not yet finished (fleet gauge).
     pub fn running_count(&self) -> usize {
         self.state.lock().unwrap().running.len()
+    }
+
+    /// Predicted steps queued ahead for a family — the backlog the
+    /// admission gate prices as expected queue wait.
+    pub fn queued_steps_for(&self, family: impl Into<FamilyId>) -> usize {
+        let family = family.into();
+        let st = self.state.lock().unwrap();
+        tab_get(&st.queued_steps_by_family, family.index())
     }
 }
 
@@ -1445,6 +1536,7 @@ mod tests {
             tokens: None,
             predicted_steps_remaining: None,
             predicted_total_steps: None,
+            frozen_mask: None,
         })
         .unwrap();
         let ev = prx.recv().unwrap();
@@ -1490,6 +1582,38 @@ mod tests {
         // no deadline = nothing to be infeasible against
         let (tx3, _rx3) = chan();
         assert!(s.submit(req(3, 600), tx3).is_ok());
+    }
+
+    #[test]
+    fn deep_queue_rejects_a_deadline_the_idle_fleet_could_meet() {
+        let s = sched(16, 1).with_predictor(
+            trained_est(),
+            true,
+            PackingMode::Fifo,
+        );
+        // stack up backlog: 5 × 600-budget requests, each predicted at
+        // ~100 steps → 500 queued steps ≈ 1000ms of queue wait
+        for id in 1..=5 {
+            let (tx, _rx) = chan();
+            s.submit(req(id, 600), tx).unwrap();
+        }
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 500);
+        // own work is ~200ms — fine idle, hopeless behind the queue:
+        // (100 own + 500 ahead) × 2ms ≈ 1200ms > 500ms deadline
+        let (tx, rx) = chan();
+        let mut r = req(6, 600);
+        r.deadline_ms = Some(500.0);
+        assert_eq!(s.submit(r, tx), Err(ServeError::InfeasibleDeadline));
+        assert!(rx.try_recv().is_err());
+        assert_eq!(s.metrics.lock().unwrap().rejected_infeasible, 1);
+        // draining the queue releases its priced backlog...
+        while s.next_for(0).is_some() {}
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 0);
+        // ...and the same deadline admits again
+        let (tx2, _rx2) = chan();
+        let mut ok = req(7, 600);
+        ok.deadline_ms = Some(500.0);
+        assert!(s.submit(ok, tx2).is_ok());
     }
 
     #[test]

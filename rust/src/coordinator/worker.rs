@@ -37,10 +37,12 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use super::request::{GenResponse, ProgressEvent};
 use super::scheduler::{Flagged, IdleWait, QueuedReq, Scheduler, ServeError};
-use crate::halting::{BoxedPolicy, NoHalt};
+use crate::halting::{BoxedPolicy, Decision, NoHalt};
 use crate::log_info;
 use crate::models::store::ParamStore;
-use crate::predictor::{bucket_for, Estimator, N_BUCKETS};
+use crate::predictor::{
+    bucket_for, slope_bucket_for, Estimator, N_BUCKETS, N_SLOPE_BUCKETS,
+};
 use crate::runtime::Runtime;
 use crate::sampler::{FamilyId, Session, SlotRequest};
 
@@ -74,6 +76,20 @@ struct Running {
     /// step at which this generation *first* entered each entropy
     /// bucket — the estimator's conditioned-EMA training signal
     bucket_entry: [Option<usize>; N_BUCKETS],
+    /// step at which this generation first entered each KL-slope
+    /// bucket (the estimator's second conditioning feature)
+    slope_entry: [Option<usize>; N_SLOPE_BUCKETS],
+    /// previous step's KL stat — the per-slot slope signal is the
+    /// one-step difference `kl - prev_kl`
+    prev_kl: Option<f32>,
+    /// positions freeze-pinned by this request's policy so far
+    tokens_frozen: u64,
+    /// token-steps spent stepping positions that were already frozen
+    /// (the numerator of `frozen_step_fraction`)
+    frozen_token_steps: u64,
+    /// token-level steps saved: at each freeze, newly-frozen positions
+    /// × the slot's remaining step budget
+    token_steps_saved: u64,
     /// latest live re-estimate `(remaining, total)` for the wire
     last_prediction: Option<(usize, usize)>,
 }
@@ -211,6 +227,11 @@ fn step_loop(
                     policy: Box::new(NoHalt),
                     started: Instant::now(),
                     bucket_entry: [None; N_BUCKETS],
+                    slope_entry: [None; N_SLOPE_BUCKETS],
+                    prev_kl: None,
+                    tokens_frozen: 0,
+                    frozen_token_steps: 0,
+                    token_steps_saved: 0,
                     last_prediction: None,
                     q,
                 });
@@ -347,18 +368,31 @@ fn step_loop(
                         final_stats: session.slots[slot].last_stats,
                     };
                     if let Some(est) = &cfg.predictor {
-                        est.observe_completion(
+                        est.observe_completion_full(
                             cfg.family,
                             steps,
                             &visited_buckets(&r.bucket_entry),
+                            &visited_slope(&r.slope_entry),
                         );
                     }
                     sched.finish(resp.id);
-                    metrics.lock().unwrap().record_completion(
-                        &resp,
-                        r.q.req.priority,
-                        cfg.family,
-                    );
+                    {
+                        let mut wm = metrics.lock().unwrap();
+                        wm.record_completion(
+                            &resp,
+                            r.q.req.priority,
+                            cfg.family,
+                        );
+                        if r.tokens_frozen > 0 {
+                            wm.record_token_halting(
+                                cfg.family,
+                                r.tokens_frozen,
+                                r.frozen_token_steps,
+                                r.token_steps_saved,
+                                (steps * session.seq_len) as u64,
+                            );
+                        }
+                    }
                     session.release_slot(slot);
                     let _ = r.q.reply.send(Ok(resp));
                 }
@@ -398,21 +432,81 @@ fn step_loop(
                 let Some(st) = stats[slot] else { continue };
                 let Some(r) = running[slot].as_mut() else { continue };
                 let executed = session.slots[slot].step;
-                let decision = r.policy.observe(executed - 1, &st);
+                // token-steps the step that just ran spent on already-
+                // pinned positions (numerator of frozen_step_fraction);
+                // counted BEFORE this observe's freeze verdict applies
+                r.frozen_token_steps += session.frozen_count(slot) as u64;
+                // token-level observe when per-position lanes are live
+                // (fused format-3 stats on a kernel that opts in); the
+                // observe_tokens default makes sequence-level policies
+                // behave identically on both call paths
+                let decision = match session.slot_token_lanes(slot) {
+                    Some(lanes) => {
+                        r.policy.observe_tokens(executed - 1, &st, &lanes)
+                    }
+                    None => r.policy.observe(executed - 1, &st),
+                };
+                // apply a freeze verdict: the session clamps the masked
+                // positions on-device like a dynamically-grown prefix;
+                // a slot with every position pinned is done and
+                // completes like a policy halt, reason "all_frozen"
+                let mut all_frozen = false;
+                if let Decision::Freeze { mask } = &decision {
+                    match session.freeze_positions(slot, mask) {
+                        Ok(newly) => {
+                            if newly > 0 {
+                                r.tokens_frozen += newly as u64;
+                                r.token_steps_saved += newly as u64
+                                    * r.q.req.n_steps.saturating_sub(executed)
+                                        as u64;
+                            }
+                            all_frozen = session.fully_frozen(slot);
+                        }
+                        Err(e) => {
+                            // freezing syncs the decode; a failed
+                            // download fails THIS request, typed
+                            let r = running[slot].take().unwrap();
+                            abort_download_failed(
+                                cfg,
+                                sched,
+                                metrics,
+                                session,
+                                slot,
+                                r,
+                                executed,
+                                &e.to_string(),
+                            );
+                            continue;
+                        }
+                    }
+                }
+                let halted = decision.halted() || all_frozen;
                 let exhausted = session.slot_exhausted(slot);
                 // predictor plumbing: remember when this generation
-                // first entered each entropy bucket (the estimator's
-                // training signal), and — when prediction is on the
-                // wire — refresh the live remaining-steps estimate
+                // first entered each entropy and KL-slope bucket (the
+                // estimator's training signal), and — when prediction
+                // is on the wire — refresh the live remaining-steps
+                // estimate with the slot's slope and frozen-fraction
+                // completeness features
+                let kl_slope = r.prev_kl.map(|p| st.kl - p);
+                r.prev_kl = Some(st.kl);
                 if let Some(est) = &cfg.predictor {
                     let b = bucket_for(&st);
                     if r.bucket_entry[b].is_none() {
                         r.bucket_entry[b] = Some(executed);
                     }
+                    if let Some(d) = kl_slope {
+                        let sb = slope_bucket_for(d);
+                        if r.slope_entry[sb].is_none() {
+                            r.slope_entry[sb] = Some(executed);
+                        }
+                    }
                     if cfg.predict_wire {
-                        let p = est.predict_remaining(
+                        let p = est.predict_remaining_with(
                             cfg.family,
                             &st,
+                            kl_slope,
+                            session.frozen_fraction(slot),
                             executed,
                             r.q.req.n_steps,
                         );
@@ -429,7 +523,7 @@ fn step_loop(
                 // the first failed send so the hot loop never retries
                 // into a closed channel.
                 let mut download_err: Option<String> = None;
-                if !(decision.halted() || exhausted) {
+                if !(halted || exhausted) {
                     let every = r.q.req.progress_every.unwrap_or(0);
                     if every > 0
                         && executed % every == 0
@@ -451,6 +545,16 @@ fn step_loop(
                                     predicted_total_steps: r
                                         .last_prediction
                                         .map(|(_, tot)| tot),
+                                    // per-position freeze state, only
+                                    // for requests that asked for it —
+                                    // default wire bytes are untouched
+                                    frozen_mask: if r.q.req.frozen_mask {
+                                        Some(
+                                            session.slot_frozen_mask(slot),
+                                        )
+                                    } else {
+                                        None
+                                    },
                                 };
                                 let dead =
                                     r.q.progress.as_ref().is_some_and(
@@ -476,9 +580,9 @@ fn step_loop(
                     );
                     continue;
                 }
-                if decision.halted() || exhausted {
+                if halted || exhausted {
                     let r = running[slot].take().unwrap();
-                    let halted_early = decision.halted() && !exhausted;
+                    let halted_early = halted && !exhausted;
                     // lazy token fetch: on the resident session path
                     // this is the step's one [B,L] download
                     let tokens = session.slot_output(slot);
@@ -495,8 +599,14 @@ fn step_loop(
                         steps_executed: executed,
                         steps_budget: r.q.req.n_steps,
                         halted_early,
+                        // a halt verdict names its primitive; a slot
+                        // that ran out of unfrozen positions halted
+                        // because every token froze
                         halt_reason: if halted_early {
-                            decision.reason().map(str::to_string)
+                            decision
+                                .reason()
+                                .map(str::to_string)
+                                .or_else(|| Some("all_frozen".to_string()))
                         } else {
                             None
                         },
@@ -518,12 +628,14 @@ fn step_loop(
                     };
                     // every natural completion trains the estimator:
                     // total halt-steps plus the per-bucket first-entry
-                    // steps this generation recorded along the way
+                    // steps (entropy AND KL-slope) this generation
+                    // recorded along the way
                     if let Some(est) = &cfg.predictor {
-                        est.observe_completion(
+                        est.observe_completion_full(
                             cfg.family,
                             executed,
                             &visited_buckets(&r.bucket_entry),
+                            &visited_slope(&r.slope_entry),
                         );
                     }
                     sched.finish(resp.id);
@@ -543,6 +655,18 @@ fn step_loop(
             }
             for (resp, r) in &done {
                 wm.record_completion(resp, r.q.req.priority, cfg.family);
+                // token-halting lanes: how many positions froze, the
+                // token-steps spent on pinned positions, and the
+                // token-level budget saving those freezes represent
+                if r.tokens_frozen > 0 {
+                    wm.record_token_halting(
+                        cfg.family,
+                        r.tokens_frozen,
+                        r.frozen_token_steps,
+                        r.token_steps_saved,
+                        (resp.steps_executed * session.seq_len) as u64,
+                    );
+                }
                 // realized prediction error for the admission-time
                 // estimate (MAE lane; natural completions only — a
                 // client halt would grade the predictor on the
@@ -579,6 +703,17 @@ fn step_loop(
 /// entropy bucket the generation visited, with the step it first
 /// entered it at.
 fn visited_buckets(entry: &[Option<usize>; N_BUCKETS]) -> Vec<(usize, usize)> {
+    entry
+        .iter()
+        .enumerate()
+        .filter_map(|(b, s)| s.map(|s| (b, s)))
+        .collect()
+}
+
+/// Same, for the KL-slope buckets the generation visited.
+fn visited_slope(
+    entry: &[Option<usize>; N_SLOPE_BUCKETS],
+) -> Vec<(usize, usize)> {
     entry
         .iter()
         .enumerate()

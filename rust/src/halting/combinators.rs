@@ -3,7 +3,7 @@
 //! the primitive that fired, so per-reason metrics stay meaningful under
 //! composition.
 
-use super::{BoxedPolicy, Decision, HaltPolicy, StepStats};
+use super::{BoxedPolicy, Decision, HaltPolicy, StepStats, TokenStats};
 
 fn join_specs(policies: &[BoxedPolicy]) -> String {
     policies
@@ -11,6 +11,21 @@ fn join_specs(policies: &[BoxedPolicy]) -> String {
         .map(|p| p.to_spec())
         .collect::<Vec<_>>()
         .join(",")
+}
+
+/// Fold a leg's freeze mask into the union accumulator.
+fn union_freeze(acc: &mut Option<Vec<bool>>, mask: &[bool]) {
+    match acc {
+        None => *acc = Some(mask.to_vec()),
+        Some(u) => {
+            if u.len() < mask.len() {
+                u.resize(mask.len(), false);
+            }
+            for (a, &m) in u.iter_mut().zip(mask) {
+                *a |= m;
+            }
+        }
+    }
 }
 
 /// Halt as soon as any inner policy fires; the reason is the firing
@@ -39,6 +54,32 @@ impl HaltPolicy for Any {
             }
         }
         first
+    }
+
+    fn observe_tokens(
+        &mut self,
+        step: usize,
+        stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        // halt wins over freeze; freeze masks from different legs union
+        let mut halt = Decision::Continue;
+        let mut freeze: Option<Vec<bool>> = None;
+        for p in &mut self.policies {
+            let d = p.observe_tokens(step, stats, tok);
+            if let Some(mask) = d.freeze_mask() {
+                union_freeze(&mut freeze, mask);
+            } else if !halt.halted() && d.halted() {
+                halt = d;
+            }
+        }
+        if halt.halted() {
+            halt
+        } else if let Some(mask) = freeze {
+            Decision::Freeze { mask }
+        } else {
+            Decision::Continue
+        }
     }
 
     fn reset(&mut self) {
@@ -115,6 +156,40 @@ impl HaltPolicy for All {
         }
     }
 
+    fn observe_tokens(
+        &mut self,
+        step: usize,
+        stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        // halts latch towards the conjunction as in `observe`; freezes
+        // are *actions*, not votes — they apply immediately and never
+        // latch a leg
+        let mut freeze: Option<Vec<bool>> = None;
+        for (i, p) in self.policies.iter_mut().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            match p.observe_tokens(step, stats, tok) {
+                Decision::Halt { reason } => {
+                    self.fired[i] = true;
+                    self.reason = Some(reason);
+                }
+                Decision::Freeze { mask } => union_freeze(&mut freeze, &mask),
+                Decision::Continue => {}
+            }
+        }
+        if !self.fired.is_empty() && self.fired.iter().all(|&f| f) {
+            Decision::Halt {
+                reason: self.reason.unwrap_or("all"),
+            }
+        } else if let Some(mask) = freeze {
+            Decision::Freeze { mask }
+        } else {
+            Decision::Continue
+        }
+    }
+
     fn reset(&mut self) {
         for p in &mut self.policies {
             p.reset();
@@ -176,6 +251,22 @@ impl HaltPolicy for MinSteps {
         }
     }
 
+    fn observe_tokens(
+        &mut self,
+        step: usize,
+        stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        // the guard suppresses freezes as well as halts: no position may
+        // be pinned before `min` steps have run
+        let d = self.inner.observe_tokens(step, stats, tok);
+        if step + 1 >= self.min {
+            d
+        } else {
+            Decision::Continue
+        }
+    }
+
     fn reset(&mut self) {
         self.inner.reset();
     }
@@ -220,10 +311,8 @@ impl Ema {
             state: None,
         }
     }
-}
 
-impl HaltPolicy for Ema {
-    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+    fn smooth(&mut self, stats: &StepStats) -> StepStats {
         let sm = match self.state {
             None => *stats,
             Some(prev) => {
@@ -239,7 +328,27 @@ impl HaltPolicy for Ema {
             }
         };
         self.state = Some(sm);
+        sm
+    }
+}
+
+impl HaltPolicy for Ema {
+    fn observe(&mut self, step: usize, stats: &StepStats) -> Decision {
+        let sm = self.smooth(stats);
         self.inner.observe(step, &sm)
+    }
+
+    fn observe_tokens(
+        &mut self,
+        step: usize,
+        stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        // scalar signals are smoothed; token lanes pass through raw (the
+        // argmax-changed lane is a discrete flag — averaging it would
+        // change the tokstab run semantics)
+        let sm = self.smooth(stats);
+        self.inner.observe_tokens(step, &sm, tok)
     }
 
     fn reset(&mut self) {

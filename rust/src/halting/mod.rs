@@ -22,7 +22,10 @@ mod policies;
 mod spec;
 
 pub use combinators::{All, Any, Ema, MinSteps};
-pub use policies::{Entropy, Fixed, Kl, KlSlope, NoHalt, NormStable, Patience};
+pub use policies::{
+    Entropy, Fixed, Kl, KlSlope, NoHalt, NormStable, Patience, TokEntropy,
+    TokStab,
+};
 pub use spec::{parse_policy, PrimitiveCtor, Registry};
 
 /// Per-step statistics for one batch slot (produced by the step artifact).
@@ -35,13 +38,32 @@ pub struct StepStats {
     pub norm_x: f32,
 }
 
+/// Per-position statistics for one batch slot (format-3 artifacts download
+/// these as lanes of the fused stat tensor).  All slices have length L.
+///
+/// `entropy[p]` is H(p_p) at position p, `changed[p]` is 1.0 where the
+/// argmax token changed this step, and `frozen[p]` is 1.0 where the
+/// position is already frozen (policies should not re-freeze those).
+#[derive(Clone, Copy, Debug)]
+pub struct TokenStats<'a> {
+    pub entropy: &'a [f32],
+    pub changed: &'a [f32],
+    pub frozen: &'a [f32],
+}
+
 /// Outcome of feeding one step's statistics to a policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Decision {
     Continue,
     /// Stop generating; `reason` names the primitive policy that fired
     /// (combinators propagate the inner reason).
     Halt { reason: &'static str },
+    /// Freeze the positions where `mask[p]` is true (token-level early
+    /// stopping): the session clamps them on-device like a
+    /// dynamically-grown prefix, and generation continues for the rest.
+    /// A slot whose positions are all frozen halts with reason
+    /// `"all_frozen"`.
+    Freeze { mask: Vec<bool> },
 }
 
 impl Decision {
@@ -52,7 +74,15 @@ impl Decision {
     pub fn reason(&self) -> Option<&'static str> {
         match self {
             Decision::Halt { reason } => Some(reason),
-            Decision::Continue => None,
+            _ => None,
+        }
+    }
+
+    /// The freeze mask, if this decision freezes positions.
+    pub fn freeze_mask(&self) -> Option<&[bool]> {
+        match self {
+            Decision::Freeze { mask } => Some(mask),
+            _ => None,
         }
     }
 }
@@ -66,6 +96,22 @@ impl Decision {
 pub trait HaltPolicy: Send {
     /// Feed one completed step's statistics; decide whether to stop.
     fn observe(&mut self, step: usize, stats: &StepStats) -> Decision;
+
+    /// Feed one step's statistics *with* per-position signals.  The
+    /// engine calls this (instead of `observe`) when token lanes are
+    /// available — format-3 artifacts on a kernel that supports token
+    /// halting.  Token-level policies override it to return
+    /// [`Decision::Freeze`]; the default ignores the lanes, so
+    /// sequence-level policies behave identically on both call paths.
+    fn observe_tokens(
+        &mut self,
+        step: usize,
+        stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        let _ = tok;
+        self.observe(step, stats)
+    }
 
     /// Clear per-request state (policies are cloned into batch slots and
     /// reset on admission).
@@ -393,6 +439,10 @@ mod tests {
             "min(50,entropy:0.25)",
             "ema(0.3,entropy:0.25)",
             "any(ema(0.25,entropy:0.5),min(10,kl:0.001:0),fixed:90)",
+            "tokstab:8",
+            "tokentropy:0.1",
+            "any(entropy:0.5,tokstab:8)",
+            "min(20,any(tokentropy:0.05,tokstab:6,kl:0.001:0))",
         ] {
             let p = parse_policy(spec)
                 .unwrap_or_else(|| panic!("{spec} must parse"));
@@ -424,8 +474,173 @@ mod tests {
             "ema(0.3)",
             "nope(entropy:0.5)",
             "any(bogus:1,entropy:0.5)",
+            "tokstab",
+            "tokstab:0",
+            "tokstab:8:2",
+            "tokentropy",
+            "tokentropy:x",
         ] {
             assert!(parse_policy(bad).is_none(), "{bad:?} must be rejected");
+        }
+    }
+
+    /// TokenStats over owned lanes, for tests.
+    pub(crate) struct TokLanes {
+        pub entropy: Vec<f32>,
+        pub changed: Vec<f32>,
+        pub frozen: Vec<f32>,
+    }
+
+    impl TokLanes {
+        pub(crate) fn new(l: usize) -> TokLanes {
+            TokLanes {
+                entropy: vec![1.0; l],
+                changed: vec![1.0; l],
+                frozen: vec![0.0; l],
+            }
+        }
+
+        pub(crate) fn view(&self) -> TokenStats<'_> {
+            TokenStats {
+                entropy: &self.entropy,
+                changed: &self.changed,
+                frozen: &self.frozen,
+            }
+        }
+    }
+
+    #[test]
+    fn tokstab_freezes_after_n_stable_steps() {
+        let mut p = TokStab::new(3);
+        let mut lanes = TokLanes::new(4);
+        lanes.changed = vec![0.0, 0.0, 1.0, 0.0];
+        let st = stats(1.0, 1.0, 1.0);
+        // step 0 never counts (no previous tokens); then 3 stable steps
+        for step in 0..3 {
+            assert_eq!(
+                p.observe_tokens(step, &st, &lanes.view()),
+                Decision::Continue,
+                "step {step}"
+            );
+        }
+        let d = p.observe_tokens(3, &st, &lanes.view());
+        assert_eq!(
+            d.freeze_mask(),
+            Some(&[true, true, false, true][..]),
+            "positions stable for 3 steps freeze; churning position 2 not"
+        );
+        // a change resets the run
+        let mut q = TokStab::new(2);
+        let mut lanes = TokLanes::new(1);
+        lanes.changed[0] = 0.0;
+        assert!(q.observe_tokens(0, &st, &lanes.view()).freeze_mask().is_none());
+        assert!(q.observe_tokens(1, &st, &lanes.view()).freeze_mask().is_none());
+        lanes.changed[0] = 1.0; // churn: run back to 0
+        assert!(q.observe_tokens(2, &st, &lanes.view()).freeze_mask().is_none());
+        lanes.changed[0] = 0.0;
+        assert!(q.observe_tokens(3, &st, &lanes.view()).freeze_mask().is_none());
+        assert!(q.observe_tokens(4, &st, &lanes.view()).freeze_mask().is_some());
+    }
+
+    #[test]
+    fn tokstab_skips_frozen_positions_and_is_inert_without_lanes() {
+        let mut p = TokStab::new(1);
+        let mut lanes = TokLanes::new(2);
+        lanes.changed = vec![0.0, 0.0];
+        lanes.frozen = vec![1.0, 0.0]; // position 0 already frozen
+        let st = stats(1.0, 1.0, 1.0);
+        p.observe_tokens(0, &st, &lanes.view());
+        let d = p.observe_tokens(1, &st, &lanes.view());
+        assert_eq!(d.freeze_mask(), Some(&[false, true][..]));
+        // sequence-level observe path: never halts, never freezes
+        let mut q = TokStab::new(1);
+        for i in 0..50 {
+            assert_eq!(q.observe(i, &st), Decision::Continue);
+        }
+    }
+
+    #[test]
+    fn tokentropy_freezes_low_entropy_positions() {
+        let mut p = TokEntropy::new(0.5);
+        let mut lanes = TokLanes::new(3);
+        lanes.entropy = vec![0.1, 2.0, 0.4];
+        let st = stats(1.0, 1.0, 1.0);
+        let d = p.observe_tokens(0, &st, &lanes.view());
+        assert_eq!(d.freeze_mask(), Some(&[true, false, true][..]));
+        // frozen positions are not re-frozen
+        lanes.frozen = vec![1.0, 0.0, 1.0];
+        assert_eq!(
+            p.observe_tokens(1, &st, &lanes.view()),
+            Decision::Continue
+        );
+    }
+
+    #[test]
+    fn any_combines_halt_and_freeze_with_halt_winning() {
+        // freeze-only step: the union of both token legs' masks
+        let mut p = Any::new(vec![
+            Box::new(TokEntropy::new(0.5)),
+            Box::new(TokStab::new(1)),
+            Box::new(Entropy::new(0.1)),
+        ]);
+        let mut lanes = TokLanes::new(3);
+        lanes.entropy = vec![0.1, 2.0, 2.0];
+        lanes.changed = vec![1.0, 1.0, 0.0];
+        let st = stats(1.0, 1.0, 1.0);
+        p.observe_tokens(0, &st, &lanes.view());
+        let d = p.observe_tokens(1, &st, &lanes.view());
+        assert_eq!(d.freeze_mask(), Some(&[true, false, true][..]));
+        // a halting leg wins over freezes in the same step
+        let low = stats(0.05, 1.0, 1.0);
+        let d = p.observe_tokens(2, &low, &lanes.view());
+        assert_eq!(d, Decision::Halt { reason: "entropy" });
+    }
+
+    #[test]
+    fn min_steps_suppresses_freezes_too() {
+        let mut p = MinSteps::new(5, Box::new(TokEntropy::new(0.5)));
+        let mut low = TokLanes::new(2);
+        low.entropy = vec![0.0, 0.0];
+        let st = stats(1.0, 1.0, 1.0);
+        for step in 0..4 {
+            assert_eq!(
+                p.observe_tokens(step, &st, &low.view()),
+                Decision::Continue,
+                "guarded step {step}"
+            );
+        }
+        assert!(p
+            .observe_tokens(4, &st, &low.view())
+            .freeze_mask()
+            .is_some());
+    }
+
+    #[test]
+    fn sequence_policies_identical_on_both_observe_paths() {
+        // the default observe_tokens must not change sequence-level
+        // behaviour: drive the same policy over both call paths
+        let trace: Vec<StepStats> =
+            (0..60).map(|i| stats(2.0 - 0.04 * i as f32, 0.1, 1.0)).collect();
+        let lanes = TokLanes::new(8);
+        for spec in ["entropy:0.5", "patience:5:0", "kl:0.15:10", "fixed:30"] {
+            let via_observe = {
+                let mut p = parse_policy(spec).unwrap();
+                p.reset();
+                trace
+                    .iter()
+                    .enumerate()
+                    .find_map(|(i, st)| p.observe(i, st).halted().then_some(i))
+            };
+            let via_tokens = {
+                let mut p = parse_policy(spec).unwrap();
+                p.reset();
+                trace.iter().enumerate().find_map(|(i, st)| {
+                    p.observe_tokens(i, st, &lanes.view())
+                        .halted()
+                        .then_some(i)
+                })
+            };
+            assert_eq!(via_observe, via_tokens, "{spec}");
         }
     }
 

@@ -2,7 +2,7 @@
 //! baseline, and two signals the closed enum API could not express
 //! (norm stabilisation, relative-KL-slope).
 
-use super::{BoxedPolicy, Decision, HaltPolicy, StepStats};
+use super::{BoxedPolicy, Decision, HaltPolicy, StepStats, TokenStats};
 
 /// Algorithm 1: halt when the entropy of p(x0|x_t, t) drops to
 /// `threshold`.
@@ -302,6 +302,135 @@ impl HaltPolicy for KlSlope {
 
     fn to_spec(&self) -> String {
         format!("klslope:{}:{}", self.flat, self.window)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(*self)
+    }
+}
+
+/// Token-level argmax stability: freeze a position once its argmax token
+/// has been unchanged for `n` consecutive steps ("Just on Time"-style
+/// per-token early stopping).  Run lengths accumulate host-side from the
+/// per-position argmax-changed lane; already-frozen positions are
+/// skipped.  Without token lanes (format-2 artifacts, or a kernel that
+/// opts out of token halting) this policy is inert — it never halts a
+/// sequence by itself.
+#[derive(Clone, Debug)]
+pub struct TokStab {
+    pub n: u32,
+    runs: Vec<u32>,
+}
+
+impl TokStab {
+    pub fn new(n: u32) -> TokStab {
+        TokStab {
+            n: n.max(1),
+            runs: Vec::new(),
+        }
+    }
+}
+
+impl HaltPolicy for TokStab {
+    fn observe(&mut self, _step: usize, _stats: &StepStats) -> Decision {
+        Decision::Continue
+    }
+
+    fn observe_tokens(
+        &mut self,
+        step: usize,
+        _stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        let l = tok.changed.len();
+        self.runs.resize(l, 0);
+        let mut mask = vec![false; l];
+        let mut any = false;
+        for p in 0..l {
+            if tok.frozen[p] > 0.5 {
+                continue;
+            }
+            // step 0 has no previous tokens to compare against
+            if step > 0 && tok.changed[p] <= 0.5 {
+                self.runs[p] += 1;
+            } else {
+                self.runs[p] = 0;
+            }
+            if self.runs[p] >= self.n {
+                mask[p] = true;
+                any = true;
+            }
+        }
+        if any {
+            Decision::Freeze { mask }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn reset(&mut self) {
+        self.runs.clear();
+    }
+
+    fn name(&self) -> &'static str {
+        "tokstab"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("tokstab:{}", self.n)
+    }
+
+    fn clone_box(&self) -> BoxedPolicy {
+        Box::new(self.clone())
+    }
+}
+
+/// Token-level entropy: freeze a position once its own entropy H(p_p)
+/// drops to `threshold` (the per-position form of Algorithm 1).  Inert
+/// without token lanes, like [`TokStab`].
+#[derive(Clone, Copy, Debug)]
+pub struct TokEntropy {
+    pub threshold: f32,
+}
+
+impl TokEntropy {
+    pub fn new(threshold: f32) -> TokEntropy {
+        TokEntropy { threshold }
+    }
+}
+
+impl HaltPolicy for TokEntropy {
+    fn observe(&mut self, _step: usize, _stats: &StepStats) -> Decision {
+        Decision::Continue
+    }
+
+    fn observe_tokens(
+        &mut self,
+        _step: usize,
+        _stats: &StepStats,
+        tok: &TokenStats<'_>,
+    ) -> Decision {
+        let mut mask = vec![false; tok.entropy.len()];
+        let mut any = false;
+        for (p, m) in mask.iter_mut().enumerate() {
+            if tok.frozen[p] <= 0.5 && tok.entropy[p] <= self.threshold {
+                *m = true;
+                any = true;
+            }
+        }
+        if any {
+            Decision::Freeze { mask }
+        } else {
+            Decision::Continue
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "tokentropy"
+    }
+
+    fn to_spec(&self) -> String {
+        format!("tokentropy:{}", self.threshold)
     }
 
     fn clone_box(&self) -> BoxedPolicy {

@@ -13,16 +13,22 @@
 //! ```
 //!
 //! Built-in primitives: `entropy:T`, `patience:P[:TOL]`, `kl:T[:MIN]`,
-//! `fixed:N`, `none`, `norm:T[:P]`, `klslope:F[:W]`.  The bracketed
-//! arguments default to the legacy enum's values, so every pre-DSL spec
-//! string (`entropy:0.5`, `patience:20`, `kl:1e-3:250`, `fixed:600`,
-//! `none`) parses to an equivalent policy.  `HaltPolicy::to_spec` emits
-//! the canonical fully-argumented form and round-trips through
-//! [`parse_policy`].
+//! `fixed:N`, `none`, `norm:T[:P]`, `klslope:F[:W]`, plus the
+//! token-level primitives `tokstab:N` (freeze a position once its argmax
+//! is unchanged N steps) and `tokentropy:T` (freeze when a position's
+//! own entropy drops to T).  The bracketed arguments default to the
+//! legacy enum's values, so every pre-DSL spec string (`entropy:0.5`,
+//! `patience:20`, `kl:1e-3:250`, `fixed:600`, `none`) parses to an
+//! equivalent policy.  `HaltPolicy::to_spec` emits the canonical
+//! fully-argumented form and round-trips through [`parse_policy`].
+//! Token-level primitives compose like any other —
+//! `any(entropy:0.5,tokstab:8)` freezes settled positions while the
+//! entropy criterion can still halt the whole sequence.
 
 use super::combinators::{All, Any, Ema, MinSteps};
 use super::policies::{
-    Entropy, Fixed, Kl, KlSlope, NoHalt, NormStable, Patience,
+    Entropy, Fixed, Kl, KlSlope, NoHalt, NormStable, Patience, TokEntropy,
+    TokStab,
 };
 use super::BoxedPolicy;
 
@@ -47,6 +53,8 @@ impl Registry {
         r.register("fixed", ctor_fixed);
         r.register("norm", ctor_norm);
         r.register("klslope", ctor_klslope);
+        r.register("tokstab", ctor_tokstab);
+        r.register("tokentropy", ctor_tokentropy);
         r
     }
 
@@ -207,4 +215,22 @@ fn ctor_klslope(args: &[&str]) -> Option<BoxedPolicy> {
         None => 5,
     };
     Some(Box::new(KlSlope::new(flat, window)))
+}
+
+fn ctor_tokstab(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.len() != 1 {
+        return None;
+    }
+    let n: u32 = args[0].parse().ok()?;
+    if n == 0 {
+        return None;
+    }
+    Some(Box::new(TokStab::new(n)))
+}
+
+fn ctor_tokentropy(args: &[&str]) -> Option<BoxedPolicy> {
+    if args.len() != 1 {
+        return None;
+    }
+    Some(Box::new(TokEntropy::new(args[0].parse().ok()?)))
 }

@@ -15,9 +15,12 @@
 //! request is admitted.  (Steps-side cold start is fine — the budget
 //! upper-bounds the step count, making the estimate pessimistic, and
 //! a pessimistic estimate that still fits the deadline is safe to
-//! admit.)  Queue wait is intentionally NOT modelled: admission
-//! rejects only deadlines that are infeasible even on an idle fleet,
-//! leaving queue-induced misses to the existing expiry sweep.
+//! admit.)  Queue wait IS modelled: the scheduler passes the
+//! predicted steps already queued ahead for this family
+//! (`queued_steps_ahead`), so a deadline that would be met on an idle
+//! fleet but cannot survive the current backlog is rejected up front
+//! too — a fast device behind a deep queue is just as infeasible as a
+//! slow device.
 
 use crate::sampler::FamilyId;
 
@@ -38,18 +41,22 @@ pub enum Feasibility {
 }
 
 /// Check whether `deadline_ms` is feasible for a request of `family`
-/// with step budget `budget`.
+/// with step budget `budget`, given `queued_steps_ahead` predicted
+/// steps already waiting in this family's queue (the expected queue
+/// wait prices in at the same per-step latency as the request's own
+/// steps; pass 0 for an idle-fleet check).
 pub fn check(
     est: &Estimator,
     family: FamilyId,
     budget: usize,
+    queued_steps_ahead: usize,
     deadline_ms: f64,
 ) -> Feasibility {
     let Some(per_step_ms) = est.step_latency_ms(family) else {
         return Feasibility::Unknown;
     };
     let steps = est.predict_total(family, budget).steps;
-    let predicted_ms = steps as f64 * per_step_ms;
+    let predicted_ms = (steps + queued_steps_ahead) as f64 * per_step_ms;
     if predicted_ms > deadline_ms {
         Feasibility::Infeasible { predicted_ms }
     } else {
@@ -69,7 +76,7 @@ mod tests {
     #[test]
     fn cold_start_is_unknown() {
         let est = Estimator::new();
-        assert_eq!(check(&est, fam(), 600, 1.0), Feasibility::Unknown);
+        assert_eq!(check(&est, fam(), 600, 0, 1.0), Feasibility::Unknown);
     }
 
     #[test]
@@ -80,8 +87,8 @@ mod tests {
             est.observe_step_latency(fam(), 2.0);
         }
         // ~100 steps × ~2ms = ~200ms predicted
-        assert_eq!(check(&est, fam(), 600, 1_000.0), Feasibility::Feasible);
-        match check(&est, fam(), 600, 50.0) {
+        assert_eq!(check(&est, fam(), 600, 0, 1_000.0), Feasibility::Feasible);
+        match check(&est, fam(), 600, 0, 50.0) {
             Feasibility::Infeasible { predicted_ms } => {
                 assert!(predicted_ms > 150.0 && predicted_ms < 250.0);
             }
@@ -96,9 +103,33 @@ mod tests {
         est.observe_step_latency(fam(), 10.0);
         // 600-step budget × 10ms = 6000ms predicted
         assert!(matches!(
-            check(&est, fam(), 600, 1_000.0),
+            check(&est, fam(), 600, 0, 1_000.0),
             Feasibility::Infeasible { .. }
         ));
-        assert_eq!(check(&est, fam(), 600, 10_000.0), Feasibility::Feasible);
+        assert_eq!(check(&est, fam(), 600, 0, 10_000.0), Feasibility::Feasible);
+    }
+
+    #[test]
+    fn deep_queue_makes_a_fast_device_infeasible() {
+        let est = Estimator::new();
+        for _ in 0..20 {
+            est.observe_completion(fam(), 100, &[]);
+            est.observe_step_latency(fam(), 2.0);
+        }
+        // idle fleet: ~200ms predicted, 500ms deadline → feasible
+        assert_eq!(check(&est, fam(), 600, 0, 500.0), Feasibility::Feasible);
+        // same request behind 1000 queued predicted steps: the queue
+        // alone costs ~2000ms — the fast device cannot save it
+        match check(&est, fam(), 600, 1_000, 500.0) {
+            Feasibility::Infeasible { predicted_ms } => {
+                assert!(predicted_ms > 2_000.0, "{predicted_ms}");
+            }
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+        // a deadline generous enough for queue + own steps still admits
+        assert_eq!(
+            check(&est, fam(), 600, 1_000, 10_000.0),
+            Feasibility::Feasible
+        );
     }
 }

@@ -6,8 +6,10 @@
 //! whose entropy has already collapsed will halt soon, one still at
 //! high entropy will not.  This module turns that observation into a
 //! cheap per-family estimator — an EMA of observed halt-steps,
-//! conditioned on the current entropy bucket — that the scheduler and
-//! workers can consult in O(1) with no device work.
+//! conditioned on the current entropy bucket and (when the caller
+//! tracks it) the KL-slope bucket, scaled by the token-level frozen
+//! fraction — that the scheduler and workers can consult in O(1) with
+//! no device work.
 //!
 //! Two kinds of estimate:
 //!
@@ -52,6 +54,29 @@ pub fn bucket_for(stats: &StepStats) -> usize {
     N_BUCKETS - 1
 }
 
+/// Number of KL-slope buckets the remaining-steps estimate is
+/// additionally conditioned on (see [`slope_bucket_for`]).
+pub const N_SLOPE_BUCKETS: usize = 4;
+
+/// Geometric |Δkl| ladder: bucket 0 is "KL trajectory flat" (the
+/// klslope halting signal about to fire), bucket 3 is "still moving".
+const SLOPE_EDGES: [f32; N_SLOPE_BUCKETS - 1] = [1e-4, 1e-3, 1e-2];
+
+/// Map a per-step KL delta (`|kl_t - kl_{t-1}|`) to its slope bucket.
+/// The KL *slope* is a second completeness signal orthogonal to the
+/// entropy level: a slot can sit at mid entropy with a flat KL
+/// trajectory (nearly done) or at the same entropy with KL still
+/// falling fast (far from done).
+pub fn slope_bucket_for(kl_slope: f32) -> usize {
+    let s = kl_slope.abs();
+    for (i, edge) in SLOPE_EDGES.iter().enumerate() {
+        if s < *edge {
+            return i;
+        }
+    }
+    N_SLOPE_BUCKETS - 1
+}
+
 /// Exponential moving average that knows whether it has ever observed
 /// anything (cold start must be distinguishable from "EMA happens to
 /// be zero").
@@ -85,6 +110,8 @@ struct FamilyEntry {
     total_steps: Ema,
     /// EMA of steps-remaining at first entry into each entropy bucket
     remaining_by_bucket: Vec<Ema>,
+    /// EMA of steps-remaining at first entry into each KL-slope bucket
+    remaining_by_slope: Vec<Ema>,
     /// EMA of observed per-step device latency (batched step, ms)
     step_latency_ms: Ema,
     /// completions observed (same as `total_steps.n`, kept explicit)
@@ -97,6 +124,7 @@ impl FamilyEntry {
             name,
             total_steps: Ema::default(),
             remaining_by_bucket: vec![Ema::default(); N_BUCKETS],
+            remaining_by_slope: vec![Ema::default(); N_SLOPE_BUCKETS],
             step_latency_ms: Ema::default(),
             completions: 0,
         }
@@ -190,21 +218,54 @@ impl Estimator {
         step: usize,
         budget: usize,
     ) -> Prediction {
+        self.predict_remaining_with(family, stats, None, 0.0, step, budget)
+    }
+
+    /// [`Self::predict_remaining`] with the two extra conditioning
+    /// features the worker tracks per slot:
+    ///
+    /// - `kl_slope` — the last per-step KL delta; when available, the
+    ///   slope-bucket EMA is averaged with the entropy-bucket EMA
+    ///   (two orthogonal completeness signals beat either alone);
+    /// - `frozen_fraction` — fraction of positions pinned by
+    ///   token-level freezes; a sequence 40% frozen has roughly 60%
+    ///   of its denoising left, so informed estimates scale by
+    ///   `1 - frozen_fraction`.
+    pub fn predict_remaining_with(
+        &self,
+        family: FamilyId,
+        stats: &StepStats,
+        kl_slope: Option<f32>,
+        frozen_fraction: f32,
+        step: usize,
+        budget: usize,
+    ) -> Prediction {
         let cap = budget.saturating_sub(step);
         let bucket = bucket_for(stats);
-        let (by_bucket, total) = self
+        let sbucket = kl_slope.map(slope_bucket_for);
+        let (by_bucket, by_slope, total) = self
             .read_entry(family, |e| {
-                (e.remaining_by_bucket[bucket].get(), e.total_steps.get())
+                (
+                    e.remaining_by_bucket[bucket].get(),
+                    sbucket.and_then(|s| e.remaining_by_slope[s].get()),
+                    e.total_steps.get(),
+                )
             })
-            .unwrap_or((None, None));
-        if let Some(v) = by_bucket {
+            .unwrap_or((None, None, None));
+        let scale = 1.0 - f64::from(frozen_fraction.clamp(0.0, 1.0));
+        let informed = match (by_bucket, by_slope) {
+            (Some(a), Some(b)) => Some((a + b) / 2.0),
+            (a, b) => a.or(b),
+        };
+        if let Some(v) = informed {
             return Prediction {
-                steps: (v.round().max(0.0) as usize).min(cap),
+                steps: ((v * scale).round().max(0.0) as usize).min(cap),
                 informed: true,
             };
         }
         if let Some(v) = total {
             let rem = (v.round().max(0.0) as usize).saturating_sub(step);
+            let rem = (rem as f64 * scale).round() as usize;
             return Prediction { steps: rem.min(cap), informed: true };
         }
         Prediction { steps: cap, informed: false }
@@ -220,6 +281,21 @@ impl Estimator {
         total_steps: usize,
         visited: &[(usize, usize)],
     ) {
+        self.observe_completion_full(family, total_steps, visited, &[]);
+    }
+
+    /// [`Self::observe_completion`] plus the KL-slope bucket entries:
+    /// `slope_visited` lists `(slope_bucket, entry_step)` for every
+    /// slope bucket the generation first entered, feeding the
+    /// slope-conditioned EMA that
+    /// [`Self::predict_remaining_with`] consults.
+    pub fn observe_completion_full(
+        &self,
+        family: FamilyId,
+        total_steps: usize,
+        visited: &[(usize, usize)],
+        slope_visited: &[(usize, usize)],
+    ) {
         self.with_entry(family, |e, alpha| {
             e.total_steps.observe(total_steps as f64, alpha);
             e.completions += 1;
@@ -227,6 +303,12 @@ impl Estimator {
                 if bucket < N_BUCKETS {
                     let rem = total_steps.saturating_sub(entry_step);
                     e.remaining_by_bucket[bucket].observe(rem as f64, alpha);
+                }
+            }
+            for &(bucket, entry_step) in slope_visited {
+                if bucket < N_SLOPE_BUCKETS {
+                    let rem = total_steps.saturating_sub(entry_step);
+                    e.remaining_by_slope[bucket].observe(rem as f64, alpha);
                 }
             }
         });
@@ -267,9 +349,18 @@ impl Estimator {
                     None => Json::Null,
                 })
                 .collect();
+            let slope_buckets: Vec<Json> = e
+                .remaining_by_slope
+                .iter()
+                .map(|b| match b.get() {
+                    Some(v) => Json::num(v),
+                    None => Json::Null,
+                })
+                .collect();
             let mut obj = vec![
                 ("observations", Json::uint(e.completions)),
                 ("buckets", Json::Arr(buckets)),
+                ("slope_buckets", Json::Arr(slope_buckets)),
             ];
             if let Some(v) = e.total_steps.get() {
                 obj.push(("ema_total_steps", Json::num(v)));
@@ -381,6 +472,72 @@ mod tests {
         // step past budget → zero, never underflow
         let z = est.predict_remaining(fam(), &stats(5.0), 200, 100);
         assert_eq!(z.steps, 0);
+    }
+
+    #[test]
+    fn slope_bucket_conditioning_and_averaging() {
+        assert_eq!(slope_bucket_for(0.0), 0);
+        assert_eq!(slope_bucket_for(-5e-4), 1); // |Δkl| ladder
+        assert_eq!(slope_bucket_for(5e-3), 2);
+        assert_eq!(slope_bucket_for(1.0), N_SLOPE_BUCKETS - 1);
+
+        let est = Estimator::new();
+        // entropy bucket 0 says 20 remaining, slope bucket 0 says 40
+        for _ in 0..40 {
+            est.observe_completion_full(
+                fam(),
+                200,
+                &[(0, 180)],
+                &[(0, 160)],
+            );
+        }
+        // slope unavailable → entropy bucket alone
+        let e_only = est.predict_remaining_with(
+            fam(), &stats(0.001), None, 0.0, 100, 600,
+        );
+        assert_eq!(e_only.steps, 20);
+        // both signals → averaged: (20 + 40) / 2
+        let both = est.predict_remaining_with(
+            fam(), &stats(0.001), Some(1e-5), 0.0, 100, 600,
+        );
+        assert!(both.informed);
+        assert_eq!(both.steps, 30);
+        // slope bucket alone (entropy bucket 4 never visited)
+        let s_only = est.predict_remaining_with(
+            fam(), &stats(0.3), Some(1e-5), 0.0, 100, 600,
+        );
+        assert_eq!(s_only.steps, 40);
+    }
+
+    #[test]
+    fn frozen_fraction_scales_informed_estimates() {
+        let est = Estimator::new();
+        for _ in 0..40 {
+            est.observe_completion(fam(), 200, &[(0, 100)]);
+        }
+        // bucket 0 learned 100 remaining; half the positions frozen →
+        // half the denoising left
+        let half = est.predict_remaining_with(
+            fam(), &stats(0.001), None, 0.5, 50, 600,
+        );
+        assert_eq!(half.steps, 50);
+        // fully frozen → nothing left, regardless of the EMA
+        let done = est.predict_remaining_with(
+            fam(), &stats(0.001), None, 1.0, 50, 600,
+        );
+        assert_eq!(done.steps, 0);
+        // out-of-range fractions clamp instead of exploding
+        let neg = est.predict_remaining_with(
+            fam(), &stats(0.001), None, -3.0, 50, 600,
+        );
+        assert_eq!(neg.steps, 100);
+        // cold start ignores the scale: the budget echo is not an
+        // informed estimate
+        let cold = Estimator::new();
+        let p = cold.predict_remaining_with(
+            fam(), &stats(0.5), None, 0.5, 100, 600,
+        );
+        assert_eq!(p, Prediction { steps: 500, informed: false });
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! drive three serving features:
 //!
 //! - **deadline-aware admission** ([`admission`]): reject requests
-//!   whose `deadline_ms` cannot be met given predicted steps ×
-//!   observed per-step latency (typed `infeasible_deadline` error);
+//!   whose `deadline_ms` cannot be met given (predicted steps +
+//!   predicted steps queued ahead) × observed per-step latency
+//!   (typed `infeasible_deadline` error);
 //! - **SRPT slot packing** ([`packing`]): when slots are scarce,
 //!   run the shortest-predicted generation first;
 //! - **wire-visible estimates**: v1 `progress`/`done` frames carry
@@ -26,7 +27,10 @@ pub mod estimator;
 pub mod packing;
 
 pub use admission::{check as check_feasibility, Feasibility};
-pub use estimator::{bucket_for, Estimator, Prediction, N_BUCKETS};
+pub use estimator::{
+    bucket_for, slope_bucket_for, Estimator, Prediction, N_BUCKETS,
+    N_SLOPE_BUCKETS,
+};
 pub use packing::PackingMode;
 
 /// Per-engine predictor feature gates (all default off).

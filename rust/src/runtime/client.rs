@@ -56,6 +56,12 @@ pub struct ExecStats {
     pub upload_bytes: u64,
     /// bytes crossing device→host (device output → literal conversions)
     pub download_bytes: u64,
+    /// count of [`Executable::download_output`] calls — each is one
+    /// device→host sync on the resident path.  The fused-stat design
+    /// targets exactly ONE per steady-state step (asserted by
+    /// `tests/residency_equivalence.rs`); the split five-row fallback
+    /// costs five.
+    pub downloads: u64,
 }
 
 /// Typed failure of [`Executable::run_buffers_device`]: this PJRT
@@ -285,6 +291,7 @@ impl Executable {
         let mut s = self.stats.borrow_mut();
         s.download_seconds += t0.elapsed().as_secs_f64();
         s.download_bytes += (t.len() * 4) as u64;
+        s.downloads += 1;
         Ok(t)
     }
 
@@ -454,6 +461,7 @@ impl Runtime {
             agg.download_seconds += s.download_seconds;
             agg.upload_bytes += s.upload_bytes;
             agg.download_bytes += s.download_bytes;
+            agg.downloads += s.downloads;
         }
         agg
     }

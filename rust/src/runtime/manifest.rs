@@ -82,7 +82,13 @@ pub struct Manifest {
     /// the session's device-resident state path; capability is probed
     /// per artifact via [`ArtifactSpec::has_input`], so a format-1
     /// manifest (or a hand-pruned artifact) transparently serves
-    /// through the host-roundtrip reference path instead.
+    /// through the host-roundtrip reference path instead.  Format 3
+    /// step artifacts additionally emit a fused `stats_fused`
+    /// `[B, 5+2L]` output (the five `[B]` stat rows stacked with the
+    /// per-position token-entropy and argmax-changed lanes), appended
+    /// LAST so format-2 output indices never shift; sessions probe it
+    /// via [`ArtifactSpec::output_index`] and fall back to the
+    /// five-row split download (token halting unavailable) when absent.
     pub format: u64,
     pub model: ModelDims,
     pub param_names: BTreeMap<String, Vec<String>>,
@@ -305,6 +311,14 @@ mod tests {
         assert!(a.has_input("prefix_mask") && a.has_input("prefix_x"));
         assert!(!a.has_input("bogus"));
         assert_eq!(a.output_index("entropy").unwrap(), 4);
+        // format-3 fused stat tensor rides LAST so the format-2
+        // positional indices above stay pinned
+        if m.format >= 3 {
+            assert_eq!(
+                a.output_index("stats_fused").unwrap(),
+                a.outputs.len() - 1
+            );
+        }
         // x_t input: [8, 64, 64] f32
         let xi = a.input_index("x_t").unwrap();
         assert_eq!(a.inputs[xi].shape, vec![8, 64, 64]);

@@ -142,6 +142,17 @@ pub trait FamilyKernel: Send + Sync {
         true
     }
 
+    /// Whether this kernel's per-position token lanes (token entropy,
+    /// argmax-changed flags from the fused stat tensor) are meaningful
+    /// for token-level freeze decisions.  Default `true`: every
+    /// built-in's argmax/probs are per-position pure.  An out-of-tree
+    /// kernel whose decode mixes positions (e.g. a host-side rescoring
+    /// pass) opts out here; its sessions then never expose token lanes
+    /// and token-level policies (`tokstab`/`tokentropy`) stay inert.
+    fn supports_token_halting(&self) -> bool {
+        true
+    }
+
     /// Device shape of the state tensor for a batch.
     fn x_shape(
         &self,

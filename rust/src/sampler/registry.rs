@@ -199,6 +199,9 @@ impl FamilyKernel for AliasKernel {
     fn supports_device_residency(&self) -> bool {
         self.base.supports_device_residency()
     }
+    fn supports_token_halting(&self) -> bool {
+        self.base.supports_token_halting()
+    }
     fn clamp_token(
         &self,
         dst: &mut [f32],

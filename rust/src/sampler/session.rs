@@ -21,7 +21,11 @@
 //!   probability tensor and the `[B,row]` state never cross the host
 //!   boundary in steady state.  Per step the host uploads only the
 //!   `[B,2]` times (plus the noise scratch for `needs_z` kernels) and
-//!   downloads only the five `[B]` stat rows the halting policies read;
+//!   downloads exactly ONE tensor: the fused `[B, 5+2L]` stat output
+//!   (format-3 artifacts; the five `[B]` stat rows stacked with the
+//!   per-position token-entropy / argmax-changed lanes driving
+//!   token-level freeze decisions).  Format-2 artifacts fall back to
+//!   five split `[B]` stat downloads with token halting unavailable;
 //!   decoded tokens download lazily ([`Session::slot_output`]).  Prefix
 //!   clamping happens on the device through the `prefix_mask`/`prefix_x`
 //!   step inputs, which are re-uploaded only when a reset changes them.
@@ -172,6 +176,11 @@ struct StepOutIdx {
     norm_x0: usize,
     norm_x: usize,
     x0_hat: usize,
+    /// format-3 fused stat tensor `[B, 5+2L]` (the five scalar rows
+    /// stacked with the token-entropy and argmax-changed lanes);
+    /// `None` on format-2 artifacts, which fall back to the five-row
+    /// split download
+    stats_fused: Option<usize>,
 }
 
 /// Which per-step data tensor an artifact input consumes.
@@ -290,8 +299,33 @@ pub struct Session {
     /// error on the next `step()` so a broken device cannot keep
     /// serving silently-stale decodes
     deferred_err: Option<String>,
+    /// fused single-sync stat download enabled (effective only on
+    /// format-3 artifacts; see [`Session::set_fused_stats`])
+    fused_enabled: bool,
+    /// per-position token-entropy lane from the last fused step,
+    /// `[B, L]` row-major
+    tok_entropy: Vec<f32>,
+    /// per-position argmax-changed lane (1.0 = argmax differs from the
+    /// previous step), `[B, L]` row-major
+    tok_changed: Vec<f32>,
+    /// the token lanes above reflect the latest executed step (false
+    /// after a split-download step and before the first step)
+    tok_lanes_fresh: bool,
+    /// positions pinned by token-level freeze decisions, `[B, L]`
+    /// (1.0 = frozen).  Distinct from `prefix_mask`, which also covers
+    /// conditioning prefixes — this lane feeds the wire `frozen_mask`
+    /// and the freeze metrics
+    frozen: Vec<f32>,
+    /// token id pinned at each frozen position, `[B, L]` (forced into
+    /// the decode like prefix tokens)
+    frozen_vals: Vec<i32>,
+    /// per-slot count of freeze-pinned positions
+    frozen_counts: Vec<usize>,
     /// reference-path download selection, rebuilt on record_x0 toggles
     want: Vec<usize>,
+    /// position of `stats_fused` inside `want` (reference path parses
+    /// token lanes out of it so both paths feed policies identically)
+    want_fused: Option<usize>,
     /// steps executed (device calls)
     pub device_calls: u64,
 }
@@ -367,6 +401,7 @@ impl Session {
             norm_x0: exe.spec.output_index("norm_x0")?,
             norm_x: exe.spec.output_index("norm_x")?,
             x0_hat: exe.spec.output_index("x0_hat")?,
+            stats_fused: exe.spec.output_index("stats_fused").ok(),
         };
         let needs_z = kernel.needs_z();
         let capable = resident_capable(&exe.spec)
@@ -425,7 +460,15 @@ impl Session {
             prefix_dirty: false,
             step_up: StepUploads::default(),
             deferred_err: None,
+            fused_enabled: true,
+            tok_entropy: vec![0.0; batch * seq_len],
+            tok_changed: vec![0.0; batch * seq_len],
+            tok_lanes_fresh: false,
+            frozen: vec![0.0; batch * seq_len],
+            frozen_vals: vec![0; batch * seq_len],
+            frozen_counts: vec![0; batch],
             want: Vec::new(),
+            want_fused: None,
             device_calls: 0,
         };
         s.rebuild_want();
@@ -502,6 +545,14 @@ impl Session {
             );
             self.prefix_dirty = true;
         }
+        // a frozen occupant implies nonzero mask rows, so the rebuild
+        // above already ran and queued the clamp-row re-upload; here
+        // only the freeze bookkeeping needs clearing
+        if self.frozen_counts[slot] > 0 {
+            self.frozen[tb..tb + l].fill(0.0);
+            self.frozen_vals[tb..tb + l].fill(0);
+            self.frozen_counts[slot] = 0;
+        }
         self.dirty[slot] = true;
         self.any_dirty = true;
         let s = &mut self.slots[slot];
@@ -546,6 +597,114 @@ impl Session {
     /// next `step()`.  Draining disarms the step-time bail.
     pub fn take_deferred_err(&mut self) -> Option<String> {
         self.deferred_err.take()
+    }
+
+    /// Pin positions of a slot at their current argmax tokens —
+    /// token-level early stopping.  Frozen positions join the on-device
+    /// clamp rows (`prefix_mask`/`prefix_x`) exactly like a
+    /// conditioning prefix: the step graph where-selects them on every
+    /// subsequent input and output, so they stop evolving while the
+    /// rest of the sequence keeps denoising.  Idempotent per position
+    /// (already-pinned positions, prefix or frozen, are skipped);
+    /// returns the number of newly frozen positions.
+    ///
+    /// Resident path: reads the current decode through the lazy token
+    /// sync (one `[B, L]` download, shared by every freeze and decode
+    /// read this step).  The clamp-row re-upload rides the existing
+    /// `prefix_dirty` protocol — paid once on the next step, not per
+    /// frozen position.
+    pub fn freeze_positions(
+        &mut self,
+        slot: usize,
+        mask: &[bool],
+    ) -> Result<usize> {
+        self.sync_tokens()?;
+        let (l, v, d) = (self.seq_len, self.vocab, self.d_model);
+        let w = self.row / l;
+        let (tb, xb) = (slot * l, slot * self.row);
+        let mut newly = 0;
+        for (p, &freeze) in mask.iter().take(l).enumerate() {
+            if !freeze || self.prefix_mask[tb + p] > 0.5 {
+                continue;
+            }
+            let tok = self.slots[slot].tokens[p];
+            self.frozen[tb + p] = 1.0;
+            self.frozen_vals[tb + p] = tok;
+            self.frozen_counts[slot] += 1;
+            self.prefix_mask[tb + p] = 1.0;
+            let t = tok.clamp(0, v as i32 - 1) as usize;
+            let s = xb + p * w;
+            self.kernel.clamp_token(
+                &mut self.prefix_x[s..s + w],
+                t,
+                &self.emb_n[t * d..(t + 1) * d],
+                self.simplex_k,
+            );
+            // mirror the clamp into the host state row: the reference
+            // path uploads it as the next step's input, matching the
+            // device path's input-side where-select
+            self.x[s..s + w].copy_from_slice(&self.prefix_x[s..s + w]);
+            newly += 1;
+        }
+        if newly > 0 {
+            self.prefix_dirty = true;
+        }
+        Ok(newly)
+    }
+
+    /// Every position of a slot pinned (prefix + freezes): nothing can
+    /// change anymore, so the worker completes the request with halt
+    /// reason `all_frozen` instead of burning further steps.
+    pub fn fully_frozen(&self, slot: usize) -> bool {
+        let tb = slot * self.seq_len;
+        self.prefix_mask[tb..tb + self.seq_len]
+            .iter()
+            .all(|&m| m > 0.5)
+    }
+
+    /// Count of a slot's positions pinned by token-level freezes
+    /// (conditioning-prefix positions excluded).
+    pub fn frozen_count(&self, slot: usize) -> usize {
+        self.frozen_counts[slot]
+    }
+
+    /// Fraction of a slot's positions pinned by token-level freezes —
+    /// the predictor's completeness feature and the per-family
+    /// `frozen_step_fraction` metrics lane.
+    pub fn frozen_fraction(&self, slot: usize) -> f32 {
+        self.frozen_counts[slot] as f32 / self.seq_len as f32
+    }
+
+    /// Which positions of a slot are freeze-pinned — the wire
+    /// `frozen_mask` on progress frames.
+    pub fn slot_frozen_mask(&self, slot: usize) -> Vec<bool> {
+        let tb = slot * self.seq_len;
+        self.frozen[tb..tb + self.seq_len]
+            .iter()
+            .map(|&f| f > 0.5)
+            .collect()
+    }
+
+    /// Per-position lanes of a slot from the latest step, for
+    /// [`crate::halting::HaltPolicy::observe_tokens`]: token entropy,
+    /// argmax-changed flags, and the pinned mask (prefix + freezes, so
+    /// policies skip already-pinned positions).  `None` when the lanes
+    /// are stale (split-download step, format-2 artifact) or the
+    /// kernel opts out of token halting — callers then stay on the
+    /// scalar `observe` path.
+    pub fn slot_token_lanes(
+        &self,
+        slot: usize,
+    ) -> Option<crate::halting::TokenStats<'_>> {
+        if !self.tok_lanes_fresh || !self.kernel.supports_token_halting() {
+            return None;
+        }
+        let tb = slot * self.seq_len;
+        Some(crate::halting::TokenStats {
+            entropy: &self.tok_entropy[tb..tb + self.seq_len],
+            changed: &self.tok_changed[tb..tb + self.seq_len],
+            frozen: &self.prefix_mask[tb..tb + self.seq_len],
+        })
     }
 
     /// Overwrite prefix positions of the host mirror with their clean
@@ -626,6 +785,39 @@ impl Session {
         if self.record_x0 {
             self.want.push(o.x0_hat);
         }
+        // token lanes ride along on the reference path too, so the
+        // halting policies observe the same signals on both paths
+        self.want_fused = match o.stats_fused {
+            Some(fi) if self.fused_enabled => {
+                self.want.push(fi);
+                Some(self.want.len() - 1)
+            }
+            _ => None,
+        };
+    }
+
+    /// Enable/disable the fused single-sync stat download (effective
+    /// only on format-3 artifacts); returns the effective state.
+    /// Disabled, the resident step falls back to the five-row split
+    /// download and the token lanes stop refreshing, so token-level
+    /// halting becomes unavailable — `hotpath_micro`'s fused-vs-split
+    /// row and the legacy byte-budget test drive this switch.
+    pub fn set_fused_stats(&mut self, on: bool) -> bool {
+        self.fused_enabled = on;
+        self.rebuild_want();
+        self.fused_active()
+    }
+
+    /// Is the fused stat download in effect (format-3 artifact AND
+    /// enabled)?
+    pub fn fused_active(&self) -> bool {
+        self.fused_enabled && self.out_idx.stats_fused.is_some()
+    }
+
+    /// Can this session expose per-position token lanes (fused stats
+    /// in effect AND the kernel opts into token halting)?
+    pub fn token_halting_available(&self) -> bool {
+        self.fused_active() && self.kernel.supports_token_halting()
     }
 
     /// Fold the device-resident state back into the host mirrors and
@@ -845,19 +1037,56 @@ impl Session {
         drop(refs);
         self.device_calls += 1;
 
-        // the only per-step downloads: five [B] stat rows
-        let o = &self.out_idx;
-        let ent = exe.download_output(&outs[o.entropy])?;
-        let kl = exe.download_output(&outs[o.kl])?;
-        let sw = exe.download_output(&outs[o.switches])?;
-        let n0 = exe.download_output(&outs[o.norm_x0])?;
-        let nx = exe.download_output(&outs[o.norm_x])?;
+        // the only steady-state download.  Format-3 artifacts: ONE
+        // fused [B, 5+2L] stat tensor — a single device→host sync per
+        // step — de-strided on the host into the five scalar rows plus
+        // the per-position token lanes.  Format-2 fallback (or fused
+        // stats disabled): the five [B] stat rows split across five
+        // syncs, token lanes unavailable.
+        let o_fused = if self.fused_enabled {
+            self.out_idx.stats_fused
+        } else {
+            None
+        };
+        let (ent_v, kl_v, sw_v, n0_v, nx_v);
+        if let Some(fi) = o_fused {
+            let fused = exe.download_output(&outs[fi])?;
+            let f = fused.as_f32()?;
+            let w = 5 + 2 * l;
+            let mut e = vec![0.0f32; b];
+            let mut k = vec![0.0f32; b];
+            let mut s = vec![0.0f32; b];
+            let mut n0 = vec![0.0f32; b];
+            let mut nx = vec![0.0f32; b];
+            for i in 0..b {
+                let r = i * w;
+                e[i] = f[r];
+                k[i] = f[r + 1];
+                s[i] = f[r + 2];
+                n0[i] = f[r + 3];
+                nx[i] = f[r + 4];
+                self.tok_entropy[i * l..(i + 1) * l]
+                    .copy_from_slice(&f[r + 5..r + 5 + l]);
+                self.tok_changed[i * l..(i + 1) * l]
+                    .copy_from_slice(&f[r + 5 + l..r + 5 + 2 * l]);
+            }
+            (ent_v, kl_v, sw_v, n0_v, nx_v) = (e, k, s, n0, nx);
+            self.tok_lanes_fresh = true;
+        } else {
+            let o = &self.out_idx;
+            ent_v = exe.download_output(&outs[o.entropy])?.as_f32()?.to_vec();
+            kl_v = exe.download_output(&outs[o.kl])?.as_f32()?.to_vec();
+            sw_v = exe.download_output(&outs[o.switches])?.as_f32()?.to_vec();
+            n0_v = exe.download_output(&outs[o.norm_x0])?.as_f32()?.to_vec();
+            nx_v = exe.download_output(&outs[o.norm_x])?.as_f32()?.to_vec();
+            self.tok_lanes_fresh = false;
+        }
         let step_out = StepOutputs {
-            entropy: ent.as_f32()?,
-            kl: kl.as_f32()?,
-            switches: sw.as_f32()?,
-            norm_x0: n0.as_f32()?,
-            norm_x: nx.as_f32()?,
+            entropy: &ent_v,
+            kl: &kl_v,
+            switches: &sw_v,
+            norm_x0: &n0_v,
+            norm_x: &nx_v,
         };
         let mut results = Vec::with_capacity(b);
         for i in 0..b {
@@ -883,6 +1112,7 @@ impl Session {
         let mut take = |i: usize| {
             outs[i].take().expect("step output consumed twice")
         };
+        let o = &self.out_idx;
         self.dev_state = Some(DevState {
             x: take(o.x_next),
             probs: take(o.probs),
@@ -946,6 +1176,23 @@ impl Session {
         } else {
             None
         };
+        // token lanes from the fused tensor (already materialised by
+        // run_buffers — no extra sync on this path), so policies see
+        // the same per-position signals as on the resident path
+        if let Some(wf) = self.want_fused {
+            let f = out[wf].as_f32()?;
+            let w = 5 + 2 * l;
+            for i in 0..b {
+                let r = i * w + 5;
+                self.tok_entropy[i * l..(i + 1) * l]
+                    .copy_from_slice(&f[r..r + l]);
+                self.tok_changed[i * l..(i + 1) * l]
+                    .copy_from_slice(&f[r + l..r + 2 * l]);
+            }
+            self.tok_lanes_fresh = true;
+        } else {
+            self.tok_lanes_fresh = false;
+        }
 
         let mut results = Vec::with_capacity(b);
         for i in 0..b {
@@ -975,10 +1222,24 @@ impl Session {
             slot.step += 1;
             results.push(Some(stats));
         }
-        // re-clamp prefixes after the state update
+        // re-clamp pinned positions (conditioning prefix + token-level
+        // freezes) after the state update by copying the precomputed
+        // clean rows out of `prefix_x` — the exact host image of the
+        // device path's `where(mask, prefix_x, x)` output clamp, and
+        // bit-identical to the legacy per-token re-clamp (both write
+        // the same `clamp_positions` rows)
+        let w = self.row / l;
         for i in 0..b {
-            if self.slots[i].active && !self.slots[i].prefix.is_empty() {
-                self.clamp_prefix(i);
+            if !self.slots[i].active {
+                continue;
+            }
+            let mb = i * l;
+            for p in 0..l {
+                if self.prefix_mask[mb + p] > 0.5 {
+                    let s = i * self.row + p * w;
+                    self.x[s..s + w]
+                        .copy_from_slice(&self.prefix_x[s..s + w]);
+                }
             }
         }
         self.state_synced = true;
@@ -1030,6 +1291,15 @@ impl Session {
         let mut out = s.tokens.clone();
         for (i, &t) in s.prefix.iter().enumerate() {
             out[i] = t;
+        }
+        // freeze-pinned positions are forced like prefix positions: the
+        // decode commits to the token captured at freeze time, not to
+        // whatever the clamped state's argmax drifts to afterwards
+        let tb = slot * self.seq_len;
+        for (p, o) in out.iter_mut().enumerate() {
+            if self.frozen[tb + p] > 0.5 {
+                *o = self.frozen_vals[tb + p];
+            }
         }
         out
     }

@@ -163,9 +163,11 @@ fn resident_path_is_bit_identical_to_reference() {
 
 /// The perf contract behind the whole PR: in steady state (no resets,
 /// no host reads) the resident path's per-step boundary traffic carries
-/// no `[B, L, V]` or `[B, row]` tensor — only times up and stat rows
-/// down (plus the noise scratch for `needs_z` kernels) — while the
-/// reference path hauls the full state both ways every step.
+/// no `[B, L, V]` or `[B, row]` tensor — only times up and the one
+/// fused `[B, 5+2L]` stat tensor down (plus the noise scratch for
+/// `needs_z` kernels) — while the reference path hauls the full state
+/// both ways every step.  The fused download is exactly ONE device
+/// sync per step; the split five-row fallback costs five.
 #[test]
 fn resident_steady_state_host_bytes_shrink() {
     let Some(dir) = artifacts_dir() else { return };
@@ -183,13 +185,22 @@ fn resident_steady_state_host_bytes_shrink() {
         let (b, l, v) = (batch, m.seq_len, m.vocab);
         let row = fam.kernel().state_row(l, v, m.d_model);
         let steps = 4u64;
-        let mut measure = |go_resident: bool| -> (u64, u64) {
+        let mut measure = |go_resident: bool, fused: bool| -> (u64, u64, u64) {
             let rt = Runtime::new(&dir).unwrap();
             let store =
                 Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
             let mut s =
                 Session::new(&rt, fam, store, batch, m.seq_len).unwrap();
             s.set_resident(go_resident).unwrap();
+            if go_resident {
+                assert_eq!(
+                    s.set_fused_stats(fused),
+                    fused,
+                    "{}: fresh artifacts must carry the fused stat \
+                     output (format 3)",
+                    fam.name()
+                );
+            }
             for slot in 0..batch {
                 s.reset_slot(
                     slot,
@@ -212,11 +223,27 @@ fn resident_steady_state_host_bytes_shrink() {
             (
                 after.upload_bytes - before.upload_bytes,
                 after.download_bytes - before.download_bytes,
+                after.downloads - before.downloads,
             )
         };
-        let (up_res, down_res) = measure(true);
-        let (up_ref, down_ref) = measure(false);
-        // exact steady-state budget of the resident path
+        let (up_res, down_res, syncs_res) = measure(true, true);
+        let (up_split, down_split, syncs_split) = measure(true, false);
+        let (up_ref, down_ref, _) = measure(false, false);
+        // the headline sync contract: ONE stat download per steady-state
+        // step on the fused path, five on the split fallback
+        assert_eq!(
+            syncs_res,
+            steps,
+            "{}: fused resident path must sync exactly once per step",
+            fam.name()
+        );
+        assert_eq!(
+            syncs_split,
+            5 * steps,
+            "{}: split fallback costs one sync per stat row",
+            fam.name()
+        );
+        // exact steady-state byte budgets of both resident modes
         let z_bytes =
             if fam.kernel().needs_z() { b * row * 4 } else { 0 } as u64;
         assert_eq!(
@@ -225,10 +252,18 @@ fn resident_steady_state_host_bytes_shrink() {
             "{}: resident uploads must be times (+noise) only",
             fam.name()
         );
+        assert_eq!(up_split, up_res, "{}: fusing touches downloads only",
+            fam.name());
         assert_eq!(
             down_res,
+            steps * ((b * (5 + 2 * l)) as u64 * 4),
+            "{}: fused download must be the one [B, 5+2L] stat tensor",
+            fam.name()
+        );
+        assert_eq!(
+            down_split,
             steps * (5 * b as u64 * 4),
-            "{}: resident downloads must be the five [B] stat rows",
+            "{}: split downloads must be the five [B] stat rows",
             fam.name()
         );
         // the reference path hauls the state + probs both ways: it must
@@ -244,6 +279,88 @@ fn resident_steady_state_host_bytes_shrink() {
              (up {up_res} vs {up_ref}, down {down_res} vs {down_ref})",
             fam.name()
         );
+    }
+}
+
+/// Token-level freezing is path-invariant: freezing the same positions
+/// mid-generation on the resident and reference paths yields
+/// bit-identical stats, decodes and frozen masks, and the pinned
+/// positions never change again.
+#[test]
+fn freeze_positions_resident_matches_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let m = man.model.clone();
+    for fam in Family::all() {
+        if man
+            .available_step_batches(fam.name(), m.seq_len)
+            .is_empty()
+        {
+            continue;
+        }
+        let batch =
+            man.resolve_step_batch(fam.name(), m.seq_len, 1).unwrap();
+        let run = |resident: bool| -> (
+            Vec<StepStats>,
+            Vec<Vec<i32>>,
+            Vec<bool>,
+        ) {
+            let rt = Runtime::new(&dir).unwrap();
+            let store =
+                Rc::new(ParamStore::load_init(&dir, fam.name()).unwrap());
+            let mut s =
+                Session::new(&rt, fam, store, batch, m.seq_len).unwrap();
+            s.set_resident(resident).unwrap();
+            s.reset_slot(0, &SlotRequest::new(11, 10, m.t_max, m.t_min))
+                .unwrap();
+            let mask: Vec<bool> =
+                (0..m.seq_len).map(|i| i % 3 == 0).collect();
+            let mut stats = Vec::new();
+            let mut toks = Vec::new();
+            for step in 0..8 {
+                let st = s.step().unwrap();
+                stats.push(st[0].unwrap());
+                toks.push(s.slot_output(0));
+                if step == 2 {
+                    let newly = s.freeze_positions(0, &mask).unwrap();
+                    assert_eq!(
+                        newly,
+                        mask.iter().filter(|&&f| f).count(),
+                        "{}: no prefix, so every masked position is new",
+                        fam.name()
+                    );
+                    assert!(!s.fully_frozen(0));
+                    assert_eq!(s.frozen_count(0), newly);
+                }
+            }
+            (stats, toks, s.slot_frozen_mask(0))
+        };
+        let (st_r, tk_r, mask_r) = run(true);
+        let (st_h, tk_h, mask_h) = run(false);
+        for (step, (a, b)) in st_r.iter().zip(&st_h).enumerate() {
+            assert_stats_eq(
+                a,
+                b,
+                &format!("{} freeze step {step}", fam.name()),
+            );
+        }
+        assert_eq!(tk_r, tk_h, "{}: freeze decodes diverged", fam.name());
+        assert_eq!(mask_r, mask_h);
+        // once frozen, a position's decode is pinned to its value at
+        // freeze time on every later step
+        let at_freeze = &tk_r[2];
+        for later in &tk_r[3..] {
+            for (i, frozen) in mask_r.iter().enumerate() {
+                if *frozen {
+                    assert_eq!(
+                        later[i],
+                        at_freeze[i],
+                        "{}: frozen position {i} drifted",
+                        fam.name()
+                    );
+                }
+            }
+        }
     }
 }
 

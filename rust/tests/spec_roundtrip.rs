@@ -1,0 +1,91 @@
+//! Property test for the halting-spec grammar: `to_spec` must be a
+//! fixed point of `parse_policy` over randomized composed specs — the
+//! canonical string parses back to a policy that prints the same
+//! canonical string.  This is the wire contract behind `criterion`:
+//! clients and the serving engine exchange specs as strings, so any
+//! drift between parser and printer is a silent protocol break.
+//!
+//! Pure codec work (no artifacts, no device) over a deterministic
+//! in-repo PRNG — runs everywhere, no external property-test crates.
+
+use repro::halting::parse_policy;
+use repro::util::prng::Prng;
+
+/// Atom pool in canonical printing (numbers chosen to format stably
+/// under `f32` Display): every scalar primitive plus the token-level
+/// ones (`tokstab`, `tokentropy`).
+const ATOMS: &[&str] = &[
+    "none",
+    "entropy:0.25",
+    "entropy:0.5",
+    "patience:20:0",
+    "patience:5:2",
+    "kl:0.001:250",
+    "fixed:600",
+    "norm:0.05:3",
+    "klslope:0.02:5",
+    "tokstab:4",
+    "tokstab:1",
+    "tokentropy:0.1",
+    "tokentropy:0.05",
+];
+
+/// Random composed spec in canonical form: atoms at the leaves,
+/// `any`/`all`/`min`/`ema` combinators above, depth-bounded.
+fn gen_spec(r: &mut Prng, depth: usize) -> String {
+    if depth == 0 || r.below(3) == 0 {
+        return ATOMS[r.below(ATOMS.len())].to_string();
+    }
+    match r.below(4) {
+        0 => format!(
+            "any({},{})",
+            gen_spec(r, depth - 1),
+            gen_spec(r, depth - 1)
+        ),
+        1 => format!(
+            "all({},{})",
+            gen_spec(r, depth - 1),
+            gen_spec(r, depth - 1)
+        ),
+        2 => format!("min({},{})", 1 + r.below(500), gen_spec(r, depth - 1)),
+        _ => {
+            const ALPHAS: &[&str] = &["0.25", "0.3", "0.5"];
+            format!(
+                "ema({},{})",
+                ALPHAS[r.below(ALPHAS.len())],
+                gen_spec(r, depth - 1)
+            )
+        }
+    }
+}
+
+/// Property: for every generated canonical spec S,
+/// `parse(S).to_spec() == S`, and a second trip through the parser is
+/// a fixed point.
+#[test]
+fn random_composed_specs_roundtrip_as_a_fixed_point() {
+    let mut r = Prng::new(20260808);
+    for i in 0..500 {
+        let spec = gen_spec(&mut r, 3);
+        let p = parse_policy(&spec)
+            .unwrap_or_else(|| panic!("iteration {i}: parse {spec}"));
+        let printed = p.to_spec();
+        assert_eq!(printed, spec, "iteration {i}: printer drifted");
+        let p2 = parse_policy(&printed)
+            .unwrap_or_else(|| panic!("iteration {i}: reparse {printed}"));
+        assert_eq!(
+            p2.to_spec(),
+            printed,
+            "iteration {i}: to_spec not a fixed point"
+        );
+    }
+}
+
+/// The token primitives keep their exact canonical forms (these strings
+/// are what clients put in `criterion` — pin them).
+#[test]
+fn token_primitives_print_canonically() {
+    for spec in ["tokstab:4", "tokentropy:0.1", "any(tokstab:2,fixed:90)"] {
+        assert_eq!(parse_policy(spec).unwrap().to_spec(), spec);
+    }
+}

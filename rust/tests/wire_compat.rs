@@ -101,6 +101,10 @@ fn random_request(r: &mut Prng, id: u64) -> GenRequest {
         "all(kl:0.001:0,fixed:90)",
         "min(50,any(entropy:0.25,klslope:0.02:5))",
         "ema(0.3,norm:0.05:3)",
+        "tokstab:4",
+        "tokentropy:0.1",
+        "any(tokstab:4,entropy:0.25)",
+        "min(10,tokentropy:0.05)",
     ];
     let mut req = GenRequest::new(id, 1 + r.below(2000));
     req.policy = parse_policy(SPECS[r.below(SPECS.len())]).unwrap();
@@ -117,6 +121,7 @@ fn random_request(r: &mut Prng, id: u64) -> GenRequest {
     if r.below(3) == 0 {
         req.progress_every = Some(1 + r.below(100));
     }
+    req.frozen_mask = r.below(4) == 0;
     req
 }
 
@@ -140,6 +145,7 @@ fn random_requests_roundtrip_exactly() {
         assert_eq!(back.deadline_ms, req.deadline_ms, "{encoded}");
         assert_eq!(back.family, req.family, "{encoded}");
         assert_eq!(back.progress_every, req.progress_every, "{encoded}");
+        assert_eq!(back.frozen_mask, req.frozen_mask, "{encoded}");
         assert_eq!(back.policy.to_spec(), req.policy.to_spec(), "{encoded}");
         // fixed point: a second trip is byte-identical
         assert_eq!(back.to_json().encode(), encoded, "iteration {i}");
@@ -193,6 +199,9 @@ fn random_events_roundtrip() {
                     .then(|| r.below(200)),
                 predicted_total_steps: (r.below(2) == 0)
                     .then(|| r.below(1000)),
+                frozen_mask: (r.below(3) == 0).then(|| {
+                    (0..r.below(8)).map(|_| r.below(2) == 0).collect()
+                }),
             }),
             1 => Event::Done(GenResponse {
                 id: r.next_u64(),
@@ -232,6 +241,38 @@ fn random_events_roundtrip() {
         // fixed point byte-identity is the strongest cheap check
         assert_eq!(back.to_json().encode(), encoded);
     }
+}
+
+/// Token-level halting is strictly opt-in on the wire: a request that
+/// doesn't set `frozen_mask` and a progress frame with no mask encode
+/// to the exact PR6-era bytes — no `frozen` key anywhere.  (The golden
+/// corpus test above pins the full legacy surface; this pins the two
+/// frames token halting could plausibly have disturbed.)
+#[test]
+fn token_halting_off_leaves_wire_bytes_untouched() {
+    let mut req = GenRequest::new(9, 120);
+    req.policy = parse_policy("entropy:0.25").unwrap();
+    assert!(!req.frozen_mask, "frozen_mask must default off");
+    assert_eq!(
+        req.to_json().encode(),
+        r#"{"criterion":"entropy:0.25","id":9,"noise_scale":1,"prefix":[],"priority":"normal","seed":9,"steps":120}"#,
+    );
+    let ev = Event::Progress(repro::coordinator::ProgressEvent {
+        id: 9,
+        step: 30,
+        steps_budget: 120,
+        stats: Default::default(),
+        tokens: None,
+        predicted_steps_remaining: None,
+        predicted_total_steps: None,
+        frozen_mask: None,
+    });
+    let encoded = ev.to_json().encode();
+    assert_eq!(
+        encoded,
+        r#"{"entropy":0,"id":9,"kl":0,"norm_x":0,"norm_x0":0,"step":30,"steps_budget":120,"switches":0,"type":"progress","v":1}"#,
+    );
+    assert!(!encoded.contains("frozen"));
 }
 
 /// The halted-early response of a *client* halt (the new graceful verb)

@@ -10,6 +10,12 @@
 #                              # scenario: prediction MAE + goodput
 #                              # under deadlines, predictor on vs off)
 #
+# The bench-schema stage validates BENCH_serving.json's top-level keys
+# against scripts/bench_schema.txt (host_bytes_per_step,
+# stream_overhead_pct, frozen_step_fraction, ...), so a scenario
+# refactor can't silently drop a trendline field; it skips with a
+# message when no BENCH_serving.json has been written yet.
+#
 # The wire-compat stage runs the golden-corpus / envelope round-trip
 # tests explicitly (they are pure codec tests, so they run even where
 # artifacts are absent) — the legacy JSON-lines protocol is a
@@ -38,6 +44,21 @@ cargo bench --no-run
 if [[ "${1:-}" == "--bench" ]]; then
   echo "== serving bench (writes BENCH_serving.json) =="
   cargo bench --bench serving_bench
+fi
+
+echo "== bench schema (BENCH_serving.json top-level keys) =="
+if [[ -f BENCH_serving.json ]]; then
+  missing=0
+  while IFS= read -r key; do
+    [[ -z "$key" || "$key" == \#* ]] && continue
+    if ! grep -q "\"$key\":" BENCH_serving.json; then
+      echo "bench-schema: BENCH_serving.json is missing \"$key\""
+      missing=1
+    fi
+  done < scripts/bench_schema.txt
+  [[ "$missing" == 0 ]] || exit 1
+else
+  echo "bench-schema: no BENCH_serving.json — skipping (run with --bench)"
 fi
 
 echo "check.sh: all green"
