@@ -39,6 +39,13 @@
 //!   pre-format-3 artifacts the lanes are unavailable and the row
 //!   reports zeros.
 //!
+//! * **elastic** — hot-swap under load: a live `rebind` of the only
+//!   worker mid-burst through the v1 admin verb (drain → rebuild →
+//!   rejoin), reporting `rebind_ms`, goodput before/during/after and
+//!   `requests_dropped` (the zero-drop acceptance bar: always 0), plus
+//!   a (b8 + b1) migration leg where mostly-frozen slots vacate the
+//!   wide shard and `reclaimed_slot_steps` counts what that freed.
+//!
 //! * **session_step** — a microbench directly on one batched `Session`
 //!   (no TCP): the device-resident state path vs the host-roundtrip
 //!   reference path, reporting steps/s and `host_bytes_per_step` from
@@ -412,6 +419,175 @@ fn run_predictor_scenario(
     })
 }
 
+struct ElasticResult {
+    wall_s: f64,
+    /// drain→rebuild→rejoin wall time reported by the worker's ack
+    rebind_ms: f64,
+    /// in-flight slots drained (exported + requeued) by the rebind
+    requests_drained: usize,
+    /// submitted requests that neither completed nor answered a typed
+    /// error — the zero-drop acceptance bar demands this stays 0
+    requests_dropped: usize,
+    completed: usize,
+    rejected_typed: usize,
+    goodput_before: f64,
+    goodput_during: f64,
+    goodput_after: f64,
+    /// migration leg: mostly-frozen slots that moved to the b1 shard
+    slots_migrated: f64,
+    /// migration leg: wide-shard slot-steps reclaimed by those moves
+    reclaimed_slot_steps: f64,
+}
+
+/// Hot-swap under load: drive a burst at a single ddlm shard, fire a
+/// live `rebind` (same binding — a pure drain→rebuild→rejoin cycle)
+/// mid-burst through the v1 admin verb, and measure goodput before /
+/// during / after plus the rebind latency and the drop count (must be
+/// 0: drained slots resume, they do not abort).  A second leg runs a
+/// (b8 + b1) fleet with slot migration on under a token-freeze
+/// criterion and reports the slot-steps reclaimed by moving
+/// mostly-frozen sequences to the small shard.
+fn run_elastic_scenario(
+    dir: &str,
+    batch: usize,
+    n: usize,
+    n_steps: usize,
+    policy: &BoxedPolicy,
+    prompts: &[Vec<i32>],
+) -> anyhow::Result<ElasticResult> {
+    let mut cfg = EngineConfig::new(dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), batch)];
+    cfg.discover_checkpoints("runs");
+    let (engine, join) = start(cfg);
+    let mut server = Server::start("127.0.0.1:0", engine.clone())?;
+    {
+        // warmup: one-off artifact compile off the clock
+        let mut c = Client::connect(&server.addr)?;
+        let mut req = GenRequest::new(1_000_000, 4);
+        req.policy = parse_policy("none").unwrap();
+        c.generate(&req)?;
+    }
+
+    let t0 = Instant::now();
+    type ThreadOut = (Vec<f64>, usize, usize);
+    let handles: Vec<_> = (0..4usize)
+        .map(|c| {
+            let addr = server.addr.clone();
+            let prompts = prompts.to_vec();
+            let policy = policy.clone();
+            std::thread::spawn(move || -> anyhow::Result<ThreadOut> {
+                let mut client = Client::connect(&addr)?;
+                let mut done_at = Vec::new();
+                let (mut completed, mut rejected) = (0usize, 0usize);
+                for i in (c..n).step_by(4) {
+                    let mut req = GenRequest::new(i as u64, n_steps);
+                    req.prefix = prompts[i % prompts.len()][..32].to_vec();
+                    req.policy = policy.clone();
+                    req.seed = 9000 + i as u64;
+                    match client.generate(&req) {
+                        Ok(_) => {
+                            completed += 1;
+                            done_at.push(t0.elapsed().as_secs_f64());
+                        }
+                        // a typed serving error is an answered request,
+                        // not a dropped one; anything else is a real
+                        // failure and fails the bench
+                        Err(e)
+                            if e.to_string()
+                                .starts_with("server error:") =>
+                        {
+                            rejected += 1;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Ok((done_at, completed, rejected))
+            })
+        })
+        .collect();
+
+    // mid-burst, live-rebind the only worker through the wire verb;
+    // the ack returns only after drain + rebuild + rejoin
+    let mut admin = Client::connect(&server.addr)?;
+    std::thread::sleep(std::time::Duration::from_millis(250));
+    let r_start = t0.elapsed().as_secs_f64();
+    let ack = admin.rebind(0, None, Some(batch), None)?;
+    let r_end = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(ack.ok, "elastic: rebind refused: {:?}", ack.message);
+
+    let mut done_at = Vec::new();
+    let (mut completed, mut rejected_typed) = (0usize, 0usize);
+    for h in handles {
+        let (at, c, r) = h.join().unwrap()?;
+        done_at.extend(at);
+        completed += c;
+        rejected_typed += r;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let count_in = |lo: f64, hi: f64| {
+        done_at.iter().filter(|&&t| t >= lo && t < hi).count() as f64
+    };
+    let rate = |c: f64, span: f64| if span > 1e-9 { c / span } else { 0.0 };
+
+    server.stop();
+    engine.shutdown();
+    join.join().unwrap()?;
+
+    // migration leg: a wide + narrow fleet with frozen-aware migration
+    // on, under a token-freeze criterion — sequences that pin most of
+    // their positions vacate the wide shard for the b1 shard, and the
+    // reclaimed wide-shard slot-steps land in the metrics lanes.
+    // Skipped (zeros) when no b1 step artifact is compiled.
+    let have_b1 = Manifest::load(dir).is_ok_and(|man| {
+        man.available_step_batches("ddlm", man.model.seq_len).contains(&1)
+    });
+    let (mut slots_migrated, mut reclaimed_slot_steps) = (0.0, 0.0);
+    if have_b1 {
+        let mut mcfg = EngineConfig::new(dir, Family::Ddlm);
+        mcfg.worker_specs =
+            vec![(Family::Ddlm.into(), batch), (Family::Ddlm.into(), 1)];
+        mcfg.migrate = true;
+        mcfg.discover_checkpoints("runs");
+        let (meng, mjoin) = start(mcfg);
+        let tok_policy = parse_policy("tokstab:3").unwrap();
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let mut req =
+                    GenRequest::new(2_000_000 + i as u64, n_steps);
+                req.prefix = prompts[i % prompts.len()][..32].to_vec();
+                req.policy = tok_policy.clone();
+                req.seed = 4000 + i as u64;
+                meng.submit(req)
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv()
+                .unwrap()
+                .map_err(|e| anyhow::anyhow!("migration leg: {e:?}"))?;
+        }
+        let mm = meng.metrics().unwrap();
+        let g = |k: &str| mm.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        slots_migrated = g("slots_migrated");
+        reclaimed_slot_steps = g("migration_reclaimed_slot_steps");
+        meng.shutdown();
+        mjoin.join().unwrap()?;
+    }
+
+    Ok(ElasticResult {
+        wall_s,
+        rebind_ms: ack.rebind_ms.unwrap_or(0.0),
+        requests_drained: ack.drained.unwrap_or(0),
+        requests_dropped: n - completed - rejected_typed,
+        completed,
+        rejected_typed,
+        goodput_before: rate(count_in(0.0, r_start), r_start),
+        goodput_during: rate(count_in(r_start, r_end), r_end - r_start),
+        goodput_after: rate(count_in(r_end, wall_s + 1.0), wall_s - r_end),
+        slots_migrated,
+        reclaimed_slot_steps,
+    })
+}
+
 /// Per-family rows (completions, latency quantiles, steps) computed
 /// from the measured-run samples — warmup traffic is excluded, so the
 /// rows are directly comparable to the top-level numbers.
@@ -671,6 +847,37 @@ fn main() -> anyhow::Result<()> {
         token.wall_s, token.mean_steps, single.mean_steps,
     );
 
+    // scenario 7: elastic — hot-swap under load (live rebind mid-burst
+    // via the v1 admin verb: rebind latency, goodput before/during/
+    // after, zero dropped) plus the frozen-aware migration leg
+    println!(
+        "serving_bench[elastic]: rebind mid-burst on 1 ddlm worker x \
+         batch {batch}, then (b{batch} + b1) migration leg"
+    );
+    let elastic = run_elastic_scenario(
+        &dir, batch, n, n_steps, &policy, &prompts,
+    )?;
+    println!(
+        "serving_bench[elastic]: {n} reqs in {:.2}s — rebind {:.1} ms \
+         ({} drained), goodput {:.2}/{:.2}/{:.2} req/s \
+         (before/during/after), {} dropped, {:.0} slots migrated \
+         reclaiming {:.0} slot-steps",
+        elastic.wall_s,
+        elastic.rebind_ms,
+        elastic.requests_drained,
+        elastic.goodput_before,
+        elastic.goodput_during,
+        elastic.goodput_after,
+        elastic.requests_dropped,
+        elastic.slots_migrated,
+        elastic.reclaimed_slot_steps,
+    );
+    anyhow::ensure!(
+        elastic.requests_dropped == 0,
+        "elastic: {} requests dropped by the rebind",
+        elastic.requests_dropped
+    );
+
     // top-level fields mirror the pre-multi-family layout so the
     // BENCH_serving.json trendline stays comparable PR-over-PR
     let mut fields = vec![
@@ -809,6 +1016,34 @@ fn main() -> anyhow::Result<()> {
             ("tokens_frozen", Json::num(tokens_frozen)),
             ("steps_saved", Json::num(token_steps_saved)),
             ("frozen_step_fraction", Json::num(frozen_step_fraction)),
+        ]),
+    ));
+    fields.push((
+        "elastic",
+        Json::obj(vec![
+            ("wall_s", Json::num(elastic.wall_s)),
+            ("rebind_ms", Json::num(elastic.rebind_ms)),
+            (
+                "requests_drained",
+                Json::num(elastic.requests_drained as f64),
+            ),
+            (
+                "requests_dropped",
+                Json::num(elastic.requests_dropped as f64),
+            ),
+            ("completed", Json::num(elastic.completed as f64)),
+            (
+                "rejected_typed",
+                Json::num(elastic.rejected_typed as f64),
+            ),
+            ("goodput_before", Json::num(elastic.goodput_before)),
+            ("goodput_during", Json::num(elastic.goodput_during)),
+            ("goodput_after", Json::num(elastic.goodput_after)),
+            ("slots_migrated", Json::num(elastic.slots_migrated)),
+            (
+                "reclaimed_slot_steps",
+                Json::num(elastic.reclaimed_slot_steps),
+            ),
         ]),
     ));
     let out = Json::obj(fields);

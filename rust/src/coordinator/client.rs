@@ -6,7 +6,8 @@
 //! over one blocking TCP connection: [`Client::submit`] sends a
 //! request frame, [`Client::next_event`] pulls the next server frame
 //! (buffered events first), and the typed verbs
-//! [`Client::halt`] / [`Client::cancel`] / [`Client::metrics`] can be
+//! [`Client::halt`] / [`Client::cancel`] / [`Client::metrics`] /
+//! [`Client::rebind`] can be
 //! issued between `next_event` calls *while a generation streams* —
 //! their acks are matched out of the interleaved frame stream and
 //! everything else is buffered for the next `next_event` call.  [`Client::generate`] /
@@ -45,6 +46,27 @@ pub struct HaltAck {
     pub found: bool,
     /// `"queued" | "running" | "not_found"`
     pub state: String,
+}
+
+/// Typed reply to [`Client::rebind`].
+#[derive(Clone, Debug)]
+pub struct RebindAck {
+    /// true when the worker drained, rebuilt and rejoined under the
+    /// new binding; false on a typed refusal (`unknown_worker`,
+    /// `rebind_in_flight`, unknown family, ...) or a failure the
+    /// worker reverted from
+    pub ok: bool,
+    /// refusal / failure detail when `ok` is false
+    pub message: Option<String>,
+    /// family the worker serves after the rebind
+    pub family: Option<String>,
+    /// batch shard the worker runs after the rebind
+    pub batch: Option<usize>,
+    /// in-flight slots drained back to the queue (resumed elsewhere or
+    /// on the rebuilt worker — never dropped)
+    pub drained: Option<usize>,
+    /// wall-clock drain→rebuild→rejoin time in milliseconds
+    pub rebind_ms: Option<f64>,
 }
 
 /// Blocking v1 serving-API client.
@@ -175,6 +197,51 @@ impl Client {
                     if aid == id =>
                 {
                     return Ok(CancelAck { cancelled, state });
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Admin: live-rebind worker `worker` — drain its in-flight slots
+    /// back to the queue (resumable, zero dropped), rebuild its
+    /// session under the new binding and rejoin.  `None` fields keep
+    /// the worker's current value; `Some("")` for `checkpoint` drops
+    /// to init params.  Blocks until the fleet answers the ack — on a
+    /// loaded fleet this spans a full drain + checkpoint load.
+    pub fn rebind(
+        &mut self,
+        worker: usize,
+        family: Option<&str>,
+        batch: Option<usize>,
+        checkpoint: Option<&str>,
+    ) -> Result<RebindAck> {
+        let cmd = Command::Rebind {
+            worker,
+            family: family.map(str::to_string),
+            batch,
+            checkpoint: checkpoint.map(str::to_string),
+        };
+        self.send_line(&cmd.to_json().encode())?;
+        loop {
+            match self.read_event()? {
+                Event::RebindAck {
+                    worker: aw,
+                    ok,
+                    message,
+                    family,
+                    batch,
+                    drained,
+                    rebind_ms,
+                } if aw == worker => {
+                    return Ok(RebindAck {
+                        ok,
+                        message,
+                        family,
+                        batch,
+                        drained,
+                        rebind_ms,
+                    });
                 }
                 other => self.pending.push_back(other),
             }

@@ -27,12 +27,20 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority};
 use super::scheduler::{
-    CancelOutcome, GenOutcome, ProgressTx, Scheduler, ServeError,
+    CancelOutcome, GenOutcome, ProgressTx, RebindOrder, RebindReport,
+    Scheduler, ServeError,
 };
 use super::worker::{self, WorkerConfig};
 use crate::predictor::{Estimator, PredictorConfig};
 use crate::sampler::FamilyId;
 use crate::util::json::Json;
+
+/// `--fleet auto` supervisor cadence.
+const SUPERVISOR_TICK_MS: u64 = 100;
+
+/// Queued requests a family must accumulate before the supervisor
+/// pulls an idle worker over from a quiet family.
+const SUPERVISOR_STARVED_QUEUE: usize = 2;
 
 pub struct EngineConfig {
     pub artifact_dir: String,
@@ -75,6 +83,13 @@ pub struct EngineConfig {
     /// SRPT packing); the default leaves every gate off and behavior
     /// bit-identical to a predictor-less build
     pub predictor: PredictorConfig,
+    /// frozen-aware live slot migration: workers hand mostly-frozen
+    /// long-tail slots to a smaller live shard of the same family
+    pub migrate: bool,
+    /// `--fleet auto`: a supervisor thread watches queue depth per
+    /// family and rebinds idle workers toward backlogged families
+    /// (implies `migrate`)
+    pub fleet_auto: bool,
 }
 
 impl EngineConfig {
@@ -95,6 +110,8 @@ impl EngineConfig {
             class_queue_bounds: None,
             family_queue_bounds: Vec::new(),
             predictor: PredictorConfig::default(),
+            migrate: false,
+            fleet_auto: false,
         }
     }
 
@@ -203,6 +220,35 @@ impl EngineHandle {
         self.sched.halt(id)
     }
 
+    /// Live-rebind one worker shard: drain its in-flight slots back to
+    /// the queue as resumable state, rebuild its session under the new
+    /// `(family, batch, checkpoint)` and rejoin — zero requests
+    /// dropped.  `None` keeps the worker's current value; an empty
+    /// checkpoint string drops back to init params.  Blocks until the
+    /// worker reports (or typed refusal / failure-and-revert).
+    pub fn rebind(
+        &self,
+        worker: usize,
+        family: Option<FamilyId>,
+        batch: Option<usize>,
+        checkpoint: Option<String>,
+    ) -> Result<RebindReport, String> {
+        let (tx, rx) = mpsc::channel();
+        self.sched
+            .request_rebind(
+                worker,
+                RebindOrder {
+                    family,
+                    batch,
+                    checkpoint,
+                    reply: Some(tx),
+                },
+            )
+            .map_err(str::to_string)?;
+        rx.recv()
+            .map_err(|_| "worker exited during rebind".to_string())?
+    }
+
     /// Merged fleet snapshot: the scheduler's admission metrics folded
     /// with every worker's — including the per-family completion/latency
     /// counters — plus queue-depth / slot-occupancy gauges and a
@@ -237,6 +283,26 @@ impl EngineHandle {
             Json::num(self.sched.running_count() as f64),
         );
         m.insert("workers".to_string(), Json::Arr(per_worker));
+        // process-wide artifact cache: mmap'd checkpoint/manifest bytes
+        // shared across workers and rebinds.  Always present (even all
+        // zero) so operators can watch hit rate and resident bytes.
+        let cs = crate::runtime::artifact_cache::global().stats();
+        m.insert(
+            "artifact_cache_hits".to_string(),
+            Json::num(cs.hits as f64),
+        );
+        m.insert(
+            "artifact_cache_misses".to_string(),
+            Json::num(cs.misses as f64),
+        );
+        m.insert(
+            "artifact_cache_evictions".to_string(),
+            Json::num(cs.evictions as f64),
+        );
+        m.insert(
+            "artifact_cache_bytes".to_string(),
+            Json::num(cs.bytes as f64),
+        );
         // per-family schedule envelope (t_max/t_min, including any
         // per-family overrides) so remote clients can see the schedule
         // each family's workers generate under
@@ -378,14 +444,23 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
                 family,
                 batch,
                 checkpoint,
+                checkpoints: cfg.checkpoints.clone(),
                 t_max,
                 t_min,
                 predictor: estimator.clone(),
                 predict_wire: cfg.predictor.enabled,
+                migrate: cfg.migrate || cfg.fleet_auto,
             },
             sched.clone(),
             m,
         ));
+    }
+    if cfg.fleet_auto {
+        let s = sched.clone();
+        handles.push(std::thread::spawn(move || {
+            fleet_supervisor(&s);
+            Ok(())
+        }));
     }
     (
         EngineHandle {
@@ -396,4 +471,89 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
         },
         EngineJoin { handles },
     )
+}
+
+/// The `--fleet auto` supervisor: each tick, find the family with the
+/// deepest backlog and — if a quiet family has an idle worker to
+/// spare — rebind that worker toward the backlog.  One rebind per
+/// tick, never while another is settling, and never the last live
+/// worker of a family (that would strand its queued work).  Exits when
+/// the scheduler shuts down.
+fn fleet_supervisor(sched: &Scheduler) {
+    loop {
+        if sched.is_shutdown() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(
+            SUPERVISOR_TICK_MS,
+        ));
+        let snap = sched.fleet_snapshot();
+        // let an in-flight rebind settle before judging the new shape
+        if snap.workers.iter().any(|w| w.rebind_pending) {
+            continue;
+        }
+        // deepest backlog first
+        let mut starved: Vec<(usize, usize)> = snap
+            .queued_by_family
+            .iter()
+            .enumerate()
+            .filter(|&(_, &q)| q >= SUPERVISOR_STARVED_QUEUE)
+            .map(|(f, &q)| (f, q))
+            .collect();
+        starved.sort_by(|a, b| b.1.cmp(&a.1));
+        'tick: for (fi, backlog) in starved {
+            // queued work implies a live worker of that family exists —
+            // recover its FamilyId from the fleet
+            let Some(fam) = snap
+                .workers
+                .iter()
+                .find(|w| w.alive && w.family.index() == fi)
+                .map(|w| w.family)
+            else {
+                continue;
+            };
+            for w in &snap.workers {
+                if !w.alive || w.running > 0 || w.family == fam {
+                    continue;
+                }
+                // the donor family must be quiet and keep at least one
+                // other live worker
+                let donor_queue = snap
+                    .queued_by_family
+                    .get(w.family.index())
+                    .copied()
+                    .unwrap_or(0);
+                if donor_queue > 0 {
+                    continue;
+                }
+                let peers = snap
+                    .workers
+                    .iter()
+                    .filter(|o| o.alive && o.family == w.family)
+                    .count();
+                if peers < 2 {
+                    continue;
+                }
+                crate::log_info!(
+                    "fleet auto: rebinding idle worker {} ({} -> {}, \
+                     backlog {})",
+                    w.worker,
+                    w.family.name(),
+                    fam.name(),
+                    backlog
+                );
+                // fire-and-forget: the worker reports through metrics
+                let _ = sched.request_rebind(
+                    w.worker,
+                    RebindOrder {
+                        family: Some(fam),
+                        batch: None,
+                        checkpoint: None,
+                        reply: None,
+                    },
+                );
+                break 'tick;
+            }
+        }
+    }
 }

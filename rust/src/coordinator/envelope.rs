@@ -14,6 +14,7 @@
 //! | cancel  | `{"v":1,"type":"cancel","id":N}` — abort, answers the submitter with `error:"cancelled"` |
 //! | halt    | `{"v":1,"type":"halt","id":N}` — *graceful* finalize: the submitter receives a normal `done` with the current x0 decode and `halt_reason:"client"` |
 //! | metrics | `{"v":1,"type":"metrics"}` |
+//! | rebind  | `{"v":1,"type":"rebind","worker":W[,"family":F][,"batch":B][,"checkpoint":PATH]}` — admin: drain worker `W`'s in-flight slots back to the queue (resumable, zero dropped), rebuild its session under the new binding and rejoin.  Omitted fields keep the current value; an empty `checkpoint` string drops to init params |
 //!
 //! Server → client ([`Event`]):
 //!
@@ -24,6 +25,7 @@
 //! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT]}` |
 //! | cancel   | ack: `{"v":1,"type":"cancel","id":N,"cancelled":BOOL,"state":"queued"\|"running"\|"not_found"}` |
 //! | halt     | ack: `{"v":1,"type":"halt","id":N,"found":BOOL,"state":...}` |
+//! | rebind   | ack: `{"v":1,"type":"rebind","worker":W,"ok":BOOL[,"message":TEXT][,"family":F,"batch":B,"drained":D,"rebind_ms":MS]}` — `ok:false` means typed refusal or failure-and-revert |
 //! | metrics  | `{"v":1,"type":"metrics","data":{...snapshot...}}` |
 //!
 //! Error codes: the scheduler's typed serving errors (`overloaded`,
@@ -99,6 +101,15 @@ pub enum Command {
     Cancel { id: u64 },
     Halt { id: u64 },
     Metrics,
+    /// Admin: live-rebind one worker shard (drain → rebind → rejoin).
+    /// `None` fields keep the worker's current value; an empty
+    /// `checkpoint` string drops it back to init params.
+    Rebind {
+        worker: usize,
+        family: Option<String>,
+        batch: Option<usize>,
+        checkpoint: Option<String>,
+    },
 }
 
 impl Command {
@@ -125,6 +136,21 @@ impl Command {
             "cancel" => Ok(Command::Cancel { id: need_id("cancel")? }),
             "halt" => Ok(Command::Halt { id: need_id("halt")? }),
             "metrics" => Ok(Command::Metrics),
+            "rebind" => Ok(Command::Rebind {
+                worker: j
+                    .get("worker")
+                    .and_then(Json::as_usize)
+                    .ok_or(FrameError::MissingId("rebind"))?,
+                family: j
+                    .get("family")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                batch: j.get("batch").and_then(Json::as_usize),
+                checkpoint: j
+                    .get("checkpoint")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            }),
             other => Err(FrameError::UnknownType(other.to_string())),
         }
     }
@@ -144,12 +170,35 @@ impl Command {
                 m
             }
             Command::Metrics => Default::default(),
+            Command::Rebind {
+                worker,
+                family,
+                batch,
+                checkpoint,
+            } => {
+                let mut fields =
+                    vec![("worker", Json::uint(*worker as u64))];
+                if let Some(f) = family {
+                    fields.push(("family", Json::str(f.clone())));
+                }
+                if let Some(b) = batch {
+                    fields.push(("batch", Json::uint(*b as u64)));
+                }
+                if let Some(c) = checkpoint {
+                    fields.push(("checkpoint", Json::str(c.clone())));
+                }
+                let Json::Obj(m) = Json::obj(fields) else {
+                    unreachable!()
+                };
+                m
+            }
         };
         let ty = match self {
             Command::Submit(_) => "submit",
             Command::Cancel { .. } => "cancel",
             Command::Halt { .. } => "halt",
             Command::Metrics => "metrics",
+            Command::Rebind { .. } => "rebind",
         };
         m.insert("v".to_string(), Json::uint(PROTOCOL_VERSION));
         m.insert("type".to_string(), Json::str(ty));
@@ -177,6 +226,19 @@ pub enum Event {
         id: u64,
         found: bool,
         state: String,
+    },
+    /// Rebind outcome: on success carries the worker's new binding plus
+    /// the drain size and rebind latency; on refusal/failure `ok` is
+    /// false and `message` names the reason (the worker kept — or
+    /// reverted to — its previous binding).
+    RebindAck {
+        worker: usize,
+        ok: bool,
+        message: Option<String>,
+        family: Option<String>,
+        batch: Option<usize>,
+        drained: Option<usize>,
+        rebind_ms: Option<f64>,
     },
     Metrics(Json),
 }
@@ -264,6 +326,39 @@ impl Event {
                     unreachable!()
                 };
                 ("halt", m)
+            }
+            Event::RebindAck {
+                worker,
+                ok,
+                message,
+                family,
+                batch,
+                drained,
+                rebind_ms,
+            } => {
+                let mut fields = vec![
+                    ("worker", Json::uint(*worker as u64)),
+                    ("ok", Json::Bool(*ok)),
+                ];
+                if let Some(msg) = message {
+                    fields.push(("message", Json::str(msg.clone())));
+                }
+                if let Some(f) = family {
+                    fields.push(("family", Json::str(f.clone())));
+                }
+                if let Some(b) = batch {
+                    fields.push(("batch", Json::uint(*b as u64)));
+                }
+                if let Some(d) = drained {
+                    fields.push(("drained", Json::uint(*d as u64)));
+                }
+                if let Some(ms) = rebind_ms {
+                    fields.push(("rebind_ms", Json::num(*ms)));
+                }
+                let Json::Obj(m) = Json::obj(fields) else {
+                    unreachable!()
+                };
+                ("rebind", m)
             }
             Event::Metrics(data) => {
                 let Json::Obj(m) =
@@ -405,6 +500,26 @@ impl Event {
                     .unwrap_or(false),
                 state: need_str("state")?,
             },
+            "rebind" => Event::RebindAck {
+                worker: j
+                    .get("worker")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| {
+                        anyhow!("rebind event without a worker index")
+                    })?,
+                ok: j.get("ok").and_then(Json::as_bool).unwrap_or(false),
+                message: j
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                family: j
+                    .get("family")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                batch: j.get("batch").and_then(Json::as_usize),
+                drained: j.get("drained").and_then(Json::as_usize),
+                rebind_ms: j.get("rebind_ms").and_then(Json::as_f64),
+            },
             "metrics" => Event::Metrics(
                 j.get("data").cloned().unwrap_or(Json::Null),
             ),
@@ -437,6 +552,18 @@ mod tests {
             Command::Cancel { id: 7 },
             Command::Halt { id: (1 << 53) + 1 },
             Command::Metrics,
+            Command::Rebind {
+                worker: 2,
+                family: Some("ssd".to_string()),
+                batch: Some(1),
+                checkpoint: Some(String::new()),
+            },
+            Command::Rebind {
+                worker: 0,
+                family: None,
+                batch: None,
+                checkpoint: None,
+            },
         ] {
             let j = cmd.to_json();
             assert_eq!(j.get("v").and_then(Json::as_u64), Some(1));
@@ -454,6 +581,20 @@ mod tests {
                     assert_eq!(a, b)
                 }
                 (Command::Metrics, Command::Metrics) => {}
+                (
+                    Command::Rebind {
+                        worker: wa,
+                        family: fa,
+                        batch: ba,
+                        checkpoint: ca,
+                    },
+                    Command::Rebind {
+                        worker: wb,
+                        family: fb,
+                        batch: bb,
+                        checkpoint: cb,
+                    },
+                ) => assert_eq!((wa, fa, ba, ca), (wb, fb, bb, cb)),
                 _ => panic!("variant changed over the wire: {encoded}"),
             }
         }
@@ -540,6 +681,24 @@ mod tests {
                 found: true,
                 state: "running".to_string(),
             },
+            Event::RebindAck {
+                worker: 1,
+                ok: true,
+                message: None,
+                family: Some("ddlm".to_string()),
+                batch: Some(8),
+                drained: Some(3),
+                rebind_ms: Some(12.5),
+            },
+            Event::RebindAck {
+                worker: 4,
+                ok: false,
+                message: Some("rebind_in_flight".to_string()),
+                family: None,
+                batch: None,
+                drained: None,
+                rebind_ms: None,
+            },
             Event::Metrics(Json::obj(vec![(
                 "requests_completed",
                 Json::uint(3),
@@ -582,6 +741,32 @@ mod tests {
                     Event::HaltAck { id: b, found: xb, state: sb },
                 ) => assert_eq!((a, xa, sa), (b, xb, sb)),
                 (Event::Metrics(a), Event::Metrics(b)) => assert_eq!(a, b),
+                (
+                    Event::RebindAck {
+                        worker: wa,
+                        ok: oa,
+                        message: ma,
+                        family: fa,
+                        batch: ba,
+                        drained: da,
+                        rebind_ms: ra,
+                    },
+                    Event::RebindAck {
+                        worker: wb,
+                        ok: ob,
+                        message: mb,
+                        family: fb,
+                        batch: bb,
+                        drained: db,
+                        rebind_ms: rb,
+                    },
+                ) => {
+                    assert_eq!((wa, oa, ma, fa, ba, da), (wb, ob, mb, fb, bb, db));
+                    assert_eq!(ra.is_some(), rb.is_some());
+                    if let (Some(x), Some(y)) = (ra, rb) {
+                        assert!((x - y).abs() < 1e-9);
+                    }
+                }
                 _ => panic!("variant changed over the wire: {encoded}"),
             }
         }

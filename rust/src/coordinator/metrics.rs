@@ -218,6 +218,19 @@ pub struct Metrics {
     /// total steps-to-halt predictions graded against an actual
     /// completion (feeds the `prediction_mae_steps` lanes)
     pub predictions_made: u64,
+    /// progress frames evicted from slow subscribers' bounded
+    /// per-connection buffers (drop-oldest flow control)
+    pub progress_dropped: u64,
+    /// completed drain→rebind→rejoin cycles on this shard
+    pub rebinds: u64,
+    /// in-flight requests exported back to the queue by rebind drains
+    /// (all of them resumed elsewhere or answered typed — never lost)
+    pub rebind_requests_drained: u64,
+    /// mostly-frozen slots handed to a smaller shard mid-generation
+    pub slots_migrated: u64,
+    /// slot-steps reclaimed on the source shard by those migrations
+    /// (remaining-step estimate at the moment of hand-off)
+    pub migration_reclaimed_slot_steps: u64,
     /// slot-occupancy gauges (workers refresh these every loop)
     pub slots_total: u64,
     pub slots_busy: u64,
@@ -253,6 +266,11 @@ impl Default for Metrics {
             deadline_exceeded: 0,
             rejected_infeasible: 0,
             predictions_made: 0,
+            progress_dropped: 0,
+            rebinds: 0,
+            rebind_requests_drained: 0,
+            slots_migrated: 0,
+            migration_reclaimed_slot_steps: 0,
             slots_total: 0,
             slots_busy: 0,
             steps_in_flight: 0,
@@ -386,6 +404,12 @@ impl Metrics {
         self.deadline_exceeded += other.deadline_exceeded;
         self.rejected_infeasible += other.rejected_infeasible;
         self.predictions_made += other.predictions_made;
+        self.progress_dropped += other.progress_dropped;
+        self.rebinds += other.rebinds;
+        self.rebind_requests_drained += other.rebind_requests_drained;
+        self.slots_migrated += other.slots_migrated;
+        self.migration_reclaimed_slot_steps +=
+            other.migration_reclaimed_slot_steps;
         self.slots_total += other.slots_total;
         self.slots_busy += other.slots_busy;
         self.steps_in_flight += other.steps_in_flight;
@@ -458,6 +482,31 @@ impl Metrics {
             ("throughput_rps", Json::num(self.throughput_rps())),
         ]);
         let Json::Obj(mut m) = base else { unreachable!() };
+        // elastic-fleet counters ride only once the feature fired, so
+        // pre-elastic snapshots keep their exact key set
+        if self.progress_dropped > 0 {
+            m.insert(
+                "progress_dropped".to_string(),
+                Json::num(self.progress_dropped as f64),
+            );
+        }
+        if self.rebinds > 0 {
+            m.insert("rebinds".to_string(), Json::num(self.rebinds as f64));
+            m.insert(
+                "rebind_requests_drained".to_string(),
+                Json::num(self.rebind_requests_drained as f64),
+            );
+        }
+        if self.slots_migrated > 0 {
+            m.insert(
+                "slots_migrated".to_string(),
+                Json::num(self.slots_migrated as f64),
+            );
+            m.insert(
+                "migration_reclaimed_slot_steps".to_string(),
+                Json::num(self.migration_reclaimed_slot_steps as f64),
+            );
+        }
         for prio in Priority::ALL {
             let h = &self.latency_by_priority[prio.index()];
             if h.count() > 0 {
@@ -879,6 +928,46 @@ mod tests {
         assert_eq!(lane.token_steps_total, 800);
         assert!((lane.frozen_step_fraction() - 0.25).abs() < 1e-9);
         assert_eq!(a.per_family.get("ssd").unwrap().tokens_frozen, 2);
+    }
+
+    #[test]
+    fn elastic_counters_flatten_and_stay_absent_when_unused() {
+        let mut m = Metrics::default();
+        // feature unused → pre-elastic snapshot key set, untouched
+        let j = m.to_json();
+        assert!(j.get("progress_dropped").is_none());
+        assert!(j.get("rebinds").is_none());
+        assert!(j.get("slots_migrated").is_none());
+        m.progress_dropped = 7;
+        m.rebinds = 2;
+        m.rebind_requests_drained = 5;
+        m.slots_migrated = 3;
+        m.migration_reclaimed_slot_steps = 120;
+        let j = m.to_json();
+        let get = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        assert_eq!(get("progress_dropped"), Some(7.0));
+        assert_eq!(get("rebinds"), Some(2.0));
+        assert_eq!(get("rebind_requests_drained"), Some(5.0));
+        assert_eq!(get("slots_migrated"), Some(3.0));
+        assert_eq!(get("migration_reclaimed_slot_steps"), Some(120.0));
+    }
+
+    #[test]
+    fn merge_folds_elastic_counters() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.rebinds = 1;
+        b.rebinds = 2;
+        b.rebind_requests_drained = 4;
+        b.progress_dropped = 9;
+        b.slots_migrated = 1;
+        b.migration_reclaimed_slot_steps = 40;
+        a.merge(&b);
+        assert_eq!(a.rebinds, 3);
+        assert_eq!(a.rebind_requests_drained, 4);
+        assert_eq!(a.progress_dropped, 9);
+        assert_eq!(a.slots_migrated, 1);
+        assert_eq!(a.migration_reclaimed_slot_steps, 40);
     }
 
     #[test]

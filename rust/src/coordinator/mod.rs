@@ -26,8 +26,8 @@
 //!   [`EngineHandle`] exposes `submit`/`try_submit`/`generate`,
 //!   `cancel(id)`, merged fleet `metrics()`, and `shutdown()`.
 //! * [`envelope`] — the versioned (v1) wire protocol: typed frames
-//!   (`submit`/`progress`/`done`/`error`/`cancel`/`halt`/`metrics`)
-//!   over a multiplexed connection, with an error taxonomy and
+//!   (`submit`/`progress`/`done`/`error`/`cancel`/`halt`/`metrics`/
+//!   `rebind`) over a multiplexed connection, with an error taxonomy and
 //!   per-line legacy autodetect (lines without a `"v"` key take the
 //!   one-shot path unchanged).
 //! * [`server`] — TCP JSON-lines front-end: per-connection writer
@@ -54,16 +54,19 @@ pub mod client;
 pub mod engine;
 pub mod envelope;
 pub mod metrics;
+pub mod progress;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod worker;
 
-pub use client::{CancelAck, Client, HaltAck};
+pub use client::{CancelAck, Client, HaltAck, RebindAck};
 pub use engine::{start, EngineConfig, EngineHandle, EngineJoin};
 pub use envelope::{Command, Event, PROTOCOL_VERSION};
 pub use request::{GenRequest, GenResponse, Priority, ProgressEvent};
+pub use progress::DEFAULT_PROGRESS_BUFFER;
 pub use scheduler::{
-    CancelOutcome, GenOutcome, ProgressTx, Scheduler, ServeError,
+    CancelOutcome, GenOutcome, ProgressRx, ProgressTx, RebindOrder,
+    RebindReport, ResumeState, Scheduler, ServeError,
 };
 pub use server::Server;

@@ -1,0 +1,251 @@
+//! Bounded per-subscriber progress fan-out.
+//!
+//! The progress stream used to ride a plain `mpsc::channel()`: an
+//! unbounded buffer per subscriber, so one slow (or stalled) progress
+//! reader made the fleet accumulate frames without limit while its
+//! request kept stepping.  This channel bounds each subscriber to a
+//! fixed window of the *most recent* frames: a send over capacity
+//! evicts the oldest buffered frame (drop-oldest) rather than blocking
+//! the worker's hot loop or growing without bound.  Progress frames
+//! are periodic snapshots — the newest one supersedes the ones before
+//! it — so drop-oldest loses only stale intermediate state, never the
+//! freshest view.
+//!
+//! [`Sender::send`] reports how many frames it evicted so the worker
+//! can account them (`progress_dropped` in the metrics snapshot), and
+//! fails typed once the receiver is gone so dead subscribers are
+//! dropped on the first failed send exactly like the old channel.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Default per-subscriber buffer, in frames.  Progress cadence is
+/// client-chosen (`progress_every`), so the window is sized in frames
+/// rather than bytes: 64 frames of headroom absorbs a reader stalled
+/// for a full schedule at the default cadence without letting one
+/// subscriber hold more than a screenful of stale snapshots.
+pub const DEFAULT_PROGRESS_BUFFER: usize = 64;
+
+/// The receiver is gone; the subscription is over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnected;
+
+impl std::fmt::Display for Disconnected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("progress receiver disconnected")
+    }
+}
+
+impl std::error::Error for Disconnected {}
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    /// total frames evicted by drop-oldest over this channel's lifetime
+    dropped: u64,
+    tx_count: usize,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    avail: Condvar,
+}
+
+/// Bounded drop-oldest sender; clones share the one buffer.
+pub struct Sender<T>(Arc<Shared<T>>);
+
+/// Receiving half; dropping it fails every later send typed.
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+/// A bounded progress channel holding at most `cap` in-flight frames
+/// (minimum 1).  Sends beyond capacity evict the oldest frame.
+pub fn channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            buf: VecDeque::new(),
+            cap: cap.max(1),
+            dropped: 0,
+            tx_count: 1,
+            rx_alive: true,
+        }),
+        avail: Condvar::new(),
+    });
+    (Sender(shared.clone()), Receiver(shared))
+}
+
+impl<T> Sender<T> {
+    /// Buffer one frame.  Returns how many older frames this send had
+    /// to evict (0 on the uncongested path) or [`Disconnected`] once
+    /// the receiver is gone — the caller's cue to drop the subscriber.
+    pub fn send(&self, v: T) -> Result<u64, Disconnected> {
+        let mut g = self.0.inner.lock().unwrap();
+        if !g.rx_alive {
+            return Err(Disconnected);
+        }
+        let mut evicted = 0u64;
+        while g.buf.len() >= g.cap {
+            g.buf.pop_front();
+            evicted += 1;
+        }
+        g.buf.push_back(v);
+        g.dropped += evicted;
+        drop(g);
+        self.0.avail.notify_one();
+        Ok(evicted)
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.inner.lock().unwrap().tx_count += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let senders = {
+            let mut g = self.0.inner.lock().unwrap();
+            g.tx_count -= 1;
+            g.tx_count
+        };
+        if senders == 0 {
+            // end-of-stream: wake a receiver blocked in recv()
+            self.0.avail.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block for the next frame; `Err(Disconnected)` means every
+    /// sender is gone and the buffer is drained (end of stream).
+    pub fn recv(&self) -> Result<T, Disconnected> {
+        let mut g = self.0.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.buf.pop_front() {
+                return Ok(v);
+            }
+            if g.tx_count == 0 {
+                return Err(Disconnected);
+            }
+            g = self.0.avail.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking receive: `None` when no frame is buffered (whether
+    /// or not senders remain).
+    pub fn try_recv(&self) -> Option<T> {
+        self.0.inner.lock().unwrap().buf.pop_front()
+    }
+
+    /// Total frames evicted by drop-oldest since the channel opened.
+    pub fn dropped(&self) -> u64 {
+        self.0.inner.lock().unwrap().dropped
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut g = self.0.inner.lock().unwrap();
+        g.rx_alive = false;
+        // frames nobody will read: surface them in the drop count so
+        // accounting stays truthful even for abandoned subscribers
+        g.dropped += g.buf.len() as u64;
+        g.buf.clear();
+    }
+}
+
+impl<T> Iterator for Receiver<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        self.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_flow_in_order_under_capacity() {
+        let (tx, rx) = channel(4);
+        for i in 0..3 {
+            assert_eq!(tx.send(i), Ok(0));
+        }
+        assert_eq!(rx.try_recv(), Some(0));
+        assert_eq!(rx.try_recv(), Some(1));
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(rx.try_recv(), None);
+        assert_eq!(rx.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_reports_the_eviction() {
+        let (tx, rx) = channel(2);
+        assert_eq!(tx.send(1), Ok(0));
+        assert_eq!(tx.send(2), Ok(0));
+        // buffer full: the oldest frame (1) is evicted, not the new one
+        assert_eq!(tx.send(3), Ok(1));
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(rx.try_recv(), Some(3));
+        assert_eq!(rx.dropped(), 1);
+    }
+
+    #[test]
+    fn send_after_receiver_drop_is_typed() {
+        let (tx, rx) = channel(2);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(Disconnected));
+    }
+
+    #[test]
+    fn recv_after_last_sender_drop_ends_the_stream() {
+        let (tx, rx) = channel(4);
+        tx.send(1).unwrap();
+        drop(tx);
+        // the buffered frame is still delivered, then end-of-stream
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Err(Disconnected));
+    }
+
+    #[test]
+    fn iterator_drains_then_ends() {
+        let (tx, rx) = channel(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = rx.collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn blocked_recv_wakes_on_send() {
+        let (tx, rx) = channel(2);
+        let h = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        tx.send(42).unwrap();
+        assert_eq!(h.join().unwrap(), Ok(42));
+    }
+
+    #[test]
+    fn receiver_drop_counts_abandoned_frames() {
+        let (tx, rx) = channel(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(rx);
+        // both buffered frames were abandoned unread; the next send
+        // fails typed rather than buffering into the void
+        assert_eq!(tx.send(3), Err(Disconnected));
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let (tx, rx) = channel(0);
+        assert_eq!(tx.send(1), Ok(0));
+        assert_eq!(tx.send(2), Ok(1));
+        assert_eq!(rx.try_recv(), Some(2));
+    }
+}

@@ -62,14 +62,19 @@
 //! serves it).
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority, ProgressEvent};
-use crate::predictor::{check_feasibility, Estimator, Feasibility, PackingMode};
-use crate::sampler::{Family, FamilyId};
+use crate::halting::BoxedPolicy;
+use crate::predictor::{
+    check_feasibility, Estimator, Feasibility, PackingMode, N_BUCKETS,
+    N_SLOPE_BUCKETS,
+};
+use crate::sampler::{Family, FamilyId, SlotExport};
 
 /// Typed serving-path failure, delivered instead of a [`GenResponse`]
 /// (on the wire: `{"error": "<as_str()>"}`).
@@ -142,7 +147,74 @@ pub type ReplyTx = mpsc::Sender<GenOutcome>;
 
 /// Progress-subscriber channel for one request: the owning worker sends
 /// a throttled [`ProgressEvent`] every `progress_every` executed steps.
-pub type ProgressTx = mpsc::Sender<ProgressEvent>;
+/// Bounded per subscriber (drop-oldest beyond the buffer): one stalled
+/// reader can neither block the worker's hot loop nor buffer frames
+/// without limit — see [`super::progress`].
+pub type ProgressTx = super::progress::Sender<ProgressEvent>;
+
+/// Receiving half of a progress subscription.
+pub type ProgressRx = super::progress::Receiver<ProgressEvent>;
+
+/// Mid-generation state a drained or migrating slot carries back
+/// through the queue: the device-state export plus the owning worker's
+/// per-slot bookkeeping, so the destination worker resumes the request
+/// bit-exactly where the source left it (same RNG, same frozen pins,
+/// same policy state, continuous latency clock).
+pub struct ResumeState {
+    /// the slot's full generation state ([`crate::sampler::Session`]
+    /// export/import pair)
+    pub export: SlotExport,
+    /// the live halting policy, mid-observation (NOT reset on
+    /// re-admission — resetting would forget its accumulated signal)
+    pub policy: BoxedPolicy,
+    /// original admission instant — `latency_ms` stays continuous
+    /// across the migration
+    pub started: Instant,
+    /// previous step's KL (the per-slot slope signal)
+    pub prev_kl: Option<f32>,
+    pub tokens_frozen: u64,
+    pub frozen_token_steps: u64,
+    pub token_steps_saved: u64,
+    /// estimator training signal: first-entry step per entropy bucket
+    pub bucket_entry: [Option<usize>; N_BUCKETS],
+    /// first-entry step per KL-slope bucket
+    pub slope_entry: [Option<usize>; N_SLOPE_BUCKETS],
+    /// latest live `(remaining, total)` re-estimate for the wire
+    pub last_prediction: Option<(usize, usize)>,
+    /// the worker a *migration* left (None for rebind drains): while
+    /// another live worker serves the family, `next_for` skips the
+    /// source so a migrated slot can't ping-pong home
+    pub migrated_from: Option<usize>,
+}
+
+/// An operator (or `--fleet auto`) order for one worker: drain, rebuild
+/// the session against the new binding, rejoin.  `None` fields keep the
+/// worker's current value — a checkpoint-only order is a hot-swap, a
+/// family/batch order is a reshape.
+pub struct RebindOrder {
+    pub family: Option<FamilyId>,
+    pub batch: Option<usize>,
+    /// new checkpoint path; `Some(None)` would be ambiguous on the
+    /// wire, so the empty string means "drop back to init params"
+    pub checkpoint: Option<String>,
+    /// where the rebind report (or a typed failure) is answered;
+    /// `None` for fire-and-forget supervisor orders
+    pub reply: Option<mpsc::Sender<Result<RebindReport, String>>>,
+}
+
+/// What a completed rebind reports back to its requester.
+#[derive(Clone, Debug)]
+pub struct RebindReport {
+    pub worker: usize,
+    /// binding after the rebind
+    pub family: FamilyId,
+    pub batch: usize,
+    /// in-flight requests drained back to the queue (all of them were
+    /// re-admitted elsewhere or by this worker after the rebind — the
+    /// zero-dropped-requests invariant)
+    pub drained: usize,
+    pub rebind_ms: f64,
+}
 
 /// A queued request plus its reply channel, progress subscriber,
 /// resolved family, and timing/deadline state.
@@ -162,6 +234,9 @@ pub struct QueuedReq {
     /// the scheduler runs without a predictor) — drives SRPT packing
     /// and, via the worker, the wire's `predicted_total_steps`
     pub predicted_steps: Option<usize>,
+    /// mid-generation state from a drain or migration; the admitting
+    /// worker imports it instead of resetting a fresh slot
+    pub resume: Option<Box<ResumeState>>,
 }
 
 impl QueuedReq {
@@ -184,6 +259,7 @@ impl QueuedReq {
             submitted,
             deadline,
             predicted_steps,
+            resume: None,
         }
     }
 }
@@ -220,6 +296,8 @@ pub enum IdleWait {
     Work,
     /// shutdown with a drained queue — exit the worker loop
     Exit,
+    /// a rebind order is pending for this worker — take and run it
+    Rebind,
 }
 
 /// What [`Scheduler::flagged`] found for a running request.
@@ -268,8 +346,13 @@ fn tab_sub(tab: &mut [usize], idx: usize, n: usize) {
 /// A queued request's contribution to its family's predicted-steps
 /// backlog: the admission-time prediction, or the full budget when it
 /// was admitted without one (cold start / predictor off — pessimistic,
-/// same convention as SRPT packing).
+/// same convention as SRPT packing).  A drained/migrating request costs
+/// exactly its remaining schedule — mostly-done slots therefore sort
+/// near the front under SRPT and price almost nothing at admission.
 fn queued_cost(q: &QueuedReq) -> usize {
+    if let Some(r) = &q.resume {
+        return r.export.steps_remaining();
+    }
     q.predicted_steps.unwrap_or(q.req.n_steps)
 }
 
@@ -301,7 +384,51 @@ struct State {
     /// live workers per family — admission rejects families nobody
     /// serves with a typed `invalid_request`
     family_live: Vec<usize>,
+    /// family per worker id (the routing table).  Lives in the mutable
+    /// state, not the scheduler: a rebind re-points it live.
+    worker_family: Vec<FamilyId>,
+    /// resolved compiled batch per worker (0 until the worker reports
+    /// in) — the migration policy's shard-size signal
+    worker_batch: Vec<usize>,
+    /// per-worker liveness (worker_down flips it; `workers_live` is
+    /// the count, this is the roster)
+    worker_alive: Vec<bool>,
+    /// pending drain→rebind→rejoin order per worker, taken exactly
+    /// once by the owning worker
+    rebind_orders: Vec<Option<RebindOrder>>,
     shutdown: bool,
+}
+
+/// Under the state lock: when `fam` has no live worker left, drain its
+/// queued requests (they fail over to `Unavailable`) and zero its
+/// tables — submitters must never block on work nobody will drain.
+fn drain_family_if_dead(st: &mut State, fam: FamilyId) -> Vec<QueuedReq> {
+    let fi = fam.index();
+    if tab_get(&st.family_live, fi) != 0 {
+        return Vec::new();
+    }
+    let mut drained = Vec::new();
+    for q in st.queues.iter_mut() {
+        let mut k = 0;
+        while k < q.len() {
+            if q[k].family == fam {
+                drained.push(q.remove(k).unwrap());
+            } else {
+                k += 1;
+            }
+        }
+    }
+    st.queued -= drained.len();
+    if let Some(v) = st.queued_by_family.get_mut(fi) {
+        *v = 0;
+    }
+    if let Some(v) = st.queued_steps_by_family.get_mut(fi) {
+        *v = 0;
+    }
+    for q in &drained {
+        st.live_ids.remove(&q.req.id);
+    }
+    drained
 }
 
 /// The scheduler's handle on the fleet predictor: the shared estimator
@@ -334,8 +461,9 @@ pub struct Scheduler {
     max_prefix: Option<usize>,
     /// family assumed for requests that don't name one
     default_family: FamilyId,
-    /// family per worker id (the routing table)
-    worker_family: Vec<FamilyId>,
+    /// estimator-update ticks since the last bounded queue re-sort
+    /// (the satellite re-sort is throttled, not per-completion)
+    resort_ticks: AtomicU64,
     /// admission-side bookkeeping: submissions, preflight completions,
     /// overload rejections, queued-side cancels and deadline drops
     pub metrics: Mutex<Metrics>,
@@ -354,6 +482,7 @@ impl Scheduler {
             .first()
             .copied()
             .unwrap_or(Family::Ddlm.into());
+        let n_workers = worker_families.len();
         Scheduler {
             state: Mutex::new(State {
                 queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
@@ -364,8 +493,12 @@ impl Scheduler {
                 cancel_flags: HashSet::new(),
                 halt_flags: HashSet::new(),
                 live_ids: HashSet::new(),
-                workers_live: worker_families.len(),
+                workers_live: n_workers,
                 family_live,
+                worker_family: worker_families,
+                worker_batch: vec![0; n_workers],
+                worker_alive: vec![true; n_workers],
+                rebind_orders: (0..n_workers).map(|_| None).collect(),
                 shutdown: false,
             }),
             work_ready: Condvar::new(),
@@ -375,7 +508,7 @@ impl Scheduler {
             predictor: None,
             max_prefix: None,
             default_family,
-            worker_family: worker_families,
+            resort_ticks: AtomicU64::new(0),
             metrics: Mutex::new(Metrics::default()),
         }
     }
@@ -437,11 +570,18 @@ impl Scheduler {
         self
     }
 
-    fn family_of_worker(&self, worker: usize) -> FamilyId {
-        self.worker_family
+    /// Under the state lock: `worker`'s current family binding.
+    fn family_in(&self, st: &State, worker: usize) -> FamilyId {
+        st.worker_family
             .get(worker)
             .copied()
             .unwrap_or(self.default_family)
+    }
+
+    /// `worker`'s current family binding (rebinds re-point it live).
+    pub fn family_of_worker(&self, worker: usize) -> FamilyId {
+        let st = self.state.lock().unwrap();
+        self.family_in(&st, worker)
     }
 
     /// Admit one request.  Preflight-resolvable policies and zero-step
@@ -632,7 +772,6 @@ impl Scheduler {
     /// restricted to the worker's family), answering and removing
     /// queued requests whose deadline already expired along the way.
     pub fn next_for(&self, worker: usize) -> Option<QueuedReq> {
-        let fam = self.family_of_worker(worker);
         let srpt = self
             .predictor
             .as_ref()
@@ -641,6 +780,11 @@ impl Scheduler {
         let mut expired: Vec<QueuedReq> = Vec::new();
         let picked = {
             let mut st = self.state.lock().unwrap();
+            let fam = self.family_in(&st, worker);
+            // anti-ping-pong: a migrated slot avoids the worker it just
+            // left — but only while another live worker serves the
+            // family (a last-worker-standing must still take it back)
+            let others = tab_get(&st.family_live, fam.index()) >= 2;
             let mut picked = None;
             'scan: for pi in 0..Priority::COUNT {
                 // under SRPT, the whole class is scanned and the
@@ -667,14 +811,17 @@ impl Scheduler {
                         // this removal at k never shifts it
                         continue;
                     }
-                    if st.queues[pi][k].family == fam {
+                    let q = &st.queues[pi][k];
+                    let bounced = others
+                        && q.resume
+                            .as_ref()
+                            .is_some_and(|r| r.migrated_from == Some(worker));
+                    if q.family == fam && !bounced {
                         if !srpt {
                             best = Some((k, 0));
                             break;
                         }
-                        let q = &st.queues[pi][k];
-                        let pred =
-                            q.predicted_steps.unwrap_or(q.req.n_steps);
+                        let pred = queued_cost(q);
                         let better = match best {
                             None => true,
                             Some((_, b)) => pred < b,
@@ -912,14 +1059,23 @@ impl Scheduler {
     }
 
     /// Block until work this worker's family can serve is queued
-    /// (`Work`) or the engine is shut down with a drained queue
-    /// (`Exit`).  Only fully-idle workers wait here; busy workers are
-    /// driven by their own step loop.  The predicate is per-family so a
-    /// worker never busy-wakes on work only another kernel can serve.
+    /// (`Work`), a rebind order lands for it (`Rebind`), or the engine
+    /// is shut down with a drained queue (`Exit`).  Only fully-idle
+    /// workers wait here; busy workers are driven by their own step
+    /// loop.  The predicate is per-family so a worker never busy-wakes
+    /// on work only another kernel can serve — and it re-reads the
+    /// family each pass, because a rebind changes it.
     pub fn wait_for_work(&self, worker: usize) -> IdleWait {
-        let fam = self.family_of_worker(worker);
         let mut st = self.state.lock().unwrap();
         loop {
+            if st
+                .rebind_orders
+                .get(worker)
+                .is_some_and(Option::is_some)
+            {
+                return IdleWait::Rebind;
+            }
+            let fam = self.family_in(&st, worker);
             if tab_get(&st.queued_by_family, fam.index()) > 0 {
                 return IdleWait::Work;
             }
@@ -944,12 +1100,18 @@ impl Scheduler {
     /// `Unavailable` so submitters never block on work nobody will
     /// drain (other families' shards keep serving their own queues).
     pub fn worker_down(&self, worker: usize) {
-        let fam = self.family_of_worker(worker);
-        let orphans = {
+        let (orphans, aborted_order) = {
             let mut st = self.state.lock().unwrap();
+            let fam = self.family_in(&st, worker);
             st.workers_live = st.workers_live.saturating_sub(1);
-            let fi = fam.index();
-            tab_dec(&mut st.family_live, fi);
+            if let Some(a) = st.worker_alive.get_mut(worker) {
+                *a = false;
+            }
+            // a rebind order nobody will ever take fails typed, not
+            // silently (its requester is blocked on the reply)
+            let order =
+                st.rebind_orders.get_mut(worker).and_then(Option::take);
+            tab_dec(&mut st.family_live, fam.index());
             let dead: Vec<u64> = st
                 .running
                 .iter()
@@ -961,33 +1123,13 @@ impl Scheduler {
                 st.halt_flags.remove(&id);
                 st.live_ids.remove(&id);
             }
-            if tab_get(&st.family_live, fi) == 0 {
-                let mut drained = Vec::new();
-                for q in st.queues.iter_mut() {
-                    let mut k = 0;
-                    while k < q.len() {
-                        if q[k].family == fam {
-                            drained.push(q.remove(k).unwrap());
-                        } else {
-                            k += 1;
-                        }
-                    }
-                }
-                st.queued -= drained.len();
-                if let Some(v) = st.queued_by_family.get_mut(fi) {
-                    *v = 0;
-                }
-                if let Some(v) = st.queued_steps_by_family.get_mut(fi) {
-                    *v = 0;
-                }
-                for q in &drained {
-                    st.live_ids.remove(&q.req.id);
-                }
-                drained
-            } else {
-                Vec::new()
-            }
+            (drain_family_if_dead(&mut st, fam), order)
         };
+        if let Some(o) = aborted_order {
+            if let Some(tx) = o.reply {
+                let _ = tx.send(Err("worker exited before rebind".into()));
+            }
+        }
         for q in orphans {
             let _ = q.reply.send(Err(ServeError::Unavailable));
         }
@@ -996,6 +1138,11 @@ impl Scheduler {
     /// Current admission-queue depth (fleet gauge).
     pub fn queue_depth(&self) -> usize {
         self.state.lock().unwrap().queued
+    }
+
+    /// Whether `shutdown()` has been called (supervisor exit signal).
+    pub fn is_shutdown(&self) -> bool {
+        self.state.lock().unwrap().shutdown
     }
 
     /// Requests admitted to a worker and not yet finished (fleet gauge).
@@ -1010,6 +1157,296 @@ impl Scheduler {
         let st = self.state.lock().unwrap();
         tab_get(&st.queued_steps_by_family, family.index())
     }
+
+    // ------------------------------------------------------------------
+    // elastic fleet: drain → rebind → rejoin, and live slot migration
+    // ------------------------------------------------------------------
+
+    /// Post a drain→rebind→rejoin order for `worker`.  The order is
+    /// taken exactly once by the owning worker (idle workers wake on
+    /// it; busy workers notice it at the top of their step loop).
+    /// Typed refusals: an unknown or exited worker, a draining engine,
+    /// and one order already in flight.
+    pub fn request_rebind(
+        &self,
+        worker: usize,
+        order: RebindOrder,
+    ) -> Result<(), &'static str> {
+        {
+            let mut st = self.state.lock().unwrap();
+            if worker >= st.worker_family.len() {
+                return Err("unknown_worker");
+            }
+            if !st.worker_alive.get(worker).copied().unwrap_or(false) {
+                return Err("worker_down");
+            }
+            if st.shutdown {
+                return Err("shutting_down");
+            }
+            if st.rebind_orders[worker].is_some() {
+                return Err("rebind_in_flight");
+            }
+            st.rebind_orders[worker] = Some(order);
+        }
+        self.work_ready.notify_all();
+        Ok(())
+    }
+
+    /// Worker-side: claim this worker's pending rebind order, if any.
+    pub fn take_rebind(&self, worker: usize) -> Option<RebindOrder> {
+        self.state
+            .lock()
+            .unwrap()
+            .rebind_orders
+            .get_mut(worker)
+            .and_then(Option::take)
+    }
+
+    /// Is a rebind order pending for `worker`?  (Supervisor cooldown
+    /// check; the worker itself uses [`Self::take_rebind`].)
+    pub fn rebind_pending(&self, worker: usize) -> bool {
+        let st = self.state.lock().unwrap();
+        st.rebind_orders.get(worker).is_some_and(Option::is_some)
+    }
+
+    /// Worker-side: push drained in-flight requests back to the *front*
+    /// of their class queues (original admission order preserved), with
+    /// their mid-generation [`ResumeState`] attached.  The ids stay
+    /// live — these requests were admitted once and must complete
+    /// exactly once; nothing here can reject them.
+    pub fn requeue_drained(&self, items: Vec<QueuedReq>) {
+        if items.is_empty() {
+            return;
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            for q in items.into_iter().rev() {
+                st.running.remove(&q.req.id);
+                let class = q.req.priority.index();
+                st.queued += 1;
+                tab_inc(&mut st.queued_by_family, q.family.index());
+                tab_add(
+                    &mut st.queued_steps_by_family,
+                    q.family.index(),
+                    queued_cost(&q),
+                );
+                st.queues[class].push_front(q);
+            }
+        }
+        self.work_ready.notify_all();
+    }
+
+    /// Worker-side: the rebind finished — re-point the routing table to
+    /// the worker's new `(family, batch)` binding.  When the *old*
+    /// family just lost its last live worker, its queued requests fail
+    /// over to `Unavailable` exactly like a worker exit (submitters are
+    /// answered, never hung).
+    pub fn complete_rebind(
+        &self,
+        worker: usize,
+        family: FamilyId,
+        batch: usize,
+    ) {
+        let orphans = {
+            let mut st = self.state.lock().unwrap();
+            if worker >= st.worker_family.len() {
+                return;
+            }
+            let old = st.worker_family[worker];
+            st.worker_family[worker] = family;
+            if let Some(b) = st.worker_batch.get_mut(worker) {
+                *b = batch;
+            }
+            if old == family {
+                Vec::new()
+            } else {
+                tab_dec(&mut st.family_live, old.index());
+                // family_live is a plain counter table like the others
+                if family.index() >= st.family_live.len() {
+                    st.family_live.resize(family.index() + 1, 0);
+                }
+                st.family_live[family.index()] += 1;
+                drain_family_if_dead(&mut st, old)
+            }
+        };
+        for q in orphans {
+            let _ = q.reply.send(Err(ServeError::Unavailable));
+        }
+        // the new family's queued work (if any) can now be served here
+        self.work_ready.notify_all();
+    }
+
+    /// Worker-side: report the resolved compiled batch (at startup and
+    /// after every rebind) — the migration policy's shard-size signal.
+    pub fn register_worker_batch(&self, worker: usize, batch: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(b) = st.worker_batch.get_mut(worker) {
+            *b = batch;
+        }
+    }
+
+    /// Is a live worker of `family` bound to a strictly smaller batch
+    /// than `worker`'s — i.e. is there a smaller shard a mostly-frozen
+    /// long-tail slot could migrate to?  Workers with a rebind in
+    /// flight don't count (their binding is about to change).
+    pub fn smaller_shard_live(&self, worker: usize, family: FamilyId) -> bool {
+        let st = self.state.lock().unwrap();
+        let my_b = st.worker_batch.get(worker).copied().unwrap_or(0);
+        if my_b == 0 {
+            return false;
+        }
+        st.worker_family.iter().enumerate().any(|(w, &f)| {
+            let b = st.worker_batch.get(w).copied().unwrap_or(0);
+            w != worker
+                && f == family
+                && st.worker_alive.get(w).copied().unwrap_or(false)
+                && st.rebind_orders.get(w).map_or(true, Option::is_none)
+                && b > 0
+                && b < my_b
+        })
+    }
+
+    /// One consistent view of the fleet for the `--fleet auto`
+    /// supervisor: every worker's binding and load, plus the queued
+    /// backlog per family.
+    pub fn fleet_snapshot(&self) -> FleetSnapshot {
+        let st = self.state.lock().unwrap();
+        let mut load = vec![0usize; st.worker_family.len()];
+        for &w in st.running.values() {
+            if let Some(v) = load.get_mut(w) {
+                *v += 1;
+            }
+        }
+        FleetSnapshot {
+            workers: st
+                .worker_family
+                .iter()
+                .enumerate()
+                .map(|(w, &family)| WorkerInfo {
+                    worker: w,
+                    family,
+                    batch: st.worker_batch.get(w).copied().unwrap_or(0),
+                    alive: st.worker_alive.get(w).copied().unwrap_or(false),
+                    running: load[w],
+                    rebind_pending: st
+                        .rebind_orders
+                        .get(w)
+                        .is_some_and(Option::is_some),
+                })
+                .collect(),
+            queued_by_family: st.queued_by_family.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // estimator-shift re-sort (bounded, throttled)
+    // ------------------------------------------------------------------
+
+    /// The estimator learned something (a worker fed it a completion).
+    /// Every [`RESORT_PERIOD`]-th call re-prices and re-sorts the front
+    /// of the queues — predictions admitted early in a burst go stale
+    /// as the estimator trains, and SRPT packed on stale predictions is
+    /// just FIFO with extra steps.
+    pub fn note_estimator_update(&self) {
+        if self.predictor.is_none() {
+            return;
+        }
+        let n = self.resort_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % RESORT_PERIOD == 0 {
+            self.resort_queues();
+        }
+    }
+
+    /// Re-price the first [`RESORT_BOUND`] queued requests of every
+    /// class against the estimator's *current* predictions, fix the
+    /// per-family backlog tables, and (under SRPT packing) stable-sort
+    /// each re-priced front segment — stable, so equal predictions keep
+    /// their FIFO order.  Bounded: a deep queue's tail keeps its order
+    /// and its admission-time predictions until it reaches the front.
+    pub fn resort_queues(&self) {
+        let Some(p) = &self.predictor else { return };
+        // snapshot the front segments under the lock, consult the
+        // estimator OUTSIDE it (lock discipline: the estimator's mutex
+        // is never nested inside the state mutex)
+        let snapshot: Vec<(u64, FamilyId, usize)> = {
+            let st = self.state.lock().unwrap();
+            st.queues
+                .iter()
+                .flat_map(|q| {
+                    q.iter().take(RESORT_BOUND).filter_map(|q| {
+                        // resumed requests are priced by their actual
+                        // remaining schedule, not a prediction
+                        q.resume.is_none().then(|| {
+                            (q.req.id, q.family, q.req.n_steps)
+                        })
+                    })
+                })
+                .collect()
+        };
+        if snapshot.is_empty() {
+            return;
+        }
+        let preds: HashMap<u64, usize> = snapshot
+            .into_iter()
+            .map(|(id, fam, n)| (id, p.est.predict_total(fam, n).steps))
+            .collect();
+        let srpt = p.packing == PackingMode::Srpt;
+        let mut st = self.state.lock().unwrap();
+        let State { queues, queued_steps_by_family, .. } = &mut *st;
+        for q in queues.iter_mut() {
+            let bound = q.len().min(RESORT_BOUND);
+            for k in 0..bound {
+                let item = &mut q[k];
+                // items may have moved since the snapshot (a concurrent
+                // pop); match by id and skip the missing
+                let Some(&newp) = preds.get(&item.req.id) else {
+                    continue;
+                };
+                let old = queued_cost(item);
+                item.predicted_steps = Some(newp);
+                let newc = queued_cost(item);
+                if newc != old {
+                    tab_sub(queued_steps_by_family, item.family.index(), old);
+                    tab_add(queued_steps_by_family, item.family.index(), newc);
+                }
+            }
+            if srpt && bound > 1 {
+                let mut rest = q.split_off(bound);
+                let mut front: Vec<QueuedReq> = q.drain(..).collect();
+                front.sort_by_key(queued_cost);
+                q.extend(front);
+                q.append(&mut rest);
+            }
+        }
+    }
+}
+
+/// Re-sort cadence: one bounded re-sort per this many estimator
+/// updates.  Completions arrive per request; re-sorting each one would
+/// make queue order churn O(completions × queue depth).
+pub const RESORT_PERIOD: u64 = 8;
+
+/// How deep into each class queue a re-sort re-prices and re-orders.
+pub const RESORT_BOUND: usize = 64;
+
+/// One worker's binding and load in a [`Scheduler::fleet_snapshot`].
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerInfo {
+    pub worker: usize,
+    pub family: FamilyId,
+    pub batch: usize,
+    pub alive: bool,
+    /// requests currently admitted to this worker
+    pub running: usize,
+    pub rebind_pending: bool,
+}
+
+/// Consistent fleet view for the `--fleet auto` supervisor.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub workers: Vec<WorkerInfo>,
+    /// queued requests per family (indexed by `FamilyId::index()`)
+    pub queued_by_family: Vec<usize>,
 }
 
 #[cfg(test)]
@@ -1521,7 +1958,7 @@ mod tests {
     fn progress_subscriber_travels_with_the_queued_request() {
         let s = sched(8, 1);
         let (tx, _rx) = chan();
-        let (ptx, prx) = mpsc::channel();
+        let (ptx, prx) = super::super::progress::channel(8);
         let mut r = req(31, 100);
         r.progress_every = Some(10);
         s.submit_with_progress(r, tx, Some(ptx)).unwrap();
@@ -1750,5 +2187,287 @@ mod tests {
             ServeError::InfeasibleDeadline.as_str(),
             "infeasible_deadline"
         );
+    }
+
+    // ---- elastic fleet: rebind, drain/requeue, migration routing ----
+
+    fn order(batch: Option<usize>) -> RebindOrder {
+        RebindOrder {
+            family: None,
+            batch,
+            checkpoint: None,
+            reply: None,
+        }
+    }
+
+    /// Attach a synthetic mid-generation resume (half the budget done)
+    /// to a popped request, as a draining worker would.
+    fn resumed(mut q: QueuedReq, from: Option<usize>) -> QueuedReq {
+        let export = crate::sampler::session::SlotExport::synthetic(
+            q.family,
+            q.req.n_steps,
+            q.req.n_steps / 2,
+        );
+        q.resume = Some(Box::new(ResumeState {
+            export,
+            policy: Box::new(crate::halting::NoHalt),
+            started: Instant::now(),
+            prev_kl: None,
+            tokens_frozen: 0,
+            frozen_token_steps: 0,
+            token_steps_saved: 0,
+            bucket_entry: [None; N_BUCKETS],
+            slope_entry: [None; N_SLOPE_BUCKETS],
+            last_prediction: None,
+            migrated_from: from,
+        }));
+        q
+    }
+
+    #[test]
+    fn rebind_order_wakes_idle_worker_and_is_taken_once() {
+        let s = sched(8, 1);
+        assert!(!s.rebind_pending(0));
+        s.request_rebind(0, order(Some(1))).unwrap();
+        assert!(s.rebind_pending(0));
+        // one order in flight at a time, typed refusal
+        assert_eq!(s.request_rebind(0, order(None)), Err("rebind_in_flight"));
+        // the idle wait surfaces the order without blocking
+        assert_eq!(s.wait_for_work(0), IdleWait::Rebind);
+        let o = s.take_rebind(0).unwrap();
+        assert_eq!(o.batch, Some(1));
+        assert!(s.take_rebind(0).is_none());
+        assert!(!s.rebind_pending(0));
+        // unknown and exited workers refuse typed
+        assert_eq!(s.request_rebind(9, order(None)), Err("unknown_worker"));
+        s.worker_down(0);
+        assert_eq!(s.request_rebind(0, order(None)), Err("worker_down"));
+    }
+
+    #[test]
+    fn worker_down_fails_its_pending_rebind_order() {
+        let s = sched(8, 2);
+        let (rtx, rrx) = mpsc::channel();
+        s.request_rebind(
+            0,
+            RebindOrder {
+                family: None,
+                batch: Some(1),
+                checkpoint: None,
+                reply: Some(rtx),
+            },
+        )
+        .unwrap();
+        s.worker_down(0);
+        // the requester is answered, not hung
+        assert!(rrx.recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn requeue_drained_restores_front_order_and_tables() {
+        let s = sched(8, 2);
+        for id in 1..=3 {
+            let (tx, _rx) = chan();
+            s.submit(req(id, 10), tx).unwrap();
+        }
+        let a = s.next_for(0).unwrap();
+        let b = s.next_for(0).unwrap();
+        assert_eq!((a.req.id, b.req.id), (1, 2));
+        assert_eq!(s.running_count(), 2);
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 10);
+        s.requeue_drained(vec![a, b]);
+        // back in the queue, ahead of the untouched tail, in their
+        // original order — and fully accounted
+        assert_eq!(s.running_count(), 0);
+        assert_eq!(s.queue_depth(), 3);
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 30);
+        // the ids stayed live across the drain: still duplicates
+        let (txd, _rxd) = chan();
+        assert_eq!(s.submit(req(1, 10), txd), Err(ServeError::DuplicateId));
+        let drained: Vec<u64> = std::iter::from_fn(|| s.next_for(1))
+            .map(|q| q.req.id)
+            .collect();
+        assert_eq!(drained, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn resumed_requests_cost_their_remaining_steps() {
+        let s = sched(8, 2);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 100), tx).unwrap();
+        let q = s.next_for(0).unwrap();
+        // half done: the requeued cost is the remaining 50, not 100
+        s.requeue_drained(vec![resumed(q, None)]);
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 50);
+        let got = s.next_for(1).unwrap();
+        assert_eq!(got.resume.as_ref().unwrap().export.steps_remaining(), 50);
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 0);
+    }
+
+    #[test]
+    fn migrated_request_avoids_its_source_while_another_worker_lives() {
+        let s = sched(8, 2);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 100), tx).unwrap();
+        let q = s.next_for(0).unwrap();
+        s.requeue_drained(vec![resumed(q, Some(0))]);
+        // the source worker skips its own migrated slot...
+        assert!(s.next_for(0).is_none());
+        // ...the sibling picks it up, resume intact
+        let got = s.next_for(1).unwrap();
+        assert_eq!(got.req.id, 1);
+        assert!(got.resume.is_some());
+        // with the sibling gone the source is last resort and takes it
+        s.requeue_drained(vec![resumed(got, Some(0))]);
+        s.worker_down(1);
+        assert_eq!(s.next_for(0).unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn complete_rebind_repoints_routing_and_fails_dead_family_queue() {
+        let s = Scheduler::new(8, fleet(&[Family::Ddlm, Family::Ssd]));
+        let (tx, rx) = chan();
+        s.submit(req(1, 10), tx).unwrap(); // ddlm (default family)
+        // the only ddlm shard rebinds to ssd: queued ddlm work fails
+        // over typed, exactly like a worker exit
+        s.complete_rebind(0, Family::Ssd.into(), 4);
+        assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Unavailable);
+        let (tx2, _rx2) = chan();
+        assert_eq!(s.submit(req(2, 10), tx2), Err(ServeError::InvalidRequest));
+        // worker 0 now serves ssd work
+        let (tx3, _rx3) = chan();
+        let mut r3 = req(3, 10);
+        r3.family = Some(Family::Ssd.into());
+        s.submit(r3, tx3).unwrap();
+        assert_eq!(s.next_for(0).unwrap().req.id, 3);
+        // same-family rebind (reshape / checkpoint swap) moves nothing
+        s.complete_rebind(0, Family::Ssd.into(), 1);
+        let snap = s.fleet_snapshot();
+        assert_eq!(snap.workers[0].family, FamilyId::from(Family::Ssd));
+        assert_eq!(snap.workers[0].batch, 1);
+    }
+
+    #[test]
+    fn smaller_shard_detection_tracks_batches_and_liveness() {
+        let s = sched(8, 3);
+        s.register_worker_batch(0, 8);
+        s.register_worker_batch(1, 1);
+        s.register_worker_batch(2, 8);
+        let fam: FamilyId = Family::Ddlm.into();
+        // both b8 shards see the b1 shard; the b1 shard sees nothing
+        // (workers 0 and 2 are equal-batch peers — peers don't count)
+        assert!(s.smaller_shard_live(0, fam));
+        assert!(s.smaller_shard_live(2, fam));
+        assert!(!s.smaller_shard_live(1, fam));
+        // a shard mid-rebind doesn't count as a destination
+        s.request_rebind(1, order(Some(8))).unwrap();
+        assert!(!s.smaller_shard_live(0, fam));
+        let _ = s.take_rebind(1);
+        assert!(s.smaller_shard_live(0, fam));
+        // a dead shard doesn't count either
+        s.worker_down(1);
+        assert!(!s.smaller_shard_live(0, fam));
+    }
+
+    #[test]
+    fn fleet_snapshot_reports_bindings_load_and_backlog() {
+        let s = Scheduler::new(8, fleet(&[Family::Ddlm, Family::Ssd]));
+        s.register_worker_batch(0, 8);
+        s.register_worker_batch(1, 4);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 10), tx).unwrap();
+        let (tx2, _rx2) = chan();
+        s.submit(req(2, 10), tx2).unwrap();
+        assert_eq!(s.next_for(0).unwrap().req.id, 1);
+        let snap = s.fleet_snapshot();
+        assert_eq!(snap.workers.len(), 2);
+        assert_eq!(snap.workers[0].batch, 8);
+        assert_eq!(snap.workers[0].running, 1);
+        assert!(snap.workers[0].alive);
+        assert_eq!(snap.workers[1].running, 0);
+        // one ddlm request still queued
+        let fam: FamilyId = Family::Ddlm.into();
+        assert_eq!(snap.queued_by_family[fam.index()], 1);
+    }
+
+    #[test]
+    fn resort_reprices_the_queue_against_fresh_predictions() {
+        // cold estimator at admission: predictions = budgets, so SRPT
+        // packs [2 (50), 3 (100), 1 (300)]
+        let est = Arc::new(Estimator::new());
+        let s = sched(16, 1).with_predictor(
+            est.clone(),
+            false,
+            PackingMode::Srpt,
+        );
+        for (id, steps) in [(1u64, 300), (2, 50), (3, 100)] {
+            let (tx, _rx) = chan();
+            s.submit(req(id, steps), tx).unwrap();
+        }
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 450);
+        // mid-burst the estimator learns generations halt at ~60 steps:
+        // capped per budget the fresh predictions are 60 / 50 / 60 —
+        // id 1's stale 300 collapses, and the 60-60 tie between 1 and 3
+        // must keep FIFO order (1 before 3)
+        let fam: FamilyId = Family::Ddlm.into();
+        for _ in 0..30 {
+            est.observe_completion(fam, 60, &[]);
+        }
+        s.resort_queues();
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 170);
+        let drained: Vec<u64> = std::iter::from_fn(|| s.next_for(0))
+            .map(|q| q.req.id)
+            .collect();
+        assert_eq!(drained, vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn note_estimator_update_throttles_the_resort() {
+        let est = Arc::new(Estimator::new());
+        let s = sched(16, 1).with_predictor(
+            est.clone(),
+            false,
+            PackingMode::Srpt,
+        );
+        for (id, steps) in [(1u64, 300), (2, 50)] {
+            let (tx, _rx) = chan();
+            s.submit(req(id, steps), tx).unwrap();
+        }
+        let fam: FamilyId = Family::Ddlm.into();
+        for _ in 0..30 {
+            est.observe_completion(fam, 60, &[]);
+        }
+        // fewer than RESORT_PERIOD ticks: no re-sort yet
+        for _ in 0..(RESORT_PERIOD - 1) {
+            s.note_estimator_update();
+        }
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 350);
+        // the period-th tick re-prices (60 capped + 50)
+        s.note_estimator_update();
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 110);
+    }
+
+    #[test]
+    fn resort_without_predictor_or_under_fifo_is_inert() {
+        // no predictor: both entry points are no-ops
+        let s = sched(16, 1);
+        let (tx, _rx) = chan();
+        s.submit(req(1, 300), tx).unwrap();
+        s.note_estimator_update();
+        s.resort_queues();
+        assert_eq!(s.queued_steps_for(Family::Ddlm), 300);
+        // FIFO packing: re-pricing happens, order never changes
+        let est = trained_est(); // learned ~100 steps
+        let s2 = sched(16, 1).with_predictor(est, false, PackingMode::Fifo);
+        for (id, steps) in [(1u64, 300), (2, 50)] {
+            let (tx, _rx) = chan();
+            s2.submit(req(id, steps), tx).unwrap();
+        }
+        s2.resort_queues();
+        // prices refreshed (100 capped at budgets: 100 + 50)...
+        assert_eq!(s2.queued_steps_for(Family::Ddlm), 150);
+        // ...but FIFO order is untouched
+        assert_eq!(s2.next_for(0).unwrap().req.id, 1);
+        assert_eq!(s2.next_for(0).unwrap().req.id, 2);
     }
 }

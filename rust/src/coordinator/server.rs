@@ -8,8 +8,9 @@
 //!   / `done` / `error` frames over the shared per-connection writer,
 //!   and the control verbs `cancel` (abort), `halt` (graceful
 //!   finalize: a normal `done` with the current x0 decode and
-//!   `halt_reason:"client"`) and `metrics` are answered with typed ack
-//!   frames;
+//!   `halt_reason:"client"`), `metrics` and `rebind` (admin: live
+//!   worker re-bind, answered asynchronously once the drain/rebuild
+//!   completes) are answered with typed ack frames;
 //! * a bare object without a `v` key is the **legacy one-shot
 //!   protocol**, served unchanged: a GenRequest JSON line
 //!   (`{"id":1,"steps":200,"criterion":"entropy:0.25","priority":
@@ -52,6 +53,7 @@ use anyhow::{Context, Result};
 use super::engine::EngineHandle;
 use super::envelope::{self, Command, Event};
 use super::request::GenRequest;
+use super::DEFAULT_PROGRESS_BUFFER;
 use crate::log_info;
 use crate::util::json::Json;
 
@@ -262,10 +264,70 @@ fn handle_frame(
             };
             let _ = tx.send(ev.to_json().encode());
         }
+        Command::Rebind {
+            worker,
+            family,
+            batch,
+            checkpoint,
+        } => {
+            // resolve the family name at the wire boundary so a typo
+            // answers a typed refusal instead of reaching the engine
+            let fam = match family.as_deref() {
+                Some(name) => match crate::sampler::registry::resolve(name) {
+                    Some(f) => Some(f),
+                    None => {
+                        let ev = Event::RebindAck {
+                            worker,
+                            ok: false,
+                            message: Some(format!("unknown family {name:?}")),
+                            family: None,
+                            batch: None,
+                            drained: None,
+                            rebind_ms: None,
+                        };
+                        let _ = tx.send(ev.to_json().encode());
+                        return;
+                    }
+                },
+                None => None,
+            };
+            // the rebind blocks until the worker has drained and
+            // rebuilt (or refused / failed-and-reverted) — run it off
+            // the reader thread so the connection stays responsive
+            let tx = tx.clone();
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                let ev = match engine.rebind(worker, fam, batch, checkpoint) {
+                    Ok(report) => Event::RebindAck {
+                        worker: report.worker,
+                        ok: true,
+                        message: None,
+                        family: Some(report.family.name().to_string()),
+                        batch: Some(report.batch),
+                        drained: Some(report.drained),
+                        rebind_ms: Some(report.rebind_ms),
+                    },
+                    Err(msg) => Event::RebindAck {
+                        worker,
+                        ok: false,
+                        message: Some(msg),
+                        family: None,
+                        batch: None,
+                        drained: None,
+                        rebind_ms: None,
+                    },
+                };
+                let _ = tx.send(ev.to_json().encode());
+            });
+        }
         Command::Submit(req) => {
             let id = req.id;
             let wants_progress = req.progress_every.is_some();
-            let (prog_tx, prog_rx) = mpsc::channel();
+            // bounded drop-oldest ring: a slow client sheds its oldest
+            // progress frames (counted in `progress_dropped`) instead
+            // of growing an unbounded queue or stalling the worker
+            let (prog_tx, prog_rx) =
+                super::progress::channel(DEFAULT_PROGRESS_BUFFER);
             // register BEFORE submitting so a disconnect racing the
             // submit still finds the id in the set
             inflight.lock().unwrap().insert(id);

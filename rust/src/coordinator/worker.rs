@@ -26,6 +26,16 @@
 //! kernel through the open `sampler::registry`, and loads artifacts /
 //! checkpoints under the kernel's `artifact_prefix()` — so a kernel
 //! registered at runtime can serve on existing compiled artifacts.
+//!
+//! The binding is *elastic*: a [`RebindOrder`] (operator `rebind` verb
+//! or the `--fleet auto` supervisor) makes the worker export every
+//! in-flight slot back to the queue as a resumable [`ResumeState`],
+//! rebuild its session under the new `(family, batch, checkpoint)` —
+//! checkpoint bytes through the process-wide mmap artifact cache — and
+//! rejoin, with zero dropped requests (a failed rebuild reverts to the
+//! previous binding and answers the order typed).  Independently, a
+//! mostly-frozen long-tail slot can *migrate* mid-generation to a
+//! smaller live shard of the same family, reclaiming its slot here.
 
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
@@ -36,7 +46,10 @@ use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::request::{GenResponse, ProgressEvent};
-use super::scheduler::{Flagged, IdleWait, QueuedReq, Scheduler, ServeError};
+use super::scheduler::{
+    Flagged, IdleWait, QueuedReq, RebindOrder, RebindReport, ResumeState,
+    Scheduler, ServeError,
+};
 use crate::halting::{BoxedPolicy, Decision, NoHalt};
 use crate::log_info;
 use crate::models::store::ParamStore;
@@ -46,6 +59,15 @@ use crate::predictor::{
 use crate::runtime::Runtime;
 use crate::sampler::{FamilyId, Session, SlotRequest};
 
+/// Migration trigger: at least this fraction of the slot's positions
+/// must be freeze-pinned before it counts as "mostly frozen".
+const MIGRATE_FROZEN_FRACTION: f32 = 0.5;
+
+/// ...and at least this many steps must remain (predicted when the
+/// estimator is live, else budget remaining) — migrating a slot about
+/// to finish costs more than it reclaims.
+const MIGRATE_MIN_REMAINING: usize = 8;
+
 pub struct WorkerConfig {
     pub id: usize,
     pub artifact_dir: String,
@@ -54,6 +76,10 @@ pub struct WorkerConfig {
     pub batch: usize,
     /// trained checkpoint (PBIN); falls back to init params when None
     pub checkpoint: Option<String>,
+    /// the fleet's per-family checkpoint map: a rebind that changes
+    /// family without naming a checkpoint resolves the new family's
+    /// weights here (the old family's file can't serve it)
+    pub checkpoints: Vec<(FamilyId, String)>,
     /// schedule envelope this shard serves (engine-level default or a
     /// per-family override)
     pub t_max: f32,
@@ -65,6 +91,63 @@ pub struct WorkerConfig {
     /// emit `predicted_steps_remaining` / `predicted_total_steps` on
     /// progress and done frames (the wire-visible predictor gate)
     pub predict_wire: bool,
+    /// frozen-aware live migration: hand a mostly-frozen long-tail slot
+    /// to a smaller live shard of the same family mid-generation
+    pub migrate: bool,
+}
+
+/// The worker's live `(family, batch, checkpoint)` binding — what a
+/// rebind order changes.  `WorkerConfig` keeps the startup values; this
+/// is the current truth.
+#[derive(Clone)]
+struct Binding {
+    family: FamilyId,
+    batch: usize,
+    checkpoint: Option<String>,
+}
+
+impl Binding {
+    /// The binding a rebind order asks for.  `None` fields keep the
+    /// current value — except that a family change without an explicit
+    /// checkpoint re-resolves the checkpoint from the fleet's
+    /// per-family map (the old family's weights can't serve the new
+    /// one).  An empty checkpoint string drops to init params.
+    fn apply(
+        &self,
+        order: &RebindOrder,
+        fleet: &[(FamilyId, String)],
+    ) -> Binding {
+        let family = order.family.unwrap_or(self.family);
+        let checkpoint = match &order.checkpoint {
+            Some(p) if p.is_empty() => None,
+            Some(p) => Some(p.clone()),
+            None if family == self.family => self.checkpoint.clone(),
+            None => fleet
+                .iter()
+                .find(|(f, _)| *f == family)
+                .map(|(_, p)| p.clone()),
+        };
+        Binding {
+            family,
+            batch: order.batch.unwrap_or(self.batch),
+            checkpoint,
+        }
+    }
+}
+
+/// Why the serve loop returned.
+enum LoopExit {
+    /// shutdown with a drained queue
+    Shutdown,
+    /// a rebind order arrived; the in-flight slots are already drained
+    /// back to the queue — rebuild under the order's binding and rejoin
+    Rebind {
+        order: RebindOrder,
+        /// requests exported back to the queue by the drain
+        drained: usize,
+        /// when the order was taken (start of the rebind_ms clock)
+        taken: Instant,
+    },
 }
 
 struct Running {
@@ -118,6 +201,36 @@ pub fn spawn(
     })
 }
 
+/// Build one serving `Session` for a binding: checkpoint (or init
+/// params) through the process-wide artifact cache, batch resolved to
+/// the nearest compiled artifact.  Returns the session and the
+/// *resolved* batch.
+fn build_session(
+    rt: &Runtime,
+    artifact_dir: &str,
+    bind: &Binding,
+    seq_len: usize,
+) -> Result<(Session, usize)> {
+    // artifacts and checkpoints live under the kernel's artifact
+    // prefix — for built-ins that is the family name, for registered
+    // wrapper kernels the family whose compiled artifacts they reuse
+    let prefix = bind.family.kernel().artifact_prefix();
+    // checkpoint bytes come through the process-wide mmap-backed
+    // artifact cache: N workers binding the same checkpoint share one
+    // mapping, and a rebind back to a recently-used checkpoint is a
+    // cache hit instead of a cold read
+    let store = match &bind.checkpoint {
+        Some(path) => ParamStore::load_cached(path, prefix)?,
+        None => ParamStore::load_init_cached(artifact_dir, prefix)?,
+    };
+    // artifacts are compiled for fixed batch sizes; resolve the nearest
+    // available one (>= requested, else the largest)
+    let batch = rt.manifest.resolve_step_batch(prefix, seq_len, bind.batch)?;
+    let session =
+        Session::new(rt, bind.family, Rc::new(store), batch, seq_len)?;
+    Ok((session, batch))
+}
+
 fn run_worker(
     cfg: &WorkerConfig,
     sched: &Scheduler,
@@ -125,49 +238,126 @@ fn run_worker(
 ) -> Result<()> {
     let rt = Runtime::new(&cfg.artifact_dir)?;
     let m = rt.manifest.model.clone();
-    // artifacts and checkpoints live under the kernel's artifact
-    // prefix — for built-ins that is the family name, for registered
-    // wrapper kernels the family whose compiled artifacts they reuse
-    let prefix = cfg.family.kernel().artifact_prefix();
-    let store = match &cfg.checkpoint {
-        Some(path) => ParamStore::load(path, prefix)?,
-        None => ParamStore::load_init(&cfg.artifact_dir, prefix)?,
+    let mut bind = Binding {
+        family: cfg.family,
+        batch: cfg.batch,
+        checkpoint: cfg.checkpoint.clone(),
     };
-    // artifacts are compiled for fixed batch sizes; resolve the nearest
-    // available one (>= requested, else the largest)
-    let batch =
-        rt.manifest.resolve_step_batch(prefix, m.seq_len, cfg.batch)?;
-    let mut session =
-        Session::new(&rt, cfg.family, Rc::new(store), batch, m.seq_len)?;
-    log_info!(
-        "worker {} up: family={} batch={} (requested {}) seq_len={} \
-         resident={}",
-        cfg.id,
-        cfg.family.name(),
-        batch,
-        cfg.batch,
-        m.seq_len,
-        session.resident()
-    );
-    metrics.lock().unwrap().slots_total = batch as u64;
-
-    let mut running: Vec<Option<Running>> = (0..batch).map(|_| None).collect();
-    // extensible policy code runs inside the step loop; if it (or a
-    // session invariant) panics, fail this worker's in-flight requests
-    // over with a typed error before the unwind continues — dropping
-    // their reply channels would surface to clients as an untyped
-    // "reply channel closed" instead of the documented `unavailable`
-    let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-        || step_loop(cfg, sched, metrics, &mut session, &mut running),
-    ));
-    match stepped {
-        Ok(out) => out?,
-        Err(panic) => {
-            for r in running.iter_mut().filter_map(Option::take) {
-                sched.finish(r.q.req.id);
-                let _ = r.q.reply.send(Err(ServeError::Unavailable));
+    // while a rebind's new binding is being built: the binding to fall
+    // back to if the build fails, and the order context (order, drained
+    // count, rebind_ms clock) to answer once the build resolves
+    let mut rollback: Option<Binding> = None;
+    let mut order_ctx: Option<(RebindOrder, usize, Instant)> = None;
+    loop {
+        let (mut session, batch) =
+            match build_session(&rt, &cfg.artifact_dir, &bind, m.seq_len) {
+                Ok(ok) => ok,
+                Err(e) => {
+                    let Some(prev) = rollback.take() else {
+                        // startup failure, or the rollback binding
+                        // itself died: the Down guard fails this
+                        // worker's routing over
+                        return Err(e);
+                    };
+                    // the rebind target can't serve: answer the order
+                    // typed and revert to the binding that worked —
+                    // zero requests are lost either way (the drained
+                    // ones are already back in the queue)
+                    log_info!(
+                        "worker {} rebind failed ({e}); reverting",
+                        cfg.id
+                    );
+                    if let Some((order, _, _)) = order_ctx.take() {
+                        if let Some(reply) = order.reply {
+                            let _ = reply.send(Err(e.to_string()));
+                        }
+                    }
+                    bind = prev;
+                    continue;
+                }
+            };
+        sched.register_worker_batch(cfg.id, batch);
+        metrics.lock().unwrap().slots_total = batch as u64;
+        if let Some((order, drained, taken)) = order_ctx.take() {
+            rollback = None;
+            // re-point routing only now that the new session is live:
+            // requests queued for the new family during the rebuild
+            // were held, not rejected
+            sched.complete_rebind(cfg.id, bind.family, batch);
+            let report = RebindReport {
+                worker: cfg.id,
+                family: bind.family,
+                batch,
+                drained,
+                rebind_ms: taken.elapsed().as_secs_f64() * 1e3,
+            };
+            {
+                let mut wm = metrics.lock().unwrap();
+                wm.rebinds += 1;
+                wm.rebind_requests_drained += drained as u64;
             }
-            std::panic::resume_unwind(panic);
+            log_info!(
+                "worker {} rebound: family={} batch={} drained={} \
+                 rebind_ms={:.1}",
+                cfg.id,
+                bind.family.name(),
+                batch,
+                report.drained,
+                report.rebind_ms
+            );
+            if let Some(reply) = order.reply {
+                let _ = reply.send(Ok(report));
+            }
+        } else {
+            log_info!(
+                "worker {} up: family={} batch={} (requested {}) \
+                 seq_len={} resident={}",
+                cfg.id,
+                bind.family.name(),
+                batch,
+                bind.batch,
+                m.seq_len,
+                session.resident()
+            );
+        }
+
+        let mut running: Vec<Option<Running>> =
+            (0..batch).map(|_| None).collect();
+        let fam = bind.family;
+        // extensible policy code runs inside the step loop; if it (or a
+        // session invariant) panics, fail this worker's in-flight
+        // requests over with a typed error before the unwind continues —
+        // dropping their reply channels would surface to clients as an
+        // untyped "reply channel closed" instead of the documented
+        // `unavailable`
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || step_loop(cfg, fam, sched, metrics, &mut session, &mut running),
+        ));
+        let exit = match stepped {
+            Ok(out) => out?,
+            Err(panic) => {
+                for r in running.iter_mut().filter_map(Option::take) {
+                    sched.finish(r.q.req.id);
+                    let _ = r.q.reply.send(Err(ServeError::Unavailable));
+                }
+                std::panic::resume_unwind(panic);
+            }
+        };
+        match exit {
+            LoopExit::Shutdown => break,
+            LoopExit::Rebind {
+                order,
+                drained,
+                taken,
+            } => {
+                rollback = Some(bind.clone());
+                bind = bind.apply(&order, &cfg.checkpoints);
+                order_ctx = Some((order, drained, taken));
+                // drop the old session before building the new one so
+                // its device buffers and checkpoint cache pin release
+                // first — a rebind never holds both bindings resident
+                drop(session);
+            }
         }
     }
     let (completed, ratio) = {
@@ -184,14 +374,17 @@ fn run_worker(
 }
 
 /// The worker's serve loop: admit / reap / step / account, until the
-/// scheduler reports shutdown with a drained queue.
+/// scheduler reports shutdown with a drained queue or hands this
+/// worker a rebind order (in-flight slots drain back to the queue as
+/// resumable exports — zero requests dropped).
 fn step_loop(
     cfg: &WorkerConfig,
+    fam: FamilyId,
     sched: &Scheduler,
     metrics: &Mutex<Metrics>,
     session: &mut Session,
     running: &mut [Option<Running>],
-) -> Result<()> {
+) -> Result<LoopExit> {
     let batch = session.batch;
     // reusable sweep scratch (occupied slots, their request ids, and
     // the scheduler's verdicts) — the hot loop allocates nothing per
@@ -200,12 +393,27 @@ fn step_loop(
     let mut flag_ids: Vec<u64> = Vec::with_capacity(batch);
     let mut flags: Vec<Option<Flagged>> = Vec::with_capacity(batch);
     loop {
-        // 0) fully idle: sleep until work our family can serve arrives
-        //    or shutdown drains us
+        // 0) a pending rebind order preempts everything: export every
+        //    in-flight slot back to the queue mid-generation (another
+        //    shard — or this one, rebuilt — imports and finishes them)
+        //    and hand the order up to the rebuild loop
+        if let Some(order) = sched.take_rebind(cfg.id) {
+            let taken = Instant::now();
+            let drained =
+                drain_for_rebind(cfg, fam, sched, metrics, session, running);
+            return Ok(LoopExit::Rebind {
+                order,
+                drained,
+                taken,
+            });
+        }
+        //    fully idle: sleep until work our family can serve arrives,
+        //    a rebind order lands, or shutdown drains us
         if running.iter().all(Option::is_none) {
             match sched.wait_for_work(cfg.id) {
                 IdleWait::Work => {}
-                IdleWait::Exit => break,
+                IdleWait::Rebind => continue,
+                IdleWait::Exit => return Ok(LoopExit::Shutdown),
             }
         }
 
@@ -217,7 +425,12 @@ fn step_loop(
         //    (manifest read failed) and must not be trusted with it
         'admit: for slot in 0..batch {
             while running[slot].is_none() {
-                let Some(q) = sched.next_for(cfg.id) else { break 'admit };
+                let Some(mut q) = sched.next_for(cfg.id) else {
+                    break 'admit;
+                };
+                // a drained/migrated request arrives with its exported
+                // device state attached: import it instead of resetting
+                let resume = q.resume.take();
                 // park the request in its slot BEFORE running any
                 // extensible policy code (clone/reset) or session
                 // setup: if one of those panics, the catch_unwind
@@ -236,6 +449,43 @@ fn step_loop(
                     q,
                 });
                 let r = running[slot].as_mut().unwrap();
+                if let Some(rs) = resume {
+                    let rs = *rs;
+                    if let Err(e) = session.import_slot(slot, &rs.export) {
+                        // the export doesn't fit this session (shape /
+                        // family drift): fail THIS request typed — the
+                        // import validated-then-left the slot untouched
+                        let r = running[slot].take().unwrap();
+                        log_info!(
+                            "worker {} cannot resume request {}: {e}",
+                            cfg.id,
+                            r.q.req.id
+                        );
+                        sched.finish(r.q.req.id);
+                        metrics.lock().unwrap().record_aborted_steps(
+                            fam,
+                            rs.export.step as u64,
+                        );
+                        let _ = r.q.reply.send(Err(ServeError::Internal(
+                            "migration_import_failed",
+                        )));
+                        continue;
+                    }
+                    // the generation continues where it left off: live
+                    // policy state (NOT reset), original admission
+                    // clock (latency stays end-to-end), and the
+                    // predictor's per-slot training trail
+                    r.policy = rs.policy;
+                    r.started = rs.started;
+                    r.prev_kl = rs.prev_kl;
+                    r.tokens_frozen = rs.tokens_frozen;
+                    r.frozen_token_steps = rs.frozen_token_steps;
+                    r.token_steps_saved = rs.token_steps_saved;
+                    r.bucket_entry = rs.bucket_entry;
+                    r.slope_entry = rs.slope_entry;
+                    r.last_prediction = rs.last_prediction;
+                    continue;
+                }
                 let mut policy = r.q.req.policy.clone();
                 policy.reset();
                 r.policy = policy;
@@ -318,7 +568,7 @@ fn step_loop(
                         // in the family lane too, so per-family steps
                         // reconcile with the fleet total
                         wm.record_aborted_steps(
-                            cfg.family,
+                            fam,
                             session.slots[slot].step as u64,
                         );
                     }
@@ -340,7 +590,8 @@ fn step_loop(
                         // instead of poisoning the whole batch at the
                         // next step()
                         abort_download_failed(
-                            cfg, sched, metrics, session, slot, r, steps, &e,
+                            cfg, fam, sched, metrics, session, slot, r,
+                            steps, &e,
                         );
                         continue;
                     }
@@ -354,7 +605,7 @@ fn step_loop(
                         latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
                         queue_ms: (r.started - r.q.submitted).as_secs_f64()
                             * 1e3,
-                        family: Some(cfg.family),
+                        family: Some(fam),
                         predicted_steps_remaining: if cfg.predict_wire {
                             r.last_prediction.map(|(rem, _)| rem)
                         } else {
@@ -369,23 +620,22 @@ fn step_loop(
                     };
                     if let Some(est) = &cfg.predictor {
                         est.observe_completion_full(
-                            cfg.family,
+                            fam,
                             steps,
                             &visited_buckets(&r.bucket_entry),
                             &visited_slope(&r.slope_entry),
                         );
+                        // fresh per-family evidence may reorder the
+                        // same-class backlog (bounded SRPT re-sort)
+                        sched.note_estimator_update();
                     }
                     sched.finish(resp.id);
                     {
                         let mut wm = metrics.lock().unwrap();
-                        wm.record_completion(
-                            &resp,
-                            r.q.req.priority,
-                            cfg.family,
-                        );
+                        wm.record_completion(&resp, r.q.req.priority, fam);
                         if r.tokens_frozen > 0 {
                             wm.record_token_halting(
-                                cfg.family,
+                                fam,
                                 r.tokens_frozen,
                                 r.frozen_token_steps,
                                 r.token_steps_saved,
@@ -404,6 +654,12 @@ fn step_loop(
         //    then the replies go out on the wire
         let stepped = running.iter().any(Option::is_some);
         let mut done: Vec<(GenResponse, Running)> = Vec::new();
+        // frames evicted from slow subscribers' bounded progress
+        // buffers this iteration (flushed under the metrics guard)
+        let mut dropped_frames = 0u64;
+        // slots handed to a smaller shard this iteration
+        let mut migrated_count = 0u64;
+        let mut migration_reclaimed = 0u64;
         if stepped {
             let step_started = Instant::now();
             let stats = match session.step() {
@@ -424,7 +680,7 @@ fn step_loop(
             // wall-time basis: one observation per device call
             if let Some(est) = &cfg.predictor {
                 est.observe_step_latency(
-                    cfg.family,
+                    fam,
                     step_started.elapsed().as_secs_f64() * 1e3,
                 );
             }
@@ -468,6 +724,7 @@ fn step_loop(
                             let r = running[slot].take().unwrap();
                             abort_download_failed(
                                 cfg,
+                                fam,
                                 sched,
                                 metrics,
                                 session,
@@ -503,7 +760,7 @@ fn step_loop(
                     }
                     if cfg.predict_wire {
                         let p = est.predict_remaining_with(
-                            cfg.family,
+                            fam,
                             &st,
                             kl_slope,
                             session.frozen_fraction(slot),
@@ -556,12 +813,16 @@ fn step_loop(
                                         None
                                     },
                                 };
-                                let dead =
-                                    r.q.progress.as_ref().is_some_and(
-                                        |ptx| ptx.send(ev).is_err(),
-                                    );
-                                if dead {
-                                    r.q.progress = None;
+                                if let Some(ptx) = r.q.progress.as_ref() {
+                                    match ptx.send(ev) {
+                                        // a send over the subscriber's
+                                        // bounded buffer evicted stale
+                                        // frames: account them
+                                        Ok(evicted) => {
+                                            dropped_frames += evicted;
+                                        }
+                                        Err(_) => r.q.progress = None,
+                                    }
                                 }
                             }
                         }
@@ -576,7 +837,8 @@ fn step_loop(
                     // batch at the next step()
                     let r = running[slot].take().unwrap();
                     abort_download_failed(
-                        cfg, sched, metrics, session, slot, r, executed, &e,
+                        cfg, fam, sched, metrics, session, slot, r,
+                        executed, &e,
                     );
                     continue;
                 }
@@ -588,8 +850,8 @@ fn step_loop(
                     let tokens = session.slot_output(slot);
                     if let Some(e) = session.take_deferred_err() {
                         abort_download_failed(
-                            cfg, sched, metrics, session, slot, r, executed,
-                            &e,
+                            cfg, fam, sched, metrics, session, slot, r,
+                            executed, &e,
                         );
                         continue;
                     }
@@ -613,7 +875,7 @@ fn step_loop(
                         latency_ms: r.started.elapsed().as_secs_f64() * 1e3,
                         queue_ms: (r.started - r.q.submitted).as_secs_f64()
                             * 1e3,
-                        family: Some(cfg.family),
+                        family: Some(fam),
                         predicted_steps_remaining: if cfg.predict_wire {
                             r.last_prediction.map(|(rem, _)| rem)
                         } else {
@@ -632,16 +894,93 @@ fn step_loop(
                     // recorded along the way
                     if let Some(est) = &cfg.predictor {
                         est.observe_completion_full(
-                            cfg.family,
+                            fam,
                             executed,
                             &visited_buckets(&r.bucket_entry),
                             &visited_slope(&r.slope_entry),
                         );
+                        // fresh per-family evidence may reorder the
+                        // same-class backlog (bounded SRPT re-sort)
+                        sched.note_estimator_update();
                     }
                     sched.finish(resp.id);
                     session.release_slot(slot);
                     done.push((resp, r));
                 }
+            }
+        }
+
+        // 3b) frozen-aware live migration: a mostly-frozen long-tail
+        //     slot finishes just as well on a smaller shard of the same
+        //     family — export it back to the queue (front, priced at
+        //     its remaining steps) for the smaller shard to import, and
+        //     reclaim this slot for fresh batch work.  At most one slot
+        //     per iteration; `next_for`'s anti-ping-pong guard keeps
+        //     this worker from re-admitting its own export while
+        //     another same-family worker lives.
+        if cfg.migrate {
+            for slot in 0..batch {
+                let Some(r) = running[slot].as_ref() else { continue };
+                if session.frozen_fraction(slot) < MIGRATE_FROZEN_FRACTION {
+                    continue;
+                }
+                let step = session.slots[slot].step;
+                let budget_rem = r.q.req.n_steps.saturating_sub(step);
+                // remaining cost: live estimate when the predictor has
+                // one, capped at the budget it can't exceed
+                let remaining = r
+                    .last_prediction
+                    .map_or(budget_rem, |(rem, _)| rem.min(budget_rem));
+                if remaining < MIGRATE_MIN_REMAINING {
+                    continue;
+                }
+                if !sched.smaller_shard_live(cfg.id, fam) {
+                    break;
+                }
+                let export = match session.export_slot(slot) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // the export couldn't sync device state; the
+                        // slot keeps running here — migration is an
+                        // optimisation, never a failure path
+                        log_info!(
+                            "worker {} migration export failed for \
+                             request {}: {e}",
+                            cfg.id,
+                            r.q.req.id
+                        );
+                        break;
+                    }
+                };
+                let r = running[slot].take().unwrap();
+                let mut q = r.q;
+                q.resume = Some(Box::new(ResumeState {
+                    export,
+                    policy: r.policy,
+                    started: r.started,
+                    prev_kl: r.prev_kl,
+                    tokens_frozen: r.tokens_frozen,
+                    frozen_token_steps: r.frozen_token_steps,
+                    token_steps_saved: r.token_steps_saved,
+                    bucket_entry: r.bucket_entry,
+                    slope_entry: r.slope_entry,
+                    last_prediction: r.last_prediction,
+                    migrated_from: Some(cfg.id),
+                }));
+                session.release_slot(slot);
+                let _ = session.take_deferred_err();
+                let id = q.req.id;
+                sched.requeue_drained(vec![q]);
+                migrated_count += 1;
+                migration_reclaimed += remaining as u64;
+                log_info!(
+                    "worker {} migrated request {} at step {} \
+                     (frozen-heavy, ~{remaining} steps left)",
+                    cfg.id,
+                    id,
+                    step
+                );
+                break;
             }
         }
 
@@ -653,14 +992,21 @@ fn step_loop(
             if stepped {
                 wm.device_calls += 1;
             }
+            if dropped_frames > 0 {
+                wm.progress_dropped += dropped_frames;
+            }
+            if migrated_count > 0 {
+                wm.slots_migrated += migrated_count;
+                wm.migration_reclaimed_slot_steps += migration_reclaimed;
+            }
             for (resp, r) in &done {
-                wm.record_completion(resp, r.q.req.priority, cfg.family);
+                wm.record_completion(resp, r.q.req.priority, fam);
                 // token-halting lanes: how many positions froze, the
                 // token-steps spent on pinned positions, and the
                 // token-level budget saving those freezes represent
                 if r.tokens_frozen > 0 {
                     wm.record_token_halting(
-                        cfg.family,
+                        fam,
                         r.tokens_frozen,
                         r.frozen_token_steps,
                         r.token_steps_saved,
@@ -673,7 +1019,7 @@ fn step_loop(
                 // client's timing, not the halting signal's)
                 if let Some(pred) = r.q.predicted_steps {
                     wm.record_prediction(
-                        cfg.family,
+                        fam,
                         pred as u64,
                         resp.steps_executed as u64,
                     );
@@ -696,7 +1042,71 @@ fn step_loop(
             let _ = r.q.reply.send(Ok(resp));
         }
     }
-    Ok(())
+}
+
+/// Export every in-flight slot back to the scheduler queue as a
+/// resumable request (front of its class, priced at remaining steps).
+/// A slot whose device state can't be exported is answered with a
+/// typed error — a rebind drain never silently drops a request.
+/// Returns how many requests were requeued.
+fn drain_for_rebind(
+    cfg: &WorkerConfig,
+    fam: FamilyId,
+    sched: &Scheduler,
+    metrics: &Mutex<Metrics>,
+    session: &mut Session,
+    running: &mut [Option<Running>],
+) -> usize {
+    let mut items: Vec<QueuedReq> = Vec::new();
+    for slot in 0..session.batch {
+        let Some(r) = running[slot].take() else { continue };
+        match session.export_slot(slot) {
+            Ok(export) => {
+                let mut q = r.q;
+                q.resume = Some(Box::new(ResumeState {
+                    export,
+                    policy: r.policy,
+                    started: r.started,
+                    prev_kl: r.prev_kl,
+                    tokens_frozen: r.tokens_frozen,
+                    frozen_token_steps: r.frozen_token_steps,
+                    token_steps_saved: r.token_steps_saved,
+                    bucket_entry: r.bucket_entry,
+                    slope_entry: r.slope_entry,
+                    last_prediction: r.last_prediction,
+                    // a rebind drain is not a migration: the request
+                    // may come straight back to this worker once it
+                    // rejoins
+                    migrated_from: None,
+                }));
+                session.release_slot(slot);
+                items.push(q);
+            }
+            Err(e) => {
+                log_info!(
+                    "worker {} rebind drain export failed for request \
+                     {}: {e}",
+                    cfg.id,
+                    r.q.req.id
+                );
+                sched.finish(r.q.req.id);
+                metrics.lock().unwrap().record_aborted_steps(
+                    fam,
+                    session.slots[slot].step as u64,
+                );
+                session.release_slot(slot);
+                let _ = r.q.reply.send(Err(ServeError::Internal(
+                    "rebind_export_failed",
+                )));
+            }
+        }
+    }
+    // the drained session is torn down next; a deferred decode-download
+    // error from the release sweep has no batch left to poison
+    let _ = session.take_deferred_err();
+    let n = items.len();
+    sched.requeue_drained(items);
+    n
 }
 
 /// The estimator's training signal from one finished slot: every
@@ -731,6 +1141,7 @@ fn visited_slope(
 #[allow(clippy::too_many_arguments)]
 fn abort_download_failed(
     cfg: &WorkerConfig,
+    fam: FamilyId,
     sched: &Scheduler,
     metrics: &Mutex<Metrics>,
     session: &mut Session,
@@ -748,7 +1159,7 @@ fn abort_download_failed(
     metrics
         .lock()
         .unwrap()
-        .record_aborted_steps(cfg.family, steps as u64);
+        .record_aborted_steps(fam, steps as u64);
     session.release_slot(slot);
     let _ = session.take_deferred_err();
     let _ = r

@@ -6,6 +6,7 @@
 //!   gen       generate text with a halting criterion, print it
 //!   serve     run the TCP JSON-lines serving coordinator
 //!   client    fire a request stream at a server, report latencies
+//!   rebind    live-rebind a worker shard on a running server
 //!   exp       run a paper experiment (fig1..fig8, tab1/3/4, headline)
 //!
 //! Global flags: --artifacts DIR (default artifacts), --runs DIR
@@ -39,6 +40,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "rebind" => cmd_rebind(&args),
         "exp" => cmd_exp(&args),
         _ => {
             print_help();
@@ -74,11 +76,12 @@ fn print_help() {
          \u{20}        [--prefix-len 32] [--noise 1.0]\n\
          serve    --family F [--addr 127.0.0.1:7411] [--batch 8]\n\
          \u{20}        [--workers 1] [--queue-depth 256]\n\
-         \u{20}        [--fleet fam:batch,fam:batch,...]\n\
+         \u{20}        [--fleet fam:batch,fam:batch,...|auto[,...]]\n\
          \u{20}        [--schedule fam:tmax:tmin,...]\n\
          \u{20}        [--family-queue-depth fam:N,...]\n\
          \u{20}        [--predictor] [--admission-control]\n\
-         \u{20}        [--packing fifo|srpt]\n\
+         \u{20}        [--packing fifo|srpt] [--migrate]\n\
+         \u{20}        [--artifact-cache-mb N]\n\
          \u{20}        (one worker per fleet entry — mixed families are\n\
          \u{20}        routed per request; without --fleet, N identical\n\
          \u{20}        workers of --family; bounded admission queue\n\
@@ -90,10 +93,19 @@ fn print_help() {
          \u{20}        streams predicted_steps_remaining on v1 frames,\n\
          \u{20}        --admission-control rejects infeasible deadlines\n\
          \u{20}        with typed 'infeasible_deadline', --packing srpt\n\
-         \u{20}        runs shortest-predicted work first — see API.md)\n\
+         \u{20}        runs shortest-predicted work first; --fleet auto\n\
+         \u{20}        starts the elastic supervisor that live-rebinds\n\
+         \u{20}        idle shards toward starved families, --migrate\n\
+         \u{20}        moves mostly-frozen slots to smaller live shards\n\
+         \u{20}        mid-generation, --artifact-cache-mb bounds the\n\
+         \u{20}        process-wide checkpoint cache — see API.md)\n\
          client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
          \u{20}        [--priority high|normal|low] [--deadline-ms MS]\n\
          \u{20}        [--family {fams}] [--progress-every K]\n\
+         rebind   --addr HOST:PORT --worker W [--family {fams}]\n\
+         \u{20}        [--batch B] [--checkpoint PATH|--init]\n\
+         \u{20}        (live drain→rebind→rejoin of one worker shard;\n\
+         \u{20}        omitted fields keep the current binding)\n\
          exp      <id>|all  [--quick]   ids: {}\n\
          \n\
          criterion SPEC is the halting-policy DSL: entropy:T, \n\
@@ -390,7 +402,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig::new(&dir, fam);
     let batch = args.usize_or("batch", 8);
     let workers = args.usize_or("workers", 1).max(1);
-    cfg.worker_specs = match args.get("fleet") {
+    // elastic fleet: "--fleet auto" (optionally "auto,fam:batch,...")
+    // starts the supervisor that live-rebinds idle shards toward
+    // starved families; the remaining entries (or the --workers
+    // default) are just the starting shape
+    let (fleet_auto, fleet_spec) = match args.get("fleet") {
+        Some("auto") => (true, None),
+        Some(s) => match s.strip_prefix("auto,") {
+            Some(rest) => (true, Some(rest)),
+            None => (false, Some(s)),
+        },
+        None => (false, None),
+    };
+    cfg.fleet_auto = fleet_auto;
+    cfg.migrate = args.flag("migrate");
+    if let Some(mb) = args.get("artifact-cache-mb") {
+        let mb: u64 = mb
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --artifact-cache-mb {mb}"))?;
+        repro::runtime::artifact_cache::global()
+            .set_budget(mb.saturating_mul(1024 * 1024));
+    }
+    cfg.worker_specs = match fleet_spec {
         // heterogeneous fleet: one worker per family[:batch] entry; the
         // default family (for requests without a `family` field) stays
         // --family, or the first fleet entry when --family isn't given
@@ -449,11 +482,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         String::new()
     };
+    let elastic_note = match (cfg.fleet_auto, cfg.migrate) {
+        (true, _) => ", fleet:auto",
+        (false, true) => ", migrate",
+        (false, false) => "",
+    };
     let (engine, join) = start(cfg);
     let addr = args.get_or("addr", "127.0.0.1:7411");
     let mut server = Server::start(addr, engine)?;
     println!(
-        "serving [{shards}] on {} (default family {}{predictor_note})",
+        "serving [{shards}] on {} (default family {}{predictor_note}\
+         {elastic_note})",
         server.addr,
         default_family.name()
     );
@@ -532,6 +571,48 @@ fn cmd_client(args: &Args) -> Result<()> {
         total_steps as f64 / n as f64
     );
     println!("server metrics: {}", client.metrics()?.encode());
+    Ok(())
+}
+
+/// Operator verb: live-rebind one worker shard on a running server
+/// (drain → rebuild under the new binding → rejoin, zero dropped
+/// requests).  Omitted fields keep the worker's current value;
+/// `--init` drops to init params instead of a checkpoint.
+fn cmd_rebind(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7411");
+    let worker = args
+        .get("worker")
+        .ok_or_else(|| anyhow::anyhow!("rebind needs --worker N"))?
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("bad --worker (want a shard index)"))?;
+    let batch = match args.get("batch") {
+        Some(b) => Some(
+            b.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --batch {b}"))?,
+        ),
+        None => None,
+    };
+    let checkpoint = if args.flag("init") {
+        Some("") // empty path = drop to init params
+    } else {
+        args.get("checkpoint")
+    };
+    let mut client = Client::connect(addr)?;
+    let ack = client.rebind(worker, args.get("family"), batch, checkpoint)?;
+    if !ack.ok {
+        anyhow::bail!(
+            "rebind refused: {}",
+            ack.message.as_deref().unwrap_or("unknown error")
+        );
+    }
+    println!(
+        "worker {worker} rebound -> {}:b{} ({} in-flight drained and \
+         requeued, {:.1} ms)",
+        ack.family.as_deref().unwrap_or("?"),
+        ack.batch.unwrap_or(0),
+        ack.drained.unwrap_or(0),
+        ack.rebind_ms.unwrap_or(0.0)
+    );
     Ok(())
 }
 

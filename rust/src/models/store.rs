@@ -39,6 +39,38 @@ impl ParamStore {
         })
     }
 
+    /// [`ParamStore::load_init`] through the process-wide artifact
+    /// cache: the `.pbin` image is memory-mapped once and shared by
+    /// every worker of the family; parsing reads straight off the
+    /// mapping, no per-worker file read.
+    pub fn load_init_cached(
+        artifact_dir: &str,
+        family: &str,
+    ) -> Result<ParamStore> {
+        Self::load_cached(format!("{artifact_dir}/{family}_init.pbin"), family)
+    }
+
+    /// [`ParamStore::load`] through the process-wide artifact cache —
+    /// the rebind hot path: a checkpoint hot-swap of N same-family
+    /// workers maps the weights once, then each rebind parses from the
+    /// warm shared mapping.
+    pub fn load_cached(
+        path: impl AsRef<Path>,
+        family: &str,
+    ) -> Result<ParamStore> {
+        use crate::runtime::artifact_cache::{global, CacheKey};
+        let path = path.as_ref();
+        let key = CacheKey::checkpoint(family, path);
+        let binding = global().bind(&key, path)?;
+        let tensors = pbin::parse(binding.bytes())?;
+        // the binding drops here: checkpoint bytes are one-shot parse
+        // inputs, so they stay cached-but-unpinned (LRU-evictable)
+        Ok(ParamStore {
+            family: family.to_string(),
+            tensors,
+        })
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         pbin::write(path, &self.tensors)
     }

@@ -1,0 +1,728 @@
+//! Process-wide artifact cache: memory-mapped artifact bytes shared by
+//! every worker, keyed by (family, B, L, format), with LRU eviction
+//! under a byte budget — the layer that makes drain→rebind→rejoin
+//! cheap enough to drive elastically (ROADMAP item 4).
+//!
+//! What is cached (and what is not):
+//!
+//! * **Bytes, not device objects.**  Entries are immutable read-only
+//!   byte images — mmap'd HLO text, mmap'd `.pbin` checkpoints (fed
+//!   straight to [`crate::models::pbin::parse`] without a heap copy),
+//!   and parsed [`Manifest`]s (interned per directory).  Compiled
+//!   executables and PJRT buffers stay in each worker's per-runtime
+//!   cache: PJRT handles are not `Send`, so the process-wide layer
+//!   deliberately stops at the host-byte boundary.
+//! * **Bindings pin entries.**  [`ArtifactCache::bind`] returns a
+//!   [`Binding`] guard; while any binding is alive the entry cannot be
+//!   evicted (`evict` on a pinned key is a typed refusal, and the LRU
+//!   sweep skips pinned entries even over budget).  A worker holds one
+//!   binding per bound artifact and drops it on rebind, which is what
+//!   lets the sweep reclaim the old shape's bytes.
+//! * **Concurrent binds load once.**  The first binder inserts a
+//!   loading placeholder and maps the file outside the lock; racers
+//!   wait on a condvar and share the same mapping (`Arc`), so N
+//!   workers binding one artifact cost one mmap.
+//!
+//! Eviction is strict LRU over unpinned entries: entries are stamped
+//! with a monotone tick on every bind, and once `bytes > budget` the
+//! stalest unpinned entries unmap until the budget holds (a pinned
+//! over-budget working set is allowed — refusing eviction beats
+//! breaking a live worker).  Hit/miss/evict/byte counters feed the
+//! fleet metrics snapshot as `artifact_cache_*`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// What a cached byte image is, distinguishing the step-graph HLO text
+/// from checkpoint weights at the same (family, B, L).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// compiled-step HLO text (`<fam>_step_b<B>_l<L>.hlo.txt`)
+    StepHlo,
+    /// parameter checkpoint bytes (`.pbin`)
+    Checkpoint,
+}
+
+impl ArtifactKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::StepHlo => "step_hlo",
+            ArtifactKind::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+/// Cache key: the artifact-shape coordinates the fleet rebinds over.
+/// Checkpoints that are not shape-specific use `batch == 0 &&
+/// seq_len == 0` (a `.pbin` serves every compiled shape of its family).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub family: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    /// manifest schema format the artifact was built under
+    pub format: u64,
+    pub kind: ArtifactKind,
+}
+
+impl CacheKey {
+    pub fn step_hlo(
+        family: &str,
+        batch: usize,
+        seq_len: usize,
+        format: u64,
+    ) -> CacheKey {
+        CacheKey {
+            family: family.to_string(),
+            batch,
+            seq_len,
+            format,
+            kind: ArtifactKind::StepHlo,
+        }
+    }
+
+    pub fn checkpoint(family: &str, path: &Path) -> CacheKey {
+        // distinct checkpoint files of one family (init vs trained vs
+        // ck-marks) must not collide: fold the path into the family
+        // coordinate, keeping the shape axes for the shape-free weights
+        CacheKey {
+            family: format!("{family}@{}", path.display()),
+            batch: 0,
+            seq_len: 0,
+            format: 0,
+            kind: ArtifactKind::Checkpoint,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{}[{} b{} l{} f{}]",
+            self.kind.name(),
+            self.family,
+            self.batch,
+            self.seq_len,
+            self.format
+        )
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// An immutable byte image: a private read-only file mapping on unix,
+/// or an owned heap copy (empty files, non-unix targets, mmap failure).
+/// The mapping is unmapped on drop.
+pub struct MappedBytes {
+    ptr: *const u8,
+    len: usize,
+    /// true = `ptr` is an mmap region to munmap; false = `owned` backs it
+    mapped: bool,
+    owned: Vec<u8>,
+}
+
+// Safety: the region is a private read-only mapping (or an owned Vec)
+// that is never written after construction; sharing &[u8] views across
+// threads is sound, and munmap runs exactly once via Drop.
+unsafe impl Send for MappedBytes {}
+unsafe impl Sync for MappedBytes {}
+
+impl MappedBytes {
+    fn from_vec(data: Vec<u8>) -> MappedBytes {
+        MappedBytes {
+            ptr: data.as_ptr(),
+            len: data.len(),
+            mapped: false,
+            owned: data,
+        }
+    }
+
+    #[cfg(unix)]
+    fn try_map(path: &Path) -> Result<MappedBytes> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            // zero-length mmap is EINVAL; an empty image needs no map
+            return Ok(MappedBytes::from_vec(Vec::new()));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            bail!("mmap {path:?} failed");
+        }
+        Ok(MappedBytes {
+            ptr: ptr as *const u8,
+            len,
+            mapped: true,
+            owned: Vec::new(),
+        })
+    }
+
+    /// Map a file read-only; falls back to a buffered read when the
+    /// platform or the mapping refuses.
+    pub fn open(path: &Path) -> Result<MappedBytes> {
+        #[cfg(unix)]
+        {
+            match MappedBytes::try_map(path) {
+                Ok(m) => return Ok(m),
+                Err(e) => crate::util::log::log(
+                    crate::util::log::Level::Debug,
+                    "artifact_cache",
+                    &format!("{e:#}; falling back to a buffered read"),
+                ),
+            }
+        }
+        let data = std::fs::read(path)
+            .with_context(|| format!("read {path:?}"))?;
+        Ok(MappedBytes::from_vec(data))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when the image is an actual mmap region (not a heap copy).
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
+    }
+}
+
+impl std::ops::Deref for MappedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        if self.mapped {
+            // Safety: ptr/len describe a live PROT_READ mapping owned
+            // by self; unmapped only in Drop
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        } else {
+            &self.owned
+        }
+    }
+}
+
+impl Drop for MappedBytes {
+    fn drop(&mut self) {
+        if self.mapped {
+            unsafe {
+                sys::munmap(self.ptr as *mut _, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MappedBytes({} bytes, {})",
+            self.len,
+            if self.mapped { "mmap" } else { "owned" }
+        )
+    }
+}
+
+/// Counter snapshot surfaced as `artifact_cache_*` in the fleet
+/// metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// resident cached bytes right now
+    pub bytes: u64,
+    pub entries: usize,
+}
+
+enum Slot {
+    /// first binder is mapping the file; racers wait on the condvar
+    Loading,
+    Ready {
+        bytes: Arc<MappedBytes>,
+        pins: usize,
+        last_used: u64,
+    },
+}
+
+struct State {
+    entries: HashMap<CacheKey, Slot>,
+    manifests: HashMap<PathBuf, Arc<Manifest>>,
+    bytes_total: u64,
+    budget: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    loaded: Condvar,
+}
+
+/// The cache handle (cheap to clone; all clones share one store).  Use
+/// [`global`] for the process-wide instance workers bind through.
+#[derive(Clone)]
+pub struct ArtifactCache {
+    inner: Arc<Inner>,
+}
+
+/// A pinned cache entry: the artifact bytes, guaranteed resident (and
+/// un-evictable) until this guard drops.
+pub struct Binding {
+    inner: Arc<Inner>,
+    key: CacheKey,
+    bytes: Arc<MappedBytes>,
+}
+
+impl Binding {
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn key(&self) -> &CacheKey {
+        &self.key
+    }
+
+    /// Shared mapping identity — two bindings of one key hold the SAME
+    /// mapping (the "no duplicate mmap" contract).
+    pub fn same_mapping(&self, other: &Binding) -> bool {
+        Arc::ptr_eq(&self.bytes, &other.bytes)
+    }
+}
+
+impl Drop for Binding {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        if let Some(Slot::Ready { pins, .. }) = st.entries.get_mut(&self.key)
+        {
+            *pins = pins.saturating_sub(1);
+        }
+        // an unpin can make an over-budget working set reclaimable
+        sweep_lru(&mut st);
+    }
+}
+
+impl std::fmt::Debug for Binding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Binding({}, {} bytes)", self.key.describe(), self.bytes.len())
+    }
+}
+
+/// Evict stalest unpinned entries until the byte budget holds.  Pinned
+/// entries are never touched: a bound working set larger than the
+/// budget stays resident (refusing eviction beats breaking a worker).
+fn sweep_lru(st: &mut State) {
+    while st.bytes_total > st.budget {
+        let victim = st
+            .entries
+            .iter()
+            .filter_map(|(k, slot)| match slot {
+                Slot::Ready { pins: 0, last_used, bytes } => {
+                    Some((k.clone(), *last_used, bytes.len() as u64))
+                }
+                _ => None,
+            })
+            .min_by_key(|&(_, last_used, _)| last_used);
+        let Some((key, _, len)) = victim else { break };
+        st.entries.remove(&key);
+        st.bytes_total -= len;
+        st.evictions += 1;
+    }
+}
+
+impl ArtifactCache {
+    pub fn new(budget_bytes: u64) -> ArtifactCache {
+        ArtifactCache {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State {
+                    entries: HashMap::new(),
+                    manifests: HashMap::new(),
+                    bytes_total: 0,
+                    budget: budget_bytes,
+                    tick: 0,
+                    hits: 0,
+                    misses: 0,
+                    evictions: 0,
+                }),
+                loaded: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Bind an artifact: return its (pinned) byte image, mapping the
+    /// file on first touch.  Concurrent binds of one key share a single
+    /// load; a failed load wakes the racers to retry (one of them
+    /// becomes the next loader and surfaces the error to its caller).
+    pub fn bind(&self, key: &CacheKey, path: &Path) -> Result<Binding> {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            loop {
+                match st.entries.get_mut(key) {
+                    Some(Slot::Ready { bytes, pins, last_used }) => {
+                        *pins += 1;
+                        st.tick += 1;
+                        *last_used = st.tick;
+                        st.hits += 1;
+                        return Ok(Binding {
+                            inner: self.inner.clone(),
+                            key: key.clone(),
+                            bytes: bytes.clone(),
+                        });
+                    }
+                    Some(Slot::Loading) => {
+                        st = self.inner.loaded.wait(st).unwrap();
+                    }
+                    None => {
+                        st.misses += 1;
+                        st.entries.insert(key.clone(), Slot::Loading);
+                        break;
+                    }
+                }
+            }
+        }
+        // this caller owns the load; map outside the lock
+        let mapped = MappedBytes::open(path)
+            .with_context(|| format!("load {}", key.describe()));
+        let mut st = self.inner.state.lock().unwrap();
+        match mapped {
+            Err(e) => {
+                st.entries.remove(key);
+                self.inner.loaded.notify_all();
+                Err(e)
+            }
+            Ok(m) => {
+                let bytes = Arc::new(m);
+                st.bytes_total += bytes.len() as u64;
+                st.tick += 1;
+                let tick = st.tick;
+                st.entries.insert(
+                    key.clone(),
+                    Slot::Ready {
+                        bytes: bytes.clone(),
+                        pins: 1,
+                        last_used: tick,
+                    },
+                );
+                sweep_lru(&mut st);
+                self.inner.loaded.notify_all();
+                Ok(Binding {
+                    inner: self.inner.clone(),
+                    key: key.clone(),
+                    bytes,
+                })
+            }
+        }
+    }
+
+    /// Explicitly evict one entry.  Refused (typed error) while any
+    /// binding pins it — eviction never pulls bytes out from under a
+    /// bound worker.
+    pub fn evict(&self, key: &CacheKey) -> Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        match st.entries.get(key) {
+            None => Ok(()),
+            Some(Slot::Loading) => {
+                bail!("evict {}: load in flight", key.describe())
+            }
+            Some(Slot::Ready { pins, .. }) if *pins > 0 => Err(anyhow!(
+                "evict {}: refused, {pins} live binding(s)",
+                key.describe()
+            )),
+            Some(Slot::Ready { bytes, .. }) => {
+                let len = bytes.len() as u64;
+                st.entries.remove(key);
+                st.bytes_total -= len;
+                st.evictions += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Change the byte budget; shrinking sweeps immediately.
+    pub fn set_budget(&self, budget_bytes: u64) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.budget = budget_bytes;
+        sweep_lru(&mut st);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let st = self.inner.state.lock().unwrap();
+        CacheStats {
+            hits: st.hits,
+            misses: st.misses,
+            evictions: st.evictions,
+            bytes: st.bytes_total,
+            entries: st.entries.len(),
+        }
+    }
+
+    /// Parsed manifest for an artifact directory, interned per
+    /// canonical path — N workers of one fleet parse `manifest.json`
+    /// once.  Manifests are small and config-like: they live outside
+    /// the byte budget and are never evicted.
+    pub fn manifest(&self, dir: impl AsRef<Path>) -> Result<Arc<Manifest>> {
+        let dir = dir.as_ref();
+        let canon =
+            std::fs::canonicalize(dir).unwrap_or_else(|_| dir.to_path_buf());
+        if let Some(m) =
+            self.inner.state.lock().unwrap().manifests.get(&canon)
+        {
+            return Ok(m.clone());
+        }
+        // parse outside the lock; a racing double-parse is harmless
+        // (last writer wins, both Arcs are equivalent)
+        let m = Arc::new(Manifest::load(dir)?);
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .manifests
+            .insert(canon, m.clone());
+        Ok(m)
+    }
+}
+
+fn default_budget() -> u64 {
+    const DEFAULT: u64 = 1 << 30; // 1 GiB
+    std::env::var("REPRO_ARTIFACT_CACHE_BYTES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(DEFAULT)
+}
+
+static GLOBAL: OnceLock<ArtifactCache> = OnceLock::new();
+
+/// The process-wide cache every worker binds through.  Budget comes
+/// from `REPRO_ARTIFACT_CACHE_BYTES` (default 1 GiB); operators resize
+/// it live via [`ArtifactCache::set_budget`] (`--artifact-cache-mb`).
+pub fn global() -> &'static ArtifactCache {
+    GLOBAL.get_or_init(|| ArtifactCache::new(default_budget()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "repro_artifact_cache_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_file(dir: &Path, name: &str, len: usize) -> PathBuf {
+        let p = dir.join(name);
+        std::fs::write(&p, vec![0x5a; len]).unwrap();
+        p
+    }
+
+    fn key(tag: &str, batch: usize) -> CacheKey {
+        CacheKey::step_hlo(tag, batch, 64, 3)
+    }
+
+    #[test]
+    fn bind_maps_and_counts_hits_and_misses() {
+        let dir = tmp_dir("hits");
+        let p = write_file(&dir, "a.hlo.txt", 100);
+        let c = ArtifactCache::new(1 << 20);
+        let b1 = c.bind(&key("a", 8), &p).unwrap();
+        assert_eq!(b1.bytes().len(), 100);
+        assert_eq!(b1.bytes()[0], 0x5a);
+        let b2 = c.bind(&key("a", 8), &p).unwrap();
+        // the SAME mapping is shared — no duplicate mmap
+        assert!(b1.same_mapping(&b2));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.bytes, 100);
+        assert_eq!(s.entries, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_typed_error_and_leaves_no_residue() {
+        let dir = tmp_dir("missing");
+        let c = ArtifactCache::new(1 << 20);
+        let e = c.bind(&key("nope", 1), &dir.join("absent")).unwrap_err();
+        assert!(format!("{e:#}").contains("step_hlo"), "{e:#}");
+        assert_eq!(c.stats().entries, 0);
+        // the failed load slot is cleaned up: a later bind retries
+        let p = write_file(&dir, "absent", 10);
+        assert_eq!(c.bind(&key("nope", 1), &p).unwrap().bytes().len(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_evicts_in_staleness_order_under_byte_budget() {
+        let dir = tmp_dir("lru");
+        let pa = write_file(&dir, "a", 400);
+        let pb = write_file(&dir, "b", 400);
+        let pc = write_file(&dir, "c", 400);
+        let c = ArtifactCache::new(1000);
+        drop(c.bind(&key("a", 1), &pa).unwrap());
+        drop(c.bind(&key("b", 1), &pb).unwrap());
+        // touch a, so b is now the stalest
+        drop(c.bind(&key("a", 1), &pa).unwrap());
+        // c overflows the 1000-byte budget: b (stalest unpinned) goes
+        drop(c.bind(&key("c", 1), &pc).unwrap());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.bytes, 800);
+        // a survives (hit), b was evicted (miss → reload)
+        drop(c.bind(&key("a", 1), &pa).unwrap());
+        let hits_before = c.stats().hits;
+        drop(c.bind(&key("b", 1), &pb).unwrap());
+        let s = c.stats();
+        assert_eq!(s.hits, hits_before, "b must have been evicted");
+        // the reload of b pushed bytes to 1200 again: LRU swept c or a
+        assert!(s.bytes <= 1000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pinned_entries_are_never_evicted_and_evict_is_refused() {
+        let dir = tmp_dir("pin");
+        let pa = write_file(&dir, "a", 600);
+        let pb = write_file(&dir, "b", 600);
+        let c = ArtifactCache::new(1000);
+        let bound = c.bind(&key("a", 1), &pa).unwrap();
+        // over budget, but a is pinned: it must survive the sweep
+        let b2 = c.bind(&key("b", 1), &pb).unwrap();
+        drop(b2); // unpinning b lets the sweep reclaim it instead
+        let s = c.stats();
+        assert!(
+            c.stats().bytes >= 600,
+            "pinned entry evicted: {s:?}"
+        );
+        let hits = c.stats().hits;
+        drop(c.bind(&key("a", 1), &pa).unwrap());
+        assert_eq!(c.stats().hits, hits + 1, "a must still be resident");
+        // explicit evict of a bound key is a typed refusal
+        let e = c.evict(&key("a", 1)).unwrap_err();
+        assert!(e.to_string().contains("refused"), "{e}");
+        // once the binding drops, evict succeeds
+        drop(bound);
+        c.evict(&key("a", 1)).unwrap();
+        assert_eq!(c.stats().entries, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_binds_of_one_key_load_once() {
+        let dir = tmp_dir("concurrent");
+        let p = write_file(&dir, "big", 4096);
+        let c = ArtifactCache::new(1 << 20);
+        let started = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                let p = p.clone();
+                let started = started.clone();
+                std::thread::spawn(move || {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    // spin until every thread is poised to bind
+                    while started.load(Ordering::SeqCst) < 8 {
+                        std::hint::spin_loop();
+                    }
+                    c.bind(&key("big", 8), &p).unwrap()
+                })
+            })
+            .collect();
+        let bindings: Vec<Binding> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let s = c.stats();
+        assert_eq!(s.misses, 1, "one load for 8 concurrent binds: {s:?}");
+        assert_eq!(s.hits, 7);
+        assert_eq!(s.bytes, 4096, "one mapping resident, not 8");
+        for b in &bindings[1..] {
+            assert!(bindings[0].same_mapping(b), "duplicate mmap");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_shrink_sweeps_immediately() {
+        let dir = tmp_dir("shrink");
+        let pa = write_file(&dir, "a", 300);
+        let pb = write_file(&dir, "b", 300);
+        let c = ArtifactCache::new(1 << 20);
+        drop(c.bind(&key("a", 1), &pa).unwrap());
+        drop(c.bind(&key("b", 1), &pb).unwrap());
+        assert_eq!(c.stats().bytes, 600);
+        c.set_budget(400);
+        let s = c.stats();
+        assert_eq!(s.bytes, 300, "shrink must sweep the stalest: {s:?}");
+        assert_eq!(s.evictions, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_keys_fold_in_the_path() {
+        let a = CacheKey::checkpoint("ddlm", Path::new("runs/ddlm.pbin"));
+        let b = CacheKey::checkpoint("ddlm", Path::new("runs/ddlm_ck75.pbin"));
+        assert_ne!(a, b);
+        assert_eq!(a, CacheKey::checkpoint("ddlm", Path::new("runs/ddlm.pbin")));
+    }
+
+    #[test]
+    fn manifest_interning_parses_once_per_dir() {
+        let dir = tmp_dir("manifest");
+        // a minimal but valid manifest
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":3,"model":{"vocab":8,"seq_len":4,"d_model":2,
+                "n_layers":1,"n_heads":1,"d_ff":4,"simplex_k":1.0,
+                "t_max":10.0,"t_min":0.05,"tw_buckets":4},
+                "artifacts":[]}"#,
+        )
+        .unwrap();
+        let c = ArtifactCache::new(1 << 20);
+        let m1 = c.manifest(&dir).unwrap();
+        let m2 = c.manifest(&dir).unwrap();
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(m1.format, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -111,6 +111,12 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     client: xla::PjRtClient,
     stats: RefCell<ExecStats>,
+    /// Pin on the artifact's byte image in the process-wide
+    /// [`artifact_cache`](super::artifact_cache): holding it keeps the
+    /// mapping resident (evict-while-bound is refused) for as long as
+    /// this executable lives; a worker rebind drops the executable and
+    /// with it the pin, letting the LRU sweep reclaim the old shape.
+    _hlo: Option<super::artifact_cache::Binding>,
 }
 
 impl Executable {
@@ -408,7 +414,12 @@ pub struct Runtime {
 
 impl Runtime {
     pub fn new(artifact_dir: &str) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
+        // interned per directory in the process-wide cache: a fleet of
+        // N workers parses manifest.json once (the local copy keeps
+        // `Runtime.manifest` an owned field — no API ripple)
+        let manifest = (*super::artifact_cache::global()
+            .manifest(artifact_dir)?)
+        .clone();
         let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
         log_info!(
             "PJRT up: platform={} devices={}",
@@ -429,6 +440,45 @@ impl Runtime {
         }
         let spec = self.manifest.artifact(name)?.clone();
         let path = self.manifest.hlo_path(&spec);
+        // Bind the HLO byte image through the process-wide artifact
+        // cache: first binder mmaps the file, every other worker shares
+        // the mapping (warm pages), and the pin blocks eviction while
+        // any executable of this shape is live.  Compilation itself
+        // stays path-based (`from_text_file` is the only HLO-text entry
+        // point the xla crate exposes) and the compiled executable
+        // stays per-runtime — PJRT handles are not `Send`, so the
+        // process-wide layer deliberately caches host bytes, not
+        // device objects.  A bind failure is non-fatal: compile still
+        // proceeds from the path, only unpinned/unaccounted.
+        let key = if spec.role == "step" {
+            super::artifact_cache::CacheKey::step_hlo(
+                &spec.family,
+                spec.batch,
+                spec.seq_len,
+                self.manifest.format,
+            )
+        } else {
+            // non-step artifacts are keyed by their unique name so two
+            // roles at one (family, B, L) never collide
+            super::artifact_cache::CacheKey {
+                family: spec.name.clone(),
+                batch: spec.batch,
+                seq_len: spec.seq_len,
+                format: self.manifest.format,
+                kind: super::artifact_cache::ArtifactKind::StepHlo,
+            }
+        };
+        let hlo = match super::artifact_cache::global().bind(&key, &path) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                crate::util::log::log(
+                    crate::util::log::Level::Warn,
+                    "runtime",
+                    &format!("artifact cache bind {name}: {e:#}"),
+                );
+                None
+            }
+        };
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("path utf8")?,
@@ -445,6 +495,7 @@ impl Runtime {
             exe,
             client: self.client.clone(),
             stats: RefCell::new(ExecStats::default()),
+            _hlo: hlo,
         });
         self.cache.borrow_mut().insert(name.to_string(), e.clone());
         Ok(e)

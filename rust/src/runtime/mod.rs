@@ -1,9 +1,12 @@
-//! PJRT runtime layer: manifest loading, host tensors, executable cache.
+//! PJRT runtime layer: manifest loading, host tensors, executable cache,
+//! and the process-wide mmap-backed artifact cache workers rebind through.
 
+pub mod artifact_cache;
 pub mod client;
 pub mod manifest;
 pub mod tensor;
 
+pub use artifact_cache::{ArtifactCache, ArtifactKind, Binding, CacheKey, CacheStats};
 pub use client::{Executable, ExecStats, Runtime};
 pub use manifest::{ArtifactSpec, Dtype, Manifest};
 pub use tensor::Tensor;

@@ -19,4 +19,6 @@ pub use kernel::{
 };
 pub use registry::FamilyId;
 pub use schedule::{Schedule, ScheduleError};
-pub use session::{resident_capable, Session, Slot, SlotError, SlotRequest};
+pub use session::{
+    resident_capable, Session, Slot, SlotError, SlotExport, SlotRequest,
+};

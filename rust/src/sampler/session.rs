@@ -164,6 +164,92 @@ pub struct Slot {
     pub last_stats: StepStats,
 }
 
+/// A slot's complete generation state, detached from any session — the
+/// migration unit of the elastic fleet.  [`Session::export_slot`]
+/// produces one; [`Session::import_slot`] resumes it on another session
+/// of the SAME family and compiled seq_len (any batch size: per-row
+/// math never reduces across the batch axis, so a row stepped on a b1
+/// shard is bit-identical to the same row on a b8 shard —
+/// `tests/migration_equivalence.rs` pins this).  Everything the step
+/// needs travels: diffusion state row, probability/token feedback,
+/// schedule position, the noise stream mid-sequence, and the pinned
+/// clamp rows (conditioning prefix + token-level freezes), so frozen
+/// positions stay frozen at the same values on the destination shard.
+#[derive(Clone, Debug)]
+pub struct SlotExport {
+    pub family: FamilyId,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    /// schedule position (next step index to execute)
+    pub step: usize,
+    pub schedule: Schedule,
+    rng: Prng,
+    prefix: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub last_stats: StepStats,
+    /// diffusion-state row `[row]` (kernel width: L*D or L*V)
+    x_row: Vec<f32>,
+    /// probability feedback row `[L*V]`
+    prev_probs_row: Vec<f32>,
+    /// token feedback row `[L]`
+    prev_tokens_row: Vec<i32>,
+    /// pinned-position mask `[L]` (prefix + freezes)
+    prefix_mask_row: Vec<f32>,
+    /// clean clamp state row `[row]`
+    prefix_x_row: Vec<f32>,
+    /// freeze-only mask `[L]` (subset of `prefix_mask_row`)
+    frozen_row: Vec<f32>,
+    /// token pinned at each frozen position `[L]`
+    frozen_vals_row: Vec<i32>,
+    frozen_count: usize,
+}
+
+impl SlotExport {
+    /// Steps remaining in the exported schedule — what a migration
+    /// reclaims on the source shard.
+    pub fn steps_remaining(&self) -> usize {
+        self.schedule.n_steps().saturating_sub(self.step)
+    }
+
+    /// Count of freeze-pinned positions travelling with the slot.
+    pub fn frozen_count(&self) -> usize {
+        self.frozen_count
+    }
+
+    /// Test-only: a synthetic export for scheduler/queue unit tests
+    /// that never touch a device (the real constructor is
+    /// [`Session::export_slot`]).
+    #[cfg(test)]
+    pub(crate) fn synthetic(
+        family: FamilyId,
+        n_steps: usize,
+        step: usize,
+    ) -> SlotExport {
+        SlotExport {
+            family,
+            seq_len: 0,
+            vocab: 0,
+            d_model: 0,
+            step,
+            schedule: Schedule::new(family, n_steps.max(1), 10.0, 0.05)
+                .expect("synthetic schedule"),
+            rng: Prng::new(0),
+            prefix: Vec::new(),
+            tokens: Vec::new(),
+            last_stats: StepStats::default(),
+            x_row: Vec::new(),
+            prev_probs_row: Vec::new(),
+            prev_tokens_row: Vec::new(),
+            prefix_mask_row: Vec::new(),
+            prefix_x_row: Vec::new(),
+            frozen_row: Vec::new(),
+            frozen_vals_row: Vec::new(),
+            frozen_count: 0,
+        }
+    }
+}
+
 /// Step-artifact output indices, resolved once at session build so the
 /// hot loop never does name lookups.
 struct StepOutIdx {
@@ -587,6 +673,120 @@ impl Session {
 
     pub fn any_active(&self) -> bool {
         self.slots.iter().any(|s| s.active)
+    }
+
+    /// Detach a live slot's complete generation state for migration to
+    /// another session (checkpoint hot-swap drain, or a move to a
+    /// right-sized shard).  The device state is folded back into the
+    /// host mirrors first ([`Self::adopt_device_state`] — mirrors
+    /// become authoritative for the WHOLE batch, so the source
+    /// session's next resident step pays one full re-upload; that is
+    /// the migration's device cost).  The slot stays active on the
+    /// source: callers release it once the export is safely requeued.
+    ///
+    /// The export is lossless — f32/i32 rows copy bit-for-bit, and the
+    /// noise stream moves as the `Prng` itself — which is what makes
+    /// migrated generation bit-identical to unmigrated
+    /// (`tests/migration_equivalence.rs`).
+    pub fn export_slot(&mut self, slot: usize) -> Result<SlotExport> {
+        if !self.slots[slot].active {
+            bail!("export_slot {slot}: slot is not active");
+        }
+        self.adopt_device_state()
+            .context("export_slot: device state sync")?;
+        let (l, v) = (self.seq_len, self.vocab);
+        let (base, tb, pb) = (slot * self.row, slot * l, slot * l * v);
+        let s = &self.slots[slot];
+        Ok(SlotExport {
+            family: self.family,
+            seq_len: l,
+            vocab: v,
+            d_model: self.d_model,
+            step: s.step,
+            schedule: s.schedule.clone(),
+            rng: s.rng.clone(),
+            prefix: s.prefix.clone(),
+            tokens: s.tokens.clone(),
+            last_stats: s.last_stats,
+            x_row: self.x[base..base + self.row].to_vec(),
+            prev_probs_row: self.prev_probs[pb..pb + l * v].to_vec(),
+            prev_tokens_row: self.prev_tokens[tb..tb + l].to_vec(),
+            prefix_mask_row: self.prefix_mask[tb..tb + l].to_vec(),
+            prefix_x_row: self.prefix_x[base..base + self.row].to_vec(),
+            frozen_row: self.frozen[tb..tb + l].to_vec(),
+            frozen_vals_row: self.frozen_vals[tb..tb + l].to_vec(),
+            frozen_count: self.frozen_counts[slot],
+        })
+    }
+
+    /// Resume an exported slot on this session — the receiving half of
+    /// migration.  Requires the same family and compiled seq_len (a
+    /// different L is a different compiled graph: attention spans a
+    /// different window, so cross-L resumption cannot be bit-exact and
+    /// is refused, typed).  Any batch size is fine — that is the point:
+    /// a mostly-frozen slot on a b8 shard resumes on a b1 shard.
+    ///
+    /// Rides the existing mutation protocols end to end: the slot goes
+    /// dirty (next resident step folds the other slots' device rows in
+    /// and re-uploads the merged state once) and the clamp rows go
+    /// `prefix_dirty` (frozen positions re-pin on THIS shard's device
+    /// clamp inputs before the first imported step executes).
+    pub fn import_slot(&mut self, slot: usize, e: &SlotExport) -> Result<()> {
+        if e.family != self.family {
+            bail!(
+                "import_slot: family mismatch ({} -> {})",
+                e.family.name(),
+                self.family.name()
+            );
+        }
+        if e.seq_len != self.seq_len
+            || e.vocab != self.vocab
+            || e.d_model != self.d_model
+        {
+            bail!(
+                "import_slot: shape mismatch (L{}/V{}/D{} -> L{}/V{}/D{})",
+                e.seq_len,
+                e.vocab,
+                e.d_model,
+                self.seq_len,
+                self.vocab,
+                self.d_model
+            );
+        }
+        if self.slots[slot].active {
+            bail!("import_slot {slot}: slot is occupied");
+        }
+        let (l, v) = (self.seq_len, self.vocab);
+        let (base, tb, pb) = (slot * self.row, slot * l, slot * l * v);
+        self.x[base..base + self.row].copy_from_slice(&e.x_row);
+        self.prev_probs[pb..pb + l * v].copy_from_slice(&e.prev_probs_row);
+        self.prev_tokens[tb..tb + l].copy_from_slice(&e.prev_tokens_row);
+        // clamp rows: re-upload only when either side actually pins
+        // positions (same skip rule as reset_slot, so a pin-free
+        // migration does not pay the state-sized clamp upload)
+        let had_pins =
+            self.prefix_mask[tb..tb + l].iter().any(|&m| m != 0.0);
+        let has_pins = e.prefix_mask_row.iter().any(|&m| m != 0.0);
+        self.prefix_mask[tb..tb + l].copy_from_slice(&e.prefix_mask_row);
+        self.prefix_x[base..base + self.row]
+            .copy_from_slice(&e.prefix_x_row);
+        if had_pins || has_pins {
+            self.prefix_dirty = true;
+        }
+        self.frozen[tb..tb + l].copy_from_slice(&e.frozen_row);
+        self.frozen_vals[tb..tb + l].copy_from_slice(&e.frozen_vals_row);
+        self.frozen_counts[slot] = e.frozen_count;
+        self.dirty[slot] = true;
+        self.any_dirty = true;
+        let s = &mut self.slots[slot];
+        s.step = e.step;
+        s.schedule = e.schedule.clone();
+        s.active = true;
+        s.rng = e.rng.clone();
+        s.prefix = e.prefix.clone();
+        s.tokens = e.tokens.clone();
+        s.last_stats = e.last_stats;
+        Ok(())
     }
 
     /// Drain the deferred best-effort-path device error, if one is

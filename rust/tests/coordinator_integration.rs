@@ -457,3 +457,90 @@ fn bounded_queue_rejects_with_typed_overload() {
     engine.shutdown();
     join.join().unwrap().unwrap();
 }
+
+#[test]
+fn live_rebind_under_load_drops_zero_requests() {
+    // the elastic-fleet acceptance gate: a live worker rebind (drain →
+    // rebuild → rejoin) under a traffic burst loses NOTHING — every
+    // submitted request completes normally, in-flight slots included
+    // (they are exported, requeued with their generation state, and
+    // resumed after the rebuild)
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 4)];
+    let (engine, join) = start(cfg);
+
+    // warm the shard so the rebind hits live traffic, not the one-off
+    // artifact compile
+    assert_eq!(
+        engine.generate(GenRequest::new(999, 1)).unwrap().steps_executed,
+        1
+    );
+
+    let rxs: Vec<_> = (1..=16u64)
+        .map(|id| (id, engine.submit(GenRequest::new(id, 25))))
+        .collect();
+    // let the worker pull part of the burst into device slots so the
+    // drain actually has in-flight work to export
+    std::thread::sleep(Duration::from_millis(60));
+    let report = engine.rebind(0, None, Some(8), None).unwrap();
+    assert_eq!(report.worker, 0);
+    assert_eq!(report.batch, 8);
+    assert!(report.family == Family::Ddlm);
+    assert!(report.rebind_ms >= 0.0);
+
+    for (id, rx) in rxs {
+        let resp = rx.recv().unwrap().unwrap_or_else(|e| {
+            panic!("request {id} lost to the rebind: {e:?}")
+        });
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.steps_executed, 25, "request {id} lost steps");
+        assert_eq!(resp.tokens.len(), 64, "request {id} lost its decode");
+    }
+
+    let m = engine.metrics().unwrap();
+    assert_eq!(metric(&m, "requests_completed"), 17.0);
+    assert_eq!(metric(&m, "rebinds"), 1.0);
+    assert_eq!(
+        metric(&m, "rebind_requests_drained"),
+        report.drained as f64
+    );
+    // tentpole observability: the artifact cache reports its stats in
+    // every metrics snapshot, and the rebuild re-bound the same
+    // checkpoint key through it (a hit, not a second load)
+    for key in [
+        "artifact_cache_hits",
+        "artifact_cache_misses",
+        "artifact_cache_bytes",
+        "artifact_cache_evictions",
+    ] {
+        assert!(m.get(key).is_some(), "missing {key}");
+    }
+    assert!(metric(&m, "artifact_cache_hits") >= 1.0);
+
+    engine.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn rebind_refusals_are_typed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(&dir, Family::Ddlm);
+    cfg.worker_specs = vec![(Family::Ddlm.into(), 1)];
+    let (engine, join) = start(cfg);
+    // make sure the worker is up and registered before poking it
+    engine.generate(GenRequest::new(1, 1)).unwrap();
+    assert_eq!(
+        engine.rebind(42, None, None, None).unwrap_err(),
+        "unknown_worker"
+    );
+    engine.shutdown();
+    // a fleet that is shutting down refuses new rebinds typed instead
+    // of hanging the caller on a worker that will never take the order
+    let err = engine.rebind(0, None, None, None).unwrap_err();
+    assert!(
+        err == "shutting_down" || err == "worker_down",
+        "unexpected refusal: {err}"
+    );
+    join.join().unwrap().unwrap();
+}

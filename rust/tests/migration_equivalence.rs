@@ -1,0 +1,230 @@
+//! Migration equivalence: a resident slot exported mid-schedule and
+//! imported into ANOTHER session (the serving stack's live rebind
+//! drain and frozen-aware slot migration) must continue to the
+//! **bit-identical** final decode and per-step stats as an unmigrated
+//! run — for every built-in family, with frozen tokens present, and
+//! across compiled batch sizes (the b8 → b1 right-sizing move that
+//! turns saved steps into reclaimed capacity).  Cross-L imports are
+//! refused typed: a different compiled window cannot be bit-exact.
+//!
+//! Skips cleanly when artifacts are not built (`make artifacts`).
+
+use std::rc::Rc;
+
+use repro::halting::StepStats;
+use repro::models::store::ParamStore;
+use repro::runtime::{Manifest, Runtime};
+use repro::sampler::{Family, Session, SlotRequest};
+
+fn artifacts_dir() -> Option<String> {
+    let d = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d)
+        .join("manifest.json")
+        .exists()
+        .then_some(d)
+}
+
+fn assert_stats_eq(a: &StepStats, b: &StepStats, ctx: &str) {
+    assert_eq!(a.entropy, b.entropy, "{ctx}: entropy");
+    assert_eq!(a.kl, b.kl, "{ctx}: kl");
+    assert_eq!(a.switches, b.switches, "{ctx}: switches");
+    assert_eq!(a.norm_x0, b.norm_x0, "{ctx}: norm_x0");
+    assert_eq!(a.norm_x, b.norm_x, "{ctx}: norm_x");
+}
+
+const N_STEPS: usize = 12;
+const SPLIT: usize = 5; // steps run on the source before migrating
+const FREEZE_AT: usize = 2; // freeze BEFORE the split so the mask moves
+
+fn mk_session(dir: &str, fam: Family, batch: usize, l: usize) -> Session {
+    let rt = Runtime::new(dir).unwrap();
+    let store = Rc::new(ParamStore::load_init(dir, fam.name()).unwrap());
+    Session::new(&rt, fam, store, batch, l).unwrap()
+}
+
+fn seed_slot(session: &mut Session, t_max: f32, t_min: f32) {
+    session
+        .reset_slot(
+            0,
+            &SlotRequest::new(4242, N_STEPS, t_max, t_min)
+                .prefix(&[5, 6, 7, 8]),
+        )
+        .unwrap();
+}
+
+/// Step the slot once, freezing the scripted positions at `FREEZE_AT`,
+/// and record (stats, decode).
+fn observe(
+    session: &mut Session,
+    step: usize,
+    freeze_mask: &[bool],
+) -> (StepStats, Vec<i32>) {
+    let st = session.step().unwrap();
+    let stats = st[0].expect("slot 0 must be active");
+    if step == FREEZE_AT {
+        let newly = session.freeze_positions(0, freeze_mask).unwrap();
+        assert!(newly > 0, "freeze script must pin fresh positions");
+    }
+    (stats, session.slot_output(0))
+}
+
+/// The headline guarantee: export → import mid-schedule changes
+/// nothing observable.  `dest_batch` exercises same-B (hot-swap drain)
+/// and cross-B (right-sizing migration) resumption.
+fn check_migration(dir: &str, fam: Family, batch: usize, dest_batch: usize) {
+    let man = Manifest::load(dir).unwrap();
+    let m = man.model.clone();
+    let ctx = format!("{} b{batch}->b{dest_batch}", fam.name());
+    let freeze_mask: Vec<bool> =
+        (0..m.seq_len).map(|i| i % 3 == 0).collect();
+
+    // unmigrated baseline: one session runs the full schedule
+    let mut base = mk_session(dir, fam, batch, m.seq_len);
+    seed_slot(&mut base, m.t_max, m.t_min);
+    let mut expect = Vec::new();
+    for step in 0..N_STEPS {
+        expect.push(observe(&mut base, step, &freeze_mask));
+    }
+    let base_mask = base.slot_frozen_mask(0);
+
+    // migrated run: same script, but the slot moves to a second
+    // session (possibly a different compiled batch) after SPLIT steps
+    let mut src = mk_session(dir, fam, batch, m.seq_len);
+    seed_slot(&mut src, m.t_max, m.t_min);
+    let mut got = Vec::new();
+    for step in 0..SPLIT {
+        got.push(observe(&mut src, step, &freeze_mask));
+    }
+    let export = src.export_slot(0).unwrap();
+    assert_eq!(export.steps_remaining(), N_STEPS - SPLIT, "{ctx}");
+    src.release_slot(0);
+    let mut dst = mk_session(dir, fam, dest_batch, m.seq_len);
+    dst.import_slot(0, &export).unwrap();
+    // frozen-mask re-pinning on the destination shard: the mask (and
+    // the frozen decode values) must arrive before any step runs
+    assert_eq!(dst.slot_frozen_mask(0), base_mask, "{ctx}: mask moved");
+    assert!(
+        export.frozen_count() > 0,
+        "{ctx}: freeze script pinned nothing"
+    );
+    assert_eq!(
+        dst.frozen_count(0),
+        export.frozen_count(),
+        "{ctx}: frozen count moved"
+    );
+    for step in SPLIT..N_STEPS {
+        got.push(observe(&mut dst, step, &freeze_mask));
+    }
+
+    assert_eq!(expect.len(), got.len());
+    for (step, ((st_e, tk_e), (st_g, tk_g))) in
+        expect.iter().zip(&got).enumerate()
+    {
+        assert_stats_eq(st_e, st_g, &format!("{ctx} step {step}"));
+        assert_eq!(tk_e, tk_g, "{ctx} step {step}: decodes diverged");
+    }
+    // frozen positions stay pinned to their freeze-time values across
+    // the migration boundary, and the prefix survives
+    let at_freeze = &got[FREEZE_AT].1;
+    let final_toks = &got[N_STEPS - 1].1;
+    for (i, frozen) in base_mask.iter().enumerate() {
+        if *frozen {
+            assert_eq!(
+                final_toks[i], at_freeze[i],
+                "{ctx}: frozen position {i} drifted across migration"
+            );
+        }
+    }
+    assert_eq!(&final_toks[..4], &[5, 6, 7, 8], "{ctx}: prefix lost");
+    assert_eq!(dst.slot_frozen_mask(0), base_mask, "{ctx}: final mask");
+}
+
+/// Same-batch migration (the checkpoint hot-swap drain path) is
+/// bit-exact for all three families, frozen tokens included.
+#[test]
+fn migrated_slot_is_bit_identical_same_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let l = man.model.seq_len;
+    for fam in Family::all() {
+        let avail = man.available_step_batches(fam.name(), l);
+        if avail.is_empty() {
+            continue;
+        }
+        let batch = man.resolve_step_batch(fam.name(), l, 2).unwrap();
+        check_migration(&dir, fam, batch, batch);
+    }
+}
+
+/// Cross-batch migration (the frozen-aware right-sizing move: a
+/// mostly-frozen slot leaves a wide shard for a b1 shard) is equally
+/// bit-exact — per-row math never reduces across the batch dim.
+#[test]
+fn migrated_slot_is_bit_identical_across_batch_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let l = man.model.seq_len;
+    let mut ran = false;
+    for fam in Family::all() {
+        let avail = man.available_step_batches(fam.name(), l);
+        let Some(&big) = avail.iter().max() else { continue };
+        let Some(&small) = avail.iter().min() else { continue };
+        if big == small {
+            continue; // single compiled batch: nothing to right-size
+        }
+        check_migration(&dir, fam, big, small);
+        // and back up: resuming on a wider shard must be exact too
+        check_migration(&dir, fam, small, big);
+        ran = true;
+    }
+    assert!(
+        ran || Family::all()
+            .iter()
+            .all(|f| man.available_step_batches(f.name(), l).len() < 2),
+        "artifact set advertises multiple batches but none were tested"
+    );
+}
+
+/// Typed refusals: an import must never silently corrupt — occupied
+/// destination slots, family mismatches and shape mismatches all
+/// refuse with an error and leave the destination untouched.
+#[test]
+fn import_refuses_mismatch_and_occupied() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let m = man.model.clone();
+    let fams: Vec<Family> = Family::all()
+        .iter()
+        .copied()
+        .filter(|f| {
+            !man.available_step_batches(f.name(), m.seq_len).is_empty()
+        })
+        .collect();
+    let Some(&fam) = fams.first() else { return };
+    let batch = man.resolve_step_batch(fam.name(), m.seq_len, 1).unwrap();
+
+    let mut src = mk_session(&dir, fam, batch, m.seq_len);
+    seed_slot(&mut src, m.t_max, m.t_min);
+    src.step().unwrap();
+    let export = src.export_slot(0).unwrap();
+
+    // occupied destination slot refuses
+    let mut dst = mk_session(&dir, fam, batch, m.seq_len);
+    seed_slot(&mut dst, m.t_max, m.t_min);
+    let err = dst.import_slot(0, &export).unwrap_err();
+    assert!(err.to_string().contains("occupied"), "{err:#}");
+
+    // family mismatch refuses (needs a second family's artifact)
+    if let Some(&other) = fams.iter().find(|&&f| f != fam) {
+        let ob =
+            man.resolve_step_batch(other.name(), m.seq_len, 1).unwrap();
+        let mut alien = mk_session(&dir, other, ob, m.seq_len);
+        let err = alien.import_slot(0, &export).unwrap_err();
+        assert!(err.to_string().contains("family mismatch"), "{err:#}");
+    }
+
+    // exporting an inactive slot refuses
+    let mut idle = mk_session(&dir, fam, batch, m.seq_len);
+    let err = idle.export_slot(0).unwrap_err();
+    assert!(err.to_string().contains("not active"), "{err:#}");
+}
