@@ -1,0 +1,649 @@
+//! The check catalogue: five architectural invariants of the serving
+//! stack, each a pure function over the lexed tree.
+//!
+//! | check              | scope                         | invariant |
+//! |--------------------|-------------------------------|-----------|
+//! | `panic-freedom`    | serving-path modules          | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` outside test code |
+//! | `lock-poison`      | serving-path modules          | no `.lock().unwrap()` — use `util::sync::lock_or_recover` |
+//! | `family-seal`      | whole tree minus the seam     | no `match` over `Family`/`FamilyId` outside `sampler/kernel.rs` + `sampler/registry.rs` |
+//! | `metrics-registry` | snapshot emitters             | every emitted metrics key/prefix is declared in `coordinator::metrics::keys`; `bench_schema.txt` ⊆ registry |
+//! | `wire-doc-drift`   | `coordinator/envelope.rs`     | every constructed frame field name appears in API.md |
+//! | `unsafe-hygiene`   | whole tree                    | every `unsafe` is immediately preceded by a `// SAFETY:` comment |
+//!
+//! Matches on `#[cfg(test)]` lines are skipped; a well-formed
+//! `// lint:allow(<check>): <reason>` on the line above (or the line
+//! of) a match suppresses it.  See `analysis::source` for the grammar.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::report::Violation;
+use super::scan::{
+    brace_end, contains_word, eat, eat_ident, eat_key, find_all, find_words,
+    skip_ws,
+};
+use super::source::SourceFile;
+
+/// Serving-path scope for panic-freedom / lock-poison: the modules a
+/// wire request's execution can traverse.
+const SERVING_PREFIXES: &[&str] = &["coordinator/", "predictor/", "halting/"];
+const SERVING_FILES: &[&str] =
+    &["sampler/session.rs", "runtime/artifact_cache.rs"];
+
+/// The only two files allowed to match on the family enum: the kernel
+/// trait's dispatch seam.
+const FAMILY_SEAL_EXEMPT: &[&str] =
+    &["sampler/kernel.rs", "sampler/registry.rs"];
+
+/// The files that assemble the metrics snapshot.
+const METRICS_EMITTERS: &[&str] = &[
+    "coordinator/metrics/mod.rs",
+    "coordinator/engine.rs",
+    "predictor/estimator.rs",
+];
+
+const WIRE_FILE: &str = "coordinator/envelope.rs";
+
+/// Cross-file inputs the tree-level checks need.
+pub struct Context {
+    /// raw API.md text (wire-doc-drift)
+    pub api_md: String,
+    /// raw `coordinator/metrics/keys.rs` source (metrics-registry);
+    /// parsed textually so the analyzer never links the crate it lints
+    pub keys_src: String,
+    /// raw `scripts/bench_schema.txt`, when present
+    pub bench_schema: Option<String>,
+}
+
+pub fn serving_path(rel: &str) -> bool {
+    SERVING_PREFIXES.iter().any(|p| rel.starts_with(p))
+        || SERVING_FILES.contains(&rel)
+}
+
+/// Run every check over the tree.  Violations come back sorted by
+/// (check, file, line).
+pub fn run_all(files: &[SourceFile], ctx: &Context) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for f in files {
+        if serving_path(&f.rel) {
+            check_panic_freedom(f, &mut out);
+        }
+        if !FAMILY_SEAL_EXEMPT.contains(&f.rel.as_str()) {
+            check_family_seal(f, &mut out);
+        }
+        check_unsafe_hygiene(f, &mut out);
+    }
+    check_metrics_registry(files, ctx, &mut out);
+    check_wire_doc_drift(files, ctx, &mut out);
+    out.sort_by(|a, b| {
+        (a.check, &a.file, a.line).cmp(&(b.check, &b.file, b.line))
+    });
+    out
+}
+
+fn emit(
+    out: &mut Vec<Violation>,
+    f: &SourceFile,
+    check: &'static str,
+    pos: usize,
+    msg: String,
+) {
+    let line = f.line_at(pos);
+    if f.test_lines.contains(&line) || f.suppressed(check, line) {
+        return;
+    }
+    out.push(Violation { check, file: f.rel.clone(), line, msg });
+}
+
+// ---------------------------------------------------------------- panic
+
+/// `.lock().unwrap()` spans (for lock-poison), so the generic
+/// `.unwrap()` scan can skip them — one hazard, one finding.
+fn lock_unwrap_spans(code: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for p in find_all(code, b".lock()") {
+        let i = skip_ws(code, p + b".lock()".len());
+        let Some(i) = eat(code, i, b".") else { continue };
+        let i = skip_ws(code, i);
+        if let Some(end) = eat(code, i, b"unwrap()") {
+            spans.push((p, end));
+        }
+    }
+    spans
+}
+
+fn check_panic_freedom(f: &SourceFile, out: &mut Vec<Violation>) {
+    let code = &f.lexed.code;
+    let lock_spans = lock_unwrap_spans(code);
+    for &(p, _) in &lock_spans {
+        emit(
+            out,
+            f,
+            "lock-poison",
+            p,
+            ".lock().unwrap() can poison-cascade a panicked holder; \
+             use util::sync::lock_or_recover"
+                .to_string(),
+        );
+    }
+    for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        for p in find_words(code, mac.as_bytes()) {
+            emit(
+                out,
+                f,
+                "panic-freedom",
+                p,
+                format!("`{mac}` in a serving-path module"),
+            );
+        }
+    }
+    for p in find_all(code, b".unwrap()") {
+        if lock_spans.iter().any(|&(a, b)| (a..b).contains(&p)) {
+            continue;
+        }
+        emit(
+            out,
+            f,
+            "panic-freedom",
+            p,
+            "`.unwrap()` in a serving-path module".to_string(),
+        );
+    }
+    for p in find_all(code, b".expect") {
+        // `.expect  (` — method call with optional whitespace; skips
+        // identifiers like `.expected` via the ident check
+        let after = p + b".expect".len();
+        if after < code.len() && super::scan::is_ident(code[after]) {
+            continue;
+        }
+        if code.get(skip_ws(code, after)) == Some(&b'(') {
+            emit(
+                out,
+                f,
+                "panic-freedom",
+                p,
+                "`.expect(..)` in a serving-path module".to_string(),
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------- family-seal
+
+/// One violation per `match` expression (reported at the `match`
+/// keyword) when either its scrutinee names `Family`/`FamilyId` or its
+/// body contains a `Family::X =>` / `Family::X |` arm pattern.  Arm
+/// hits attribute to the *innermost* enclosing match, so an outer
+/// match over some other enum is not blamed for a nested family match.
+fn check_family_seal(f: &SourceFile, out: &mut Vec<Violation>) {
+    let code = &f.lexed.code;
+    // (match_start, body_open, body_end) for every match expression
+    let mut spans = Vec::new();
+    for p in find_words(code, b"match") {
+        let Some(open) =
+            super::lexer::find_bytes(code, b"{", p + b"match".len())
+        else {
+            continue;
+        };
+        spans.push((p, open, brace_end(code, open)));
+    }
+    let mut flagged = BTreeSet::new();
+    for &(start, open, _) in &spans {
+        let scrut = &code[start..open];
+        if contains_word(scrut, b"Family") || contains_word(scrut, b"FamilyId")
+        {
+            flagged.insert(start);
+        }
+    }
+    for p in family_arm_hits(code) {
+        let innermost = spans
+            .iter()
+            .filter(|&&(_, open, end)| open < p && p < end)
+            .max_by_key(|&&(_, open, _)| open);
+        if let Some(&(start, _, _)) = innermost {
+            flagged.insert(start);
+        }
+    }
+    for start in flagged {
+        emit(
+            out,
+            f,
+            "family-seal",
+            start,
+            "`match` over Family outside the kernel seam \
+             (sampler/kernel.rs + sampler/registry.rs)"
+                .to_string(),
+        );
+    }
+}
+
+/// Positions of `Family::X =>` / `FamilyId::X |` arm patterns.
+fn family_arm_hits(code: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for p in find_words(code, b"Family") {
+        let mut i = p + b"Family".len();
+        if let Some(j) = eat(code, i, b"Id") {
+            i = j;
+        }
+        let Some(i) = eat(code, i, b"::") else { continue };
+        let Some(i) = eat_ident(code, i) else { continue };
+        let i = skip_ws(code, i);
+        if eat(code, i, b"=>").is_some() || eat(code, i, b"|").is_some() {
+            out.push(p);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------- metrics-registry
+
+/// String keys constructed in an emitter file's `text` view:
+/// `("key", ...)` pairs, `.insert("key"`, and `format!("prefix{`
+/// dynamic lanes (returned separately).  A key is reported once per
+/// line even when both the pair and the insert pattern match it.
+fn emitted_keys(f: &SourceFile) -> (Vec<(usize, String)>, Vec<(usize, String)>)
+{
+    let text = &f.lexed.text;
+    let mut keys = Vec::new();
+    for p in find_all(text, b"(") {
+        let i = skip_ws(text, p + 1);
+        let Some(i) = eat(text, i, b"\"") else { continue };
+        let Some((key, i)) = eat_key(text, i) else { continue };
+        let Some(i) = eat(text, i, b"\"") else { continue };
+        if text.get(skip_ws(text, i)) == Some(&b',') {
+            keys.push((p, key));
+        }
+    }
+    for p in find_all(text, b".insert(") {
+        let i = skip_ws(text, p + b".insert(".len());
+        let Some(i) = eat(text, i, b"\"") else { continue };
+        let Some((key, i)) = eat_key(text, i) else { continue };
+        if eat(text, i, b"\"").is_some() {
+            keys.push((p, key));
+        }
+    }
+    let mut prefixes = Vec::new();
+    for p in find_all(text, b"format!(") {
+        let i = skip_ws(text, p + b"format!(".len());
+        let Some(i) = eat(text, i, b"\"") else { continue };
+        let Some((key, i)) = eat_key(text, i) else { continue };
+        if text.get(i) == Some(&b'{') {
+            prefixes.push((p, key));
+        }
+    }
+    keys.sort_by_key(|&(p, _)| p);
+    let mut seen = BTreeSet::new();
+    keys.retain(|(p, key)| seen.insert((f.line_at(*p), key.clone())));
+    (keys, prefixes)
+}
+
+/// Textual parse of a `const NAME: ... = &[ "a", "b", ... ];` array in
+/// `keys.rs` — the analyzer reads the registry as source, it does not
+/// link it.
+fn declared_array(keys_src: &str, name: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let Some(at) = keys_src.find(&format!("const {name}")) else {
+        return out;
+    };
+    let rest = &keys_src[at..];
+    let Some(eq) = rest.find('=') else { return out };
+    let Some(open) = rest[eq..].find('[') else { return out };
+    let body_start = eq + open + 1;
+    let Some(close) = rest[body_start..].find("];") else { return out };
+    let body = rest[body_start..body_start + close].as_bytes();
+    let mut i = 0;
+    while i < body.len() {
+        if body[i] == b'"' {
+            if let Some((key, j)) = eat_key(body, i + 1) {
+                if body.get(j) == Some(&b'"') {
+                    out.insert(key);
+                    i = j + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn check_metrics_registry(
+    files: &[SourceFile],
+    ctx: &Context,
+    out: &mut Vec<Violation>,
+) {
+    let snap = declared_array(&ctx.keys_src, "SNAPSHOT_KEYS");
+    let prefixes = declared_array(&ctx.keys_src, "SNAPSHOT_PREFIXES");
+    let bench = declared_array(&ctx.keys_src, "BENCH_KEYS");
+    let declared = |k: &str| {
+        snap.contains(k) || prefixes.iter().any(|p| k.starts_with(p.as_str()))
+    };
+    for f in files {
+        if !METRICS_EMITTERS.contains(&f.rel.as_str()) {
+            continue;
+        }
+        let (keys, fmt_prefixes) = emitted_keys(f);
+        for (p, key) in keys {
+            if !declared(&key) {
+                emit(
+                    out,
+                    f,
+                    "metrics-registry",
+                    p,
+                    format!(
+                        "metrics key \"{key}\" is not declared in \
+                         coordinator::metrics::keys"
+                    ),
+                );
+            }
+        }
+        for (p, key) in fmt_prefixes {
+            if !prefixes.contains(&key) {
+                emit(
+                    out,
+                    f,
+                    "metrics-registry",
+                    p,
+                    format!(
+                        "dynamic metrics prefix \"{key}\" is not in \
+                         SNAPSHOT_PREFIXES"
+                    ),
+                );
+            }
+        }
+    }
+    if let Some(schema) = &ctx.bench_schema {
+        for (idx, line) in schema.lines().enumerate() {
+            let key = line.trim();
+            if key.is_empty() || key.starts_with('#') {
+                continue;
+            }
+            if !(bench.contains(key) || declared(key)) {
+                out.push(Violation {
+                    check: "metrics-registry",
+                    file: "scripts/bench_schema.txt".to_string(),
+                    line: idx + 1,
+                    msg: format!(
+                        "bench-schema key \"{key}\" is not declared in \
+                         coordinator::metrics::keys"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ wire-doc-drift
+
+fn check_wire_doc_drift(
+    files: &[SourceFile],
+    ctx: &Context,
+    out: &mut Vec<Violation>,
+) {
+    let Some(f) = files.iter().find(|f| f.rel == WIRE_FILE) else {
+        return;
+    };
+    let api = ctx.api_md.as_bytes();
+    let (mut keys, _) = emitted_keys(f);
+    // `.get("key")` reads are wire fields too
+    let text = &f.lexed.text;
+    for p in find_all(text, b".get(") {
+        let i = skip_ws(text, p + b".get(".len());
+        let Some(i) = eat(text, i, b"\"") else { continue };
+        let Some((key, i)) = eat_key(text, i) else { continue };
+        let Some(i) = eat(text, i, b"\"") else { continue };
+        if text.get(skip_ws(text, i)) == Some(&b')') {
+            keys.push((p, key));
+        }
+    }
+    let mut seen = BTreeSet::new();
+    keys.sort_by_key(|&(p, _)| p);
+    for (p, key) in keys {
+        if !seen.insert(key.clone()) {
+            continue;
+        }
+        if !contains_word(api, key.as_bytes()) {
+            emit(
+                out,
+                f,
+                "wire-doc-drift",
+                p,
+                format!("wire field \"{key}\" is not documented in API.md"),
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------- unsafe-hygiene
+
+fn check_unsafe_hygiene(f: &SourceFile, out: &mut Vec<Violation>) {
+    // line -> comment text fragments on that line (block comments
+    // contribute one fragment per spanned line)
+    let mut comment_lines: BTreeMap<usize, Vec<&str>> = BTreeMap::new();
+    for (line, text) in &f.lexed.comments {
+        for (off, part) in text.split('\n').enumerate() {
+            comment_lines.entry(line + off).or_default().push(part);
+        }
+    }
+    for p in find_words(&f.lexed.code, b"unsafe") {
+        let ln = f.line_at(p);
+        let mut ok = false;
+        let mut k = ln.saturating_sub(1);
+        while k >= 1 {
+            match comment_lines.get(&k) {
+                Some(parts) => {
+                    if parts.iter().any(|t| t.contains("SAFETY:")) {
+                        ok = true;
+                        break;
+                    }
+                    k -= 1;
+                }
+                None => break,
+            }
+        }
+        if !ok {
+            emit(
+                out,
+                f,
+                "unsafe-hygiene",
+                p,
+                "`unsafe` without an immediately preceding \
+                 `// SAFETY:` comment"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context {
+            api_md: "fields: `id`, `step`, `tokens`.".to_string(),
+            keys_src: r#"
+pub const SNAPSHOT_KEYS: &[&str] = &["requests_completed", "steps_saved"];
+pub const SNAPSHOT_PREFIXES: &[&str] = &["halted_by_"];
+pub const BENCH_KEYS: &[&str] = &["req_per_s"];
+"#
+            .to_string(),
+            bench_schema: None,
+        }
+    }
+
+    fn run_one(rel: &str, src: &str) -> Vec<Violation> {
+        let files = vec![SourceFile::parse(rel, src)];
+        run_all(&files, &ctx())
+    }
+
+    fn checks(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.check).collect()
+    }
+
+    // -- panic-freedom / lock-poison ---------------------------------
+
+    #[test]
+    fn panic_freedom_flags_serving_path() {
+        let v = run_one(
+            "coordinator/x.rs",
+            "fn f() { y.unwrap(); z.expect(\"m\"); unreachable!(); }\n",
+        );
+        assert_eq!(
+            checks(&v),
+            ["panic-freedom", "panic-freedom", "panic-freedom"]
+        );
+    }
+
+    #[test]
+    fn panic_freedom_clean_and_out_of_scope() {
+        // clean serving file
+        assert!(run_one("coordinator/x.rs", "fn f() -> u8 { 0 }\n")
+            .is_empty());
+        // the same panics outside the serving path are not flagged
+        assert!(run_one("eval/x.rs", "fn f() { y.unwrap(); }\n").is_empty());
+        // test code is exempt
+        let v = run_one(
+            "coordinator/x.rs",
+            "#[cfg(test)]\nmod t {\n fn f() { y.unwrap(); }\n}\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn panic_freedom_suppressed_by_allow() {
+        let v = run_one(
+            "coordinator/x.rs",
+            "fn f() {\n  // lint:allow(panic-freedom): infallible here\n  \
+             y.unwrap();\n}\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn lock_unwrap_is_the_poison_check_not_panic_freedom() {
+        let v = run_one(
+            "coordinator/x.rs",
+            "fn f() { m.lock().unwrap().push(1); }\n",
+        );
+        assert_eq!(checks(&v), ["lock-poison"]);
+        // strings mentioning unwrap are not calls
+        let v = run_one(
+            "coordinator/x.rs",
+            "fn f() { log(\"never .unwrap() here\"); }\n",
+        );
+        assert!(v.is_empty());
+    }
+
+    // -- family-seal -------------------------------------------------
+
+    #[test]
+    fn family_seal_flags_once_per_match() {
+        let src = "fn f(fam: Family) -> u8 {\n  match fam {\n    \
+                   Family::Ddlm => 1,\n    Family::Ssd | Family::Plaid => 2,\n  \
+                   }\n}\n";
+        let v = run_one("exp/x.rs", src);
+        assert_eq!(checks(&v), ["family-seal"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn family_seal_exempts_the_seam_and_allows() {
+        let src =
+            "fn f(fam: Family) -> u8 { match fam { Family::Ddlm => 1, _ => 2 } }\n";
+        assert!(run_one("sampler/kernel.rs", src).is_empty());
+        assert_eq!(checks(&run_one("exp/x.rs", src)), ["family-seal"]);
+        let suppressed = "fn f(fam: Family) -> u8 {\n  \
+             // lint:allow(family-seal): table display only\n  \
+             match fam { Family::Ddlm => 1, _ => 2 }\n}\n";
+        assert!(run_one("exp/x.rs", suppressed).is_empty());
+    }
+
+    #[test]
+    fn family_seal_blames_the_inner_match_only() {
+        let src = "fn f(t: Target) -> u8 {\n  match t {\n    \
+                   Target::Ar => 0,\n    Target::Dlm(fam) => match fam {\n      \
+                   Family::Ddlm => 1,\n      _ => 2,\n    },\n  }\n}\n";
+        let v = run_one("train/x.rs", src);
+        assert_eq!(checks(&v), ["family-seal"]);
+        assert_eq!(v[0].line, 4, "{v:?}");
+    }
+
+    // -- metrics-registry --------------------------------------------
+
+    #[test]
+    fn metrics_registry_flags_undeclared_keys() {
+        let src = "fn f(m: &mut M) {\n  m.insert(\"requests_completed\", 1);\n  \
+                   m.insert(\"mystery_key\", 2);\n  \
+                   let k = format!(\"halted_by_{r}\");\n  \
+                   let b = format!(\"bad_prefix_{r}\");\n}\n";
+        let v = run_one("coordinator/engine.rs", src);
+        assert_eq!(checks(&v), ["metrics-registry", "metrics-registry"]);
+        assert!(v[0].msg.contains("mystery_key"));
+        assert!(v[1].msg.contains("bad_prefix_"));
+    }
+
+    #[test]
+    fn metrics_registry_ignores_non_emitter_files() {
+        let src = "fn f(m: &mut M) { m.insert(\"mystery_key\", 2); }\n";
+        assert!(run_one("coordinator/progress.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bench_schema_must_be_declared() {
+        let mut c = ctx();
+        c.bench_schema = Some("req_per_s\nsteps_saved\nrogue_key\n".into());
+        let files =
+            vec![SourceFile::parse("coordinator/engine.rs", "fn f() {}\n")];
+        let v = run_all(&files, &c);
+        assert_eq!(checks(&v), ["metrics-registry"]);
+        assert!(v[0].msg.contains("rogue_key"));
+        assert_eq!(v[0].line, 3);
+    }
+
+    // -- wire-doc-drift ----------------------------------------------
+
+    #[test]
+    fn wire_doc_drift_flags_undocumented_fields() {
+        let src = "fn f(m: &mut M, j: &J) {\n  m.insert(\"id\", 1);\n  \
+                   m.insert(\"undocumented_field\", 2);\n  \
+                   let _ = j.get(\"step\");\n}\n";
+        let v = run_one("coordinator/envelope.rs", src);
+        assert_eq!(checks(&v), ["wire-doc-drift"]);
+        assert!(v[0].msg.contains("undocumented_field"));
+    }
+
+    #[test]
+    fn wire_doc_drift_clean_when_documented() {
+        let src = "fn f(m: &mut M) { m.insert(\"tokens\", 1); }\n";
+        assert!(run_one("coordinator/envelope.rs", src).is_empty());
+    }
+
+    // -- unsafe-hygiene ----------------------------------------------
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let v = run_one(
+            "runtime/x.rs",
+            "fn f() { unsafe { g() } }\n",
+        );
+        assert_eq!(checks(&v), ["unsafe-hygiene"]);
+        let clean = "fn f() {\n  // SAFETY: g has no preconditions\n  \
+                     unsafe { g() }\n}\n";
+        assert!(run_one("runtime/x.rs", clean).is_empty());
+        // the comment may sit atop a contiguous comment block
+        let stacked = "fn f() {\n  // SAFETY: g has no preconditions\n  \
+                       // (and never will)\n  unsafe { g() }\n}\n";
+        assert!(run_one("runtime/x.rs", stacked).is_empty());
+        // lowercase "Safety:" is not the marker
+        let lower = "fn f() {\n  // Safety: close enough?\n  \
+                     unsafe { g() }\n}\n";
+        assert_eq!(checks(&run_one("runtime/x.rs", lower)), ["unsafe-hygiene"]);
+    }
+
+    #[test]
+    fn unsafe_suppressed_by_allow() {
+        let src = "fn f() {\n  // lint:allow(unsafe-hygiene): documented at \
+                   the module head\n  unsafe { g() }\n}\n";
+        assert!(run_one("runtime/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,245 @@
+//! Hand-rolled Rust source lexer for the lint engine.
+//!
+//! The engine needs just enough lexical structure to scan safely: where
+//! comments are (for `lint:allow` / `SAFETY:` tracking), and which
+//! bytes are string/char literal bodies (so `".unwrap()"` inside a log
+//! message never counts as a call).  [`lex`] produces two blanked views
+//! of the source plus the comment list:
+//!
+//! * [`Lexed::code`] — comments AND string/char bodies replaced by
+//!   spaces (newlines kept, so offsets and line numbers are preserved
+//!   byte-for-byte).  Checks that look for *calls* scan this view.
+//! * [`Lexed::text`] — only comments blanked; string bodies kept.
+//!   Checks that look for *string keys* (metrics, wire fields) scan
+//!   this one.
+//!
+//! Handles line + nested block comments, plain strings with escapes,
+//! raw strings (`r"…"`, `r#"…"#`, …), char literals (including
+//! escapes), and the char-vs-lifetime ambiguity (`'a` in `&'a T`).
+//! Blanking is per byte, so multi-byte UTF-8 inside a blanked region
+//! collapses to ASCII spaces and every offset outside it is unchanged.
+
+/// Lexed views of one source file.  All offsets are byte offsets into
+/// the original source; both views have exactly its length.
+pub struct Lexed {
+    /// comments and string/char literal bodies blanked
+    pub code: Vec<u8>,
+    /// only comments blanked
+    pub text: Vec<u8>,
+    /// every comment: (1-based line of its first byte, raw text
+    /// including the `//` / `/*` introducer)
+    pub comments: Vec<(usize, String)>,
+}
+
+/// Byte offset of each line start; `line_of` bisects this.
+pub fn line_starts(src: &[u8]) -> Vec<usize> {
+    let mut starts = vec![0];
+    for (i, &b) in src.iter().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// 1-based line containing byte offset `pos`.
+pub fn line_of(starts: &[usize], pos: usize) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+fn blank(buf: &mut [u8], from: usize, to: usize) {
+    for b in buf[from..to.min(buf.len())].iter_mut() {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let s = src.as_bytes();
+    let n = s.len();
+    let starts = line_starts(s);
+    let mut code = s.to_vec();
+    let mut text = s.to_vec();
+    let mut comments = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = s[i];
+        // line comment
+        if c == b'/' && i + 1 < n && s[i + 1] == b'/' {
+            let j = src[i..].find('\n').map(|k| i + k).unwrap_or(n);
+            comments.push((
+                line_of(&starts, i),
+                String::from_utf8_lossy(&s[i..j]).into_owned(),
+            ));
+            blank(&mut code, i, j);
+            blank(&mut text, i, j);
+            i = j;
+            continue;
+        }
+        // block comment (nests)
+        if c == b'/' && i + 1 < n && s[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == b'/' && j + 1 < n && s[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == b'*' && j + 1 < n && s[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push((
+                line_of(&starts, start),
+                String::from_utf8_lossy(&s[start..j]).into_owned(),
+            ));
+            blank(&mut code, start, j);
+            blank(&mut text, start, j);
+            i = j;
+            continue;
+        }
+        // raw string r"…" / r#"…"# / r##"…"## …
+        if c == b'r' {
+            let mut h = i + 1;
+            while h < n && s[h] == b'#' {
+                h += 1;
+            }
+            if h < n && s[h] == b'"' {
+                let hashes = h - (i + 1);
+                let mut close = vec![b'"'];
+                close.extend(std::iter::repeat(b'#').take(hashes));
+                let body = h + 1;
+                let j = find_bytes(s, &close, body)
+                    .map(|k| k + close.len())
+                    .unwrap_or(n);
+                blank(&mut code, i, j);
+                i = j;
+                continue;
+            }
+        }
+        // plain string
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == b'\\' {
+                    j += 2;
+                } else if s[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            // blank the body only; keep the delimiting quotes so the
+            // `text` view's key patterns still see `"key"`
+            blank(&mut code, i + 1, j.saturating_sub(1));
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < n && s[i + 1] == b'\\' {
+                let j = src[i + 2..]
+                    .find('\'')
+                    .map(|k| i + 2 + k + 1)
+                    .unwrap_or(n);
+                blank(&mut code, i + 1, j.saturating_sub(1));
+                i = j;
+                continue;
+            }
+            if i + 2 < n && s[i + 2] == b'\'' {
+                code[i + 1] = b' ';
+                i += 3;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    Lexed { code, text, comments }
+}
+
+/// First occurrence of `needle` in `hay[from..]`, as an offset into
+/// `hay`.
+pub fn find_bytes(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|k| from + k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_str(src: &str) -> String {
+        String::from_utf8(lex(src).code).expect("blanking keeps UTF-8")
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked_in_code() {
+        let src = "let x = \"a.unwrap()\"; // b.unwrap()\nx.unwrap();";
+        let code = code_str(src);
+        assert!(!code[..src.rfind('\n').unwrap()].contains(".unwrap()"));
+        assert!(code.ends_with("x.unwrap();"));
+        assert_eq!(code.len(), src.len());
+    }
+
+    #[test]
+    fn text_view_keeps_string_bodies() {
+        let src = "m.insert(\"lock_poisoned\", v); // \"not_a_key\"";
+        let l = lex(src);
+        let text = String::from_utf8(l.text).unwrap();
+        assert!(text.contains("\"lock_poisoned\""));
+        assert!(!text.contains("not_a_key"));
+    }
+
+    #[test]
+    fn raw_strings_and_nested_block_comments() {
+        let src = "let p = r#\"x.unwrap()\"#; /* a /* b.unwrap() */ c */";
+        let code = code_str(src);
+        assert!(!code.contains(".unwrap()"));
+        let l = lex(src);
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].1.contains("b.unwrap()"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        assert_eq!(code_str(src), src);
+    }
+
+    #[test]
+    fn char_escapes_are_blanked() {
+        let src = "let c = '\\n'; let d = 'x'; y.unwrap();";
+        let code = code_str(src);
+        assert!(code.ends_with("y.unwrap();"));
+        assert_eq!(code.len(), src.len());
+    }
+
+    #[test]
+    fn comment_lines_survive_multibyte_text() {
+        // a multi-byte char in a string must not shift comment lines
+        let src = "let s = \"Δ%\";\nlet t = 1;\n// marker\n";
+        let l = lex(src);
+        assert_eq!(l.comments, vec![(3, "// marker".to_string())]);
+    }
+
+    #[test]
+    fn line_of_bisects() {
+        let s = b"a\nbb\nccc\n";
+        let starts = line_starts(s);
+        assert_eq!(line_of(&starts, 0), 1);
+        assert_eq!(line_of(&starts, 2), 2);
+        assert_eq!(line_of(&starts, 5), 3);
+    }
+}

@@ -1,0 +1,80 @@
+//! `repro analyze` — a zero-dependency architectural lint for the
+//! serving stack.
+//!
+//! Eight PRs of concurrency growth left the invariants that make early
+//! halting correct under load — typed errors only on the wire, zero
+//! match-on-family outside the kernel seam, declared metrics lanes,
+//! documented frame fields, commented `unsafe` — living in ROADMAP
+//! prose.  This module turns them into a CI gate: a hand-rolled lexer
+//! ([`lexer`]) blanks comments and string bodies so pattern scans
+//! ([`scan`]) can't be fooled by literals, per-file suppression state
+//! ([`source`]) tracks `#[cfg(test)]` items and
+//! `// lint:allow(<check>): <reason>` annotations, and the check
+//! catalogue ([`checks`]) walks the lexed tree.  Results aggregate
+//! into a [`report::Report`] with a text listing and a JSON summary.
+//!
+//! Everything is pure std (no `syn`, no regex): the analyzer must run
+//! in the offline image, and must never grow a dependency surface the
+//! code it audits doesn't have.  It reads the tree as *source* — it
+//! textually parses `coordinator/metrics/keys.rs` rather than linking
+//! it — so it can lint any checkout, not just the crate it ships in.
+//!
+//! Scope: every `.rs` under `rust/src` except `analysis/` itself (the
+//! engine audits the serving stack, not its own pattern tables; its
+//! own correctness is covered by the per-check fixture tests).
+
+pub mod checks;
+pub mod lexer;
+pub mod report;
+pub mod scan;
+pub mod source;
+
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+pub use checks::Context;
+pub use report::{Report, Violation};
+
+/// Analyze the repo rooted at `root` (the directory holding
+/// `Cargo.toml`, `API.md` and `rust/src`).
+pub fn analyze_tree(root: &Path) -> Result<Report> {
+    let files = source::load_tree(root)?;
+    let api_path = root.join("API.md");
+    let api_md = std::fs::read_to_string(&api_path)
+        .with_context(|| format!("read {api_path:?}"))?;
+    let keys_path =
+        root.join("rust/src/coordinator/metrics/keys.rs");
+    let keys_src = std::fs::read_to_string(&keys_path)
+        .with_context(|| format!("read {keys_path:?}"))?;
+    let bench_schema =
+        std::fs::read_to_string(root.join("scripts/bench_schema.txt")).ok();
+    let ctx = Context { api_md, keys_src, bench_schema };
+    let violations = checks::run_all(&files, &ctx);
+    let allow_annotations = files.iter().map(|f| f.allow_count).sum();
+    Ok(Report {
+        violations,
+        allow_annotations,
+        files_scanned: files.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The gate the CI stage enforces, run in-process: the shipped
+    /// tree must analyze clean (every violation either fixed or
+    /// carrying a justified `lint:allow`).
+    #[test]
+    fn shipped_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = analyze_tree(root).expect("analyzer runs");
+        assert!(
+            report.violations.is_empty(),
+            "unannotated violations:\n{}",
+            report.render_text()
+        );
+        assert!(report.files_scanned > 20, "tree walk looks truncated");
+    }
+}

@@ -1,0 +1,184 @@
+//! Violation records and the machine-readable report.
+//!
+//! `repro analyze --report PATH` writes [`Report::to_json`] so future
+//! PRs can trendline suppression debt (violations by check, by module,
+//! allow-annotation count) alongside `BENCH_serving.json`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// check id, e.g. `panic-freedom`
+    pub check: &'static str,
+    /// path relative to `rust/src` (or `scripts/...` for schema files)
+    pub file: String,
+    /// 1-based line
+    pub line: usize,
+    pub msg: String,
+}
+
+/// The full result of one analyzer run.
+pub struct Report {
+    /// sorted by (check, file, line)
+    pub violations: Vec<Violation>,
+    /// well-formed `lint:allow` annotations across the tree
+    pub allow_annotations: usize,
+    /// `.rs` files scanned
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// `module` for the by-module rollup: the first path component
+    /// (`coordinator/server.rs` -> `coordinator`), or the bare file
+    /// name at the tree root (`main.rs` -> `main.rs`).
+    fn module_of(file: &str) -> &str {
+        file.split_once('/').map(|(m, _)| m).unwrap_or(file)
+    }
+
+    pub fn by_check(&self) -> BTreeMap<&'static str, usize> {
+        let mut out = BTreeMap::new();
+        for v in &self.violations {
+            *out.entry(v.check).or_insert(0) += 1;
+        }
+        out
+    }
+
+    pub fn by_module(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for v in &self.violations {
+            *out.entry(Self::module_of(&v.file).to_string()).or_insert(0) +=
+                1;
+        }
+        out
+    }
+
+    /// Human-readable listing, one violation per line, plus a summary
+    /// tail.  Empty-violation runs produce just the summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!(
+                "{:<17} {}:{}  {}\n",
+                v.check, v.file, v.line, v.msg
+            ));
+        }
+        out.push_str(&format!(
+            "analyze: {} violation(s), {} allow annotation(s), \
+             {} file(s) scanned\n",
+            self.violations.len(),
+            self.allow_annotations,
+            self.files_scanned,
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let violations = self
+            .violations
+            .iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("check", Json::str(v.check)),
+                    ("file", Json::str(v.file.clone())),
+                    ("line", Json::uint(v.line as u64)),
+                    ("msg", Json::str(v.msg.clone())),
+                ])
+            })
+            .collect();
+        let by_check = self
+            .by_check()
+            .into_iter()
+            .map(|(k, n)| (k, Json::uint(n as u64)))
+            .collect::<Vec<_>>();
+        let by_module = self
+            .by_module()
+            .into_iter()
+            .map(|(k, n)| (k, Json::uint(n as u64)))
+            .collect::<Vec<_>>();
+        let mut m = Json::obj(vec![
+            ("violations", Json::Arr(violations)),
+            (
+                "allow_annotations",
+                Json::uint(self.allow_annotations as u64),
+            ),
+            ("files_scanned", Json::uint(self.files_scanned as u64)),
+        ])
+        .into_obj();
+        m.insert(
+            "by_check".to_string(),
+            Json::Obj(
+                by_check
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "by_module".to_string(),
+            Json::Obj(by_module.into_iter().collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            violations: vec![
+                Violation {
+                    check: "panic-freedom",
+                    file: "coordinator/server.rs".into(),
+                    line: 10,
+                    msg: "x".into(),
+                },
+                Violation {
+                    check: "panic-freedom",
+                    file: "coordinator/worker.rs".into(),
+                    line: 3,
+                    msg: "y".into(),
+                },
+                Violation {
+                    check: "unsafe-hygiene",
+                    file: "runtime/tensor.rs".into(),
+                    line: 5,
+                    msg: "z".into(),
+                },
+            ],
+            allow_annotations: 4,
+            files_scanned: 7,
+        }
+    }
+
+    #[test]
+    fn rollups_count_by_check_and_module() {
+        let r = sample();
+        assert_eq!(r.by_check().get("panic-freedom"), Some(&2));
+        assert_eq!(r.by_check().get("unsafe-hygiene"), Some(&1));
+        assert_eq!(r.by_module().get("coordinator"), Some(&2));
+        assert_eq!(r.by_module().get("runtime"), Some(&1));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let enc = sample().to_json().encode();
+        assert!(enc.contains("\"allow_annotations\":4"));
+        assert!(enc.contains("\"files_scanned\":7"));
+        assert!(enc.contains("\"by_check\""));
+        assert!(enc.contains("\"panic-freedom\":2"));
+        assert!(enc.contains("\"coordinator\":2"));
+    }
+
+    #[test]
+    fn text_render_lists_each_violation() {
+        let txt = sample().render_text();
+        assert_eq!(txt.lines().count(), 4);
+        assert!(txt.contains("coordinator/worker.rs:3"));
+        assert!(txt.contains("3 violation(s)"));
+    }
+}

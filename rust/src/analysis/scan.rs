@@ -1,0 +1,131 @@
+//! Byte-level pattern scanning primitives for the checks.
+//!
+//! The engine is pure std, so instead of a regex crate the checks
+//! compose these little scanners over the lexer's blanked views.  All
+//! positions are byte offsets; all patterns are ASCII.
+
+/// Rust identifier byte (`\w` for our purposes).
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All occurrences of `needle` in `hay`.
+pub fn find_all(hay: &[u8], needle: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = super::lexer::find_bytes(hay, needle, from) {
+        out.push(p);
+        from = p + 1;
+    }
+    out
+}
+
+/// Occurrences of `needle` that stand alone as a word: no identifier
+/// byte immediately before or after.
+pub fn find_words(hay: &[u8], needle: &[u8]) -> Vec<usize> {
+    find_all(hay, needle)
+        .into_iter()
+        .filter(|&p| {
+            (p == 0 || !is_ident(hay[p - 1]))
+                && (p + needle.len() >= hay.len()
+                    || !is_ident(hay[p + needle.len()]))
+        })
+        .collect()
+}
+
+/// First non-whitespace position at or after `i`.
+pub fn skip_ws(hay: &[u8], mut i: usize) -> usize {
+    while i < hay.len() && hay[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// If `hay[i..]` starts with `lit`, the position just past it.
+pub fn eat(hay: &[u8], i: usize, lit: &[u8]) -> Option<usize> {
+    if hay.len() >= i + lit.len() && &hay[i..i + lit.len()] == lit {
+        Some(i + lit.len())
+    } else {
+        None
+    }
+}
+
+/// Parse a `[a-z0-9_]+` run at `i`; returns (key, end) when non-empty.
+pub fn eat_key(hay: &[u8], i: usize) -> Option<(String, usize)> {
+    let mut j = i;
+    while j < hay.len()
+        && (hay[j].is_ascii_lowercase()
+            || hay[j].is_ascii_digit()
+            || hay[j] == b'_')
+    {
+        j += 1;
+    }
+    if j == i {
+        return None;
+    }
+    Some((String::from_utf8_lossy(&hay[i..j]).into_owned(), j))
+}
+
+/// Position just past a `\w+` identifier run at `i`, if non-empty.
+pub fn eat_ident(hay: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    while j < hay.len() && is_ident(hay[j]) {
+        j += 1;
+    }
+    (j > i).then_some(j)
+}
+
+/// Does `hay` contain `word` with non-identifier bytes on both sides?
+/// (`\b<word>\b` — note `word` itself may contain `_`.)
+pub fn contains_word(hay: &[u8], word: &[u8]) -> bool {
+    !find_words(hay, word).is_empty()
+}
+
+/// End of the brace-balanced region opened at `open` (which must index
+/// a `{`); the offset just past the matching `}`, or `hay.len()`.
+pub fn brace_end(hay: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < hay.len() {
+        match hay[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    hay.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries() {
+        let h = b"Family FamilyId Families xFamily";
+        assert_eq!(find_words(h, b"Family"), vec![0]);
+        assert_eq!(find_words(h, b"FamilyId"), vec![7]);
+        assert!(!contains_word(b"Families", b"Family"));
+    }
+
+    #[test]
+    fn key_and_brace_scanning() {
+        let h = b"(\"steps_saved\", v)";
+        let i = skip_ws(h, 1);
+        let i = eat(h, i, b"\"").unwrap();
+        let (k, i) = eat_key(h, i).unwrap();
+        assert_eq!(k, "steps_saved");
+        assert!(eat(h, i, b"\"").is_some());
+
+        let b = b"match x { A => { 1 } B => 2 } tail";
+        let open = 8;
+        assert_eq!(&b[open..open + 1], b"{");
+        assert_eq!(brace_end(b, open), 29);
+    }
+}

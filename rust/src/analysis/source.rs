@@ -1,0 +1,265 @@
+//! Per-file analysis state: the lexed views plus the two suppression
+//! maps every check consults — `#[cfg(test)]` coverage and
+//! `lint:allow` annotations.
+//!
+//! ## Suppression grammar
+//!
+//! * `#[cfg(test)]` — from the attribute, any further attributes are
+//!   skipped, then the following item is brace-matched (or ends at a
+//!   top-level `;`).  Every line the attribute-to-item span covers is
+//!   test code: checks skip matches on those lines.
+//! * `// lint:allow(<check>): <reason>` — suppresses `<check>` on the
+//!   comment's own line and the line below it, so the annotation sits
+//!   directly above (or at the end of) the code it excuses.  The
+//!   reason is mandatory: an allow without one simply does not parse,
+//!   and the violation stays.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::lexer::{lex, line_of, line_starts, Lexed};
+
+/// One analyzed source file.
+pub struct SourceFile {
+    /// path relative to `rust/src`, with `/` separators
+    pub rel: String,
+    pub lexed: Lexed,
+    /// byte offset of each line start
+    pub starts: Vec<usize>,
+    /// 1-based lines covered by `#[cfg(test)]` items
+    pub test_lines: BTreeSet<usize>,
+    /// check name -> 1-based lines where it is suppressed
+    pub allows: BTreeMap<String, BTreeSet<usize>>,
+    /// number of well-formed `lint:allow` annotations in this file
+    pub allow_count: usize,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, src: &str) -> SourceFile {
+        let lexed = lex(src);
+        let starts = line_starts(src.as_bytes());
+        let test_lines = cfg_test_lines(&lexed.code, &starts);
+        let (allows, allow_count) = parse_allows(&lexed.comments);
+        SourceFile {
+            rel: rel.to_string(),
+            lexed,
+            starts,
+            test_lines,
+            allows,
+            allow_count,
+        }
+    }
+
+    /// True when a match at `line` is suppressed for `check`.
+    pub fn suppressed(&self, check: &str, line: usize) -> bool {
+        self.allows.get(check).is_some_and(|s| s.contains(&line))
+    }
+
+    /// 1-based line of byte offset `pos`.
+    pub fn line_at(&self, pos: usize) -> usize {
+        line_of(&self.starts, pos)
+    }
+}
+
+/// Load every `.rs` file under `<root>/rust/src`, excluding the
+/// analyzer's own sources (`analysis/`): the engine lints the serving
+/// stack, not its own pattern tables.
+pub fn load_tree(root: &Path) -> Result<Vec<SourceFile>> {
+    let src_root = root.join("rust").join("src");
+    let mut rels = Vec::new();
+    walk(&src_root, &src_root, &mut rels)
+        .with_context(|| format!("walk {src_root:?}"))?;
+    rels.sort();
+    let mut out = Vec::new();
+    for rel in rels {
+        if rel.starts_with("analysis/") {
+            continue;
+        }
+        let path = src_root.join(&rel);
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?}"))?;
+        out.push(SourceFile::parse(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn walk(base: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(base, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(base) {
+                out.push(
+                    rel.components()
+                        .map(|c| c.as_os_str().to_string_lossy())
+                        .collect::<Vec<_>>()
+                        .join("/"),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Lines covered by `#[cfg(test)]` items (attribute through item end).
+fn cfg_test_lines(code: &[u8], starts: &[usize]) -> BTreeSet<usize> {
+    let mut out = BTreeSet::new();
+    let needle = b"#[cfg(test)]";
+    let mut from = 0;
+    while let Some(a) = super::lexer::find_bytes(code, needle, from) {
+        from = a + needle.len();
+        let n = code.len();
+        let mut j = a + needle.len();
+        // skip whitespace and any further attributes
+        loop {
+            while j < n && code[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < n && code[j] == b'#' {
+                let mut depth = 0usize;
+                while j < n {
+                    match code[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth = depth.saturating_sub(1);
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // brace-match the item, or stop at a top-level `;`
+        let mut depth = 0usize;
+        let mut end = j;
+        while end < n {
+            match code[end] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        end += 1;
+                        break;
+                    }
+                }
+                b';' if depth == 0 => {
+                    end += 1;
+                    break;
+                }
+                _ => {}
+            }
+            end += 1;
+        }
+        let l0 = line_of(starts, a);
+        let l1 = line_of(starts, end.min(n.saturating_sub(1)));
+        out.extend(l0..=l1);
+    }
+    out
+}
+
+/// Parse `lint:allow(<check>): <reason>` annotations out of comments.
+/// Returns the per-check suppressed-line sets and the total count of
+/// well-formed annotations.
+fn parse_allows(
+    comments: &[(usize, String)],
+) -> (BTreeMap<String, BTreeSet<usize>>, usize) {
+    let mut out: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+    let mut count = 0;
+    for (line, text) in comments {
+        if let Some(check) = parse_allow(text) {
+            let set = out.entry(check).or_default();
+            set.insert(*line);
+            set.insert(*line + 1);
+            count += 1;
+        }
+    }
+    (out, count)
+}
+
+/// One annotation per comment; the check name is `[a-z0-9-]+` and a
+/// non-empty reason must follow the colon.
+fn parse_allow(comment: &str) -> Option<String> {
+    let at = comment.find("lint:allow(")?;
+    let rest = &comment[at + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let check = &rest[..close];
+    if check.is_empty()
+        || !check
+            .bytes()
+            .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-')
+    {
+        return None;
+    }
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':')?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    Some(check.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n    fn t() { x.unwrap(); }\n}\n\
+                   fn also_live() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.test_lines.contains(&1));
+        assert!(f.test_lines.contains(&2));
+        assert!(f.test_lines.contains(&4));
+        assert!(f.test_lines.contains(&5));
+        assert!(!f.test_lines.contains(&6));
+    }
+
+    #[test]
+    fn cfg_test_skips_stacked_attributes() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nfn t() {\n}\nfn f() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.test_lines.contains(&4));
+        assert!(!f.test_lines.contains(&5));
+    }
+
+    #[test]
+    fn allow_covers_its_line_and_the_next() {
+        let src = "// lint:allow(panic-freedom): justified here\nx.unwrap();\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.suppressed("panic-freedom", 1));
+        assert!(f.suppressed("panic-freedom", 2));
+        assert!(!f.suppressed("panic-freedom", 3));
+        assert!(!f.suppressed("family-seal", 2));
+        assert_eq!(f.allow_count, 1);
+    }
+
+    #[test]
+    fn malformed_allows_do_not_suppress() {
+        for bad in [
+            "// lint:allow(panic-freedom)",        // no reason
+            "// lint:allow(panic-freedom):",       // empty reason
+            "// lint:allow(Panic): uppercase name",
+            "// lint:allow(): anonymous",
+        ] {
+            let src = format!("{bad}\nx.unwrap();\n");
+            let f = SourceFile::parse("a.rs", &src);
+            assert!(
+                !f.suppressed("panic-freedom", 2),
+                "{bad:?} must not suppress"
+            );
+            assert_eq!(f.allow_count, 0, "{bad:?} must not count");
+        }
+    }
+}

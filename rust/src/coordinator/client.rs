@@ -125,7 +125,7 @@ impl Client {
     pub fn submit(&mut self, req: &GenRequest) -> Result<()> {
         // cheap clone-free framing: reuse the request's JSON and stamp
         // the envelope fields on
-        let Json::Obj(mut m) = req.to_json() else { unreachable!() };
+        let mut m = req.to_json().into_obj();
         m.insert("v".to_string(), Json::uint(1));
         m.insert("type".to_string(), Json::str("submit"));
         self.send_line(&Json::Obj(m).encode())

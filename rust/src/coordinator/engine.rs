@@ -33,6 +33,7 @@ use super::scheduler::{
 use super::worker::{self, WorkerConfig};
 use crate::predictor::{Estimator, PredictorConfig};
 use crate::sampler::FamilyId;
+use crate::util::sync::lock_or_recover;
 use crate::util::json::Json;
 
 /// `--fleet auto` supervisor cadence.
@@ -255,10 +256,10 @@ impl EngineHandle {
     /// per-worker breakdown (with each worker's family) under
     /// `"workers"`.
     pub fn metrics(&self) -> Result<Json> {
-        let mut merged = self.sched.metrics.lock().unwrap().clone();
+        let mut merged = lock_or_recover(&self.sched.metrics).clone();
         let mut per_worker = Vec::new();
         for (i, (family, wm)) in self.worker_metrics.iter().enumerate() {
-            let w = wm.lock().unwrap().clone();
+            let w = lock_or_recover(&wm).clone();
             per_worker.push(Json::obj(vec![
                 ("worker", Json::num(i as f64)),
                 ("family", Json::str(family.name())),
@@ -273,7 +274,7 @@ impl EngineHandle {
             ]));
             merged.merge(&w);
         }
-        let Json::Obj(mut m) = merged.to_json() else { unreachable!() };
+        let mut m = merged.to_json().into_obj();
         m.insert(
             "queue_depth".to_string(),
             Json::num(self.sched.queue_depth() as f64),
@@ -283,6 +284,15 @@ impl EngineHandle {
             Json::num(self.sched.running_count() as f64),
         );
         m.insert("workers".to_string(), Json::Arr(per_worker));
+        // lock-poison recoveries survive as a conditional key, like the
+        // other feature-fired counters: absent until the first recovery
+        let poisoned = crate::util::sync::poisoned_count();
+        if poisoned > 0 {
+            m.insert(
+                "lock_poisoned".to_string(),
+                Json::num(poisoned as f64),
+            );
+        }
         // process-wide artifact cache: mmap'd checkpoint/manifest bytes
         // shared across workers and rebinds.  Always present (even all
         // zero) so operators can watch hit rate and resident bytes.

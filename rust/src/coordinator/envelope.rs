@@ -158,15 +158,11 @@ impl Command {
     pub fn to_json(&self) -> Json {
         let mut m = match self {
             Command::Submit(req) => {
-                let Json::Obj(m) = req.to_json() else { unreachable!() };
+                let m = req.to_json().into_obj();
                 m
             }
             Command::Cancel { id } | Command::Halt { id } => {
-                let Json::Obj(m) =
-                    Json::obj(vec![("id", Json::uint(*id))])
-                else {
-                    unreachable!()
-                };
+                let m = Json::obj(vec![("id", Json::uint(*id))]).into_obj();
                 m
             }
             Command::Metrics => Default::default(),
@@ -187,9 +183,7 @@ impl Command {
                 if let Some(c) = checkpoint {
                     fields.push(("checkpoint", Json::str(c.clone())));
                 }
-                let Json::Obj(m) = Json::obj(fields) else {
-                    unreachable!()
-                };
+                let m = Json::obj(fields).into_obj();
                 m
             }
         };
@@ -287,13 +281,11 @@ impl Event {
                         ),
                     ));
                 }
-                let Json::Obj(m) = Json::obj(fields) else {
-                    unreachable!()
-                };
+                let m = Json::obj(fields).into_obj();
                 ("progress", m)
             }
             Event::Done(resp) => {
-                let Json::Obj(m) = resp.to_json() else { unreachable!() };
+                let m = resp.to_json().into_obj();
                 ("done", m)
             }
             Event::Error { id, code, message } => {
@@ -304,27 +296,23 @@ impl Event {
                 if let Some(msg) = message {
                     fields.push(("message", Json::str(msg.clone())));
                 }
-                let Json::Obj(m) = Json::obj(fields) else { unreachable!() };
+                let m = Json::obj(fields).into_obj();
                 ("error", m)
             }
             Event::CancelAck { id, cancelled, state } => {
-                let Json::Obj(m) = Json::obj(vec![
+                let m = Json::obj(vec![
                     ("id", Json::uint(*id)),
                     ("cancelled", Json::Bool(*cancelled)),
                     ("state", Json::str(state.clone())),
-                ]) else {
-                    unreachable!()
-                };
+                ]).into_obj();
                 ("cancel", m)
             }
             Event::HaltAck { id, found, state } => {
-                let Json::Obj(m) = Json::obj(vec![
+                let m = Json::obj(vec![
                     ("id", Json::uint(*id)),
                     ("found", Json::Bool(*found)),
                     ("state", Json::str(state.clone())),
-                ]) else {
-                    unreachable!()
-                };
+                ]).into_obj();
                 ("halt", m)
             }
             Event::RebindAck {
@@ -355,17 +343,11 @@ impl Event {
                 if let Some(ms) = rebind_ms {
                     fields.push(("rebind_ms", Json::num(*ms)));
                 }
-                let Json::Obj(m) = Json::obj(fields) else {
-                    unreachable!()
-                };
+                let m = Json::obj(fields).into_obj();
                 ("rebind", m)
             }
             Event::Metrics(data) => {
-                let Json::Obj(m) =
-                    Json::obj(vec![("data", data.clone())])
-                else {
-                    unreachable!()
-                };
+                let m = Json::obj(vec![("data", data.clone())]).into_obj();
                 ("metrics", m)
             }
         };

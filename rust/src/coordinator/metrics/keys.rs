@@ -1,0 +1,184 @@
+//! Declared registry of every key the metrics snapshot can emit.
+//!
+//! The snapshot is assembled in three places — [`super::Metrics::to_json`]
+//! (counters, histograms, per-family lanes), `engine::EngineHandle::metrics`
+//! (fleet gauges, cache counters, the per-worker breakdown) and
+//! `predictor::Estimator::snapshot_json` (per-family estimator state).
+//! Every string key those sites construct MUST be declared here, either
+//! verbatim in [`SNAPSHOT_KEYS`] or by one of the dynamic-lane prefixes
+//! in [`SNAPSHOT_PREFIXES`] (`latency_p50_ms_<fam>`, `halted_by_<reason>`,
+//! ...).  `repro analyze` (the `metrics-registry` check) walks those
+//! three files and fails on any emission this registry does not cover,
+//! and `scripts/bench_schema.txt` must stay a subset of the declared
+//! surface — so a key can no longer slip into the wire snapshot (or the
+//! bench schema) without being registered, reviewed and documented.
+
+/// Fixed snapshot keys, in emission-site order: the `Metrics::to_json`
+/// base object, its conditional (feature-fired) keys, the engine's
+/// fleet-level gauges and nested objects, and the estimator snapshot's
+/// per-family fields.
+pub const SNAPSHOT_KEYS: &[&str] = &[
+    // Metrics::to_json base object
+    "requests_submitted",
+    "requests_completed",
+    "halted_early",
+    "steps_executed",
+    "steps_saved",
+    "step_saving_ratio",
+    "device_calls",
+    "rejected_overloaded",
+    "rejected_invalid",
+    "cancelled",
+    "deadline_exceeded",
+    "rejected_infeasible",
+    "predictions_made",
+    "slots_total",
+    "slots_busy",
+    "steps_in_flight",
+    "latency_mean_ms",
+    "latency_p50_ms",
+    "latency_p95_ms",
+    "queue_mean_ms",
+    "queue_p95_ms",
+    "throughput_rps",
+    // conditional (absent until the feature fires)
+    "progress_dropped",
+    "rebinds",
+    "rebind_requests_drained",
+    "slots_migrated",
+    "migration_reclaimed_slot_steps",
+    "prediction_mae_steps",
+    "tokens_frozen",
+    "token_steps_saved",
+    "frozen_step_fraction",
+    "lock_poisoned",
+    // engine fleet gauges + per-worker breakdown + nested objects
+    "worker",
+    "family",
+    "queue_depth",
+    "running_requests",
+    "workers",
+    "artifact_cache_hits",
+    "artifact_cache_misses",
+    "artifact_cache_evictions",
+    "artifact_cache_bytes",
+    "t_max",
+    "t_min",
+    "families",
+    "predictor",
+    // estimator snapshot per-family fields
+    "observations",
+    "buckets",
+    "slope_buckets",
+    "ema_total_steps",
+    "step_latency_ms",
+];
+
+/// Dynamic-lane prefixes: keys suffixed by a family name, priority
+/// class or halt reason.  An emitted `format!("<prefix>{suffix}")` key
+/// is declared iff its literal prefix is listed here.
+pub const SNAPSHOT_PREFIXES: &[&str] = &[
+    "latency_p50_ms_",
+    "latency_p95_ms_",
+    "halted_by_",
+    "requests_completed_",
+    "halted_early_",
+    "steps_executed_",
+    "steps_saved_",
+    "prediction_mae_steps_",
+    "tokens_frozen_",
+    "token_steps_saved_",
+    "frozen_step_fraction_",
+];
+
+/// Keys `scripts/bench_schema.txt` may use that are bench-harness
+/// outputs rather than snapshot fields (`BENCH_serving.json` rows).
+/// Schema keys must come from here, [`SNAPSHOT_KEYS`] or a
+/// [`SNAPSHOT_PREFIXES`] match.
+pub const BENCH_KEYS: &[&str] = &[
+    "bench",
+    "criterion",
+    "req_per_s",
+    "steps_per_s",
+    "host_bytes_per_step",
+    "stream_overhead_pct",
+    "elastic",
+    "rebind_ms",
+    "requests_dropped",
+    "goodput_before",
+    "goodput_during",
+    "goodput_after",
+    "reclaimed_slot_steps",
+];
+
+/// True when `key` is a declared snapshot key (verbatim or via a
+/// dynamic-lane prefix).
+pub fn is_declared(key: &str) -> bool {
+    SNAPSHOT_KEYS.contains(&key)
+        || SNAPSHOT_PREFIXES.iter().any(|p| key.starts_with(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_no_duplicates() {
+        for (i, k) in SNAPSHOT_KEYS.iter().enumerate() {
+            assert!(
+                !SNAPSHOT_KEYS[i + 1..].contains(k),
+                "duplicate snapshot key {k:?}"
+            );
+        }
+        for (i, p) in SNAPSHOT_PREFIXES.iter().enumerate() {
+            assert!(
+                !SNAPSHOT_PREFIXES[i + 1..].contains(p),
+                "duplicate prefix {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn prefixes_end_with_a_separator() {
+        for p in SNAPSHOT_PREFIXES {
+            assert!(p.ends_with('_'), "prefix {p:?} must end with '_'");
+        }
+    }
+
+    /// The bench schema is a declared subset: every key the bench
+    /// validator greps for must be registered here (the same rule
+    /// `repro analyze` enforces statically).
+    #[test]
+    fn bench_schema_is_a_subset_of_the_registry() {
+        let path = format!(
+            "{}/scripts/bench_schema.txt",
+            env!("CARGO_MANIFEST_DIR")
+        );
+        let schema = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {path}: {e}"));
+        for key in schema
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        {
+            assert!(
+                BENCH_KEYS.contains(&key) || is_declared(key),
+                "bench_schema.txt key {key:?} is not declared in \
+                 metrics::keys"
+            );
+        }
+    }
+
+    #[test]
+    fn emitted_base_keys_are_declared() {
+        // spot-check the always-present base object against the registry
+        let m = super::super::Metrics::default();
+        if let crate::util::json::Json::Obj(obj) = m.to_json() {
+            for k in obj.keys() {
+                assert!(is_declared(k), "emitted key {k:?} undeclared");
+            }
+        } else {
+            panic!("snapshot must be an object");
+        }
+    }
+}

@@ -17,6 +17,8 @@
 //! counters per model family (`requests_completed_<fam>`,
 //! `latency_p50_ms_<fam>`, `halted_by_<reason>_<fam>`, ...).
 
+pub mod keys;
+
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -481,7 +483,7 @@ impl Metrics {
             ("queue_p95_ms", Json::num(self.queue_ms.quantile(0.95))),
             ("throughput_rps", Json::num(self.throughput_rps())),
         ]);
-        let Json::Obj(mut m) = base else { unreachable!() };
+        let mut m = base.into_obj();
         // elastic-fleet counters ride only once the feature fired, so
         // pre-elastic snapshots keep their exact key set
         if self.progress_dropped > 0 {

@@ -19,6 +19,8 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::sync::{lock_or_recover, wait_or_recover};
+
 /// Default per-subscriber buffer, in frames.  Progress cadence is
 /// client-chosen (`progress_every`), so the window is sized in frames
 /// rather than bytes: 64 frames of headroom absorbs a reader stalled
@@ -79,7 +81,7 @@ impl<T> Sender<T> {
     /// to evict (0 on the uncongested path) or [`Disconnected`] once
     /// the receiver is gone — the caller's cue to drop the subscriber.
     pub fn send(&self, v: T) -> Result<u64, Disconnected> {
-        let mut g = self.0.inner.lock().unwrap();
+        let mut g = lock_or_recover(&self.0.inner);
         if !g.rx_alive {
             return Err(Disconnected);
         }
@@ -98,7 +100,7 @@ impl<T> Sender<T> {
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
-        self.0.inner.lock().unwrap().tx_count += 1;
+        lock_or_recover(&self.0.inner).tx_count += 1;
         Sender(self.0.clone())
     }
 }
@@ -106,7 +108,7 @@ impl<T> Clone for Sender<T> {
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
         let senders = {
-            let mut g = self.0.inner.lock().unwrap();
+            let mut g = lock_or_recover(&self.0.inner);
             g.tx_count -= 1;
             g.tx_count
         };
@@ -121,7 +123,7 @@ impl<T> Receiver<T> {
     /// Block for the next frame; `Err(Disconnected)` means every
     /// sender is gone and the buffer is drained (end of stream).
     pub fn recv(&self) -> Result<T, Disconnected> {
-        let mut g = self.0.inner.lock().unwrap();
+        let mut g = lock_or_recover(&self.0.inner);
         loop {
             if let Some(v) = g.buf.pop_front() {
                 return Ok(v);
@@ -129,25 +131,25 @@ impl<T> Receiver<T> {
             if g.tx_count == 0 {
                 return Err(Disconnected);
             }
-            g = self.0.avail.wait(g).unwrap();
+            g = wait_or_recover(&self.0.avail, g);
         }
     }
 
     /// Non-blocking receive: `None` when no frame is buffered (whether
     /// or not senders remain).
     pub fn try_recv(&self) -> Option<T> {
-        self.0.inner.lock().unwrap().buf.pop_front()
+        lock_or_recover(&self.0.inner).buf.pop_front()
     }
 
     /// Total frames evicted by drop-oldest since the channel opened.
     pub fn dropped(&self) -> u64 {
-        self.0.inner.lock().unwrap().dropped
+        lock_or_recover(&self.0.inner).dropped
     }
 }
 
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
-        let mut g = self.0.inner.lock().unwrap();
+        let mut g = lock_or_recover(&self.0.inner);
         g.rx_alive = false;
         // frames nobody will read: surface them in the drop count so
         // accounting stays truthful even for abandoned subscribers

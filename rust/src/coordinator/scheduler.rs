@@ -70,6 +70,7 @@ use std::time::{Duration, Instant};
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority, ProgressEvent};
 use crate::halting::BoxedPolicy;
+use crate::util::sync::{lock_or_recover, wait_or_recover};
 use crate::predictor::{
     check_feasibility, Estimator, Feasibility, PackingMode, N_BUCKETS,
     N_SLOPE_BUCKETS,
@@ -412,7 +413,8 @@ fn drain_family_if_dead(st: &mut State, fam: FamilyId) -> Vec<QueuedReq> {
         let mut k = 0;
         while k < q.len() {
             if q[k].family == fam {
-                drained.push(q.remove(k).unwrap());
+                // remove(k) is Some: k < q.len() by the loop guard
+                drained.extend(q.remove(k));
             } else {
                 k += 1;
             }
@@ -580,7 +582,7 @@ impl Scheduler {
 
     /// `worker`'s current family binding (rebinds re-point it live).
     pub fn family_of_worker(&self, worker: usize) -> FamilyId {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         self.family_in(&st, worker)
     }
 
@@ -613,11 +615,11 @@ impl Scheduler {
         reply: ReplyTx,
         progress: Option<ProgressTx>,
     ) -> Result<(), ServeError> {
-        self.metrics.lock().unwrap().requests_submitted += 1;
+        lock_or_recover(&self.metrics).requests_submitted += 1;
         // wire-level validation first: an overlong prefix can never be
         // served (a worker's `reset_slot` would reject it anyway)
         if self.max_prefix.is_some_and(|max| req.prefix.len() > max) {
-            self.metrics.lock().unwrap().rejected_invalid += 1;
+            lock_or_recover(&self.metrics).rejected_invalid += 1;
             return Err(ServeError::InvalidRequest);
         }
         let family = req.family.unwrap_or(self.default_family);
@@ -644,7 +646,7 @@ impl Scheduler {
                 let infeasible = p.admission
                     && req.deadline_ms.is_some_and(|d| {
                         let ahead = {
-                            let st = self.state.lock().unwrap();
+                            let st = lock_or_recover(&self.state);
                             tab_get(
                                 &st.queued_steps_by_family,
                                 family.index(),
@@ -676,7 +678,7 @@ impl Scheduler {
             Reject(ServeError),
         }
         let outcome = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             if st.workers_live == 0 {
                 Admit::Reject(ServeError::Unavailable)
             } else if st.shutdown {
@@ -741,7 +743,7 @@ impl Scheduler {
             Admit::Immediate(req, reply) => {
                 let mut resp = GenResponse::immediate(&req, pre);
                 resp.family = Some(family);
-                self.metrics.lock().unwrap().record_completion(
+                lock_or_recover(&self.metrics).record_completion(
                     &resp,
                     req.priority,
                     family,
@@ -750,7 +752,7 @@ impl Scheduler {
                 Ok(())
             }
             Admit::Reject(e) => {
-                let mut m = self.metrics.lock().unwrap();
+                let mut m = lock_or_recover(&self.metrics);
                 match e {
                     ServeError::Overloaded => m.rejected_overloaded += 1,
                     ServeError::InfeasibleDeadline => {
@@ -779,7 +781,7 @@ impl Scheduler {
         let now = Instant::now();
         let mut expired: Vec<QueuedReq> = Vec::new();
         let picked = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let fam = self.family_in(&st, worker);
             // anti-ping-pong: a migrated slot avoids the worker it just
             // left — but only while another live worker serves the
@@ -797,7 +799,10 @@ impl Scheduler {
                 let mut k = 0;
                 while k < st.queues[pi].len() {
                     if st.queues[pi][k].deadline.is_some_and(|d| now >= d) {
-                        let q = st.queues[pi].remove(k).unwrap();
+                        // remove(k) is Some: k < len by the loop guard
+                        let Some(q) = st.queues[pi].remove(k) else {
+                            break;
+                        };
                         st.queued -= 1;
                         tab_dec(&mut st.queued_by_family, q.family.index());
                         tab_sub(
@@ -833,7 +838,10 @@ impl Scheduler {
                     k += 1;
                 }
                 if let Some((k, _)) = best {
-                    let q = st.queues[pi].remove(k).unwrap();
+                    // remove(k) is Some: `best` indexes a scanned entry
+                    let Some(q) = st.queues[pi].remove(k) else {
+                        break 'scan;
+                    };
                     st.queued -= 1;
                     tab_dec(&mut st.queued_by_family, fam.index());
                     tab_sub(
@@ -849,7 +857,7 @@ impl Scheduler {
             picked
         };
         if !expired.is_empty() {
-            let mut m = self.metrics.lock().unwrap();
+            let mut m = lock_or_recover(&self.metrics);
             m.deadline_exceeded += expired.len() as u64;
             drop(m);
             for q in expired {
@@ -866,13 +874,14 @@ impl Scheduler {
     pub fn reap_expired(&self) {
         let now = Instant::now();
         let expired = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let mut expired = Vec::new();
             for q in st.queues.iter_mut() {
                 let mut k = 0;
                 while k < q.len() {
                     if q[k].deadline.is_some_and(|d| now >= d) {
-                        expired.push(q.remove(k).unwrap());
+                        // remove(k) is Some: k < q.len() by the loop guard
+                        expired.extend(q.remove(k));
                     } else {
                         k += 1;
                     }
@@ -891,7 +900,7 @@ impl Scheduler {
             expired
         };
         if !expired.is_empty() {
-            self.metrics.lock().unwrap().deadline_exceeded +=
+            lock_or_recover(&self.metrics).deadline_exceeded +=
                 expired.len() as u64;
             for q in expired {
                 let _ = q.reply.send(Err(ServeError::DeadlineExceeded));
@@ -903,7 +912,7 @@ impl Scheduler {
     /// here; a running one is flagged for its worker.
     pub fn cancel(&self, id: u64) -> CancelOutcome {
         let (outcome, victim) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let mut victim = None;
             for pi in 0..Priority::COUNT {
                 if let Some(k) =
@@ -931,7 +940,7 @@ impl Scheduler {
             }
         };
         if let Some(q) = victim {
-            self.metrics.lock().unwrap().cancelled += 1;
+            lock_or_recover(&self.metrics).cancelled += 1;
             let _ = q.reply.send(Err(ServeError::Cancelled));
         }
         outcome
@@ -946,7 +955,7 @@ impl Scheduler {
     /// it with the current x0 decode between device steps.
     pub fn halt(&self, id: u64) -> CancelOutcome {
         let (outcome, victim) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let mut victim = None;
             for pi in 0..Priority::COUNT {
                 if let Some(k) =
@@ -980,7 +989,7 @@ impl Scheduler {
             resp.family = Some(q.family);
             resp.queue_ms = q.submitted.elapsed().as_secs_f64() * 1e3;
             resp.latency_ms = resp.queue_ms;
-            self.metrics.lock().unwrap().record_completion(
+            lock_or_recover(&self.metrics).record_completion(
                 &resp,
                 q.req.priority,
                 q.family,
@@ -992,14 +1001,14 @@ impl Scheduler {
 
     /// Worker-side: has this running request been flagged for abort?
     pub fn cancel_requested(&self, id: u64) -> bool {
-        self.state.lock().unwrap().cancel_flags.contains(&id)
+        lock_or_recover(&self.state).cancel_flags.contains(&id)
     }
 
     /// Worker-side: has this running request been flagged for a
     /// graceful client halt?  (An explicit cancel outranks a graceful
     /// halt.)
     pub fn halt_requested(&self, id: u64) -> bool {
-        self.state.lock().unwrap().halt_flags.contains(&id)
+        lock_or_recover(&self.state).halt_flags.contains(&id)
     }
 
     /// Worker-side: both flag checks under ONE lock acquisition — the
@@ -1007,7 +1016,7 @@ impl Scheduler {
     /// halt separately would double the hot loop's traffic on the
     /// state mutex.  Cancel outranks halt.
     pub fn flagged(&self, id: u64) -> Option<Flagged> {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         Self::flagged_in(&st, id)
     }
 
@@ -1034,7 +1043,7 @@ impl Scheduler {
         if ids.is_empty() {
             return;
         }
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         out.extend(ids.iter().map(|&id| Self::flagged_in(&st, id)));
     }
 
@@ -1051,7 +1060,7 @@ impl Scheduler {
     /// Worker-side: a request left the running set (completed, aborted,
     /// halted, or deadline-dropped).
     pub fn finish(&self, id: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         st.running.remove(&id);
         st.cancel_flags.remove(&id);
         st.halt_flags.remove(&id);
@@ -1066,7 +1075,7 @@ impl Scheduler {
     /// on work only another kernel can serve — and it re-reads the
     /// family each pass, because a rebind changes it.
     pub fn wait_for_work(&self, worker: usize) -> IdleWait {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         loop {
             if st
                 .rebind_orders
@@ -1082,13 +1091,13 @@ impl Scheduler {
             if st.shutdown {
                 return IdleWait::Exit;
             }
-            st = self.work_ready.wait(st).unwrap();
+            st = wait_or_recover(&self.work_ready, st);
         }
     }
 
     /// Stop admitting; idle workers wake, drain the queue, and exit.
     pub fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
+        lock_or_recover(&self.state).shutdown = true;
         self.work_ready.notify_all();
     }
 
@@ -1101,7 +1110,7 @@ impl Scheduler {
     /// drain (other families' shards keep serving their own queues).
     pub fn worker_down(&self, worker: usize) {
         let (orphans, aborted_order) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let fam = self.family_in(&st, worker);
             st.workers_live = st.workers_live.saturating_sub(1);
             if let Some(a) = st.worker_alive.get_mut(worker) {
@@ -1137,24 +1146,24 @@ impl Scheduler {
 
     /// Current admission-queue depth (fleet gauge).
     pub fn queue_depth(&self) -> usize {
-        self.state.lock().unwrap().queued
+        lock_or_recover(&self.state).queued
     }
 
     /// Whether `shutdown()` has been called (supervisor exit signal).
     pub fn is_shutdown(&self) -> bool {
-        self.state.lock().unwrap().shutdown
+        lock_or_recover(&self.state).shutdown
     }
 
     /// Requests admitted to a worker and not yet finished (fleet gauge).
     pub fn running_count(&self) -> usize {
-        self.state.lock().unwrap().running.len()
+        lock_or_recover(&self.state).running.len()
     }
 
     /// Predicted steps queued ahead for a family — the backlog the
     /// admission gate prices as expected queue wait.
     pub fn queued_steps_for(&self, family: impl Into<FamilyId>) -> usize {
         let family = family.into();
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         tab_get(&st.queued_steps_by_family, family.index())
     }
 
@@ -1173,7 +1182,7 @@ impl Scheduler {
         order: RebindOrder,
     ) -> Result<(), &'static str> {
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             if worker >= st.worker_family.len() {
                 return Err("unknown_worker");
             }
@@ -1194,9 +1203,7 @@ impl Scheduler {
 
     /// Worker-side: claim this worker's pending rebind order, if any.
     pub fn take_rebind(&self, worker: usize) -> Option<RebindOrder> {
-        self.state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.state)
             .rebind_orders
             .get_mut(worker)
             .and_then(Option::take)
@@ -1205,7 +1212,7 @@ impl Scheduler {
     /// Is a rebind order pending for `worker`?  (Supervisor cooldown
     /// check; the worker itself uses [`Self::take_rebind`].)
     pub fn rebind_pending(&self, worker: usize) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         st.rebind_orders.get(worker).is_some_and(Option::is_some)
     }
 
@@ -1219,7 +1226,7 @@ impl Scheduler {
             return;
         }
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             for q in items.into_iter().rev() {
                 st.running.remove(&q.req.id);
                 let class = q.req.priority.index();
@@ -1248,7 +1255,7 @@ impl Scheduler {
         batch: usize,
     ) {
         let orphans = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             if worker >= st.worker_family.len() {
                 return;
             }
@@ -1279,7 +1286,7 @@ impl Scheduler {
     /// Worker-side: report the resolved compiled batch (at startup and
     /// after every rebind) — the migration policy's shard-size signal.
     pub fn register_worker_batch(&self, worker: usize, batch: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         if let Some(b) = st.worker_batch.get_mut(worker) {
             *b = batch;
         }
@@ -1290,7 +1297,7 @@ impl Scheduler {
     /// long-tail slot could migrate to?  Workers with a rebind in
     /// flight don't count (their binding is about to change).
     pub fn smaller_shard_live(&self, worker: usize, family: FamilyId) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         let my_b = st.worker_batch.get(worker).copied().unwrap_or(0);
         if my_b == 0 {
             return false;
@@ -1310,7 +1317,7 @@ impl Scheduler {
     /// supervisor: every worker's binding and load, plus the queued
     /// backlog per family.
     pub fn fleet_snapshot(&self) -> FleetSnapshot {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         let mut load = vec![0usize; st.worker_family.len()];
         for &w in st.running.values() {
             if let Some(v) = load.get_mut(w) {
@@ -1369,7 +1376,7 @@ impl Scheduler {
         // estimator OUTSIDE it (lock discipline: the estimator's mutex
         // is never nested inside the state mutex)
         let snapshot: Vec<(u64, FamilyId, usize)> = {
-            let st = self.state.lock().unwrap();
+            let st = lock_or_recover(&self.state);
             st.queues
                 .iter()
                 .flat_map(|q| {
@@ -1391,7 +1398,7 @@ impl Scheduler {
             .map(|(id, fam, n)| (id, p.est.predict_total(fam, n).steps))
             .collect();
         let srpt = p.packing == PackingMode::Srpt;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         let State { queues, queued_steps_by_family, .. } = &mut *st;
         for q in queues.iter_mut() {
             let bound = q.len().min(RESORT_BOUND);
@@ -1480,8 +1487,8 @@ mod tests {
         let (tx, rx) = chan();
         assert_eq!(s.submit(req(9, 10), tx), Err(ServeError::Overloaded));
         assert_eq!(s.queue_depth(), 2);
-        assert_eq!(s.metrics.lock().unwrap().rejected_overloaded, 1);
-        assert_eq!(s.metrics.lock().unwrap().requests_submitted, 3);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_overloaded, 1);
+        assert_eq!(lock_or_recover(&s.metrics).requests_submitted, 3);
         // the sync rejection never uses the reply channel
         assert!(rx.try_recv().is_err());
     }
@@ -1500,7 +1507,7 @@ mod tests {
         let (tx2, rx2) = chan();
         assert_eq!(s.submit(low2, tx2), Err(ServeError::Overloaded));
         assert!(rx2.try_recv().is_err());
-        assert_eq!(s.metrics.lock().unwrap().rejected_overloaded, 1);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_overloaded, 1);
         // ...but normal and high traffic still admits
         for (id, prio) in [(3, Priority::Normal), (4, Priority::High)] {
             let mut r = req(id, 10);
@@ -1533,7 +1540,7 @@ mod tests {
         // the immediate path resolves the family too
         assert_eq!(resp.family, Some(Family::Ddlm.into()));
         assert_eq!(s.queue_depth(), 0);
-        let m = s.metrics.lock().unwrap();
+        let m = lock_or_recover(&s.metrics);
         assert_eq!(m.requests_completed, 1);
         assert_eq!(m.steps_saved, 25);
         assert_eq!(m.halted_by.get("fixed"), Some(&1));
@@ -1602,7 +1609,7 @@ mod tests {
         r.family = Some(Family::Plaid.into());
         assert_eq!(s.submit(r, tx), Err(ServeError::InvalidRequest));
         assert!(rx.try_recv().is_err());
-        assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 1);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_invalid, 1);
         // even preflight-resolvable requests don't sneak through
         let (tx2, _rx2) = chan();
         let mut pre = req(2, 10);
@@ -1644,7 +1651,7 @@ mod tests {
         assert_eq!(s.cancel(11), CancelOutcome::Queued);
         assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::Cancelled);
         assert_eq!(s.queue_depth(), 0);
-        assert_eq!(s.metrics.lock().unwrap().cancelled, 1);
+        assert_eq!(lock_or_recover(&s.metrics).cancelled, 1);
         // a second cancel finds nothing
         assert_eq!(s.cancel(11), CancelOutcome::NotFound);
     }
@@ -1676,7 +1683,7 @@ mod tests {
         assert!(s.next_for(0).is_none());
         assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
         assert_eq!(s.queue_depth(), 0);
-        assert_eq!(s.metrics.lock().unwrap().deadline_exceeded, 1);
+        assert_eq!(lock_or_recover(&s.metrics).deadline_exceeded, 1);
     }
 
     #[test]
@@ -1694,7 +1701,7 @@ mod tests {
         assert_eq!(rx.recv().unwrap().unwrap_err(), ServeError::DeadlineExceeded);
         assert_eq!(s.queue_depth(), 1); // the live request survived
         assert!(rx2.try_recv().is_err());
-        assert_eq!(s.metrics.lock().unwrap().deadline_exceeded, 1);
+        assert_eq!(lock_or_recover(&s.metrics).deadline_exceeded, 1);
     }
 
     #[test]
@@ -1768,7 +1775,7 @@ mod tests {
         assert_eq!(s.next_for(0).unwrap().req.id, 5);
         let (tx3, _rx3) = chan();
         assert_eq!(s.submit(req(5, 10), tx3), Err(ServeError::DuplicateId));
-        assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 2);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_invalid, 2);
         // a finished id is reusable
         s.finish(5);
         let (tx4, _rx4) = chan();
@@ -1812,7 +1819,7 @@ mod tests {
         // synchronous typed rejection: no queue slot, no reply traffic
         assert!(rx.try_recv().is_err());
         assert_eq!(s.queue_depth(), 0);
-        assert_eq!(s.metrics.lock().unwrap().rejected_invalid, 1);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_invalid, 1);
         // exactly at the bound is serveable
         let (tx2, _rx2) = chan();
         let mut ok = req(2, 10);
@@ -1833,7 +1840,7 @@ mod tests {
         assert!(!resp.halted_early);
         assert_eq!(resp.halt_reason, None);
         assert_eq!(s.queue_depth(), 0);
-        let m = s.metrics.lock().unwrap();
+        let m = lock_or_recover(&s.metrics);
         assert_eq!(m.requests_completed, 1);
         assert_eq!(m.steps_executed, 0);
         assert_eq!(m.steps_saved, 0);
@@ -1888,7 +1895,7 @@ mod tests {
         assert!(resp.tokens.is_empty());
         assert_eq!(resp.family, Some(Family::Ddlm.into()));
         assert_eq!(s.queue_depth(), 0);
-        let m = s.metrics.lock().unwrap();
+        let m = lock_or_recover(&s.metrics);
         assert_eq!(m.requests_completed, 1);
         assert_eq!(m.steps_saved, 40);
         assert_eq!(m.halted_by.get("client"), Some(&1));
@@ -2009,7 +2016,7 @@ mod tests {
         assert_eq!(s.submit(r, tx), Err(ServeError::InfeasibleDeadline));
         assert!(rx.try_recv().is_err());
         assert_eq!(s.queue_depth(), 0);
-        assert_eq!(s.metrics.lock().unwrap().rejected_infeasible, 1);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_infeasible, 1);
         // a roomy deadline admits, and carries its prediction along
         let (tx2, _rx2) = chan();
         let mut ok = req(2, 600);
@@ -2042,7 +2049,7 @@ mod tests {
         r.deadline_ms = Some(500.0);
         assert_eq!(s.submit(r, tx), Err(ServeError::InfeasibleDeadline));
         assert!(rx.try_recv().is_err());
-        assert_eq!(s.metrics.lock().unwrap().rejected_infeasible, 1);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_infeasible, 1);
         // draining the queue releases its priced backlog...
         while s.next_for(0).is_some() {}
         assert_eq!(s.queued_steps_for(Family::Ddlm), 0);
@@ -2082,7 +2089,7 @@ mod tests {
         let mut r = req(1, 600);
         r.deadline_ms = Some(1.0);
         assert!(s.submit(r, tx).is_ok());
-        assert_eq!(s.metrics.lock().unwrap().rejected_infeasible, 0);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_infeasible, 0);
     }
 
     #[test]
@@ -2165,7 +2172,7 @@ mod tests {
         let (tx2, rx2) = chan();
         assert_eq!(s.submit(req(2, 10), tx2), Err(ServeError::Overloaded));
         assert!(rx2.try_recv().is_err());
-        assert_eq!(s.metrics.lock().unwrap().rejected_overloaded, 1);
+        assert_eq!(lock_or_recover(&s.metrics).rejected_overloaded, 1);
         // ...but ssd admission is untouched by ddlm's burst
         let (tx3, _rx3) = chan();
         let mut r3 = req(3, 10);

@@ -55,6 +55,7 @@ use super::envelope::{self, Command, Event};
 use super::request::GenRequest;
 use super::DEFAULT_PROGRESS_BUFFER;
 use crate::log_info;
+use crate::util::sync::lock_or_recover;
 use crate::util::json::Json;
 
 pub struct Server {
@@ -210,7 +211,7 @@ fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
     // step budgets (each counts toward the `cancelled` metric).  Ids
     // whose reply raced the disconnect are already out of the set, and
     // a cancel of an already-finished id is a typed no-op.
-    let stale: Vec<u64> = inflight.lock().unwrap().drain().collect();
+    let stale: Vec<u64> = lock_or_recover(&inflight).drain().collect();
     for id in stale {
         engine.cancel(id);
     }
@@ -330,7 +331,7 @@ fn handle_frame(
                 super::progress::channel(DEFAULT_PROGRESS_BUFFER);
             // register BEFORE submitting so a disconnect racing the
             // submit still finds the id in the set
-            inflight.lock().unwrap().insert(id);
+            lock_or_recover(&inflight).insert(id);
             let reply_rx = engine
                 .submit_with_progress(*req, wants_progress.then_some(prog_tx));
             let tx = tx.clone();
@@ -354,7 +355,7 @@ fn handle_frame(
                     }
                 }
                 let outcome = reply_rx.recv();
-                inflight.lock().unwrap().remove(&id);
+                lock_or_recover(&inflight).remove(&id);
                 let frame = match outcome {
                     Ok(Ok(resp)) => Event::Done(resp),
                     Ok(Err(serve_err)) => Event::Error {

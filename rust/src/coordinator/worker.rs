@@ -52,6 +52,7 @@ use super::scheduler::{
 };
 use crate::halting::{BoxedPolicy, Decision, NoHalt};
 use crate::log_info;
+use crate::util::sync::lock_or_recover;
 use crate::models::store::ParamStore;
 use crate::predictor::{
     bucket_for, slope_bucket_for, Estimator, N_BUCKETS, N_SLOPE_BUCKETS,
@@ -277,7 +278,7 @@ fn run_worker(
                 }
             };
         sched.register_worker_batch(cfg.id, batch);
-        metrics.lock().unwrap().slots_total = batch as u64;
+        lock_or_recover(&metrics).slots_total = batch as u64;
         if let Some((order, drained, taken)) = order_ctx.take() {
             rollback = None;
             // re-point routing only now that the new session is live:
@@ -292,7 +293,7 @@ fn run_worker(
                 rebind_ms: taken.elapsed().as_secs_f64() * 1e3,
             };
             {
-                let mut wm = metrics.lock().unwrap();
+                let mut wm = lock_or_recover(&metrics);
                 wm.rebinds += 1;
                 wm.rebind_requests_drained += drained as u64;
             }
@@ -361,7 +362,7 @@ fn run_worker(
         }
     }
     let (completed, ratio) = {
-        let wm = metrics.lock().unwrap();
+        let wm = lock_or_recover(&metrics);
         (wm.requests_completed, wm.step_saving_ratio())
     };
     log_info!(
@@ -436,7 +437,7 @@ fn step_loop(
                 // setup: if one of those panics, the catch_unwind
                 // failover still sees this request and answers it with
                 // a typed error instead of dropping its reply channel
-                running[slot] = Some(Running {
+                let r = running[slot].insert(Running {
                     policy: Box::new(NoHalt),
                     started: Instant::now(),
                     bucket_entry: [None; N_BUCKETS],
@@ -448,13 +449,13 @@ fn step_loop(
                     last_prediction: None,
                     q,
                 });
-                let r = running[slot].as_mut().unwrap();
                 if let Some(rs) = resume {
                     let rs = *rs;
                     if let Err(e) = session.import_slot(slot, &rs.export) {
                         // the export doesn't fit this session (shape /
                         // family drift): fail THIS request typed — the
                         // import validated-then-left the slot untouched
+                        // lint:allow(panic-freedom): slot verified occupied by this loop
                         let r = running[slot].take().unwrap();
                         log_info!(
                             "worker {} cannot resume request {}: {e}",
@@ -462,7 +463,7 @@ fn step_loop(
                             r.q.req.id
                         );
                         sched.finish(r.q.req.id);
-                        metrics.lock().unwrap().record_aborted_steps(
+                        lock_or_recover(&metrics).record_aborted_steps(
                             fam,
                             rs.export.step as u64,
                         );
@@ -505,6 +506,7 @@ fn step_loop(
                     // budget the scheduler should have filtered): the
                     // reset validated-then-left the slot untouched, so
                     // just answer and move on
+                    // lint:allow(panic-freedom): slot verified occupied by this loop
                     let r = running[slot].take().unwrap();
                     log_info!(
                         "worker {} rejected request {}: {e}",
@@ -512,7 +514,7 @@ fn step_loop(
                         r.q.req.id
                     );
                     sched.finish(r.q.req.id);
-                    metrics.lock().unwrap().rejected_invalid += 1;
+                    lock_or_recover(&metrics).rejected_invalid += 1;
                     let _ = r.q.reply.send(Err(ServeError::InvalidRequest));
                     continue;
                 }
@@ -556,10 +558,11 @@ fn step_loop(
             match action {
                 None => {}
                 Some(Sweep::Abort(err)) => {
+                    // lint:allow(panic-freedom): slot verified occupied by this loop
                     let r = running[slot].take().unwrap();
                     sched.finish(r.q.req.id);
                     {
-                        let mut wm = metrics.lock().unwrap();
+                        let mut wm = lock_or_recover(&metrics);
                         match err {
                             ServeError::Cancelled => wm.cancelled += 1,
                             _ => wm.deadline_exceeded += 1,
@@ -580,6 +583,7 @@ fn step_loop(
                     // the slot's current x0 decode — the wire-visible
                     // form of the paper's early exit, so it shares the
                     // one completion bookkeeping path
+                    // lint:allow(panic-freedom): slot verified occupied by this loop
                     let r = running[slot].take().unwrap();
                     let steps = session.slots[slot].step;
                     let tokens = session.slot_output(slot);
@@ -631,7 +635,7 @@ fn step_loop(
                     }
                     sched.finish(resp.id);
                     {
-                        let mut wm = metrics.lock().unwrap();
+                        let mut wm = lock_or_recover(&metrics);
                         wm.record_completion(&resp, r.q.req.priority, fam);
                         if r.tokens_frozen > 0 {
                             wm.record_token_halting(
@@ -721,6 +725,7 @@ fn step_loop(
                         Err(e) => {
                             // freezing syncs the decode; a failed
                             // download fails THIS request, typed
+                            // lint:allow(panic-freedom): slot verified occupied by this loop
                             let r = running[slot].take().unwrap();
                             abort_download_failed(
                                 cfg,
@@ -835,6 +840,7 @@ fn step_loop(
                     // detail `token_download_failed`) instead of
                     // serving it a stale decode or failing the whole
                     // batch at the next step()
+                    // lint:allow(panic-freedom): slot verified occupied by this loop
                     let r = running[slot].take().unwrap();
                     abort_download_failed(
                         cfg, fam, sched, metrics, session, slot, r,
@@ -843,6 +849,7 @@ fn step_loop(
                     continue;
                 }
                 if halted || exhausted {
+                    // lint:allow(panic-freedom): slot verified occupied by this loop
                     let r = running[slot].take().unwrap();
                     let halted_early = halted && !exhausted;
                     // lazy token fetch: on the resident session path
@@ -952,6 +959,7 @@ fn step_loop(
                         break;
                     }
                 };
+                // lint:allow(panic-freedom): slot verified occupied by this loop
                 let r = running[slot].take().unwrap();
                 let mut q = r.q;
                 q.resume = Some(Box::new(ResumeState {
@@ -988,7 +996,7 @@ fn step_loop(
         //    path used to take 2-4): device-call counter, completion
         //    bookkeeping, occupancy/progress gauges
         {
-            let mut wm = metrics.lock().unwrap();
+            let mut wm = lock_or_recover(&metrics);
             if stepped {
                 wm.device_calls += 1;
             }
@@ -1090,7 +1098,7 @@ fn drain_for_rebind(
                     r.q.req.id
                 );
                 sched.finish(r.q.req.id);
-                metrics.lock().unwrap().record_aborted_steps(
+                lock_or_recover(&metrics).record_aborted_steps(
                     fam,
                     session.slots[slot].step as u64,
                 );
@@ -1156,10 +1164,7 @@ fn abort_download_failed(
         r.q.req.id
     );
     sched.finish(r.q.req.id);
-    metrics
-        .lock()
-        .unwrap()
-        .record_aborted_steps(fam, steps as u64);
+    lock_or_recover(&metrics).record_aborted_steps(fam, steps as u64);
     session.release_slot(slot);
     let _ = session.take_deferred_err();
     let _ = r

@@ -107,6 +107,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     let no_halt: BoxedPolicy = Box::new(NoHalt);
     for fam in Family::all() {
         // the paper's per-family best: KL for ddlm/ssd, fixed for plaid
+        // lint:allow(family-seal): experiment config table, not serving dispatch
         let policy: BoxedPolicy = match fam {
             Family::Ddlm | Family::Ssd => {
                 Box::new(Kl::new(kl0, n_steps / 4))

@@ -105,6 +105,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
 
         for fam in Family::all() {
             let store = ctx.store(fam.name())?;
+            // lint:allow(family-seal): display-name lookup for the table header
             let sampler = match fam {
                 Family::Ddlm => "Euler",
                 Family::Ssd => "Simplex",

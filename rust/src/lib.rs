@@ -5,6 +5,7 @@
 //! rust + JAX + Pallas system; see DESIGN.md for the architecture and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod corpus;
 pub mod halting;

@@ -8,6 +8,7 @@
 //!   client    fire a request stream at a server, report latencies
 //!   rebind    live-rebind a worker shard on a running server
 //!   exp       run a paper experiment (fig1..fig8, tab1/3/4, headline)
+//!   analyze   architectural lint over rust/src (the CI analyze stage)
 //!
 //! Global flags: --artifacts DIR (default artifacts), --runs DIR
 //! (default runs), --quick (reduced sizes).
@@ -42,6 +43,7 @@ fn main() {
         "client" => cmd_client(&args),
         "rebind" => cmd_rebind(&args),
         "exp" => cmd_exp(&args),
+        "analyze" => cmd_analyze(&args),
         _ => {
             print_help();
             Ok(())
@@ -107,6 +109,10 @@ fn print_help() {
          \u{20}        (live drain→rebind→rejoin of one worker shard;\n\
          \u{20}        omitted fields keep the current binding)\n\
          exp      <id>|all  [--quick]   ids: {}\n\
+         analyze  [--deny] [--report out.json] [--root DIR]\n\
+         \u{20}        (architectural lint: panic-freedom, family-seal,\n\
+         \u{20}        metrics-registry, wire-doc-drift, unsafe-hygiene;\n\
+         \u{20}        --deny exits nonzero on unannotated violations)\n\
          \n\
          criterion SPEC is the halting-policy DSL: entropy:T, \n\
          patience:P[:TOL], kl:T[:MIN], fixed:N, none, norm:T[:P],\n\
@@ -613,6 +619,29 @@ fn cmd_rebind(args: &Args) -> Result<()> {
         ack.drained.unwrap_or(0),
         ack.rebind_ms.unwrap_or(0.0)
     );
+    Ok(())
+}
+
+/// Static-analysis gate: run the architectural lint over the tree and
+/// report (or, with `--deny`, fail on) unannotated violations.  See
+/// API.md "Invariants & static analysis" for the check catalogue and
+/// the `lint:allow` grammar.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let report = repro::analysis::analyze_tree(&root)?;
+    print!("{}", report.render_text());
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_json().encode())
+            .with_context(|| format!("write {path}"))?;
+        println!("analyze: JSON report written to {path}");
+    }
+    if args.flag("deny") && !report.violations.is_empty() {
+        anyhow::bail!(
+            "{} lint violation(s) — fix them or add a justified \
+             `// lint:allow(<check>): <reason>`",
+            report.violations.len()
+        );
+    }
     Ok(())
 }
 

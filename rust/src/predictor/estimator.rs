@@ -30,6 +30,7 @@ use std::sync::Mutex;
 
 use crate::halting::StepStats;
 use crate::sampler::FamilyId;
+use crate::util::sync::lock_or_recover;
 use crate::util::json::Json;
 
 /// Number of entropy buckets the remaining-steps estimate is
@@ -173,7 +174,7 @@ impl Estimator {
         family: FamilyId,
         f: impl FnOnce(&mut FamilyEntry, f64) -> R,
     ) -> R {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_or_recover(&self.inner);
         let idx = family.index();
         if g.len() <= idx {
             g.resize(idx + 1, None);
@@ -188,7 +189,7 @@ impl Estimator {
         family: FamilyId,
         f: impl FnOnce(&FamilyEntry) -> R,
     ) -> Option<R> {
-        let g = self.inner.lock().unwrap();
+        let g = lock_or_recover(&self.inner);
         g.get(family.index()).and_then(|e| e.as_ref()).map(f)
     }
 
@@ -338,7 +339,7 @@ impl Estimator {
     /// `{ "<fam>": { observations, ema_total_steps, step_latency_ms,
     ///    buckets: [..] } }` — only families with at least one write.
     pub fn snapshot_json(&self) -> Json {
-        let g = self.inner.lock().unwrap();
+        let g = lock_or_recover(&self.inner);
         let mut fields = Vec::new();
         for e in g.iter().flatten() {
             let buckets: Vec<Json> = e

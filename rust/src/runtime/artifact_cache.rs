@@ -37,6 +37,7 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::Manifest;
+use crate::util::sync::{lock_or_recover, wait_or_recover};
 
 /// What a cached byte image is, distinguishing the step-graph HLO text
 /// from checkpoint weights at the same (family, B, L).
@@ -146,10 +147,12 @@ pub struct MappedBytes {
     owned: Vec<u8>,
 }
 
-// Safety: the region is a private read-only mapping (or an owned Vec)
-// that is never written after construction; sharing &[u8] views across
-// threads is sound, and munmap runs exactly once via Drop.
+// SAFETY: the region is a private read-only mapping (or an owned Vec)
+// that is never written after construction; moving the owner across
+// threads moves only the pointer, and munmap runs exactly once via Drop.
 unsafe impl Send for MappedBytes {}
+// SAFETY: all shared access is through `&[u8]` views of memory that is
+// immutable after construction, so concurrent readers cannot race.
 unsafe impl Sync for MappedBytes {}
 
 impl MappedBytes {
@@ -172,6 +175,9 @@ impl MappedBytes {
             // zero-length mmap is EINVAL; an empty image needs no map
             return Ok(MappedBytes::from_vec(Vec::new()));
         }
+        // SAFETY: fd is open for the whole call, len > 0 was checked,
+        // and a MAP_PRIVATE|PROT_READ mapping aliases no Rust memory;
+        // MAP_FAILED is handled below before the pointer is used
         let ptr = unsafe {
             sys::mmap(
                 std::ptr::null_mut(),
@@ -231,7 +237,7 @@ impl std::ops::Deref for MappedBytes {
 
     fn deref(&self) -> &[u8] {
         if self.mapped {
-            // Safety: ptr/len describe a live PROT_READ mapping owned
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned
             // by self; unmapped only in Drop
             unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
         } else {
@@ -243,6 +249,8 @@ impl std::ops::Deref for MappedBytes {
 impl Drop for MappedBytes {
     fn drop(&mut self) {
         if self.mapped {
+            // SAFETY: ptr/len came from a successful mmap of this
+            // owner and `mapped` guarantees this is the only munmap
             unsafe {
                 sys::munmap(self.ptr as *mut _, self.len);
             }
@@ -332,7 +340,7 @@ impl Binding {
 
 impl Drop for Binding {
     fn drop(&mut self) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.inner.state);
         if let Some(Slot::Ready { pins, .. }) = st.entries.get_mut(&self.key)
         {
             *pins = pins.saturating_sub(1);
@@ -395,7 +403,7 @@ impl ArtifactCache {
     /// becomes the next loader and surfaces the error to its caller).
     pub fn bind(&self, key: &CacheKey, path: &Path) -> Result<Binding> {
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.inner.state);
             loop {
                 match st.entries.get_mut(key) {
                     Some(Slot::Ready { bytes, pins, last_used }) => {
@@ -410,7 +418,7 @@ impl ArtifactCache {
                         });
                     }
                     Some(Slot::Loading) => {
-                        st = self.inner.loaded.wait(st).unwrap();
+                        st = wait_or_recover(&self.inner.loaded, st);
                     }
                     None => {
                         st.misses += 1;
@@ -423,7 +431,7 @@ impl ArtifactCache {
         // this caller owns the load; map outside the lock
         let mapped = MappedBytes::open(path)
             .with_context(|| format!("load {}", key.describe()));
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.inner.state);
         match mapped {
             Err(e) => {
                 st.entries.remove(key);
@@ -458,7 +466,7 @@ impl ArtifactCache {
     /// binding pins it — eviction never pulls bytes out from under a
     /// bound worker.
     pub fn evict(&self, key: &CacheKey) -> Result<()> {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.inner.state);
         match st.entries.get(key) {
             None => Ok(()),
             Some(Slot::Loading) => {
@@ -480,13 +488,13 @@ impl ArtifactCache {
 
     /// Change the byte budget; shrinking sweeps immediately.
     pub fn set_budget(&self, budget_bytes: u64) {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.inner.state);
         st.budget = budget_bytes;
         sweep_lru(&mut st);
     }
 
     pub fn stats(&self) -> CacheStats {
-        let st = self.inner.state.lock().unwrap();
+        let st = lock_or_recover(&self.inner.state);
         CacheStats {
             hits: st.hits,
             misses: st.misses,
@@ -505,17 +513,14 @@ impl ArtifactCache {
         let canon =
             std::fs::canonicalize(dir).unwrap_or_else(|_| dir.to_path_buf());
         if let Some(m) =
-            self.inner.state.lock().unwrap().manifests.get(&canon)
+            lock_or_recover(&self.inner.state).manifests.get(&canon)
         {
             return Ok(m.clone());
         }
         // parse outside the lock; a racing double-parse is harmless
         // (last writer wins, both Arcs are equivalent)
         let m = Arc::new(Manifest::load(dir)?);
-        self.inner
-            .state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.inner.state)
             .manifests
             .insert(canon, m.clone());
         Ok(m)

@@ -125,6 +125,9 @@ pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     if numel(shape) != data.len() {
         bail!("shape {shape:?} / data len {} mismatch", data.len());
     }
+    // SAFETY: reinterpreting &[f32] as &[u8] over the same allocation;
+    // len * 4 matches the slice's byte length and u8 has no alignment
+    // or validity requirements
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
@@ -141,6 +144,9 @@ pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
     if numel(shape) != data.len() {
         bail!("shape {shape:?} / data len {} mismatch", data.len());
     }
+    // SAFETY: reinterpreting &[i32] as &[u8] over the same allocation;
+    // len * 4 matches the slice's byte length and u8 has no alignment
+    // or validity requirements
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };

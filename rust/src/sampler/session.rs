@@ -493,7 +493,7 @@ impl Session {
         let capable = resident_capable(&exe.spec)
             && kernel.supports_device_residency();
         let default_schedule = Schedule::new(family, 1, m.t_max, m.t_min)
-            .expect("one-step default schedule");
+            .context("one-step default schedule")?;
         let slots = (0..batch)
             .map(|_| Slot {
                 step: 0,
@@ -1310,6 +1310,7 @@ impl Session {
         let mut outs: Vec<Option<xla::PjRtBuffer>> =
             outs.into_iter().map(Some).collect();
         let mut take = |i: usize| {
+            // lint:allow(panic-freedom): each index is taken exactly once
             outs[i].take().expect("step output consumed twice")
         };
         let o = &self.out_idx;

@@ -153,6 +153,8 @@ impl Trainer {
                 let u: Vec<f32> =
                     (0..b).map(|_| self.rng.uniform_f32()).collect();
                 data.insert("u".into(), Tensor::f32(&[b], u));
+                // offline loss-graph construction, not serving dispatch
+                // lint:allow(family-seal): training builds per-family noise inputs
                 match fam {
                     Family::Ddlm => {
                         let eps =

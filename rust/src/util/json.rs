@@ -127,6 +127,19 @@ impl Json {
         }
     }
 
+    /// Consume an object into its field map; any other value has no
+    /// fields and yields an empty map.  This is the panic-free way to
+    /// stamp extra keys onto a value a constructor just built (the
+    /// envelope codec's pattern) — total by construction, so the
+    /// serving path needs no `let Json::Obj(..) else { unreachable!() }`
+    /// destructures.
+    pub fn into_obj(self) -> BTreeMap<String, Json> {
+        match self {
+            Json::Obj(m) => m,
+            _ => BTreeMap::new(),
+        }
+    }
+
     // ------------------------------------------------------- construction
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(

@@ -6,4 +6,5 @@ pub mod config;
 pub mod json;
 pub mod log;
 pub mod prng;
+pub mod sync;
 pub mod table;

@@ -1,0 +1,128 @@
+//! Poison-tolerant lock helpers for the serving stack.
+//!
+//! A worker thread that panics while holding a shared `Mutex` (the
+//! scheduler state, a metrics shard, the artifact-cache store) poisons
+//! it; every later `.lock().unwrap()` on that mutex then panics too,
+//! cascading one failure into fleet-wide death.  The serving stack's
+//! shared state is counter/gauge bookkeeping and queue structure that
+//! is valid at every statement boundary — a panicked holder may leave
+//! a *stale* value, never a torn one — so recovery (take the guard,
+//! keep serving) strictly beats propagation.
+//!
+//! [`lock_or_recover`] is therefore the ONLY way serving-path code
+//! acquires a mutex (`repro analyze` enforces this: bare
+//! `.lock().unwrap()` is the `lock-poison` check).  Every recovery is
+//! counted; the fleet metrics snapshot surfaces the counter as
+//! `lock_poisoned` (absent until nonzero) so an operator can tell
+//! "survived a poisoned lock N times" from "never happened".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Total poisoned acquisitions recovered process-wide (lock + condvar
+/// re-acquisitions).  Monotone; surfaced as `lock_poisoned`.
+static LOCK_POISONED: AtomicU64 = AtomicU64::new(0);
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+/// The poison flag is cleared so the mutex goes back to the fast path;
+/// each recovery increments the process-wide [`poisoned_count`].
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            LOCK_POISONED.fetch_add(1, Ordering::Relaxed);
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`Condvar::wait`] that recovers the re-acquired guard if the mutex
+/// was poisoned while this thread slept.  The caller's next
+/// [`lock_or_recover`] clears the flag; the recovery is counted here.
+pub fn wait_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            LOCK_POISONED.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Poisoned acquisitions recovered so far (process-wide).
+pub fn poisoned_count() -> u64 {
+    LOCK_POISONED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Panic a holder thread on purpose so the mutex is poisoned.
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+    }
+
+    #[test]
+    fn recovers_data_after_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(7u64));
+        let before = poisoned_count();
+        poison(&m);
+        assert!(m.is_poisoned(), "holder panic must poison the mutex");
+        // recovery hands back the guard with the pre-panic value
+        {
+            let mut g = lock_or_recover(&m);
+            assert_eq!(*g, 7);
+            *g = 8;
+        }
+        assert!(poisoned_count() > before, "recovery must be counted");
+        // the poison flag is cleared: the next acquisition is clean
+        assert!(!m.is_poisoned());
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn unpoisoned_path_does_not_count() {
+        let m = Mutex::new(1i32);
+        let before = poisoned_count();
+        *lock_or_recover(&m) += 1;
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 3);
+        assert_eq!(poisoned_count(), before);
+    }
+
+    #[test]
+    fn wait_recovers_a_mutex_poisoned_while_sleeping() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let before = poisoned_count();
+        let waiter = {
+            let pair = pair.clone();
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut g = lock_or_recover(m);
+                while !*g {
+                    g = wait_or_recover(cv, g);
+                }
+                true
+            })
+        };
+        // give the waiter time to block, then poison the mutex
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        poison(&pair.0);
+        // release the waiter through the recovered lock
+        *lock_or_recover(&pair.0) = true;
+        pair.1.notify_all();
+        assert!(waiter.join().expect("waiter must survive the poison"));
+        assert!(poisoned_count() > before);
+    }
+}

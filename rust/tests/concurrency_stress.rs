@@ -1,0 +1,402 @@
+//! Seeded concurrency stress over the serving stack's three sharpest
+//! race windows:
+//!
+//!   1. submit vs `shutdown()` vs last-worker death — every submitted
+//!      request must resolve exactly once (a response or a typed
+//!      rejection), never hang on a queue nobody will drain;
+//!   2. concurrent rebind orders hitting the one-in-flight latch — at
+//!      most one order per worker is ever pending, every accepted
+//!      order is taken and answered exactly once, every refusal is
+//!      typed;
+//!   3. concurrent artifact-cache binds of one key — one mmap load,
+//!      shared by every racer, with exact hit/miss accounting.
+//!
+//! Pure scheduler/cache work (the drainer thread stands in for a
+//! device worker), so the whole file runs everywhere — no artifacts,
+//! no PJRT.  Each window is driven N seeds x M iterations with seeded
+//! jitter in thread counts, submission bursts, and chaos ordering; a
+//! lost reply shows up as a `recv_timeout` failure, a deadlock as the
+//! harness timeout.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use repro::coordinator::scheduler::{
+    RebindOrder, RebindReport, Scheduler, ServeError,
+};
+use repro::coordinator::{GenRequest, GenResponse};
+use repro::runtime::artifact_cache::{ArtifactCache, CacheKey};
+use repro::sampler::Family;
+use repro::util::prng::Prng;
+
+const SEEDS: [u64; 4] = [11, 29, 47, 83];
+
+/// Generous bound that turns "reply never arrives" into a test failure
+/// instead of a hung harness.
+const RESOLVE: Duration = Duration::from_secs(10);
+
+// ---------------------------------------------------------------------
+// window 1: submit vs shutdown vs last-worker death
+// ---------------------------------------------------------------------
+
+/// How the chaos thread ends an iteration's fleet.
+#[derive(Clone, Copy)]
+enum Chaos {
+    /// graceful: stop admitting, let the drainer empty the queue
+    ShutdownOnly,
+    /// abrupt: the only worker dies with work still queued
+    DieOnly,
+    /// both, racing each other
+    ShutdownThenDie,
+}
+
+#[test]
+fn submits_racing_shutdown_and_worker_death_always_resolve() {
+    for seed in SEEDS {
+        let mut rng = Prng::new(seed);
+        for iter in 0..6 {
+            let chaos = [
+                Chaos::ShutdownOnly,
+                Chaos::DieOnly,
+                Chaos::ShutdownThenDie,
+            ][rng.below(3)];
+            let sched =
+                Arc::new(Scheduler::new(32, vec![Family::Ddlm.into()]));
+            let die = Arc::new(AtomicBool::new(false));
+
+            // the drainer stands in for worker 0: pop, answer, finish —
+            // until told to die mid-stream (window: queued work must
+            // fail over) or until a graceful drained shutdown
+            let drainer = {
+                let s = sched.clone();
+                let die = die.clone();
+                thread::spawn(move || {
+                    let mut served = 0u64;
+                    loop {
+                        if let Some(q) = s.next_for(0) {
+                            let id = q.req.id;
+                            let mut resp =
+                                GenResponse::immediate(&q.req, None);
+                            resp.family = Some(q.family);
+                            let _ = q.reply.send(Ok(resp));
+                            s.finish(id);
+                            served += 1;
+                        } else if die.load(Ordering::SeqCst) {
+                            // last-worker death: running state purged,
+                            // still-queued requests answered Unavailable
+                            s.worker_down(0);
+                            return served;
+                        } else if s.is_shutdown() && s.queue_depth() == 0 {
+                            // drained graceful exit (a real worker also
+                            // reports down on the way out)
+                            s.worker_down(0);
+                            return served;
+                        } else {
+                            thread::yield_now();
+                        }
+                    }
+                })
+            };
+
+            // submitters race the chaos below
+            let n_submitters = 2 + rng.below(3);
+            let per_thread = 8 + rng.below(8);
+            let mut submitters = Vec::new();
+            for t in 0..n_submitters {
+                let s = sched.clone();
+                submitters.push(thread::spawn(move || {
+                    let mut rxs = Vec::new();
+                    let mut sync_rejects = 0usize;
+                    for k in 0..per_thread {
+                        let id = (t as u64 + 1) * 10_000 + k as u64;
+                        let (tx, rx) = mpsc::channel();
+                        match s.submit(GenRequest::new(id, 5), tx) {
+                            Ok(()) => rxs.push(rx),
+                            Err(
+                                ServeError::Overloaded
+                                | ServeError::Unavailable
+                                | ServeError::InvalidRequest,
+                            ) => sync_rejects += 1,
+                            Err(e) => panic!(
+                                "unexpected sync rejection {e:?} \
+                                 (seed {seed} iter {iter})"
+                            ),
+                        }
+                        if k % 3 == 0 {
+                            thread::yield_now();
+                        }
+                    }
+                    (rxs, sync_rejects)
+                }));
+            }
+
+            // chaos thread: after a seeded number of yields, end the
+            // fleet one of three ways
+            let chaos_join = {
+                let s = sched.clone();
+                let die = die.clone();
+                let spins = rng.below(200);
+                thread::spawn(move || {
+                    for _ in 0..spins {
+                        thread::yield_now();
+                    }
+                    match chaos {
+                        Chaos::ShutdownOnly => s.shutdown(),
+                        Chaos::DieOnly => die.store(true, Ordering::SeqCst),
+                        Chaos::ShutdownThenDie => {
+                            s.shutdown();
+                            die.store(true, Ordering::SeqCst);
+                        }
+                    }
+                })
+            };
+
+            let mut admitted = 0usize;
+            let mut sync_rejects = 0usize;
+            let mut ok = 0usize;
+            let mut typed_errs = 0usize;
+            for h in submitters {
+                let (rxs, rejects) = h.join().unwrap();
+                sync_rejects += rejects;
+                for rx in rxs {
+                    admitted += 1;
+                    // THE invariant: an admitted request's reply always
+                    // arrives — Ok from the drainer, or a typed error
+                    // from shutdown/fail-over — never silence
+                    match rx.recv_timeout(RESOLVE).unwrap_or_else(|_| {
+                        panic!(
+                            "lost reply: admitted request never resolved \
+                             (seed {seed} iter {iter})"
+                        )
+                    }) {
+                        Ok(resp) => {
+                            assert_eq!(resp.family, Some(Family::Ddlm.into()));
+                            ok += 1;
+                        }
+                        Err(
+                            ServeError::Unavailable | ServeError::Overloaded,
+                        ) => typed_errs += 1,
+                        Err(e) => {
+                            panic!("unexpected outcome {e:?} (seed {seed})")
+                        }
+                    }
+                }
+            }
+            chaos_join.join().unwrap();
+            // ShutdownOnly iterations need the drainer's exit nudge: a
+            // fully-drained queue plus shutdown is its stop condition,
+            // which the asserts above already forced
+            let served = drainer.join().unwrap();
+
+            // reconciliation: every submission is accounted for exactly
+            // once, and nothing is left queued or marked running
+            assert_eq!(ok + typed_errs, admitted, "seed {seed} iter {iter}");
+            assert_eq!(
+                admitted + sync_rejects,
+                n_submitters * per_thread,
+                "seed {seed} iter {iter}"
+            );
+            assert_eq!(served as usize, ok, "seed {seed} iter {iter}");
+            assert_eq!(sched.queue_depth(), 0, "seed {seed} iter {iter}");
+            assert_eq!(sched.running_count(), 0, "seed {seed} iter {iter}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// window 2: concurrent rebinds vs the one-in-flight latch
+// ---------------------------------------------------------------------
+
+#[test]
+fn rebind_latch_admits_one_order_and_answers_every_requester() {
+    // deterministic prelude: the latch itself, no threads
+    let s = Scheduler::new(8, vec![Family::Ddlm.into(); 2]);
+    let order = || RebindOrder {
+        family: None,
+        batch: None,
+        checkpoint: None,
+        reply: None,
+    };
+    assert!(s.request_rebind(0, order()).is_ok());
+    assert_eq!(s.request_rebind(0, order()), Err("rebind_in_flight"));
+    // a different worker has its own latch
+    assert!(s.request_rebind(1, order()).is_ok());
+    assert!(s.take_rebind(0).is_some());
+    assert!(s.take_rebind(0).is_none(), "order must be taken exactly once");
+    assert!(s.request_rebind(0, order()).is_ok(), "latch must clear");
+    assert!(s.take_rebind(0).is_some());
+    assert!(s.take_rebind(1).is_some());
+    assert_eq!(s.request_rebind(9, order()), Err("unknown_worker"));
+
+    // seeded stampede: R requesters x M attempts all target worker 0
+    for seed in SEEDS {
+        let mut rng = Prng::new(seed ^ 0x5eb1);
+        let sched = Arc::new(Scheduler::new(8, vec![Family::Ddlm.into(); 2]));
+        let done = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let refused = Arc::new(AtomicUsize::new(0));
+
+        // stand-in worker 0: claim orders, answer their reply channels
+        let worker = {
+            let s = sched.clone();
+            let done = done.clone();
+            thread::spawn(move || {
+                let mut processed = 0usize;
+                let mut answer = |o: RebindOrder| {
+                    s.complete_rebind(0, Family::Ddlm.into(), 8);
+                    if let Some(tx) = o.reply {
+                        let _ = tx.send(Ok(RebindReport {
+                            worker: 0,
+                            family: Family::Ddlm.into(),
+                            batch: 8,
+                            drained: 0,
+                            rebind_ms: 0.0,
+                        }));
+                    }
+                    processed += 1;
+                };
+                loop {
+                    if let Some(o) = s.take_rebind(0) {
+                        answer(o);
+                    } else if done.load(Ordering::SeqCst) {
+                        break;
+                    } else {
+                        thread::yield_now();
+                    }
+                }
+                // an order posted between the last take and the done
+                // check must still be answered, not stranded
+                while let Some(o) = s.take_rebind(0) {
+                    answer(o);
+                }
+                processed
+            })
+        };
+
+        let n_requesters = 3 + rng.below(2);
+        let attempts = 16 + rng.below(16);
+        let mut requesters = Vec::new();
+        for _ in 0..n_requesters {
+            let s = sched.clone();
+            let accepted = accepted.clone();
+            let refused = refused.clone();
+            requesters.push(thread::spawn(move || {
+                for _ in 0..attempts {
+                    let (tx, rx) = mpsc::channel();
+                    match s.request_rebind(
+                        0,
+                        RebindOrder {
+                            family: None,
+                            batch: None,
+                            checkpoint: None,
+                            reply: Some(tx),
+                        },
+                    ) {
+                        Ok(()) => {
+                            accepted.fetch_add(1, Ordering::SeqCst);
+                            // accepted orders are ALWAYS answered
+                            let report = rx
+                                .recv_timeout(RESOLVE)
+                                .expect("accepted rebind never answered")
+                                .expect("stand-in worker only reports Ok");
+                            assert_eq!(report.worker, 0);
+                        }
+                        Err("rebind_in_flight") => {
+                            refused.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => panic!("unexpected refusal {e:?}"),
+                    }
+                }
+            }));
+        }
+        for h in requesters {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::SeqCst);
+        let processed = worker.join().unwrap();
+
+        let accepted = accepted.load(Ordering::SeqCst);
+        let refused = refused.load(Ordering::SeqCst);
+        assert_eq!(
+            accepted + refused,
+            n_requesters * attempts,
+            "seed {seed}: every attempt resolves as accepted or refused"
+        );
+        assert_eq!(
+            processed, accepted,
+            "seed {seed}: each accepted order taken and answered once"
+        );
+        assert!(accepted >= 1, "seed {seed}: the latch starved everyone");
+        assert!(
+            !sched.rebind_pending(0),
+            "seed {seed}: an order was left in flight"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// window 3: concurrent artifact-cache binds of one key
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_binds_of_one_key_load_once_and_share_the_mapping() {
+    let dir = std::env::temp_dir().join(format!(
+        "repro_concurrency_stress_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for seed in SEEDS {
+        let mut rng = Prng::new(seed ^ 0xcac4e);
+        // seed-unique artifact bytes, so a wrong mapping is detectable
+        let body: Vec<u8> =
+            (0..4096).map(|_| rng.below(256) as u8).collect();
+        let path = dir.join(format!("ckpt_{seed}.pbin"));
+        std::fs::write(&path, &body).unwrap();
+
+        for iter in 0..4 {
+            let cache = ArtifactCache::new(1 << 20);
+            let key = CacheKey::checkpoint("ddlm", &path);
+            let n = 8;
+            let barrier = Arc::new(Barrier::new(n));
+            let mut binders = Vec::new();
+            for _ in 0..n {
+                let cache = cache.clone();
+                let key = key.clone();
+                let path = path.clone();
+                let barrier = barrier.clone();
+                binders.push(thread::spawn(move || {
+                    // line every thread up on the miss window
+                    barrier.wait();
+                    cache.bind(&key, &path).expect("bind failed")
+                }));
+            }
+            let bindings: Vec<_> =
+                binders.into_iter().map(|h| h.join().unwrap()).collect();
+
+            // one mapping, shared by every racer, with the right bytes
+            for b in &bindings {
+                assert!(
+                    b.same_mapping(&bindings[0]),
+                    "seed {seed} iter {iter}: duplicate mmap of one key"
+                );
+                assert_eq!(b.bytes(), &body[..], "seed {seed} iter {iter}");
+            }
+            let stats = cache.stats();
+            assert_eq!(stats.misses, 1, "seed {seed} iter {iter}: one load");
+            assert_eq!(stats.hits, n as u64 - 1, "seed {seed} iter {iter}");
+            assert_eq!(stats.entries, 1, "seed {seed} iter {iter}");
+            assert_eq!(stats.bytes, body.len() as u64);
+
+            // all racers pinned it; eviction must refuse until the last
+            // binding drops, then succeed
+            assert!(cache.evict(&key).is_err(), "pinned entry evicted");
+            drop(bindings);
+            assert!(cache.evict(&key).is_ok(), "unpinned evict refused");
+            assert_eq!(cache.stats().entries, 0);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

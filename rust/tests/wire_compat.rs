@@ -275,6 +275,66 @@ fn token_halting_off_leaves_wire_bytes_untouched() {
     assert!(!encoded.contains("frozen"));
 }
 
+/// Malformed corpus: every bad frame/line/byte-string must come back
+/// as a TYPED error — the expected `FrameError::code()`, a
+/// `GenRequest::from_json` Err (the server's legacy `invalid_request`
+/// answer), or a `Json::parse` Err (the server's inline `parse:`
+/// answer) — never a panic in the codec.  This is the regression pin
+/// for the wire-reachable-panic sweep: running every case to completion
+/// IS the no-panic assertion.
+#[test]
+fn malformed_frames_fail_typed_never_panic() {
+    let path = format!(
+        "{}/rust/tests/data/malformed_wire.jsonl",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let corpus = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {path}: {e}"));
+    let (mut frames, mut legacy, mut raw) = (0, 0, 0);
+    for line in corpus
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+    {
+        let case = Json::parse(line)
+            .unwrap_or_else(|e| panic!("bad corpus line: {line}\n  {e}"));
+        let expect = case
+            .get("expect")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("corpus line missing expect: {line}"));
+        if let Some(frame) = case.get("frame") {
+            frames += 1;
+            let err = Command::from_json(frame).err().unwrap_or_else(|| {
+                panic!("malformed frame accepted: {line}")
+            });
+            assert_eq!(err.code(), expect, "wrong error class for {line}");
+            // Display must render too (the server puts it in `message`)
+            assert!(!err.to_string().is_empty());
+        } else if let Some(req) = case.get("legacy") {
+            legacy += 1;
+            assert_eq!(expect, "legacy_invalid", "bad expect in {line}");
+            assert!(
+                GenRequest::from_json(req).is_err(),
+                "malformed legacy request accepted: {line}"
+            );
+        } else {
+            raw += 1;
+            assert_eq!(expect, "parse_error", "bad expect in {line}");
+            let bytes = case
+                .get("raw")
+                .and_then(Json::as_str)
+                .unwrap_or_else(|| panic!("corpus line missing raw: {line}"));
+            assert!(
+                Json::parse(bytes).is_err(),
+                "unparseable line accepted: {line}"
+            );
+        }
+    }
+    assert!(frames >= 10, "malformed corpus lost frame coverage");
+    assert!(legacy >= 3, "malformed corpus lost legacy coverage");
+    assert!(raw >= 2, "malformed corpus lost raw-bytes coverage");
+}
+
 /// The halted-early response of a *client* halt (the new graceful verb)
 /// parses on a legacy client exactly like any policy halt — the reason
 /// string is just "client".

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Repo gate: formatting, lints, wire compat, tests.  Run from anywhere.
 #
-#   scripts/check.sh           # fmt + clippy + wire-compat + test
-#                              # + bench compile
+#   scripts/check.sh           # fmt + clippy + analyze + wire-compat
+#                              # + test + bench compile
 #   scripts/check.sh --bench   # ...then the headline serving bench,
 #                              # which writes BENCH_serving.json
 #                              # (p50/p95 latency, req/s, steps/s,
@@ -15,6 +15,13 @@
 # stream_overhead_pct, frozen_step_fraction, ...), so a scenario
 # refactor can't silently drop a trendline field; it skips with a
 # message when no BENCH_serving.json has been written yet.
+#
+# The analyze stage runs the in-tree architectural lint
+# (`repro analyze --deny`): serving-path panic-freedom, the
+# match-on-family seal, the metrics key registry, envelope-field vs
+# API.md drift, and unsafe-SAFETY hygiene.  Any unannotated violation
+# fails the gate; suppressions must be justified
+# `// lint:allow(<check>): <reason>` lines (see API.md).
 #
 # The wire-compat stage runs the golden-corpus / envelope round-trip
 # tests explicitly (they are pure codec tests, so they run even where
@@ -31,6 +38,9 @@ cargo fmt --check
 
 echo "== cargo clippy (all targets, warnings are errors) =="
 cargo clippy --all-targets -- -D warnings
+
+echo "== repro analyze (architectural lint, zero unannotated violations) =="
+cargo run -q -- analyze --deny
 
 echo "== wire compat (golden legacy corpus + envelope round-trips) =="
 cargo test -q --test wire_compat
