@@ -46,6 +46,15 @@
 //!   a (b8 + b1) migration leg where mostly-frozen slots vacate the
 //!   wide shard and `reclaimed_slot_steps` counts what that freed.
 //!
+//! * **recovery** — crash recovery under load: a burst served with the
+//!   write-ahead admission journal on, the journal sealed mid-burst
+//!   ("the process died here"), then an engine restart on the same
+//!   journal path.  Reported under `"recovery"`: `recovery_ms`
+//!   (restart → replayed-set-drained), `requests_replayed`, goodput
+//!   before/during/after, and `requests_lost` (the acceptance bar:
+//!   always 0 — every crash-orphaned admission replays to a
+//!   resolution).
+//!
 //! * **session_step** — a microbench directly on one batched `Session`
 //!   (no TCP): the device-resident state path vs the host-roundtrip
 //!   reference path, reporting steps/s and `host_bytes_per_step` from
@@ -65,7 +74,9 @@
 use std::rc::Rc;
 use std::time::Instant;
 
-use repro::coordinator::{start, Client, EngineConfig, GenRequest, Server};
+use repro::coordinator::{
+    start, Client, EngineConfig, GenRequest, Journal, Server,
+};
 use repro::corpus::dataset::Dataset;
 use repro::halting::{parse_policy, BoxedPolicy};
 use repro::models::store::ParamStore;
@@ -588,6 +599,165 @@ fn run_elastic_scenario(
     })
 }
 
+struct RecoveryResult {
+    wall_s: f64,
+    /// restart → replayed-set-drained wall time (includes the worker's
+    /// session rebuild — the honest client-visible outage tail)
+    recovery_ms: f64,
+    /// incomplete admissions the restarted engine re-admitted
+    requests_replayed: f64,
+    /// admissions the journal still lists incomplete after recovery —
+    /// the zero-loss acceptance bar demands this stays 0
+    requests_lost: u64,
+    journal_records: f64,
+    journal_truncated_records: f64,
+    goodput_before: f64,
+    goodput_during: f64,
+    goodput_after: f64,
+}
+
+/// Crash recovery under load: serve a burst with the write-ahead
+/// admission journal on, seal the journal mid-burst ("the process died
+/// here" — resolutions stop reaching the log), restart an engine on
+/// the same journal path and measure how long the replay takes to
+/// drain, then confirm a follow-up burst serves at full rate and the
+/// journal lists zero incomplete admissions.
+fn run_recovery_scenario(
+    dir: &str,
+    batch: usize,
+    n: usize,
+    n_steps: usize,
+    policy: &BoxedPolicy,
+    prompts: &[Vec<i32>],
+) -> anyhow::Result<RecoveryResult> {
+    let wal = std::env::temp_dir()
+        .join(format!("repro_bench_recovery_{}.wal", std::process::id()));
+    let _ = std::fs::remove_file(&wal);
+    let make_cfg = || {
+        let mut cfg = EngineConfig::new(dir, Family::Ddlm);
+        cfg.worker_specs = vec![(Family::Ddlm.into(), batch)];
+        cfg.discover_checkpoints("runs");
+        cfg.journal_path = Some(wal.display().to_string());
+        cfg
+    };
+    let (engine, join) = start(make_cfg());
+    {
+        // warmup: one-off artifact compile off the clock
+        let mut req = GenRequest::new(900_000, 4);
+        req.policy = parse_policy("none").unwrap();
+        engine
+            .submit(req)
+            .recv()?
+            .map_err(|e| anyhow::anyhow!("recovery warmup: {e:?}"))?;
+    }
+
+    let build = |id: u64, i: usize| {
+        let mut req = GenRequest::new(id, n_steps);
+        req.prefix = prompts[i % prompts.len()][..32].to_vec();
+        req.policy = policy.clone();
+        req.seed = 5000 + id;
+        req
+    };
+    let t0 = Instant::now();
+
+    // phase A: a clean burst — the healthy-fleet goodput baseline
+    let rxs: Vec<_> =
+        (0..n).map(|i| engine.submit(build(10_000 + i as u64, i))).collect();
+    for rx in rxs {
+        rx.recv()?
+            .map_err(|e| anyhow::anyhow!("recovery before-burst: {e:?}"))?;
+    }
+    let before_span = t0.elapsed().as_secs_f64();
+    let goodput_before = n as f64 / before_span.max(1e-9);
+
+    // phase B: crash mid-burst — let half the burst resolve, then seal
+    // the journal (writes stop reaching the log, exactly as if the
+    // process died) and take the fleet down
+    let rxs: Vec<_> =
+        (0..n).map(|i| engine.submit(build(20_000 + i as u64, i))).collect();
+    for rx in rxs.iter().take(n / 2) {
+        rx.recv()?
+            .map_err(|e| anyhow::anyhow!("recovery crash-burst: {e:?}"))?;
+    }
+    let crash_at = t0.elapsed().as_secs_f64();
+    if let Some(j) = engine.journal() {
+        j.seal();
+    }
+    engine.shutdown();
+    join.join().unwrap()?;
+    // the graceful drain still answers the tail's channels, but none
+    // of those resolutions reached the sealed journal — the replay set
+    // is everything unresolved at the moment of the seal
+    let mut during_done = 0usize;
+    for rx in rxs.iter().skip(n / 2) {
+        if matches!(rx.recv(), Ok(Ok(_))) {
+            during_done += 1;
+        }
+    }
+
+    // restart on the same journal path: the engine re-admits the
+    // incomplete set; recovery ends when the fleet has served it
+    let t_rec = Instant::now();
+    let (engine2, join2) = start(make_cfg());
+    let (mut replayed, mut completed);
+    loop {
+        let m = engine2.metrics()?;
+        let g = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        replayed = g("journal_replayed");
+        completed = g("requests_completed");
+        if replayed > 0.0 && completed >= replayed {
+            break;
+        }
+        anyhow::ensure!(
+            t_rec.elapsed().as_secs() < 120,
+            "recovery: replay never drained \
+             (replayed {replayed}, completed {completed})"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let recovery_ms = t_rec.elapsed().as_secs_f64() * 1e3;
+    let during_span =
+        (t0.elapsed().as_secs_f64() - crash_at).max(1e-9);
+    let goodput_during = during_done as f64 / during_span;
+
+    // phase C: a follow-up burst on the recovered fleet
+    let t_after = Instant::now();
+    let rxs: Vec<_> =
+        (0..n).map(|i| engine2.submit(build(30_000 + i as u64, i))).collect();
+    for rx in rxs {
+        rx.recv()?
+            .map_err(|e| anyhow::anyhow!("recovery after-burst: {e:?}"))?;
+    }
+    let goodput_after =
+        n as f64 / t_after.elapsed().as_secs_f64().max(1e-9);
+    let wall_s = t0.elapsed().as_secs_f64();
+    engine2.shutdown();
+    join2.join().unwrap()?;
+
+    // the acceptance bar: nothing the journal admitted is still
+    // incomplete — every crash-orphaned request was replayed to a
+    // resolution
+    let (_, fin) = Journal::open(&wal)?;
+    let requests_lost = fin.incomplete.len() as u64;
+    anyhow::ensure!(
+        requests_lost == 0,
+        "recovery: {requests_lost} admissions lost across the crash"
+    );
+    let _ = std::fs::remove_file(&wal);
+
+    Ok(RecoveryResult {
+        wall_s,
+        recovery_ms,
+        requests_replayed: replayed,
+        requests_lost,
+        journal_records: fin.records as f64,
+        journal_truncated_records: fin.truncated_records as f64,
+        goodput_before,
+        goodput_during,
+        goodput_after,
+    })
+}
+
 /// Per-family rows (completions, latency quantiles, steps) computed
 /// from the measured-run samples — warmup traffic is excluded, so the
 /// rows are directly comparable to the top-level numbers.
@@ -878,6 +1048,27 @@ fn main() -> anyhow::Result<()> {
         elastic.requests_dropped
     );
 
+    // scenario 8: recovery — crash mid-burst with the write-ahead
+    // admission journal on, restart on the same journal, replay the
+    // orphaned admissions; zero lost is the acceptance bar
+    println!(
+        "serving_bench[recovery]: journal crash mid-burst on 1 ddlm \
+         worker x batch {batch}, restart + replay"
+    );
+    let recovery = run_recovery_scenario(
+        &dir, batch, n, n_steps, &policy, &prompts,
+    )?;
+    println!(
+        "serving_bench[recovery]: recovery {:.0} ms ({:.0} replayed, \
+         {} lost), goodput {:.2}/{:.2}/{:.2} req/s (before/during/after)",
+        recovery.recovery_ms,
+        recovery.requests_replayed,
+        recovery.requests_lost,
+        recovery.goodput_before,
+        recovery.goodput_during,
+        recovery.goodput_after,
+    );
+
     // top-level fields mirror the pre-multi-family layout so the
     // BENCH_serving.json trendline stays comparable PR-over-PR
     let mut fields = vec![
@@ -1044,6 +1235,29 @@ fn main() -> anyhow::Result<()> {
                 "reclaimed_slot_steps",
                 Json::num(elastic.reclaimed_slot_steps),
             ),
+        ]),
+    ));
+    fields.push((
+        "recovery",
+        Json::obj(vec![
+            ("wall_s", Json::num(recovery.wall_s)),
+            ("recovery_ms", Json::num(recovery.recovery_ms)),
+            (
+                "requests_replayed",
+                Json::num(recovery.requests_replayed),
+            ),
+            (
+                "requests_lost",
+                Json::num(recovery.requests_lost as f64),
+            ),
+            ("journal_records", Json::num(recovery.journal_records)),
+            (
+                "journal_truncated_records",
+                Json::num(recovery.journal_truncated_records),
+            ),
+            ("goodput_before", Json::num(recovery.goodput_before)),
+            ("goodput_during", Json::num(recovery.goodput_during)),
+            ("goodput_after", Json::num(recovery.goodput_after)),
         ]),
     ));
     let out = Json::obj(fields);

@@ -9,6 +9,7 @@
 //! | `metrics-registry` | snapshot emitters             | every emitted metrics key/prefix is declared in `coordinator::metrics::keys`; `bench_schema.txt` ⊆ registry |
 //! | `wire-doc-drift`   | `coordinator/envelope.rs`     | every constructed frame field name appears in API.md |
 //! | `unsafe-hygiene`   | whole tree                    | every `unsafe` is immediately preceded by a `// SAFETY:` comment |
+//! | `lock-order`       | whole tree                    | no pair of locks is acquired (via `lock_or_recover`) in both nesting orders — inverted nesting can deadlock; one-directional nesting is legal |
 //!
 //! Matches on `#[cfg(test)]` lines are skipped; a well-formed
 //! `// lint:allow(<check>): <reason>` on the line above (or the line
@@ -74,6 +75,7 @@ pub fn run_all(files: &[SourceFile], ctx: &Context) -> Vec<Violation> {
     }
     check_metrics_registry(files, ctx, &mut out);
     check_wire_doc_drift(files, ctx, &mut out);
+    check_lock_order(files, &mut out);
     out.sort_by(|a, b| {
         (a.check, &a.file, a.line).cmp(&(b.check, &b.file, b.line))
     });
@@ -413,6 +415,182 @@ fn check_wire_doc_drift(
     }
 }
 
+// --------------------------------------------------------- lock-order
+
+/// One `lock_or_recover(..)` call site: byte position, the lock's name
+/// (the last path segment of the argument, e.g. `state` for
+/// `&self.state`), and — when the guard is `let`-bound — the span over
+/// which it stays held (to the enclosing block's close, truncated at
+/// an explicit `drop(var)`).  Statement-scoped temporaries release at
+/// the `;` and hold nothing.
+struct LockSite {
+    pos: usize,
+    name: String,
+    held: Option<(usize, usize)>,
+}
+
+/// Last path segment of the lock argument at `i` (just past the open
+/// paren): `&self.sched.metrics` -> `metrics`, `registry()` ->
+/// `registry`.
+fn lock_arg_name(code: &[u8], i: usize) -> Option<String> {
+    let mut i = skip_ws(code, i);
+    if let Some(j) = eat(code, i, b"&") {
+        i = skip_ws(code, j);
+    }
+    let start = i;
+    let mut j = i;
+    while j < code.len()
+        && (super::scan::is_ident(code[j])
+            || code[j] == b'.'
+            || code[j] == b':')
+    {
+        j += 1;
+    }
+    if j == start {
+        return None;
+    }
+    let path = String::from_utf8_lossy(&code[start..j]).into_owned();
+    let name = path
+        .rsplit(['.', ':'])
+        .next()
+        .unwrap_or_default()
+        .to_string();
+    (!name.is_empty()).then_some(name)
+}
+
+/// End offset of the innermost `{...}` block enclosing `pos`: the
+/// first `}` after `pos` whose matching `{` opened at or before it.
+fn enclosing_block_end(code: &[u8], pos: usize) -> usize {
+    let mut stack: Vec<usize> = Vec::new();
+    for (i, &b) in code.iter().enumerate() {
+        match b {
+            b'{' => stack.push(i),
+            b'}' => {
+                let open = stack.pop().unwrap_or(0);
+                if i >= pos && open <= pos {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    code.len()
+}
+
+/// Every `lock_or_recover(` site in the file, with held spans for
+/// `let`-bound guards.  Sites on test lines are excluded — test-only
+/// nesting must not dictate (or violate) the shipped order.
+fn lock_sites(f: &SourceFile) -> Vec<LockSite> {
+    const CALL: &[u8] = b"lock_or_recover(";
+    let code = &f.lexed.code;
+    let mut out = Vec::new();
+    for pos in find_all(code, CALL) {
+        // skip `wait_*_or_recover(` lookalikes: require a non-ident
+        // byte before the call
+        if pos > 0 && super::scan::is_ident(code[pos - 1]) {
+            continue;
+        }
+        if f.test_lines.contains(&f.line_at(pos)) {
+            continue;
+        }
+        let Some(name) = lock_arg_name(code, pos + CALL.len()) else {
+            continue;
+        };
+        // `let`-bound?  The statement prefix (text since the last
+        // `;`/`{`/`}`) must bind the guard: `let [mut] var = ...`
+        let stmt = code[..pos]
+            .iter()
+            .rposition(|&b| b == b';' || b == b'{' || b == b'}')
+            .map_or(0, |k| k + 1);
+        let prefix = &code[stmt..pos];
+        let held = find_words(prefix, b"let")
+            .into_iter()
+            .next()
+            .filter(|_| prefix.contains(&b'='))
+            .and_then(|let_at| {
+                let mut i = skip_ws(prefix, let_at + b"let".len());
+                if let Some(j) = eat(prefix, i, b"mut") {
+                    if prefix.get(j).is_some_and(u8::is_ascii_whitespace)
+                    {
+                        i = skip_ws(prefix, j);
+                    }
+                }
+                let var_end = super::scan::eat_ident(prefix, i)?;
+                let var = &prefix[i..var_end];
+                // held to the enclosing block's close, or to an
+                // explicit `drop(var)` that releases it early
+                let mut end = enclosing_block_end(code, pos);
+                let drop_pat =
+                    [b"drop(" as &[u8], var, b")"].concat();
+                if let Some(d) = find_all(&code[..end], &drop_pat)
+                    .into_iter()
+                    .find(|&d| d > pos)
+                {
+                    end = d;
+                }
+                Some((pos, end))
+            });
+        out.push(LockSite { pos, name, held });
+    }
+    out
+}
+
+/// Tree-level lock-order check: collect every ordered (outer, inner)
+/// nesting of two differently-named locks, then flag each pair seen in
+/// BOTH orders.  The canonical order is the majority one (ties break
+/// lexicographically); violations blame the minority sites.  Purely
+/// one-directional nesting — e.g. the scheduler appending to the
+/// journal inside the state lock — is legal by construction.
+fn check_lock_order(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let mut pairs: BTreeMap<(String, String), Vec<(usize, usize)>> =
+        BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        let sites = lock_sites(f);
+        for a in &sites {
+            let Some((start, end)) = a.held else { continue };
+            for b in &sites {
+                if b.pos > start && b.pos < end && b.name != a.name {
+                    pairs
+                        .entry((a.name.clone(), b.name.clone()))
+                        .or_default()
+                        .push((fi, b.pos));
+                }
+            }
+        }
+    }
+    let mut handled: BTreeSet<(String, String)> = BTreeSet::new();
+    let keys: Vec<(String, String)> = pairs.keys().cloned().collect();
+    for fwd in keys {
+        let rev = (fwd.1.clone(), fwd.0.clone());
+        if handled.contains(&fwd) || !pairs.contains_key(&rev) {
+            continue;
+        }
+        handled.insert(fwd.clone());
+        handled.insert(rev.clone());
+        let (nf, nr) = (pairs[&fwd].len(), pairs[&rev].len());
+        let canonical = if nf > nr || (nf == nr && fwd.0 <= fwd.1) {
+            fwd.clone()
+        } else {
+            rev.clone()
+        };
+        let minority = if canonical == fwd { &rev } else { &fwd };
+        for &(fi, pos) in &pairs[minority] {
+            emit(
+                out,
+                &files[fi],
+                "lock-order",
+                pos,
+                format!(
+                    "lock \"{}\" acquired while \"{}\" is held, but \
+                     the prevailing order is {} -> {} — inverted \
+                     nesting can deadlock",
+                    minority.1, minority.0, canonical.0, canonical.1
+                ),
+            );
+        }
+    }
+}
+
 // ----------------------------------------------------- unsafe-hygiene
 
 fn check_unsafe_hygiene(f: &SourceFile, out: &mut Vec<Violation>) {
@@ -645,5 +823,62 @@ pub const BENCH_KEYS: &[&str] = &["req_per_s"];
         let src = "fn f() {\n  // lint:allow(unsafe-hygiene): documented at \
                    the module head\n  unsafe { g() }\n}\n";
         assert!(run_one("runtime/x.rs", src).is_empty());
+    }
+
+    // -- lock-order --------------------------------------------------
+
+    #[test]
+    fn lock_order_flags_inverted_pairs() {
+        // alpha -> beta twice, beta -> alpha once: the minority site
+        // (the beta-held alpha acquisition) is the violation
+        let src = "fn f(s: &S) {\n\
+                   let a = lock_or_recover(&s.alpha);\n\
+                   lock_or_recover(&s.beta).push(1);\n\
+                   }\n\
+                   fn g(s: &S) {\n\
+                   let a = lock_or_recover(&s.alpha);\n\
+                   lock_or_recover(&s.beta).push(2);\n\
+                   }\n\
+                   fn h(s: &S) {\n\
+                   let b = lock_or_recover(&s.beta);\n\
+                   lock_or_recover(&s.alpha).push(3);\n\
+                   }\n";
+        let v = run_one("eval/x.rs", src);
+        assert_eq!(checks(&v), ["lock-order"], "{v:?}");
+        assert_eq!(v[0].line, 11);
+        assert!(v[0].msg.contains("alpha -> beta"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn lock_order_allows_one_directional_nesting() {
+        // state -> journal everywhere: legal by construction
+        let src = "fn f(s: &S) {\n\
+                   let st = lock_or_recover(&s.state);\n\
+                   lock_or_recover(&s.journal).append(1);\n\
+                   }\n\
+                   fn g(s: &S) {\n\
+                   let st = lock_or_recover(&s.state);\n\
+                   lock_or_recover(&s.journal).append(2);\n\
+                   }\n";
+        assert!(run_one("eval/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_ignores_statement_temporaries_and_drops() {
+        // f: metrics held, then state.  g: state held but explicitly
+        // dropped before the metrics TEMPORARY (no `let`) — neither
+        // inversion is real, so the tree is clean.
+        let src = "fn f(s: &S) {\n\
+                   let m = lock_or_recover(&s.metrics);\n\
+                   lock_or_recover(&s.state).tick();\n\
+                   }\n\
+                   fn g(s: &S) {\n\
+                   let st = lock_or_recover(&s.state);\n\
+                   st.tick();\n\
+                   drop(st);\n\
+                   lock_or_recover(&s.metrics).bump();\n\
+                   }\n";
+        let v = run_one("eval/x.rs", src);
+        assert!(v.is_empty(), "{v:?}");
     }
 }

@@ -28,6 +28,36 @@ use super::envelope::{Command, Event};
 use super::request::{GenRequest, GenResponse, ProgressEvent};
 use crate::util::json::Json;
 
+/// Typed server-side failure surfaced by [`Client::generate`] /
+/// [`Client::generate_with`]: the wire error code, the optional
+/// human-readable detail and — while the fleet is degraded or browned
+/// out — the server's suggested backoff.  It rides inside the
+/// `anyhow` error, so callers can `downcast_ref::<RemoteError>()` for
+/// the structured fields while existing string matching on
+/// `"server error: <code>"` keeps working.
+#[derive(Clone, Debug)]
+pub struct RemoteError {
+    pub code: String,
+    pub message: Option<String>,
+    /// backoff hint from the server's `retry_after_ms` error field
+    pub retry_after_ms: Option<u64>,
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.message {
+            Some(m) => write!(f, "server error: {} ({m})", self.code)?,
+            None => write!(f, "server error: {}", self.code)?,
+        }
+        if let Some(ms) = self.retry_after_ms {
+            write!(f, "; retry in {ms} ms")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
 /// Typed reply to [`Client::cancel`].
 #[derive(Clone, Debug)]
 pub struct CancelAck {
@@ -153,13 +183,15 @@ impl Client {
             match self.next_event()? {
                 Event::Progress(ev) if ev.id == id => on_progress(&ev),
                 Event::Done(resp) if resp.id == id => return Ok(resp),
-                Event::Error { id: eid, code, message }
+                Event::Error { id: eid, code, message, retry_after_ms }
                     if eid == Some(id) || eid.is_none() =>
                 {
-                    match message {
-                        Some(m) => bail!("server error: {code} ({m})"),
-                        None => bail!("server error: {code}"),
+                    return Err(RemoteError {
+                        code,
+                        message,
+                        retry_after_ms,
                     }
+                    .into());
                 }
                 other => self.pending.push_back(other),
             }

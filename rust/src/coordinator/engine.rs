@@ -24,6 +24,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use super::journal::Journal;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority};
 use super::scheduler::{
@@ -91,6 +92,23 @@ pub struct EngineConfig {
     /// family and rebinds idle workers toward backlogged families
     /// (implies `migrate`)
     pub fleet_auto: bool,
+    /// write-ahead admission journal path (`--journal`): every queued
+    /// admission and terminal resolution is logged, and `start()`
+    /// replays any incomplete set left by a previous process before
+    /// taking new traffic.  `None` (the default) journals nothing.
+    pub journal_path: Option<String>,
+    /// worker-death retry budget (`--retry-budget`): in-flight
+    /// requests on a dead worker are re-queued up to this many times
+    /// (exponential backoff) before failing with `unavailable`.  The
+    /// default `0` keeps the pre-journal fail-fast semantics.
+    pub retry_budget: u32,
+    /// brownout hysteresis window (`--brownout`): arms the fleet-health
+    /// machine — under queue pressure or worker loss the engine
+    /// degrades (progress fan-out and predictor grading suspended,
+    /// low-priority queue shed) and recovers only after the pressure
+    /// has stayed clear this many milliseconds.  `None` (the default)
+    /// leaves the machine off.
+    pub brownout_recover_ms: Option<u64>,
 }
 
 impl EngineConfig {
@@ -113,6 +131,9 @@ impl EngineConfig {
             predictor: PredictorConfig::default(),
             migrate: false,
             fleet_auto: false,
+            journal_path: None,
+            retry_budget: 0,
+            brownout_recover_ms: None,
         }
     }
 
@@ -163,6 +184,9 @@ pub struct EngineHandle {
     /// feature is active; its per-family state appears in the metrics
     /// snapshot under `"predictor"`
     predictor: Option<Arc<Estimator>>,
+    /// write-ahead admission journal, when configured; its counters
+    /// appear in the metrics snapshot under `journal_*`
+    journal: Option<Arc<Journal>>,
 }
 
 impl EngineHandle {
@@ -293,6 +317,46 @@ impl EngineHandle {
                 Json::num(poisoned as f64),
             );
         }
+        // fleet-health verdict: present only when the brownout machine
+        // is armed, so unarmed snapshots keep their exact key set
+        if self.sched.brownout_enabled() {
+            m.insert(
+                "fleet_health".to_string(),
+                Json::str(self.sched.health().as_str()),
+            );
+        }
+        // write-ahead journal counters: present only when a journal is
+        // configured
+        if let Some(j) = &self.journal {
+            m.insert(
+                "journal_records".to_string(),
+                Json::num(j.records() as f64),
+            );
+            m.insert(
+                "journal_replayed".to_string(),
+                Json::num(j.replayed() as f64),
+            );
+            m.insert(
+                "journal_truncated_records".to_string(),
+                Json::num(j.truncated_records() as f64),
+            );
+            m.insert(
+                "journal_bytes".to_string(),
+                Json::num(j.bytes() as f64),
+            );
+            m.insert(
+                "journal_write_failures".to_string(),
+                Json::num(j.write_failures() as f64),
+            );
+        }
+        // deterministic fault injection: one `faults_injected_<point>`
+        // lane per fault point that has actually fired
+        for (point, n) in crate::util::fault::fired_counts() {
+            m.insert(
+                format!("faults_injected_{point}"),
+                Json::num(n as f64),
+            );
+        }
         // process-wide artifact cache: mmap'd checkpoint/manifest bytes
         // shared across workers and rebinds.  Always present (even all
         // zero) so operators can watch hit rate and resident bytes.
@@ -334,6 +398,21 @@ impl EngineHandle {
             m.insert("predictor".to_string(), est.snapshot_json());
         }
         Ok(Json::Obj(m))
+    }
+
+    /// Suggested client backoff for overload/unavailable answers —
+    /// `None` while the fleet is healthy, a hint in milliseconds while
+    /// degraded or browned out.  The server attaches it to error
+    /// frames as `retry_after_ms`.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        self.sched.health().retry_after_ms()
+    }
+
+    /// The write-ahead admission journal, when one is configured —
+    /// benches and chaos tests use it to simulate a crash (`seal()`)
+    /// and inspect replay counters.
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.journal.as_ref()
     }
 
     /// Stop admitting new work; workers drain the queue and exit.
@@ -430,6 +509,36 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
     if let Ok(man) = crate::runtime::Manifest::load(&cfg.artifact_dir) {
         sched = sched.with_max_prefix(man.model.seq_len);
     }
+    // write-ahead admission journal: open (self-healing any torn tail
+    // left by a crash) and keep the incomplete set to re-admit once
+    // the workers are up.  An unusable journal path degrades loudly to
+    // journal-less serving rather than refusing to serve at all.
+    let mut replay_incomplete: Vec<GenRequest> = Vec::new();
+    let journal = match &cfg.journal_path {
+        Some(path) => match Journal::open(path) {
+            Ok((j, replay)) => {
+                replay_incomplete = replay.incomplete;
+                Some(Arc::new(j))
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "engine: journal {path} unavailable ({e}); \
+                     serving without crash recovery"
+                );
+                None
+            }
+        },
+        None => None,
+    };
+    if let Some(j) = &journal {
+        sched = sched.with_journal(j.clone());
+    }
+    if cfg.retry_budget > 0 {
+        sched = sched.with_retry_budget(cfg.retry_budget);
+    }
+    if let Some(ms) = cfg.brownout_recover_ms {
+        sched = sched.with_brownout(ms);
+    }
     let sched = Arc::new(sched);
     let mut handles = Vec::new();
     let mut worker_metrics = Vec::new();
@@ -472,12 +581,45 @@ pub fn start(cfg: EngineConfig) -> (EngineHandle, EngineJoin) {
             Ok(())
         }));
     }
+    // crash recovery: re-admit the incomplete set the journal replay
+    // surfaced.  The submitters died with the previous process, so the
+    // outcome receivers are dropped immediately — the work still runs
+    // to completion and `Reply` journals every resolution before
+    // forwarding, so a second restart replays only what this one
+    // leaves unfinished.
+    if !replay_incomplete.is_empty() {
+        let n = replay_incomplete.len() as u64;
+        crate::log_info!(
+            "engine: replaying {n} incomplete request(s) from the \
+             admission journal"
+        );
+        for req in replay_incomplete {
+            let id = req.id;
+            let (tx, _rx) = mpsc::channel();
+            if let Err(e) = sched.submit(req, tx) {
+                // rejected at re-admission (say, a shrunken queue):
+                // resolve the journal record so it cannot resurrect on
+                // every subsequent restart
+                crate::log_warn!(
+                    "engine: replayed request {id} rejected: {}",
+                    e.as_str()
+                );
+                if let Some(j) = &journal {
+                    j.resolve(id, e.as_str());
+                }
+            }
+        }
+        if let Some(j) = &journal {
+            j.note_replayed(n);
+        }
+    }
     (
         EngineHandle {
             sched,
             worker_metrics,
             schedule_envelope,
             predictor: estimator,
+            journal,
         },
         EngineJoin { handles },
     )

@@ -22,7 +22,7 @@
 //! |---|---|
 //! | progress | `{"v":1,"type":"progress","id":N,"step":S,"steps_budget":B,"entropy":..,"kl":..,"switches":..,"norm_x":..,"norm_x0":..[,"tokens":[..]][,"predicted_steps_remaining":R,"predicted_total_steps":T][,"frozen_mask":[0,1,..]]}` — `tokens` is the current decode (prefix positions forced), attached by workers; the `predicted_*` pair is the fleet predictor's live steps-to-halt estimate, present only when the engine runs with prediction enabled; `frozen_mask` (0/1 per position) is the token-level freeze state, present only when the submit set `frozen_mask:true` |
 //! | done     | `{"v":1,"type":"done", ...GenResponse fields...}` — gains the same optional `predicted_*` pair under prediction |
-//! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT]}` |
+//! | error    | `{"v":1,"type":"error","error":CODE[,"id":N][,"message":TEXT][,"retry_after_ms":MS]}` — `retry_after_ms` is a backoff hint attached to `overloaded`/`unavailable` answers while the fleet is degraded or browned out; absent from a healthy fleet, so pre-brownout error frames are byte-identical |
 //! | cancel   | ack: `{"v":1,"type":"cancel","id":N,"cancelled":BOOL,"state":"queued"\|"running"\|"not_found"}` |
 //! | halt     | ack: `{"v":1,"type":"halt","id":N,"found":BOOL,"state":...}` |
 //! | rebind   | ack: `{"v":1,"type":"rebind","worker":W,"ok":BOOL[,"message":TEXT][,"family":F,"batch":B,"drained":D,"rebind_ms":MS]}` — `ok:false` means typed refusal or failure-and-revert |
@@ -210,6 +210,10 @@ pub enum Event {
         id: Option<u64>,
         code: String,
         message: Option<String>,
+        /// backoff hint in milliseconds, attached to `overloaded` /
+        /// `unavailable` answers while the fleet is degraded or
+        /// browned out; absent (no wire bytes) from a healthy fleet
+        retry_after_ms: Option<u64>,
     },
     CancelAck {
         id: u64,
@@ -288,13 +292,16 @@ impl Event {
                 let m = resp.to_json().into_obj();
                 ("done", m)
             }
-            Event::Error { id, code, message } => {
+            Event::Error { id, code, message, retry_after_ms } => {
                 let mut fields = vec![("error", Json::str(code.clone()))];
                 if let Some(id) = id {
                     fields.push(("id", Json::uint(*id)));
                 }
                 if let Some(msg) = message {
                     fields.push(("message", Json::str(msg.clone())));
+                }
+                if let Some(ms) = retry_after_ms {
+                    fields.push(("retry_after_ms", Json::uint(*ms)));
                 }
                 let m = Json::obj(fields).into_obj();
                 ("error", m)
@@ -465,6 +472,9 @@ impl Event {
                     .get("message")
                     .and_then(Json::as_str)
                     .map(str::to_string),
+                retry_after_ms: j
+                    .get("retry_after_ms")
+                    .and_then(Json::as_u64),
             },
             "cancel" => Event::CancelAck {
                 id: need_id()?,
@@ -647,11 +657,20 @@ mod tests {
                 id: Some(4),
                 code: "overloaded".to_string(),
                 message: None,
+                retry_after_ms: None,
             },
             Event::Error {
                 id: None,
                 code: "invalid_request".to_string(),
                 message: Some("bad criterion".to_string()),
+                retry_after_ms: None,
+            },
+            // a degraded fleet attaches the backoff hint
+            Event::Error {
+                id: Some(11),
+                code: "unavailable".to_string(),
+                message: None,
+                retry_after_ms: Some(2000),
             },
             Event::CancelAck {
                 id: 9,
@@ -709,10 +728,20 @@ mod tests {
                     assert_eq!(a.frozen_mask, b.frozen_mask);
                 }
                 (
-                    Event::Error { id: a, code: ca, message: ma },
-                    Event::Error { id: b, code: cb, message: mb },
+                    Event::Error {
+                        id: a,
+                        code: ca,
+                        message: ma,
+                        retry_after_ms: ra,
+                    },
+                    Event::Error {
+                        id: b,
+                        code: cb,
+                        message: mb,
+                        retry_after_ms: rb,
+                    },
                 ) => {
-                    assert_eq!((a, ca, ma), (b, cb, mb));
+                    assert_eq!((a, ca, ma, ra), (b, cb, mb, rb));
                 }
                 (
                     Event::CancelAck { id: a, cancelled: xa, state: sa },
@@ -801,5 +830,23 @@ mod tests {
         // token halting off (or not requested) leaves the frame
         // byte-free of the optional freeze field too
         assert!(!encoded.contains("frozen"), "{encoded}");
+    }
+
+    /// A healthy fleet's error frames carry no backoff hint — the
+    /// pre-brownout wire bytes are pinned exactly.
+    #[test]
+    fn healthy_error_frame_bytes_are_unchanged() {
+        let encoded = Event::Error {
+            id: Some(4),
+            code: "overloaded".to_string(),
+            message: None,
+            retry_after_ms: None,
+        }
+        .to_json()
+        .encode();
+        assert_eq!(
+            encoded,
+            r#"{"error":"overloaded","id":4,"type":"error","v":1}"#
+        );
     }
 }

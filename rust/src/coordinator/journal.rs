@@ -1,0 +1,527 @@
+//! Write-ahead admission journal: crash recovery for the serving
+//! engine.
+//!
+//! Every *queued* admission appends an `admit` record carrying the
+//! request's full wire params (id, prefix, schedule, policy, seed —
+//! [`GenRequest::to_json`]); every terminal resolution appends a
+//! `resolve` record carrying the outcome code (`"ok"` or the
+//! [`super::ServeError`] taxonomy code).  On restart,
+//! [`Journal::open`] replays the log: the requests with an `admit` but
+//! no `resolve` are exactly the in-flight set the crash orphaned, and
+//! the engine re-admits them deterministically from their recorded
+//! params + seed.
+//!
+//! Record framing (all little-endian):
+//!
+//! ```text
+//! [u32 len] [u32 fnv1a32(payload)] [payload: len bytes of JSON]
+//! ```
+//!
+//! Payloads: `{"ev":"admit","req":{...GenRequest...}}` and
+//! `{"ev":"resolve","id":N,"outcome":"ok"|"<code>"}`.
+//!
+//! A crash can tear the tail: replay stops REPLAYING at the first
+//! record whose length is implausible, whose bytes are short, or whose
+//! checksum mismatches, keeps COUNTING the sane-looking frames after
+//! it (`truncated_records`), truncates the file back to the longest
+//! valid prefix (self-heal), and reopens for append.  Appends are
+//! fsync-batched ([`FSYNC_BATCH`]); [`Journal::sync`] forces one and
+//! drop syncs the tail.  Append failures — real IO errors or an
+//! injected `journal_write` fault — are *counted, never propagated*:
+//! the serving path must not fail requests because the durability
+//! side-channel hiccuped.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::request::GenRequest;
+use crate::util::fault;
+use crate::util::json::Json;
+use crate::util::sync::lock_or_recover;
+
+/// Appends between forced fsyncs.  Batching amortizes the sync cost
+/// across a burst; a crash can lose at most this many tail records,
+/// which replay treats exactly like a torn tail.
+const FSYNC_BATCH: u64 = 32;
+
+/// A record longer than this is treated as tail corruption, not an
+/// allocation request (a torn length prefix can read as gigabytes).
+const MAX_RECORD: u32 = 1 << 20;
+
+/// Record header: u32 payload length + u32 FNV-1a checksum.
+const HEADER: usize = 8;
+
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// What [`Journal::open`] recovered from an existing log.
+pub struct Replay {
+    /// admitted-but-unresolved requests, in admission order — the
+    /// exact set a crash orphaned; the engine re-admits them
+    pub incomplete: Vec<GenRequest>,
+    /// valid records replayed
+    pub records: u64,
+    /// sane-looking frames discarded past the first invalid record
+    /// (torn tail / corrupted checksum) — the
+    /// `journal_truncated_records` counter
+    pub truncated_records: u64,
+}
+
+struct Inner {
+    file: Option<File>,
+    /// appends since the last fsync
+    unsynced: u64,
+}
+
+/// Append-only write-ahead log handle, shared (`Arc`) between the
+/// scheduler (admits/resolves) and the engine (metrics, sync).
+pub struct Journal {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+    /// sealed ⇒ writes stop (crash simulation for tests/bench; a
+    /// sealed journal behaves like the process already died)
+    sealed: AtomicBool,
+    records: AtomicU64,
+    bytes: AtomicU64,
+    truncated: AtomicU64,
+    replayed: AtomicU64,
+    write_failures: AtomicU64,
+}
+
+/// One record scanned from disk.
+enum Scanned {
+    /// valid payload (consumed `HEADER + len` bytes)
+    Ok(Vec<u8>),
+    /// invalid here, but the frame's claimed extent stays in-bounds —
+    /// count it and keep scanning frames for the truncated tally
+    Corrupt(usize),
+    /// nothing sane at this offset — stop counting
+    End,
+}
+
+fn scan_record(buf: &[u8], at: usize) -> Scanned {
+    let Some(head) = buf.get(at..at + HEADER) else {
+        return Scanned::End;
+    };
+    // slices are HEADER bytes by construction
+    let len = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    let sum = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+    if len > MAX_RECORD {
+        return Scanned::End;
+    }
+    let end = at + HEADER + len as usize;
+    let Some(payload) = buf.get(at + HEADER..end) else {
+        // torn tail: the frame claims more bytes than the file holds
+        return Scanned::Corrupt(buf.len() - at);
+    };
+    if fnv1a32(payload) != sum {
+        return Scanned::Corrupt(HEADER + len as usize);
+    }
+    Scanned::Ok(payload.to_vec())
+}
+
+fn parse_payload(
+    payload: &[u8],
+    admits: &mut Vec<GenRequest>,
+) -> Result<()> {
+    let text = std::str::from_utf8(payload)
+        .context("journal payload is not UTF-8")?;
+    let j = Json::parse(text)
+        .map_err(|e| anyhow::anyhow!("journal payload: {e}"))?;
+    match j.get("ev").and_then(Json::as_str) {
+        Some("admit") => {
+            let req = j
+                .get("req")
+                .context("admit record without req")
+                .and_then(GenRequest::from_json)?;
+            // re-admission of a retried/replayed id supersedes the
+            // older record for the same id
+            admits.retain(|r| r.id != req.id);
+            admits.push(req);
+        }
+        Some("resolve") => {
+            let id = j
+                .get("id")
+                .and_then(Json::as_u64)
+                .context("resolve record without id")?;
+            admits.retain(|r| r.id != id);
+        }
+        _ => anyhow::bail!("journal record with unknown ev"),
+    }
+    Ok(())
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, replay it, self-heal
+    /// the tail, and return the handle plus what was recovered.
+    pub fn open(path: impl AsRef<Path>) -> Result<(Journal, Replay)> {
+        let path = path.as_ref().to_path_buf();
+        let mut buf = Vec::new();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .append(true)
+            .create(true)
+            .open(&path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        file.read_to_end(&mut buf)
+            .with_context(|| format!("read journal {}", path.display()))?;
+
+        let mut admits: Vec<GenRequest> = Vec::new();
+        let mut records = 0u64;
+        let mut truncated = 0u64;
+        let mut at = 0usize;
+        let mut valid_end = 0usize;
+        let mut healthy = true;
+        while at < buf.len() {
+            match scan_record(&buf, at) {
+                Scanned::Ok(payload) => {
+                    let parsed = healthy
+                        && parse_payload(&payload, &mut admits).is_ok();
+                    if parsed {
+                        records += 1;
+                        at += HEADER + payload.len();
+                        valid_end = at;
+                    } else {
+                        // a well-framed record with a bad payload (or
+                        // any frame past the first bad one) counts as
+                        // truncated, not replayed
+                        healthy = false;
+                        truncated += 1;
+                        at += HEADER + payload.len();
+                    }
+                }
+                Scanned::Corrupt(span) => {
+                    healthy = false;
+                    truncated += 1;
+                    at += span;
+                }
+                Scanned::End => break,
+            }
+        }
+
+        // self-heal: drop everything past the longest valid prefix so
+        // the next append starts on a record boundary
+        if valid_end < buf.len() {
+            file.set_len(valid_end as u64).with_context(|| {
+                format!("truncate journal {}", path.display())
+            })?;
+            file.seek(SeekFrom::End(0))
+                .with_context(|| format!("seek journal {}", path.display()))?;
+        }
+
+        let journal = Journal {
+            path,
+            inner: Mutex::new(Inner { file: Some(file), unsynced: 0 }),
+            sealed: AtomicBool::new(false),
+            records: AtomicU64::new(records),
+            bytes: AtomicU64::new(valid_end as u64),
+            truncated: AtomicU64::new(truncated),
+            replayed: AtomicU64::new(0),
+            write_failures: AtomicU64::new(0),
+        };
+        let replay = Replay { incomplete: admits, records, truncated_records: truncated };
+        Ok((journal, replay))
+    }
+
+    /// Append one record.  Best-effort by design: an IO error (or an
+    /// injected `journal_write` fault) is counted and logged, never
+    /// propagated — the serving path must not fail a request because
+    /// the durability side-channel did.
+    fn append(&self, payload: &Json) {
+        if self.sealed.load(Ordering::Acquire) {
+            return;
+        }
+        let text = payload.encode();
+        let bytes = text.as_bytes();
+        if bytes.len() as u64 > MAX_RECORD as u64 {
+            self.write_failures.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!(
+                "journal: record of {} bytes exceeds the frame bound, \
+                 dropped",
+                bytes.len()
+            );
+            return;
+        }
+        let mut frame = Vec::with_capacity(HEADER + bytes.len());
+        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a32(bytes).to_le_bytes());
+        frame.extend_from_slice(bytes);
+
+        let mut inner = lock_or_recover(&self.inner);
+        let injected = fault::check("journal_write").is_some();
+        let wrote = if injected {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "injected journal_write fault",
+            ))
+        } else if let Some(f) = inner.file.as_mut() {
+            f.write_all(&frame)
+        } else {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "journal file unavailable",
+            ))
+        };
+        match wrote {
+            Ok(()) => {
+                self.records.fetch_add(1, Ordering::Relaxed);
+                self.bytes
+                    .fetch_add(frame.len() as u64, Ordering::Relaxed);
+                inner.unsynced += 1;
+                if inner.unsynced >= FSYNC_BATCH {
+                    inner.unsynced = 0;
+                    if let Some(f) = inner.file.as_mut() {
+                        let _ = f.sync_data();
+                    }
+                }
+            }
+            Err(e) => {
+                self.write_failures.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "journal: append to {} failed: {e}",
+                    self.path.display()
+                );
+            }
+        }
+    }
+
+    /// Record a queued admission (the request's full wire params — the
+    /// replay side re-admits from exactly these).
+    pub fn admit(&self, req: &GenRequest) {
+        self.admit_json(req.to_json());
+    }
+
+    /// [`Self::admit`] from a pre-serialized request: the scheduler
+    /// encodes outside its state lock and appends inside it, so the
+    /// admit record always precedes the request's resolve.
+    pub fn admit_json(&self, req_json: Json) {
+        self.append(&Json::obj(vec![
+            ("ev", Json::str("admit")),
+            ("req", req_json),
+        ]));
+    }
+
+    /// Record a terminal resolution: `outcome` is `"ok"` or the
+    /// [`super::ServeError`] taxonomy code.
+    pub fn resolve(&self, id: u64, outcome: &str) {
+        self.append(&Json::obj(vec![
+            ("ev", Json::str("resolve")),
+            ("id", Json::uint(id)),
+            ("outcome", Json::str(outcome)),
+        ]));
+    }
+
+    /// Force the batched tail to disk.
+    pub fn sync(&self) {
+        let mut inner = lock_or_recover(&self.inner);
+        inner.unsynced = 0;
+        if let Some(f) = inner.file.as_mut() {
+            let _ = f.sync_data();
+        }
+    }
+
+    /// Stop all future writes, leaving the on-disk state as-is — the
+    /// crash-simulation hook for chaos tests and the recovery bench (a
+    /// sealed journal looks exactly like the process died here).
+    pub fn seal(&self) {
+        self.sealed.store(true, Ordering::Release);
+        let mut inner = lock_or_recover(&self.inner);
+        inner.file = None;
+    }
+
+    /// Note how many replayed requests the engine re-admitted (the
+    /// `journal_replayed` metrics key).
+    pub fn note_replayed(&self, n: u64) {
+        self.replayed.store(n, Ordering::Relaxed);
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn truncated_records(&self) -> u64 {
+        self.truncated.load(Ordering::Relaxed)
+    }
+
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
+    }
+
+    pub fn write_failures(&self) -> u64 {
+        self.write_failures.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        let mut inner = lock_or_recover(&self.inner);
+        if let Some(f) = inner.file.as_mut() {
+            let _ = f.sync_data();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("repro_journal_{name}_{}", std::process::id()));
+        p
+    }
+
+    fn req(id: u64) -> GenRequest {
+        let mut r = GenRequest::new(id, 8);
+        r.prefix = vec![1, 2, 3];
+        r
+    }
+
+    #[test]
+    fn round_trip_replays_incomplete_set() {
+        let path = tmp("round_trip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let (j, r) = Journal::open(&path).unwrap();
+            assert_eq!(r.records, 0);
+            assert!(r.incomplete.is_empty());
+            j.admit(&req(1));
+            j.admit(&req(2));
+            j.admit(&req(3));
+            j.resolve(2, "ok");
+            j.sync();
+        }
+        let (_j, r) = Journal::open(&path).unwrap();
+        assert_eq!(r.records, 4);
+        assert_eq!(r.truncated_records, 0);
+        let ids: Vec<u64> = r.incomplete.iter().map(|q| q.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        assert_eq!(r.incomplete[0].n_steps, 8);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_replays_longest_valid_prefix() {
+        let path = tmp("torn_tail");
+        let _ = std::fs::remove_file(&path);
+        {
+            let (j, _) = Journal::open(&path).unwrap();
+            j.admit(&req(1));
+            j.admit(&req(2));
+            j.sync();
+        }
+        // tear the last record: chop 5 bytes off the file
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+        let (j, r) = Journal::open(&path).unwrap();
+        assert_eq!(r.records, 1);
+        assert_eq!(r.truncated_records, 1);
+        assert_eq!(r.incomplete.len(), 1);
+        assert_eq!(r.incomplete[0].id, 1);
+        // self-healed: appends continue cleanly after the truncation
+        j.admit(&req(3));
+        j.sync();
+        drop(j);
+        let (_j, r) = Journal::open(&path).unwrap();
+        assert_eq!(r.truncated_records, 0);
+        let ids: Vec<u64> = r.incomplete.iter().map(|q| q.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_checksum_mid_file_counts_tail_frames() {
+        let path = tmp("corrupt_mid");
+        let _ = std::fs::remove_file(&path);
+        let (ends, total) = {
+            let (j, _) = Journal::open(&path).unwrap();
+            let mut ends = Vec::new();
+            for id in 1..=5 {
+                j.admit(&req(id));
+                j.sync();
+                ends.push(std::fs::metadata(&path).unwrap().len());
+            }
+            (ends, std::fs::metadata(&path).unwrap().len())
+        };
+        // flip one payload byte inside record 3 (frames 3..5 become
+        // unreplayable: 3 corrupt, 4-5 past the corruption)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx = ends[2] as usize - 1;
+        bytes[idx] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(bytes.len() as u64, total);
+        let (_j, r) = Journal::open(&path).unwrap();
+        assert_eq!(r.records, 2);
+        assert_eq!(r.truncated_records, 3);
+        let ids: Vec<u64> = r.incomplete.iter().map(|q| q.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        // healed file holds exactly the valid prefix
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), ends[1]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_journal_is_clean() {
+        let path = tmp("empty");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(&path, b"").unwrap();
+        let (_j, r) = Journal::open(&path).unwrap();
+        assert_eq!(r.records, 0);
+        assert_eq!(r.truncated_records, 0);
+        assert!(r.incomplete.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn injected_write_fault_is_counted_not_propagated() {
+        let _g = crate::util::fault::test_serial();
+        let path = tmp("write_fault");
+        let _ = std::fs::remove_file(&path);
+        crate::util::fault::install("journal_write@1:fail").unwrap();
+        let (j, _) = Journal::open(&path).unwrap();
+        j.admit(&req(1)); // hit 0: lands
+        j.admit(&req(2)); // hit 1: injected failure, swallowed
+        j.admit(&req(3)); // hit 2: lands
+        j.sync();
+        assert_eq!(j.write_failures(), 1);
+        crate::util::fault::clear();
+        drop(j);
+        let (_j, r) = Journal::open(&path).unwrap();
+        let ids: Vec<u64> = r.incomplete.iter().map(|q| q.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sealed_journal_stops_recording() {
+        let path = tmp("sealed");
+        let _ = std::fs::remove_file(&path);
+        let (j, _) = Journal::open(&path).unwrap();
+        j.admit(&req(1));
+        j.sync();
+        j.seal();
+        j.resolve(1, "ok"); // post-seal: unrecorded, like a crash
+        drop(j);
+        let (_j, r) = Journal::open(&path).unwrap();
+        assert_eq!(r.incomplete.len(), 1);
+        assert_eq!(r.incomplete[0].id, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

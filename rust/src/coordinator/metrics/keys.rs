@@ -52,6 +52,18 @@ pub const SNAPSHOT_KEYS: &[&str] = &[
     "token_steps_saved",
     "frozen_step_fraction",
     "lock_poisoned",
+    // chaos-hardening lanes (absent until the feature fires / is
+    // configured): worker-death retries, brownout shedding, the
+    // fleet-health verdict, and the write-ahead journal counters
+    "requests_retried",
+    "retries_exhausted",
+    "brownout_shed",
+    "fleet_health",
+    "journal_records",
+    "journal_replayed",
+    "journal_truncated_records",
+    "journal_bytes",
+    "journal_write_failures",
     // engine fleet gauges + per-worker breakdown + nested objects
     "worker",
     "family",
@@ -89,6 +101,7 @@ pub const SNAPSHOT_PREFIXES: &[&str] = &[
     "tokens_frozen_",
     "token_steps_saved_",
     "frozen_step_fraction_",
+    "faults_injected_",
 ];
 
 /// Keys `scripts/bench_schema.txt` may use that are bench-harness
@@ -109,6 +122,10 @@ pub const BENCH_KEYS: &[&str] = &[
     "goodput_during",
     "goodput_after",
     "reclaimed_slot_steps",
+    "recovery",
+    "recovery_ms",
+    "requests_replayed",
+    "requests_lost",
 ];
 
 /// True when `key` is a declared snapshot key (verbatim or via a

@@ -228,6 +228,15 @@ pub struct Metrics {
     /// in-flight requests exported back to the queue by rebind drains
     /// (all of them resumed elsewhere or answered typed — never lost)
     pub rebind_requests_drained: u64,
+    /// in-flight requests re-admitted after a worker death (bounded by
+    /// the scheduler's retry budget)
+    pub requests_retried: u64,
+    /// requests that burned their whole retry budget and failed over
+    /// to the typed `unavailable`
+    pub retries_exhausted: u64,
+    /// low-priority queued requests shed on a brownout transition
+    /// (answered with the typed `overloaded`)
+    pub brownout_shed: u64,
     /// mostly-frozen slots handed to a smaller shard mid-generation
     pub slots_migrated: u64,
     /// slot-steps reclaimed on the source shard by those migrations
@@ -271,6 +280,9 @@ impl Default for Metrics {
             progress_dropped: 0,
             rebinds: 0,
             rebind_requests_drained: 0,
+            requests_retried: 0,
+            retries_exhausted: 0,
+            brownout_shed: 0,
             slots_migrated: 0,
             migration_reclaimed_slot_steps: 0,
             slots_total: 0,
@@ -409,6 +421,9 @@ impl Metrics {
         self.progress_dropped += other.progress_dropped;
         self.rebinds += other.rebinds;
         self.rebind_requests_drained += other.rebind_requests_drained;
+        self.requests_retried += other.requests_retried;
+        self.retries_exhausted += other.retries_exhausted;
+        self.brownout_shed += other.brownout_shed;
         self.slots_migrated += other.slots_migrated;
         self.migration_reclaimed_slot_steps +=
             other.migration_reclaimed_slot_steps;
@@ -507,6 +522,26 @@ impl Metrics {
             m.insert(
                 "migration_reclaimed_slot_steps".to_string(),
                 Json::num(self.migration_reclaimed_slot_steps as f64),
+            );
+        }
+        // chaos-hardening counters ride only once the feature fired,
+        // same contract as the elastic lanes above
+        if self.requests_retried > 0 {
+            m.insert(
+                "requests_retried".to_string(),
+                Json::num(self.requests_retried as f64),
+            );
+        }
+        if self.retries_exhausted > 0 {
+            m.insert(
+                "retries_exhausted".to_string(),
+                Json::num(self.retries_exhausted as f64),
+            );
+        }
+        if self.brownout_shed > 0 {
+            m.insert(
+                "brownout_shed".to_string(),
+                Json::num(self.brownout_shed as f64),
             );
         }
         for prio in Priority::ALL {

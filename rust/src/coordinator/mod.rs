@@ -38,6 +38,10 @@
 //! * [`client`] — the first-class typed [`Client`] (submit / stream /
 //!   halt / cancel / metrics) shared by the CLI, examples, benches and
 //!   tests.
+//! * [`journal`] — write-ahead admission log: queued admissions and
+//!   terminal resolutions appended as length-prefixed, checksummed
+//!   records (fsync-batched, torn-tail tolerant); on restart the
+//!   engine replays it and re-admits exactly the incomplete set.
 //! * [`metrics`] — per-worker metrics merged into one fleet snapshot:
 //!   queue-depth and slot-occupancy gauges, per-priority latency
 //!   histograms, `rejected_overloaded`/`cancelled`/`deadline_exceeded`
@@ -53,6 +57,7 @@
 pub mod client;
 pub mod engine;
 pub mod envelope;
+pub mod journal;
 pub mod metrics;
 pub mod progress;
 pub mod request;
@@ -60,13 +65,14 @@ pub mod scheduler;
 pub mod server;
 pub mod worker;
 
-pub use client::{CancelAck, Client, HaltAck, RebindAck};
+pub use client::{CancelAck, Client, HaltAck, RebindAck, RemoteError};
 pub use engine::{start, EngineConfig, EngineHandle, EngineJoin};
 pub use envelope::{Command, Event, PROTOCOL_VERSION};
 pub use request::{GenRequest, GenResponse, Priority, ProgressEvent};
 pub use progress::DEFAULT_PROGRESS_BUFFER;
+pub use journal::{Journal, Replay};
 pub use scheduler::{
-    CancelOutcome, GenOutcome, ProgressRx, ProgressTx, RebindOrder,
-    RebindReport, ResumeState, Scheduler, ServeError,
+    CancelOutcome, FleetHealth, GenOutcome, ProgressRx, ProgressTx,
+    RebindOrder, RebindReport, ResumeState, Scheduler, ServeError,
 };
 pub use server::Server;

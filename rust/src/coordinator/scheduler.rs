@@ -53,7 +53,25 @@
 //! The scheduler is shared (`Arc`) between every front-end thread and
 //! every worker; all state sits behind one mutex, with a condvar waking
 //! idle workers on new work or shutdown.  Lock discipline: the state
-//! mutex and the metrics mutex are never held at the same time.
+//! mutex and the metrics mutex are never held at the same time; the
+//! journal's internal lock nests one-directionally *inside* the state
+//! mutex (submit appends the admit record before releasing state, so
+//! no resolve can precede its admit) and never the other way around.
+//!
+//! Robustness layers (armed per-scheduler, all off by default):
+//!
+//! * **write-ahead journal** ([`Self::with_journal`]) — queued
+//!   admissions and every terminal resolution are appended to
+//!   [`super::journal::Journal`]; restart replays the incomplete set;
+//! * **worker-death retries** ([`Self::with_retry_budget`]) — a
+//!   request lost to a worker panic or device failure is re-admitted
+//!   (bounded attempts, exponential backoff) instead of failing over
+//!   to `unavailable`, when another live worker serves its family;
+//! * **brownout machine** ([`Self::with_brownout`]) — queue pressure
+//!   and dead workers drive `healthy` → `degraded` → `browned_out`
+//!   ([`FleetHealth`]); entering brownout sheds the low-priority
+//!   queue, workers suspend optional work, and error frames carry a
+//!   `retry_after_ms` hint; recovery is hysteretic.
 //!
 //! Families are [`FamilyId`]s from the open `sampler::registry`, so a
 //! kernel registered at runtime routes exactly like a built-in; the
@@ -62,15 +80,18 @@
 //! serves it).
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::journal::Journal;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Priority, ProgressEvent};
 use crate::halting::BoxedPolicy;
-use crate::util::sync::{lock_or_recover, wait_or_recover};
+use crate::util::sync::{
+    lock_or_recover, wait_or_recover, wait_timeout_or_recover,
+};
 use crate::predictor::{
     check_feasibility, Estimator, Feasibility, PackingMode, N_BUCKETS,
     N_SLOPE_BUCKETS,
@@ -145,6 +166,88 @@ pub type GenOutcome = Result<GenResponse, ServeError>;
 
 /// Reply channel for one request.
 pub type ReplyTx = mpsc::Sender<GenOutcome>;
+
+/// Fleet-health verdict of the brownout state machine (off by
+/// default; armed with [`Scheduler::with_brownout`]).  Escalation is
+/// immediate; recovery is hysteretic — the raw signal must stay clear
+/// for the configured recovery window before the fleet steps back
+/// down, so health can't flap at a threshold boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetHealth {
+    /// normal operation
+    Healthy,
+    /// sustained pressure (deep queue or a dead worker): clients
+    /// should back off briefly
+    Degraded,
+    /// near-saturation: low-priority queued work is shed, optional
+    /// work (progress fan-out, predictor grading) is suspended
+    BrownedOut,
+}
+
+impl FleetHealth {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FleetHealth::Healthy => "healthy",
+            FleetHealth::Degraded => "degraded",
+            FleetHealth::BrownedOut => "browned_out",
+        }
+    }
+
+    /// Suggested client backoff, attached to `overloaded`/
+    /// `unavailable` v1 error frames as `retry_after_ms` (absent when
+    /// healthy, so pre-brownout wire bytes stay pinned).
+    pub fn retry_after_ms(self) -> Option<u64> {
+        match self {
+            FleetHealth::Healthy => None,
+            FleetHealth::Degraded => Some(RETRY_AFTER_DEGRADED_MS),
+            FleetHealth::BrownedOut => Some(RETRY_AFTER_BROWNOUT_MS),
+        }
+    }
+
+    fn from_u8(v: u8) -> FleetHealth {
+        match v {
+            2 => FleetHealth::BrownedOut,
+            1 => FleetHealth::Degraded,
+            _ => FleetHealth::Healthy,
+        }
+    }
+}
+
+/// `retry_after_ms` hint on error frames while degraded.
+pub const RETRY_AFTER_DEGRADED_MS: u64 = 500;
+
+/// `retry_after_ms` hint on error frames while browned out.
+pub const RETRY_AFTER_BROWNOUT_MS: u64 = 2000;
+
+/// A request's reply handle: the raw channel plus the write-ahead
+/// journal hookup.  Every terminal resolution in the stack goes
+/// through exactly one `send`, so journaling here makes the resolve
+/// record exhaustive by construction — no resolution path can forget
+/// it.  The journal reference is `None` for immediate (preflight)
+/// answers and journal-less schedulers.
+pub struct Reply {
+    tx: ReplyTx,
+    journal: Option<Arc<Journal>>,
+    id: u64,
+}
+
+impl Reply {
+    /// Journal the outcome (`"ok"` or the taxonomy code), then forward
+    /// it to the submitter.
+    pub fn send(
+        &self,
+        outcome: GenOutcome,
+    ) -> Result<(), mpsc::SendError<GenOutcome>> {
+        if let Some(j) = &self.journal {
+            let code = match &outcome {
+                Ok(_) => "ok",
+                Err(e) => e.as_str(),
+            };
+            j.resolve(self.id, code);
+        }
+        self.tx.send(outcome)
+    }
+}
 
 /// Progress-subscriber channel for one request: the owning worker sends
 /// a throttled [`ProgressEvent`] every `progress_every` executed steps.
@@ -221,7 +324,7 @@ pub struct RebindReport {
 /// resolved family, and timing/deadline state.
 pub struct QueuedReq {
     pub req: GenRequest,
-    pub reply: ReplyTx,
+    pub reply: Reply,
     /// per-step progress subscriber (None = one-shot request); dropped
     /// by the worker on the first failed send
     pub progress: Option<ProgressTx>,
@@ -238,12 +341,18 @@ pub struct QueuedReq {
     /// mid-generation state from a drain or migration; the admitting
     /// worker imports it instead of resetting a fresh slot
     pub resume: Option<Box<ResumeState>>,
+    /// worker-death retries consumed so far (bounded by the
+    /// scheduler's retry budget)
+    pub attempts: u32,
+    /// retry backoff: `next_for` skips this entry until the instant
+    /// passes (exponential per attempt)
+    pub not_before: Option<Instant>,
 }
 
 impl QueuedReq {
     fn new(
         req: GenRequest,
-        reply: ReplyTx,
+        reply: Reply,
         progress: Option<ProgressTx>,
         family: FamilyId,
         predicted_steps: Option<usize>,
@@ -261,6 +370,8 @@ impl QueuedReq {
             deadline,
             predicted_steps,
             resume: None,
+            attempts: 0,
+            not_before: None,
         }
     }
 }
@@ -398,6 +509,12 @@ struct State {
     /// once by the owning worker
     rebind_orders: Vec<Option<RebindOrder>>,
     shutdown: bool,
+    /// brownout machine state (`FleetHealth` as u8; 0 until armed)
+    health: u8,
+    /// when the raw health signal first read *below* the current
+    /// level — recovery steps down only after it stays clear for the
+    /// configured window (hysteresis)
+    health_clear_since: Option<Instant>,
 }
 
 /// Under the state lock: when `fam` has no live worker left, drain its
@@ -466,6 +583,21 @@ pub struct Scheduler {
     /// estimator-update ticks since the last bounded queue re-sort
     /// (the satellite re-sort is throttled, not per-completion)
     resort_ticks: AtomicU64,
+    /// write-ahead admission journal (None = no durability); appended
+    /// OUTSIDE the state lock, per the lock discipline
+    journal: Option<Arc<Journal>>,
+    /// worker-death retries allowed per request (0 = fail over to
+    /// `unavailable` immediately, the pre-journal behavior)
+    retry_budget: u32,
+    /// brownout state machine armed?  Off by default: health stays
+    /// `healthy` and nothing is ever shed
+    health_enabled: bool,
+    /// how long the raw health signal must stay clear before the
+    /// machine steps down a level
+    health_recover_ms: u64,
+    /// latest evaluated health as u8, mirrored for lock-free reads on
+    /// the worker hot path ([`Self::health_is_brownout`])
+    health_atom: AtomicU8,
     /// admission-side bookkeeping: submissions, preflight completions,
     /// overload rejections, queued-side cancels and deadline drops
     pub metrics: Mutex<Metrics>,
@@ -502,6 +634,8 @@ impl Scheduler {
                 worker_alive: vec![true; n_workers],
                 rebind_orders: (0..n_workers).map(|_| None).collect(),
                 shutdown: false,
+                health: 0,
+                health_clear_since: None,
             }),
             work_ready: Condvar::new(),
             queue_cap,
@@ -511,8 +645,41 @@ impl Scheduler {
             max_prefix: None,
             default_family,
             resort_ticks: AtomicU64::new(0),
+            journal: None,
+            retry_budget: 0,
+            health_enabled: false,
+            health_recover_ms: 1500,
+            health_atom: AtomicU8::new(0),
             metrics: Mutex::new(Metrics::default()),
         }
+    }
+
+    /// Hook up the write-ahead admission journal: every queued
+    /// admission and every terminal resolution is appended (outside
+    /// the state lock), so a restart can replay exactly the
+    /// incomplete set.
+    pub fn with_journal(mut self, journal: Arc<Journal>) -> Scheduler {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Allow each request up to `budget` re-admissions after a worker
+    /// death (exponential backoff between attempts) before it fails
+    /// over to the typed `unavailable`.  0 (the default) keeps the
+    /// fail-fast behavior.
+    pub fn with_retry_budget(mut self, budget: u32) -> Scheduler {
+        self.retry_budget = budget;
+        self
+    }
+
+    /// Arm the brownout state machine: escalate immediately on queue
+    /// pressure or worker death, recover only after the signal stays
+    /// clear for `recover_ms` (hysteresis).  Entering `browned_out`
+    /// sheds low-priority queued work with a typed `overloaded`.
+    pub fn with_brownout(mut self, recover_ms: u64) -> Scheduler {
+        self.health_enabled = true;
+        self.health_recover_ms = recover_ms;
+        self
     }
 
     /// Reject requests whose prefix exceeds the fleet's compiled
@@ -668,6 +835,14 @@ impl Scheduler {
             _ => (None, false),
         };
 
+        // the journal's admit record is serialized BEFORE the lock
+        // (JSON encoding has no place inside the critical section) and
+        // appended after it, only when the request actually enqueued
+        let admit_record = match &self.journal {
+            Some(_) if !immediate => Some(req.to_json()),
+            _ => None,
+        };
+
         // admission verdict and enqueue under ONE lock acquisition: a
         // submit racing shutdown() or the last worker's exit must never
         // enqueue onto a fleet nobody will drain (the caller's recv()
@@ -677,9 +852,9 @@ impl Scheduler {
             Enqueued,
             Reject(ServeError),
         }
-        let outcome = {
+        let (outcome, shed) = {
             let mut st = lock_or_recover(&self.state);
-            if st.workers_live == 0 {
+            let outcome = if st.workers_live == 0 {
                 Admit::Reject(ServeError::Unavailable)
             } else if st.shutdown {
                 Admit::Reject(ServeError::Overloaded)
@@ -716,9 +891,14 @@ impl Scheduler {
                 Admit::Reject(ServeError::Overloaded)
             } else {
                 st.live_ids.insert(req.id);
+                let id = req.id;
                 let q = QueuedReq::new(
                     req,
-                    reply,
+                    Reply {
+                        tx: reply,
+                        journal: self.journal.clone(),
+                        id,
+                    },
                     progress,
                     family,
                     predicted_steps,
@@ -732,9 +912,24 @@ impl Scheduler {
                     family.index(),
                     cost,
                 );
+                // the admit record must land before the state lock
+                // releases: a worker popping the instant it unlocks
+                // would otherwise journal the resolve ahead of the
+                // admit, and replay would resurrect a resolved
+                // request.  (state → journal nesting is
+                // one-directional; nothing acquires state under the
+                // journal's lock.)
+                if let (Some(j), Some(rec)) =
+                    (&self.journal, admit_record)
+                {
+                    j.admit_json(rec);
+                }
                 Admit::Enqueued
-            }
+            };
+            let shed = self.eval_health_locked(&mut st);
+            (outcome, shed)
         };
+        self.resolve_shed(shed);
         match outcome {
             Admit::Enqueued => {
                 self.work_ready.notify_all();
@@ -817,6 +1012,12 @@ impl Scheduler {
                         continue;
                     }
                     let q = &st.queues[pi][k];
+                    // retry backoff: skip (don't remove) entries whose
+                    // re-admission instant hasn't arrived yet
+                    if q.not_before.is_some_and(|t| now < t) {
+                        k += 1;
+                        continue;
+                    }
                     let bounced = others
                         && q.resume
                             .as_ref()
@@ -1085,13 +1286,34 @@ impl Scheduler {
                 return IdleWait::Rebind;
             }
             let fam = self.family_in(&st, worker);
+            let mut backoff_only = false;
             if tab_get(&st.queued_by_family, fam.index()) > 0 {
-                return IdleWait::Work;
+                // a queue holding ONLY backoff-delayed retries must
+                // not return `Work` (next_for would spin on it) nor
+                // sleep untimed (nobody notifies when a backoff
+                // expires) — take a short timed wait instead
+                let now = Instant::now();
+                let ready = st.queues.iter().flatten().any(|q| {
+                    q.family == fam
+                        && !q.not_before.is_some_and(|t| now < t)
+                });
+                if ready {
+                    return IdleWait::Work;
+                }
+                backoff_only = true;
             }
             if st.shutdown {
                 return IdleWait::Exit;
             }
-            st = wait_or_recover(&self.work_ready, st);
+            st = if backoff_only {
+                wait_timeout_or_recover(
+                    &self.work_ready,
+                    st,
+                    Duration::from_millis(5),
+                )
+            } else {
+                wait_or_recover(&self.work_ready, st)
+            };
         }
     }
 
@@ -1141,6 +1363,180 @@ impl Scheduler {
         }
         for q in orphans {
             let _ = q.reply.send(Err(ServeError::Unavailable));
+        }
+    }
+
+    /// A worker lost `q` mid-flight (panic or device failure).  With
+    /// retry budget left and another live worker serving the family,
+    /// the request is re-admitted (fresh slot, exponential backoff,
+    /// its id stays live) and `None` is returned; otherwise the
+    /// request is handed back for the caller to answer
+    /// `Err(Unavailable)`.  Replaces the `finish()` + error-send pair
+    /// on the worker fail-over paths.
+    pub fn fail_running(
+        &self,
+        worker: usize,
+        mut q: QueuedReq,
+    ) -> Option<QueuedReq> {
+        let mut out = None;
+        let retried = {
+            let mut st = lock_or_recover(&self.state);
+            let id = q.req.id;
+            st.running.remove(&id);
+            st.cancel_flags.remove(&id);
+            st.halt_flags.remove(&id);
+            let peer_alive = st.worker_family.iter().enumerate().any(
+                |(w, &f)| {
+                    w != worker
+                        && f == q.family
+                        && st.worker_alive.get(w).copied().unwrap_or(false)
+                },
+            );
+            if q.attempts < self.retry_budget && !st.shutdown && peer_alive
+            {
+                q.attempts += 1;
+                // the slot's device state died with the worker: restart
+                // from the recorded params, not a resume import
+                q.resume = None;
+                let shift = (q.attempts - 1).min(6);
+                q.not_before = Some(
+                    Instant::now()
+                        + Duration::from_millis(10u64 << shift),
+                );
+                let class = q.req.priority.index();
+                st.queued += 1;
+                tab_inc(&mut st.queued_by_family, q.family.index());
+                tab_add(
+                    &mut st.queued_steps_by_family,
+                    q.family.index(),
+                    queued_cost(&q),
+                );
+                st.queues[class].push_back(q);
+                true
+            } else {
+                // terminal: the id leaves the live set exactly as
+                // `finish()` would have removed it
+                st.live_ids.remove(&id);
+                out = Some(q);
+                false
+            }
+        };
+        if retried {
+            lock_or_recover(&self.metrics).requests_retried += 1;
+            self.work_ready.notify_all();
+        } else if self.retry_budget > 0
+            && out
+                .as_ref()
+                .is_some_and(|q| q.attempts >= self.retry_budget)
+        {
+            lock_or_recover(&self.metrics).retries_exhausted += 1;
+        }
+        out
+    }
+
+    /// Evaluate (and possibly transition) the brownout machine, then
+    /// report the fleet's health.  Callable from anywhere — the error
+    /// frame encoder and the metrics snapshot both re-evaluate, so
+    /// recovery shows without waiting for traffic.
+    pub fn health(&self) -> FleetHealth {
+        let (h, shed) = {
+            let mut st = lock_or_recover(&self.state);
+            let shed = self.eval_health_locked(&mut st);
+            (st.health, shed)
+        };
+        self.resolve_shed(shed);
+        FleetHealth::from_u8(h)
+    }
+
+    /// Lock-free health read for the worker hot path (may lag the
+    /// last evaluation by one transition; the hysteresis window is
+    /// orders of magnitude longer).
+    pub fn health_is_brownout(&self) -> bool {
+        self.health_atom.load(Ordering::Relaxed) == 2
+    }
+
+    /// Whether the brownout machine is armed at all — the metrics
+    /// snapshot emits `fleet_health` only then, so unarmed snapshots
+    /// keep their exact key set.
+    pub fn brownout_enabled(&self) -> bool {
+        self.health_enabled
+    }
+
+    /// Under the state lock: recompute the raw health signal, apply
+    /// the hysteresis, and on a transition *into* brownout strip the
+    /// low-priority queue.  Victims are returned for the caller to
+    /// answer outside the lock.
+    fn eval_health_locked(&self, st: &mut State) -> Vec<QueuedReq> {
+        if !self.health_enabled {
+            return Vec::new();
+        }
+        let pressure = |pct: usize| {
+            self.queue_cap > 0
+                && st.queued.saturating_mul(100)
+                    >= self.queue_cap.saturating_mul(pct)
+        };
+        let raw: u8 = if pressure(90) {
+            2
+        } else if pressure(60) || st.worker_alive.iter().any(|a| !a) {
+            1
+        } else {
+            0
+        };
+        let prev = st.health;
+        let mut shed = Vec::new();
+        if raw > prev {
+            // escalate immediately; entering brownout sheds the whole
+            // low-priority queue (head-of-line work survives, optional
+            // work is suspended by the workers' atom reads)
+            st.health = raw;
+            st.health_clear_since = None;
+            if raw == 2 {
+                let li = Priority::Low.index();
+                while let Some(q) = st.queues[li].pop_front() {
+                    st.queued -= 1;
+                    tab_dec(&mut st.queued_by_family, q.family.index());
+                    tab_sub(
+                        &mut st.queued_steps_by_family,
+                        q.family.index(),
+                        queued_cost(&q),
+                    );
+                    st.live_ids.remove(&q.req.id);
+                    shed.push(q);
+                }
+            }
+        } else if raw < prev {
+            // de-escalate only after the signal stays clear for the
+            // recovery window — no flapping at a threshold boundary
+            let now = Instant::now();
+            match st.health_clear_since {
+                None => st.health_clear_since = Some(now),
+                Some(t)
+                    if now.duration_since(t)
+                        >= Duration::from_millis(
+                            self.health_recover_ms,
+                        ) =>
+                {
+                    st.health = raw;
+                    st.health_clear_since = None;
+                }
+                Some(_) => {}
+            }
+        } else {
+            st.health_clear_since = None;
+        }
+        self.health_atom.store(st.health, Ordering::Relaxed);
+        shed
+    }
+
+    /// Answer brownout-shed requests (outside the state lock) with the
+    /// typed `overloaded` and count them.
+    fn resolve_shed(&self, shed: Vec<QueuedReq>) {
+        if shed.is_empty() {
+            return;
+        }
+        lock_or_recover(&self.metrics).brownout_shed += shed.len() as u64;
+        for q in shed {
+            let _ = q.reply.send(Err(ServeError::Overloaded));
         }
     }
 

@@ -28,6 +28,9 @@
 //! line that fails validation answers
 //! `{"error":"invalid_request","message":...}` (plus `"id"` when one
 //! was parseable); malformed JSON answers `{"error":"parse: ..."}`.
+//! While the fleet is degraded or browned out, v1 `overloaded` /
+//! `unavailable` error frames additionally carry a `retry_after_ms`
+//! backoff hint (absent from a healthy fleet).
 //!
 //! Each connection gets a reader thread (this handler) plus one writer
 //! thread draining an mpsc channel — the multiplexing point where
@@ -43,7 +46,7 @@
 
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -162,6 +165,14 @@ fn handle_conn(stream: TcpStream, engine: EngineHandle) -> Result<()> {
     // line open even after the reader saw EOF
     std::thread::spawn(move || {
         for line in rx {
+            // deterministic chaos: sever the socket between frames,
+            // exactly like a client vanishing mid-stream — the reader
+            // loop sees EOF and cancels this connection's in-flight
+            // requests
+            if crate::util::fault::check("conn_drop").is_some() {
+                let _ = writer.shutdown(Shutdown::Both);
+                break;
+            }
             if writer
                 .write_all(line.as_bytes())
                 .and_then(|()| writer.write_all(b"\n"))
@@ -237,6 +248,7 @@ fn handle_frame(
                 id: j.get("id").and_then(Json::as_u64),
                 code: e.code().to_string(),
                 message: Some(e.to_string()),
+                retry_after_ms: None,
             };
             let _ = tx.send(ev.to_json().encode());
             return;
@@ -362,11 +374,22 @@ fn handle_frame(
                         id: Some(id),
                         code: serve_err.as_str().to_string(),
                         message: serve_err.detail().map(str::to_string),
+                        // capacity answers from a degraded fleet carry
+                        // a backoff hint; a healthy fleet's error
+                        // frames stay byte-identical
+                        retry_after_ms: match serve_err {
+                            super::scheduler::ServeError::Overloaded
+                            | super::scheduler::ServeError::Unavailable => {
+                                engine.retry_after_ms()
+                            }
+                            _ => None,
+                        },
                     },
                     Err(_) => Event::Error {
                         id: Some(id),
                         code: "internal".to_string(),
                         message: Some("reply channel closed".to_string()),
+                        retry_after_ms: None,
                     },
                 };
                 let _ = tx.send(frame.to_json().encode());

@@ -40,7 +40,7 @@
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -52,6 +52,7 @@ use super::scheduler::{
 };
 use crate::halting::{BoxedPolicy, Decision, NoHalt};
 use crate::log_info;
+use crate::util::fault;
 use crate::util::sync::lock_or_recover;
 use crate::models::store::ParamStore;
 use crate::predictor::{
@@ -337,9 +338,14 @@ fn run_worker(
         let exit = match stepped {
             Ok(out) => out?,
             Err(panic) => {
+                // with retry budget left and a live same-family peer,
+                // each in-flight request is re-admitted (backoff, fresh
+                // slot) instead of failing over — zero requests lost to
+                // a worker panic
                 for r in running.iter_mut().filter_map(Option::take) {
-                    sched.finish(r.q.req.id);
-                    let _ = r.q.reply.send(Err(ServeError::Unavailable));
+                    if let Some(q) = sched.fail_running(cfg.id, r.q) {
+                        let _ = q.reply.send(Err(ServeError::Unavailable));
+                    }
                 }
                 std::panic::resume_unwind(panic);
             }
@@ -622,16 +628,21 @@ fn step_loop(
                         },
                         final_stats: session.slots[slot].last_stats,
                     };
+                    // predictor grading is optional work too: a
+                    // browned-out fleet skips the estimator update and
+                    // its queue re-sort
                     if let Some(est) = &cfg.predictor {
-                        est.observe_completion_full(
-                            fam,
-                            steps,
-                            &visited_buckets(&r.bucket_entry),
-                            &visited_slope(&r.slope_entry),
-                        );
-                        // fresh per-family evidence may reorder the
-                        // same-class backlog (bounded SRPT re-sort)
-                        sched.note_estimator_update();
+                        if !sched.health_is_brownout() {
+                            est.observe_completion_full(
+                                fam,
+                                steps,
+                                &visited_buckets(&r.bucket_entry),
+                                &visited_slope(&r.slope_entry),
+                            );
+                            // fresh per-family evidence may reorder the
+                            // same-class backlog (bounded SRPT re-sort)
+                            sched.note_estimator_update();
+                        }
                     }
                     sched.finish(resp.id);
                     {
@@ -665,17 +676,32 @@ fn step_loop(
         let mut migrated_count = 0u64;
         let mut migration_reclaimed = 0u64;
         if stepped {
+            // deterministic chaos hooks: a fault schedule can kill
+            // this worker or stretch its latency at an exact
+            // device-step index (hit counters are per-point)
+            if fault::check("worker_panic").is_some() {
+                // lint:allow(panic-freedom): deterministic fault injection; the catch_unwind failover above answers every in-flight request
+                panic!("injected worker_panic fault");
+            }
+            if let Some(fault::FaultAction::SleepMs(ms)) =
+                fault::check("slow_step")
+            {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
             let step_started = Instant::now();
             let stats = match session.step() {
                 Ok(stats) => stats,
                 Err(e) => {
-                    // device failure: fail this worker's in-flight
-                    // requests over with a typed error (and release
-                    // their scheduler state) before surfacing the error
+                    // device failure: re-admit in-flight requests on a
+                    // surviving same-family peer (retry budget
+                    // permitting), else fail them over typed — and
+                    // release their scheduler state either way —
+                    // before surfacing the error
                     for r in running.iter_mut().filter_map(Option::take) {
-                        sched.finish(r.q.req.id);
-                        let _ =
-                            r.q.reply.send(Err(ServeError::Unavailable));
+                        if let Some(q) = sched.fail_running(cfg.id, r.q) {
+                            let _ =
+                                q.reply.send(Err(ServeError::Unavailable));
+                        }
                     }
                     return Err(e);
                 }
@@ -787,9 +813,13 @@ fn step_loop(
                 let mut download_err: Option<String> = None;
                 if !(halted || exhausted) {
                     let every = r.q.req.progress_every.unwrap_or(0);
+                    // brownout sheds optional work: progress frames
+                    // (and their decode download) are suspended while
+                    // browned out — subscribers just see a gap
                     if every > 0
                         && executed % every == 0
                         && r.q.progress.is_some()
+                        && !sched.health_is_brownout()
                     {
                         let toks = session.slot_output(slot);
                         match session.take_deferred_err() {
@@ -899,16 +929,20 @@ fn step_loop(
                     // total halt-steps plus the per-bucket first-entry
                     // steps (entropy AND KL-slope) this generation
                     // recorded along the way
+                    // optional work: grading is suspended while the
+                    // fleet is browned out (same gate as the halt path)
                     if let Some(est) = &cfg.predictor {
-                        est.observe_completion_full(
-                            fam,
-                            executed,
-                            &visited_buckets(&r.bucket_entry),
-                            &visited_slope(&r.slope_entry),
-                        );
-                        // fresh per-family evidence may reorder the
-                        // same-class backlog (bounded SRPT re-sort)
-                        sched.note_estimator_update();
+                        if !sched.health_is_brownout() {
+                            est.observe_completion_full(
+                                fam,
+                                executed,
+                                &visited_buckets(&r.bucket_entry),
+                                &visited_slope(&r.slope_entry),
+                            );
+                            // fresh per-family evidence may reorder the
+                            // same-class backlog (bounded SRPT re-sort)
+                            sched.note_estimator_update();
+                        }
                     }
                     sched.finish(resp.id);
                     session.release_slot(slot);

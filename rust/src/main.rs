@@ -29,6 +29,7 @@ use repro::sampler::registry;
 use repro::sampler::{Family, FamilyId, Session, SlotRequest};
 use repro::train::{TrainConfig, TrainTarget, Trainer};
 use repro::util::cli::Args;
+use repro::util::fault;
 use repro::util::log;
 
 fn main() {
@@ -84,6 +85,8 @@ fn print_help() {
          \u{20}        [--predictor] [--admission-control]\n\
          \u{20}        [--packing fifo|srpt] [--migrate]\n\
          \u{20}        [--artifact-cache-mb N]\n\
+         \u{20}        [--journal PATH] [--retry-budget N]\n\
+         \u{20}        [--brownout [MS]] [--faults SPEC]\n\
          \u{20}        (one worker per fleet entry — mixed families are\n\
          \u{20}        routed per request; without --fleet, N identical\n\
          \u{20}        workers of --family; bounded admission queue\n\
@@ -100,7 +103,13 @@ fn print_help() {
          \u{20}        idle shards toward starved families, --migrate\n\
          \u{20}        moves mostly-frozen slots to smaller live shards\n\
          \u{20}        mid-generation, --artifact-cache-mb bounds the\n\
-         \u{20}        process-wide checkpoint cache — see API.md)\n\
+         \u{20}        process-wide checkpoint cache; --journal write-\n\
+         \u{20}        ahead-logs admissions and replays incomplete\n\
+         \u{20}        work on restart, --retry-budget re-queues a dead\n\
+         \u{20}        worker's in-flight requests, --brownout arms the\n\
+         \u{20}        fleet-health degradation machine, --faults (or\n\
+         \u{20}        REPRO_FAULTS) installs a deterministic fault\n\
+         \u{20}        schedule 'point@N:kind[=ARG],...' — see API.md)\n\
          client   --addr HOST:PORT [--n 16] [--steps N] [--criterion SPEC]\n\
          \u{20}        [--priority high|normal|low] [--deadline-ms MS]\n\
          \u{20}        [--family {fams}] [--progress-every K]\n\
@@ -470,6 +479,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.predictor.packing = PackingMode::parse(p)
             .ok_or_else(|| anyhow::anyhow!("bad --packing {p} (fifo|srpt)"))?;
     }
+    // chaos hardening (each independent, all default off): --journal
+    // write-ahead-logs admissions and replays incomplete work on
+    // restart, --retry-budget re-queues a dead worker's in-flight
+    // requests, --brownout arms the fleet-health degradation machine,
+    // --faults installs a deterministic fault-injection schedule
+    cfg.journal_path = args.get("journal").map(str::to_string);
+    cfg.retry_budget = args.usize_or("retry-budget", 0) as u32;
+    if args.flag("brownout") {
+        cfg.brownout_recover_ms = Some(1500);
+    } else if let Some(ms) = args.get("brownout") {
+        cfg.brownout_recover_ms = Some(ms.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "bad --brownout {ms} (want a recovery window in ms)"
+            )
+        })?);
+    }
+    if let Some(spec) = args.get("faults") {
+        fault::install(spec)
+            .map_err(|e| anyhow::anyhow!("bad --faults: {e}"))?;
+    } else if let Err(e) = fault::install_from_env() {
+        anyhow::bail!("bad REPRO_FAULTS: {e}");
+    }
     cfg.discover_checkpoints(&runs);
     let shards = cfg
         .worker_specs
@@ -493,12 +524,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (false, true) => ", migrate",
         (false, false) => "",
     };
+    let chaos_note = {
+        let mut parts = Vec::new();
+        if cfg.journal_path.is_some() {
+            parts.push("journal".to_string());
+        }
+        if cfg.retry_budget > 0 {
+            parts.push(format!("retry:{}", cfg.retry_budget));
+        }
+        if cfg.brownout_recover_ms.is_some() {
+            parts.push("brownout".to_string());
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!(", {}", parts.join("+"))
+        }
+    };
     let (engine, join) = start(cfg);
     let addr = args.get_or("addr", "127.0.0.1:7411");
     let mut server = Server::start(addr, engine)?;
     println!(
         "serving [{shards}] on {} (default family {}{predictor_note}\
-         {elastic_note})",
+         {elastic_note}{chaos_note})",
         server.addr,
         default_family.name()
     );

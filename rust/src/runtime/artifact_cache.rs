@@ -428,9 +428,19 @@ impl ArtifactCache {
                 }
             }
         }
-        // this caller owns the load; map outside the lock
-        let mapped = MappedBytes::open(path)
-            .with_context(|| format!("load {}", key.describe()));
+        // this caller owns the load; map outside the lock.  The
+        // `cache_mmap` chaos hook fails the load exactly like a real
+        // mmap error: the Loading slot is cleared, racers retry, the
+        // caller gets a typed error.
+        let mapped = if crate::util::fault::check("cache_mmap").is_some() {
+            Err(anyhow::anyhow!(
+                "injected cache_mmap fault loading {}",
+                key.describe()
+            ))
+        } else {
+            MappedBytes::open(path)
+                .with_context(|| format!("load {}", key.describe()))
+        };
         let mut st = lock_or_recover(&self.inner.state);
         match mapped {
             Err(e) => {

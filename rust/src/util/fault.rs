@@ -1,0 +1,274 @@
+//! Deterministic fault injection for chaos testing the serving path.
+//!
+//! A fixed set of named injection points is compiled into the stack
+//! (worker step loop, artifact-cache bind, journal append, connection
+//! writer).  Each point calls [`check`] once per traversal; when a
+//! fault is armed for that point's Nth hit, `check` returns the armed
+//! [`FaultAction`] exactly once and the caller performs it (panic,
+//! typed failure, dropped connection, or an injected latency spike).
+//! Unarmed, the whole registry is one relaxed atomic load — zero cost
+//! on the hot path.
+//!
+//! Faults are armed from a spec string (`--faults` flag or the
+//! `REPRO_FAULTS` env var):
+//!
+//! ```text
+//! point@N:kind[=ARG][,point@N:kind...]
+//! ```
+//!
+//! * `point` — one of [`POINTS`]: `worker_panic`, `slow_step`,
+//!   `cache_mmap`, `journal_write`, `conn_drop`;
+//! * `N` — the 0-based hit index at which the fault fires (the point's
+//!   hit counter is global across threads, so schedules are
+//!   deterministic under a deterministic workload);
+//! * `kind` — `panic`, `fail`, `drop`, or `sleep_ms=MS`.
+//!
+//! Example: `worker_panic@3:panic,slow_step@0:sleep_ms=250` panics the
+//! worker on its 4th device step and stretches the very first step by
+//! 250 ms.  Every firing is counted; the engine surfaces the counts as
+//! `faults_injected_<point>` metrics keys.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::sync::lock_or_recover;
+
+/// Every injection point compiled into the serving path.  `check` only
+/// accepts these names, so a typo in a spec is a parse error, not a
+/// fault that silently never fires.
+pub const POINTS: [&str; 5] = [
+    "worker_panic",
+    "slow_step",
+    "cache_mmap",
+    "journal_write",
+    "conn_drop",
+];
+
+/// What an armed fault does when it fires.  The injection *site*
+/// performs the action (only it knows how to panic safely, fail typed,
+/// or drop its connection); the registry just says which.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// unwind the calling thread (worker-panic chaos)
+    Panic,
+    /// return the site's typed failure (mmap error, journal IO error)
+    Fail,
+    /// sever the site's connection mid-frame
+    Drop,
+    /// stretch the current step by this many milliseconds
+    SleepMs(u64),
+}
+
+struct Arm {
+    point: usize,
+    /// fire on the hit whose pre-increment counter equals this
+    at: u64,
+    action: FaultAction,
+    fired: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    arms: Vec<Arm>,
+    /// per-point traversal counters (index into [`POINTS`])
+    hits: [u64; POINTS.len()],
+    /// per-point fired counters — the `faults_injected_*` lane
+    fired: [u64; POINTS.len()],
+}
+
+/// Fast-path gate: false ⇒ `check` is one relaxed load and a branch.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<Inner> {
+    static REG: OnceLock<Mutex<Inner>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Inner::default()))
+}
+
+fn point_index(name: &str) -> Option<usize> {
+    POINTS.iter().position(|p| *p == name)
+}
+
+/// Parse one spec string into arms.  Errors name the offending clause
+/// so a mistyped schedule fails loudly at startup, never silently.
+fn parse_spec(spec: &str) -> Result<Vec<Arm>, String> {
+    let mut arms = Vec::new();
+    for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+        let (point_at, kind) = clause
+            .split_once(':')
+            .ok_or_else(|| format!("fault `{clause}`: missing `:kind`"))?;
+        let (point, at) = point_at
+            .split_once('@')
+            .ok_or_else(|| format!("fault `{clause}`: missing `@N`"))?;
+        let point = point_index(point.trim()).ok_or_else(|| {
+            format!(
+                "fault `{clause}`: unknown point `{}` (expected one of {})",
+                point.trim(),
+                POINTS.join(", ")
+            )
+        })?;
+        let at: u64 = at.trim().parse().map_err(|_| {
+            format!("fault `{clause}`: hit index `{}` is not a u64", at.trim())
+        })?;
+        let action = match kind.trim() {
+            "panic" => FaultAction::Panic,
+            "fail" => FaultAction::Fail,
+            "drop" => FaultAction::Drop,
+            k => {
+                let ms = k
+                    .strip_prefix("sleep_ms=")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        format!(
+                            "fault `{clause}`: unknown kind `{k}` \
+                             (expected panic|fail|drop|sleep_ms=MS)"
+                        )
+                    })?;
+                FaultAction::SleepMs(ms)
+            }
+        };
+        arms.push(Arm { point, at, action, fired: false });
+    }
+    Ok(arms)
+}
+
+/// Arm the registry from a spec string, replacing any previous
+/// schedule and resetting all hit counters.  Returns the number of
+/// arms installed.  An empty spec disarms (same as [`clear`]).
+pub fn install(spec: &str) -> Result<usize, String> {
+    let arms = parse_spec(spec)?;
+    let n = arms.len();
+    let mut inner = lock_or_recover(registry());
+    inner.arms = arms;
+    inner.hits = [0; POINTS.len()];
+    inner.fired = [0; POINTS.len()];
+    ARMED.store(n > 0, Ordering::Release);
+    Ok(n)
+}
+
+/// Arm from the `REPRO_FAULTS` env var, if set.  Returns the number of
+/// arms installed (0 when unset).
+pub fn install_from_env() -> Result<usize, String> {
+    match std::env::var("REPRO_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => install(&spec),
+        _ => Ok(0),
+    }
+}
+
+/// Disarm every fault and reset the counters (fired totals included).
+pub fn clear() {
+    let mut inner = lock_or_recover(registry());
+    inner.arms.clear();
+    inner.hits = [0; POINTS.len()];
+    inner.fired = [0; POINTS.len()];
+    ARMED.store(false, Ordering::Release);
+}
+
+/// One traversal of the named injection point.  Returns the armed
+/// action exactly when this traversal is the hit a schedule names;
+/// `None` otherwise — and with nothing armed, this is a single relaxed
+/// atomic load.  Unknown point names count nothing and never fire
+/// (sites pass literals from [`POINTS`], so this is defensive only).
+pub fn check(point: &str) -> Option<FaultAction> {
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let pi = point_index(point)?;
+    let mut inner = lock_or_recover(registry());
+    let hit = inner.hits[pi];
+    inner.hits[pi] += 1;
+    let action = inner
+        .arms
+        .iter_mut()
+        .find(|a| a.point == pi && !a.fired && a.at == hit)
+        .map(|a| {
+            a.fired = true;
+            a.action
+        });
+    if action.is_some() {
+        inner.fired[pi] += 1;
+    }
+    action
+}
+
+/// Fired counts per point, only for points that fired at least once —
+/// the engine's `faults_injected_<point>` metrics lane.
+pub fn fired_counts() -> Vec<(&'static str, u64)> {
+    if !ARMED.load(Ordering::Acquire) {
+        return Vec::new();
+    }
+    let inner = lock_or_recover(registry());
+    POINTS
+        .iter()
+        .zip(inner.fired.iter())
+        .filter(|(_, &n)| n > 0)
+        .map(|(&p, &n)| (p, n))
+        .collect()
+}
+
+/// Tests sharing the process-global registry must serialize: hold this
+/// guard for the whole armed window.  (Integration tests run in their
+/// own processes; this is for unit tests inside the library crate.)
+#[cfg(test)]
+pub(crate) fn test_serial() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    lock_or_recover(&GATE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_is_none() {
+        let _g = test_serial();
+        clear();
+        assert_eq!(check("worker_panic"), None);
+        assert!(fired_counts().is_empty());
+    }
+
+    #[test]
+    fn fires_on_exact_hit_index_once() {
+        let _g = test_serial();
+        install("slow_step@2:sleep_ms=5").unwrap();
+        assert_eq!(check("slow_step"), None); // hit 0
+        assert_eq!(check("slow_step"), None); // hit 1
+        assert_eq!(check("slow_step"), Some(FaultAction::SleepMs(5)));
+        assert_eq!(check("slow_step"), None); // fired arms stay fired
+        assert_eq!(fired_counts(), vec![("slow_step", 1)]);
+        clear();
+    }
+
+    #[test]
+    fn points_count_independently() {
+        let _g = test_serial();
+        install("worker_panic@0:panic,cache_mmap@1:fail").unwrap();
+        assert_eq!(check("cache_mmap"), None); // cache hit 0
+        assert_eq!(check("worker_panic"), Some(FaultAction::Panic));
+        assert_eq!(check("cache_mmap"), Some(FaultAction::Fail));
+        clear();
+    }
+
+    #[test]
+    fn spec_errors_are_typed() {
+        let _g = test_serial();
+        assert!(install("nonsense").is_err());
+        assert!(install("bogus_point@0:panic").is_err());
+        assert!(install("slow_step@x:panic").is_err());
+        assert!(install("slow_step@0:explode").is_err());
+        assert!(install("slow_step@0:sleep_ms=abc").is_err());
+        // a failed install never leaves stale arms behind
+        assert_eq!(check("slow_step"), None);
+    }
+
+    #[test]
+    fn install_replaces_previous_schedule() {
+        let _g = test_serial();
+        install("conn_drop@0:drop").unwrap();
+        install("journal_write@0:fail").unwrap();
+        assert_eq!(check("conn_drop"), None);
+        assert_eq!(check("journal_write"), Some(FaultAction::Fail));
+        install("").unwrap();
+        assert_eq!(check("journal_write"), None);
+        clear();
+    }
+}

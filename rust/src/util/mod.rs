@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod config;
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod prng;

@@ -53,6 +53,26 @@ pub fn wait_or_recover<'a, T>(
     }
 }
 
+/// [`Condvar::wait_timeout`] that recovers the re-acquired guard if
+/// the mutex was poisoned while this thread slept.  Used where a
+/// waiter must wake on a *deadline* nobody will notify for (e.g. a
+/// retry-backoff expiry); the timeout flag is dropped because callers
+/// re-check their predicate either way.
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(poisoned) => {
+            LOCK_POISONED.fetch_add(1, Ordering::Relaxed);
+            let (g, _) = poisoned.into_inner();
+            g
+        }
+    }
+}
+
 /// Poisoned acquisitions recovered so far (process-wide).
 pub fn poisoned_count() -> u64 {
     LOCK_POISONED.load(Ordering::Relaxed)
@@ -99,6 +119,19 @@ mod tests {
         *lock_or_recover(&m) += 1;
         assert_eq!(*lock_or_recover(&m), 3);
         assert_eq!(poisoned_count(), before);
+    }
+
+    #[test]
+    fn timed_wait_wakes_without_a_notify() {
+        let pair = (Mutex::new(()), Condvar::new());
+        let g = lock_or_recover(&pair.0);
+        let start = std::time::Instant::now();
+        let _g = wait_timeout_or_recover(
+            &pair.1,
+            g,
+            std::time::Duration::from_millis(10),
+        );
+        assert!(start.elapsed() >= std::time::Duration::from_millis(5));
     }
 
     #[test]

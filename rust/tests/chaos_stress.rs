@@ -1,0 +1,432 @@
+//! Chaos-hardening stress: seeded fault schedules over the serving
+//! stack's recovery machinery.
+//!
+//!   1. worker-death retries — mid-flight failures are re-admitted
+//!      under the retry budget (exponential backoff, fresh slot) and
+//!      every submitted request still resolves exactly once: an `Ok`,
+//!      or a typed `unavailable` once the budget is spent, never
+//!      silence and never a duplicate;
+//!   2. journal crash recovery — sealing the write-ahead log
+//!      mid-workload ("the process died here") and replaying it
+//!      re-admits exactly the incomplete set, tolerates torn/corrupt
+//!      tails, and self-heals the file;
+//!   3. the fault registry itself — seeded schedules fire on exact hit
+//!      indices, deterministically, and are countable;
+//!   4. the brownout machine — queue pressure escalates health
+//!      immediately (shedding low-priority work with a typed
+//!      `overloaded`), and recovery waits out the hysteresis window.
+//!
+//! Pure scheduler/journal work (drainer threads stand in for device
+//! workers), so the whole file runs everywhere — no artifacts, no
+//! PJRT.
+
+use std::io::Write as _;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use repro::coordinator::scheduler::{Scheduler, ServeError};
+use repro::coordinator::{FleetHealth, GenRequest, GenResponse, Journal, Priority};
+use repro::sampler::Family;
+use repro::util::fault::{self, FaultAction};
+use repro::util::prng::Prng;
+use repro::util::sync::lock_or_recover;
+
+const SEEDS: [u64; 4] = [13, 31, 59, 97];
+
+/// Generous bound that turns "reply never arrives" into a test failure
+/// instead of a hung harness.
+const RESOLVE: Duration = Duration::from_secs(10);
+
+/// Tests that arm the process-global fault registry must not overlap —
+/// the harness runs tests on parallel threads.
+fn fault_gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn temp_path(tag: &str, seed: u64, iter: usize) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("repro_chaos_stress_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{seed}_{iter}.wal"))
+}
+
+// ---------------------------------------------------------------------
+// window 1: worker-death retries resolve exactly once
+// ---------------------------------------------------------------------
+
+#[test]
+fn worker_death_retries_resolve_exactly_once() {
+    for seed in SEEDS {
+        let mut rng = Prng::new(seed);
+        for iter in 0..3 {
+            let path = temp_path("retry", seed, iter);
+            let (journal, replay) = Journal::open(&path).unwrap();
+            assert!(replay.incomplete.is_empty(), "fresh journal");
+            let journal = Arc::new(journal);
+            let sched = Arc::new(
+                Scheduler::new(64, vec![Family::Ddlm.into(); 2])
+                    .with_retry_budget(3)
+                    .with_journal(journal.clone()),
+            );
+
+            // drainer 0 "loses" its first F pops mid-flight (the
+            // worker-panic failure path), then serves normally;
+            // drainer 1 is the healthy peer retries fail over to
+            let chaos_fails = 1 + rng.below(3);
+            let mut drainers = Vec::new();
+            for w in 0..2usize {
+                let s = sched.clone();
+                let mut fails_left = if w == 0 { chaos_fails } else { 0 };
+                drainers.push(thread::spawn(move || {
+                    let mut served = 0u64;
+                    let mut failed = 0u64;
+                    loop {
+                        if let Some(q) = s.next_for(w) {
+                            if fails_left > 0 {
+                                fails_left -= 1;
+                                failed += 1;
+                                // mid-flight death: re-admit under the
+                                // budget, or hand back terminal
+                                if let Some(dead) = s.fail_running(w, q) {
+                                    let _ = dead
+                                        .reply
+                                        .send(Err(ServeError::Unavailable));
+                                }
+                                continue;
+                            }
+                            let id = q.req.id;
+                            let mut resp =
+                                GenResponse::immediate(&q.req, None);
+                            resp.family = Some(q.family);
+                            let _ = q.reply.send(Ok(resp));
+                            s.finish(id);
+                            served += 1;
+                        } else if s.is_shutdown() && s.queue_depth() == 0 {
+                            s.worker_down(w);
+                            return (served, failed);
+                        } else {
+                            thread::yield_now();
+                        }
+                    }
+                }));
+            }
+
+            let total = 12 + rng.below(12);
+            let mut rxs = Vec::new();
+            for k in 0..total {
+                let (tx, rx) = mpsc::channel();
+                sched
+                    .submit(GenRequest::new(1 + k as u64, 5), tx)
+                    .unwrap_or_else(|e| {
+                        panic!("admission failed {e:?} (seed {seed})")
+                    });
+                rxs.push(rx);
+            }
+
+            // THE invariant: every admitted request resolves exactly
+            // once — served after a retry, or typed-unavailable once
+            // the budget is exhausted
+            let mut ok = 0usize;
+            let mut unavailable = 0usize;
+            for rx in &rxs {
+                match rx.recv_timeout(RESOLVE).unwrap_or_else(|_| {
+                    panic!(
+                        "lost reply under worker-death chaos \
+                         (seed {seed} iter {iter})"
+                    )
+                }) {
+                    Ok(_) => ok += 1,
+                    Err(ServeError::Unavailable) => unavailable += 1,
+                    Err(e) => panic!("unexpected outcome {e:?}"),
+                }
+            }
+            assert_eq!(ok + unavailable, total, "seed {seed} iter {iter}");
+
+            sched.shutdown();
+            let mut injected = 0u64;
+            for d in drainers {
+                let (_served, failed) = d.join().unwrap();
+                injected += failed;
+            }
+            // never a second resolution
+            for rx in &rxs {
+                assert!(
+                    rx.try_recv().is_err(),
+                    "request resolved twice (seed {seed} iter {iter})"
+                );
+            }
+            assert_eq!(sched.queue_depth(), 0);
+            assert_eq!(sched.running_count(), 0);
+
+            let m = lock_or_recover(&sched.metrics);
+            assert_eq!(
+                m.requests_retried + m.retries_exhausted,
+                injected,
+                "every injected death is a retry or an exhaustion \
+                 (seed {seed} iter {iter})"
+            );
+            drop(m);
+
+            // zero lost: the journal agrees everything resolved
+            drop(sched);
+            let (_, after) = Journal::open(&path).unwrap();
+            assert!(
+                after.incomplete.is_empty(),
+                "journal shows orphans after full resolution \
+                 (seed {seed} iter {iter}): {:?}",
+                after.incomplete.iter().map(|r| r.id).collect::<Vec<_>>()
+            );
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// window 2: journal crash recovery replays the exact incomplete set
+// ---------------------------------------------------------------------
+
+#[test]
+fn journal_replay_readmits_exactly_the_incomplete_set() {
+    for seed in SEEDS {
+        let mut rng = Prng::new(seed ^ 0x3a11);
+        for iter in 0..3 {
+            let path = temp_path("replay", seed, iter);
+            let (journal, _) = Journal::open(&path).unwrap();
+            let journal = Arc::new(journal);
+            let sched = Scheduler::new(32, vec![Family::Ddlm.into()])
+                .with_journal(journal.clone());
+
+            let total = 6 + rng.below(6);
+            let served = rng.below(total);
+            let mut rxs = Vec::new();
+            for k in 0..total {
+                let (tx, rx) = mpsc::channel();
+                sched.submit(GenRequest::new(100 + k as u64, 4), tx).unwrap();
+                rxs.push(rx);
+            }
+            // serve the first `served` requests, then "crash"
+            for _ in 0..served {
+                let q = sched.next_for(0).expect("queued work");
+                let id = q.req.id;
+                let mut resp = GenResponse::immediate(&q.req, None);
+                resp.family = Some(q.family);
+                let _ = q.reply.send(Ok(resp));
+                sched.finish(id);
+            }
+            journal.seal();
+            drop(sched);
+
+            // replay: exactly the unserved suffix, in admission order
+            let expect: Vec<u64> =
+                (served..total).map(|k| 100 + k as u64).collect();
+            let (journal2, replay) = Journal::open(&path).unwrap();
+            let got: Vec<u64> =
+                replay.incomplete.iter().map(|r| r.id).collect();
+            assert_eq!(got, expect, "seed {seed} iter {iter}");
+            assert_eq!(replay.truncated_records, 0);
+
+            // a restarted scheduler finishes the replayed work and the
+            // next replay comes back empty
+            let journal2 = Arc::new(journal2);
+            let sched2 = Scheduler::new(32, vec![Family::Ddlm.into()])
+                .with_journal(journal2.clone());
+            let mut rxs2 = Vec::new();
+            for req in replay.incomplete {
+                let (tx, rx) = mpsc::channel();
+                sched2.submit(req, tx).unwrap();
+                rxs2.push(rx);
+            }
+            while let Some(q) = sched2.next_for(0) {
+                let id = q.req.id;
+                let mut resp = GenResponse::immediate(&q.req, None);
+                resp.family = Some(q.family);
+                let _ = q.reply.send(Ok(resp));
+                sched2.finish(id);
+            }
+            for rx in &rxs2 {
+                rx.recv_timeout(RESOLVE).expect("replayed work resolves")
+                    .expect("served ok");
+            }
+            drop(sched2);
+            let (_, replay3) = Journal::open(&path).unwrap();
+            assert!(
+                replay3.incomplete.is_empty(),
+                "seed {seed} iter {iter}: {:?}",
+                replay3.incomplete.iter().map(|r| r.id).collect::<Vec<_>>()
+            );
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn journal_tolerates_torn_and_corrupt_tails() {
+    let path = temp_path("torn", 0, 0);
+    let (journal, _) = Journal::open(&path).unwrap();
+    let journal = Arc::new(journal);
+    let sched = Scheduler::new(8, vec![Family::Ddlm.into()])
+        .with_journal(journal.clone());
+
+    let mut rxs = Vec::new();
+    for k in 0..4u64 {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(500 + k, 3), tx).unwrap();
+        rxs.push(rx);
+    }
+    // resolve the first request so the tail has both record kinds
+    let q = sched.next_for(0).unwrap();
+    let id = q.req.id;
+    let mut resp = GenResponse::immediate(&q.req, None);
+    resp.family = Some(q.family);
+    let _ = q.reply.send(Ok(resp));
+    sched.finish(id);
+    journal.seal();
+    drop(sched);
+
+    // simulate a torn write: one frame with a corrupted checksum, then
+    // one whose claimed extent runs past the end of the file
+    {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .unwrap();
+        let bad = b"garbage-payload";
+        f.write_all(&(bad.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap(); // wrong checksum
+        f.write_all(bad).unwrap();
+        f.write_all(&64u32.to_le_bytes()).unwrap(); // claims 64 bytes
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(b"short").unwrap(); // ...holds 5
+    }
+
+    let (_, replay) = Journal::open(&path).unwrap();
+    assert_eq!(
+        replay.incomplete.iter().map(|r| r.id).collect::<Vec<_>>(),
+        vec![501, 502, 503],
+        "the valid prefix replays exactly despite the torn tail"
+    );
+    assert_eq!(replay.truncated_records, 2);
+
+    // open() self-heals the tail: the garbage is gone on the next open
+    let (_, healed) = Journal::open(&path).unwrap();
+    assert_eq!(healed.truncated_records, 0);
+    assert_eq!(
+        healed.incomplete.iter().map(|r| r.id).collect::<Vec<_>>(),
+        vec![501, 502, 503]
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// window 3: the fault registry fires deterministically
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_schedule_fires_on_exact_hit_indices() {
+    let _g = fault_gate();
+    // two independent runs of the same schedule observe the same hits
+    for _ in 0..2 {
+        fault::install("slow_step@2:sleep_ms=1,cache_mmap@0:fail")
+            .unwrap();
+        assert_eq!(fault::check("slow_step"), None);
+        assert_eq!(fault::check("slow_step"), None);
+        assert_eq!(
+            fault::check("slow_step"),
+            Some(FaultAction::SleepMs(1)),
+            "fires on the 0-based third hit"
+        );
+        assert_eq!(fault::check("slow_step"), None, "one-shot arm");
+        assert_eq!(fault::check("cache_mmap"), Some(FaultAction::Fail));
+        assert_eq!(fault::check("worker_panic"), None, "unarmed point");
+        let counts = fault::fired_counts();
+        assert_eq!(
+            counts,
+            vec![("slow_step", 1), ("cache_mmap", 1)],
+            "only fired points are reported"
+        );
+    }
+    // malformed schedules fail loudly at install time
+    assert!(fault::install("nosuchpoint@0:panic").is_err());
+    assert!(fault::install("slow_step@x:panic").is_err());
+    assert!(fault::install("slow_step@0:frobnicate").is_err());
+    fault::clear();
+    assert_eq!(fault::check("slow_step"), None);
+    assert!(fault::fired_counts().is_empty());
+}
+
+// ---------------------------------------------------------------------
+// window 4: brownout escalation, shedding, hysteretic recovery
+// ---------------------------------------------------------------------
+
+#[test]
+fn brownout_sheds_low_priority_and_recovers_after_the_window() {
+    let sched = Scheduler::new(10, vec![Family::Ddlm.into()])
+        .with_brownout(300);
+    assert_eq!(sched.health(), FleetHealth::Healthy);
+    assert_eq!(sched.health().retry_after_ms(), None);
+
+    // 3 low-priority + 3 normal queued = 60% pressure: degraded
+    let mut low_rxs = Vec::new();
+    for k in 0..3u64 {
+        let mut req = GenRequest::new(600 + k, 4);
+        req.priority = Priority::Low;
+        let (tx, rx) = mpsc::channel();
+        sched.submit(req, tx).unwrap();
+        low_rxs.push(rx);
+    }
+    let mut norm_rxs = Vec::new();
+    for k in 0..3u64 {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(610 + k, 4), tx).unwrap();
+        norm_rxs.push(rx);
+    }
+    let h = sched.health();
+    assert_eq!(h, FleetHealth::Degraded);
+    assert_eq!(h.retry_after_ms(), Some(500));
+
+    // 90% pressure: brownout, and the whole low-priority queue is shed
+    // with a typed `overloaded`
+    for k in 0..3u64 {
+        let (tx, rx) = mpsc::channel();
+        sched.submit(GenRequest::new(620 + k, 4), tx).unwrap();
+        norm_rxs.push(rx);
+    }
+    let h = sched.health();
+    assert_eq!(h, FleetHealth::BrownedOut);
+    assert_eq!(h.retry_after_ms(), Some(2000));
+    for rx in &low_rxs {
+        match rx.recv_timeout(RESOLVE).expect("shed work is answered") {
+            Err(ServeError::Overloaded) => {}
+            other => panic!("shed reply was {other:?}"),
+        }
+    }
+    assert_eq!(
+        lock_or_recover(&sched.metrics).brownout_shed,
+        low_rxs.len() as u64
+    );
+
+    // head-of-line (normal) work survives the brownout and serves
+    while let Some(q) = sched.next_for(0) {
+        let id = q.req.id;
+        let mut resp = GenResponse::immediate(&q.req, None);
+        resp.family = Some(q.family);
+        let _ = q.reply.send(Ok(resp));
+        sched.finish(id);
+    }
+    for rx in &norm_rxs {
+        rx.recv_timeout(RESOLVE)
+            .expect("queued work resolves")
+            .expect("normal work serves through a brownout");
+    }
+
+    // hysteresis: the first clear observation only starts the clock...
+    assert_eq!(sched.health(), FleetHealth::BrownedOut);
+    // ...and after the recovery window the fleet is healthy again
+    thread::sleep(Duration::from_millis(350));
+    assert_eq!(sched.health(), FleetHealth::Healthy);
+    assert_eq!(sched.queue_depth(), 0);
+    assert_eq!(sched.running_count(), 0);
+}

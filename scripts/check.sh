@@ -19,7 +19,8 @@
 # The analyze stage runs the in-tree architectural lint
 # (`repro analyze --deny`): serving-path panic-freedom, the
 # match-on-family seal, the metrics key registry, envelope-field vs
-# API.md drift, and unsafe-SAFETY hygiene.  Any unannotated violation
+# API.md drift, unsafe-SAFETY hygiene, and the lock-nesting-order
+# check.  Any unannotated violation
 # fails the gate; suppressions must be justified
 # `// lint:allow(<check>): <reason>` lines (see API.md).
 #
@@ -27,7 +28,9 @@
 # tests explicitly (they are pure codec tests, so they run even where
 # artifacts are absent) — the legacy JSON-lines protocol is a
 # compatibility contract and breaking it must fail loudly, not hide in
-# the big test run.  `cargo bench --no-run` is part of the default
+# the big test run.  The chaos stage runs the seeded fault-injection /
+# crash-recovery / brownout suite explicitly for the same reason.
+# `cargo bench --no-run` is part of the default
 # gate so bench targets (including the mixed-family and streaming
 # serving scenarios) can never rot uncompiled.
 set -euo pipefail
@@ -47,6 +50,9 @@ cargo test -q --test wire_compat
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== chaos (seeded fault schedules, crash recovery, brownout) =="
+cargo test -q --test chaos_stress
 
 echo "== cargo bench --no-run (bench targets must keep compiling) =="
 cargo bench --no-run
